@@ -1,0 +1,54 @@
+//! Fourth example: an ablation playground showing the library's composable
+//! API — mix any clustering (HC/K-means/FCM/single-shot), any similarity
+//! metric, and any merging strategy on any model, then inspect cluster
+//! structure and accuracy. Mirrors the exploration workflow of Section 4.3.
+//!
+//! Run with: `cargo run --release --offline --example ablation_playground`
+
+use hc_smoe::bench_support::{Lab, ABLATION_TASKS};
+use hc_smoe::clustering::{hierarchical, Linkage};
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::{Method, PlanKind};
+use hc_smoe::quality::silhouette;
+use hc_smoe::similarity::{distance_matrix, features, Distance, Metric};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("mixsim")?;
+    let stats = lab.stats("general")?;
+    let r = 4;
+
+    // 1. inspect the dendrogram-level structure on layer 0
+    println!("== cluster structure (mixsim layer 0, r={r}) ==");
+    for metric in [Metric::ExpertOutput, Metric::RouterLogits, Metric::Weight] {
+        let feats = features(metric, &lab.ctx.base, &stats.layers[0], 0)?;
+        let dist = distance_matrix(&feats, Distance::Euclidean);
+        let c = hierarchical(&dist, r, Linkage::Average);
+        let sil = silhouette(&feats, &c.assign, r, Distance::Euclidean);
+        println!("{:<7} groups={:?} silhouette={sil:.3}", metric.short(), c.groups());
+    }
+
+    // 2. cross-product sweep: linkage x merge on the expert-output metric
+    println!("\n== linkage x merge sweep (4-task avg accuracy) ==");
+    for linkage in [Linkage::Single, Linkage::Complete, Linkage::Average] {
+        for merge in [MergeStrategy::Average, MergeStrategy::Frequency] {
+            let method = Method::HcSmoe { linkage, metric: Metric::ExpertOutput, merge };
+            let (_, avg) = lab.eval_method(method, r, "general", &ABLATION_TASKS)?;
+            println!("{:<8} + {:<9} -> {avg:.4}", linkage.short(), merge.short());
+        }
+    }
+
+    // 3. what got merged with what: name the surviving expert groups
+    let method = Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    };
+    let cm = lab.compress(method, r, "general")?;
+    if let PlanKind::Merge { groups, .. } = &cm.plan.kind {
+        println!("\n== final merge plan ==");
+        for (l, g) in groups.iter().enumerate() {
+            println!("layer {l}: {g:?}");
+        }
+    }
+    Ok(())
+}

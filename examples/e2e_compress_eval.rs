@@ -1,0 +1,69 @@
+//! End-to-end driver (the DESIGN.md "end-to-end validation" workload):
+//! for each simulated model, run the full HC-SMoE pipeline against every
+//! baseline at the paper's 25% and 50% reductions, score the full
+//! zero-shot suite through the PJRT runtime, verify the expected ordering
+//! (HC-SMoE >= the best baseline), and report perplexity + output fidelity
+//! on held-out text.
+//!
+//! This is the binary whose output is recorded in EXPERIMENTS.md.
+
+use hc_smoe::bench_support::{paper_methods, push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::data::TokenStream;
+use hc_smoe::eval::Evaluator;
+use hc_smoe::quality::output_fidelity;
+use hc_smoe::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let total = Timer::start();
+    for model in ["qwensim", "mixsim"] {
+        let lab = Lab::new(model)?;
+        let rs = lab.ctx.manifest.reductions[model].clone();
+        let mut table = task_table(
+            &format!("E2E — {model}: all methods, 25% and 50% reduction"),
+            &PAPER_TASKS,
+        );
+        let ev = Evaluator::new(&lab.ctx)?;
+        let original = lab.ctx.load_original()?;
+        let stream = TokenStream::load(lab.ctx.arts.calib_tokens_path("ppl_heldout"))?;
+        let base_ppl = ev.perplexity(&original, &stream)?;
+        let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+        push_row(&mut table, "None", lab.ctx.cfg.n_exp, &scores, avg);
+        println!("{model}: original avg={avg:.4}, held-out ppl={base_ppl:.2}");
+
+        for &r in &rs[..2] {
+            let mut best_baseline = f64::MIN;
+            let mut hc_avg = f64::MIN;
+            for method in paper_methods(lab.ctx.cfg.n_exp, r) {
+                let label = method.label();
+                let is_hc = label.starts_with("HC-SMoE");
+                let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+                push_row(&mut table, &label, r, &scores, avg);
+                if is_hc {
+                    hc_avg = hc_avg.max(avg);
+                } else {
+                    best_baseline = best_baseline.max(avg);
+                }
+            }
+            let verdict = if hc_avg >= best_baseline { "OK" } else { "VIOLATED" };
+            println!(
+                "{model} r={r}: HC-SMoE {hc_avg:.4} vs best baseline {best_baseline:.4} \
+                 -> paper ordering {verdict}"
+            );
+        }
+
+        // fidelity of the 50% HC-SMoE model on held-out text
+        let method = paper_methods(lab.ctx.cfg.n_exp, rs[1]).pop().unwrap();
+        let cm = lab.compress(method, rs[1], "general")?;
+        let loaded = cm.load(&lab.ctx)?;
+        let ppl = ev.perplexity(&loaded, &stream)?;
+        let (l2, cos) = output_fidelity(&lab.ctx, &original, &loaded, &stream, 2)?;
+        println!(
+            "{model} 50% merged: ppl {base_ppl:.2} -> {ppl:.2}, \
+             logit L2 {l2:.1}, cosine {cos:.4}"
+        );
+        table.print();
+        table.append_to("bench_results.md")?;
+    }
+    println!("e2e driver finished in {:.1}s", total.secs());
+    Ok(())
+}

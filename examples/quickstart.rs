@@ -1,0 +1,50 @@
+//! Quickstart: the five-line HC-SMoE story.
+//!
+//! Load a pretrained simulated SMoE model, collect calibration statistics
+//! on the C4-analog corpus, merge 16 experts/layer down to 8 with
+//! hierarchical clustering over expert outputs (Algorithm 1), and compare
+//! zero-shot accuracy before/after on two benchmarks.
+//!
+//! Run with: `cargo run --release --offline --example quickstart`
+
+use hc_smoe::clustering::Linkage;
+use hc_smoe::config::Artifacts;
+use hc_smoe::eval::Evaluator;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::{Method, Pipeline};
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::discover();
+    let ctx = ModelContext::load(&arts, "qwensim")?;
+    println!(
+        "loaded {} ({} layers x {} experts, top-{})",
+        ctx.cfg.name, ctx.cfg.n_layer, ctx.cfg.n_exp, ctx.cfg.k
+    );
+
+    // 1. calibration statistics (Eq. 4: averaged expert outputs)
+    let stats = ctx.calibrate("general")?;
+    println!("calibrated on {} tokens of the C4-analog corpus", stats.n_tokens);
+
+    // 2. hierarchical clustering + frequency-weighted merging (HC-SMoE)
+    let method = Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    };
+    let plan = Pipeline::new(method).plan(&ctx, &stats, 8)?;
+    let merged = plan.apply(&ctx, &stats)?;
+    println!("merged 16 -> 8 experts/layer ({})", merged.label);
+
+    // 3. evaluate before/after
+    let ev = Evaluator::new(&ctx)?;
+    let original = ctx.load_original()?;
+    let compressed = merged.load(&ctx)?;
+    for task in ["arc_e", "hella"] {
+        let before = ev.accuracy(&original, task)?;
+        let after = ev.accuracy(&compressed, task)?;
+        println!("{task:8} {before:.4} -> {after:.4}");
+    }
+    Ok(())
+}

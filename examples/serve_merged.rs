@@ -1,0 +1,124 @@
+//! Serving demo: compress qwensim 16 -> 8 experts with HC-SMoE inside the
+//! executor thread, then fire concurrent multiple-choice scoring requests
+//! from four client threads through the dynamic batcher and report
+//! latency/throughput/batch-fill — the deployment story of Section 1.
+//!
+//! Run with: `cargo run --release --offline --example serve_merged`
+
+use std::time::{Duration, Instant};
+
+use hc_smoe::clustering::Linkage;
+use hc_smoe::config::Artifacts;
+use hc_smoe::data::Benchmark;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::discover();
+    let bench = Benchmark::load(arts.root.join("eval/arc_e.bin"))?;
+    let spec = ServeSpec {
+        artifacts_root: arts.root.to_string_lossy().into_owned(),
+        model: "qwensim".into(),
+        compress: Some((
+            Method::HcSmoe {
+                linkage: Linkage::Average,
+                metric: Metric::ExpertOutput,
+                merge: MergeStrategy::Frequency,
+            },
+            8,
+            "general".into(),
+        )),
+    };
+    println!("starting executor (compresses 16 -> 8 experts at startup)...");
+    let handle = serve(
+        spec,
+        BatcherConfig { max_rows: 32, max_wait: Duration::from_millis(4) },
+    )?;
+
+    let clients = 4usize;
+    let per_client = 32usize;
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::new();
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let tx = handle.sender();
+            let bench = &bench;
+            let correct = &correct;
+            joins.push(s.spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut lats = Vec::new();
+                for i in 0..per_client {
+                    let item = &bench.items[(c * per_client + i) % bench.items.len()];
+                    let rows = item
+                        .choices
+                        .iter()
+                        .map(|ch| {
+                            let mut seq = item.prompt.clone();
+                            seq.extend_from_slice(ch);
+                            hc_smoe::serving::RowSpec {
+                                start: item.prompt.len(),
+                                end: seq.len(),
+                                seq,
+                            }
+                        })
+                        .collect();
+                    let (reply, rx) = std::sync::mpsc::channel();
+                    let t = Instant::now();
+                    tx.send(hc_smoe::serving::ScoreRequest {
+                        rows,
+                        reply,
+                        enqueued: Instant::now(),
+                    })?;
+                    let scores = rx.recv()?;
+                    lats.push(t.elapsed().as_secs_f64());
+                    let pred = scores
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    if pred == item.answer {
+                        correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+                Ok(lats)
+            }));
+        }
+        for j in joins {
+            latencies.extend(j.join().expect("client thread panicked")?);
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = handle.metrics.snapshot();
+    handle.shutdown()?;
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = latencies.len();
+    let total = clients * per_client;
+    println!(
+        "served {total} requests from {clients} clients in {wall:.2}s \
+         ({:.1} req/s)",
+        total as f64 / wall
+    );
+    println!(
+        "latency p50 {:.1} ms / p90 {:.1} ms / p99 {:.1} ms",
+        latencies[n / 2] * 1e3,
+        latencies[n * 9 / 10] * 1e3,
+        latencies[(n * 99 / 100).min(n - 1)] * 1e3
+    );
+    println!(
+        "batcher: {} batches, mean fill {:.2}, device busy {:.2}s",
+        snap.batches,
+        snap.mean_batch_fill(32),
+        snap.busy_s
+    );
+    println!(
+        "accuracy on served arc_e items: {:.3}",
+        correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / total as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,199 @@
+"""AOT pipeline: train → export weights → lower HLO text → write datasets.
+
+This is the only entry point that ever runs Python (`make artifacts`); the
+Rust coordinator is self-contained afterwards.  Outputs under ``artifacts/``:
+
+    <model>.hcwt                  trained weights (HCWT, rust/src/weights)
+    <model>.cfg                   model manifest (key = value)
+    <model>.history               training loss curve (step, ce) per line
+    hlo/lm_logits_<model>.hlo.txt           n-expert forward + router mask
+    hlo/lm_logits_<model>_r<r>.hlo.txt      compact r-expert forward + remap
+    hlo/calib_<model>.hlo.txt               calibration-statistics pass
+    eval/<task>.bin               benchmark datasets (HCEV)
+    calib/<domain>.bin            calibration token streams (HCTS)
+    manifest.txt                  global geometry shared with Rust
+
+HLO **text** is the interchange format: jax >= 0.5 serialises protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import train as T
+from .export import save_weights, load_weights
+
+# Geometry shared with the Rust side (also recorded in manifest.txt).
+EVAL_B, EVAL_T = 32, 32          # option-scoring batch
+CALIB_B, CALIB_T = 8, 256        # calibration pass: 2048 tokens
+T_SUB, T_ACT = 512, 256          # subsampled stats sizes
+N_ITEMS = 64                     # items per benchmark task
+CALIB_TOKENS = CALIB_B * CALIB_T
+
+TRAIN_STEPS = int(os.environ.get("HCSMOE_TRAIN_STEPS", "1100"))
+TRAIN_BATCH = 8
+TRAIN_SEQ = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lm_logits(cfg: M.ModelCfg, params: dict) -> str:
+    names = sorted(params.keys())
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        ids, mask = args[len(names)], args[len(names) + 1]
+        return (M.forward_logits(cfg, p, ids, mask, use_pallas=True),)
+
+    specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    specs.append(jax.ShapeDtypeStruct((EVAL_B, EVAL_T), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((cfg.n_layer, cfg.n_exp), jnp.float32))
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def lower_lm_logits_compact(cfg: M.ModelCfg, params: dict, r: int) -> str:
+    cparams = M.compact_params(params, r)
+    names = sorted(cparams.keys())
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        ids, mask, remap = args[len(names)], args[len(names) + 1], args[len(names) + 2]
+        return (M.forward_logits_compact(cfg, p, ids, mask, remap, r, use_pallas=True),)
+
+    specs = [jax.ShapeDtypeStruct(cparams[n].shape, jnp.float32) for n in names]
+    specs.append(jax.ShapeDtypeStruct((EVAL_B, EVAL_T), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((cfg.n_layer, cfg.n_exp), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((cfg.n_layer, cfg.n_exp), jnp.int32))
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def lower_calib(cfg: M.ModelCfg, params: dict) -> str:
+    names = sorted(params.keys())
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        ids = args[len(names)]
+        return M.forward_calib(cfg, p, ids, t_sub=T_SUB, t_act=T_ACT)
+
+    specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    specs.append(jax.ShapeDtypeStruct((CALIB_B, CALIB_T), jnp.int32))
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def write_datasets(out: str) -> None:
+    kb = D.KnowledgeBase.build()
+    corpus = D.CorpusGen(kb)
+    bench = D.BenchmarkGen(kb, corpus)
+    os.makedirs(f"{out}/eval", exist_ok=True)
+    os.makedirs(f"{out}/calib", exist_ok=True)
+    # benchmark seeds are disjoint from every training/calibration seed
+    for i, task in enumerate(D.BenchmarkGen.TASKS):
+        items = bench.dataset(task, N_ITEMS, seed=90_000 + i)
+        D.write_benchmark(f"{out}/eval/{task}.bin", items)
+    # calibration streams: paper uses C4 / MATH / CodeQA (Appendix B.3)
+    for dom, seed in (("general", 70_001), ("math", 70_002), ("code", 70_003),
+                      ("med", 70_004)):
+        D.write_tokens(f"{out}/calib/{dom}.bin", corpus.stream(dom, seed, CALIB_TOKENS))
+    # per-benchmark token streams for the frequency analysis (Figs. 6-13)
+    for i, task in enumerate(D.BenchmarkGen.TASKS):
+        items = bench.dataset(task, N_ITEMS, seed=91_000 + i)
+        toks: list = []
+        for it in items:
+            toks += it.prompt + it.choices[it.answer] + [D.EOS]
+        reps = (CALIB_TOKENS + len(toks) - 1) // len(toks)
+        stream = (toks * reps)[:CALIB_TOKENS]
+        D.write_tokens(f"{out}/calib/task_{task}.bin", np.asarray(stream, np.int32))
+    # held-out perplexity stream
+    D.write_tokens(f"{out}/calib/ppl_heldout.bin",
+                   corpus.stream("general", 70_099, CALIB_TOKENS))
+
+
+def build_model(name: str, out: str, steps: int, force: bool) -> None:
+    cfg = M.CONFIGS[name]
+    wpath = f"{out}/{name}.hcwt"
+    if os.path.exists(wpath) and not force:
+        print(f"[aot] {name}: weights exist, skipping training")
+        params = load_weights(wpath)
+    else:
+        t0 = time.time()
+        seed = sum(name.encode()) % 10_000  # stable across interpreter runs
+        params, history = T.train(cfg, steps=steps, batch=TRAIN_BATCH, seq=TRAIN_SEQ,
+                                  seed=seed)
+        print(f"[aot] {name}: trained {steps} steps in {time.time()-t0:.0f}s")
+        save_weights(wpath, params)
+        with open(f"{out}/{name}.history", "w") as f:
+            for step, ce in history:
+                f.write(f"{int(step)} {ce:.6f}\n")
+    with open(f"{out}/{name}.cfg", "w") as f:
+        f.write(cfg.to_kv())
+
+    os.makedirs(f"{out}/hlo", exist_ok=True)
+    jobs = [(f"{out}/hlo/lm_logits_{name}.hlo.txt",
+             lambda: lower_lm_logits(cfg, params))]
+    for r in M.REDUCTIONS[name]:
+        jobs.append((f"{out}/hlo/lm_logits_{name}_r{r}.hlo.txt",
+                     lambda r=r: lower_lm_logits_compact(cfg, params, r)))
+    jobs.append((f"{out}/hlo/calib_{name}.hlo.txt", lambda: lower_calib(cfg, params)))
+    for path, fn in jobs:
+        if os.path.exists(path) and not force:
+            continue
+        t0 = time.time()
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] lowered {os.path.basename(path)} "
+              f"({len(text)//1024} KiB, {time.time()-t0:.0f}s)")
+
+
+def write_manifest(out: str, models: list) -> None:
+    with open(f"{out}/manifest.txt", "w") as f:
+        f.write(f"eval_b = {EVAL_B}\neval_t = {EVAL_T}\n")
+        f.write(f"calib_b = {CALIB_B}\ncalib_t = {CALIB_T}\n")
+        f.write(f"t_sub = {T_SUB}\nt_act = {T_ACT}\n")
+        f.write(f"n_items = {N_ITEMS}\n")
+        f.write(f"models = {','.join(models)}\n")
+        f.write(f"tasks = {','.join(D.BenchmarkGen.TASKS)}\n")
+        for name in models:
+            f.write(f"reductions_{name} = "
+                    f"{','.join(str(r) for r in M.REDUCTIONS[name])}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="qwensim,mixsim,dssim")
+    ap.add_argument("--steps", type=int, default=TRAIN_STEPS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    models = args.models.split(",")
+    write_datasets(out)
+    print("[aot] datasets written")
+    for name in models:
+        build_model(name, out, args.steps, args.force)
+    write_manifest(out, models)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

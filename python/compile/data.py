@@ -1,0 +1,441 @@
+"""Synthetic-language substrate.
+
+The paper calibrates on C4/MATH/CodeQA and evaluates 8 LM-Harness zero-shot
+tasks plus MedMCQA.  None of those are available (or meaningful) for the tiny
+models we can train in this sandbox, so this module builds the closest
+synthetic equivalent that exercises the same code paths (see DESIGN.md
+"Substitutions"):
+
+* a vocabulary with structural token classes (subjects, relations, objects,
+  digits, operators, brackets, filler words),
+* four corpus domains — ``general`` (Zipfian bigram text with embedded KB
+  facts), ``math`` (modular arithmetic), ``code`` (bracket/key-value
+  patterns), ``med`` (a held-out specialist fact domain),
+* a knowledge base of (subject, relation, object) facts split into frequent
+  ("easy"), rare ("challenge") and two-hop composable subsets,
+* nine zero-shot multiple-choice benchmarks mirroring the paper's suite,
+* binary serialisation shared with the Rust loaders (``rust/src/data``).
+
+Everything is deterministic given the seed; Python writes the datasets once
+at artifact-build time and Rust only ever reads them.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (single source of truth; mirrored in rust/src/data/mod.rs)
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 448
+
+PAD = 0
+BOS = 1
+EOS = 2
+SEP = 3  # question/answer separator, also used as "=>"
+Q = 4    # "question:" marker
+A = 5    # "answer:" marker
+TRUE_TOK = 6
+FALSE_TOK = 7
+YES_TOK = 8
+NO_TOK = 9
+
+# token-class ranges [start, end)  — sized for the 1-core training budget
+SUBJ = (16, 48)      # 32 subjects
+REL = (48, 56)       # 8 relations
+OBJ = (56, 88)       # 32 objects
+DIGIT = (88, 105)    # 17 "digits" 0..16 (mod-17 arithmetic)
+OP_ADD, OP_MUL, OP_EQ = 105, 106, 107
+LBRACK, RBRACK, LPAREN, RPAREN = 108, 109, 110, 111
+KEY = (112, 128)     # 16 code keys
+VAL = (128, 144)     # 16 code values
+COLON = 144
+MED_SUBJ = (145, 161)  # 16 specialist subjects (held-out domain)
+MED_OBJ = (161, 177)   # 16 specialist objects
+FILLER = (192, 448)    # 256 filler words for general text
+
+MOD = 17  # modulus for the arithmetic domain
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.Generator(np.random.Philox(seed))
+
+
+# ---------------------------------------------------------------------------
+# Knowledge base
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KnowledgeBase:
+    """(subject, relation) -> object facts with frequency tiers.
+
+    ``easy`` facts appear often in the general corpus (ARC-e analog), ``hard``
+    facts appear rarely (ARC-c analog), ``med`` facts live in their own
+    domain corpus only (MedMCQA analog).  ``hops`` are (s, r1, r2) -> object
+    chains for the two-hop OBQA analog: s --r1--> m(treated as subject) --r2--> o.
+    """
+
+    easy: dict = field(default_factory=dict)
+    hard: dict = field(default_factory=dict)
+    med: dict = field(default_factory=dict)
+
+    @staticmethod
+    def build(seed: int = 1234) -> "KnowledgeBase":
+        rng = _rng(seed)
+        kb = KnowledgeBase()
+        n_subj = SUBJ[1] - SUBJ[0]
+        n_rel = REL[1] - REL[0]
+        # every (subject, relation) pair gets a deterministic object; the
+        # first 60% of subjects form the "easy" tier, the rest "hard".
+        for s in range(SUBJ[0], SUBJ[1]):
+            for r in range(REL[0], REL[1]):
+                o = int(rng.integers(OBJ[0], OBJ[1]))
+                tier = kb.easy if (s - SUBJ[0]) < int(0.6 * n_subj) else kb.hard
+                tier[(s, r)] = o
+        for s in range(MED_SUBJ[0], MED_SUBJ[1]):
+            for r in range(REL[0], REL[0] + 4):  # med uses 4 relations
+                kb.med[(s, r)] = int(rng.integers(MED_OBJ[0], MED_OBJ[1]))
+        _ = n_rel
+        return kb
+
+    def all_facts(self) -> dict:
+        d = dict(self.easy)
+        d.update(self.hard)
+        return d
+
+    def hop(self, s: int, r1: int, r2: int):
+        """Two-hop chain: object of (s, r1) maps into the subject range via a
+        fixed modular fold, then (s', r2) gives the final object."""
+        facts = self.all_facts()
+        o1 = facts.get((s, r1))
+        if o1 is None:
+            return None
+        s2 = SUBJ[0] + (o1 - OBJ[0]) % (SUBJ[1] - SUBJ[0])
+        return facts.get((s2, r2))
+
+
+# ---------------------------------------------------------------------------
+# Corpus generators (domains)
+# ---------------------------------------------------------------------------
+
+
+class CorpusGen:
+    """Token-stream generators for the four calibration/training domains."""
+
+    def __init__(self, kb: KnowledgeBase, seed: int = 7):
+        self.kb = kb
+        self.seed = seed
+        rng = _rng(seed)
+        # Zipfian unigram over filler words + a sparse bigram transition
+        n_fill = FILLER[1] - FILLER[0]
+        ranks = np.arange(1, n_fill + 1)
+        self.fill_p = (1.0 / ranks) / np.sum(1.0 / ranks)
+        # each filler word prefers a small successor set -> learnable bigrams
+        self.succ = rng.integers(0, n_fill, size=(n_fill, 4))
+
+    # -- general: filler text with embedded facts ---------------------------
+    def general(self, rng: np.random.Generator, length: int) -> list:
+        toks: list = []
+        n_fill = FILLER[1] - FILLER[0]
+        cur = int(rng.choice(n_fill, p=self.fill_p))
+        easy_keys = list(self.kb.easy.keys())
+        hard_keys = list(self.kb.hard.keys())
+        while len(toks) < length:
+            u = rng.random()
+            if u < 0.12:  # frequent (easy) fact sentence
+                s, r = easy_keys[int(rng.integers(len(easy_keys)))]
+                toks += [s, r, SEP, self.kb.easy[(s, r)], EOS]
+            elif u < 0.17:  # rare (hard) fact sentence
+                s, r = hard_keys[int(rng.integers(len(hard_keys)))]
+                toks += [s, r, SEP, self.kb.hard[(s, r)], EOS]
+            elif u < 0.21:  # short arithmetic interjection
+                toks += self._math_stmt(rng)
+            else:  # bigram filler text
+                step = int(rng.integers(4))
+                cur = int(self.succ[cur, step])
+                toks.append(FILLER[0] + cur)
+        return toks[:length]
+
+    # -- math: a + b = c (mod 17), a * b = c ---------------------------------
+    def _math_stmt(self, rng: np.random.Generator) -> list:
+        a = int(rng.integers(MOD))
+        b = int(rng.integers(MOD))
+        if rng.random() < 0.5:
+            c, op = (a + b) % MOD, OP_ADD
+        else:
+            c, op = (a * b) % MOD, OP_MUL
+        return [DIGIT[0] + a, op, DIGIT[0] + b, OP_EQ, DIGIT[0] + c, EOS]
+
+    def math(self, rng: np.random.Generator, length: int) -> list:
+        toks: list = []
+        while len(toks) < length:
+            toks += self._math_stmt(rng)
+        return toks[:length]
+
+    # -- code: nested brackets + key:value bindings that are later re-read ---
+    def code(self, rng: np.random.Generator, length: int) -> list:
+        toks: list = []
+        while len(toks) < length:
+            bindings = {}
+            toks.append(LBRACK)
+            for _ in range(int(rng.integers(2, 6))):
+                k = int(rng.integers(KEY[0], KEY[1]))
+                v = int(rng.integers(VAL[0], VAL[1]))
+                bindings[k] = v
+                toks += [k, COLON, v]
+            toks.append(RBRACK)
+            # re-read: "( key => value )" forces the model to bind/recall
+            if bindings:
+                k = list(bindings.keys())[int(rng.integers(len(bindings)))]
+                toks += [LPAREN, k, SEP, bindings[k], RPAREN, EOS]
+        return toks[:length]
+
+    # -- med: specialist fact domain (held out of general corpus) -----------
+    def med(self, rng: np.random.Generator, length: int) -> list:
+        toks: list = []
+        keys = list(self.kb.med.keys())
+        while len(toks) < length:
+            s, r = keys[int(rng.integers(len(keys)))]
+            toks += [s, r, SEP, self.kb.med[(s, r)], EOS]
+        return toks[:length]
+
+    DOMAINS = ("general", "math", "code", "med")
+
+    def stream(self, domain: str, seed: int, length: int) -> np.ndarray:
+        rng = _rng(seed)
+        fn = getattr(self, domain)
+        return np.asarray(fn(rng, length), dtype=np.int32)
+
+    def training_mix(self, seed: int, n_tokens: int) -> np.ndarray:
+        """Training corpus: 70% general / 12% math / 12% code / 6% med."""
+        rng = _rng(seed)
+        chunks = []
+        remaining = n_tokens
+        props = [("general", 0.70), ("math", 0.12), ("code", 0.12), ("med", 0.06)]
+        for i, (dom, p) in enumerate(props):
+            ln = int(n_tokens * p) if i < len(props) - 1 else remaining
+            ln = min(ln, remaining)
+            chunks.append(self.stream(dom, int(rng.integers(1 << 30)), ln))
+            remaining -= ln
+        toks = np.concatenate(chunks)
+        # shuffle at sentence granularity by permuting fixed-size blocks
+        block = 64
+        n_blk = len(toks) // block
+        perm = rng.permutation(n_blk)
+        return toks[: n_blk * block].reshape(n_blk, block)[perm].reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Benchmarks
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MCItem:
+    """One multiple-choice item: prompt tokens + per-choice completion tokens."""
+
+    prompt: list
+    choices: list  # list[list[int]]
+    answer: int
+
+
+def _distractors(rng, correct: int, lo: int, hi: int, k: int) -> list:
+    out = []
+    while len(out) < k:
+        c = int(rng.integers(lo, hi))
+        if c != correct and c not in out:
+            out.append(c)
+    return out
+
+
+class BenchmarkGen:
+    """The nine zero-shot benchmarks (see DESIGN.md table)."""
+
+    def __init__(self, kb: KnowledgeBase, corpus: CorpusGen):
+        self.kb = kb
+        self.corpus = corpus
+
+    def _fact_item(self, rng, facts: dict) -> MCItem:
+        keys = list(facts.keys())
+        s, r = keys[int(rng.integers(len(keys)))]
+        o = facts[(s, r)]
+        cands = [o] + _distractors(rng, o, OBJ[0], OBJ[1], 3)
+        order = rng.permutation(4)
+        choices = [[cands[i]] for i in order]
+        return MCItem([Q, s, r, SEP], choices, int(np.argwhere(order == 0)[0][0]))
+
+    def arc_e(self, rng) -> MCItem:
+        return self._fact_item(rng, self.kb.easy)
+
+    def arc_c(self, rng) -> MCItem:
+        return self._fact_item(rng, self.kb.hard)
+
+    def boolq(self, rng) -> MCItem:
+        facts = self.kb.all_facts()
+        keys = list(facts.keys())
+        s, r = keys[int(rng.integers(len(keys)))]
+        o = facts[(s, r)]
+        truthy = rng.random() < 0.5
+        shown = o if truthy else _distractors(rng, o, OBJ[0], OBJ[1], 1)[0]
+        prompt = [Q, s, r, SEP, shown, A]
+        choices = [[YES_TOK], [NO_TOK]]
+        return MCItem(prompt, choices, 0 if truthy else 1)
+
+    def hella(self, rng) -> MCItem:
+        """Plausible continuation under the bigram grammar."""
+        n_fill = FILLER[1] - FILLER[0]
+        cur = int(rng.integers(n_fill))
+        prompt = [BOS]
+        for _ in range(6):
+            cur = int(self.corpus.succ[cur, int(rng.integers(4))])
+            prompt.append(FILLER[0] + cur)
+        good = [FILLER[0] + int(self.corpus.succ[cur, int(rng.integers(4))])]
+        succ_set = set(int(x) for x in self.corpus.succ[cur])
+        bads = []
+        while len(bads) < 3:
+            w = int(rng.integers(n_fill))
+            cand = [FILLER[0] + w]
+            if w not in succ_set and cand != good and cand not in bads:
+                bads.append(cand)
+        cands = [good] + bads
+        order = rng.permutation(4)
+        choices = [cands[i] for i in order]
+        return MCItem(prompt, choices, int(np.argwhere(order == 0)[0][0]))
+
+    def mmlu(self, rng) -> MCItem:
+        a = int(rng.integers(MOD))
+        b = int(rng.integers(MOD))
+        if rng.random() < 0.5:
+            c, op = (a + b) % MOD, OP_ADD
+        else:
+            c, op = (a * b) % MOD, OP_MUL
+        cands = [c] + [x % MOD for x in _distractors(rng, c, 0, MOD, 3)]
+        order = rng.permutation(4)
+        choices = [[DIGIT[0] + cands[i]] for i in order]
+        prompt = [Q, DIGIT[0] + a, op, DIGIT[0] + b, OP_EQ]
+        return MCItem(prompt, choices, int(np.argwhere(order == 0)[0][0]))
+
+    def obqa(self, rng) -> MCItem:
+        facts = self.kb.all_facts()
+        while True:
+            s = int(rng.integers(SUBJ[0], SUBJ[1]))
+            r1 = int(rng.integers(REL[0], REL[1]))
+            r2 = int(rng.integers(REL[0], REL[1]))
+            o = self.kb.hop(s, r1, r2)
+            if o is not None:
+                break
+        cands = [o] + _distractors(rng, o, OBJ[0], OBJ[1], 3)
+        order = rng.permutation(4)
+        choices = [[cands[i]] for i in order]
+        return MCItem([Q, s, r1, r2, SEP], choices, int(np.argwhere(order == 0)[0][0]))
+
+    def rte(self, rng) -> MCItem:
+        facts = self.kb.all_facts()
+        keys = list(facts.keys())
+        s, r = keys[int(rng.integers(len(keys)))]
+        o = facts[(s, r)]
+        entail = rng.random() < 0.5
+        o2 = o if entail else _distractors(rng, o, OBJ[0], OBJ[1], 1)[0]
+        # premise: s r => o ; hypothesis: s r => o2 ; entailed?
+        prompt = [s, r, SEP, o, EOS, s, r, SEP, o2, A]
+        choices = [[TRUE_TOK], [FALSE_TOK]]
+        return MCItem(prompt, choices, 0 if entail else 1)
+
+    def wino(self, rng) -> MCItem:
+        """Binding/recall: code-style key binding then query (coref analog)."""
+        k1 = int(rng.integers(KEY[0], KEY[1]))
+        k2 = int(rng.integers(KEY[0], KEY[1]))
+        while k2 == k1:
+            k2 = int(rng.integers(KEY[0], KEY[1]))
+        v1 = int(rng.integers(VAL[0], VAL[1]))
+        v2 = int(rng.integers(VAL[0], VAL[1]))
+        while v2 == v1:
+            v2 = int(rng.integers(VAL[0], VAL[1]))
+        which = rng.random() < 0.5
+        qk = k1 if which else k2
+        good, bad = (v1, v2) if which else (v2, v1)
+        prompt = [LBRACK, k1, COLON, v1, k2, COLON, v2, RBRACK, LPAREN, qk, SEP]
+        first = rng.random() < 0.5
+        choices = [[good], [bad]] if first else [[bad], [good]]
+        return MCItem(prompt, choices, 0 if first else 1)
+
+    def med(self, rng) -> MCItem:
+        return self._fact_item(rng, self.kb.med)
+
+    TASKS = (
+        "arc_e",
+        "arc_c",
+        "boolq",
+        "hella",
+        "mmlu",
+        "obqa",
+        "rte",
+        "wino",
+        "med",
+    )
+
+    def dataset(self, task: str, n_items: int, seed: int) -> list:
+        rng = _rng(seed)
+        fn = getattr(self, task)
+        return [fn(rng) for _ in range(n_items)]
+
+
+# ---------------------------------------------------------------------------
+# Binary serialisation (shared with rust/src/data)
+# ---------------------------------------------------------------------------
+#
+# Benchmark file ("HCEV"):
+#   magic u32 'HCEV' | version u32 | n_items u32 | n_choices u32
+#   then per item: prompt_len u32, prompt i32*, answer u32,
+#                  per choice: len u32, toks i32*
+# Token-stream file ("HCTS"): magic | version | n u32 | toks i32*
+
+
+def write_benchmark(path: str, items: list) -> None:
+    n_choices = len(items[0].choices)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<4sIII", b"HCEV", 1, len(items), n_choices))
+        for it in items:
+            assert len(it.choices) == n_choices
+            f.write(struct.pack("<I", len(it.prompt)))
+            f.write(np.asarray(it.prompt, dtype=np.int32).tobytes())
+            f.write(struct.pack("<I", it.answer))
+            for ch in it.choices:
+                f.write(struct.pack("<I", len(ch)))
+                f.write(np.asarray(ch, dtype=np.int32).tobytes())
+
+
+def read_benchmark(path: str) -> list:
+    with open(path, "rb") as f:
+        magic, ver, n_items, n_choices = struct.unpack("<4sIII", f.read(16))
+        assert magic == b"HCEV" and ver == 1
+        items = []
+        for _ in range(n_items):
+            (plen,) = struct.unpack("<I", f.read(4))
+            prompt = np.frombuffer(f.read(4 * plen), dtype=np.int32).tolist()
+            (ans,) = struct.unpack("<I", f.read(4))
+            choices = []
+            for _ in range(n_choices):
+                (clen,) = struct.unpack("<I", f.read(4))
+                choices.append(np.frombuffer(f.read(4 * clen), dtype=np.int32).tolist())
+            items.append(MCItem(prompt, choices, ans))
+        return items
+
+
+def write_tokens(path: str, toks: np.ndarray) -> None:
+    toks = np.asarray(toks, dtype=np.int32)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<4sII", b"HCTS", 1, len(toks)))
+        f.write(toks.tobytes())
+
+
+def read_tokens(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic, ver, n = struct.unpack("<4sII", f.read(12))
+        assert magic == b"HCTS" and ver == 1
+        return np.frombuffer(f.read(4 * n), dtype=np.int32)

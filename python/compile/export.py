@@ -1,0 +1,53 @@
+"""Weights serialisation ("HCWT" format) shared with ``rust/src/weights``.
+
+Layout (little-endian):
+    magic   4s  = b"HCWT"
+    version u32 = 1
+    n       u32 = tensor count
+    per tensor (in sorted-name order — the same order the HLO parameters
+    were lowered in):
+        name_len u32, name utf-8 bytes
+        ndim u32, dims u32 * ndim
+    data section: f32 raw bytes per tensor, same order, densely packed.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+
+def save_weights(path: str, params: dict) -> None:
+    names = sorted(params.keys())
+    with open(path, "wb") as f:
+        f.write(struct.pack("<4sII", b"HCWT", 1, len(names)))
+        for name in names:
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+        for name in names:
+            arr = np.ascontiguousarray(np.asarray(params[name], dtype=np.float32))
+            f.write(arr.tobytes())
+
+
+def load_weights(path: str) -> dict:
+    with open(path, "rb") as f:
+        magic, ver, n = struct.unpack("<4sII", f.read(12))
+        assert magic == b"HCWT" and ver == 1
+        metas = []
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            metas.append((name, dims))
+        out = {}
+        for name, dims in metas:
+            count = int(np.prod(dims)) if dims else 1
+            out[name] = np.frombuffer(f.read(4 * count), dtype=np.float32).reshape(dims)
+        return out

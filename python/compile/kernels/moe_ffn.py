@@ -1,0 +1,88 @@
+"""L1 — Pallas grouped expert-FFN kernel.
+
+This is the compute hot-spot of every SMoE model the paper studies: the
+SwiGLU expert FFN of Eq. (2),
+
+    E(x) = (silu(x @ W_gate) * (x @ W_up)) @ W_down
+
+applied independently by each expert to its capacity-dispatched token block.
+The kernel is written for a TPU-shaped machine (see DESIGN.md
+§Hardware-Adaptation): the grid iterates (expert, token-block); BlockSpecs
+stage one expert's weight tiles and one token block HBM→VMEM per program
+instance; the three GEMMs target the MXU.  On this CPU-only sandbox it runs
+under ``interpret=True`` (real-TPU lowering emits Mosaic custom-calls the CPU
+PJRT plugin cannot execute); numerics are validated against
+``kernels.ref.moe_ffn_ref`` in pytest.
+
+VMEM footprint per program instance (f32):
+    x block   Cb*d
+    weights   3*d*m          (W_gate, W_up, W_down tiles)
+    h scratch Cb*m
+    out       Cb*d
+With the shipped shapes (Cb=64, d=128, m<=256) this is ~113-140 KiB, far
+below the ~16 MiB VMEM budget — the schedule leaves room for double
+buffering of the next token block while the MXU drains the current one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One (expert, token-block) program instance.
+
+    Refs carry a leading singleton expert axis from the BlockSpecs.
+    """
+    x = x_ref[0]  # [Cb, d]
+    g = jnp.dot(x, wg_ref[0])  # [Cb, m] — MXU GEMM 1
+    u = jnp.dot(x, wu_ref[0])  # [Cb, m] — MXU GEMM 2
+    h = jax.nn.silu(g) * u     # VPU elementwise
+    o_ref[0] = jnp.dot(h, wd_ref[0])  # [Cb, d] — MXU GEMM 3
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def moe_ffn(x_dispatch, w_gate, w_up, w_down, *, block_c: int = 64):
+    """Grouped expert FFN over dispatched tokens.
+
+    Args:
+      x_dispatch: [n, C, d] tokens gathered per expert (zero-padded slots).
+      w_gate, w_up: [n, d, m] stacked expert weights.
+      w_down: [n, m, d].
+      block_c: token-block size per program instance; must divide C.
+
+    Returns:
+      [n, C, d] expert outputs (zero rows stay zero: silu(0)*0 @ W = 0).
+    """
+    n, c, d = x_dispatch.shape
+    m = w_gate.shape[-1]
+    if c % block_c != 0:
+        raise ValueError(f"capacity {c} not divisible by block_c {block_c}")
+    grid = (n, c // block_c)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e, t: (e, t, 0)),
+            pl.BlockSpec((1, d, m), lambda e, t: (e, 0, 0)),
+            pl.BlockSpec((1, d, m), lambda e, t: (e, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda e, t: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda e, t: (e, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, d), x_dispatch.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x_dispatch, w_gate, w_up, w_down)
+
+
+def vmem_bytes(block_c: int, d: int, m: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one program instance (for DESIGN §Perf)."""
+    return dtype_bytes * (block_c * d + 3 * d * m + block_c * m + block_c * d)
+
+
+def mxu_flops(n: int, c: int, d: int, m: int) -> int:
+    """Total MXU FLOPs of one grouped-FFN invocation (2*M*N*K per GEMM)."""
+    return n * c * (2 * d * m * 2 + 2 * m * d)

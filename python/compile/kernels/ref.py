@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernel and the MoE layer.
+
+These are the ground-truth implementations everything else is tested
+against:
+
+* ``moe_ffn_ref``      — grouped expert FFN, same contract as
+                         ``moe_ffn.moe_ffn`` (dispatched [n, C, d] input).
+* ``expert_ffn_dense`` — every expert applied to every token (used by the
+                         calibration pass and by tests).
+* ``moe_layer_dense``  — the full SMoE layer of Eq. (1) computed densely
+                         (no capacity dispatch, no token dropping); the
+                         dispatch-based layer must match it whenever no
+                         token exceeds expert capacity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(x, wg, wu, wd):
+    """Eq. (2): (silu(x Wg) * (x Wu)) Wd for a single expert."""
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def moe_ffn_ref(x_dispatch, w_gate, w_up, w_down):
+    """[n, C, d] -> [n, C, d]; per-expert SwiGLU via einsum (no Pallas)."""
+    g = jnp.einsum("ncd,ndm->ncm", x_dispatch, w_gate)
+    u = jnp.einsum("ncd,ndm->ncm", x_dispatch, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ncm,nmd->ncd", h, w_down)
+
+
+def expert_ffn_dense(x, w_gate, w_up, w_down):
+    """Every expert on every token: [T, d] x [n, d, m] -> [T, n, d]."""
+    g = jnp.einsum("td,ndm->tnm", x, w_gate)
+    u = jnp.einsum("td,ndm->tnm", x, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("tnm,nmd->tnd", h, w_down)
+
+
+def expert_act_dense(x, w_gate, w_up):
+    """Intermediate activations (pre-W_down), Appendix B.2 'act' features:
+    [T, d] -> [T, n, m]."""
+    g = jnp.einsum("td,ndm->tnm", x, w_gate)
+    u = jnp.einsum("td,ndm->tnm", x, w_up)
+    return jax.nn.silu(g) * u
+
+
+def route_topk(router_logits, k, mask=None):
+    """Eq. (3): softmax over the top-k router logits.
+
+    Returns (indices [T, k], probs [T, k]). ``mask`` is an additive [n]
+    vector (0 = keep, -1e30 = pruned expert).
+
+    Implemented as k rounds of argmax + re-masking instead of
+    ``jax.lax.top_k``: jax >= 0.7 lowers top_k to the ``topk`` HLO
+    instruction whose text form (``largest=true``) the xla_extension 0.5.1
+    parser rejects; argmax lowers to plain reduces that round-trip fine.
+    """
+    if mask is not None:
+        router_logits = router_logits + mask
+    n = router_logits.shape[-1]
+    work = router_logits
+    idxs, vals = [], []
+    for _ in range(k):
+        i = jnp.argmax(work, axis=-1)  # [T]
+        v = jnp.max(work, axis=-1)
+        idxs.append(i)
+        vals.append(v)
+        work = jnp.where(jax.nn.one_hot(i, n, dtype=bool), -jnp.inf, work)
+    idx = jnp.stack(idxs, axis=-1)
+    val = jnp.stack(vals, axis=-1)
+    probs = jax.nn.softmax(val, axis=-1)
+    return idx, probs
+
+
+def dense_gates(idx, probs, n, dtype=jnp.float32):
+    """Scatter top-k (idx, probs) back to a dense [T, n] gate matrix."""
+    return jnp.sum(jax.nn.one_hot(idx, n, dtype=dtype) * probs[..., None], axis=1)
+
+
+def moe_layer_dense(x, w_router, w_gate, w_up, w_down, k, mask=None):
+    """Eq. (1) computed densely: y = sum_i P_i(x) E_i(x)."""
+    logits = x @ w_router  # [T, n]
+    idx, probs = route_topk(logits, k, mask)
+    gates = dense_gates(idx, probs, w_gate.shape[0], x.dtype)  # [T, n]
+    outs = expert_ffn_dense(x, w_gate, w_up, w_down)  # [T, n, d]
+    return jnp.einsum("tn,tnd->td", gates, outs)

@@ -1,0 +1,405 @@
+"""L2 — the SMoE transformer (JAX), built on the L1 Pallas kernel.
+
+A LLaMA-structured sparse-MoE language model exactly as described in
+Section 2.1 of the paper: RMSNorm, causal multi-head attention, and an SMoE
+FFN block with a linear top-k router (Eq. 3), SwiGLU experts (Eq. 2) and the
+weighted-sum combine (Eq. 1).  Three model families are shipped (DESIGN.md
+"Substitutions"): ``qwensim`` (many small experts), ``mixsim`` (few large
+experts) and ``dssim`` (routed experts + an always-on shared expert,
+DeepSeek-MoE style).
+
+Three forward functions are lowered to HLO text by ``aot.py``:
+
+* ``forward_logits``      — n-expert forward with an additive router-mask
+                            input [L, n]; serves *every* compression method
+                            (merging = duplicated merged weights, router
+                            unchanged, exactly Fig. 3; pruning = -inf mask).
+* ``forward_logits_compact`` — true r-expert forward with a router remap
+                            table [L, n] (original expert -> merged slot),
+                            used for the Table 20 efficiency measurements.
+* ``forward_calib``       — the calibration pass: dense per-expert outputs
+                            (Eq. 4 statistics), routing frequencies, router
+                            logit profiles, and subsampled raw outputs /
+                            intermediate activations for O-prune and
+                            ZipIt/Fix-Dom.
+
+Weights are HLO *parameters* (not constants) so the Rust coordinator can
+merge experts in weight space and re-execute without re-lowering.  The
+request-path forwards route tokens through the Pallas grouped-FFN kernel;
+the training step uses the pure-jnp dense reference (same math, asserted
+allclose in pytest) because interpret-mode Pallas is needlessly slow for the
+build-time-only training loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.moe_ffn import moe_ffn
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str = "qwensim"
+    n_layer: int = 4
+    d: int = 96           # hidden size (d_h in the paper)
+    m: int = 96           # expert FFN size (d_m)
+    n_exp: int = 16       # experts per layer (n)
+    k: int = 2            # top-k routing
+    heads: int = 4
+    vocab: int = 448
+    t_max: int = 256
+    shared: bool = False  # DeepSeek-style always-on shared expert
+    m_shared: int = 192
+    cap_factor: float = 1.5   # expert capacity factor for dispatch
+    block_c: int = 192        # Pallas token-block size (coarse grid: interpret-mode
+                              # per-step overhead dominates on CPU; see §Perf)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+    def capacity(self, n_tokens: int, n_exp: int | None = None) -> int:
+        """Per-expert capacity, rounded up to a multiple of block_c."""
+        n = n_exp if n_exp is not None else self.n_exp
+        c = int(np.ceil(self.k * n_tokens * self.cap_factor / n))
+        return int(np.ceil(c / self.block_c) * self.block_c)
+
+    def to_kv(self) -> str:
+        """Manifest serialisation shared with rust/src/config."""
+        kv = {
+            "name": self.name, "n_layer": self.n_layer, "d": self.d,
+            "m": self.m, "n_exp": self.n_exp, "k": self.k,
+            "heads": self.heads, "vocab": self.vocab, "t_max": self.t_max,
+            "shared": int(self.shared), "m_shared": self.m_shared,
+            "cap_factor": self.cap_factor, "block_c": self.block_c,
+        }
+        return "".join(f"{k} = {v}\n" for k, v in kv.items())
+
+
+QWENSIM = ModelCfg(name="qwensim", n_exp=16, m=96)
+MIXSIM = ModelCfg(name="mixsim", n_exp=8, m=192)
+DSSIM = ModelCfg(name="dssim", n_exp=16, m=64, shared=True, m_shared=192)
+
+CONFIGS = {c.name: c for c in (QWENSIM, MIXSIM, DSSIM)}
+
+# Reduction schedules mirroring the paper's ratios (25/50/62.5/75%).
+REDUCTIONS = {
+    "qwensim": [12, 8, 6, 4],
+    "mixsim": [6, 4, 3, 2],
+    "dssim": [14, 12, 10, 8],
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelCfg, seed: int = 0) -> dict:
+    """Initialise weights. Keys are stable and sorted for the AOT interface."""
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 16 + 16 * cfg.n_layer))
+    p = {}
+    s = 0.02
+    p["embed"] = jax.random.normal(next(ks), (cfg.vocab, cfg.d)) * s
+    p["pos"] = jax.random.normal(next(ks), (cfg.t_max, cfg.d)) * s
+    p["ln_f"] = jnp.ones((cfg.d,))
+    for l in range(cfg.n_layer):
+        pre = f"layer{l:02d}."
+        for w in ("wq", "wk", "wv", "wo"):
+            p[pre + "attn." + w] = jax.random.normal(next(ks), (cfg.d, cfg.d)) * s
+        p[pre + "ln1"] = jnp.ones((cfg.d,))
+        p[pre + "ln2"] = jnp.ones((cfg.d,))
+        p[pre + "router"] = jax.random.normal(next(ks), (cfg.d, cfg.n_exp)) * s
+        p[pre + "exp.wg"] = jax.random.normal(next(ks), (cfg.n_exp, cfg.d, cfg.m)) * s
+        p[pre + "exp.wu"] = jax.random.normal(next(ks), (cfg.n_exp, cfg.d, cfg.m)) * s
+        p[pre + "exp.wd"] = jax.random.normal(next(ks), (cfg.n_exp, cfg.m, cfg.d)) * s
+        if cfg.shared:
+            p[pre + "shared.wg"] = jax.random.normal(next(ks), (cfg.d, cfg.m_shared)) * s
+            p[pre + "shared.wu"] = jax.random.normal(next(ks), (cfg.d, cfg.m_shared)) * s
+            p[pre + "shared.wd"] = jax.random.normal(next(ks), (cfg.m_shared, cfg.d)) * s
+    return p
+
+
+def param_names(cfg: ModelCfg) -> list:
+    return sorted(init_params(cfg, 0).keys())
+
+
+def compact_params(params: dict, r: int) -> dict:
+    """Shape skeleton for the r-expert compact variant (weights themselves are
+    produced by the Rust merger; this is used for lowering example shapes)."""
+    return {k: (v[:r] if ".exp." in k else v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def attention(cfg: ModelCfg, p: dict, pre: str, h):
+    """Causal multi-head self-attention. h: [B, T, d]."""
+    b, t, d = h.shape
+    hd = cfg.head_dim
+
+    def split(x):  # [B, T, d] -> [B, H, T, hd]
+        return x.reshape(b, t, cfg.heads, hd).transpose(0, 2, 1, 3)
+
+    q = split(h @ p[pre + "attn.wq"])
+    k = split(h @ p[pre + "attn.wk"])
+    v = split(h @ p[pre + "attn.wv"])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal, scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ p[pre + "attn.wo"]
+
+
+def dispatch(x, idx, probs, n: int, cap: int):
+    """Capacity-based token dispatch.
+
+    Args:
+      x: [T, d] tokens; idx/probs: [T, k] routing decisions.
+    Returns:
+      x_d [n, cap, d], plus (e_flat, pos_flat, keep) for the combine.
+    """
+    t, k = idx.shape
+    e_flat = idx.reshape(-1)  # [T*k], token-major
+    onehot = jax.nn.one_hot(e_flat, n, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # queue position per entry
+    p_flat = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = p_flat < cap
+    x_rep = jnp.repeat(x, k, axis=0)  # [T*k, d]
+    x_d = jnp.zeros((n, cap, x.shape[-1]), x.dtype)
+    x_d = x_d.at[e_flat, p_flat].set(x_rep, mode="drop")
+    return x_d, e_flat, p_flat, keep
+
+
+def combine(out_d, e_flat, p_flat, keep, probs):
+    """Inverse of dispatch: gather expert outputs, weight by gate probs."""
+    t, k = probs.shape
+    gathered = out_d.at[e_flat, p_flat].get(mode="fill", fill_value=0.0)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)  # [T*k, d]
+    gathered = gathered.reshape(t, k, -1)
+    return jnp.sum(gathered * probs[..., None], axis=1)
+
+
+def moe_block(cfg: ModelCfg, p: dict, pre: str, x, mask_l, *, use_pallas: bool,
+              remap_l=None, n_slots=None):
+    """One SMoE FFN block on flattened tokens x: [T, d].
+
+    mask_l: additive router mask [n_exp].
+    remap_l: optional [n_exp] i32 slot remap (compact variant).
+    n_slots: number of physical expert slots (r for compact, else n_exp).
+    """
+    slots = n_slots if n_slots is not None else cfg.n_exp
+    logits = x @ p[pre + "router"]  # [T, n] — router always keeps n outputs
+    idx, probs = ref.route_topk(logits, cfg.k, mask_l)
+    t = x.shape[0]
+    if remap_l is not None:
+        idx = remap_l[idx]
+    # capacity-based dispatch: total slot compute is ~k*T*cap_factor
+    # regardless of the expert count, so merging keeps latency flat while
+    # shrinking weight memory — exactly the paper's Table 20 observation.
+    cap = cfg.capacity(t, slots)
+    wg, wu, wd = p[pre + "exp.wg"], p[pre + "exp.wu"], p[pre + "exp.wd"]
+    x_d, e_flat, p_flat, keep = dispatch(x, idx, probs, slots, cap)
+    if use_pallas:
+        out_d = moe_ffn(x_d, wg, wu, wd, block_c=cfg.block_c)
+    else:
+        out_d = ref.moe_ffn_ref(x_d, wg, wu, wd)
+    y = combine(out_d, e_flat, p_flat, keep, probs)
+    if cfg.shared:
+        y = y + ref.swiglu(
+            x, p[pre + "shared.wg"], p[pre + "shared.wu"], p[pre + "shared.wd"]
+        )
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Forwards
+# ---------------------------------------------------------------------------
+
+
+def forward_logits(cfg: ModelCfg, p: dict, ids, router_mask, *,
+                   use_pallas: bool = True, remap=None, n_slots=None):
+    """ids: [B, T] i32; router_mask: [L, n] additive f32. Returns [B, T, V].
+
+    remap: optional [L, n] i32 for the compact variant.
+    """
+    b, t = ids.shape
+    h = p["embed"][ids] + p["pos"][:t][None, :, :]
+    for l in range(cfg.n_layer):
+        pre = f"layer{l:02d}."
+        h = h + attention(cfg, p, pre, rmsnorm(h, p[pre + "ln1"]))
+        hf = rmsnorm(h, p[pre + "ln2"]).reshape(b * t, cfg.d)
+        y = moe_block(
+            cfg, p, pre, hf, router_mask[l], use_pallas=use_pallas,
+            remap_l=None if remap is None else remap[l], n_slots=n_slots,
+        )
+        h = h + y.reshape(b, t, cfg.d)
+    h = rmsnorm(h, p["ln_f"])
+    return h @ p["embed"].T
+
+
+def forward_logits_compact(cfg: ModelCfg, p: dict, ids, router_mask, remap, r: int,
+                           *, use_pallas: bool = True):
+    """True r-expert forward (expert tensors are [r, d, m])."""
+    return forward_logits(
+        cfg, p, ids, router_mask, use_pallas=use_pallas, remap=remap, n_slots=r
+    )
+
+
+def forward_calib(cfg: ModelCfg, p: dict, ids, *, t_sub: int = 512,
+                  t_act: int = 256):
+    """Calibration pass over ids [B, T].
+
+    Dense per-expert compute (every expert on every token) so the statistics
+    of Eq. (4) are exact, plus everything the baselines need.
+
+    Returns a tuple (all f32):
+      mean_out  [L, n, d]   — o_j = E_x[E_j(x)]            (HC-SMoE metric)
+      counts    [L, n]      — top-k routing frequencies     (freq merging, F-prune)
+      probs_sum [L, n]      — sum of full-softmax router scores (S-prune)
+      gate_sum  [L, n]      — sum of top-k gate weights
+      rl_sub    [L, Ts, n]  — router-logit profiles          (M-SMoE metric)
+      raw_sub   [L, n, Ts, d] — per-expert outputs on Ts subsampled tokens (O-prune)
+      act_sub   [L, n, Ta, m] — intermediate activations     (ZipIt / Fix-Dom)
+      hid_sub   [L, Ts, d]  — pre-MoE hidden states on the subsampled tokens
+    """
+    b, t = ids.shape
+    tok = b * t
+    assert t_sub <= tok and t_act <= t_sub
+    stride = tok // t_sub
+    sub_idx = jnp.arange(t_sub) * stride
+    act_idx = sub_idx[:t_act]
+
+    h = p["embed"][ids] + p["pos"][:t][None, :, :]
+    acc = {k: [] for k in
+           ("mean_out", "counts", "probs_sum", "gate_sum", "rl_sub",
+            "raw_sub", "act_sub", "hid_sub")}
+    for l in range(cfg.n_layer):
+        pre = f"layer{l:02d}."
+        h = h + attention(cfg, p, pre, rmsnorm(h, p[pre + "ln1"]))
+        hf = rmsnorm(h, p[pre + "ln2"]).reshape(tok, cfg.d)
+        logits = hf @ p[pre + "router"]  # [tok, n]
+        idx, probs = ref.route_topk(logits, cfg.k)
+        gates = ref.dense_gates(idx, probs, cfg.n_exp)  # [tok, n]
+        outs = ref.expert_ffn_dense(
+            hf, p[pre + "exp.wg"], p[pre + "exp.wu"], p[pre + "exp.wd"]
+        )  # [tok, n, d]
+        acc["mean_out"].append(jnp.mean(outs, axis=0))
+        acc["counts"].append(
+            jnp.sum(ref.dense_gates(idx, jnp.ones_like(probs), cfg.n_exp), axis=0)
+        )
+        acc["probs_sum"].append(jnp.sum(jax.nn.softmax(logits, axis=-1), axis=0))
+        acc["gate_sum"].append(jnp.sum(gates, axis=0))
+        acc["rl_sub"].append(logits[sub_idx])
+        acc["raw_sub"].append(outs[sub_idx].transpose(1, 0, 2))
+        acts = ref.expert_act_dense(
+            hf[act_idx], p[pre + "exp.wg"], p[pre + "exp.wu"]
+        )  # [Ta, n, m]
+        acc["act_sub"].append(acts.transpose(1, 0, 2))
+        acc["hid_sub"].append(hf[sub_idx])
+        y = jnp.einsum("tn,tnd->td", gates, outs)
+        if cfg.shared:
+            y = y + ref.swiglu(
+                hf, p[pre + "shared.wg"], p[pre + "shared.wu"], p[pre + "shared.wd"]
+            )
+        h = h + y.reshape(b, t, cfg.d)
+    return tuple(
+        jnp.stack(acc[k]) for k in
+        ("mean_out", "counts", "probs_sum", "gate_sum", "rl_sub",
+         "raw_sub", "act_sub", "hid_sub")
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training (build-time only)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelCfg, p: dict, ids):
+    """Next-token CE + Switch-style load-balance + z-loss.
+
+    Uses the dense reference MoE (no dispatch) — every expert receives
+    gradient signal and there is no token dropping during training.
+    """
+    b, t = ids.shape
+    h = p["embed"][ids] + p["pos"][:t][None, :, :]
+    aux = 0.0
+    zloss = 0.0
+    for l in range(cfg.n_layer):
+        pre = f"layer{l:02d}."
+        h = h + attention(cfg, p, pre, rmsnorm(h, p[pre + "ln1"]))
+        hf = rmsnorm(h, p[pre + "ln2"]).reshape(b * t, cfg.d)
+        logits = hf @ p[pre + "router"]
+        idx, probs = ref.route_topk(logits, cfg.k)
+        gates = ref.dense_gates(idx, probs, cfg.n_exp)
+        outs = ref.expert_ffn_dense(
+            hf, p[pre + "exp.wg"], p[pre + "exp.wu"], p[pre + "exp.wd"]
+        )
+        y = jnp.einsum("tn,tnd->td", gates, outs)
+        if cfg.shared:
+            y = y + ref.swiglu(
+                hf, p[pre + "shared.wg"], p[pre + "shared.wu"], p[pre + "shared.wd"]
+            )
+        h = h + y.reshape(b, t, cfg.d)
+        # load balancing: n * sum_i f_i * p_i  (Switch Transformer)
+        full_p = jax.nn.softmax(logits, axis=-1)
+        f = jnp.mean(
+            ref.dense_gates(idx, jnp.ones_like(probs), cfg.n_exp), axis=0
+        ) / cfg.k
+        pbar = jnp.mean(full_p, axis=0)
+        aux = aux + cfg.n_exp * jnp.sum(f * pbar)
+        zloss = zloss + jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    h = rmsnorm(h, p["ln_f"])
+    logits = h @ p["embed"].T
+    tgt = ids[:, 1:]
+    lsm = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(lsm, tgt[..., None], axis=-1))
+    return ce + 0.02 * aux / cfg.n_layer + 1e-4 * zloss / cfg.n_layer, ce
+
+
+def adam_init(p: dict):
+    return {
+        "m": {k: jnp.zeros_like(v) for k, v in p.items()},
+        "v": {k: jnp.zeros_like(v) for k, v in p.items()},
+        "t": jnp.zeros(()),
+    }
+
+
+def adam_step(p, opt, grads, lr, b1=0.9, b2=0.95, eps=1e-8, wd=1e-4):
+    t = opt["t"] + 1.0
+    m = {k: b1 * opt["m"][k] + (1 - b1) * grads[k] for k in p}
+    v = {k: b2 * opt["v"][k] + (1 - b2) * grads[k] ** 2 for k in p}
+    newp = {}
+    for k in p:
+        mhat = m[k] / (1 - b1 ** t)
+        vhat = v[k] / (1 - b2 ** t)
+        newp[k] = p[k] - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p[k])
+    return newp, {"m": m, "v": v, "t": t}
+
+
+def make_train_step(cfg: ModelCfg):
+    def step(p, opt, ids, lr):
+        (loss, ce), grads = jax.value_and_grad(
+            lambda q: lm_loss(cfg, q, ids), has_aux=True
+        )(p)
+        p2, opt2 = adam_step(p, opt, grads, lr)
+        return p2, opt2, loss, ce
+
+    return jax.jit(step)

@@ -1,0 +1,92 @@
+"""Build-time training of the simulated SMoE models.
+
+The paper is retraining-*free*: it starts from converged pretrained SMoE
+checkpoints.  We cannot download Qwen/Mixtral here, so `make artifacts`
+trains each simulated model once on the synthetic corpus (DESIGN.md
+"Substitutions") — a few hundred Adam steps is enough for the tiny models to
+learn the benchmark skills and for experts to specialise, which is the
+property the merging experiments need.  Nothing here ever runs again after
+artifacts are built.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+def lr_schedule(step: int, total: int, peak: float = 2.5e-3, warmup: int = 60):
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return peak * (0.05 + 0.95 * 0.5 * (1 + np.cos(np.pi * frac)))
+
+
+def build_training_tokens(seed: int, n_tokens: int) -> np.ndarray:
+    """Training mix: corpus domains + task-format (QA) exposure.
+
+    43% general / 12% math / 10% code / 5% med / 30% QA-format samples.
+    The QA component plays the role instruction-ish pretraining data plays
+    for the paper's LLMs: without format exposure, zero-shot option scoring
+    of unseen markers is chance for a tiny model.
+    """
+    kb = D.KnowledgeBase.build()
+    corpus = D.CorpusGen(kb)
+    bench = D.BenchmarkGen(kb, corpus)
+    rng = np.random.Generator(np.random.Philox(seed))
+
+    chunks = []
+    for dom, frac in (("general", 0.43), ("math", 0.12), ("code", 0.10), ("med", 0.05)):
+        chunks.append(corpus.stream(dom, int(rng.integers(1 << 30)), int(n_tokens * frac)))
+    qa_toks: list = []
+    target = int(n_tokens * 0.30)
+    while len(qa_toks) < target:
+        for task in D.BenchmarkGen.TASKS:
+            item = getattr(bench, task)(rng)
+            qa_toks += item.prompt + item.choices[item.answer] + [D.EOS]
+    chunks.append(np.asarray(qa_toks[:target], dtype=np.int32))
+    toks = np.concatenate(chunks)
+    block = 64
+    n_blk = len(toks) // block
+    perm = rng.permutation(n_blk)
+    return toks[: n_blk * block].reshape(n_blk, block)[perm].reshape(-1)
+
+
+def train(cfg: M.ModelCfg, *, steps: int = 1000, batch: int = 8, seq: int = 64,
+          seed: int = 0, log_every: int = 50, tokens: np.ndarray | None = None,
+          verbose: bool = True) -> dict:
+    """Train one model; returns the trained parameter dict (and logs loss)."""
+    if tokens is None:
+        tokens = build_training_tokens(seed=seed + 11, n_tokens=max(400_000, steps * batch * seq // 2))
+    n_seq = len(tokens) // seq
+    seqs = tokens[: n_seq * seq].reshape(n_seq, seq)
+
+    params = M.init_params(cfg, seed=seed)
+    opt = M.adam_init(params)
+    step_fn = M.make_train_step(cfg)
+    rng = np.random.Generator(np.random.Philox(seed + 99))
+
+    t0 = time.time()
+    history = []
+    for it in range(steps):
+        idx = rng.integers(0, n_seq, size=batch)
+        ids = jnp.asarray(seqs[idx], dtype=jnp.int32)
+        lr = lr_schedule(it, steps)
+        params, opt, loss, ce = step_fn(params, opt, ids, lr)
+        if it % log_every == 0 or it == steps - 1:
+            ce_v = float(ce)
+            history.append((it, ce_v))
+            if verbose:
+                print(
+                    f"[{cfg.name}] step {it:4d}  ce={ce_v:.4f}  "
+                    f"ppl={np.exp(ce_v):.1f}  ({time.time()-t0:.0f}s)",
+                    flush=True,
+                )
+    params = {k: np.asarray(v) for k, v in params.items()}
+    return params, history

@@ -1,0 +1,141 @@
+"""Synthetic-language substrate: determinism, formats, benchmark sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return D.KnowledgeBase.build()
+
+
+@pytest.fixture(scope="module")
+def corpus(kb):
+    return D.CorpusGen(kb)
+
+
+@pytest.fixture(scope="module")
+def bench(kb, corpus):
+    return D.BenchmarkGen(kb, corpus)
+
+
+class TestVocab:
+    def test_ranges_disjoint_and_in_vocab(self):
+        ranges = [D.SUBJ, D.REL, D.OBJ, D.DIGIT, D.KEY, D.VAL, D.MED_SUBJ,
+                  D.MED_OBJ, D.FILLER]
+        flat = sorted(ranges)
+        for (a1, b1), (a2, _) in zip(flat, flat[1:]):
+            assert b1 <= a2, f"overlap: {(a1, b1)} vs {a2}"
+        assert all(b <= D.VOCAB_SIZE for _, b in ranges)
+
+
+class TestKnowledgeBase:
+    def test_deterministic(self, kb):
+        kb2 = D.KnowledgeBase.build()
+        assert kb.easy == kb2.easy and kb.hard == kb2.hard and kb.med == kb2.med
+
+    def test_tiers_cover_all_subjects(self, kb):
+        n_subj = D.SUBJ[1] - D.SUBJ[0]
+        n_rel = D.REL[1] - D.REL[0]
+        assert len(kb.easy) + len(kb.hard) == n_subj * n_rel
+        assert len(kb.med) == (D.MED_SUBJ[1] - D.MED_SUBJ[0]) * 4
+
+    def test_hop_resolves(self, kb):
+        hits = 0
+        for s in range(D.SUBJ[0], D.SUBJ[1]):
+            if kb.hop(s, D.REL[0], D.REL[1] - 1) is not None:
+                hits += 1
+        assert hits == D.SUBJ[1] - D.SUBJ[0], "two-hop chains must always resolve"
+
+
+class TestCorpus:
+    @pytest.mark.parametrize("dom", ["general", "math", "code", "med"])
+    def test_streams_deterministic_and_in_vocab(self, corpus, dom):
+        a = corpus.stream(dom, 5, 500)
+        b = corpus.stream(dom, 5, 500)
+        np.testing.assert_array_equal(a, b)
+        assert a.min() >= 0 and a.max() < D.VOCAB_SIZE
+        assert len(a) == 500
+
+    def test_streams_differ_by_seed(self, corpus):
+        a = corpus.stream("general", 1, 500)
+        b = corpus.stream("general", 2, 500)
+        assert not np.array_equal(a, b)
+
+    def test_math_statements_are_valid(self, corpus):
+        toks = corpus.stream("math", 3, 600).tolist()
+        i = 0
+        checked = 0
+        while i + 5 < len(toks):
+            if toks[i + 1] in (D.OP_ADD, D.OP_MUL) and toks[i + 3] == D.OP_EQ:
+                a = toks[i] - D.DIGIT[0]
+                b = toks[i + 2] - D.DIGIT[0]
+                c = toks[i + 4] - D.DIGIT[0]
+                expect = (a + b) % D.MOD if toks[i + 1] == D.OP_ADD else (a * b) % D.MOD
+                assert c == expect
+                checked += 1
+                i += 6
+            else:
+                i += 1
+        assert checked >= 50
+
+    def test_domains_have_distinct_token_distributions(self, corpus):
+        gen = set(corpus.stream("general", 7, 800).tolist())
+        med = set(corpus.stream("med", 7, 800).tolist())
+        med_only = range(D.MED_SUBJ[0], D.MED_OBJ[1])
+        assert any(t in med for t in med_only)
+        assert not any(t in gen for t in med_only), "med facts leak into general"
+
+
+class TestBenchmarks:
+    @pytest.mark.parametrize("task", D.BenchmarkGen.TASKS)
+    def test_generation_and_answers(self, bench, task):
+        items = bench.dataset(task, 32, seed=1)
+        assert len(items) == 32
+        n_choices = len(items[0].choices)
+        assert n_choices in (2, 4)
+        for it in items:
+            assert 0 <= it.answer < n_choices
+            assert len(set(tuple(c) for c in it.choices)) == n_choices, "dup choices"
+            assert all(0 <= t < D.VOCAB_SIZE for t in it.prompt)
+
+    def test_fact_answers_are_correct(self, bench, kb):
+        for it in bench.dataset("arc_e", 20, seed=2):
+            s, r = it.prompt[1], it.prompt[2]
+            assert it.choices[it.answer][0] == kb.easy[(s, r)]
+
+    def test_binary_tasks_are_balanced(self, bench):
+        for task in ["boolq", "rte", "wino"]:
+            items = bench.dataset(task, 200, seed=3)
+            frac = sum(i.answer for i in items) / len(items)
+            assert 0.35 < frac < 0.65, f"{task} answer balance {frac}"
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_dataset_determinism(self, bench, seed):
+        a = bench.dataset("mmlu", 5, seed)
+        b = bench.dataset("mmlu", 5, seed)
+        for x, y in zip(a, b):
+            assert x.prompt == y.prompt and x.choices == y.choices
+
+
+class TestSerialization:
+    def test_benchmark_roundtrip(self, bench, tmp_path):
+        items = bench.dataset("obqa", 16, seed=4)
+        path = str(tmp_path / "obqa.bin")
+        D.write_benchmark(path, items)
+        back = D.read_benchmark(path)
+        assert len(back) == 16
+        for a, b in zip(items, back):
+            assert a.prompt == b.prompt
+            assert a.choices == b.choices
+            assert a.answer == b.answer
+
+    def test_tokens_roundtrip(self, corpus, tmp_path):
+        toks = corpus.stream("code", 9, 300)
+        path = str(tmp_path / "t.bin")
+        D.write_tokens(path, toks)
+        np.testing.assert_array_equal(D.read_tokens(path), toks)

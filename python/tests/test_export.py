@@ -1,0 +1,57 @@
+"""Weights serialisation + AOT interface contracts."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.export import load_weights, save_weights
+
+TINY = M.ModelCfg(
+    name="tiny", n_layer=2, d=16, m=12, n_exp=4, k=2, heads=2,
+    vocab=32, t_max=32, block_c=4,
+)
+
+
+class TestWeightsIO:
+    def test_roundtrip(self, tmp_path):
+        p = {k: np.asarray(v) for k, v in M.init_params(TINY, 0).items()}
+        path = str(tmp_path / "w.hcwt")
+        save_weights(path, p)
+        back = load_weights(path)
+        assert sorted(back) == sorted(p)
+        for k in p:
+            np.testing.assert_array_equal(back[k], p[k].astype(np.float32))
+
+    def test_order_is_sorted_names(self, tmp_path):
+        """The HLO parameter order contract: tensors are stored sorted."""
+        p = {"b": np.ones(2, np.float32), "a": np.zeros(3, np.float32)}
+        path = str(tmp_path / "o.hcwt")
+        save_weights(path, p)
+        raw = open(path, "rb").read()
+        assert raw.index(b"a") < raw.index(b"b")
+
+
+class TestParamLayout:
+    def test_param_names_stable(self):
+        names = M.param_names(TINY)
+        assert names == sorted(names)
+        assert "embed" in names and "layer00.exp.wg" in names
+
+    def test_shared_model_has_shared_tensors(self):
+        cfg = M.ModelCfg(
+            name="sh", n_layer=1, d=8, m=8, n_exp=2, heads=2, vocab=16,
+            t_max=16, shared=True, m_shared=12, block_c=4,
+        )
+        names = M.param_names(cfg)
+        assert "layer00.shared.wg" in names
+
+    def test_compact_params_slices_experts_only(self):
+        p = M.init_params(TINY, 0)
+        c = M.compact_params(p, 2)
+        assert c["layer00.exp.wg"].shape[0] == 2
+        assert c["embed"].shape == p["embed"].shape
+
+    def test_cfg_kv_roundtrip_keys(self):
+        kv = TINY.to_kv()
+        for key in ("n_layer", "d", "m", "n_exp", "k", "vocab", "cap_factor"):
+            assert f"{key} = " in kv

@@ -1,0 +1,198 @@
+"""L2 correctness: routing, dispatch/combine, forwards, calibration stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+TINY = M.ModelCfg(
+    name="tiny", n_layer=2, d=32, m=24, n_exp=4, k=2, heads=2,
+    vocab=64, t_max=64, block_c=8,
+)
+TINY_SHARED = M.ModelCfg(
+    name="tinysh", n_layer=2, d=32, m=16, n_exp=4, k=2, heads=2,
+    vocab=64, t_max=64, shared=True, m_shared=24, block_c=8,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, 0)
+
+
+class TestRouting:
+    def test_route_topk_matches_lax_topk(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (50, 8))
+        idx, probs = ref.route_topk(logits, 2)
+        vals_l, idx_l = jax.lax.top_k(logits, 2)
+        np.testing.assert_array_equal(idx, idx_l)
+        np.testing.assert_allclose(probs, jax.nn.softmax(vals_l, -1), atol=1e-6)
+
+    def test_mask_excludes_experts(self):
+        logits = jax.random.normal(jax.random.PRNGKey(1), (50, 8))
+        mask = jnp.zeros(8).at[3].set(-1e30).at[5].set(-1e30)
+        idx, _ = ref.route_topk(logits, 2, mask)
+        assert not np.isin(np.asarray(idx), [3, 5]).any()
+
+    def test_probs_sum_to_one(self):
+        logits = jax.random.normal(jax.random.PRNGKey(2), (20, 8))
+        _, probs = ref.route_topk(logits, 2)
+        np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-6)
+
+
+class TestDispatch:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), t=st.sampled_from([16, 40, 64]))
+    def test_dispatch_combine_roundtrip_vs_dense(self, seed, t):
+        """With generous capacity (no drops) the dispatch path must equal
+        the dense Eq. (1) computation exactly."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        n, d, m, k = 4, 16, 12, 2
+        x = jax.random.normal(ks[0], (t, d))
+        wr = jax.random.normal(ks[1], (d, n)) * 0.5
+        wg = jax.random.normal(ks[2], (n, d, m)) * 0.2
+        wu = jax.random.normal(ks[3], (n, d, m)) * 0.2
+        wd = jax.random.normal(ks[4], (n, m, d)) * 0.2
+        dense = ref.moe_layer_dense(x, wr, wg, wu, wd, k)
+        # dispatch with capacity = all slots (no drop possible)
+        logits = x @ wr
+        idx, probs = ref.route_topk(logits, k)
+        cap = t * k
+        xd, e_flat, p_flat, keep = M.dispatch(x, idx, probs, n, cap)
+        out_d = ref.moe_ffn_ref(xd, wg, wu, wd)
+        y = M.combine(out_d, e_flat, p_flat, keep, probs)
+        np.testing.assert_allclose(y, dense, atol=1e-4, rtol=1e-4)
+
+    def test_capacity_drops_excess_tokens(self):
+        # all tokens to expert 0 with capacity 2: only 2 slots filled
+        x = jnp.ones((5, 3))
+        idx = jnp.zeros((5, 1), jnp.int32)
+        probs = jnp.ones((5, 1))
+        xd, _, p_flat, keep = M.dispatch(x, idx, probs, 2, 2)
+        assert int(keep.sum()) == 2
+        assert float(jnp.abs(xd[0, 2:]).sum()) == 0.0
+        assert float(jnp.abs(xd[1]).sum()) == 0.0
+        assert int(p_flat.max()) == 4
+
+
+class TestForward:
+    def test_pallas_and_ref_paths_agree(self, params):
+        ids = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, TINY.vocab)
+        mask = jnp.zeros((TINY.n_layer, TINY.n_exp))
+        a = M.forward_logits(TINY, params, ids, mask, use_pallas=True)
+        b = M.forward_logits(TINY, params, ids, mask, use_pallas=False)
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+        assert a.shape == (2, 16, TINY.vocab)
+
+    def test_mask_reroutes_like_pruning(self, params):
+        ids = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, TINY.vocab)
+        mask0 = jnp.zeros((TINY.n_layer, TINY.n_exp))
+        mask_pruned = mask0.at[:, 0].set(-1e30)
+        a = M.forward_logits(TINY, params, ids, mask0, use_pallas=False)
+        b = M.forward_logits(TINY, params, ids, mask_pruned, use_pallas=False)
+        assert not np.allclose(a, b), "pruning an expert must change outputs"
+
+    def test_compact_variant_equals_duplicated_full(self, params):
+        """The central runtime identity: merging via duplicated slots on the
+        n-expert executable == the true r-expert compact executable.
+
+        Uses a generous capacity factor so no path drops tokens — the
+        identity under capacity pressure is policy, not math (the compact
+        variant ships 2x headroom; see model.moe_block)."""
+        import dataclasses
+        cfg = dataclasses.replace(TINY, cap_factor=8.0)
+        ids = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, cfg.vocab)
+        mask = jnp.zeros((cfg.n_layer, cfg.n_exp))
+        # merge plan: {0,1} -> A, {2} -> B, {3} -> C (r=3), same every layer
+        groups = [[0, 1], [2], [3]]
+        full = dict(params)
+        r = len(groups)
+        remap_row = [0, 0, 1, 2]
+        for l in range(cfg.n_layer):
+            pre = f"layer{l:02d}."
+            for wkey in ("exp.wg", "exp.wu", "exp.wd"):
+                w = params[pre + wkey]
+                merged = [w[jnp.asarray(g)].mean(axis=0) for g in groups]
+                # duplicated layout
+                dup = w
+                for gi, g in enumerate(groups):
+                    for e in g:
+                        dup = dup.at[e].set(merged[gi])
+                full[pre + wkey] = dup
+        a = M.forward_logits(cfg, full, ids, mask, use_pallas=False)
+        compact = {
+            k: (jnp.stack([v[[0, 2, 3][s]] for s in range(r)]) if ".exp." in k else v)
+            for k, v in full.items()
+        }
+        remap = jnp.asarray([remap_row] * cfg.n_layer, jnp.int32)
+        b = M.forward_logits_compact(cfg, compact, ids, mask, remap, r, use_pallas=False)
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+    def test_shared_expert_path(self):
+        p = M.init_params(TINY_SHARED, 1)
+        ids = jax.random.randint(jax.random.PRNGKey(6), (2, 16), 0, 64)
+        mask = jnp.zeros((2, 4))
+        out = M.forward_logits(TINY_SHARED, p, ids, mask, use_pallas=False)
+        assert out.shape == (2, 16, 64)
+        # zeroing the shared expert changes the output
+        p2 = dict(p)
+        for l in range(2):
+            p2[f"layer{l:02d}.shared.wd"] = jnp.zeros_like(p[f"layer{l:02d}.shared.wd"])
+        out2 = M.forward_logits(TINY_SHARED, p2, ids, mask, use_pallas=False)
+        assert not np.allclose(out, out2)
+
+
+class TestCalib:
+    def test_stat_shapes_and_consistency(self, params):
+        ids = jax.random.randint(jax.random.PRNGKey(7), (2, 32), 0, TINY.vocab)
+        stats = M.forward_calib(TINY, params, ids, t_sub=16, t_act=8)
+        mean_out, counts, probs_sum, gate_sum, rl, raw, act, hid = stats
+        L, n, d, m = TINY.n_layer, TINY.n_exp, TINY.d, TINY.m
+        assert mean_out.shape == (L, n, d)
+        assert counts.shape == (L, n)
+        assert rl.shape == (L, 16, n)
+        assert raw.shape == (L, n, 16, d)
+        assert act.shape == (L, n, 8, m)
+        assert hid.shape == (L, 16, d)
+        tok = 2 * 32
+        # each token picks exactly k experts
+        np.testing.assert_allclose(counts.sum(-1), tok * TINY.k, atol=1e-4)
+        # full-softmax scores sum to the token count
+        np.testing.assert_allclose(probs_sum.sum(-1), tok, atol=1e-3)
+        # gate weights sum to the token count (softmax over k)
+        np.testing.assert_allclose(gate_sum.sum(-1), tok, atol=1e-3)
+
+    def test_raw_outputs_match_direct_expert_eval(self, params):
+        """raw_sub[l, e, s] must equal E_e(hid_sub[l, s]) — the invariant
+        O-prune's replay relies on."""
+        ids = jax.random.randint(jax.random.PRNGKey(8), (2, 32), 0, TINY.vocab)
+        stats = M.forward_calib(TINY, params, ids, t_sub=16, t_act=8)
+        _, _, _, _, _, raw, _, hid = stats
+        for l in range(TINY.n_layer):
+            pre = f"layer{l:02d}."
+            outs = ref.expert_ffn_dense(
+                hid[l], params[pre + "exp.wg"], params[pre + "exp.wu"],
+                params[pre + "exp.wd"],
+            )  # [t_sub, n, d]
+            np.testing.assert_allclose(
+                raw[l], outs.transpose(1, 0, 2), atol=1e-4, rtol=1e-4
+            )
+
+
+class TestTraining:
+    def test_loss_decreases_on_tiny_corpus(self):
+        cfg = TINY
+        p = M.init_params(cfg, 3)
+        opt = M.adam_init(p)
+        step = M.make_train_step(cfg)
+        ids = jax.random.randint(jax.random.PRNGKey(9), (4, 32), 0, cfg.vocab)
+        first = None
+        for i in range(30):
+            p, opt, loss, ce = step(p, opt, ids, 3e-3)
+            if i == 0:
+                first = float(ce)
+        assert float(ce) < first * 0.8, f"{first} -> {float(ce)}"

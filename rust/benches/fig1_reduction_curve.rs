@@ -1,0 +1,50 @@
+//! Figure 1: average accuracy vs expert-parameter reduction rate on the
+//! Qwen analog — HC-SMoE against the pruning/merging baselines at 25%,
+//! 37.5%, 50%, 62.5% and 75% reduction (rows shared with Tables 2/18 via
+//! the results cache).
+
+use hc_smoe::bench_support::{Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::report::Table;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let reductions: Vec<(usize, &str)> =
+        vec![(12, "25%"), (10, "37.5%"), (8, "50%"), (6, "62.5%"), (4, "75%")];
+    let methods: Vec<(&str, Method)> = vec![
+        (
+            "HC-SMoE",
+            Method::HcSmoe {
+                linkage: Linkage::Average,
+                metric: Metric::ExpertOutput,
+                merge: MergeStrategy::Frequency,
+            },
+        ),
+        ("F-prune", Method::FPrune),
+        ("S-prune", Method::SPrune),
+        ("M-SMoE", Method::MSmoe),
+    ];
+    let mut headers = vec!["Method".to_string(), "0%".to_string()];
+    headers.extend(reductions.iter().map(|(_, p)| p.to_string()));
+    let mut table = Table::new(
+        "Figure 1 analog — average accuracy vs expert reduction (qwensim)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let (_, orig_avg) = lab.eval_original(&PAPER_TASKS)?;
+    for (name, method) in methods {
+        let mut cells = vec![name.to_string(), format!("{orig_avg:.4}")];
+        for &(r, _) in &reductions {
+            let (_, avg) = lab.eval_method(method.clone(), r, "general", &PAPER_TASKS)?;
+            cells.push(format!("{avg:.4}"));
+        }
+        table.row(cells);
+    }
+    table.print();
+    // ascii curve for the figure
+    println!("\n(star = original at {orig_avg:.3})");
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Figures 6-13 (Appendix E): expert activation frequency analysis across
+//! benchmark-task token streams vs the C4-analog — the evidence that
+//! frequency is task-dependent and hence an unreliable retention criterion.
+
+use hc_smoe::bench_support::Lab;
+use hc_smoe::calib::CalibStats;
+use hc_smoe::data::TokenStream;
+use hc_smoe::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("mixsim")?;
+    let n = lab.ctx.cfg.n_exp;
+    let streams: Vec<String> = std::iter::once("general".to_string())
+        .chain(lab.ctx.manifest.tasks.iter().map(|t| format!("task_{t}")))
+        .collect();
+    for layer in [0usize, lab.ctx.cfg.n_layer - 1] {
+        let mut headers = vec!["Stream".to_string()];
+        headers.extend((0..n).map(|e| format!("E{e}")));
+        let mut table = Table::new(
+            &format!("Figures 6-13 analog — activation frequency, mixsim layer {layer}"),
+            &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        let mut per_stream: Vec<Vec<f64>> = Vec::new();
+        for stream_name in &streams {
+            let ts = TokenStream::load(lab.ctx.arts.calib_tokens_path(stream_name))?;
+            let stats = CalibStats::collect(&lab.ctx, &ts)?;
+            let counts = &stats.layers[layer].counts;
+            let total: f32 = counts.iter().sum();
+            let freqs: Vec<f64> = counts.iter().map(|&c| (c / total) as f64).collect();
+            let mut cells = vec![stream_name.clone()];
+            cells.extend(freqs.iter().map(|f| format!("{f:.3}")));
+            table.row(cells);
+            per_stream.push(freqs);
+        }
+        table.print();
+        table.append_to("bench_results.md")?;
+        // the paper's point: the frequency ranking varies across tasks
+        let rank_of = |f: &Vec<f64>| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| f[b].partial_cmp(&f[a]).unwrap());
+            idx
+        };
+        let base_rank = rank_of(&per_stream[0]);
+        let mut disagreements = 0;
+        for f in &per_stream[1..] {
+            if rank_of(f)[0] != base_rank[0] {
+                disagreements += 1;
+            }
+        }
+        println!(
+            "layer {layer}: top-expert disagrees with the C4-analog on \
+             {disagreements}/{} task streams",
+            per_stream.len() - 1
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Performance microbenchmarks (EXPERIMENTS.md §Perf): the L3 hot paths —
+//! PJRT execution latency, per-call data-upload overhead, algorithm
+//! runtimes (HC / K-means / merging), and serving-batcher behaviour.
+
+use std::time::Duration;
+
+use hc_smoe::bench_support::Lab;
+use hc_smoe::clustering::{hierarchical, kmeans, KmeansInit, Linkage};
+use hc_smoe::report::Table;
+use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+use hc_smoe::similarity::{distance_matrix, features, Distance, Metric};
+use hc_smoe::util::bench_median;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let (b, t) = (lab.ctx.manifest.eval_b, lab.ctx.manifest.eval_t);
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 97) as i32 + 16).collect();
+    let mut table = Table::new(
+        "Perf microbench (qwensim)",
+        &["Path", "median", "min", "max", "unit"],
+    );
+
+    // 1. PJRT end-to-end scoring execution (the eval/serving hot path)
+    let orig = lab.ctx.load_original()?;
+    let st = bench_median(3, 12, || {
+        lab.ctx.run_logits(&orig, &ids).unwrap();
+    });
+    table.row(vec![
+        "lm_logits exec (1024 tok)".into(),
+        format!("{:.2}", st.median_s * 1e3),
+        format!("{:.2}", st.min_s * 1e3),
+        format!("{:.2}", st.max_s * 1e3),
+        "ms".into(),
+    ]);
+
+    // 2. weight upload (paid once per variant, amortised away on the hot path)
+    let st = bench_median(1, 5, || {
+        lab.ctx.lm_exe().unwrap().upload_weights(&lab.ctx.base).unwrap();
+    });
+    table.row(vec![
+        "weights upload (2M params)".into(),
+        format!("{:.2}", st.median_s * 1e3),
+        format!("{:.2}", st.min_s * 1e3),
+        format!("{:.2}", st.max_s * 1e3),
+        "ms".into(),
+    ]);
+
+    // 3. clustering algorithms on real features
+    let stats = lab.stats("general")?;
+    let feats = features(Metric::ExpertOutput, &lab.ctx.base, &stats.layers[0], 0)?;
+    let st = bench_median(5, 50, || {
+        let d = distance_matrix(&feats, Distance::Euclidean);
+        std::hint::black_box(hierarchical(&d, 8, Linkage::Average));
+    });
+    table.row(vec![
+        "HC average-linkage (n=16)".into(),
+        format!("{:.1}", st.median_s * 1e6),
+        format!("{:.1}", st.min_s * 1e6),
+        format!("{:.1}", st.max_s * 1e6),
+        "us".into(),
+    ]);
+    let st = bench_median(5, 50, || {
+        std::hint::black_box(kmeans(&feats, 8, KmeansInit::Fixed, 100));
+    });
+    table.row(vec![
+        "K-means (n=16)".into(),
+        format!("{:.1}", st.median_s * 1e6),
+        format!("{:.1}", st.min_s * 1e6),
+        format!("{:.1}", st.max_s * 1e6),
+        "us".into(),
+    ]);
+
+    // 4. full compression pipeline (plan + merge apply)
+    let st = bench_median(1, 5, || {
+        std::hint::black_box(
+            lab.compress(
+                hc_smoe::pipeline::Method::HcSmoe {
+                    linkage: Linkage::Average,
+                    metric: Metric::ExpertOutput,
+                    merge: hc_smoe::merging::MergeStrategy::Frequency,
+                },
+                8,
+                "general",
+            )
+            .unwrap(),
+        );
+    });
+    table.row(vec![
+        "HC-SMoE plan+apply (r=8)".into(),
+        format!("{:.2}", st.median_s * 1e3),
+        format!("{:.2}", st.min_s * 1e3),
+        format!("{:.2}", st.max_s * 1e3),
+        "ms".into(),
+    ]);
+    table.print();
+    table.append_to("bench_results.md")?;
+
+    // 5. serving batcher: throughput under concurrent clients
+    let mut srv_table = Table::new(
+        "Serving batcher (qwensim original, 64 requests x 4 rows)",
+        &["clients", "wall s", "req/s", "rows/s busy", "batches", "fill"],
+    );
+    for clients in [1usize, 4, 16] {
+        let spec = ServeSpec {
+            artifacts_root: lab.ctx.arts.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+        };
+        let handle = serve(
+            spec,
+            BatcherConfig { max_rows: b, max_wait: Duration::from_millis(4) },
+        )?;
+        let n_requests = 64usize;
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let tx = handle.sender();
+                s.spawn(move || {
+                    for i in 0..n_requests / clients {
+                        let prompt = vec![4, 20 + ((c + i) % 16) as i32, 50, 3];
+                        let rows = (0..4)
+                            .map(|ch| {
+                                let mut seq = prompt.clone();
+                                seq.push(60 + ch as i32);
+                                hc_smoe::serving::RowSpec {
+                                    start: prompt.len(),
+                                    end: seq.len(),
+                                    seq,
+                                }
+                            })
+                            .collect();
+                        let (reply, rx) = std::sync::mpsc::channel();
+                        tx.send(hc_smoe::serving::ScoreRequest {
+                            rows,
+                            reply,
+                            enqueued: std::time::Instant::now(),
+                        })
+                        .unwrap();
+                        rx.recv().unwrap();
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = handle.metrics.snapshot();
+        handle.shutdown()?;
+        srv_table.row(vec![
+            clients.to_string(),
+            format!("{wall:.2}"),
+            format!("{:.1}", snap.requests as f64 / wall),
+            format!("{:.1}", snap.rows_per_sec()),
+            snap.batches.to_string(),
+            format!("{:.2}", snap.mean_batch_fill(b)),
+        ]);
+    }
+    srv_table.print();
+    srv_table.append_to("bench_results.md")?;
+    Ok(())
+}

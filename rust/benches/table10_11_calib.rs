@@ -1,0 +1,34 @@
+//! Tables 10-11 (Appendix B.3): calibration-dataset ablation — HC-SMoE
+//! calibrated on the C4/MATH/CodeQA analogs, evaluated on the full suite.
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    for (model, rs) in [("qwensim", [12usize, 8]), ("mixsim", [6, 4])] {
+        let lab = Lab::new(model)?;
+        let mut table = task_table(
+            &format!("Tables 10-11 analog — calibration domains ({model})"),
+            &PAPER_TASKS,
+        );
+        let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+        push_row(&mut table, "None", lab.ctx.cfg.n_exp, &scores, avg);
+        for r in rs {
+            for domain in ["general", "math", "code"] {
+                let method = Method::HcSmoe {
+                    linkage: Linkage::Average,
+                    metric: Metric::ExpertOutput,
+                    merge: MergeStrategy::Frequency,
+                };
+                let (scores, avg) = lab.eval_method(method, r, domain, &PAPER_TASKS)?;
+                push_row(&mut table, &format!("HC-SMoE[{domain}]"), r, &scores, avg);
+            }
+        }
+        table.print();
+        table.append_to("bench_results.md")?;
+    }
+    Ok(())
+}

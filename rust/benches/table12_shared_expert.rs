@@ -1,0 +1,32 @@
+//! Tables 12-13 (Appendix B.4.1): HC-SMoE on the DeepSeek-MoE analog
+//! (dssim: 16 routed experts + 1 always-on shared expert) across 12.5%,
+//! 25%, 37.5% and 50% reduction — the shared expert is excluded from
+//! similarity/merging exactly as the paper does.
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("dssim")?;
+    let mut table = task_table(
+        "Table 12 analog — DeepSeek-style shared-expert model (dssim)",
+        &PAPER_TASKS,
+    );
+    let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+    push_row(&mut table, "0%", 16, &scores, avg);
+    for (ratio, r) in [("12.5%", 14usize), ("25%", 12), ("37.5%", 10), ("50%", 8)] {
+        let method = Method::HcSmoe {
+            linkage: Linkage::Average,
+            metric: Metric::ExpertOutput,
+            merge: MergeStrategy::Frequency,
+        };
+        let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+        push_row(&mut table, ratio, r, &scores, avg);
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

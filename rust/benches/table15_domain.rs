@@ -1,0 +1,58 @@
+//! Table 15 (Appendix B.4.2): domain-specific evaluation on the MedMCQA
+//! analog (held-out specialist domain) — accuracy / precision / recall / F1
+//! for HC-SMoE and the pruning/merging baselines, calibrated on the
+//! specialist domain's own training stream (as the paper calibrates on the
+//! MedMCQA train split).
+
+use hc_smoe::bench_support::Lab;
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::report::Table;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("mixsim")?;
+    let mut table = Table::new(
+        "Table 15 analog — MedMCQA-analog (mixsim, med-domain calibration)",
+        &["Model", "Method", "Accuracy", "Precision", "Recall", "F1"],
+    );
+    let p = lab.prf_original("med")?;
+    table.row(vec![
+        "mixsim 8x".into(),
+        "None".into(),
+        format!("{:.4}", p.accuracy),
+        format!("{:.4}", p.precision),
+        format!("{:.4}", p.recall),
+        format!("{:.4}", p.f1),
+    ]);
+    for &r in &[6usize, 4] {
+        let methods: Vec<(String, Method)> = vec![
+            ("F-prune".into(), Method::FPrune),
+            ("S-prune".into(), Method::SPrune),
+            ("M-SMoE".into(), Method::MSmoe),
+            (
+                "HC-SMoE (ours)".into(),
+                Method::HcSmoe {
+                    linkage: Linkage::Average,
+                    metric: Metric::ExpertOutput,
+                    merge: MergeStrategy::Frequency,
+                },
+            ),
+        ];
+        for (name, method) in methods {
+            let p = lab.prf_method(method, r, "med", "med")?;
+            table.row(vec![
+                format!("mixsim {r}x"),
+                name,
+                format!("{:.4}", p.accuracy),
+                format!("{:.4}", p.precision),
+                format!("{:.4}", p.recall),
+                format!("{:.4}", p.f1),
+            ]);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

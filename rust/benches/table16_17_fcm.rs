@@ -1,0 +1,35 @@
+//! Tables 16-17 (Appendix B.5): hard HC-SMoE vs soft Fuzzy C-Means
+//! clustering (which must also merge router columns, degrading routing).
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    for (model, rs) in [("qwensim", [12usize, 8]), ("mixsim", [6, 4])] {
+        let lab = Lab::new(model)?;
+        let mut table = task_table(
+            &format!("Tables 16-17 analog — HC-SMoE vs Fuzzy C-Means ({model})"),
+            &PAPER_TASKS,
+        );
+        let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+        push_row(&mut table, "None", lab.ctx.cfg.n_exp, &scores, avg);
+        for r in rs {
+            let hc = Method::HcSmoe {
+                linkage: Linkage::Average,
+                metric: Metric::ExpertOutput,
+                merge: MergeStrategy::Frequency,
+            };
+            let (scores, avg) = lab.eval_method(hc, r, "general", &PAPER_TASKS)?;
+            push_row(&mut table, "HC-SMoE", r, &scores, avg);
+            let (scores, avg) =
+                lab.eval_method(Method::Fcm { seed: 7 }, r, "general", &PAPER_TASKS)?;
+            push_row(&mut table, "Fuzzy-Cmeans", r, &scores, avg);
+        }
+        table.print();
+        table.append_to("bench_results.md")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table 20 (Appendix C): computational/memory efficiency of the original
+//! vs merged models — throughput (tokens/ms), latency per batch, analytic
+//! GFLOPs per batch, weight memory and parameter count.
+//!
+//! Mirrors the paper's two regimes:
+//! * the *n-slot* variant (router unchanged, merged experts duplicated) —
+//!   memory shrinks logically but compute stays (the paper's "router
+//!   functions as if the original number of experts exists");
+//! * the *compact* r-expert executables, where compute and memory both
+//!   shrink (our extension enabled by the remap-table design).
+
+use hc_smoe::bench_support::Lab;
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::{compressed_params, Method};
+use hc_smoe::report::Table;
+use hc_smoe::similarity::Metric;
+use hc_smoe::util::bench_median;
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Table 20 analog — efficiency (batch = eval_b x eval_t tokens)",
+        &["Model", "Throughput tok/ms", "Latency ms", "GFLOPs/batch", "Memory MB", "Params M"],
+    );
+    for model in ["mixsim", "qwensim"] {
+        let lab = Lab::new(model)?;
+        let cfg = &lab.ctx.cfg;
+        let (b, t) = (lab.ctx.manifest.eval_b, lab.ctx.manifest.eval_t);
+        let tokens = (b * t) as f64;
+        let ids: Vec<i32> = (0..b * t).map(|i| (i % 97) as i32 + 16).collect();
+
+        // original (n-slot executable)
+        let orig = lab.ctx.load_original()?;
+        let st = bench_median(2, 8, || {
+            lab.ctx.run_logits(&orig, &ids).unwrap();
+        });
+        let params = cfg.total_params(cfg.n_exp);
+        table.row(vec![
+            format!("{model} {}x (orig)", cfg.n_exp),
+            format!("{:.1}", tokens / (st.median_s * 1e3)),
+            format!("{:.1}", st.median_s * 1e3),
+            format!("{:.2}", cfg.flops_per_token(cfg.n_exp) * tokens / 1e9),
+            format!("{:.1}", params as f64 * 4.0 / 1e6),
+            format!("{:.2}", params as f64 / 1e6),
+        ]);
+
+        // merged compact variants at the paper's 25% / 50% ratios
+        let rs = &lab.ctx.manifest.reductions[model];
+        for &r in &rs[..2] {
+            let method = Method::HcSmoe {
+                linkage: Linkage::Average,
+                metric: Metric::ExpertOutput,
+                merge: MergeStrategy::Frequency,
+            };
+            let cm = lab.compress(method, r, "general")?;
+            let (cw, remap) = cm.to_compact(&lab.ctx)?;
+            let compact = lab.ctx.load_compact(r, &cw, remap, &cm.label)?;
+            let st = bench_median(2, 8, || {
+                lab.ctx.run_logits_compact(&compact, &ids).unwrap();
+            });
+            let params = compressed_params(cfg, &cm.plan.experts_per_layer());
+            table.row(vec![
+                format!("{model} {r}x (merged)"),
+                format!("{:.1}", tokens / (st.median_s * 1e3)),
+                format!("{:.1}", st.median_s * 1e3),
+                format!("{:.2}", cfg.flops_per_token(r) * tokens / 1e9),
+                format!("{:.1}", cw.byte_size() as f64 / 1e6),
+                format!("{:.2}", params as f64 / 1e6),
+            ]);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

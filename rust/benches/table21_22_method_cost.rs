@@ -1,0 +1,54 @@
+//! Tables 21-22 (Appendix C): runtime and working-set memory of each
+//! compression algorithm itself (calibration excluded, as in the paper —
+//! every method shares the same calibration pass).
+
+use std::time::Instant;
+
+use hc_smoe::bench_support::{paper_methods, Lab};
+use hc_smoe::pipeline::{Method, Pipeline};
+use hc_smoe::report::Table;
+
+/// Approximate working set: base weights + the stat tensors a method reads.
+fn method_memory_mb(lab: &Lab, method: &Method) -> f64 {
+    let w = lab.ctx.base.byte_size() as f64;
+    let stats = lab.stats("general").unwrap();
+    let per_layer = |l: &hc_smoe::calib::LayerStats| -> f64 {
+        let base = (l.mean_out.len() + l.counts.len() * 3) as f64;
+        let extra = match method {
+            Method::OPrune { .. } => (l.raw_sub.len() + l.rl_sub.len()) as f64,
+            Method::MSmoe => l.rl_sub.len() as f64,
+            Method::HcSmoe { .. } | Method::HcNonUniform { .. } => l.act_sub.len() as f64,
+            _ => 0.0,
+        };
+        base + extra
+    };
+    let stat_bytes: f64 = stats.layers.iter().map(per_layer).sum::<f64>() * 4.0;
+    (w + stat_bytes) / 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    for (model, r) in [("mixsim", 4usize), ("qwensim", 8)] {
+        let lab = Lab::new(model)?;
+        let _ = lab.stats("general")?; // warm calibration once for all methods
+        let mut table = Table::new(
+            &format!("Tables 21-22 analog — method cost ({model}, r={r})"),
+            &["Method", "Runtime (s)", "Working set (MB)"],
+        );
+        for method in paper_methods(lab.ctx.cfg.n_exp, r) {
+            let label = method.label();
+            let stats = lab.stats("general")?;
+            let t0 = Instant::now();
+            let plan = Pipeline::new(method.clone()).plan(&lab.ctx, &stats, r)?;
+            let _cm = plan.apply(&lab.ctx, &stats)?;
+            let secs = t0.elapsed().as_secs_f64();
+            table.row(vec![
+                label,
+                format!("{secs:.3}"),
+                format!("{:.1}", method_memory_mb(&lab, &method)),
+            ]);
+        }
+        table.print();
+        table.append_to("bench_results.md")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Table 23 (Appendix D): cluster quality — last-layer output L2 error and
+//! cosine similarity vs the original model, plus Silhouette and Dunn index
+//! (Euclidean + cosine) for HC vs K-means under each similarity metric.
+
+use hc_smoe::bench_support::Lab;
+use hc_smoe::clustering::{hierarchical, kmeans, KmeansInit, Linkage};
+use hc_smoe::data::TokenStream;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::quality::{dunn_index, output_fidelity, silhouette};
+use hc_smoe::report::Table;
+use hc_smoe::similarity::{distance_matrix, features, Distance, Metric};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let stream = TokenStream::load(lab.ctx.arts.calib_tokens_path("ppl_heldout"))?;
+    let orig = lab.ctx.load_original()?;
+    for r in [12usize, 8] {
+        let mut table = Table::new(
+            &format!("Table 23 analog — cluster quality (qwensim r={r})"),
+            &["Cluster", "Metric", "L2 error", "CosSim", "Sil-Euc", "Dunn-Euc", "Sil-Cos", "Dunn-Cos"],
+        );
+        let stats = lab.stats("general")?;
+        for metric in [Metric::ExpertOutput, Metric::Weight, Metric::RouterLogits] {
+            for clusterer in ["HC", "Kmeans"] {
+                // intrinsic quality: mean over layers
+                let mut sil_e = 0.0;
+                let mut dunn_e = 0.0;
+                let mut sil_c = 0.0;
+                let mut dunn_c = 0.0;
+                for l in 0..lab.ctx.cfg.n_layer {
+                    let feats = features(metric, &lab.ctx.base, &stats.layers[l], l)?;
+                    let assign = if clusterer == "HC" {
+                        let d = distance_matrix(&feats, Distance::Euclidean);
+                        hierarchical(&d, r, Linkage::Average).assign
+                    } else {
+                        kmeans(&feats, r, KmeansInit::Random { seed: 5 }, 100).assign
+                    };
+                    sil_e += silhouette(&feats, &assign, r, Distance::Euclidean);
+                    dunn_e += dunn_index(&feats, &assign, r, Distance::Euclidean);
+                    sil_c += silhouette(&feats, &assign, r, Distance::Cosine);
+                    dunn_c += dunn_index(&feats, &assign, r, Distance::Cosine);
+                }
+                let nl = lab.ctx.cfg.n_layer as f64;
+                // output fidelity of the resulting merged model
+                let method = if clusterer == "HC" {
+                    Method::HcSmoe {
+                        linkage: Linkage::Average,
+                        metric,
+                        merge: MergeStrategy::Frequency,
+                    }
+                } else {
+                    Method::KMeans {
+                        init: KmeansInit::Random { seed: 5 },
+                        metric,
+                        merge: MergeStrategy::Frequency,
+                    }
+                };
+                let cm = lab.compress(method, r, "general")?;
+                let loaded = cm.load(&lab.ctx)?;
+                let (l2, cos) = output_fidelity(&lab.ctx, &orig, &loaded, &stream, 2)?;
+                table.row(vec![
+                    clusterer.to_string(),
+                    metric.short().to_string(),
+                    format!("{l2:.1}"),
+                    format!("{cos:.4}"),
+                    format!("{:.4}", sil_e / nl),
+                    format!("{:.4}", dunn_e / nl),
+                    format!("{:.4}", sil_c / nl),
+                    format!("{:.4}", dunn_c / nl),
+                ]);
+            }
+        }
+        table.print();
+        table.append_to("bench_results.md")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Table 2: zero-shot comparison on the Qwen analog (qwensim, n=16) —
+//! original vs all methods at 25% (r=12) and 50% (r=8) expert reduction.
+
+use hc_smoe::bench_support::{paper_methods, push_row, task_table, Lab, PAPER_TASKS};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let mut table = task_table(
+        "Table 2 analog — qwensim (n=16), C4-analog calibration",
+        &PAPER_TASKS,
+    );
+    let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+    push_row(&mut table, "None", 16, &scores, avg);
+    for &r in &[12usize, 8] {
+        for method in paper_methods(lab.ctx.cfg.n_exp, r) {
+            let label = method.label();
+            let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+            push_row(&mut table, &label, r, &scores, avg);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

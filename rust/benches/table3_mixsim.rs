@@ -1,0 +1,24 @@
+//! Table 3: zero-shot comparison on the Mixtral analog (mixsim, n=8) —
+//! original vs all methods at six (25%) and four (50%) experts per layer.
+
+use hc_smoe::bench_support::{paper_methods, push_row, task_table, Lab, PAPER_TASKS};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("mixsim")?;
+    let mut table = task_table(
+        "Table 3 analog — mixsim (n=8), C4-analog calibration",
+        &PAPER_TASKS,
+    );
+    let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+    push_row(&mut table, "None", 8, &scores, avg);
+    for &r in &[6usize, 4] {
+        for method in paper_methods(lab.ctx.cfg.n_exp, r) {
+            let label = method.label();
+            let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+            push_row(&mut table, &label, r, &scores, avg);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

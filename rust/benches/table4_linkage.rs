@@ -1,0 +1,32 @@
+//! Table 4: linkage (single/complete/average) × similarity metric
+//! (router-logits / weight / expert-output) ablation on qwensim at 25%
+//! reduction, over the paper's 4-task ablation subset.
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, ABLATION_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let r = 12; // 25% reduction
+    let mut table = task_table("Table 4 analog — linkage x metric (qwensim r=12)", &ABLATION_TASKS);
+    let (scores, avg) = lab.eval_original(&ABLATION_TASKS)?;
+    push_row(&mut table, "None", 16, &scores, avg);
+    for linkage in [Linkage::Single, Linkage::Complete, Linkage::Average] {
+        for metric in [Metric::RouterLogits, Metric::Weight, Metric::ExpertOutput] {
+            let method = Method::HcSmoe {
+                linkage,
+                metric,
+                merge: MergeStrategy::Frequency,
+            };
+            let label = format!("{}+{}", linkage.short(), metric.short());
+            let (scores, avg) = lab.eval_method(method, r, "general", &ABLATION_TASKS)?;
+            push_row(&mut table, &label, r, &scores, avg);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 5: K-means (fixed/random init × metric) vs HC on qwensim at 50%
+//! reduction — the initialisation-sensitivity comparison.
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, ABLATION_TASKS};
+use hc_smoe::clustering::{KmeansInit, Linkage};
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let r = 8; // 50% reduction (paper: Qwen 30x)
+    let mut table =
+        task_table("Table 5 analog — K-means vs HC (qwensim r=8)", &ABLATION_TASKS);
+    for (name, init) in [("K-fix", KmeansInit::Fixed), ("K-rnd", KmeansInit::Random { seed: 7 })] {
+        for metric in [Metric::RouterLogits, Metric::Weight, Metric::ExpertOutput] {
+            let method = Method::KMeans { init, metric, merge: MergeStrategy::Frequency };
+            let label = format!("{name}({})", metric.short());
+            let (scores, avg) = lab.eval_method(method, r, "general", &ABLATION_TASKS)?;
+            push_row(&mut table, &label, r, &scores, avg);
+        }
+    }
+    // K-rnd instability: a second seed (paper §4.3 "initialisation sensitivity")
+    let method = Method::KMeans {
+        init: KmeansInit::Random { seed: 1234 },
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    };
+    let (scores, avg) = lab.eval_method(method, r, "general", &ABLATION_TASKS)?;
+    push_row(&mut table, "K-rnd(eo,seed2)", r, &scores, avg);
+    let hc = Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    };
+    let (scores, avg) = lab.eval_method(hc, r, "general", &ABLATION_TASKS)?;
+    push_row(&mut table, "HC(eo)", r, &scores, avg);
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Table 6: single-shot (M-SMoE-style one-pass) grouping under each
+//! similarity metric vs HC-SMoE on mixsim at 25% and 50% reduction.
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("mixsim")?;
+    let mut table =
+        task_table("Table 6 analog — single-shot vs HC (mixsim)", &PAPER_TASKS);
+    let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+    push_row(&mut table, "None", 8, &scores, avg);
+    for &r in &[6usize, 4] {
+        for metric in [Metric::RouterLogits, Metric::Weight, Metric::ExpertOutput] {
+            let method = Method::SingleShot { metric, merge: MergeStrategy::Frequency };
+            let label = format!("single-shot({})", metric.short());
+            let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+            push_row(&mut table, &label, r, &scores, avg);
+        }
+        let hc = Method::HcSmoe {
+            linkage: Linkage::Average,
+            metric: Metric::ExpertOutput,
+            merge: MergeStrategy::Frequency,
+        };
+        let (scores, avg) = lab.eval_method(hc, r, "general", &PAPER_TASKS)?;
+        push_row(&mut table, "HC-SMoE", r, &scores, avg);
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table 7: merging-strategy ablation (frequency / average / Fix-Dom) on
+//! HC average-linkage expert-output clusters — the paper's claim that once
+//! clusters are good, the merge rule barely matters.
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::{FixDomFeature, MergeStrategy};
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let mut table = task_table(
+        "Table 7 analog — merging strategies on HC(avg,eo) clusters (qwensim)",
+        &PAPER_TASKS,
+    );
+    let (scores, avg) = lab.eval_original(&PAPER_TASKS)?;
+    push_row(&mut table, "None", 16, &scores, avg);
+    for &r in &[12usize, 8] {
+        let mut strat_avgs = Vec::new();
+        for (name, merge) in [
+            ("Frequency", MergeStrategy::Frequency),
+            ("Average", MergeStrategy::Average),
+            ("Fix-Dom", MergeStrategy::FixDom(FixDomFeature::Act)),
+        ] {
+            let method = Method::HcSmoe {
+                linkage: Linkage::Average,
+                metric: Metric::ExpertOutput,
+                merge,
+            };
+            let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+            push_row(&mut table, name, r, &scores, avg);
+            strat_avgs.push(avg);
+        }
+        let spread = strat_avgs.iter().cloned().fold(f64::MIN, f64::max)
+            - strat_avgs.iter().cloned().fold(f64::MAX, f64::min);
+        println!("r={r}: merge-strategy average spread = {spread:.4} (paper: ~0.002)");
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

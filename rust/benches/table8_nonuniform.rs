@@ -1,0 +1,38 @@
+//! Table 8 (Appendix B.1): non-uniform per-layer cluster budgets at an
+//! overall 25% reduction — linkage × metric × merge grid.
+
+use hc_smoe::bench_support::{push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::{FixDomFeature, MergeStrategy};
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("qwensim")?;
+    let r = 12; // 25% average reduction
+    let mut table = task_table(
+        "Table 8 analog — non-uniform clustering (qwensim, avg r=12)",
+        &PAPER_TASKS,
+    );
+    for linkage in [Linkage::Single, Linkage::Average] {
+        for metric in [Metric::Weight, Metric::ExpertOutput] {
+            for (mname, merge) in [
+                ("freq", MergeStrategy::Frequency),
+                ("fixdom", MergeStrategy::FixDom(FixDomFeature::Act)),
+            ] {
+                let method = Method::HcNonUniform { linkage, metric, merge };
+                let label = format!("{}+{}+{}", linkage.short(), metric.short(), mname);
+                let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+                push_row(&mut table, &label, r, &scores, avg);
+            }
+        }
+    }
+    // print the budget distribution (the paper's "[48, 45, 40, ...]" example)
+    let stats = lab.stats("general")?;
+    let freqs: Vec<Vec<f32>> = stats.layers.iter().map(|l| l.counts.clone()).collect();
+    let budgets = hc_smoe::clustering::nonuniform_budgets(&freqs, r, lab.ctx.cfg.k);
+    println!("per-layer budgets at avg r={r}: {budgets:?}");
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

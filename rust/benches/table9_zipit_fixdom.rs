@@ -1,0 +1,43 @@
+//! Table 9 (Appendix B.2): ZipIt vs Fix-Dom merging under act / weight /
+//! act+weight features on mixsim at 50% reduction, with the merge runtime
+//! that motivates Fix-Dom (the paper reports >100x).
+
+use std::time::Instant;
+
+use hc_smoe::bench_support::{task_table, Lab, PAPER_TASKS};
+use hc_smoe::clustering::Linkage;
+use hc_smoe::merging::{FixDomFeature, MergeStrategy};
+use hc_smoe::pipeline::Method;
+use hc_smoe::similarity::Metric;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new("mixsim")?;
+    let r = 4;
+    let mut table = task_table("Table 9 analog — ZipIt vs Fix-Dom (mixsim r=4)", &PAPER_TASKS);
+    // extra column for merge runtime: append to the label instead
+    for feature in [FixDomFeature::Act, FixDomFeature::Weight, FixDomFeature::ActWeight] {
+        for (name, merge) in [
+            ("zipit", MergeStrategy::ZipIt(feature)),
+            ("Fix-Dom", MergeStrategy::FixDom(feature)),
+        ] {
+            let method = Method::HcSmoe {
+                linkage: Linkage::Average,
+                metric: Metric::ExpertOutput,
+                merge,
+            };
+            // time the merge (plan+apply) separately from cached eval
+            let t0 = Instant::now();
+            let _ = lab.compress(method.clone(), r, "general")?;
+            let merge_s = t0.elapsed().as_secs_f64();
+            let (scores, avg) = lab.eval_method(method, r, "general", &PAPER_TASKS)?;
+            let mut cells =
+                vec![format!("{name}({})", feature.short()), format!("{merge_s:.2}s")];
+            cells.extend(scores.iter().map(|s| format!("{s:.4}")));
+            cells.push(format!("{avg:.4}"));
+            table.row(cells);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.md")?;
+    Ok(())
+}

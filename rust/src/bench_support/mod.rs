@@ -1,0 +1,192 @@
+//! Shared harness for the table/figure bench targets (`rust/benches/*.rs`)
+//! and the examples.
+//!
+//! `Lab` wraps a model with memoised calibration statistics and a *disk*
+//! results cache (`artifacts/cache/`): every (method, r, domain, task-set)
+//! evaluation is stored once, so `cargo bench` re-runs and benches sharing
+//! configurations (e.g. Fig. 1 reuses Table 2 rows) do not re-execute
+//! minutes of PJRT work.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::calib::CalibStats;
+use crate::config::Artifacts;
+use crate::eval::{Evaluator, Prf};
+use crate::model::ModelContext;
+use crate::pipeline::{CompressedModel, Method, Pipeline};
+
+/// The paper's 8 LM-Harness analogs (med is held out for Table 15).
+pub const PAPER_TASKS: [&str; 8] =
+    ["arc_e", "arc_c", "boolq", "hella", "mmlu", "obqa", "rte", "wino"];
+
+/// The 4-task subset used by the paper's ablation tables (Tables 4, 5).
+pub const ABLATION_TASKS: [&str; 4] = ["arc_c", "boolq", "obqa", "rte"];
+
+pub struct Lab {
+    pub ctx: ModelContext,
+    stats: RefCell<HashMap<String, Rc<CalibStats>>>,
+    cache_dir: std::path::PathBuf,
+}
+
+impl Lab {
+    pub fn new(model: &str) -> Result<Self> {
+        let arts = Artifacts::discover();
+        let ctx = ModelContext::load(&arts, model)
+            .context("loading model context (run `make artifacts` first)")?;
+        let cache_dir = arts.root.join("cache");
+        std::fs::create_dir_all(&cache_dir)?;
+        Ok(Self { ctx, stats: Default::default(), cache_dir })
+    }
+
+    pub fn stats(&self, domain: &str) -> Result<Rc<CalibStats>> {
+        if let Some(s) = self.stats.borrow().get(domain) {
+            return Ok(Rc::clone(s));
+        }
+        let s = Rc::new(self.ctx.calibrate(domain)?);
+        self.stats.borrow_mut().insert(domain.to_string(), Rc::clone(&s));
+        Ok(s)
+    }
+
+    fn cache_key(&self, label: &str, r: usize, domain: &str, tasks: &[&str]) -> String {
+        let safe: String = label
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '-' { c } else { '_' })
+            .collect();
+        format!("{}_{safe}_r{r}_{domain}_{}", self.ctx.cfg.name, tasks.join("-"))
+    }
+
+    fn cache_read(&self, key: &str) -> Option<Vec<f64>> {
+        let path = self.cache_dir.join(format!("{key}.txt"));
+        let text = std::fs::read_to_string(path).ok()?;
+        let vals: Vec<f64> = text
+            .split_whitespace()
+            .map(|s| s.parse().ok())
+            .collect::<Option<_>>()?;
+        Some(vals)
+    }
+
+    fn cache_write(&self, key: &str, vals: &[f64]) {
+        let path = self.cache_dir.join(format!("{key}.txt"));
+        let text: Vec<String> = vals.iter().map(|v| format!("{v:.6}")).collect();
+        let _ = std::fs::write(path, text.join(" "));
+    }
+
+    /// Accuracy of the ORIGINAL model on `tasks` (cached).
+    pub fn eval_original(&self, tasks: &[&str]) -> Result<(Vec<f64>, f64)> {
+        let key = self.cache_key("original", self.ctx.cfg.n_exp, "-", tasks);
+        if let Some(v) = self.cache_read(&key) {
+            let avg = v.iter().sum::<f64>() / v.len() as f64;
+            return Ok((v, avg));
+        }
+        let ev = Evaluator::new(&self.ctx)?;
+        let model = self.ctx.load_original()?;
+        let mut scores = Vec::new();
+        for t in tasks {
+            scores.push(ev.accuracy(&model, t)?);
+        }
+        self.cache_write(&key, &scores);
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        Ok((scores, avg))
+    }
+
+    /// Compress with `method` at target `r` (calibrated on `domain`) and
+    /// score `tasks`. Cached on disk by (label, r, domain, tasks).
+    pub fn eval_method(
+        &self,
+        method: Method,
+        r: usize,
+        domain: &str,
+        tasks: &[&str],
+    ) -> Result<(Vec<f64>, f64)> {
+        let label = method.label();
+        let key = self.cache_key(&label, r, domain, tasks);
+        if let Some(v) = self.cache_read(&key) {
+            let avg = v.iter().sum::<f64>() / v.len() as f64;
+            return Ok((v, avg));
+        }
+        let cm = self.compress(method, r, domain)?;
+        let scores = self.eval_compressed(&cm, tasks)?;
+        self.cache_write(&key, &scores);
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        Ok((scores, avg))
+    }
+
+    /// Compress only (no cache) — for quality/efficiency analyses.
+    pub fn compress(&self, method: Method, r: usize, domain: &str) -> Result<CompressedModel> {
+        let stats = self.stats(domain)?;
+        let plan = Pipeline::new(method).plan(&self.ctx, &stats, r)?;
+        plan.apply(&self.ctx, &stats)
+    }
+
+    /// Score an already-compressed model (no cache).
+    pub fn eval_compressed(&self, cm: &CompressedModel, tasks: &[&str]) -> Result<Vec<f64>> {
+        let ev = Evaluator::new(&self.ctx)?;
+        let model = cm.load(&self.ctx)?;
+        tasks.iter().map(|t| ev.accuracy(&model, t)).collect()
+    }
+
+    /// P/R/F1 on one task for a method (Table 15).
+    pub fn prf_method(&self, method: Method, r: usize, domain: &str, task: &str) -> Result<Prf> {
+        let cm = self.compress(method, r, domain)?;
+        let ev = Evaluator::new(&self.ctx)?;
+        let model = cm.load(&self.ctx)?;
+        ev.prf(&model, task)
+    }
+
+    pub fn prf_original(&self, task: &str) -> Result<Prf> {
+        let ev = Evaluator::new(&self.ctx)?;
+        let model = self.ctx.load_original()?;
+        ev.prf(&model, task)
+    }
+}
+
+/// The standard method roster of Tables 2-3 (with model-appropriate O-prune
+/// sampling budgets).
+pub fn paper_methods(n_exp: usize, r: usize) -> Vec<Method> {
+    use crate::clustering::Linkage;
+    use crate::merging::MergeStrategy;
+    use crate::similarity::Metric;
+    let samples = if crate::pruning::n_choose_r(n_exp, r) <= 20_000 { 20_000 } else { 5_000 };
+    vec![
+        Method::OPrune { samples, seed: 42 },
+        Method::FPrune,
+        Method::SPrune,
+        Method::MSmoe,
+        Method::HcSmoe {
+            linkage: Linkage::Average,
+            metric: Metric::ExpertOutput,
+            merge: MergeStrategy::Frequency,
+        },
+        Method::HcSmoe {
+            linkage: Linkage::Single,
+            metric: Metric::ExpertOutput,
+            merge: MergeStrategy::Frequency,
+        },
+    ]
+}
+
+/// Standard table header for an 8-task comparison.
+pub fn task_table(title: &str, tasks: &[&str]) -> crate::report::Table {
+    let mut headers = vec!["Method".to_string(), "r".to_string()];
+    headers.extend(tasks.iter().map(|s| s.to_string()));
+    headers.push("Average".to_string());
+    crate::report::Table::new(title, &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+}
+
+/// Push one scored row.
+pub fn push_row(
+    table: &mut crate::report::Table,
+    label: &str,
+    r: impl std::fmt::Display,
+    scores: &[f64],
+    avg: f64,
+) {
+    let mut cells = vec![label.to_string(), r.to_string()];
+    cells.extend(scores.iter().map(|s| format!("{s:.4}")));
+    cells.push(format!("{avg:.4}"));
+    table.row(cells);
+}

@@ -1,0 +1,204 @@
+//! Calibration statistics (Section 3.2.1 / Algorithm 1 lines 1-4).
+//!
+//! One pass of the `calib_<model>` HLO executable over a calibration token
+//! stream yields, per layer, everything every method in the paper needs:
+//!
+//! * `mean_out`  — o_j = E_x[E_j(x)] (Eq. 4), HC-SMoE's similarity metric;
+//! * `counts`    — top-k routing frequencies (frequency merging, F-prune);
+//! * `probs_sum` — accumulated full-softmax router scores (S-prune);
+//! * `gate_sum`  — accumulated top-k gate weights;
+//! * `rl_sub`    — router-logit profiles on subsampled tokens (M-SMoE);
+//! * `raw_sub`   — per-expert outputs on subsampled tokens (O-prune);
+//! * `act_sub`   — intermediate activations (ZipIt / Fix-Dom features);
+//! * `hid_sub`   — pre-MoE hidden states (layer-output replay).
+
+use anyhow::{ensure, Result};
+
+use crate::data::TokenStream;
+use crate::model::ModelContext;
+use crate::tensor::Tensor;
+
+/// Per-layer statistics.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub mean_out: Tensor,  // [n, d]
+    pub counts: Vec<f32>,  // [n]
+    pub probs_sum: Vec<f32>, // [n]
+    pub gate_sum: Vec<f32>,  // [n]
+    pub rl_sub: Tensor,    // [t_sub, n]
+    pub raw_sub: Tensor,   // [n, t_sub, d]
+    pub act_sub: Tensor,   // [n, t_act, m]
+    pub hid_sub: Tensor,   // [t_sub, d]
+}
+
+impl LayerStats {
+    /// Router-logit profile of expert `i` across the subsampled tokens —
+    /// the M-SMoE similarity feature.
+    pub fn rl_profile(&self, i: usize) -> Vec<f32> {
+        let (t, n) = (self.rl_sub.shape()[0], self.rl_sub.shape()[1]);
+        (0..t).map(|s| self.rl_sub.data()[s * n + i]).collect()
+    }
+
+    /// Raw outputs of expert `i`: [t_sub, d] slice.
+    pub fn raw_out(&self, i: usize) -> Tensor {
+        self.raw_sub.index(i)
+    }
+
+    /// Activation features of expert `i`: [t_act, m] slice.
+    pub fn acts(&self, i: usize) -> Tensor {
+        self.act_sub.index(i)
+    }
+
+    /// Normalised frequencies f̃ (Algorithm 1 line 14) over a subset.
+    pub fn norm_freq(&self, experts: &[usize]) -> Vec<f32> {
+        let total: f32 = experts.iter().map(|&e| self.counts[e]).sum();
+        if total <= 0.0 {
+            return vec![1.0 / experts.len() as f32; experts.len()];
+        }
+        experts.iter().map(|&e| self.counts[e] / total).collect()
+    }
+}
+
+/// Full-model calibration statistics.
+#[derive(Debug, Clone)]
+pub struct CalibStats {
+    pub domain: String,
+    pub layers: Vec<LayerStats>,
+    pub n_tokens: usize,
+}
+
+impl CalibStats {
+    /// Run the calibration executable over every [calib_b, calib_t] batch in
+    /// the stream and average/accumulate the statistics.
+    pub fn collect(ctx: &ModelContext, ts: &TokenStream) -> Result<Self> {
+        let (b, t) = (ctx.manifest.calib_b, ctx.manifest.calib_t);
+        let batches = ts.batches(b, t);
+        ensure!(!batches.is_empty(), "calibration stream shorter than one batch");
+        let mut agg: Option<Vec<LayerStats>> = None;
+        for ids in &batches {
+            let outs = ctx.run_calib(ids)?;
+            ensure!(outs.len() == 8, "calib tuple must have 8 elements");
+            let layers = unpack(ctx, outs)?;
+            agg = Some(match agg {
+                None => layers,
+                Some(mut acc) => {
+                    for (a, l) in acc.iter_mut().zip(layers) {
+                        merge_into(a, &l);
+                    }
+                    acc
+                }
+            });
+        }
+        let mut layers = agg.unwrap();
+        let nb = batches.len() as f32;
+        if nb > 1.0 {
+            for l in &mut layers {
+                // mean_out is a mean per batch -> average across batches;
+                // counts/sums accumulate (they are totals).
+                l.mean_out.scale(1.0 / nb);
+            }
+        }
+        Ok(Self {
+            domain: String::new(),
+            layers,
+            n_tokens: batches.len() * b * t,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.layers[0].counts.len()
+    }
+}
+
+fn merge_into(a: &mut LayerStats, l: &LayerStats) {
+    a.mean_out.add_scaled(&l.mean_out, 1.0);
+    for (x, y) in a.counts.iter_mut().zip(&l.counts) {
+        *x += y;
+    }
+    for (x, y) in a.probs_sum.iter_mut().zip(&l.probs_sum) {
+        *x += y;
+    }
+    for (x, y) in a.gate_sum.iter_mut().zip(&l.gate_sum) {
+        *x += y;
+    }
+    // subsampled tensors: keep the first batch's subsample (stable; the
+    // profiles only need a representative token sample).
+}
+
+fn unpack(ctx: &ModelContext, outs: Vec<Tensor>) -> Result<Vec<LayerStats>> {
+    let nl = ctx.cfg.n_layer;
+    let mut it = outs.into_iter();
+    let mean_out = it.next().unwrap();
+    let counts = it.next().unwrap();
+    let probs_sum = it.next().unwrap();
+    let gate_sum = it.next().unwrap();
+    let rl_sub = it.next().unwrap();
+    let raw_sub = it.next().unwrap();
+    let act_sub = it.next().unwrap();
+    let hid_sub = it.next().unwrap();
+    ensure!(mean_out.shape()[0] == nl, "layer dim mismatch");
+    let mut layers = Vec::with_capacity(nl);
+    for l in 0..nl {
+        layers.push(LayerStats {
+            mean_out: mean_out.index(l),
+            counts: counts.index(l).into_data(),
+            probs_sum: probs_sum.index(l).into_data(),
+            gate_sum: gate_sum.index(l).into_data(),
+            rl_sub: rl_sub.index(l),
+            raw_sub: raw_sub.index(l),
+            act_sub: act_sub.index(l),
+            hid_sub: hid_sub.index(l),
+        });
+    }
+    Ok(layers)
+}
+
+#[cfg(test)]
+pub mod testutil {
+    //! Synthetic `CalibStats` for algorithm unit tests (no PJRT needed).
+    use super::*;
+    use crate::util::Rng;
+
+    /// Build stats where experts form `groups` of near-identical behaviour —
+    /// the ground truth the clustering tests recover.
+    pub fn synthetic_grouped(
+        n: usize,
+        d: usize,
+        groups: &[Vec<usize>],
+        noise: f32,
+        seed: u64,
+    ) -> LayerStats {
+        let mut rng = Rng::new(seed);
+        let t_sub = 16;
+        let m = 8;
+        let mut centers = vec![vec![0f32; d]; groups.len()];
+        for c in &mut centers {
+            for x in c.iter_mut() {
+                *x = rng.normal() as f32;
+            }
+        }
+        let mut mean = vec![0f32; n * d];
+        for (gi, g) in groups.iter().enumerate() {
+            for &e in g {
+                for j in 0..d {
+                    mean[e * d + j] = centers[gi][j] + noise * rng.normal() as f32;
+                }
+            }
+        }
+        let counts: Vec<f32> = (0..n).map(|_| 1.0 + rng.below(100) as f32).collect();
+        LayerStats {
+            mean_out: Tensor::new(vec![n, d], mean).unwrap(),
+            probs_sum: counts.clone(),
+            gate_sum: counts.clone(),
+            counts,
+            rl_sub: Tensor::zeros(vec![t_sub, n]),
+            raw_sub: Tensor::zeros(vec![n, t_sub, d]),
+            act_sub: Tensor::zeros(vec![n, t_sub.min(8), m]),
+            hid_sub: Tensor::zeros(vec![t_sub, d]),
+        }
+    }
+}

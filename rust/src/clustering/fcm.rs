@@ -1,0 +1,140 @@
+//! Fuzzy C-Means soft clustering (Appendix B.5, Bezdek et al. 1984).
+//!
+//! Minimises J_m = Σ_i Σ_j u_ij^m ||e_i - c_j||² (Eq. 13) with the standard
+//! alternating updates (Eq. 14).  The membership matrix feeds the soft
+//! merging path (Eq. 15) including the router-weight merge the paper shows
+//! degrades accuracy — reproduced in Tables 16-17.
+
+use crate::tensor::l2_dist;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct FcmResult {
+    /// u[i][j] = membership of expert i in cluster j; rows sum to 1.
+    pub membership: Vec<Vec<f32>>,
+    pub centers: Vec<Vec<f32>>,
+    pub r: usize,
+}
+
+impl FcmResult {
+    /// Hard assignment by max membership (used for reporting only).
+    pub fn hard_assign(&self) -> Vec<usize> {
+        self.membership
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+}
+
+pub fn fcm(feats: &[Vec<f32>], r: usize, fuzz: f32, iters: usize, seed: u64) -> FcmResult {
+    let n = feats.len();
+    let dim = feats[0].len();
+    assert!(r >= 1 && r <= n);
+    let mut rng = Rng::new(seed);
+    // init memberships randomly (rows normalised)
+    let mut u = vec![vec![0f32; r]; n];
+    for row in &mut u {
+        let mut s = 0.0;
+        for x in row.iter_mut() {
+            *x = rng.next_f32().max(1e-3);
+            s += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= s;
+        }
+    }
+    let mut centers = vec![vec![0f32; dim]; r];
+    let expo = 2.0 / (fuzz - 1.0);
+    for _ in 0..iters {
+        // centers: c_j = Σ u_ij^m e_i / Σ u_ij^m  (Eq. 14 right)
+        for j in 0..r {
+            let mut num = vec![0f32; dim];
+            let mut den = 0f32;
+            for i in 0..n {
+                let w = u[i][j].powf(fuzz);
+                den += w;
+                for k in 0..dim {
+                    num[k] += w * feats[i][k];
+                }
+            }
+            for k in 0..dim {
+                centers[j][k] = if den > 0.0 { num[k] / den } else { feats[0][k] };
+            }
+        }
+        // memberships (Eq. 14 left)
+        for i in 0..n {
+            let dists: Vec<f32> = (0..r)
+                .map(|j| l2_dist(&feats[i], &centers[j]).max(1e-9))
+                .collect();
+            for j in 0..r {
+                let mut s = 0f32;
+                for k in 0..r {
+                    s += (dists[j] / dists[k]).powf(expo);
+                }
+                u[i][j] = 1.0 / s;
+            }
+        }
+    }
+    FcmResult { membership: u, centers, r }
+}
+
+/// Objective J_m (Eq. 13) — used by tests to check monotone improvement.
+pub fn objective(feats: &[Vec<f32>], res: &FcmResult, fuzz: f32) -> f64 {
+    let mut j = 0f64;
+    for (i, f) in feats.iter().enumerate() {
+        for (c, center) in res.centers.iter().enumerate() {
+            let d = l2_dist(f, center) as f64;
+            j += (res.membership[i][c] as f64).powf(fuzz as f64) * d * d;
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_feats() -> Vec<Vec<f32>> {
+        vec![
+            vec![0.0, 0.0],
+            vec![0.2, 0.0],
+            vec![8.0, 8.0],
+            vec![8.2, 8.0],
+        ]
+    }
+
+    #[test]
+    fn memberships_are_a_distribution() {
+        let res = fcm(&blob_feats(), 2, 2.0, 30, 1);
+        for row in &res.membership {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sums to {s}");
+            assert!(row.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn blobs_get_confident_memberships() {
+        let res = fcm(&blob_feats(), 2, 2.0, 50, 2);
+        let h = res.hard_assign();
+        assert_eq!(h[0], h[1]);
+        assert_eq!(h[2], h[3]);
+        assert_ne!(h[0], h[2]);
+        // confidence >> 0.5 for well-separated blobs
+        assert!(res.membership[0][h[0]] > 0.9);
+    }
+
+    #[test]
+    fn objective_improves_with_iterations() {
+        let f = blob_feats();
+        let early = objective(&f, &fcm(&f, 2, 2.0, 1, 3), 2.0);
+        let late = objective(&f, &fcm(&f, 2, 2.0, 40, 3), 2.0);
+        assert!(late <= early + 1e-6, "J_m should not increase: {early} -> {late}");
+    }
+}

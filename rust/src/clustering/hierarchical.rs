@@ -1,0 +1,216 @@
+//! Agglomerative hierarchical clustering (Algorithm 1, Section 3.2.2).
+//!
+//! Bottom-up: start from singleton clusters, repeatedly merge the pair with
+//! the smallest linkage distance until `r` clusters remain.  Deterministic —
+//! the paper's key robustness argument vs K-means — and with average linkage
+//! it carries the Moseley-Wang 3·OPT approximation guarantee (Appendix A.1).
+//!
+//! Linkage distances are recomputed from the *expert-level* distance matrix
+//! at every step (Eq. 6-8), so merged clusters re-enter the comparison with
+//! their true aggregate distances ("iterative recalibration", §3.2.2).
+
+use super::Clustering;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Linkage {
+    Single,   // Eq. 6: min pairwise
+    Complete, // Eq. 7: max pairwise
+    Average,  // Eq. 8: mean pairwise (the paper's choice)
+}
+
+impl Linkage {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Linkage::Single => "single",
+            Linkage::Complete => "complete",
+            Linkage::Average => "avg",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "single" => Linkage::Single,
+            "complete" => Linkage::Complete,
+            "average" | "avg" => Linkage::Average,
+            other => anyhow::bail!("unknown linkage {other:?}"),
+        })
+    }
+}
+
+/// Linkage distance between two clusters given the expert distance matrix.
+fn cluster_dist(dist: &[Vec<f32>], a: &[usize], b: &[usize], linkage: Linkage) -> f32 {
+    match linkage {
+        Linkage::Single => {
+            let mut best = f32::INFINITY;
+            for &i in a {
+                for &j in b {
+                    best = best.min(dist[i][j]);
+                }
+            }
+            best
+        }
+        Linkage::Complete => {
+            let mut worst = f32::NEG_INFINITY;
+            for &i in a {
+                for &j in b {
+                    worst = worst.max(dist[i][j]);
+                }
+            }
+            worst
+        }
+        Linkage::Average => {
+            let mut sum = 0f64;
+            for &i in a {
+                for &j in b {
+                    sum += dist[i][j] as f64;
+                }
+            }
+            (sum / (a.len() * b.len()) as f64) as f32
+        }
+    }
+}
+
+/// Cluster `n` experts into `r` groups from a pairwise distance matrix.
+pub fn hierarchical(dist: &[Vec<f32>], r: usize, linkage: Linkage) -> Clustering {
+    let n = dist.len();
+    assert!(r >= 1 && r <= n, "need 1 <= r <= n (r={r}, n={n})");
+    let mut clusters: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    while clusters.len() > r {
+        let mut best = (0usize, 1usize, f32::INFINITY);
+        for a in 0..clusters.len() {
+            for b in (a + 1)..clusters.len() {
+                let d = cluster_dist(dist, &clusters[a], &clusters[b], linkage);
+                // strict < keeps the tie-break deterministic (lowest index pair)
+                if d < best.2 {
+                    best = (a, b, d);
+                }
+            }
+        }
+        let (a, b, _) = best;
+        let merged = clusters.remove(b);
+        clusters[a].extend(merged);
+    }
+    let mut assign = vec![0usize; n];
+    // stable cluster ids: order clusters by smallest member index
+    let mut order: Vec<usize> = (0..clusters.len()).collect();
+    order.sort_by_key(|&c| *clusters[c].iter().min().unwrap());
+    for (new_id, &c) in order.iter().enumerate() {
+        for &e in &clusters[c] {
+            assign[e] = new_id;
+        }
+    }
+    Clustering::new(assign, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::similarity::{distance_matrix, Distance};
+    use crate::util::{proptest, Rng};
+
+    fn dist_of(points: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        distance_matrix(points, Distance::Euclidean)
+    }
+
+    #[test]
+    fn recovers_obvious_groups() {
+        // two tight groups far apart
+        let pts = vec![
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![10.0, 10.0],
+            vec![10.1, 10.0],
+        ];
+        for linkage in [Linkage::Single, Linkage::Complete, Linkage::Average] {
+            let c = hierarchical(&dist_of(&pts), 2, linkage);
+            assert_eq!(c.assign[0], c.assign[1], "{linkage:?}");
+            assert_eq!(c.assign[2], c.assign[3], "{linkage:?}");
+            assert_ne!(c.assign[0], c.assign[2], "{linkage:?}");
+        }
+    }
+
+    #[test]
+    fn r_equals_n_is_identity() {
+        let pts: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32]).collect();
+        let c = hierarchical(&dist_of(&pts), 5, Linkage::Average);
+        assert_eq!(c.assign, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn r_equals_one_merges_all() {
+        let pts: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32]).collect();
+        let c = hierarchical(&dist_of(&pts), 1, Linkage::Single);
+        assert!(c.assign.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut rng = Rng::new(5);
+        let pts: Vec<Vec<f32>> = (0..12)
+            .map(|_| (0..4).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let d = dist_of(&pts);
+        let a = hierarchical(&d, 4, Linkage::Average);
+        let b = hierarchical(&d, 4, Linkage::Average);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_linkage_chains_complete_does_not() {
+        // a chain of equally spaced points: single linkage merges the chain,
+        // complete linkage prefers compact pairs
+        let pts: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32]).collect();
+        let d = dist_of(&pts);
+        let single = hierarchical(&d, 2, Linkage::Single);
+        // chain: split into contiguous prefix/suffix
+        let mut groups = single.groups();
+        groups.sort_by_key(|g| g[0]);
+        for g in &groups {
+            for w in g.windows(2) {
+                assert_eq!(w[1], w[0] + 1, "single linkage keeps the chain contiguous");
+            }
+        }
+        let complete = hierarchical(&d, 3, Linkage::Complete);
+        complete.validate().unwrap();
+    }
+
+    #[test]
+    fn partition_invariants_hold() {
+        proptest::check("hc-partition", 17, 30, |rng| {
+            let n = 2 + rng.below(14);
+            let r = 1 + rng.below(n);
+            let pts: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..3).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let d = dist_of(&pts);
+            for linkage in [Linkage::Single, Linkage::Complete, Linkage::Average] {
+                let c = hierarchical(&d, r, linkage);
+                c.validate().map_err(|e| e.to_string())?;
+                proptest::ensure(c.r == r, "cluster count")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn average_linkage_minimizes_within_group_spread_on_blobs() {
+        // sanity for the 3*OPT story: on well-separated blobs, HC-average
+        // yields intra-cluster distances far below inter-cluster ones.
+        let mut rng = Rng::new(42);
+        let mut pts = Vec::new();
+        for c in 0..3 {
+            for _ in 0..5 {
+                pts.push(vec![
+                    10.0 * c as f32 + 0.1 * rng.normal() as f32,
+                    0.1 * rng.normal() as f32,
+                ]);
+            }
+        }
+        let d = dist_of(&pts);
+        let cl = hierarchical(&d, 3, Linkage::Average);
+        for g in cl.groups() {
+            let c0 = g[0] / 5;
+            assert!(g.iter().all(|&e| e / 5 == c0), "blob split: {g:?}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! K-means baseline (Table 5): `K-fix` seeds centroids with the first `r`
+//! experts, `K-rnd` with `r` random experts — reproducing the paper's
+//! initialisation-sensitivity comparison against deterministic HC.
+
+use super::Clustering;
+use crate::tensor::l2_dist;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KmeansInit {
+    /// First r experts as initial centers (paper's K-means-fix).
+    Fixed,
+    /// r random experts as initial centers (paper's K-means-rnd).
+    Random { seed: u64 },
+}
+
+pub fn kmeans(feats: &[Vec<f32>], r: usize, init: KmeansInit, max_iter: usize) -> Clustering {
+    let n = feats.len();
+    assert!(r >= 1 && r <= n);
+    let dim = feats[0].len();
+    let init_idx: Vec<usize> = match init {
+        KmeansInit::Fixed => (0..r).collect(),
+        KmeansInit::Random { seed } => {
+            let mut rng = Rng::new(seed);
+            rng.choose_distinct(n, r)
+        }
+    };
+    let mut centers: Vec<Vec<f32>> = init_idx.iter().map(|&i| feats[i].clone()).collect();
+    let mut assign = vec![0usize; n];
+    for _ in 0..max_iter {
+        // assignment step
+        let mut changed = false;
+        for e in 0..n {
+            let mut best = (0usize, f32::INFINITY);
+            for (c, center) in centers.iter().enumerate() {
+                let d = l2_dist(&feats[e], center);
+                if d < best.1 {
+                    best = (c, d);
+                }
+            }
+            if assign[e] != best.0 {
+                assign[e] = best.0;
+                changed = true;
+            }
+        }
+        // update step
+        let mut sums = vec![vec![0f32; dim]; r];
+        let mut cnt = vec![0usize; r];
+        for e in 0..n {
+            cnt[assign[e]] += 1;
+            for j in 0..dim {
+                sums[assign[e]][j] += feats[e][j];
+            }
+        }
+        for c in 0..r {
+            if cnt[c] == 0 {
+                // empty cluster: steal the point farthest from its center
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        l2_dist(&feats[a], &centers[assign[a]])
+                            .partial_cmp(&l2_dist(&feats[b], &centers[assign[b]]))
+                            .unwrap()
+                    })
+                    .unwrap();
+                assign[far] = c;
+                centers[c] = feats[far].clone();
+                continue;
+            }
+            for j in 0..dim {
+                centers[c][j] = sums[c][j] / cnt[c] as f32;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // final repair: guarantee no empty cluster (validate() invariant)
+    let mut groups = vec![Vec::new(); r];
+    for (e, &c) in assign.iter().enumerate() {
+        groups[c].push(e);
+    }
+    for c in 0..r {
+        if groups[c].is_empty() {
+            // take a member from the largest cluster
+            let donor = (0..r).max_by_key(|&g| groups[g].len()).unwrap();
+            let e = groups[donor].pop().unwrap();
+            assign[e] = c;
+            groups[c].push(e);
+        }
+    }
+    Clustering::new(assign, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn recovers_blobs() {
+        let pts = vec![
+            vec![0.0, 0.0],
+            vec![0.2, 0.1],
+            vec![9.0, 9.0],
+            vec![9.1, 9.2],
+        ];
+        let c = kmeans(&pts, 2, KmeansInit::Fixed, 50);
+        assert_eq!(c.assign[0], c.assign[1]);
+        assert_eq!(c.assign[2], c.assign[3]);
+        assert_ne!(c.assign[0], c.assign[2]);
+    }
+
+    #[test]
+    fn random_init_varies_but_fixed_does_not() {
+        // a deliberately ambiguous configuration: equally spaced points
+        let pts: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32]).collect();
+        let a = kmeans(&pts, 3, KmeansInit::Fixed, 100);
+        let b = kmeans(&pts, 3, KmeansInit::Fixed, 100);
+        assert_eq!(a, b, "fixed init must be deterministic");
+        // different seeds can produce different partitions (the paper's
+        // instability point); we only require both remain valid
+        let r1 = kmeans(&pts, 3, KmeansInit::Random { seed: 1 }, 100);
+        let r2 = kmeans(&pts, 3, KmeansInit::Random { seed: 2 }, 100);
+        r1.validate().unwrap();
+        r2.validate().unwrap();
+    }
+
+    #[test]
+    fn partition_invariants() {
+        proptest::check("kmeans-partition", 23, 30, |rng| {
+            let n = 2 + rng.below(14);
+            let r = 1 + rng.below(n);
+            let pts: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..3).map(|_| rng.normal() as f32).collect())
+                .collect();
+            for init in [KmeansInit::Fixed, KmeansInit::Random { seed: rng.next_u64() }] {
+                let c = kmeans(&pts, r, init, 50);
+                c.validate().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+}

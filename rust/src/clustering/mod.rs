@@ -1,0 +1,81 @@
+//! Expert grouping (Section 3.2.2 + ablations): hierarchical clustering
+//! (the paper's method, Algorithm 1), K-means (fixed/random init), Fuzzy
+//! C-Means (Appendix B.5), M-SMoE-style single-shot grouping, and the
+//! non-uniform layer-budget variant (Appendix B.1).
+
+pub mod fcm;
+pub mod hierarchical;
+pub mod kmeans;
+pub mod nonuniform;
+pub mod singleshot;
+
+pub use fcm::{fcm, FcmResult};
+pub use hierarchical::{hierarchical, Linkage};
+pub use kmeans::{kmeans, KmeansInit};
+pub use nonuniform::nonuniform_budgets;
+pub use singleshot::single_shot;
+
+/// A hard clustering of `n` experts into `r` groups.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Clustering {
+    /// assign[e] = cluster id in 0..r
+    pub assign: Vec<usize>,
+    pub r: usize,
+}
+
+impl Clustering {
+    pub fn new(assign: Vec<usize>, r: usize) -> Self {
+        debug_assert!(assign.iter().all(|&c| c < r));
+        Self { assign, r }
+    }
+
+    pub fn n(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Member lists per cluster.
+    pub fn groups(&self) -> Vec<Vec<usize>> {
+        let mut g = vec![Vec::new(); self.r];
+        for (e, &c) in self.assign.iter().enumerate() {
+            g[c].push(e);
+        }
+        g
+    }
+
+    /// Invariants every grouping algorithm must satisfy: total coverage
+    /// (Σ|C_i| = n, Section 3.1) and no empty cluster.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.r >= 1, "need at least one cluster");
+        anyhow::ensure!(
+            self.assign.iter().all(|&c| c < self.r),
+            "assignment out of range"
+        );
+        let groups = self.groups();
+        anyhow::ensure!(
+            groups.iter().all(|g| !g.is_empty()),
+            "empty cluster in {:?}",
+            groups
+        );
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        anyhow::ensure!(total == self.n(), "partition does not cover all experts");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_and_validate() {
+        let c = Clustering::new(vec![0, 1, 0, 2], 3);
+        assert_eq!(c.groups(), vec![vec![0, 2], vec![1], vec![3]]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_empty_cluster() {
+        let c = Clustering { assign: vec![0, 0, 0], r: 2 };
+        assert!(c.validate().is_err());
+    }
+}

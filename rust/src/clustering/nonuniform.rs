@@ -1,0 +1,111 @@
+//! Non-uniform per-layer cluster budgets (Appendix B.1).
+//!
+//! Instead of a fixed `r` everywhere, select the globally top `r·L` experts
+//! by activation frequency and let the per-layer survivor counts set each
+//! layer's cluster budget — then run HC within each layer as usual.
+
+/// `freqs[l][e]`: per-layer activation frequencies. Returns the per-layer
+/// cluster counts summing to `r_avg * n_layers`, each within [min_r, n].
+pub fn nonuniform_budgets(freqs: &[Vec<f32>], r_avg: usize, min_r: usize) -> Vec<usize> {
+    let nl = freqs.len();
+    let n = freqs[0].len();
+    assert!(min_r >= 1 && r_avg >= min_r && r_avg <= n);
+    let total = r_avg * nl;
+    // rank all (layer, expert) pairs by frequency
+    let mut pairs: Vec<(usize, usize, f32)> = Vec::with_capacity(nl * n);
+    for (l, row) in freqs.iter().enumerate() {
+        for (e, &f) in row.iter().enumerate() {
+            pairs.push((l, e, f));
+        }
+    }
+    pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then((a.0, a.1).cmp(&(b.0, b.1))));
+    let mut budgets = vec![0usize; nl];
+    for &(l, _, _) in pairs.iter().take(total) {
+        budgets[l] += 1;
+    }
+    // repair to the [min_r, n] box while preserving the total; donors are
+    // the largest-budget layers, ties broken toward the coldest layer
+    let layer_heat: Vec<f64> = freqs
+        .iter()
+        .map(|row| row.iter().map(|&x| x as f64).sum())
+        .collect();
+    loop {
+        let mut moved = false;
+        for l in 0..nl {
+            if budgets[l] < min_r {
+                // take one from the largest (coldest on ties) layer above min_r
+                let donor = (0..nl)
+                    .filter(|&d| budgets[d] > min_r)
+                    .max_by(|&a, &b| {
+                        budgets[a]
+                            .cmp(&budgets[b])
+                            .then(layer_heat[b].partial_cmp(&layer_heat[a]).unwrap())
+                    });
+                if let Some(d) = donor {
+                    budgets[d] -= 1;
+                    budgets[l] += 1;
+                    moved = true;
+                }
+            } else if budgets[l] > n {
+                let taker = (0..nl).find(|&d| budgets[d] < n);
+                if let Some(d) = taker {
+                    budgets[l] -= 1;
+                    budgets[d] += 1;
+                    moved = true;
+                }
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    debug_assert_eq!(budgets.iter().sum::<usize>(), total);
+    budgets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn uniform_freqs_give_uniform_budgets() {
+        let freqs = vec![vec![1.0; 8]; 4];
+        let b = nonuniform_budgets(&freqs, 6, 2);
+        assert_eq!(b.iter().sum::<usize>(), 24);
+        // ties break deterministically; each layer stays within bounds
+        assert!(b.iter().all(|&x| (2..=8).contains(&x)));
+    }
+
+    #[test]
+    fn hot_layer_gets_more_clusters() {
+        let mut freqs = vec![vec![1.0; 8]; 4];
+        freqs[2] = vec![100.0; 8]; // layer 2 dominates the global top list
+        let b = nonuniform_budgets(&freqs, 6, 2);
+        assert_eq!(b[2], 8, "hottest layer keeps all experts");
+        assert_eq!(b.iter().sum::<usize>(), 24);
+    }
+
+    #[test]
+    fn budget_invariants() {
+        proptest::check("nonuniform-budget", 41, 30, |rng| {
+            let nl = 1 + rng.below(6);
+            let n = 4 + rng.below(12);
+            let min_r = 2;
+            let r_avg = min_r + rng.below(n - min_r);
+            let freqs: Vec<Vec<f32>> = (0..nl)
+                .map(|_| (0..n).map(|_| rng.next_f32() * 50.0).collect())
+                .collect();
+            let b = nonuniform_budgets(&freqs, r_avg, min_r);
+            proptest::ensure(b.len() == nl, "layer count")?;
+            proptest::ensure(
+                b.iter().sum::<usize>() == r_avg * nl,
+                format!("total {} != {}", b.iter().sum::<usize>(), r_avg * nl),
+            )?;
+            proptest::ensure(
+                b.iter().all(|&x| x >= min_r && x <= n),
+                format!("bounds violated: {b:?}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Single-shot (one-pass) grouping — the M-SMoE baseline (Li et al. 2024),
+//! Section 2.2 / Table 6.
+//!
+//! Pick the `r` most frequently activated experts as *dominant* group
+//! seeds, then assign every remaining expert to the most-similar dominant
+//! expert in one pass — no iterative recalibration, which is exactly the
+//! limitation HC-SMoE's dendrogram addresses (§3.2.2).
+
+use super::Clustering;
+use crate::tensor::l2_dist;
+
+/// `freqs`: activation frequency per expert (group seeds = top-r);
+/// `feats`: similarity features (router logits for M-SMoE proper; the
+/// Table 6 ablation also runs weight / expert-output features).
+pub fn single_shot(feats: &[Vec<f32>], freqs: &[f32], r: usize) -> Clustering {
+    let n = feats.len();
+    assert_eq!(freqs.len(), n);
+    assert!(r >= 1 && r <= n);
+    // dominant experts: top-r by frequency (stable tie-break by index)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        freqs[b].partial_cmp(&freqs[a]).unwrap().then(a.cmp(&b))
+    });
+    let dominants: Vec<usize> = {
+        let mut d = order[..r].to_vec();
+        d.sort_unstable();
+        d
+    };
+    let mut assign = vec![usize::MAX; n];
+    for (c, &d) in dominants.iter().enumerate() {
+        assign[d] = c;
+    }
+    for e in 0..n {
+        if assign[e] != usize::MAX {
+            continue;
+        }
+        let mut best = (0usize, f32::INFINITY);
+        for (c, &d) in dominants.iter().enumerate() {
+            let dist = l2_dist(&feats[e], &feats[d]);
+            if dist < best.1 {
+                best = (c, dist);
+            }
+        }
+        assign[e] = best.0;
+    }
+    Clustering::new(assign, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn dominants_seed_their_own_groups() {
+        let feats = vec![vec![0.0], vec![1.0], vec![10.0], vec![11.0]];
+        let freqs = vec![5.0, 1.0, 6.0, 1.0];
+        let c = single_shot(&feats, &freqs, 2);
+        // dominants are experts 0 and 2
+        assert_ne!(c.assign[0], c.assign[2]);
+        assert_eq!(c.assign[1], c.assign[0], "1 is nearest to dominant 0");
+        assert_eq!(c.assign[3], c.assign[2], "3 is nearest to dominant 2");
+    }
+
+    #[test]
+    fn high_frequency_experts_never_merge() {
+        // the paper's critique: the top-r experts each form their own group,
+        // even when functionally identical
+        let feats = vec![vec![0.0], vec![0.0], vec![100.0]];
+        let freqs = vec![9.0, 8.0, 1.0];
+        let c = single_shot(&feats, &freqs, 2);
+        assert_ne!(c.assign[0], c.assign[1], "identical dominants stay split");
+    }
+
+    #[test]
+    fn partition_invariants() {
+        proptest::check("singleshot-partition", 31, 30, |rng| {
+            let n = 2 + rng.below(14);
+            let r = 1 + rng.below(n);
+            let feats: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..3).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let freqs: Vec<f32> = (0..n).map(|_| rng.next_f32() * 100.0).collect();
+            let c = single_shot(&feats, &freqs, r);
+            c.validate().map_err(|e| e.to_string())
+        });
+    }
+}

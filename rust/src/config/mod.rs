@@ -1,0 +1,229 @@
+//! Experiment/model configuration: the `.cfg` and `manifest.txt` artifacts
+//! written by `python/compile/aot.py`, plus path resolution for everything
+//! under `artifacts/`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::KvFile;
+
+/// Mirror of `python/compile/model.py::ModelCfg`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub n_layer: usize,
+    pub d: usize,
+    pub m: usize,
+    pub n_exp: usize,
+    pub k: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub t_max: usize,
+    pub shared: bool,
+    pub m_shared: usize,
+    pub cap_factor: f64,
+    pub block_c: usize,
+}
+
+impl ModelCfg {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let kv = KvFile::load(path)?;
+        Ok(Self {
+            name: kv.get("name")?.to_string(),
+            n_layer: kv.usize("n_layer")?,
+            d: kv.usize("d")?,
+            m: kv.usize("m")?,
+            n_exp: kv.usize("n_exp")?,
+            k: kv.usize("k")?,
+            heads: kv.usize("heads")?,
+            vocab: kv.usize("vocab")?,
+            t_max: kv.usize("t_max")?,
+            shared: kv.bool("shared")?,
+            m_shared: kv.usize("m_shared")?,
+            cap_factor: kv.f64("cap_factor")?,
+            block_c: kv.usize("block_c")?,
+        })
+    }
+
+    /// Parameters of one expert (Eq. 2: three matrices).
+    pub fn expert_params(&self) -> usize {
+        3 * self.d * self.m
+    }
+
+    /// Total parameter count with `r` experts per layer (Table 20 column).
+    pub fn total_params(&self, r: usize) -> usize {
+        let embed = self.vocab * self.d + self.t_max * self.d + self.d;
+        let mut per_layer = 4 * self.d * self.d + 2 * self.d + self.d * self.n_exp;
+        per_layer += r * self.expert_params();
+        if self.shared {
+            per_layer += 3 * self.d * self.m_shared;
+        }
+        embed + self.n_layer * per_layer
+    }
+
+    /// Analytic forward GFLOPs per token with `r` experts retained, using
+    /// the paper's dense-equivalent accounting (Table 20 scales GFLOPs with
+    /// the retained expert count). Counts multiply-adds as 2 flops.
+    pub fn flops_per_token(&self, r: usize) -> f64 {
+        let attn = 4.0 * 2.0 * (self.d * self.d) as f64;
+        // dense-equivalent expert compute across the r retained experts
+        let moe = r as f64 * 2.0 * (3 * self.d * self.m) as f64;
+        let shared = if self.shared { 2.0 * (3 * self.d * self.m_shared) as f64 } else { 0.0 };
+        let head = 2.0 * (self.d * self.vocab) as f64;
+        self.n_layer as f64 * (attn + moe + shared) + head
+    }
+
+    /// Per-expert capacity for `n_tokens`, mirroring the Python side.
+    pub fn capacity(&self, n_tokens: usize, n_exp: usize) -> usize {
+        let c = (self.k as f64 * n_tokens as f64 * self.cap_factor / n_exp as f64).ceil();
+        let b = self.block_c as f64;
+        ((c / b).ceil() * b) as usize
+    }
+}
+
+/// Global artifact geometry (manifest.txt).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub eval_b: usize,
+    pub eval_t: usize,
+    pub calib_b: usize,
+    pub calib_t: usize,
+    pub t_sub: usize,
+    pub t_act: usize,
+    pub n_items: usize,
+    pub models: Vec<String>,
+    pub tasks: Vec<String>,
+    pub reductions: std::collections::BTreeMap<String, Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let kv = KvFile::load(path)?;
+        let models = kv.list("models")?;
+        let mut reductions = std::collections::BTreeMap::new();
+        for m in &models {
+            reductions.insert(m.clone(), kv.usize_list(&format!("reductions_{m}"))?);
+        }
+        Ok(Self {
+            eval_b: kv.usize("eval_b")?,
+            eval_t: kv.usize("eval_t")?,
+            calib_b: kv.usize("calib_b")?,
+            calib_t: kv.usize("calib_t")?,
+            t_sub: kv.usize("t_sub")?,
+            t_act: kv.usize("t_act")?,
+            n_items: kv.usize("n_items")?,
+            models,
+            tasks: kv.list("tasks")?,
+            reductions,
+        })
+    }
+
+    pub fn calib_tokens(&self) -> usize {
+        self.calib_b * self.calib_t
+    }
+}
+
+/// Path helper rooted at the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub root: PathBuf,
+}
+
+impl Artifacts {
+    pub fn new<P: AsRef<Path>>(root: P) -> Self {
+        Self { root: root.as_ref().to_path_buf() }
+    }
+
+    /// Default location: `$HCSMOE_ARTIFACTS` or `./artifacts`.
+    pub fn discover() -> Self {
+        let root = std::env::var("HCSMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(root)
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(self.root.join("manifest.txt"))
+    }
+
+    pub fn model_cfg(&self, model: &str) -> Result<ModelCfg> {
+        ModelCfg::load(self.root.join(format!("{model}.cfg")))
+    }
+
+    pub fn weights_path(&self, model: &str) -> PathBuf {
+        self.root.join(format!("{model}.hcwt"))
+    }
+
+    pub fn lm_logits_hlo(&self, model: &str) -> PathBuf {
+        self.root.join(format!("hlo/lm_logits_{model}.hlo.txt"))
+    }
+
+    pub fn lm_logits_compact_hlo(&self, model: &str, r: usize) -> PathBuf {
+        self.root.join(format!("hlo/lm_logits_{model}_r{r}.hlo.txt"))
+    }
+
+    pub fn calib_hlo(&self, model: &str) -> PathBuf {
+        self.root.join(format!("hlo/calib_{model}.hlo.txt"))
+    }
+
+    pub fn benchmark(&self, task: &str) -> PathBuf {
+        self.root.join(format!("eval/{task}.bin"))
+    }
+
+    pub fn calib_tokens_path(&self, domain: &str) -> PathBuf {
+        self.root.join(format!("calib/{domain}.bin"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "qwensim".into(),
+            n_layer: 4,
+            d: 96,
+            m: 96,
+            n_exp: 16,
+            k: 2,
+            heads: 4,
+            vocab: 448,
+            t_max: 256,
+            shared: false,
+            m_shared: 192,
+            cap_factor: 1.5,
+            block_c: 32,
+        }
+    }
+
+    #[test]
+    fn params_monotone_in_r() {
+        let c = demo_cfg();
+        assert!(c.total_params(16) > c.total_params(8));
+        assert!(c.total_params(8) > c.total_params(4));
+        // expert params dominate: halving experts saves close to half the
+        // expert block
+        let full = c.total_params(16);
+        let half = c.total_params(8);
+        let expert_block = 16 * c.expert_params() * c.n_layer;
+        assert!((full - half) * 2 == expert_block);
+    }
+
+    #[test]
+    fn capacity_is_block_aligned() {
+        let c = demo_cfg();
+        let cap = c.capacity(1024, 16);
+        assert_eq!(cap % c.block_c, 0);
+        assert!(cap * 16 >= 2 * 1024); // fits all k*T slots at factor >= 1
+    }
+
+    #[test]
+    fn parse_cfg_text() {
+        let text = "name = qwensim\nn_layer = 4\nd = 96\nm = 96\nn_exp = 16\nk = 2\nheads = 4\nvocab = 448\nt_max = 256\nshared = 0\nm_shared = 192\ncap_factor = 1.5\nblock_c = 32\n";
+        let tmp = std::env::temp_dir().join("hcsmoe_cfg_test.cfg");
+        std::fs::write(&tmp, text).unwrap();
+        let cfg = ModelCfg::load(&tmp).unwrap();
+        assert_eq!(cfg, demo_cfg());
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,192 @@
+//! Dataset loaders: benchmark files (HCEV) and token streams (HCTS) written
+//! by `python/compile/data.py`, plus the vocabulary constants mirrored from
+//! the Python side (single source of truth documented there).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt};
+
+pub mod vocab {
+    //! Token-class layout (mirror of python/compile/data.py).
+    pub const VOCAB_SIZE: usize = 448;
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const EOS: i32 = 2;
+    pub const SEP: i32 = 3;
+    pub const Q: i32 = 4;
+    pub const A: i32 = 5;
+    pub const TRUE_TOK: i32 = 6;
+    pub const FALSE_TOK: i32 = 7;
+    pub const YES_TOK: i32 = 8;
+    pub const NO_TOK: i32 = 9;
+    pub const SUBJ: (i32, i32) = (16, 48);
+    pub const REL: (i32, i32) = (48, 56);
+    pub const OBJ: (i32, i32) = (56, 88);
+    pub const DIGIT: (i32, i32) = (88, 105);
+    pub const FILLER: (i32, i32) = (192, 448);
+}
+
+/// One multiple-choice item (prompt + per-choice completions).
+#[derive(Debug, Clone)]
+pub struct MCItem {
+    pub prompt: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+/// A loaded benchmark task.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub name: String,
+    pub items: Vec<MCItem>,
+    pub n_choices: usize,
+}
+
+impl Benchmark {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let name = path
+            .as_ref()
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut r = std::io::Cursor::new(bytes);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"HCEV" {
+            bail!("bad HCEV magic {magic:?}");
+        }
+        let ver = r.read_u32::<LittleEndian>()?;
+        if ver != 1 {
+            bail!("unsupported HCEV version {ver}");
+        }
+        let n_items = r.read_u32::<LittleEndian>()? as usize;
+        let n_choices = r.read_u32::<LittleEndian>()? as usize;
+        let mut items = Vec::with_capacity(n_items);
+        for _ in 0..n_items {
+            let plen = r.read_u32::<LittleEndian>()? as usize;
+            let mut prompt = vec![0i32; plen];
+            r.read_i32_into::<LittleEndian>(&mut prompt)?;
+            let answer = r.read_u32::<LittleEndian>()? as usize;
+            let mut choices = Vec::with_capacity(n_choices);
+            for _ in 0..n_choices {
+                let clen = r.read_u32::<LittleEndian>()? as usize;
+                let mut ch = vec![0i32; clen];
+                r.read_i32_into::<LittleEndian>(&mut ch)?;
+                choices.push(ch);
+            }
+            if answer >= n_choices {
+                bail!("answer {answer} out of range {n_choices}");
+            }
+            items.push(MCItem { prompt, choices, answer });
+        }
+        Ok(Self { name, items, n_choices })
+    }
+
+    /// Chance accuracy (random-guess floor, Appendix B.6).
+    pub fn chance(&self) -> f64 {
+        1.0 / self.n_choices as f64
+    }
+}
+
+/// Calibration / analysis token stream.
+#[derive(Debug, Clone)]
+pub struct TokenStream {
+    pub tokens: Vec<i32>,
+}
+
+impl TokenStream {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut r = std::io::Cursor::new(bytes);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"HCTS" {
+            bail!("bad HCTS magic {magic:?}");
+        }
+        let ver = r.read_u32::<LittleEndian>()?;
+        if ver != 1 {
+            bail!("unsupported HCTS version {ver}");
+        }
+        let n = r.read_u32::<LittleEndian>()? as usize;
+        let mut tokens = vec![0i32; n];
+        r.read_i32_into::<LittleEndian>(&mut tokens)?;
+        Ok(Self { tokens })
+    }
+
+    /// Reshape into [b, t] batches (truncating the tail).
+    pub fn batches(&self, b: usize, t: usize) -> Vec<Vec<i32>> {
+        self.tokens
+            .chunks_exact(b * t)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use byteorder::WriteBytesExt;
+    use std::io::Write;
+
+    fn write_demo_benchmark(path: &std::path::Path) {
+        let mut w = std::fs::File::create(path).unwrap();
+        w.write_all(b"HCEV").unwrap();
+        w.write_u32::<LittleEndian>(1).unwrap();
+        w.write_u32::<LittleEndian>(1).unwrap(); // items
+        w.write_u32::<LittleEndian>(2).unwrap(); // choices
+        w.write_u32::<LittleEndian>(3).unwrap(); // prompt len
+        for t in [4i32, 20, 3] {
+            w.write_i32::<LittleEndian>(t).unwrap();
+        }
+        w.write_u32::<LittleEndian>(1).unwrap(); // answer
+        for ch in [[60i32], [61i32]] {
+            w.write_u32::<LittleEndian>(1).unwrap();
+            w.write_i32::<LittleEndian>(ch[0]).unwrap();
+        }
+    }
+
+    #[test]
+    fn benchmark_roundtrip() {
+        let tmp = std::env::temp_dir().join("hcev_test.bin");
+        write_demo_benchmark(&tmp);
+        let b = Benchmark::load(&tmp).unwrap();
+        assert_eq!(b.items.len(), 1);
+        assert_eq!(b.n_choices, 2);
+        assert_eq!(b.items[0].prompt, vec![4, 20, 3]);
+        assert_eq!(b.items[0].answer, 1);
+        assert_eq!(b.chance(), 0.5);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn tokenstream_roundtrip() {
+        let tmp = std::env::temp_dir().join("hcts_test.bin");
+        let mut w = std::fs::File::create(&tmp).unwrap();
+        w.write_all(b"HCTS").unwrap();
+        w.write_u32::<LittleEndian>(1).unwrap();
+        w.write_u32::<LittleEndian>(6).unwrap();
+        for t in 0..6i32 {
+            w.write_i32::<LittleEndian>(t).unwrap();
+        }
+        drop(w);
+        let ts = TokenStream::load(&tmp).unwrap();
+        assert_eq!(ts.tokens, vec![0, 1, 2, 3, 4, 5]);
+        let b = ts.batches(1, 3);
+        assert_eq!(b.len(), 2);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let tmp = std::env::temp_dir().join("bad_magic.bin");
+        std::fs::write(&tmp, b"XXXX0000").unwrap();
+        assert!(Benchmark::load(&tmp).is_err());
+        assert!(TokenStream::load(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,259 @@
+//! Zero-shot evaluation harness — the LM-Harness analog (Section 4.1).
+//!
+//! Multiple-choice scoring exactly as the paper's `acc` metric: each choice
+//! is appended to the prompt, scored by length-normalised sequence
+//! log-likelihood under the model, and the argmax choice is compared to the
+//! gold answer.  Also: macro precision/recall/F1 (Table 15) and perplexity
+//! over token streams.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::data::{Benchmark, TokenStream};
+use crate::model::{LoadedModel, ModelContext};
+
+/// Scores of one task.
+#[derive(Debug, Clone)]
+pub struct TaskScore {
+    pub task: String,
+    pub accuracy: f64,
+    pub n_items: usize,
+    /// per-item predicted choice (for P/R/F1 and error analysis)
+    pub predictions: Vec<usize>,
+    pub golds: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Prf {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub accuracy: f64,
+}
+
+pub struct Evaluator<'a> {
+    ctx: &'a ModelContext,
+    cache: std::cell::RefCell<HashMap<String, Benchmark>>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(ctx: &'a ModelContext) -> Result<Self> {
+        Ok(Self { ctx, cache: Default::default() })
+    }
+
+    fn benchmark(&self, task: &str) -> Result<Benchmark> {
+        if let Some(b) = self.cache.borrow().get(task) {
+            return Ok(b.clone());
+        }
+        let b = Benchmark::load(self.ctx.arts.benchmark(task))?;
+        self.cache.borrow_mut().insert(task.to_string(), b.clone());
+        Ok(b)
+    }
+
+    /// Score one benchmark with batched PJRT executions.
+    pub fn score_benchmark(&self, model: &LoadedModel, bench: &Benchmark) -> Result<TaskScore> {
+        let (bsz, t) = (self.ctx.manifest.eval_b, self.ctx.manifest.eval_t);
+        // build rows: one per (item, choice)
+        struct RowMeta {
+            item: usize,
+            choice: usize,
+            start: usize, // first predicted position (prompt_len)
+            end: usize,   // seq len
+        }
+        let mut rows: Vec<Vec<i32>> = Vec::new();
+        let mut metas: Vec<RowMeta> = Vec::new();
+        for (ii, item) in bench.items.iter().enumerate() {
+            for (ci, ch) in item.choices.iter().enumerate() {
+                let mut seq: Vec<i32> = item.prompt.clone();
+                seq.extend_from_slice(ch);
+                ensure!(seq.len() <= t, "item longer than eval_t={t}");
+                let end = seq.len();
+                seq.resize(t, crate::data::vocab::PAD);
+                rows.push(seq);
+                metas.push(RowMeta { item: ii, choice: ci, start: item.prompt.len(), end });
+            }
+        }
+        // batched scoring
+        let mut scores: Vec<Vec<f64>> =
+            vec![vec![f64::NEG_INFINITY; bench.n_choices]; bench.items.len()];
+        for (chunk_rows, chunk_metas) in rows.chunks(bsz).zip(metas.chunks(bsz)) {
+            let mut ids = Vec::with_capacity(bsz * t);
+            for r in chunk_rows {
+                ids.extend_from_slice(r);
+            }
+            ids.resize(bsz * t, crate::data::vocab::PAD);
+            let logits = self.ctx.run_logits(model, &ids)?;
+            let v = logits.shape()[2];
+            let ld = logits.data();
+            for (bi, meta) in chunk_metas.iter().enumerate() {
+                let mut lp = 0f64;
+                for pos in meta.start..meta.end {
+                    // predict token at `pos` from logits at `pos - 1`
+                    let row = &ld[(bi * t + pos - 1) * v..(bi * t + pos) * v];
+                    let tok = chunk_rows[bi][pos] as usize;
+                    lp += log_softmax_at(row, tok);
+                }
+                scores[meta.item][meta.choice] = lp / (meta.end - meta.start) as f64;
+            }
+        }
+        // argmax per item
+        let mut correct = 0usize;
+        let mut predictions = Vec::with_capacity(bench.items.len());
+        let mut golds = Vec::with_capacity(bench.items.len());
+        for (ii, s) in scores.iter().enumerate() {
+            let pred = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            predictions.push(pred);
+            golds.push(bench.items[ii].answer);
+            if pred == bench.items[ii].answer {
+                correct += 1;
+            }
+        }
+        Ok(TaskScore {
+            task: bench.name.clone(),
+            accuracy: correct as f64 / bench.items.len() as f64,
+            n_items: bench.items.len(),
+            predictions,
+            golds,
+        })
+    }
+
+    pub fn accuracy(&self, model: &LoadedModel, task: &str) -> Result<f64> {
+        Ok(self.score_benchmark(model, &self.benchmark(task)?)?.accuracy)
+    }
+
+    /// Evaluate a suite of tasks; returns (task, accuracy) plus the average.
+    pub fn eval_suite(
+        &self,
+        model: &LoadedModel,
+        tasks: &[String],
+    ) -> Result<(Vec<(String, f64)>, f64)> {
+        let mut out = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            out.push((task.clone(), self.accuracy(model, task)?));
+        }
+        let avg = out.iter().map(|(_, a)| a).sum::<f64>() / out.len().max(1) as f64;
+        Ok((out, avg))
+    }
+
+    /// Macro precision/recall/F1 over predicted classes (Table 15 protocol).
+    pub fn prf(&self, model: &LoadedModel, task: &str) -> Result<Prf> {
+        let bench = self.benchmark(task)?;
+        let ts = self.score_benchmark(model, &bench)?;
+        Ok(macro_prf(&ts.predictions, &ts.golds, bench.n_choices))
+    }
+
+    /// Perplexity over a token stream (windows of eval_t).
+    pub fn perplexity(&self, model: &LoadedModel, stream: &TokenStream) -> Result<f64> {
+        let (bsz, t) = (self.ctx.manifest.eval_b, self.ctx.manifest.eval_t);
+        let mut nll = 0f64;
+        let mut count = 0usize;
+        for batch in stream.tokens.chunks_exact(bsz * t).take(4) {
+            let logits = self.ctx.run_logits(model, batch)?;
+            let v = logits.shape()[2];
+            let ld = logits.data();
+            for bi in 0..bsz {
+                for pos in 1..t {
+                    let row = &ld[(bi * t + pos - 1) * v..(bi * t + pos) * v];
+                    let tok = batch[bi * t + pos] as usize;
+                    nll -= log_softmax_at(row, tok);
+                    count += 1;
+                }
+            }
+        }
+        ensure!(count > 0, "stream too short for one ppl batch");
+        Ok((nll / count as f64).exp())
+    }
+}
+
+/// log softmax(row)[tok] without materialising the full distribution.
+pub fn log_softmax_at(row: &[f32], tok: usize) -> f64 {
+    let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut z = 0f64;
+    for &x in row {
+        z += ((x as f64) - mx).exp();
+    }
+    (row[tok] as f64) - mx - z.ln()
+}
+
+/// Macro-averaged precision/recall/F1.
+pub fn macro_prf(pred: &[usize], gold: &[usize], n_classes: usize) -> Prf {
+    let mut tp = vec![0f64; n_classes];
+    let mut fp = vec![0f64; n_classes];
+    let mut fne = vec![0f64; n_classes];
+    let mut correct = 0usize;
+    for (&p, &g) in pred.iter().zip(gold) {
+        if p == g {
+            tp[p] += 1.0;
+            correct += 1;
+        } else {
+            fp[p] += 1.0;
+            fne[g] += 1.0;
+        }
+    }
+    let mut prec = 0f64;
+    let mut rec = 0f64;
+    let mut f1 = 0f64;
+    for c in 0..n_classes {
+        let p = if tp[c] + fp[c] > 0.0 { tp[c] / (tp[c] + fp[c]) } else { 0.0 };
+        let r = if tp[c] + fne[c] > 0.0 { tp[c] / (tp[c] + fne[c]) } else { 0.0 };
+        prec += p;
+        rec += r;
+        f1 += if p + r > 0.0 { 2.0 * p * r / (p + r) } else { 0.0 };
+    }
+    let n = n_classes as f64;
+    Prf {
+        precision: prec / n,
+        recall: rec / n,
+        f1: f1 / n,
+        accuracy: correct as f64 / pred.len().max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_matches_manual() {
+        let row = [1.0f32, 2.0, 3.0];
+        let z: f64 = row.iter().map(|&x| (x as f64).exp()).sum();
+        for (i, &x) in row.iter().enumerate() {
+            let expect = (x as f64) - z.ln();
+            assert!((log_softmax_at(&row, i) - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn log_softmax_is_stable_for_large_logits() {
+        let row = [1000.0f32, 999.0, 998.0];
+        let lp = log_softmax_at(&row, 0);
+        assert!(lp.is_finite() && lp < 0.0);
+    }
+
+    #[test]
+    fn prf_perfect_and_worst() {
+        let p = macro_prf(&[0, 1, 2, 3], &[0, 1, 2, 3], 4);
+        assert_eq!(p.accuracy, 1.0);
+        assert!((p.f1 - 1.0).abs() < 1e-9);
+        let w = macro_prf(&[1, 2, 3, 0], &[0, 1, 2, 3], 4);
+        assert_eq!(w.accuracy, 0.0);
+        assert_eq!(w.f1, 0.0);
+    }
+
+    #[test]
+    fn prf_partial() {
+        // classes: two items of class 0, predicted [0, 1]
+        let p = macro_prf(&[0, 1], &[0, 0], 2);
+        assert!((p.accuracy - 0.5).abs() < 1e-9);
+        // class 0: tp=1 fp=0 fn=1 -> p=1, r=0.5, f1=2/3; class 1: tp=0 fp=1 -> 0
+        assert!((p.precision - 0.5).abs() < 1e-9);
+        assert!((p.recall - 0.25).abs() < 1e-9);
+        assert!((p.f1 - (2.0 / 3.0) / 2.0).abs() < 1e-9);
+    }
+}

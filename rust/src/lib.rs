@@ -1,0 +1,68 @@
+//! # HC-SMoE — Retraining-Free Merging of Sparse MoE via Hierarchical Clustering
+//!
+//! A full-system reproduction of the ICML 2025 paper as a three-layer
+//! Rust + JAX + Pallas stack (see `DESIGN.md`):
+//!
+//! * **L1/L2** live in `python/compile/` and are AOT-lowered once to HLO
+//!   text artifacts (`make artifacts`);
+//! * **L3** is this crate: the retraining-free compression toolchain
+//!   (calibration → similarity metrics → clustering → merging/pruning),
+//!   the zero-shot evaluation harness, a threaded serving layer, and the
+//!   bench harness regenerating every table/figure of the paper.
+//!
+//! Quick tour:
+//!
+//! ```no_run
+//! use hc_smoe::prelude::*;
+//! use hc_smoe::{clustering::Linkage, merging::MergeStrategy, similarity::Metric};
+//!
+//! let arts = Artifacts::discover();
+//! let ctx = ModelContext::load(&arts, "qwensim").unwrap();
+//! let stats = ctx.calibrate("general").unwrap();
+//! let plan = Pipeline::new(Method::HcSmoe { linkage: Linkage::Average,
+//!                                           metric: Metric::ExpertOutput,
+//!                                           merge: MergeStrategy::Frequency })
+//!     .plan(&ctx, &stats, 8).unwrap();
+//! let merged = plan.apply(&ctx, &stats).unwrap();
+//! let model = merged.load(&ctx).unwrap();
+//! let acc = Evaluator::new(&ctx).unwrap().accuracy(&model, "arc_e").unwrap();
+//! println!("arc_e accuracy after 50% merge: {acc:.4}");
+//! ```
+
+pub mod bench_support;
+pub mod calib;
+pub mod clustering;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod merging;
+pub mod model;
+pub mod pipeline;
+pub mod pruning;
+pub mod quality;
+pub mod report;
+pub mod runtime;
+pub mod serving;
+pub mod similarity;
+pub mod tensor;
+pub mod util;
+pub mod weights;
+
+pub mod prelude {
+    pub use crate::calib::{CalibStats, LayerStats};
+    pub use crate::clustering::{Clustering, Linkage};
+    pub use crate::config::{Artifacts, Manifest, ModelCfg};
+    pub use crate::data::{Benchmark, MCItem, TokenStream};
+    pub use crate::eval::Evaluator;
+    pub use crate::merging::MergeStrategy;
+    pub use crate::model::ModelContext;
+    pub use crate::pipeline::{Method, Pipeline, Plan};
+    pub use crate::runtime::Runtime;
+    pub use crate::similarity::Metric;
+    pub use crate::tensor::Tensor;
+    pub use crate::weights::Weights;
+}
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

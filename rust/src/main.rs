@@ -1,0 +1,342 @@
+//! `hc-smoe` — command-line driver for the HC-SMoE compression toolchain.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//!   info                         artifact + model summary
+//!   calibrate  <model> [domain]  run the calibration pass, print stats
+//!   compress   <model> <r> [--method M] [--domain D]   compress + report
+//!   eval       <model> <r> [--method M] [--domain D] [--tasks a,b]
+//!   serve      <model> [--r R --method M] [--requests N]
+//!   quality    <model> <r> [--method M]  cluster-quality metrics
+//!
+//! Methods: hc-avg (default), hc-single, hc-complete, kmeans-fix,
+//! kmeans-rnd, fcm, single-shot, m-smoe, o-prune, s-prune, f-prune, hc-nu.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use hc_smoe::clustering::{KmeansInit, Linkage};
+use hc_smoe::config::Artifacts;
+use hc_smoe::eval::Evaluator;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::{compressed_params, Method, Pipeline};
+use hc_smoe::report::Table;
+use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+use hc_smoe::similarity::Metric;
+use hc_smoe::util::Timer;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: positional args + `--key value` pairs.
+struct Args {
+    pos: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut pos = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                pos.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Self { pos, flags }
+    }
+
+    fn flag(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+pub fn parse_method(name: &str, seed: u64) -> Result<Method> {
+    let default_merge = MergeStrategy::Frequency;
+    Ok(match name {
+        "hc-avg" | "hc" => Method::HcSmoe {
+            linkage: Linkage::Average,
+            metric: Metric::ExpertOutput,
+            merge: default_merge,
+        },
+        "hc-single" => Method::HcSmoe {
+            linkage: Linkage::Single,
+            metric: Metric::ExpertOutput,
+            merge: default_merge,
+        },
+        "hc-complete" => Method::HcSmoe {
+            linkage: Linkage::Complete,
+            metric: Metric::ExpertOutput,
+            merge: default_merge,
+        },
+        "hc-nu" => Method::HcNonUniform {
+            linkage: Linkage::Average,
+            metric: Metric::ExpertOutput,
+            merge: default_merge,
+        },
+        "kmeans-fix" => Method::KMeans {
+            init: KmeansInit::Fixed,
+            metric: Metric::ExpertOutput,
+            merge: default_merge,
+        },
+        "kmeans-rnd" => Method::KMeans {
+            init: KmeansInit::Random { seed },
+            metric: Metric::ExpertOutput,
+            merge: default_merge,
+        },
+        "fcm" => Method::Fcm { seed },
+        "single-shot" => Method::SingleShot {
+            metric: Metric::ExpertOutput,
+            merge: default_merge,
+        },
+        "m-smoe" => Method::MSmoe,
+        "o-prune" => Method::OPrune { samples: 10_000, seed },
+        "s-prune" => Method::SPrune,
+        "f-prune" => Method::FPrune,
+        other => bail!("unknown method {other:?} (see --help)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    let arts = Artifacts::discover();
+    match cmd.as_str() {
+        "info" => info(&arts),
+        "calibrate" => calibrate(&arts, &args),
+        "compress" => compress(&arts, &args),
+        "eval" => eval(&arts, &args),
+        "serve" => serve_cmd(&arts, &args),
+        "quality" => quality(&arts, &args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "hc-smoe {} — retraining-free SMoE expert merging (ICML 2025 reproduction)
+
+USAGE: hc-smoe <command> [args]
+
+COMMANDS:
+  info                          artifact + model summary
+  calibrate <model> [--domain D]
+  compress  <model> <r> [--method M] [--domain D]
+  eval      <model> <r> [--method M] [--domain D] [--tasks a,b,..]
+  serve     <model> [--r R] [--method M] [--requests N]
+  quality   <model> <r> [--method M]
+
+METHODS: hc-avg hc-single hc-complete hc-nu kmeans-fix kmeans-rnd fcm
+         single-shot m-smoe o-prune s-prune f-prune
+
+ENV: HCSMOE_ARTIFACTS (default ./artifacts)",
+        hc_smoe::version()
+    );
+}
+
+fn info(arts: &Artifacts) -> Result<()> {
+    let m = arts.manifest().context("run `make artifacts` first")?;
+    println!("artifacts: {}", arts.root.display());
+    println!("tasks: {}", m.tasks.join(", "));
+    for name in &m.models {
+        let cfg = arts.model_cfg(name)?;
+        println!(
+            "model {name}: L={} d={} m={} n={} top-{} shared={} params={:.2}M reductions={:?}",
+            cfg.n_layer,
+            cfg.d,
+            cfg.m,
+            cfg.n_exp,
+            cfg.k,
+            cfg.shared,
+            cfg.total_params(cfg.n_exp) as f64 / 1e6,
+            m.reductions[name]
+        );
+    }
+    Ok(())
+}
+
+fn calibrate(arts: &Artifacts, args: &Args) -> Result<()> {
+    let model = args.pos.first().context("need <model>")?;
+    let domain = args.flag("domain", "general");
+    let ctx = ModelContext::load(arts, model)?;
+    let t = Timer::start();
+    let stats = ctx.calibrate(&domain)?;
+    println!("calibrated {model} on {domain}: {} tokens in {:.1}s", stats.n_tokens, t.secs());
+    let mut table = Table::new(
+        &format!("Expert routing frequencies ({model}, {domain})"),
+        &["layer", "top expert", "max freq", "min freq", "entropy"],
+    );
+    for (l, ls) in stats.layers.iter().enumerate() {
+        let total: f32 = ls.counts.iter().sum();
+        let probs: Vec<f64> = ls.counts.iter().map(|&c| (c / total) as f64).collect();
+        let ent: f64 = -probs.iter().filter(|&&p| p > 0.0).map(|p| p * p.ln()).sum::<f64>();
+        let (top, max) = ls
+            .counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let min = ls.counts.iter().cloned().fold(f32::INFINITY, f32::min);
+        table.row(vec![
+            l.to_string(),
+            top.to_string(),
+            format!("{:.4}", max / total),
+            format!("{:.4}", min / total),
+            format!("{ent:.3}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn compress(arts: &Artifacts, args: &Args) -> Result<()> {
+    let model = args.pos.first().context("need <model>")?;
+    let r: usize = args.pos.get(1).context("need <r>")?.parse()?;
+    let method = parse_method(&args.flag("method", "hc-avg"), 42)?;
+    let domain = args.flag("domain", "general");
+    let ctx = ModelContext::load(arts, model)?;
+    let stats = ctx.calibrate(&domain)?;
+    let t = Timer::start();
+    let plan = Pipeline::new(method).plan(&ctx, &stats, r)?;
+    let compressed = plan.apply(&ctx, &stats)?;
+    println!(
+        "{}: {} -> {} experts/layer in {:.2}s; params {:.2}M -> {:.2}M",
+        compressed.label,
+        ctx.cfg.n_exp,
+        r,
+        t.secs(),
+        ctx.cfg.total_params(ctx.cfg.n_exp) as f64 / 1e6,
+        compressed_params(&ctx.cfg, &plan.experts_per_layer()) as f64 / 1e6,
+    );
+    if let Some(out) = args.flags.get("out") {
+        compressed.weights.save(out)?;
+        println!("wrote merged weights to {out}");
+    }
+    Ok(())
+}
+
+fn eval(arts: &Artifacts, args: &Args) -> Result<()> {
+    let model = args.pos.first().context("need <model>")?;
+    let r: usize = args.pos.get(1).context("need <r>")?.parse()?;
+    let domain = args.flag("domain", "general");
+    let ctx = ModelContext::load(arts, model)?;
+    let tasks: Vec<String> = match args.flags.get("tasks") {
+        Some(t) => t.split(',').map(|s| s.trim().to_string()).collect(),
+        None => ctx.manifest.tasks.clone(),
+    };
+    let ev = Evaluator::new(&ctx)?;
+    let mut headers: Vec<String> = vec!["Method".into()];
+    headers.extend(tasks.iter().cloned());
+    headers.push("Average".into());
+    let mut table = Table::new(
+        &format!("Zero-shot accuracy ({model}, r={r}, calib={domain})"),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    // original
+    let orig = ctx.load_original()?;
+    let (scores, avg) = ev.eval_suite(&orig, &tasks)?;
+    let mut row: Vec<f64> = scores.iter().map(|(_, a)| *a).collect();
+    row.push(avg);
+    table.row_scores("None", &row);
+    // compressed
+    let method = parse_method(&args.flag("method", "hc-avg"), 42)?;
+    let stats = ctx.calibrate(&domain)?;
+    let plan = Pipeline::new(method).plan(&ctx, &stats, r)?;
+    let compressed = plan.apply(&ctx, &stats)?;
+    let loaded = compressed.load(&ctx)?;
+    let (scores, avg) = ev.eval_suite(&loaded, &tasks)?;
+    let mut row: Vec<f64> = scores.iter().map(|(_, a)| *a).collect();
+    row.push(avg);
+    table.row_scores(&compressed.label, &row);
+    table.print();
+    Ok(())
+}
+
+fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
+    let model = args.pos.first().context("need <model>")?;
+    let n_requests: usize = args.flag("requests", "64").parse()?;
+    let compress = match args.flags.get("r") {
+        Some(r) => Some((
+            parse_method(&args.flag("method", "hc-avg"), 42)?,
+            r.parse::<usize>()?,
+            args.flag("domain", "general"),
+        )),
+        None => None,
+    };
+    let ctx = ModelContext::load(arts, model)?;
+    let bench = hc_smoe::data::Benchmark::load(ctx.arts.benchmark("arc_e"))?;
+    let spec = ServeSpec {
+        artifacts_root: arts.root.to_string_lossy().into_owned(),
+        model: model.clone(),
+        compress,
+    };
+    let handle = serve(
+        spec,
+        BatcherConfig { max_rows: ctx.manifest.eval_b, max_wait: Duration::from_millis(5) },
+    )?;
+    let t = Timer::start();
+    let mut correct = 0usize;
+    for item in bench.items.iter().cycle().take(n_requests) {
+        let scores = handle.score_item(&item.prompt, &item.choices)?;
+        let pred = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == item.answer {
+            correct += 1;
+        }
+    }
+    let wall = t.secs();
+    let snap = handle.metrics.snapshot();
+    handle.shutdown()?;
+    println!(
+        "served {n_requests} requests in {wall:.2}s ({:.1} req/s, {:.1} rows/s busy, \
+         {} batches, fill {:.2}); acc {:.3}",
+        n_requests as f64 / wall,
+        snap.rows_per_sec(),
+        snap.batches,
+        snap.mean_batch_fill(ctx.manifest.eval_b),
+        correct as f64 / n_requests as f64,
+    );
+    Ok(())
+}
+
+fn quality(arts: &Artifacts, args: &Args) -> Result<()> {
+    let model = args.pos.first().context("need <model>")?;
+    let r: usize = args.pos.get(1).context("need <r>")?.parse()?;
+    let method = parse_method(&args.flag("method", "hc-avg"), 42)?;
+    let domain = args.flag("domain", "general");
+    let ctx = ModelContext::load(arts, model)?;
+    let stats = ctx.calibrate(&domain)?;
+    let plan = Pipeline::new(method).plan(&ctx, &stats, r)?;
+    let compressed = plan.apply(&ctx, &stats)?;
+    let orig = ctx.load_original()?;
+    let loaded = compressed.load(&ctx)?;
+    let stream =
+        hc_smoe::data::TokenStream::load(ctx.arts.calib_tokens_path("ppl_heldout"))?;
+    let (l2, cos) = hc_smoe::quality::output_fidelity(&ctx, &orig, &loaded, &stream, 2)?;
+    println!("{}: L2 error {l2:.2}, cosine similarity {cos:.4}", compressed.label);
+    Ok(())
+}

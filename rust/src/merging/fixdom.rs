@@ -1,0 +1,266 @@
+//! Fix-Dom merging (Appendix B.2, Fig. 4).
+//!
+//! Steps (quoting the paper's Fig. 4):
+//!   1. collect intermediate features per expert — activations
+//!      act = silu(x Wg) ⊙ (x Wu) on calibration tokens, and/or the weight
+//!      columns themselves;
+//!   2. pairwise correlation between the *dominant* expert's feature order
+//!      (fixed) and each non-dominant expert's features;
+//!   3. each non-dominant feature dimension joins the dominant dimension of
+//!      highest correlation;
+//!   4. average-merge weights within each matched dimension group.
+//!
+//! The dominant expert is the cluster member with the highest activation
+//! frequency; its feature order is preserved, which is what makes Fix-Dom
+//! >100× faster than full ZipIt while staying competitive (Table 9).
+
+use anyhow::Result;
+
+use crate::calib::LayerStats;
+use crate::tensor::corr_matrix;
+use crate::weights::ExpertWeights;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FixDomFeature {
+    /// Intermediate activations on calibration tokens.
+    Act,
+    /// Weight columns as features.
+    Weight,
+    /// Concatenation of both.
+    ActWeight,
+}
+
+impl FixDomFeature {
+    pub fn short(&self) -> &'static str {
+        match self {
+            FixDomFeature::Act => "act",
+            FixDomFeature::Weight => "weight",
+            FixDomFeature::ActWeight => "actweight",
+        }
+    }
+}
+
+/// Feature rows for each of the `m` hidden dims of expert `member`.
+/// Returns a [m, f] row-major matrix.
+pub(crate) fn feature_rows(
+    e: &ExpertWeights,
+    stats: &LayerStats,
+    member: usize,
+    feature: FixDomFeature,
+) -> (Vec<f32>, usize) {
+    let m = e.wg.shape()[1];
+    let d = e.wg.shape()[0];
+    let act_feat = |out: &mut Vec<f32>| {
+        // act_sub[member]: [t_act, m] -> transpose to per-dim rows [m, t_act]
+        let a = stats.acts(member);
+        let t = a.shape()[0];
+        for j in 0..m {
+            for s in 0..t {
+                out.push(a.data()[s * m + j]);
+            }
+        }
+    };
+    let weight_feat = |out: &mut Vec<f32>| {
+        // per-dim weight feature: [Wg[:,j] | Wu[:,j] | Wd[j,:]] of length 3d
+        for j in 0..m {
+            for i in 0..d {
+                out.push(e.wg.data()[i * m + j]);
+            }
+            for i in 0..d {
+                out.push(e.wu.data()[i * m + j]);
+            }
+            out.extend_from_slice(&e.wd.data()[j * d..(j + 1) * d]);
+        }
+    };
+    let mut rows = Vec::new();
+    match feature {
+        FixDomFeature::Act => {
+            act_feat(&mut rows);
+            let f = rows.len() / m;
+            (rows, f)
+        }
+        FixDomFeature::Weight => {
+            weight_feat(&mut rows);
+            (rows, 3 * d)
+        }
+        FixDomFeature::ActWeight => {
+            // interleave per-dim: [act_j | weight_j]
+            let mut acts = Vec::new();
+            act_feat(&mut acts);
+            let ta = acts.len() / m;
+            let mut weights = Vec::new();
+            weight_feat(&mut weights);
+            let tw = 3 * d;
+            for j in 0..m {
+                rows.extend_from_slice(&acts[j * ta..(j + 1) * ta]);
+                rows.extend_from_slice(&weights[j * tw..(j + 1) * tw]);
+            }
+            (rows, ta + tw)
+        }
+    }
+}
+
+/// Best-correlated dominant dimension for every dimension of `other`.
+pub(crate) fn match_dims(dom_rows: &[f32], other_rows: &[f32], m: usize, f: usize) -> Vec<usize> {
+    let corr = corr_matrix(other_rows, dom_rows, m, m, f);
+    (0..m)
+        .map(|j| {
+            let row = &corr[j * m..(j + 1) * m];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(j)
+        })
+        .collect()
+}
+
+/// Permute the hidden dims of `e` so dim j lands on `mapping[j]` of the
+/// dominant order, accumulating into per-dominant-dim groups.
+fn align_to_dominant(e: &ExpertWeights, mapping: &[usize]) -> ExpertWeights {
+    let d = e.wg.shape()[0];
+    let m = e.wg.shape()[1];
+    let mut wg = vec![0f32; d * m];
+    let mut wu = vec![0f32; d * m];
+    let mut wd = vec![0f32; m * d];
+    let mut count = vec![0f32; m];
+    for (j, &tgt) in mapping.iter().enumerate() {
+        count[tgt] += 1.0;
+        for i in 0..d {
+            wg[i * m + tgt] += e.wg.data()[i * m + j];
+            wu[i * m + tgt] += e.wu.data()[i * m + j];
+        }
+        for i in 0..d {
+            wd[tgt * d + i] += e.wd.data()[j * d + i];
+        }
+    }
+    // average within groups; unmatched dominant dims keep zeros (they will
+    // only receive the dominant expert's own weight in the final average)
+    for tgt in 0..m {
+        let c = count[tgt].max(1.0);
+        for i in 0..d {
+            wg[i * m + tgt] /= c;
+            wu[i * m + tgt] /= c;
+            wd[tgt * d + i] /= c;
+        }
+    }
+    ExpertWeights {
+        wg: crate::tensor::Tensor::new(vec![d, m], wg).unwrap(),
+        wu: crate::tensor::Tensor::new(vec![d, m], wu).unwrap(),
+        wd: crate::tensor::Tensor::new(vec![m, d], wd).unwrap(),
+    }
+}
+
+/// Fix-Dom merge of a cluster. `members[i]` is the expert index of
+/// `experts[i]`; the dominant is the member with the highest frequency.
+pub fn merge_fixdom(
+    experts: &[ExpertWeights],
+    stats: &LayerStats,
+    members: &[usize],
+    feature: FixDomFeature,
+) -> Result<ExpertWeights> {
+    let dom_pos = members
+        .iter()
+        .enumerate()
+        .max_by(|a, b| {
+            stats.counts[*a.1]
+                .partial_cmp(&stats.counts[*b.1])
+                .unwrap()
+                .then(b.1.cmp(a.1)) // tie -> lower expert index
+        })
+        .map(|(i, _)| i)
+        .unwrap();
+    let m = experts[0].wg.shape()[1];
+    let (dom_rows, f) = feature_rows(&experts[dom_pos], stats, members[dom_pos], feature);
+    let mut aligned: Vec<ExpertWeights> = Vec::with_capacity(experts.len());
+    for (i, e) in experts.iter().enumerate() {
+        if i == dom_pos {
+            aligned.push(e.clone());
+            continue;
+        }
+        let (rows, f2) = feature_rows(e, stats, members[i], feature);
+        anyhow::ensure!(f2 == f, "feature length mismatch");
+        let mapping = match_dims(&dom_rows, &rows, m, f);
+        aligned.push(align_to_dominant(e, &mapping));
+    }
+    let a = vec![1.0 / aligned.len() as f32; aligned.len()];
+    super::merge_weighted(&aligned, &a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::testutil::synthetic_grouped;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn rand_expert(rng: &mut Rng, d: usize, m: usize) -> ExpertWeights {
+        let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+        ExpertWeights {
+            wg: Tensor::new(vec![d, m], mk(d * m)).unwrap(),
+            wu: Tensor::new(vec![d, m], mk(d * m)).unwrap(),
+            wd: Tensor::new(vec![m, d], mk(d * m)).unwrap(),
+        }
+    }
+
+    /// Permute hidden dims of an expert with a known permutation.
+    fn permute(e: &ExpertWeights, perm: &[usize]) -> ExpertWeights {
+        let d = e.wg.shape()[0];
+        let m = e.wg.shape()[1];
+        let mut wg = vec![0f32; d * m];
+        let mut wu = vec![0f32; d * m];
+        let mut wd = vec![0f32; m * d];
+        for (j, &p) in perm.iter().enumerate() {
+            // dim j of the new expert = dim p of the original
+            for i in 0..d {
+                wg[i * m + j] = e.wg.data()[i * m + p];
+                wu[i * m + j] = e.wu.data()[i * m + p];
+            }
+            wd[j * d..(j + 1) * d].copy_from_slice(&e.wd.data()[p * d..(p + 1) * d]);
+        }
+        ExpertWeights {
+            wg: Tensor::new(vec![d, m], wg).unwrap(),
+            wu: Tensor::new(vec![d, m], wu).unwrap(),
+            wd: Tensor::new(vec![m, d], wd).unwrap(),
+        }
+    }
+
+    #[test]
+    fn weight_features_recover_a_permutation() {
+        // expert B = expert A with permuted hidden dims. Fix-Dom with weight
+        // features must align B back onto A, so the merge equals A itself.
+        let mut rng = Rng::new(3);
+        let (d, m) = (6, 5);
+        let a = rand_expert(&mut rng, d, m);
+        let perm = vec![2usize, 0, 4, 1, 3];
+        let b = permute(&a, &perm);
+        let mut st = synthetic_grouped(2, 4, &[vec![0], vec![1]], 0.0, 4);
+        st.counts = vec![10.0, 1.0]; // expert 0 (A) dominant
+        let merged = merge_fixdom(&[a.clone(), b], &st, &[0, 1], FixDomFeature::Weight).unwrap();
+        for (x, y) in merged.wg.data().iter().zip(a.wg.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        for (x, y) in merged.wd.data().iter().zip(a.wd.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identical_experts_merge_to_themselves() {
+        let mut rng = Rng::new(9);
+        let a = rand_expert(&mut rng, 4, 3);
+        let st = synthetic_grouped(2, 4, &[vec![0, 1]], 0.0, 5);
+        let merged =
+            merge_fixdom(&[a.clone(), a.clone()], &st, &[0, 1], FixDomFeature::Weight).unwrap();
+        for (x, y) in merged.wg.data().iter().zip(a.wg.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn match_dims_identity_on_same_rows() {
+        let rows = vec![1.0, 2.0, 3.0, /* dim1 */ 9.0, 1.0, 5.0];
+        let m = match_dims(&rows, &rows, 2, 3);
+        assert_eq!(m, vec![0, 1]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Expert merging strategies (Section 3.2.3 + Appendix B.2).
+//!
+//! Given a cluster C_i, produce the merged expert Ê_i = Σ_j α_j E_j with
+//! Σ α_j = 1:
+//!
+//! * **Average**   — α_j = 1/|C_i|;
+//! * **Frequency** — α_j = f̃_j (Algorithm 1 lines 12-17; HC-SMoE default);
+//! * **Fix-Dom**   — the paper's ZipIt adaptation: permutation-align every
+//!   member's hidden features to the *dominant* (most frequent) expert via
+//!   feature correlation, then average (Appendix B.2, Fig. 4);
+//! * **ZipIt**     — the full iterative pairwise feature matcher, kept as
+//!   the slow baseline of Table 9 / the >100× runtime comparison.
+
+pub mod fixdom;
+pub mod zipit;
+
+use anyhow::Result;
+
+use crate::calib::LayerStats;
+use crate::tensor::weighted_sum;
+use crate::weights::{ExpertWeights, Weights};
+
+pub use fixdom::FixDomFeature;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MergeStrategy {
+    Average,
+    Frequency,
+    FixDom(FixDomFeature),
+    ZipIt(FixDomFeature),
+}
+
+impl MergeStrategy {
+    pub fn short(&self) -> String {
+        match self {
+            MergeStrategy::Average => "average".into(),
+            MergeStrategy::Frequency => "frequency".into(),
+            MergeStrategy::FixDom(f) => format!("fixdom-{}", f.short()),
+            MergeStrategy::ZipIt(f) => format!("zipit-{}", f.short()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "average" | "avg" => MergeStrategy::Average,
+            "frequency" | "freq" => MergeStrategy::Frequency,
+            "fixdom" | "fixdom-act" => MergeStrategy::FixDom(FixDomFeature::Act),
+            "fixdom-weight" => MergeStrategy::FixDom(FixDomFeature::Weight),
+            "fixdom-actweight" => MergeStrategy::FixDom(FixDomFeature::ActWeight),
+            "zipit" | "zipit-act" => MergeStrategy::ZipIt(FixDomFeature::Act),
+            "zipit-weight" => MergeStrategy::ZipIt(FixDomFeature::Weight),
+            "zipit-actweight" => MergeStrategy::ZipIt(FixDomFeature::ActWeight),
+            other => anyhow::bail!("unknown merge strategy {other:?}"),
+        })
+    }
+}
+
+/// Plain weighted merge with explicit coefficients (must sum to ~1).
+pub fn merge_weighted(experts: &[ExpertWeights], alphas: &[f32]) -> Result<ExpertWeights> {
+    anyhow::ensure!(experts.len() == alphas.len() && !experts.is_empty());
+    let s: f32 = alphas.iter().sum();
+    anyhow::ensure!((s - 1.0).abs() < 1e-3, "alphas must sum to 1, got {s}");
+    let wg: Vec<&_> = experts.iter().map(|e| &e.wg).collect();
+    let wu: Vec<&_> = experts.iter().map(|e| &e.wu).collect();
+    let wd: Vec<&_> = experts.iter().map(|e| &e.wd).collect();
+    Ok(ExpertWeights {
+        wg: weighted_sum(&wg, alphas)?,
+        wu: weighted_sum(&wu, alphas)?,
+        wd: weighted_sum(&wd, alphas)?,
+    })
+}
+
+/// Merge one cluster under a strategy. `members` are expert indices.
+pub fn merge_cluster(
+    weights: &Weights,
+    stats: &LayerStats,
+    layer: usize,
+    members: &[usize],
+    strategy: MergeStrategy,
+) -> Result<ExpertWeights> {
+    anyhow::ensure!(!members.is_empty(), "empty cluster");
+    let experts: Vec<ExpertWeights> = members
+        .iter()
+        .map(|&e| weights.expert(layer, e))
+        .collect::<Result<_>>()?;
+    if experts.len() == 1 {
+        return Ok(experts.into_iter().next().unwrap());
+    }
+    match strategy {
+        MergeStrategy::Average => {
+            let a = vec![1.0 / experts.len() as f32; experts.len()];
+            merge_weighted(&experts, &a)
+        }
+        MergeStrategy::Frequency => {
+            let a = stats.norm_freq(members);
+            merge_weighted(&experts, &a)
+        }
+        MergeStrategy::FixDom(feature) => {
+            fixdom::merge_fixdom(&experts, stats, members, feature)
+        }
+        MergeStrategy::ZipIt(feature) => {
+            zipit::merge_zipit(&experts, stats, members, feature)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::testutil::synthetic_grouped;
+    use crate::tensor::Tensor;
+
+    fn demo_expert(v: f32, d: usize, m: usize) -> ExpertWeights {
+        ExpertWeights {
+            wg: Tensor::full(vec![d, m], v),
+            wu: Tensor::full(vec![d, m], v + 1.0),
+            wd: Tensor::full(vec![m, d], v + 2.0),
+        }
+    }
+
+    #[test]
+    fn average_merge_is_mean() {
+        let a = demo_expert(0.0, 2, 3);
+        let b = demo_expert(2.0, 2, 3);
+        let m = merge_weighted(&[a, b], &[0.5, 0.5]).unwrap();
+        assert!(m.wg.data().iter().all(|&x| x == 1.0));
+        assert!(m.wu.data().iter().all(|&x| x == 2.0));
+        assert!(m.wd.data().iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn frequency_merge_respects_counts() {
+        let mut st = synthetic_grouped(2, 4, &[vec![0], vec![1]], 0.0, 1);
+        st.counts = vec![3.0, 1.0];
+        let f = st.norm_freq(&[0, 1]);
+        assert_eq!(f, vec![0.75, 0.25]);
+    }
+
+    #[test]
+    fn alphas_must_sum_to_one() {
+        let a = demo_expert(0.0, 2, 2);
+        let b = demo_expert(1.0, 2, 2);
+        assert!(merge_weighted(&[a, b], &[0.9, 0.9]).is_err());
+    }
+
+    #[test]
+    fn singleton_cluster_is_identity() {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert(
+            "layer00.exp.wg".to_string(),
+            Tensor::new(vec![2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap(),
+        );
+        map.insert("layer00.exp.wu".to_string(), Tensor::zeros(vec![2, 2, 2]));
+        map.insert("layer00.exp.wd".to_string(), Tensor::zeros(vec![2, 2, 2]));
+        let w = Weights::new(map);
+        let st = synthetic_grouped(2, 4, &[vec![0], vec![1]], 0.0, 2);
+        let m = merge_cluster(&w, &st, 0, &[1], MergeStrategy::Average).unwrap();
+        assert_eq!(m.wg.data(), &[5., 6., 7., 8.]);
+    }
+}

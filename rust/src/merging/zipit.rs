@@ -1,0 +1,181 @@
+//! Full ZipIt-style merging (Stoica et al. 2024), the slow baseline of
+//! Table 9 / Appendix B.2.
+//!
+//! Unlike Fix-Dom (which freezes the dominant expert's feature order),
+//! ZipIt concatenates the hidden dimensions of *all* cluster members
+//! (|C|·m features), computes the full pairwise correlation, and greedily
+//! "zips" the most-correlated feature pairs until only m merged features
+//! remain.  Every merged feature then averages the weight columns of its
+//! member dimensions.  Complexity is O((|C|·m)² · f) vs Fix-Dom's
+//! O(|C|·m²·f) — the source of the paper's >100× runtime gap.
+
+use anyhow::Result;
+
+use crate::calib::LayerStats;
+use crate::tensor::{corr_matrix, Tensor};
+use crate::weights::ExpertWeights;
+
+use super::fixdom::{feature_rows, FixDomFeature};
+
+/// ZipIt merge of a cluster.
+pub fn merge_zipit(
+    experts: &[ExpertWeights],
+    stats: &LayerStats,
+    members: &[usize],
+    feature: FixDomFeature,
+) -> Result<ExpertWeights> {
+    let c = experts.len();
+    let d = experts[0].wg.shape()[0];
+    let m = experts[0].wg.shape()[1];
+    let total = c * m;
+    // 1. collect features of every (expert, dim) pair
+    let mut all_rows: Vec<f32> = Vec::new();
+    let mut f_len = 0usize;
+    for (i, e) in experts.iter().enumerate() {
+        let (rows, f) = feature_rows(e, stats, members[i], feature);
+        if i == 0 {
+            f_len = f;
+        }
+        anyhow::ensure!(f == f_len, "feature length mismatch");
+        all_rows.extend(rows);
+    }
+    // 2. full correlation matrix over all c*m features
+    let corr = corr_matrix(&all_rows, &all_rows, total, total, f_len);
+    // 3. greedy zip: union-find over feature groups, merging the highest-
+    //    correlated pair of distinct groups until `m` groups remain
+    let mut parent: Vec<usize> = (0..total).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        let mut r = x;
+        while parent[r] != r {
+            r = parent[r];
+        }
+        let mut cur = x;
+        while parent[cur] != r {
+            let next = parent[cur];
+            parent[cur] = r;
+            cur = next;
+        }
+        r
+    }
+    let mut pairs: Vec<(usize, usize, f32)> = Vec::with_capacity(total * (total - 1) / 2);
+    for i in 0..total {
+        for j in (i + 1)..total {
+            pairs.push((i, j, corr[i * total + j]));
+        }
+    }
+    pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then((a.0, a.1).cmp(&(b.0, b.1))));
+    let mut groups = total;
+    for &(i, j, _) in &pairs {
+        if groups == m {
+            break;
+        }
+        let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+        if ri != rj {
+            parent[rj.max(ri)] = rj.min(ri);
+            groups -= 1;
+        }
+    }
+    // 4. assign group slots (stable by smallest member) and average columns
+    let mut root_of: Vec<usize> = (0..total).map(|x| find(&mut parent, x)).collect();
+    let mut roots: Vec<usize> = root_of.clone();
+    roots.sort_unstable();
+    roots.dedup();
+    // If the greedy pass ran out of positive pairs early we may have > m
+    // groups; fold the excess smallest groups together to guarantee m.
+    while roots.len() > m {
+        let a = roots.pop().unwrap();
+        let b = *roots.last().unwrap();
+        for r in root_of.iter_mut() {
+            if *r == a {
+                *r = b;
+            }
+        }
+    }
+    let slot_of = |root: usize| roots.binary_search(&root).unwrap_or(0);
+    let mut wg = vec![0f32; d * m];
+    let mut wu = vec![0f32; d * m];
+    let mut wd = vec![0f32; m * d];
+    let mut cnt = vec![0f32; m];
+    for idx in 0..total {
+        let slot = slot_of(root_of[idx]);
+        let (e, j) = (idx / m, idx % m);
+        cnt[slot] += 1.0;
+        let ew = &experts[e];
+        for i in 0..d {
+            wg[i * m + slot] += ew.wg.data()[i * m + j];
+            wu[i * m + slot] += ew.wu.data()[i * m + j];
+        }
+        for i in 0..d {
+            wd[slot * d + i] += ew.wd.data()[j * d + i];
+        }
+    }
+    for slot in 0..m {
+        let cdiv = cnt[slot].max(1.0);
+        for i in 0..d {
+            wg[i * m + slot] /= cdiv;
+            wu[i * m + slot] /= cdiv;
+            wd[slot * d + i] /= cdiv;
+        }
+    }
+    Ok(ExpertWeights {
+        wg: Tensor::new(vec![d, m], wg)?,
+        wu: Tensor::new(vec![d, m], wu)?,
+        wd: Tensor::new(vec![m, d], wd)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::testutil::synthetic_grouped;
+    use crate::util::Rng;
+
+    fn rand_expert(rng: &mut Rng, d: usize, m: usize) -> ExpertWeights {
+        let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+        ExpertWeights {
+            wg: Tensor::new(vec![d, m], mk(d * m)).unwrap(),
+            wu: Tensor::new(vec![d, m], mk(d * m)).unwrap(),
+            wd: Tensor::new(vec![m, d], mk(d * m)).unwrap(),
+        }
+    }
+
+    #[test]
+    fn identical_experts_zip_to_themselves() {
+        let mut rng = Rng::new(12);
+        let a = rand_expert(&mut rng, 5, 4);
+        let st = synthetic_grouped(2, 4, &[vec![0, 1]], 0.0, 6);
+        let merged = merge_zipit(
+            &[a.clone(), a.clone()],
+            &st,
+            &[0, 1],
+            FixDomFeature::Weight,
+        )
+        .unwrap();
+        // each original dim should pair with its twin in the other expert;
+        // averaging identical columns reproduces the original expert
+        let mut matched = 0;
+        for j in 0..4 {
+            let col: Vec<f32> = (0..5).map(|i| merged.wg.data()[i * 4 + j]).collect();
+            if (0..4).any(|j2| {
+                (0..5).all(|i| (col[i] - a.wg.data()[i * 4 + j2]).abs() < 1e-4)
+            }) {
+                matched += 1;
+            }
+        }
+        assert_eq!(matched, 4, "all zipped dims must match original columns");
+    }
+
+    #[test]
+    fn output_shapes_are_expert_shaped() {
+        let mut rng = Rng::new(13);
+        let a = rand_expert(&mut rng, 4, 3);
+        let b = rand_expert(&mut rng, 4, 3);
+        let c = rand_expert(&mut rng, 4, 3);
+        let st = synthetic_grouped(3, 4, &[vec![0, 1, 2]], 0.0, 7);
+        let merged =
+            merge_zipit(&[a, b, c], &st, &[0, 1, 2], FixDomFeature::Weight).unwrap();
+        assert_eq!(merged.wg.shape(), &[4, 3]);
+        assert_eq!(merged.wd.shape(), &[3, 4]);
+        assert!(merged.wg.data().iter().all(|x| x.is_finite()));
+    }
+}

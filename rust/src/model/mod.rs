@@ -1,0 +1,169 @@
+//! `ModelContext`: one loaded simulated SMoE model — config, trained
+//! weights, and the compiled PJRT executables for its HLO artifacts.
+//!
+//! A *variant* (merged/pruned model) is represented by [`LoadedModel`]:
+//! resident device buffers for its weight set plus its router mask, so the
+//! eval/serving hot path never re-uploads weights (DESIGN.md §Perf L3).
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+use once_cell::sync::OnceCell;
+
+use crate::config::{Artifacts, Manifest, ModelCfg};
+use crate::data::TokenStream;
+use crate::runtime::{Executable, Input, Runtime};
+use crate::tensor::Tensor;
+use crate::weights::Weights;
+
+pub struct ModelContext {
+    pub arts: Artifacts,
+    pub manifest: Manifest,
+    pub cfg: ModelCfg,
+    pub rt: Arc<Runtime>,
+    pub base: Weights,
+    lm_exe: OnceCell<Executable>,
+    calib_exe: OnceCell<Executable>,
+}
+
+/// A model variant ready for execution: weights resident on device + mask.
+pub struct LoadedModel {
+    pub bufs: Vec<xla::PjRtBuffer>,
+    pub mask: Vec<f32>, // [L * n] additive router mask
+    pub label: String,
+}
+
+impl ModelContext {
+    pub fn load(arts: &Artifacts, model: &str) -> Result<Self> {
+        let manifest = arts.manifest()?;
+        let cfg = arts.model_cfg(model)?;
+        let rt = Runtime::cpu()?;
+        let base = Weights::load(arts.weights_path(model))
+            .with_context(|| format!("loading weights for {model}"))?;
+        ensure!(base.n_experts()? == cfg.n_exp, "weights/config expert mismatch");
+        Ok(Self {
+            arts: arts.clone(),
+            manifest,
+            cfg,
+            rt,
+            base,
+            lm_exe: OnceCell::new(),
+            calib_exe: OnceCell::new(),
+        })
+    }
+
+    pub fn lm_exe(&self) -> Result<&Executable> {
+        self.lm_exe.get_or_try_init(|| {
+            self.rt.load_hlo(self.arts.lm_logits_hlo(&self.cfg.name))
+        })
+    }
+
+    pub fn calib_exe(&self) -> Result<&Executable> {
+        self.calib_exe.get_or_try_init(|| {
+            self.rt.load_hlo(self.arts.calib_hlo(&self.cfg.name))
+        })
+    }
+
+    /// Zero (keep-everything) router mask.
+    pub fn full_mask(&self) -> Vec<f32> {
+        vec![0.0; self.cfg.n_layer * self.cfg.n_exp]
+    }
+
+    /// Upload a weight set as a resident model variant.
+    pub fn load_model(&self, w: &Weights, mask: Vec<f32>, label: &str) -> Result<LoadedModel> {
+        ensure!(mask.len() == self.cfg.n_layer * self.cfg.n_exp, "mask size");
+        let bufs = self.lm_exe()?.upload_weights(w)?;
+        Ok(LoadedModel { bufs, mask, label: label.to_string() })
+    }
+
+    /// The original (uncompressed) model as a variant.
+    pub fn load_original(&self) -> Result<LoadedModel> {
+        self.load_model(&self.base, self.full_mask(), "original")
+    }
+
+    /// One scoring execution: ids [B*T] -> logits [B, T, V].
+    pub fn run_logits(&self, model: &LoadedModel, ids: &[i32]) -> Result<Tensor> {
+        let (b, t) = (self.manifest.eval_b, self.manifest.eval_t);
+        ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
+        let mask = Tensor::new(
+            vec![self.cfg.n_layer, self.cfg.n_exp],
+            model.mask.clone(),
+        )?;
+        let outs = self.lm_exe()?.run_with(
+            &model.bufs,
+            &[Input::I32(ids.to_vec(), vec![b, t]), Input::F32(mask)],
+        )?;
+        ensure!(outs.len() == 1, "lm_logits returns a 1-tuple");
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Raw calibration pass on the ORIGINAL weights over one token batch
+    /// of shape [calib_b, calib_t]. Returns the 8-tuple of stat tensors.
+    pub fn run_calib(&self, ids: &[i32]) -> Result<Vec<Tensor>> {
+        let (b, t) = (self.manifest.calib_b, self.manifest.calib_t);
+        ensure!(ids.len() == b * t, "calib ids must be exactly [{b}, {t}]");
+        let exe = self.calib_exe()?;
+        let bufs = exe.upload_weights(&self.base)?;
+        exe.run_with(&bufs, &[Input::I32(ids.to_vec(), vec![b, t])])
+    }
+
+    /// Convenience: calibration statistics over a named domain stream.
+    pub fn calibrate(&self, domain: &str) -> Result<crate::calib::CalibStats> {
+        let ts = TokenStream::load(self.arts.calib_tokens_path(domain))?;
+        crate::calib::CalibStats::collect(self, &ts)
+    }
+
+    /// Load the true r-expert compact executable with a compact weight set
+    /// and router remap table (Table 20 efficiency path).
+    pub fn load_compact(
+        &self,
+        r: usize,
+        weights: &Weights,
+        remap: Vec<i32>,
+        label: &str,
+    ) -> Result<CompactModel> {
+        ensure!(remap.len() == self.cfg.n_layer * self.cfg.n_exp, "remap size");
+        let exe = self
+            .rt
+            .load_hlo(self.arts.lm_logits_compact_hlo(&self.cfg.name, r))?;
+        let bufs = exe.upload_weights(weights)?;
+        Ok(CompactModel { exe, bufs, remap, label: label.to_string(), r })
+    }
+
+    /// One scoring execution on a compact variant: ids [B*T] -> [B, T, V].
+    pub fn run_logits_compact(&self, model: &CompactModel, ids: &[i32]) -> Result<Tensor> {
+        let (b, t) = (self.manifest.eval_b, self.manifest.eval_t);
+        ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
+        let mask = Tensor::zeros(vec![self.cfg.n_layer, self.cfg.n_exp]);
+        let outs = self.exe_run_compact(model, ids, b, t, mask)?;
+        ensure!(outs.len() == 1, "compact lm_logits returns a 1-tuple");
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn exe_run_compact(
+        &self,
+        model: &CompactModel,
+        ids: &[i32],
+        b: usize,
+        t: usize,
+        mask: Tensor,
+    ) -> Result<Vec<Tensor>> {
+        model.exe.run_with(
+            &model.bufs,
+            &[
+                Input::I32(ids.to_vec(), vec![b, t]),
+                Input::F32(mask),
+                Input::I32(model.remap.clone(), vec![self.cfg.n_layer, self.cfg.n_exp]),
+            ],
+        )
+    }
+}
+
+/// A compact r-expert variant with its own executable.
+pub struct CompactModel {
+    pub exe: Executable,
+    pub bufs: Vec<xla::PjRtBuffer>,
+    pub remap: Vec<i32>,
+    pub label: String,
+    pub r: usize,
+}

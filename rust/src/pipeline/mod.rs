@@ -1,0 +1,406 @@
+//! The HC-SMoE compression pipeline (the paper's contribution, end to end):
+//!
+//! calibrate → similarity features → group (HC / K-means / FCM /
+//! single-shot / non-uniform) → merge (average / frequency / Fix-Dom /
+//! ZipIt) or prune (O/S/F) → a [`CompressedModel`] ready for the runtime.
+//!
+//! Merging never touches the router (Fig. 3): each cluster's merged expert
+//! is written back into *every member slot*, so tokens previously routed to
+//! any member now reach the merged expert. Pruning masks router logits with
+//! -inf. A uniform merge plan can additionally be exported as a true
+//! r-expert compact weight set + remap table for the efficiency experiments
+//! (Table 20).
+
+use anyhow::{ensure, Result};
+
+use crate::calib::CalibStats;
+use crate::clustering::{
+    fcm, hierarchical, kmeans, nonuniform_budgets, single_shot, KmeansInit, Linkage,
+};
+use crate::merging::{merge_cluster, MergeStrategy};
+use crate::model::{LoadedModel, ModelContext};
+use crate::pruning::{f_prune, o_prune, s_prune};
+use crate::similarity::{distance_matrix, features, Distance, Metric};
+use crate::weights::Weights;
+
+/// Every compression method of the paper's evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    /// Ours (Section 3.2): HC on a similarity metric + weight-space merge.
+    HcSmoe {
+        linkage: Linkage,
+        metric: Metric,
+        merge: MergeStrategy,
+    },
+    /// Non-uniform layer budgets (Appendix B.1).
+    HcNonUniform {
+        linkage: Linkage,
+        metric: Metric,
+        merge: MergeStrategy,
+    },
+    /// K-means grouping baseline (Table 5).
+    KMeans {
+        init: KmeansInit,
+        metric: Metric,
+        merge: MergeStrategy,
+    },
+    /// Fuzzy C-Means soft clustering (Appendix B.5).
+    Fcm { seed: u64 },
+    /// One-pass grouping (Table 6); M-SMoE = this with RouterLogits+Frequency.
+    SingleShot { metric: Metric, merge: MergeStrategy },
+    /// M-SMoE baseline (Li et al. 2024).
+    MSmoe,
+    /// O-prune (Lu et al. 2024): subset search on layer-output deviation.
+    OPrune { samples: usize, seed: u64 },
+    /// S-prune (He et al. 2024): global router-score pruning.
+    SPrune,
+    /// F-prune: frequency-criterion pruning.
+    FPrune,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::HcSmoe { linkage, metric, merge } => {
+                format!("HC-SMoE({},{},{})", linkage.short(), metric.short(), merge.short())
+            }
+            Method::HcNonUniform { linkage, metric, merge } => {
+                format!("HC-NU({},{},{})", linkage.short(), metric.short(), merge.short())
+            }
+            Method::KMeans { init, metric, merge } => {
+                let i = match init {
+                    KmeansInit::Fixed => "fix",
+                    KmeansInit::Random { .. } => "rnd",
+                };
+                format!("K-{}({},{})", i, metric.short(), merge.short())
+            }
+            Method::Fcm { .. } => "Fuzzy-CMeans".into(),
+            Method::SingleShot { metric, merge } => {
+                format!("SingleShot({},{})", metric.short(), merge.short())
+            }
+            Method::MSmoe => "M-SMoE".into(),
+            Method::OPrune { samples, .. } => format!("O-prune({samples})"),
+            Method::SPrune => "S-prune".into(),
+            Method::FPrune => "F-prune".into(),
+        }
+    }
+
+    pub fn is_pruning(&self) -> bool {
+        matches!(self, Method::OPrune { .. } | Method::SPrune | Method::FPrune)
+    }
+}
+
+/// A concrete per-layer compression decision.
+#[derive(Debug, Clone)]
+pub enum PlanKind {
+    Merge {
+        /// groups[l] = clusters of expert indices for layer l.
+        groups: Vec<Vec<Vec<usize>>>,
+        strategy: MergeStrategy,
+    },
+    /// FCM soft merge: memberships[l][i][j] of expert i in cluster j,
+    /// applied to experts *and router columns* (Appendix B.5).
+    SoftMerge { memberships: Vec<Vec<Vec<f32>>>, r: usize },
+    Prune { keep: Vec<Vec<usize>> },
+}
+
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub kind: PlanKind,
+    pub label: String,
+    pub r_target: usize,
+}
+
+pub struct Pipeline {
+    pub method: Method,
+}
+
+impl Pipeline {
+    pub fn new(method: Method) -> Self {
+        Self { method }
+    }
+
+    /// Decide the per-layer grouping/pruning for target `r` experts/layer.
+    pub fn plan(&self, ctx: &ModelContext, stats: &CalibStats, r: usize) -> Result<Plan> {
+        let cfg = &ctx.cfg;
+        ensure!(r >= 1 && r <= cfg.n_exp, "target r out of range");
+        ensure!(stats.n_layers() == cfg.n_layer, "stats/model layer mismatch");
+        let label = self.method.label();
+        let kind = match &self.method {
+            Method::HcSmoe { linkage, metric, merge } => {
+                let groups = (0..cfg.n_layer)
+                    .map(|l| {
+                        let feats = features(*metric, &ctx.base, &stats.layers[l], l)?;
+                        let dist = distance_matrix(&feats, Distance::Euclidean);
+                        let c = hierarchical(&dist, r, *linkage);
+                        c.validate()?;
+                        Ok(c.groups())
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                PlanKind::Merge { groups, strategy: *merge }
+            }
+            Method::HcNonUniform { linkage, metric, merge } => {
+                let freqs: Vec<Vec<f32>> =
+                    stats.layers.iter().map(|l| l.counts.clone()).collect();
+                let budgets = nonuniform_budgets(&freqs, r, cfg.k.max(1));
+                let groups = (0..cfg.n_layer)
+                    .map(|l| {
+                        let feats = features(*metric, &ctx.base, &stats.layers[l], l)?;
+                        let dist = distance_matrix(&feats, Distance::Euclidean);
+                        let c = hierarchical(&dist, budgets[l], *linkage);
+                        c.validate()?;
+                        Ok(c.groups())
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                PlanKind::Merge { groups, strategy: *merge }
+            }
+            Method::KMeans { init, metric, merge } => {
+                let groups = (0..cfg.n_layer)
+                    .map(|l| {
+                        let feats = features(*metric, &ctx.base, &stats.layers[l], l)?;
+                        let c = kmeans(&feats, r, *init, 100);
+                        c.validate()?;
+                        Ok(c.groups())
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                PlanKind::Merge { groups, strategy: *merge }
+            }
+            Method::Fcm { seed } => {
+                let memberships = (0..cfg.n_layer)
+                    .map(|l| {
+                        let feats =
+                            features(Metric::ExpertOutput, &ctx.base, &stats.layers[l], l)?;
+                        Ok(fcm(&feats, r, 2.0, 50, *seed).membership)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                PlanKind::SoftMerge { memberships, r }
+            }
+            Method::SingleShot { metric, merge } => {
+                let groups = (0..cfg.n_layer)
+                    .map(|l| {
+                        let feats = features(*metric, &ctx.base, &stats.layers[l], l)?;
+                        let c = single_shot(&feats, &stats.layers[l].counts, r);
+                        c.validate()?;
+                        Ok(c.groups())
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                PlanKind::Merge { groups, strategy: *merge }
+            }
+            Method::MSmoe => {
+                return Pipeline::new(Method::SingleShot {
+                    metric: Metric::RouterLogits,
+                    merge: MergeStrategy::Frequency,
+                })
+                .plan(ctx, stats, r)
+                .map(|mut p| {
+                    p.label = "M-SMoE".into();
+                    p
+                });
+            }
+            Method::OPrune { samples, seed } => {
+                let p = o_prune(stats, r, cfg.k, *samples, *seed);
+                p.validate(cfg.n_exp, cfg.k)?;
+                PlanKind::Prune { keep: p.keep }
+            }
+            Method::SPrune => {
+                let p = s_prune(stats, r, cfg.k);
+                p.validate(cfg.n_exp, cfg.k)?;
+                PlanKind::Prune { keep: p.keep }
+            }
+            Method::FPrune => {
+                let p = f_prune(stats, r, cfg.k);
+                p.validate(cfg.n_exp, cfg.k)?;
+                PlanKind::Prune { keep: p.keep }
+            }
+        };
+        Ok(Plan { kind, label, r_target: r })
+    }
+}
+
+/// A compressed model: weight set + router mask in the n-slot layout.
+pub struct CompressedModel {
+    pub weights: Weights,
+    pub mask: Vec<f32>,
+    pub label: String,
+    pub plan: Plan,
+}
+
+pub const MASK_OFF: f32 = -1e30;
+
+impl Plan {
+    /// Materialise the plan into weights + router mask.
+    pub fn apply(&self, ctx: &ModelContext, stats: &CalibStats) -> Result<CompressedModel> {
+        let cfg = &ctx.cfg;
+        let mut weights = ctx.base.clone();
+        let mut mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+        match &self.kind {
+            PlanKind::Merge { groups, strategy } => {
+                for (l, layer_groups) in groups.iter().enumerate() {
+                    for members in layer_groups {
+                        let merged =
+                            merge_cluster(&ctx.base, &stats.layers[l], l, members, *strategy)?;
+                        for &e in members {
+                            weights.set_expert(l, e, &merged)?;
+                        }
+                    }
+                }
+            }
+            PlanKind::SoftMerge { memberships, r } => {
+                apply_soft_merge(ctx, &mut weights, &mut mask, memberships, *r)?;
+            }
+            PlanKind::Prune { keep } => {
+                for (l, kept) in keep.iter().enumerate() {
+                    for e in 0..cfg.n_exp {
+                        if !kept.contains(&e) {
+                            mask[l * cfg.n_exp + e] = MASK_OFF;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(CompressedModel {
+            weights,
+            mask,
+            label: self.label.clone(),
+            plan: self.clone(),
+        })
+    }
+
+    /// Effective expert count per layer (for parameter accounting).
+    pub fn experts_per_layer(&self) -> Vec<usize> {
+        match &self.kind {
+            PlanKind::Merge { groups, .. } => groups.iter().map(|g| g.len()).collect(),
+            PlanKind::SoftMerge { memberships, r } => {
+                memberships.iter().map(|_| *r).collect()
+            }
+            PlanKind::Prune { keep } => keep.iter().map(|k| k.len()).collect(),
+        }
+    }
+}
+
+/// FCM soft merge (Appendix B.5): expert j of the reduced layer is the
+/// membership-weighted sum of all experts (Eq. 15, normalised) and the
+/// router columns are merged with the same weights; slots >= r are masked.
+fn apply_soft_merge(
+    ctx: &ModelContext,
+    weights: &mut Weights,
+    mask: &mut [f32],
+    memberships: &[Vec<Vec<f32>>],
+    r: usize,
+) -> Result<()> {
+    let cfg = &ctx.cfg;
+    for (l, u) in memberships.iter().enumerate() {
+        let n = u.len();
+        ensure!(n == cfg.n_exp, "membership rows");
+        // merged experts into slots 0..r
+        for j in 0..r {
+            let col: Vec<f32> = (0..n).map(|i| u[i][j]).collect();
+            let s: f32 = col.iter().sum();
+            let alphas: Vec<f32> = col.iter().map(|&x| x / s.max(1e-9)).collect();
+            let experts: Vec<_> = (0..n)
+                .map(|i| ctx.base.expert(l, i))
+                .collect::<Result<Vec<_>>>()?;
+            let merged = crate::merging::merge_weighted(&experts, &alphas)?;
+            weights.set_expert(l, j, &merged)?;
+        }
+        // merged router columns with the same weights
+        let orig_router = ctx.base.router(l)?.clone();
+        let (d, n_cols) = (orig_router.shape()[0], orig_router.shape()[1]);
+        let router = weights.get_mut(&format!("layer{l:02}.router"))?;
+        for j in 0..r {
+            let col: Vec<f32> = (0..n).map(|i| u[i][j]).collect();
+            let s: f32 = col.iter().sum::<f32>().max(1e-9);
+            for row in 0..d {
+                let mut v = 0f32;
+                for (i, &uij) in col.iter().enumerate() {
+                    v += uij * orig_router.data()[row * n_cols + i];
+                }
+                router.data_mut()[row * n_cols + j] = v / s;
+            }
+        }
+        // dead slots
+        for e in r..cfg.n_exp {
+            mask[l * cfg.n_exp + e] = MASK_OFF;
+        }
+    }
+    Ok(())
+}
+
+impl CompressedModel {
+    /// Upload as a runnable variant.
+    pub fn load(&self, ctx: &ModelContext) -> Result<LoadedModel> {
+        ctx.load_model(&self.weights, self.mask.clone(), &self.label)
+    }
+
+    /// Export the true r-expert compact weights + router remap (uniform
+    /// merge plans only) for the `lm_logits_*_r{r}` executables.
+    pub fn to_compact(&self, ctx: &ModelContext) -> Result<(Weights, Vec<i32>)> {
+        let cfg = &ctx.cfg;
+        let PlanKind::Merge { groups, .. } = &self.plan.kind else {
+            anyhow::bail!("compact export needs a merge plan");
+        };
+        let r = groups[0].len();
+        ensure!(groups.iter().all(|g| g.len() == r), "non-uniform plan");
+        let mut keep: Vec<Vec<usize>> = Vec::with_capacity(cfg.n_layer);
+        let mut remap = vec![0i32; cfg.n_layer * cfg.n_exp];
+        for (l, layer_groups) in groups.iter().enumerate() {
+            // slot s holds the merged expert of group s (take any member's
+            // slot in the merged n-slot weights — they are identical)
+            let mut reps = Vec::with_capacity(r);
+            for (s, members) in layer_groups.iter().enumerate() {
+                reps.push(members[0]);
+                for &e in members {
+                    remap[l * cfg.n_exp + e] = s as i32;
+                }
+            }
+            keep.push(reps);
+        }
+        let compact = self.weights.to_compact(cfg, &keep)?;
+        Ok((compact, remap))
+    }
+}
+
+/// Parameter count after compression (expert slots actually retained).
+pub fn compressed_params(cfg: &crate::config::ModelCfg, experts_per_layer: &[usize]) -> usize {
+    let embed = cfg.vocab * cfg.d + cfg.t_max * cfg.d + cfg.d;
+    let mut total = embed;
+    for &r in experts_per_layer {
+        let mut per = 4 * cfg.d * cfg.d + 2 * cfg.d + cfg.d * cfg.n_exp;
+        per += r * cfg.expert_params();
+        if cfg.shared {
+            per += 3 * cfg.d * cfg.m_shared;
+        }
+        total += per;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_distinct() {
+        let methods = [
+            Method::HcSmoe {
+                linkage: Linkage::Average,
+                metric: Metric::ExpertOutput,
+                merge: MergeStrategy::Frequency,
+            },
+            Method::MSmoe,
+            Method::SPrune,
+            Method::FPrune,
+            Method::OPrune { samples: 100, seed: 1 },
+            Method::Fcm { seed: 1 },
+        ];
+        let labels: std::collections::HashSet<String> =
+            methods.iter().map(|m| m.label()).collect();
+        assert_eq!(labels.len(), methods.len());
+    }
+
+    #[test]
+    fn pruning_flag() {
+        assert!(Method::SPrune.is_pruning());
+        assert!(!Method::MSmoe.is_pruning());
+    }
+}

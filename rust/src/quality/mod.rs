@@ -1,0 +1,157 @@
+//! Cluster-quality analysis (Appendix D, Table 23): output fidelity of the
+//! compressed model (L2 error / cosine similarity of last-layer logits vs
+//! the original) and intrinsic clustering criteria (Silhouette score and
+//! Dunn index under Euclidean and cosine distances).
+
+use anyhow::Result;
+
+use crate::data::TokenStream;
+use crate::model::{LoadedModel, ModelContext};
+use crate::similarity::Distance;
+use crate::tensor::{cosine_sim, l2_dist};
+
+/// Output fidelity over a token stream: (Σ||T(x)-S(x)||₂, mean cosine sim).
+pub fn output_fidelity(
+    ctx: &ModelContext,
+    original: &LoadedModel,
+    compressed: &LoadedModel,
+    stream: &TokenStream,
+    max_batches: usize,
+) -> Result<(f64, f64)> {
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let mut l2 = 0f64;
+    let mut cos = 0f64;
+    let mut rows = 0usize;
+    for batch in stream.tokens.chunks_exact(b * t).take(max_batches) {
+        let lo = ctx.run_logits(original, batch)?;
+        let lc = ctx.run_logits(compressed, batch)?;
+        let v = lo.shape()[2];
+        for i in 0..b * t {
+            let ro = &lo.data()[i * v..(i + 1) * v];
+            let rc = &lc.data()[i * v..(i + 1) * v];
+            l2 += l2_dist(ro, rc) as f64;
+            cos += cosine_sim(ro, rc) as f64;
+            rows += 1;
+        }
+    }
+    anyhow::ensure!(rows > 0, "stream too short");
+    Ok((l2, cos / rows as f64))
+}
+
+fn dist(a: &[f32], b: &[f32], d: Distance) -> f32 {
+    match d {
+        Distance::Euclidean => l2_dist(a, b),
+        Distance::Cosine => crate::tensor::cosine_dist(a, b),
+    }
+}
+
+/// Mean Silhouette coefficient over all points.
+/// s(i) = (b(i) - a(i)) / max(a(i), b(i)); singleton clusters score 0.
+pub fn silhouette(feats: &[Vec<f32>], assign: &[usize], r: usize, metric: Distance) -> f64 {
+    let n = feats.len();
+    let mut total = 0f64;
+    for i in 0..n {
+        let own = assign[i];
+        let own_size = assign.iter().filter(|&&c| c == own).count();
+        if own_size <= 1 {
+            continue; // s(i) = 0
+        }
+        let mut a = 0f64;
+        let mut b_best = f64::INFINITY;
+        for c in 0..r {
+            let members: Vec<usize> = (0..n).filter(|&j| assign[j] == c && j != i).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mean: f64 = members
+                .iter()
+                .map(|&j| dist(&feats[i], &feats[j], metric) as f64)
+                .sum::<f64>()
+                / members.len() as f64;
+            if c == own {
+                a = mean;
+            } else {
+                b_best = b_best.min(mean);
+            }
+        }
+        if b_best.is_finite() {
+            total += (b_best - a) / a.max(b_best).max(1e-12);
+        }
+    }
+    total / n as f64
+}
+
+/// Dunn index: min inter-cluster distance / max intra-cluster diameter.
+pub fn dunn_index(feats: &[Vec<f32>], assign: &[usize], r: usize, metric: Distance) -> f64 {
+    let n = feats.len();
+    let mut min_inter = f64::INFINITY;
+    let mut max_diam = 0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = dist(&feats[i], &feats[j], metric) as f64;
+            if assign[i] == assign[j] {
+                max_diam = max_diam.max(d);
+            } else {
+                min_inter = min_inter.min(d);
+            }
+        }
+    }
+    let _ = r;
+    if max_diam <= 0.0 {
+        return f64::INFINITY;
+    }
+    if !min_inter.is_finite() {
+        return 0.0;
+    }
+    min_inter / max_diam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs() -> (Vec<Vec<f32>>, Vec<usize>) {
+        (
+            vec![
+                vec![0.0, 0.0],
+                vec![0.1, 0.0],
+                vec![5.0, 5.0],
+                vec![5.1, 5.0],
+            ],
+            vec![0, 0, 1, 1],
+        )
+    }
+
+    #[test]
+    fn silhouette_high_for_good_clustering() {
+        let (f, a) = blobs();
+        let s = silhouette(&f, &a, 2, Distance::Euclidean);
+        assert!(s > 0.9, "silhouette {s}");
+    }
+
+    #[test]
+    fn silhouette_lower_for_bad_clustering() {
+        let (f, _) = blobs();
+        let bad = vec![0, 1, 0, 1];
+        let s_good = silhouette(&f, &[0, 0, 1, 1], 2, Distance::Euclidean);
+        let s_bad = silhouette(&f, &bad, 2, Distance::Euclidean);
+        assert!(s_bad < s_good);
+        assert!(s_bad < 0.0, "crossed clusters must score negative: {s_bad}");
+    }
+
+    #[test]
+    fn dunn_prefers_separated_clusters() {
+        let (f, a) = blobs();
+        let good = dunn_index(&f, &a, 2, Distance::Euclidean);
+        let bad = dunn_index(&f, &[0, 1, 0, 1], 2, Distance::Euclidean);
+        assert!(good > 10.0, "well separated: {good}");
+        assert!(bad < 1.0, "crossed: {bad}");
+    }
+
+    #[test]
+    fn dunn_cosine_variant_runs() {
+        let (f, a) = blobs();
+        let d = dunn_index(&f, &a, 2, Distance::Cosine);
+        assert!(d.is_finite() && d >= 0.0);
+    }
+}

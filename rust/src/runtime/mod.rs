@@ -1,0 +1,135 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts and executes them
+//! on the CPU PJRT client via the `xla` crate.
+//!
+//! Design (see DESIGN.md §Perf L3): weights are uploaded to device buffers
+//! **once** per model variant and reused across every execution — only the
+//! small data inputs (token ids, router mask) are transferred per call.
+//! This is the Rust-side analog of keeping the model resident on the GPU.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::weights::Weights;
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Arc<Self>> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Arc::new(Self { client }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo<P: AsRef<Path>>(self: &Arc<Self>, path: P) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(wrap)
+            .with_context(|| format!("parsing HLO text {}", path.as_ref().display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(Executable {
+            rt: Arc::clone(self),
+            exe,
+            name: path
+                .as_ref()
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Upload an f32 tensor to a device buffer.
+    pub fn upload_f32(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims: Vec<usize> = t.shape().to_vec();
+        self.client
+            .buffer_from_host_buffer(t.data(), &dims, None)
+            .map_err(wrap)
+    }
+
+    /// Upload an i32 tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(wrap)
+    }
+}
+
+/// A compiled executable plus its name (for logs/metrics).
+pub struct Executable {
+    rt: Arc<Runtime>,
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// Per-call data inputs (weights ride along as resident buffers).
+pub enum Input {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Upload the model weights once; returns resident buffers to pass as
+    /// the leading inputs of every subsequent `run_with`.
+    pub fn upload_weights(&self, w: &Weights) -> Result<Vec<xla::PjRtBuffer>> {
+        w.ordered().iter().map(|t| self.rt.upload_f32(t)).collect()
+    }
+
+    /// Execute with resident weight buffers + per-call data inputs.
+    /// Returns the flattened output tuple as host tensors.
+    pub fn run_with(
+        &self,
+        weights: &[xla::PjRtBuffer],
+        data: &[Input],
+    ) -> Result<Vec<Tensor>> {
+        let owned: Vec<xla::PjRtBuffer> = data
+            .iter()
+            .map(|d| match d {
+                Input::F32(t) => self.rt.upload_f32(t),
+                Input::I32(v, dims) => self.rt.upload_i32(v, dims),
+            })
+            .collect::<Result<_>>()?;
+        let bufs: Vec<&xla::PjRtBuffer> = weights.iter().chain(owned.iter()).collect();
+        let result = self.exe.execute_b(&bufs).map_err(wrap)?;
+        let out = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no device results"))?;
+        let first = out.into_iter().next().ok_or_else(|| anyhow!("empty result"))?;
+        let literal = first.to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let elems = literal.to_tuple().map_err(wrap)?;
+        elems.into_iter().map(literal_to_tensor).collect()
+    }
+}
+
+fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(wrap)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(wrap)?;
+    let data: Vec<f32> = match ty {
+        xla::ElementType::F32 => lit.to_vec::<f32>().map_err(wrap)?,
+        xla::ElementType::S32 => lit
+            .to_vec::<i32>()
+            .map_err(wrap)?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+        other => return Err(anyhow!("unsupported output element type {other:?}")),
+    };
+    Tensor::new(dims, data)
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

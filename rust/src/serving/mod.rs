@@ -1,0 +1,313 @@
+//! Serving layer: a threaded scoring server with a dynamic batcher.
+//!
+//! The paper's deployment motivation (Section 1) is memory-constrained
+//! *serving* of SMoE models; this module demonstrates the merged models on
+//! a live request path: clients submit multiple-choice scoring requests,
+//! a dynamic batcher packs rows up to the executable's batch size or a
+//! deadline (vLLM-router-style size/deadline policy), and a single executor
+//! thread owns the PJRT state (the xla handles are not `Send`, so all
+//! device interaction happens on that thread — everything else is
+//! channels).  Used by `examples/serve_merged.rs` and the Table 20
+//! throughput/latency measurements.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::calib::CalibStats;
+use crate::config::Artifacts;
+use crate::eval::log_softmax_at;
+use crate::model::ModelContext;
+use crate::pipeline::{Method, Pipeline};
+
+/// One scoring request: score `rows` (token sequences) and return the
+/// length-normalised logprob of positions [start, end) per row.
+pub struct ScoreRequest {
+    pub rows: Vec<RowSpec>,
+    pub reply: Sender<Vec<f64>>,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct RowSpec {
+    pub seq: Vec<i32>,
+    pub start: usize,
+    pub end: usize,
+}
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub rows: AtomicU64,
+    pub batches: AtomicU64,
+    pub busy_ns: AtomicU64,
+    pub queue_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            busy_s: self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            queue_s: self.queue_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rows: u64,
+    pub batches: u64,
+    pub busy_s: f64,
+    pub queue_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.busy_s > 0.0 {
+            self.rows as f64 / self.busy_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch_fill(&self, batch_size: usize) -> f64 {
+        if self.batches > 0 {
+            self.rows as f64 / (self.batches as f64 * batch_size as f64)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush when this many rows are queued (= executable batch size).
+    pub max_rows: usize,
+    /// ... or when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+/// What the executor thread should serve.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub artifacts_root: String,
+    pub model: String,
+    /// None = serve the original model; Some = compress first.
+    pub compress: Option<(Method, usize, String)>, // (method, r, calib domain)
+}
+
+pub struct ServerHandle {
+    tx: Sender<ScoreRequest>,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ServerHandle {
+    /// Submit one multiple-choice item; returns per-choice normalised
+    /// logprobs (blocking).
+    pub fn score_item(&self, prompt: &[i32], choices: &[Vec<i32>]) -> Result<Vec<f64>> {
+        let rows = choices
+            .iter()
+            .map(|ch| {
+                let mut seq = prompt.to_vec();
+                seq.extend_from_slice(ch);
+                RowSpec { seq: seq.clone(), start: prompt.len(), end: seq.len() }
+            })
+            .collect();
+        let (reply, rx) = channel();
+        self.tx
+            .send(ScoreRequest { rows, reply, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn sender(&self) -> Sender<ScoreRequest> {
+        self.tx.clone()
+    }
+
+    /// Stop the server and join the executor thread. Robust against
+    /// still-alive cloned senders: an explicit stop flag breaks the
+    /// executor loop even if the channel never disconnects.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+/// Start the executor thread. All PJRT state lives inside it.
+pub fn serve(spec: ServeSpec, batcher: BatcherConfig) -> Result<ServerHandle> {
+    let (tx, rx) = channel::<ScoreRequest>();
+    let metrics = Arc::new(Metrics::default());
+    let m2 = Arc::clone(&metrics);
+    let stop = Arc::new(AtomicBool::new(false));
+    let s2 = Arc::clone(&stop);
+    let join = std::thread::Builder::new()
+        .name("hcsmoe-executor".into())
+        .spawn(move || executor_loop(spec, batcher, rx, m2, s2))?;
+    Ok(ServerHandle { tx, metrics, stop, join: Some(join) })
+}
+
+fn executor_loop(
+    spec: ServeSpec,
+    batcher: BatcherConfig,
+    rx: Receiver<ScoreRequest>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let arts = Artifacts::new(&spec.artifacts_root);
+    let ctx = ModelContext::load(&arts, &spec.model)?;
+    let model = match &spec.compress {
+        None => ctx.load_original()?,
+        Some((method, r, domain)) => {
+            let stats: CalibStats = ctx.calibrate(domain)?;
+            let plan = Pipeline::new(method.clone()).plan(&ctx, &stats, *r)?;
+            plan.apply(&ctx, &stats)?.load(&ctx)?
+        }
+    };
+    let (bsz, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+
+    // pending rows with backrefs: (request-id, row-in-request)
+    struct Pending {
+        req: ScoreRequest,
+        scores: Vec<f64>,
+        remaining: usize,
+    }
+    let mut pendings: Vec<Pending> = Vec::new();
+    let mut queue: Vec<(usize, usize, RowSpec)> = Vec::new(); // (pending idx, row idx, row)
+
+    let flush = |pendings: &mut Vec<Pending>,
+                 queue: &mut Vec<(usize, usize, RowSpec)>|
+     -> Result<()> {
+        while !queue.is_empty() {
+            let take = queue.len().min(bsz);
+            let chunk: Vec<_> = queue.drain(..take).collect();
+            let mut ids = vec![crate::data::vocab::PAD; bsz * t];
+            for (bi, (_, _, row)) in chunk.iter().enumerate() {
+                for (p, &tok) in row.seq.iter().enumerate().take(t) {
+                    ids[bi * t + p] = tok;
+                }
+            }
+            let t0 = Instant::now();
+            let logits = ctx.run_logits(&model, &ids)?;
+            metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            let v = logits.shape()[2];
+            let ld = logits.data();
+            for (bi, (pi, ri, row)) in chunk.iter().enumerate() {
+                let mut lp = 0f64;
+                for pos in row.start..row.end.min(t) {
+                    let lrow = &ld[(bi * t + pos - 1) * v..(bi * t + pos) * v];
+                    lp += log_softmax_at(lrow, row.seq[pos] as usize);
+                }
+                lp /= (row.end - row.start).max(1) as f64;
+                let p = &mut pendings[*pi];
+                p.scores[*ri] = lp;
+                p.remaining -= 1;
+            }
+        }
+        // deliver finished requests
+        for p in pendings.iter_mut() {
+            if p.remaining == 0 {
+                let scores = std::mem::take(&mut p.scores);
+                metrics
+                    .queue_ns
+                    .fetch_add(p.req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let _ = p.req.reply.send(scores);
+            }
+        }
+        pendings.retain(|p| p.remaining > 0);
+        Ok(())
+    };
+
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // wait for work (or shutdown)
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(req) => Some(req),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let deadline = Instant::now() + batcher.max_wait;
+        let enqueue = |req: ScoreRequest,
+                           pendings: &mut Vec<Pending>,
+                           queue: &mut Vec<(usize, usize, RowSpec)>| {
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            metrics.rows.fetch_add(req.rows.len() as u64, Ordering::Relaxed);
+            let pi = pendings.len();
+            let rows = req.rows.clone();
+            pendings.push(Pending {
+                scores: vec![0.0; rows.len()],
+                remaining: rows.len(),
+                req,
+            });
+            for (ri, row) in rows.into_iter().enumerate() {
+                queue.push((pi, ri, row));
+            }
+        };
+        if let Some(req) = first {
+            enqueue(req, &mut pendings, &mut queue);
+        }
+        // keep filling until the batch is full or the deadline passes
+        while queue.len() < batcher.max_rows {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => enqueue(req, &mut pendings, &mut queue),
+                Err(_) => break,
+            }
+        }
+        if !queue.is_empty() {
+            flush(&mut pendings, &mut queue)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_snapshot_math() {
+        let m = Metrics::default();
+        m.rows.store(64, Ordering::Relaxed);
+        m.batches.store(2, Ordering::Relaxed);
+        m.busy_ns.store(2_000_000_000, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.rows_per_sec(), 32.0);
+        assert_eq!(s.mean_batch_fill(32), 1.0);
+    }
+
+    #[test]
+    fn rowspec_construction() {
+        let prompt = [1, 2, 3];
+        let choices = vec![vec![7], vec![8, 9]];
+        let rows: Vec<RowSpec> = choices
+            .iter()
+            .map(|ch| {
+                let mut seq = prompt.to_vec();
+                seq.extend_from_slice(ch);
+                RowSpec { seq: seq.clone(), start: prompt.len(), end: seq.len() }
+            })
+            .collect();
+        assert_eq!(rows[0].end, 4);
+        assert_eq!(rows[1].end, 5);
+        assert_eq!(rows[1].start, 3);
+    }
+}

@@ -1,0 +1,141 @@
+//! Expert similarity metrics (Section 3.2.1) and distances (Eq. 5).
+//!
+//! The paper's central metric claim: **average expert outputs** capture
+//! functional equivalence better than router logits (task-biased) or
+//! flattened weights (O(3d²) memory, redundancy-dominated). All three are
+//! implemented so the Table 4/5/6 ablations can run.
+
+use anyhow::{ensure, Result};
+
+use crate::calib::LayerStats;
+use crate::tensor;
+use crate::weights::Weights;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// o_j = E_x[E_j(x)] (Eq. 4) — ours.
+    ExpertOutput,
+    /// Router-logit profile over calibration tokens (M-SMoE).
+    RouterLogits,
+    /// Flattened [Wg | Wu | Wd] concatenation.
+    Weight,
+}
+
+impl Metric {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Metric::ExpertOutput => "eo",
+            Metric::RouterLogits => "rl",
+            Metric::Weight => "weight",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "eo" | "expert-output" => Metric::ExpertOutput,
+            "rl" | "router-logits" => Metric::RouterLogits,
+            "weight" | "w" => Metric::Weight,
+            other => anyhow::bail!("unknown metric {other:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distance {
+    Euclidean,
+    Cosine,
+}
+
+/// Per-expert feature vectors for one layer under a metric.
+pub fn features(
+    metric: Metric,
+    weights: &Weights,
+    stats: &LayerStats,
+    layer: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let n = stats.counts.len();
+    match metric {
+        Metric::ExpertOutput => {
+            ensure!(stats.mean_out.shape()[0] == n);
+            Ok((0..n).map(|i| stats.mean_out.row(i).to_vec()).collect())
+        }
+        Metric::RouterLogits => Ok((0..n).map(|i| stats.rl_profile(i)).collect()),
+        Metric::Weight => (0..n)
+            .map(|i| Ok(weights.expert(layer, i)?.flat()))
+            .collect(),
+    }
+}
+
+/// Pairwise distance matrix [n, n] between feature vectors.
+pub fn distance_matrix(feats: &[Vec<f32>], dist: Distance) -> Vec<Vec<f32>> {
+    let n = feats.len();
+    let mut d = vec![vec![0f32; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = match dist {
+                Distance::Euclidean => tensor::l2_dist(&feats[i], &feats[j]),
+                Distance::Cosine => tensor::cosine_dist(&feats[i], &feats[j]),
+            };
+            d[i][j] = v;
+            d[j][i] = v;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::testutil::synthetic_grouped;
+    use crate::util::proptest;
+
+    #[test]
+    fn eo_features_match_mean_out_rows() {
+        let st = synthetic_grouped(4, 6, &[vec![0, 1], vec![2, 3]], 0.0, 1);
+        let w = Weights::new(Default::default());
+        let f = features(Metric::ExpertOutput, &w, &st, 0).unwrap();
+        assert_eq!(f.len(), 4);
+        assert_eq!(f[2], st.mean_out.row(2).to_vec());
+        // grouped experts have identical features at zero noise
+        assert_eq!(f[0], f[1]);
+        assert_ne!(f[0], f[2]);
+    }
+
+    #[test]
+    fn distance_matrix_properties() {
+        proptest::check("dist-matrix", 3, 20, |rng| {
+            let n = 2 + rng.below(6);
+            let d = 3 + rng.below(5);
+            let feats: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+                .collect();
+            for dist in [Distance::Euclidean, Distance::Cosine] {
+                let m = distance_matrix(&feats, dist);
+                for i in 0..n {
+                    proptest::ensure(m[i][i] == 0.0, "diagonal zero")?;
+                    for j in 0..n {
+                        proptest::ensure(m[i][j] == m[j][i], "symmetry")?;
+                        proptest::ensure(
+                            m[i][j] >= -1e-6,
+                            format!("non-negative, got {}", m[i][j]),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rl_profile_extraction() {
+        let mut st = synthetic_grouped(3, 4, &[vec![0], vec![1], vec![2]], 0.0, 2);
+        // rl_sub [t_sub=16, n=3]: fill with token*10 + expert
+        let (t, n) = (16, 3);
+        let data: Vec<f32> = (0..t * n).map(|i| ((i / n) * 10 + i % n) as f32).collect();
+        st.rl_sub = crate::tensor::Tensor::new(vec![t, n], data).unwrap();
+        let p1 = st.rl_profile(1);
+        assert_eq!(p1.len(), t);
+        assert_eq!(p1[0], 1.0);
+        assert_eq!(p1[3], 31.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Dense f32 tensor with the small linear-algebra surface the compression
+//! algorithms need (no BLAS offline; sizes here are tiny — n_experts ≤ 64,
+//! d/m ≤ a few hundred — so simple loops suffice, with a blocked matmul for
+//! the ZipIt/Fix-Dom correlation path).
+
+use std::fmt;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {shape:?} wants {n} elems, got {}", data.len()));
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(anyhow!("cannot reshape {:?} to {shape:?}", self.shape));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2, "row() needs 2-D");
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Sub-tensor at leading index `i` (e.g. expert slice of [n, d, m]).
+    pub fn index(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Write `src` into leading index `i`.
+    pub fn set_index(&mut self, i: usize, src: &Tensor) {
+        let inner: usize = self.shape[1..].iter().product();
+        assert_eq!(src.len(), inner, "set_index size mismatch");
+        self.data[i * inner..(i + 1) * inner].copy_from_slice(&src.data);
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.shape, other.shape, "add_scaled shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// Weighted sum of tensors (the merging primitive: Ê = Σ α_j E_j).
+pub fn weighted_sum(tensors: &[&Tensor], weights: &[f32]) -> Result<Tensor> {
+    if tensors.is_empty() || tensors.len() != weights.len() {
+        return Err(anyhow!("weighted_sum needs matching non-empty inputs"));
+    }
+    let mut out = Tensor::zeros(tensors[0].shape().to_vec());
+    for (t, &w) in tensors.iter().zip(weights) {
+        out.add_scaled(t, w);
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------------------
+// Vector helpers over &[f32] (similarity metrics, clustering)
+// --------------------------------------------------------------------------
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+}
+
+pub fn cosine_sim(a: &[f32], b: &[f32]) -> f32 {
+    let na = dot(a, a).sqrt();
+    let nb = dot(b, b).sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+pub fn cosine_dist(a: &[f32], b: &[f32]) -> f32 {
+    1.0 - cosine_sim(a, b)
+}
+
+/// C[M,N] = A[M,K] @ B[K,N], simple ikj loop (cache-friendly) — only used on
+/// small correlation matrices in the merging path.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Pearson correlation matrix between rows of X [p, t] and rows of Y [q, t].
+pub fn corr_matrix(x: &[f32], y: &[f32], p: usize, q: usize, t: usize) -> Vec<f32> {
+    assert_eq!(x.len(), p * t);
+    assert_eq!(y.len(), q * t);
+    let norm = |v: &[f32]| -> (Vec<f32>, Vec<f32>) {
+        let rows = v.len() / t;
+        let mut centered = vec![0.0f32; v.len()];
+        let mut inv_norm = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &v[r * t..(r + 1) * t];
+            let mean = row.iter().sum::<f32>() / t as f32;
+            let dst = &mut centered[r * t..(r + 1) * t];
+            for (d, s) in dst.iter_mut().zip(row) {
+                *d = s - mean;
+            }
+            let nrm = dot(dst, dst).sqrt();
+            inv_norm[r] = if nrm > 1e-12 { 1.0 / nrm } else { 0.0 };
+        }
+        (centered, inv_norm)
+    };
+    let (xc, xn) = norm(x);
+    let (yc, yn) = norm(y);
+    let mut c = vec![0.0f32; p * q];
+    for i in 0..p {
+        let xi = &xc[i * t..(i + 1) * t];
+        for j in 0..q {
+            let yj = &yc[j * t..(j + 1) * t];
+            c[i * q + j] = dot(xi, yj) * xn[i] * yn[j];
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.index(1).data(), &[4., 5., 6.]);
+        let mut t2 = t.clone();
+        t2.set_index(0, &Tensor::from_vec(vec![7., 8., 9.]));
+        assert_eq!(t2.row(0), &[7., 8., 9.]);
+    }
+
+    #[test]
+    fn weighted_sum_merging() {
+        let a = Tensor::from_vec(vec![1.0, 0.0]);
+        let b = Tensor::from_vec(vec![0.0, 1.0]);
+        let m = weighted_sum(&[&a, &b], &[0.25, 0.75]).unwrap();
+        assert_eq!(m.data(), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        assert!((l2_dist(&a, &b) - 2f32.sqrt()).abs() < 1e-6);
+        assert!(cosine_sim(&a, &b).abs() < 1e-6);
+        assert!((cosine_dist(&a, &a)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn corr_perfect() {
+        // row correlated with itself = 1, with its negation = -1
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [-1.0f32, -2.0, -3.0, -4.0];
+        let c = corr_matrix(&x, &y, 1, 1, 4);
+        assert!((c[0] + 1.0).abs() < 1e-5);
+        let c2 = corr_matrix(&x, &x, 1, 1, 4);
+        assert!((c2[0] - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal `key = value` file parser, the manifest/config interchange with
+//! the Python build step (serde/toml are unavailable offline).
+//!
+//! Grammar: one `key = value` per line; `#` comments; blank lines ignored.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct KvFile {
+    map: BTreeMap<String, String>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`: {line:?}", i + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { map })
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.map
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.parse().with_context(|| format!("parsing {key} as usize"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.parse().with_context(|| format!("parsing {key} as f64"))
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        match self.get(key)? {
+            "1" | "true" | "True" => Ok(true),
+            "0" | "false" | "False" => Ok(false),
+            other => Err(anyhow!("cannot parse {other:?} as bool")),
+        }
+    }
+
+    pub fn list(&self, key: &str) -> Result<Vec<String>> {
+        Ok(self
+            .get(key)?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect())
+    }
+
+    pub fn usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.list(key)?
+            .iter()
+            .map(|s| s.parse().with_context(|| format!("parsing {key} list")))
+            .collect()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let kv = KvFile::parse("a = 1\n# comment\nb = hello world\nlist = x,y , z\n").unwrap();
+        assert_eq!(kv.usize("a").unwrap(), 1);
+        assert_eq!(kv.get("b").unwrap(), "hello world");
+        assert_eq!(kv.list("list").unwrap(), vec!["x", "y", "z"]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(KvFile::parse("no equals sign").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let kv = KvFile::parse("a = 1").unwrap();
+        assert!(kv.get("b").is_err());
+        assert_eq!(kv.get_or("b", "z"), "z");
+    }
+
+    #[test]
+    fn bool_and_float() {
+        let kv = KvFile::parse("t = 1\nf = false\nx = 1.5").unwrap();
+        assert!(kv.bool("t").unwrap());
+        assert!(!kv.bool("f").unwrap());
+        assert_eq!(kv.f64("x").unwrap(), 1.5);
+    }
+}

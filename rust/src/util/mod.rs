@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic RNG, key=value parsing,
+//! timing helpers and a shrink-free property-test runner.
+//!
+//! The offline crate set has no `rand`/`criterion`/`proptest`, so these are
+//! hand-rolled (see DESIGN.md "Offline-environment notes").
+
+pub mod kv;
+pub mod proptest;
+pub mod rng;
+pub mod timing;
+
+pub use kv::KvFile;
+pub use rng::Rng;
+pub use timing::{bench_median, Timer};

@@ -1,0 +1,60 @@
+//! A tiny property-test runner (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` seeded random cases and reports the
+//! first failing seed so a failure is reproducible with a unit test.
+
+use super::rng::Rng;
+
+/// Run `prop` over `n` cases seeded from `base_seed`. Panics with the
+/// failing case seed on the first failure.
+pub fn check<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
+    name: &str,
+    base_seed: u64,
+    n: usize,
+    mut prop: F,
+) {
+    for case in 0..n {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x517CC1B727220A95);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience assertion helpers returning Result for use inside `check`.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> std::result::Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn approx_eq(a: f32, b: f32, tol: f32, ctx: &str) -> std::result::Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("add-commutes", 1, 50, |rng| {
+            let a = rng.next_f32();
+            let b = rng.next_f32();
+            approx_eq(a + b, b + a, 1e-6, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_bad_property() {
+        check("always-false", 2, 5, |_| Err("nope".into()));
+    }
+}

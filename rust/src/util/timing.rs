@@ -1,0 +1,80 @@
+//! Timing helpers for the bench harness (criterion is unavailable offline).
+
+use std::time::{Duration, Instant};
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Statistics from a median-of-N measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+    pub iters: usize,
+}
+
+/// Median-of-N wallclock benchmark with warmup — the harness every
+/// `rust/benches/*` target uses for latency/throughput rows.
+pub fn bench_median<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    BenchStats {
+        median_s: samples[samples.len() / 2],
+        mean_s: mean,
+        min_s: samples[0],
+        max_s: *samples.last().unwrap(),
+        std_s: var.sqrt(),
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let mut n = 0u64;
+        let st = bench_median(2, 5, || {
+            n += 1;
+            std::hint::black_box(n);
+        });
+        assert_eq!(n, 7);
+        assert!(st.min_s <= st.median_s && st.median_s <= st.max_s);
+    }
+}

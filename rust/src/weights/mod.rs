@@ -1,0 +1,301 @@
+//! Model weights: HCWT binary IO (shared format with `python/compile/export.py`)
+//! plus the expert-level accessors the merging/pruning algorithms operate on.
+//!
+//! Tensor order inside the file is sorted-by-name — the exact order the HLO
+//! parameters were lowered in, so `Weights::ordered()` can be fed straight
+//! into `runtime::Executable::run`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+
+use crate::config::ModelCfg;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"HCWT";
+
+/// Expert weight triple (Eq. 2): gate / up / down matrices.
+#[derive(Clone, Debug)]
+pub struct ExpertWeights {
+    pub wg: Tensor, // [d, m]
+    pub wu: Tensor, // [d, m]
+    pub wd: Tensor, // [m, d]
+}
+
+impl ExpertWeights {
+    /// Flattened concatenation [Wg | Wu | Wd] — the paper's "weight" metric.
+    pub fn flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.wg.len() + self.wu.len() + self.wd.len());
+        v.extend_from_slice(self.wg.data());
+        v.extend_from_slice(self.wu.data());
+        v.extend_from_slice(self.wd.data());
+        v
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Weights {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn new(map: BTreeMap<String, Tensor>) -> Self {
+        Self { map }
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = std::io::Cursor::new(bytes);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic {magic:?}");
+        }
+        let version = r.read_u32::<LittleEndian>()?;
+        if version != 1 {
+            bail!("unsupported HCWT version {version}");
+        }
+        let n = r.read_u32::<LittleEndian>()? as usize;
+        let mut metas = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nl = r.read_u32::<LittleEndian>()? as usize;
+            let mut nb = vec![0u8; nl];
+            r.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let ndim = r.read_u32::<LittleEndian>()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.read_u32::<LittleEndian>()? as usize);
+            }
+            metas.push((name, dims));
+        }
+        let mut map = BTreeMap::new();
+        for (name, dims) in metas {
+            let count: usize = dims.iter().product();
+            let mut data = vec![0f32; count];
+            r.read_f32_into::<LittleEndian>(&mut data)?;
+            map.insert(name, Tensor::new(dims, data)?);
+        }
+        Ok(Self { map })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_u32::<LittleEndian>(1)?;
+        w.write_u32::<LittleEndian>(self.map.len() as u32)?;
+        for (name, t) in &self.map {
+            w.write_u32::<LittleEndian>(name.len() as u32)?;
+            w.write_all(name.as_bytes())?;
+            w.write_u32::<LittleEndian>(t.shape().len() as u32)?;
+            for &d in t.shape() {
+                w.write_u32::<LittleEndian>(d as u32)?;
+            }
+        }
+        for t in self.map.values() {
+            for &x in t.data() {
+                w.write_f32::<LittleEndian>(x)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map.get_mut(name).ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+
+    pub fn insert(&mut self, name: String, t: Tensor) {
+        self.map.insert(name, t);
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Tensors in sorted-name order (the HLO parameter order).
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        self.map.values().collect()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Total bytes (f32).
+    pub fn byte_size(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    // -- expert accessors ---------------------------------------------------
+
+    fn layer_key(layer: usize, suffix: &str) -> String {
+        format!("layer{layer:02}.{suffix}")
+    }
+
+    pub fn expert(&self, layer: usize, idx: usize) -> Result<ExpertWeights> {
+        Ok(ExpertWeights {
+            wg: self.get(&Self::layer_key(layer, "exp.wg"))?.index(idx),
+            wu: self.get(&Self::layer_key(layer, "exp.wu"))?.index(idx),
+            wd: self.get(&Self::layer_key(layer, "exp.wd"))?.index(idx),
+        })
+    }
+
+    pub fn set_expert(&mut self, layer: usize, idx: usize, e: &ExpertWeights) -> Result<()> {
+        self.get_mut(&Self::layer_key(layer, "exp.wg"))?.set_index(idx, &e.wg);
+        self.get_mut(&Self::layer_key(layer, "exp.wu"))?.set_index(idx, &e.wu);
+        self.get_mut(&Self::layer_key(layer, "exp.wd"))?.set_index(idx, &e.wd);
+        Ok(())
+    }
+
+    pub fn router(&self, layer: usize) -> Result<&Tensor> {
+        self.get(&Self::layer_key(layer, "router"))
+    }
+
+    /// Router weight column for one expert (W_R[:, i]) — used by the
+    /// "weight" variant of the router-logits metric discussions.
+    pub fn router_column(&self, layer: usize, idx: usize) -> Result<Vec<f32>> {
+        let r = self.router(layer)?;
+        let (d, n) = (r.shape()[0], r.shape()[1]);
+        anyhow::ensure!(idx < n, "expert {idx} out of range {n}");
+        Ok((0..d).map(|i| r.data()[i * n + idx]).collect())
+    }
+
+    /// Number of experts (from the layer-0 gate tensor).
+    pub fn n_experts(&self) -> Result<usize> {
+        Ok(self.get("layer00.exp.wg")?.shape()[0])
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.map
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix("layer")
+                    .and_then(|s| s.get(..2))
+                    .and_then(|s| s.parse::<usize>().ok())
+            })
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0)
+    }
+
+    /// Build the compact r-expert weight set for `lm_logits_*_r{r}`:
+    /// keeps `keep[l]` expert slots per layer in the given order.
+    pub fn to_compact(&self, cfg: &ModelCfg, keep: &[Vec<usize>]) -> Result<Weights> {
+        let r = keep[0].len();
+        anyhow::ensure!(
+            keep.iter().all(|k| k.len() == r),
+            "compact variant needs a uniform expert count per layer"
+        );
+        let mut out = self.map.clone();
+        for (l, keep_l) in keep.iter().enumerate().take(cfg.n_layer) {
+            for suffix in ["exp.wg", "exp.wu", "exp.wd"] {
+                let full = self.get(&Self::layer_key(l, suffix))?;
+                let mut sh = full.shape().to_vec();
+                sh[0] = r;
+                let mut t = Tensor::zeros(sh);
+                for (slot, &orig) in keep_l.iter().enumerate() {
+                    t.set_index(slot, &full.index(orig));
+                }
+                out.insert(Self::layer_key(l, suffix), t);
+            }
+        }
+        Ok(Weights { map: out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_weights() -> Weights {
+        let mut map = BTreeMap::new();
+        map.insert("embed".into(), Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect()).unwrap());
+        for l in 0..2 {
+            let pre = format!("layer{l:02}.");
+            map.insert(
+                format!("{pre}exp.wg"),
+                Tensor::new(vec![3, 2, 2], (0..12).map(|x| x as f32).collect()).unwrap(),
+            );
+            map.insert(
+                format!("{pre}exp.wu"),
+                Tensor::new(vec![3, 2, 2], (0..12).map(|x| (x * 2) as f32).collect()).unwrap(),
+            );
+            map.insert(
+                format!("{pre}exp.wd"),
+                Tensor::new(vec![3, 2, 2], (0..12).map(|x| (x * 3) as f32).collect()).unwrap(),
+            );
+            map.insert(
+                format!("{pre}router"),
+                Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap(),
+            );
+        }
+        Weights::new(map)
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let w = tiny_weights();
+        let tmp = std::env::temp_dir().join("hcwt_test.hcwt");
+        w.save(&tmp).unwrap();
+        let w2 = Weights::load(&tmp).unwrap();
+        assert_eq!(w.len(), w2.len());
+        for name in w.names() {
+            assert_eq!(w.get(name).unwrap(), w2.get(name).unwrap(), "{name}");
+        }
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn expert_accessors() {
+        let mut w = tiny_weights();
+        let e = w.expert(0, 1).unwrap();
+        assert_eq!(e.wg.shape(), &[2, 2]);
+        assert_eq!(e.wg.data(), &[4., 5., 6., 7.]);
+        let mut e2 = e.clone();
+        e2.wg.scale(0.0);
+        w.set_expert(0, 1, &e2).unwrap();
+        assert_eq!(w.expert(0, 1).unwrap().wg.data(), &[0., 0., 0., 0.]);
+        assert_eq!(w.n_experts().unwrap(), 3);
+        assert_eq!(w.n_layers(), 2);
+    }
+
+    #[test]
+    fn router_column_extraction() {
+        let w = tiny_weights();
+        // router is [2, 3] row-major: [[0,1,2],[3,4,5]]; column 1 = [1, 4]
+        assert_eq!(w.router_column(0, 1).unwrap(), vec![1.0, 4.0]);
+        assert!(w.router_column(0, 5).is_err());
+    }
+
+    #[test]
+    fn flat_concat_order() {
+        let w = tiny_weights();
+        let e = w.expert(1, 0).unwrap();
+        let f = e.flat();
+        assert_eq!(f.len(), 12);
+        assert_eq!(&f[..4], e.wg.data());
+        assert_eq!(&f[4..8], e.wu.data());
+        assert_eq!(&f[8..], e.wd.data());
+    }
+}

@@ -1,0 +1,265 @@
+//! Integration tests over the real AOT artifacts: the PJRT runtime, the
+//! compression pipeline end to end, and the runtime identities the design
+//! rests on. Requires `make artifacts` (skipped gracefully otherwise).
+
+use hc_smoe::calib::CalibStats;
+use hc_smoe::clustering::{KmeansInit, Linkage};
+use hc_smoe::config::Artifacts;
+use hc_smoe::data::TokenStream;
+use hc_smoe::eval::Evaluator;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::{Method, Pipeline, PlanKind};
+use hc_smoe::similarity::Metric;
+
+fn ctx() -> Option<ModelContext> {
+    let arts = Artifacts::discover();
+    if !arts.root.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ModelContext::load(&arts, "mixsim").expect("load mixsim"))
+}
+
+fn hc_method() -> Method {
+    Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    }
+}
+
+#[test]
+fn logits_shape_and_finiteness() {
+    let Some(ctx) = ctx() else { return };
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let model = ctx.load_original().unwrap();
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 200) as i32).collect();
+    let logits = ctx.run_logits(&model, &ids).unwrap();
+    assert_eq!(logits.shape(), &[b, t, ctx.cfg.vocab]);
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn logits_deterministic_across_runs() {
+    let Some(ctx) = ctx() else { return };
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let model = ctx.load_original().unwrap();
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 101) as i32).collect();
+    let a = ctx.run_logits(&model, &ids).unwrap();
+    let b2 = ctx.run_logits(&model, &ids).unwrap();
+    assert_eq!(a.data(), b2.data());
+}
+
+#[test]
+fn calibration_stats_are_consistent() {
+    let Some(ctx) = ctx() else { return };
+    let stats = ctx.calibrate("general").unwrap();
+    assert_eq!(stats.n_layers(), ctx.cfg.n_layer);
+    assert_eq!(stats.n_experts(), ctx.cfg.n_exp);
+    for l in &stats.layers {
+        // every token routes to exactly k experts
+        let total: f32 = l.counts.iter().sum();
+        assert!((total - (stats.n_tokens * ctx.cfg.k) as f32).abs() < 1.0);
+        // mean outputs are finite and non-degenerate
+        assert!(l.mean_out.data().iter().all(|x| x.is_finite()));
+        assert!(l.mean_out.l2_norm() > 0.0);
+    }
+}
+
+#[test]
+fn merged_model_keeps_router_and_changes_experts() {
+    let Some(ctx) = ctx() else { return };
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, 4).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    // Fig. 3: router untouched
+    for l in 0..ctx.cfg.n_layer {
+        assert_eq!(
+            ctx.base.router(l).unwrap().data(),
+            cm.weights.router(l).unwrap().data(),
+            "router must be unchanged"
+        );
+    }
+    // all members of a group share identical expert weights
+    let PlanKind::Merge { groups, .. } = &cm.plan.kind else { panic!("merge plan") };
+    for (l, layer_groups) in groups.iter().enumerate() {
+        for g in layer_groups {
+            let first = cm.weights.expert(l, g[0]).unwrap();
+            for &e in &g[1..] {
+                let other = cm.weights.expert(l, e).unwrap();
+                assert_eq!(first.wg.data(), other.wg.data());
+            }
+        }
+        let covered: usize = layer_groups.iter().map(|g| g.len()).sum();
+        assert_eq!(covered, ctx.cfg.n_exp, "partition covers all experts");
+    }
+    // merging must actually change outputs vs the original
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 150) as i32).collect();
+    let orig = ctx.load_original().unwrap();
+    let merged = cm.load(&ctx).unwrap();
+    let a = ctx.run_logits(&orig, &ids).unwrap();
+    let b2 = ctx.run_logits(&merged, &ids).unwrap();
+    assert_ne!(a.data(), b2.data());
+}
+
+#[test]
+fn r_equals_n_merge_is_identity() {
+    let Some(ctx) = ctx() else { return };
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, ctx.cfg.n_exp).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 120) as i32).collect();
+    let orig = ctx.load_original().unwrap();
+    let merged = cm.load(&ctx).unwrap();
+    let a = ctx.run_logits(&orig, &ids).unwrap();
+    let b2 = ctx.run_logits(&merged, &ids).unwrap();
+    for (x, y) in a.data().iter().zip(b2.data()) {
+        assert!((x - y).abs() < 1e-5, "identity merge must not change logits");
+    }
+}
+
+#[test]
+fn pruning_reroutes_to_survivors() {
+    let Some(ctx) = ctx() else { return };
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(Method::SPrune).plan(&ctx, &stats, 4).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let PlanKind::Prune { keep } = &cm.plan.kind else { panic!("prune plan") };
+    // weights untouched; only the mask changes
+    assert_eq!(
+        ctx.base.expert(0, 0).unwrap().wg.data(),
+        cm.weights.expert(0, 0).unwrap().wg.data()
+    );
+    let total: usize = keep.iter().map(|k| k.len()).sum();
+    assert_eq!(total, 4 * ctx.cfg.n_layer, "dynamic budget preserves the average");
+    for (l, kept) in keep.iter().enumerate() {
+        for e in 0..ctx.cfg.n_exp {
+            let masked = cm.mask[l * ctx.cfg.n_exp + e] < -1e20;
+            assert_eq!(masked, !kept.contains(&e));
+        }
+    }
+}
+
+#[test]
+fn compact_export_matches_duplicated_layout() {
+    let Some(ctx) = ctx() else { return };
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, 4).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let (cw, remap) = cm.to_compact(&ctx).unwrap();
+    assert_eq!(cw.n_experts().unwrap(), 4);
+    assert!(remap.iter().all(|&s| (0..4).contains(&s)));
+    // Run both paths on the same batch. They are NOT bit-identical: each
+    // path drops tokens at its own capacity hotspots (the full layout keeps
+    // one queue per duplicated slot; compact folds a group into one queue
+    // with 2x headroom). Functional equivalence is asserted at the
+    // distribution level: high logit cosine similarity + top-1 agreement.
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 180) as i32).collect();
+    let merged = cm.load(&ctx).unwrap();
+    let full = ctx.run_logits(&merged, &ids).unwrap();
+    let compact = ctx.load_compact(4, &cw, remap, "compact").unwrap();
+    let comp = ctx.run_logits_compact(&compact, &ids).unwrap();
+    let v = full.shape()[2];
+    let mut cos_sum = 0f64;
+    let mut top1_agree = 0usize;
+    let rows = b * t;
+    for i in 0..rows {
+        let rf = &full.data()[i * v..(i + 1) * v];
+        let rc = &comp.data()[i * v..(i + 1) * v];
+        cos_sum += hc_smoe::tensor::cosine_sim(rf, rc) as f64;
+        let am = |r: &[f32]| {
+            r.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        if am(rf) == am(rc) {
+            top1_agree += 1;
+        }
+    }
+    let cos = cos_sum / rows as f64;
+    let agree = top1_agree as f64 / rows as f64;
+    assert!(cos > 0.82, "compact/full logit cosine only {cos:.4}");
+    assert!(agree > 0.78, "compact/full top-1 agreement only {agree:.4}");
+}
+
+#[test]
+fn evaluator_beats_chance_on_learned_task_and_respects_bounds() {
+    let Some(ctx) = ctx() else { return };
+    let ev = Evaluator::new(&ctx).unwrap();
+    let model = ctx.load_original().unwrap();
+    let acc = ev.accuracy(&model, "hella").unwrap();
+    assert!(acc > 0.4, "original model must beat chance on hella: {acc}");
+    for task in ["arc_e", "boolq"] {
+        let a = ev.accuracy(&model, task).unwrap();
+        assert!((0.0..=1.0).contains(&a));
+    }
+}
+
+#[test]
+fn perplexity_is_sane_and_degrades_under_heavy_merge() {
+    let Some(ctx) = ctx() else { return };
+    let ev = Evaluator::new(&ctx).unwrap();
+    let stream = TokenStream::load(ctx.arts.calib_tokens_path("ppl_heldout")).unwrap();
+    let orig = ctx.load_original().unwrap();
+    let p0 = ev.perplexity(&orig, &stream).unwrap();
+    assert!(p0 > 1.0 && p0 < 200.0, "original ppl {p0}");
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, 2).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let merged = cm.load(&ctx).unwrap();
+    let p1 = ev.perplexity(&merged, &stream).unwrap();
+    assert!(p1 > p0, "75% merge must not improve ppl: {p0} -> {p1}");
+}
+
+#[test]
+fn kmeans_rnd_differs_from_hc_somewhere() {
+    // the instability argument: with enough seeds K-rnd finds a different
+    // partition than deterministic HC on at least one layer
+    let Some(ctx) = ctx() else { return };
+    let stats = ctx.calibrate("general").unwrap();
+    let mut differs = false;
+    for seed in 1..6u64 {
+        let km = Pipeline::new(Method::KMeans {
+            init: KmeansInit::Random { seed },
+            metric: Metric::ExpertOutput,
+            merge: MergeStrategy::Frequency,
+        })
+        .plan(&ctx, &stats, 4)
+        .unwrap();
+        let hc = Pipeline::new(hc_method()).plan(&ctx, &stats, 4).unwrap();
+        let (PlanKind::Merge { groups: ga, .. }, PlanKind::Merge { groups: gb, .. }) =
+            (&km.kind, &hc.kind)
+        else {
+            panic!()
+        };
+        if ga != gb {
+            differs = true;
+            break;
+        }
+    }
+    assert!(differs, "expected at least one K-rnd seed to disagree with HC");
+}
+
+#[test]
+fn calib_stats_differ_across_domains() {
+    let Some(ctx) = ctx() else { return };
+    let g = ctx.calibrate("general").unwrap();
+    let m = ctx.calibrate("math").unwrap();
+    let gc = &g.layers[0].counts;
+    let mc = &m.layers[0].counts;
+    assert_ne!(gc, mc, "domain shift must move routing frequencies");
+}
+
+#[test]
+fn calib_stats_accumulate_across_batches() {
+    let Some(ctx) = ctx() else { return };
+    let ts = TokenStream::load(ctx.arts.calib_tokens_path("general")).unwrap();
+    let full = CalibStats::collect(&ctx, &ts).unwrap();
+    assert_eq!(full.n_tokens, ctx.manifest.calib_tokens());
+}

@@ -1,0 +1,201 @@
+//! Cross-module property tests over the coordinator's invariants
+//! (hand-rolled runner; proptest is unavailable offline). These run on
+//! synthetic stats — no artifacts required.
+
+use hc_smoe::calib::{CalibStats, LayerStats};
+use hc_smoe::clustering::{fcm, hierarchical, kmeans, single_shot, KmeansInit, Linkage};
+use hc_smoe::merging::{merge_cluster, FixDomFeature, MergeStrategy};
+use hc_smoe::pruning::{f_prune, layer_output_deviation, o_prune, s_prune};
+use hc_smoe::similarity::{distance_matrix, Distance};
+use hc_smoe::tensor::Tensor;
+use hc_smoe::util::proptest::{check, ensure};
+use hc_smoe::util::Rng;
+
+fn random_layer(rng: &mut Rng, n: usize, d: usize, m: usize, t_sub: usize) -> LayerStats {
+    let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    };
+    let mean = mk(rng, n * d);
+    let counts: Vec<f32> = (0..n).map(|_| 1.0 + rng.below(50) as f32).collect();
+    LayerStats {
+        mean_out: Tensor::new(vec![n, d], mean).unwrap(),
+        probs_sum: counts.clone(),
+        gate_sum: counts.clone(),
+        counts,
+        rl_sub: Tensor::new(vec![t_sub, n], mk(rng, t_sub * n)).unwrap(),
+        raw_sub: Tensor::new(vec![n, t_sub, d], mk(rng, n * t_sub * d)).unwrap(),
+        act_sub: Tensor::new(vec![n, 8, m], mk(rng, n * 8 * m)).unwrap(),
+        hid_sub: Tensor::new(vec![t_sub, d], mk(rng, t_sub * d)).unwrap(),
+    }
+}
+
+fn random_stats(rng: &mut Rng, nl: usize, n: usize) -> CalibStats {
+    CalibStats {
+        domain: "prop".into(),
+        layers: (0..nl).map(|_| random_layer(rng, n, 6, 5, 12)).collect(),
+        n_tokens: 128,
+    }
+}
+
+#[test]
+fn prop_every_clusterer_yields_valid_partitions() {
+    check("all-clusterers-partition", 100, 40, |rng| {
+        let n = 3 + rng.below(13);
+        let r = 1 + rng.below(n);
+        let feats: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..5).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let freqs: Vec<f32> = (0..n).map(|_| rng.next_f32() * 10.0).collect();
+        let d = distance_matrix(&feats, Distance::Euclidean);
+        for linkage in [Linkage::Single, Linkage::Complete, Linkage::Average] {
+            hierarchical(&d, r, linkage).validate().map_err(|e| e.to_string())?;
+        }
+        kmeans(&feats, r, KmeansInit::Random { seed: rng.next_u64() }, 30)
+            .validate()
+            .map_err(|e| e.to_string())?;
+        single_shot(&feats, &freqs, r).validate().map_err(|e| e.to_string())?;
+        let f = fcm(&feats, r, 2.0, 20, rng.next_u64());
+        for row in &f.membership {
+            let s: f32 = row.iter().sum();
+            ensure((s - 1.0).abs() < 1e-3, format!("membership row sums to {s}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_strategies_preserve_shape_and_finiteness() {
+    check("merge-shape-finite", 200, 25, |rng| {
+        let n = 4;
+        let (d, m) = (6, 5);
+        let layer = random_layer(rng, n, d, m, 12);
+        let mut map = std::collections::BTreeMap::new();
+        let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        map.insert(
+            "layer00.exp.wg".to_string(),
+            Tensor::new(vec![n, d, m], mk(rng, n * d * m)).unwrap(),
+        );
+        map.insert(
+            "layer00.exp.wu".to_string(),
+            Tensor::new(vec![n, d, m], mk(rng, n * d * m)).unwrap(),
+        );
+        map.insert(
+            "layer00.exp.wd".to_string(),
+            Tensor::new(vec![n, m, d], mk(rng, n * m * d)).unwrap(),
+        );
+        let w = hc_smoe::weights::Weights::new(map);
+        let members = vec![0usize, 2, 3];
+        for strategy in [
+            MergeStrategy::Average,
+            MergeStrategy::Frequency,
+            MergeStrategy::FixDom(FixDomFeature::Act),
+            MergeStrategy::FixDom(FixDomFeature::Weight),
+            MergeStrategy::ZipIt(FixDomFeature::Weight),
+        ] {
+            let e = merge_cluster(&w, &layer, 0, &members, strategy)
+                .map_err(|e| e.to_string())?;
+            ensure(e.wg.shape() == [d, m], "wg shape")?;
+            ensure(e.wd.shape() == [m, d], "wd shape")?;
+            ensure(
+                e.wg.data().iter().all(|x| x.is_finite()),
+                format!("{strategy:?} produced non-finite weights"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_average_merge_is_convex_combination() {
+    // every element of the average-merged expert lies within the min/max
+    // envelope of its members
+    check("merge-convex", 300, 25, |rng| {
+        let n = 3;
+        let (d, m) = (4, 3);
+        let layer = random_layer(rng, n, d, m, 8);
+        let mut map = std::collections::BTreeMap::new();
+        let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        for key in ["exp.wg", "exp.wu"] {
+            map.insert(
+                format!("layer00.{key}"),
+                Tensor::new(vec![n, d, m], mk(rng, n * d * m)).unwrap(),
+            );
+        }
+        map.insert(
+            "layer00.exp.wd".to_string(),
+            Tensor::new(vec![n, m, d], mk(rng, n * m * d)).unwrap(),
+        );
+        let w = hc_smoe::weights::Weights::new(map);
+        let members = vec![0usize, 1, 2];
+        for strategy in [MergeStrategy::Average, MergeStrategy::Frequency] {
+            let merged = merge_cluster(&w, &layer, 0, &members, strategy)
+                .map_err(|e| e.to_string())?;
+            let experts: Vec<_> = members
+                .iter()
+                .map(|&e| w.expert(0, e).unwrap())
+                .collect();
+            for i in 0..d * m {
+                let vals: Vec<f32> = experts.iter().map(|e| e.wg.data()[i]).collect();
+                let lo = vals.iter().cloned().fold(f32::MAX, f32::min) - 1e-4;
+                let hi = vals.iter().cloned().fold(f32::MIN, f32::max) + 1e-4;
+                let x = merged.wg.data()[i];
+                ensure(x >= lo && x <= hi, format!("{x} outside [{lo}, {hi}]"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pruning_budgets_and_validity() {
+    check("prune-budgets", 400, 30, |rng| {
+        let nl = 1 + rng.below(4);
+        let n = 4 + rng.below(10);
+        let k = 2;
+        let r = k + rng.below(n - k);
+        let stats = random_stats(rng, nl, n);
+        for p in [s_prune(&stats, r, k), f_prune(&stats, r, k)] {
+            p.validate(n, k).map_err(|e| e.to_string())?;
+            let total: usize = p.keep.iter().map(|x| x.len()).sum();
+            ensure(total == r * nl, format!("budget {total} != {}", r * nl))?;
+        }
+        let p = o_prune(&stats, r, k, 50, rng.next_u64());
+        p.validate(n, k).map_err(|e| e.to_string())?;
+        ensure(p.keep.iter().all(|x| x.len() == r), "o-prune is static-r")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_keeping_all_experts_has_zero_deviation() {
+    check("full-subset-zero-dev", 500, 20, |rng| {
+        let n = 3 + rng.below(6);
+        let layer = random_layer(rng, n, 5, 4, 10);
+        let all: Vec<usize> = (0..n).collect();
+        let dev = layer_output_deviation(&layer, &all, 2);
+        ensure(dev < 1e-9, format!("full subset deviation {dev}"))
+    });
+}
+
+#[test]
+fn prop_deviation_monotone_under_superset_of_top_experts() {
+    // dropping more experts can only keep-or-raise the best achievable
+    // deviation: best subset of size r+1 <= best subset of size r... checked
+    // via exhaustive enumeration on small n
+    check("deviation-monotone", 600, 10, |rng| {
+        let n = 5;
+        let layer = random_layer(rng, n, 4, 3, 8);
+        let stats = CalibStats { domain: "p".into(), layers: vec![layer], n_tokens: 8 };
+        let best_r = |r: usize| -> f64 {
+            let p = o_prune(&stats, r, 2, 100_000, 1);
+            layer_output_deviation(&stats.layers[0], &p.keep[0], 2)
+        };
+        let d3 = best_r(3);
+        let d4 = best_r(4);
+        ensure(d4 <= d3 + 1e-9, format!("larger budget worse: {d4} > {d3}"))
+    });
+}

@@ -1,0 +1,169 @@
+//! Serving-layer and evaluator integration tests: the dynamic batcher must
+//! be a *transparent* transport — scores through the server equal scores
+//! computed directly through the Evaluator — plus batching/shutdown
+//! semantics and eval-harness edge cases. Requires `make artifacts`.
+
+use std::time::Duration;
+
+use hc_smoe::config::Artifacts;
+use hc_smoe::data::Benchmark;
+use hc_smoe::eval::{log_softmax_at, Evaluator};
+use hc_smoe::model::ModelContext;
+use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+
+fn arts() -> Option<Artifacts> {
+    let a = Artifacts::discover();
+    if a.root.join("manifest.txt").exists() {
+        Some(a)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn spec(arts: &Artifacts) -> ServeSpec {
+    ServeSpec {
+        artifacts_root: arts.root.to_string_lossy().into_owned(),
+        model: "mixsim".into(),
+        compress: None,
+    }
+}
+
+#[test]
+fn server_scores_match_direct_evaluation() {
+    let Some(arts) = arts() else { return };
+    let ctx = ModelContext::load(&arts, "mixsim").unwrap();
+    let bench = Benchmark::load(arts.benchmark("arc_e")).unwrap();
+    let handle = serve(
+        spec(&arts),
+        BatcherConfig { max_rows: ctx.manifest.eval_b, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    // direct path
+    let ev = Evaluator::new(&ctx).unwrap();
+    let model = ctx.load_original().unwrap();
+    let direct = ev.score_benchmark(&model, &bench).unwrap();
+    // served path: same argmax predictions on the first items
+    for (ii, item) in bench.items.iter().take(8).enumerate() {
+        let scores = handle.score_item(&item.prompt, &item.choices).unwrap();
+        let pred = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(pred, direct.predictions[ii], "item {ii} prediction differs");
+    }
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn batcher_packs_concurrent_requests() {
+    let Some(arts) = arts() else { return };
+    let handle = serve(
+        spec(&arts),
+        BatcherConfig { max_rows: 32, max_wait: Duration::from_millis(30) },
+    )
+    .unwrap();
+    let bench = Benchmark::load(arts.benchmark("boolq")).unwrap();
+    let n_clients = 8;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let tx = handle.sender();
+            let item = bench.items[c].clone();
+            s.spawn(move || {
+                let rows = item
+                    .choices
+                    .iter()
+                    .map(|ch| {
+                        let mut seq = item.prompt.clone();
+                        seq.extend_from_slice(ch);
+                        hc_smoe::serving::RowSpec {
+                            start: item.prompt.len(),
+                            end: seq.len(),
+                            seq,
+                        }
+                    })
+                    .collect();
+                let (reply, rx) = std::sync::mpsc::channel();
+                tx.send(hc_smoe::serving::ScoreRequest {
+                    rows,
+                    reply,
+                    enqueued: std::time::Instant::now(),
+                })
+                .unwrap();
+                let scores = rx.recv().unwrap();
+                assert_eq!(scores.len(), 2);
+                assert!(scores.iter().all(|s| s.is_finite() && *s <= 0.0));
+            });
+        }
+    });
+    let snap = handle.metrics.snapshot();
+    handle.shutdown().unwrap();
+    assert_eq!(snap.requests, n_clients as u64);
+    assert_eq!(snap.rows, (n_clients * 2) as u64);
+    // 16 rows with a 30ms window should need at most a few device batches
+    assert!(
+        snap.batches < n_clients as u64,
+        "batcher failed to pack: {} batches for {} requests",
+        snap.batches,
+        n_clients
+    );
+}
+
+#[test]
+fn shutdown_joins_cleanly_and_rejects_after() {
+    let Some(arts) = arts() else { return };
+    let handle = serve(
+        spec(&arts),
+        BatcherConfig { max_rows: 32, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let tx = handle.sender();
+    handle.shutdown().unwrap();
+    // the executor is gone; sends eventually error (channel disconnected)
+    let (reply, _rx) = std::sync::mpsc::channel();
+    let r = tx.send(hc_smoe::serving::ScoreRequest {
+        rows: vec![],
+        reply,
+        enqueued: std::time::Instant::now(),
+    });
+    assert!(r.is_err(), "sender must observe disconnection after shutdown");
+}
+
+#[test]
+fn evaluator_scores_are_valid_logprobs() {
+    let Some(arts) = arts() else { return };
+    let ctx = ModelContext::load(&arts, "mixsim").unwrap();
+    let ev = Evaluator::new(&ctx).unwrap();
+    let model = ctx.load_original().unwrap();
+    let bench = Benchmark::load(arts.benchmark("rte")).unwrap();
+    let ts = ev.score_benchmark(&model, &bench).unwrap();
+    assert_eq!(ts.predictions.len(), bench.items.len());
+    assert_eq!(ts.golds.len(), bench.items.len());
+    assert!(ts.predictions.iter().all(|&p| p < bench.n_choices));
+    let recomputed = ts
+        .predictions
+        .iter()
+        .zip(&ts.golds)
+        .filter(|(p, g)| p == g)
+        .count() as f64
+        / bench.items.len() as f64;
+    assert!((recomputed - ts.accuracy).abs() < 1e-12);
+}
+
+#[test]
+fn log_softmax_row_sums_to_one_in_prob_space() {
+    let row: Vec<f32> = (0..50).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+    let total: f64 = (0..row.len()).map(|t| log_softmax_at(&row, t).exp()).sum();
+    assert!((total - 1.0).abs() < 1e-9, "sum {total}");
+}
+
+#[test]
+fn scoring_is_length_normalised() {
+    // two choices with identical per-token logprob but different lengths
+    // must tie under the normalised metric: verify via the formula itself
+    let lp_short = -1.2f64; // one token at -1.2
+    let lp_long = -2.4f64; // two tokens at -1.2 each
+    assert!((lp_short / 1.0 - lp_long / 2.0).abs() < 1e-12);
+}
