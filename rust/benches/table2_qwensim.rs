@@ -1,9 +1,13 @@
 //! Table 2: zero-shot comparison on the Qwen analog (qwensim, n=16) —
 //! original vs all methods at 25% (r=12) and 50% (r=8) expert reduction.
 
-use hc_smoe::bench_support::{paper_methods, push_row, task_table, Lab, PAPER_TASKS};
+use hc_smoe::bench_support::{self, paper_methods, push_row, task_table, Lab, PAPER_TASKS};
 
 fn main() -> anyhow::Result<()> {
+    if bench_support::smoke() {
+        // CI bench-smoke job: exercise the harness without artifacts.
+        return bench_support::run_smoke("table2_qwensim");
+    }
     let lab = Lab::new("qwensim")?;
     let mut table = task_table(
         "Table 2 analog — qwensim (n=16), C4-analog calibration",

@@ -23,6 +23,113 @@ use crate::pipeline::{CompressedModel, Method, Pipeline};
 pub const PAPER_TASKS: [&str; 8] =
     ["arc_e", "arc_c", "boolq", "hella", "mmlu", "obqa", "rte", "wino"];
 
+/// Smoke/dry-run mode for CI: `HCSMOE_BENCH_SMOKE=1` makes bench targets
+/// exercise their harness on synthetic statistics (no artifacts, no PJRT)
+/// and exit quickly — catching bench-harness bitrot without paying full
+/// bench cost.
+pub fn smoke() -> bool {
+    std::env::var("HCSMOE_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The artifact-free smoke workload: run the similarity → distance →
+/// clustering → merging chain on synthetic grouped statistics, render a
+/// table through the report path, and validate every partition. Exercises
+/// the same library surface the real bench targets drive.
+pub fn run_smoke(target: &str) -> Result<()> {
+    use crate::clustering::{hierarchical, Linkage};
+    use crate::merging::{merge_cluster, MergeStrategy};
+    use crate::similarity::{distance_matrix, Distance};
+    use crate::tensor::Tensor;
+
+    let (n, d, m) = (16usize, 32usize, 8usize);
+    let groups: Vec<Vec<usize>> = (0..n / 2).map(|g| vec![2 * g, 2 * g + 1]).collect();
+    let stats = crate::calib::synthetic::synthetic_grouped(n, d, &groups, 0.01, 42);
+    let mut map = std::collections::BTreeMap::new();
+    let mut rng = crate::util::Rng::new(7);
+    let mut mk = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() as f32).collect() };
+    map.insert("layer00.exp.wg".to_string(), Tensor::new(vec![n, d, m], mk(n * d * m))?);
+    map.insert("layer00.exp.wu".to_string(), Tensor::new(vec![n, d, m], mk(n * d * m))?);
+    map.insert("layer00.exp.wd".to_string(), Tensor::new(vec![n, m, d], mk(n * m * d))?);
+    let weights = crate::weights::Weights::new(map);
+
+    let mut table = crate::report::Table::new(
+        &format!("{target} [SMOKE] — synthetic pipeline slice"),
+        &["r", "clusters", "merged shape"],
+    );
+    for r in [8usize, 4] {
+        let feats: Vec<Vec<f32>> = (0..n).map(|i| stats.mean_out.row(i).to_vec()).collect();
+        let dist = distance_matrix(&feats, Distance::Euclidean);
+        let c = hierarchical(&dist, r, Linkage::Average);
+        c.validate()?;
+        let first = c.groups().into_iter().next().unwrap();
+        let merged = merge_cluster(&weights, &stats, 0, &first, MergeStrategy::Frequency)?;
+        table.row(vec![
+            r.to_string(),
+            format!("{:?}", c.groups()),
+            format!("{:?}", merged.wg.shape()),
+        ]);
+    }
+    table.print();
+    println!("{target}: smoke mode OK (set HCSMOE_BENCH_SMOKE=0 for the full bench)");
+    Ok(())
+}
+
+/// One serial-vs-parallel measurement row for `BENCH_parallel.json`.
+#[derive(Debug, Clone)]
+pub struct ParallelBenchRow {
+    pub path: String,
+    pub n_experts: usize,
+    pub serial_ms: f64,
+    pub parallel_ms: f64,
+}
+
+impl ParallelBenchRow {
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_ms > 0.0 {
+            self.serial_ms / self.parallel_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write the machine-readable parallel-bench report (hand-rolled JSON; the
+/// offline crate set has no serde). Schema is stable: later perf PRs append
+/// rows with new `path` names rather than reshaping the file.
+pub fn write_parallel_json(
+    path: &str,
+    threads: usize,
+    generator: &str,
+    note: &str,
+    rows: &[ParallelBenchRow],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"parallel_hot_paths\",\n");
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"generator\": \"{}\",\n", json_escape(generator)));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"path\": \"{}\", \"n_experts\": {}, \"serial_ms\": {:.4}, \
+             \"parallel_ms\": {:.4}, \"speedup\": {:.2}}}{comma}\n",
+            json_escape(&r.path),
+            r.n_experts,
+            r.serial_ms,
+            r.parallel_ms,
+            r.speedup()
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// The 4-task subset used by the paper's ablation tables (Tables 4, 5).
 pub const ABLATION_TASKS: [&str; 4] = ["arc_c", "boolq", "obqa", "rte"];
 

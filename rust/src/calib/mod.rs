@@ -16,6 +16,7 @@ use anyhow::{ensure, Result};
 
 use crate::data::TokenStream;
 use crate::model::ModelContext;
+use crate::parallel;
 use crate::tensor::Tensor;
 
 /// Per-layer statistics.
@@ -74,6 +75,7 @@ impl CalibStats {
         let (b, t) = (ctx.manifest.calib_b, ctx.manifest.calib_t);
         let batches = ts.batches(b, t);
         ensure!(!batches.is_empty(), "calibration stream shorter than one batch");
+        let threads = parallel::default_threads();
         let mut agg: Option<Vec<LayerStats>> = None;
         for ids in &batches {
             let outs = ctx.run_calib(ids)?;
@@ -82,9 +84,7 @@ impl CalibStats {
             agg = Some(match agg {
                 None => layers,
                 Some(mut acc) => {
-                    for (a, l) in acc.iter_mut().zip(layers) {
-                        merge_into(a, &l);
-                    }
+                    merge_layerwise(&mut acc, &layers, threads);
                     acc
                 }
             });
@@ -92,11 +92,14 @@ impl CalibStats {
         let mut layers = agg.unwrap();
         let nb = batches.len() as f32;
         if nb > 1.0 {
-            for l in &mut layers {
-                // mean_out is a mean per batch -> average across batches;
-                // counts/sums accumulate (they are totals).
-                l.mean_out.scale(1.0 / nb);
-            }
+            // mean_out is a mean per batch -> average across batches;
+            // counts/sums accumulate (they are totals).
+            let t = if accum_work(&layers) >= parallel::PAR_AUTO_WORK { threads } else { 1 };
+            parallel::par_chunks_mut(t, &mut layers, |_, chunk| {
+                for l in chunk {
+                    l.mean_out.scale(1.0 / nb);
+                }
+            });
         }
         Ok(Self {
             domain: String::new(),
@@ -112,6 +115,27 @@ impl CalibStats {
     pub fn n_experts(&self) -> usize {
         self.layers[0].counts.len()
     }
+}
+
+/// Accumulate `fresh` into `acc` layer by layer. Layers are independent, so
+/// the sweep parallelises over disjoint layer chunks; each layer's
+/// accumulation is the exact serial expression, keeping batch order — and
+/// therefore every statistic — bit-identical to the serial path.
+fn merge_layerwise(acc: &mut [LayerStats], fresh: &[LayerStats], threads: usize) {
+    debug_assert_eq!(acc.len(), fresh.len());
+    let threads = if accum_work(acc) >= parallel::PAR_AUTO_WORK { threads } else { 1 };
+    parallel::par_chunks_mut(threads, acc, |start, chunk| {
+        for (off, a) in chunk.iter_mut().enumerate() {
+            merge_into(a, &fresh[start + off]);
+        }
+    });
+}
+
+/// Element ops one accumulation (or rescale) sweep touches — the gate input
+/// keeping tiny-model calibration on the serial path (same policy as every
+/// other auto-dispatched hot path).
+fn accum_work(layers: &[LayerStats]) -> usize {
+    layers.iter().map(|l| l.mean_out.len() + 3 * l.counts.len()).sum()
 }
 
 fn merge_into(a: &mut LayerStats, l: &LayerStats) {
@@ -157,9 +181,9 @@ fn unpack(ctx: &ModelContext, outs: Vec<Tensor>) -> Result<Vec<LayerStats>> {
     Ok(layers)
 }
 
-#[cfg(test)]
-pub mod testutil {
-    //! Synthetic `CalibStats` for algorithm unit tests (no PJRT needed).
+pub mod synthetic {
+    //! Synthetic `LayerStats` for algorithm unit tests, the determinism
+    //! property suite and the artifact-free bench paths (no PJRT needed).
     use super::*;
     use crate::util::Rng;
 

@@ -5,6 +5,7 @@
 //! merging path (Eq. 15) including the router-weight merge the paper shows
 //! degrades accuracy — reproduced in Tables 16-17.
 
+use crate::parallel;
 use crate::tensor::l2_dist;
 use crate::util::Rng;
 
@@ -32,7 +33,73 @@ impl FcmResult {
     }
 }
 
+/// Center j under Eq. 14 (right): the membership-weighted mean, summing
+/// members in ascending i — the single expression both sweeps evaluate.
+fn fcm_center(j: usize, feats: &[Vec<f32>], u: &[Vec<f32>], fuzz: f32, dim: usize) -> Vec<f32> {
+    let mut num = vec![0f32; dim];
+    let mut den = 0f32;
+    for (i, f) in feats.iter().enumerate() {
+        let w = u[i][j].powf(fuzz);
+        den += w;
+        for k in 0..dim {
+            num[k] += w * f[k];
+        }
+    }
+    let mut center = vec![0f32; dim];
+    for k in 0..dim {
+        center[k] = if den > 0.0 { num[k] / den } else { feats[0][k] };
+    }
+    center
+}
+
+/// Membership row of point i under Eq. 14 (left), distances clamped as in
+/// the serial reference.
+fn fcm_membership_row(
+    i: usize,
+    feats: &[Vec<f32>],
+    centers: &[Vec<f32>],
+    expo: f32,
+    r: usize,
+) -> Vec<f32> {
+    let dists: Vec<f32> = (0..r)
+        .map(|j| l2_dist(&feats[i], &centers[j]).max(1e-9))
+        .collect();
+    let mut row = vec![0f32; r];
+    for j in 0..r {
+        let mut s = 0f32;
+        for k in 0..r {
+            s += (dists[j] / dists[k]).powf(expo);
+        }
+        row[j] = 1.0 / s;
+    }
+    row
+}
+
+/// Fuzzy C-Means with the auto-selected worker count: each iteration costs
+/// O(n·r·dim), so parallelism engages only when that clears
+/// [`parallel::PAR_AUTO_WORK`] (see [`fcm_with`]).
 pub fn fcm(feats: &[Vec<f32>], r: usize, fuzz: f32, iters: usize, seed: u64) -> FcmResult {
+    let n = feats.len();
+    let dim = feats.first().map_or(0, |f| f.len());
+    let threads = if n * r * dim >= parallel::PAR_AUTO_WORK {
+        parallel::default_threads()
+    } else {
+        1
+    };
+    fcm_with(feats, r, fuzz, iters, seed, threads)
+}
+
+/// [`fcm`] with an explicit worker count. Center and membership updates are
+/// independent per cluster / per point, so any thread count reproduces the
+/// serial result bit-for-bit (`rust/tests/determinism.rs`).
+pub fn fcm_with(
+    feats: &[Vec<f32>],
+    r: usize,
+    fuzz: f32,
+    iters: usize,
+    seed: u64,
+    threads: usize,
+) -> FcmResult {
     let n = feats.len();
     let dim = feats[0].len();
     assert!(r >= 1 && r <= n);
@@ -53,32 +120,22 @@ pub fn fcm(feats: &[Vec<f32>], r: usize, fuzz: f32, iters: usize, seed: u64) -> 
     let expo = 2.0 / (fuzz - 1.0);
     for _ in 0..iters {
         // centers: c_j = Σ u_ij^m e_i / Σ u_ij^m  (Eq. 14 right)
-        for j in 0..r {
-            let mut num = vec![0f32; dim];
-            let mut den = 0f32;
-            for i in 0..n {
-                let w = u[i][j].powf(fuzz);
-                den += w;
-                for k in 0..dim {
-                    num[k] += w * feats[i][k];
+        {
+            let u = &u;
+            parallel::par_chunks_mut(threads.min(r), &mut centers, |start, chunk| {
+                for (off, c) in chunk.iter_mut().enumerate() {
+                    *c = fcm_center(start + off, feats, u, fuzz, dim);
                 }
-            }
-            for k in 0..dim {
-                centers[j][k] = if den > 0.0 { num[k] / den } else { feats[0][k] };
-            }
+            });
         }
         // memberships (Eq. 14 left)
-        for i in 0..n {
-            let dists: Vec<f32> = (0..r)
-                .map(|j| l2_dist(&feats[i], &centers[j]).max(1e-9))
-                .collect();
-            for j in 0..r {
-                let mut s = 0f32;
-                for k in 0..r {
-                    s += (dists[j] / dists[k]).powf(expo);
+        {
+            let centers = &centers;
+            parallel::par_chunks_mut(threads, &mut u, |start, chunk| {
+                for (off, row) in chunk.iter_mut().enumerate() {
+                    *row = fcm_membership_row(start + off, feats, centers, expo, r);
                 }
-                u[i][j] = 1.0 / s;
-            }
+            });
         }
     }
     FcmResult { membership: u, centers, r }

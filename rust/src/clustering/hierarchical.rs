@@ -10,6 +10,7 @@
 //! their true aggregate distances ("iterative recalibration", §3.2.2).
 
 use super::Clustering;
+use crate::parallel;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Linkage {
@@ -70,15 +71,27 @@ fn cluster_dist(dist: &[Vec<f32>], a: &[usize], b: &[usize], linkage: Linkage) -
     }
 }
 
-/// Cluster `n` experts into `r` groups from a pairwise distance matrix.
-pub fn hierarchical(dist: &[Vec<f32>], r: usize, linkage: Linkage) -> Clustering {
-    let n = dist.len();
-    assert!(r >= 1 && r <= n, "need 1 <= r <= n (r={r}, n={n})");
-    let mut clusters: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
-    while clusters.len() > r {
+/// Hard floor for the parallel scan: below this, even explicitly requested
+/// workers fall back to serial (a scan this small cannot amortise one
+/// spawn). The determinism suite exercises the parallel scan above it.
+const PAR_MIN_CLUSTERS: usize = 24;
+
+/// Best merge candidate under the deterministic tie-break: minimal linkage
+/// distance, ties resolved toward the lexicographically smallest (a, b).
+/// The serial scan realises exactly this rule via its strict `<` over
+/// ascending (a, b), so any partition of the scan space that combines local
+/// winners with the same rule reproduces the serial answer bit-for-bit.
+fn best_pair(
+    dist: &[Vec<f32>],
+    clusters: &[Vec<usize>],
+    linkage: Linkage,
+    threads: usize,
+) -> (usize, usize, f32) {
+    let m = clusters.len();
+    let scan = |rows: &mut dyn Iterator<Item = usize>| {
         let mut best = (0usize, 1usize, f32::INFINITY);
-        for a in 0..clusters.len() {
-            for b in (a + 1)..clusters.len() {
+        for a in rows {
+            for b in (a + 1)..m {
                 let d = cluster_dist(dist, &clusters[a], &clusters[b], linkage);
                 // strict < keeps the tie-break deterministic (lowest index pair)
                 if d < best.2 {
@@ -86,7 +99,64 @@ pub fn hierarchical(dist: &[Vec<f32>], r: usize, linkage: Linkage) -> Clustering
                 }
             }
         }
-        let (a, b, _) = best;
+        best
+    };
+    if threads <= 1 || m < PAR_MIN_CLUSTERS {
+        return scan(&mut (0..m));
+    }
+    // Round-robin rows across workers: row a costs m - a comparisons, so
+    // contiguous chunks would leave the last worker nearly idle.
+    let t = threads.min(m);
+    let locals = parallel::par_map_chunks(t, t, |workers| {
+        let mut local = (0usize, 1usize, f32::INFINITY);
+        for w in workers {
+            let candidate = scan(&mut (w..m).step_by(t));
+            if candidate.2 < local.2
+                || (candidate.2 == local.2 && (candidate.0, candidate.1) < (local.0, local.1))
+            {
+                local = candidate;
+            }
+        }
+        local
+    });
+    let mut best = (0usize, 1usize, f32::INFINITY);
+    for cand in locals {
+        if cand.2 < best.2 || (cand.2 == best.2 && (cand.0, cand.1) < (best.0, best.1)) {
+            best = cand;
+        }
+    }
+    best
+}
+
+/// Cluster `n` experts into `r` groups from a pairwise distance matrix
+/// (see [`hierarchical_with`]).
+///
+/// Auto dispatch scales the worker count to the per-step scan work — one
+/// extra worker per [`parallel::PAR_AUTO_WORK`] element-ops in the O(n²/2)
+/// scan, so each ~50µs spawn stays amortised. At paper scales (E ≤ 64,
+/// microsecond scans) this resolves to the serial path; the parallel scan
+/// engages from roughly 1450 clusters upward.
+pub fn hierarchical(dist: &[Vec<f32>], r: usize, linkage: Linkage) -> Clustering {
+    let n = dist.len();
+    let max_useful = (n * n / 2) / parallel::PAR_AUTO_WORK;
+    let threads = parallel::default_threads().min(max_useful.max(1));
+    hierarchical_with(dist, r, linkage, threads)
+}
+
+/// [`hierarchical`] with an explicit worker count. `threads <= 1` is the
+/// serial reference path; every thread count yields identical clusterings
+/// (`rust/tests/determinism.rs`).
+pub fn hierarchical_with(
+    dist: &[Vec<f32>],
+    r: usize,
+    linkage: Linkage,
+    threads: usize,
+) -> Clustering {
+    let n = dist.len();
+    assert!(r >= 1 && r <= n, "need 1 <= r <= n (r={r}, n={n})");
+    let mut clusters: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    while clusters.len() > r {
+        let (a, b, _) = best_pair(dist, &clusters, linkage, threads);
         let merged = clusters.remove(b);
         clusters[a].extend(merged);
     }

@@ -3,6 +3,7 @@
 //! initialisation-sensitivity comparison against deterministic HC.
 
 use super::Clustering;
+use crate::parallel;
 use crate::tensor::l2_dist;
 use crate::util::Rng;
 
@@ -14,7 +15,46 @@ pub enum KmeansInit {
     Random { seed: u64 },
 }
 
+/// Nearest center index under the serial tie-break (strict `<` over
+/// ascending center index) — the single expression both the serial and the
+/// parallel assignment sweeps evaluate per point.
+#[inline]
+fn nearest_center(point: &[f32], centers: &[Vec<f32>]) -> usize {
+    let mut best = (0usize, f32::INFINITY);
+    for (c, center) in centers.iter().enumerate() {
+        let d = l2_dist(point, center);
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    best.0
+}
+
+/// K-means with the auto-selected worker count: the per-iteration
+/// assignment sweep costs O(n·r·dim), so parallelism engages only when that
+/// clears [`parallel::PAR_AUTO_WORK`] (see [`kmeans_with`]).
 pub fn kmeans(feats: &[Vec<f32>], r: usize, init: KmeansInit, max_iter: usize) -> Clustering {
+    let n = feats.len();
+    let dim = feats.first().map_or(0, |f| f.len());
+    let threads = if n * r * dim >= parallel::PAR_AUTO_WORK {
+        parallel::default_threads()
+    } else {
+        1
+    };
+    kmeans_with(feats, r, init, max_iter, threads)
+}
+
+/// [`kmeans`] with an explicit worker count for the assignment sweep.
+/// Every point's nearest center is an independent computation, so any
+/// thread count produces the exact serial clustering
+/// (`rust/tests/determinism.rs`).
+pub fn kmeans_with(
+    feats: &[Vec<f32>],
+    r: usize,
+    init: KmeansInit,
+    max_iter: usize,
+    threads: usize,
+) -> Clustering {
     let n = feats.len();
     assert!(r >= 1 && r <= n);
     let dim = feats[0].len();
@@ -27,19 +67,21 @@ pub fn kmeans(feats: &[Vec<f32>], r: usize, init: KmeansInit, max_iter: usize) -
     };
     let mut centers: Vec<Vec<f32>> = init_idx.iter().map(|&i| feats[i].clone()).collect();
     let mut assign = vec![0usize; n];
+    let mut proposed = vec![0usize; n];
     for _ in 0..max_iter {
-        // assignment step
+        // assignment step (parallel over disjoint point chunks)
+        {
+            let centers = &centers;
+            parallel::par_chunks_mut(threads, &mut proposed, |start, chunk| {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = nearest_center(&feats[start + off], centers);
+                }
+            });
+        }
         let mut changed = false;
         for e in 0..n {
-            let mut best = (0usize, f32::INFINITY);
-            for (c, center) in centers.iter().enumerate() {
-                let d = l2_dist(&feats[e], center);
-                if d < best.1 {
-                    best = (c, d);
-                }
-            }
-            if assign[e] != best.0 {
-                assign[e] = best.0;
+            if assign[e] != proposed[e] {
+                assign[e] = proposed[e];
                 changed = true;
             }
         }

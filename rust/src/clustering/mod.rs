@@ -9,9 +9,9 @@ pub mod kmeans;
 pub mod nonuniform;
 pub mod singleshot;
 
-pub use fcm::{fcm, FcmResult};
-pub use hierarchical::{hierarchical, Linkage};
-pub use kmeans::{kmeans, KmeansInit};
+pub use fcm::{fcm, fcm_with, FcmResult};
+pub use hierarchical::{hierarchical, hierarchical_with, Linkage};
+pub use kmeans::{kmeans, kmeans_with, KmeansInit};
 pub use nonuniform::nonuniform_budgets;
 pub use singleshot::single_shot;
 

@@ -8,7 +8,10 @@
 //! * **L3** is this crate: the retraining-free compression toolchain
 //!   (calibration → similarity metrics → clustering → merging/pruning),
 //!   the zero-shot evaluation harness, a threaded serving layer, and the
-//!   bench harness regenerating every table/figure of the paper.
+//!   bench harness regenerating every table/figure of the paper. Its hot
+//!   paths run on the [`parallel`] scoped thread pool with deterministic
+//!   work splitting — parallel and serial outputs are bit-identical
+//!   (`rust/tests/determinism.rs`).
 //!
 //! Quick tour:
 //!
@@ -37,6 +40,7 @@ pub mod data;
 pub mod eval;
 pub mod merging;
 pub mod model;
+pub mod parallel;
 pub mod pipeline;
 pub mod pruning;
 pub mod quality;

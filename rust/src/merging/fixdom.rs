@@ -190,7 +190,7 @@ pub fn merge_fixdom(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::calib::testutil::synthetic_grouped;
+    use crate::calib::synthetic::synthetic_grouped;
     use crate::tensor::Tensor;
     use crate::util::Rng;
 

@@ -107,7 +107,7 @@ pub fn merge_cluster(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::calib::testutil::synthetic_grouped;
+    use crate::calib::synthetic::synthetic_grouped;
     use crate::tensor::Tensor;
 
     fn demo_expert(v: f32, d: usize, m: usize) -> ExpertWeights {

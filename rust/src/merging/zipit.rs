@@ -127,7 +127,7 @@ pub fn merge_zipit(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::calib::testutil::synthetic_grouped;
+    use crate::calib::synthetic::synthetic_grouped;
     use crate::util::Rng;
 
     fn rand_expert(rng: &mut Rng, d: usize, m: usize) -> ExpertWeights {

@@ -5,10 +5,9 @@
 //! resident device buffers for its weight set plus its router mask, so the
 //! eval/serving hot path never re-uploads weights (DESIGN.md §Perf L3).
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{ensure, Context, Result};
-use once_cell::sync::OnceCell;
 
 use crate::config::{Artifacts, Manifest, ModelCfg};
 use crate::data::TokenStream;
@@ -22,8 +21,21 @@ pub struct ModelContext {
     pub cfg: ModelCfg,
     pub rt: Arc<Runtime>,
     pub base: Weights,
-    lm_exe: OnceCell<Executable>,
-    calib_exe: OnceCell<Executable>,
+    lm_exe: OnceLock<Executable>,
+    calib_exe: OnceLock<Executable>,
+}
+
+/// `OnceLock::get_or_try_init` is unstable; this free function provides the
+/// same fallible memoisation (a lost init race recomputes, then discards).
+fn exe_cached(
+    cell: &OnceLock<Executable>,
+    load: impl FnOnce() -> Result<Executable>,
+) -> Result<&Executable> {
+    if let Some(exe) = cell.get() {
+        return Ok(exe);
+    }
+    let exe = load()?;
+    Ok(cell.get_or_init(|| exe))
 }
 
 /// A model variant ready for execution: weights resident on device + mask.
@@ -47,19 +59,19 @@ impl ModelContext {
             cfg,
             rt,
             base,
-            lm_exe: OnceCell::new(),
-            calib_exe: OnceCell::new(),
+            lm_exe: OnceLock::new(),
+            calib_exe: OnceLock::new(),
         })
     }
 
     pub fn lm_exe(&self) -> Result<&Executable> {
-        self.lm_exe.get_or_try_init(|| {
+        exe_cached(&self.lm_exe, || {
             self.rt.load_hlo(self.arts.lm_logits_hlo(&self.cfg.name))
         })
     }
 
     pub fn calib_exe(&self) -> Result<&Executable> {
-        self.calib_exe.get_or_try_init(|| {
+        exe_cached(&self.calib_exe, || {
             self.rt.load_hlo(self.arts.calib_hlo(&self.cfg.name))
         })
     }

@@ -1,0 +1,241 @@
+//! Scoped thread-pool primitives with deterministic work splitting.
+//!
+//! The compression hot paths — per-layer calibration accumulation, the
+//! O(E²) similarity distance matrix, agglomerative linkage scans, K-means /
+//! FCM assignment sweeps, and the blocked matmul behind the ZipIt/Fix-Dom
+//! correlation features — are embarrassingly parallel over disjoint output
+//! regions. This module gives them a dependency-free `std::thread::scope`
+//! pool with **deterministic** splitting: every parallel variant partitions
+//! the output index space, and each element is computed by exactly the
+//! expression the serial path uses (same operand order, same reduction
+//! order), so results are bit-identical to the serial path at any thread
+//! count. `rust/tests/determinism.rs` enforces this property.
+//!
+//! Thread-count resolution for auto-dispatched paths: the `HCSMOE_THREADS`
+//! environment variable if set, else `std::thread::available_parallelism()`
+//! clamped to [`MAX_AUTO_THREADS`]. With the `parallel` cargo feature
+//! disabled, [`default_threads`] reports 1 and every auto-dispatched path
+//! stays on its serial reference implementation.
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Upper bound on auto-detected worker threads; an explicit
+/// `HCSMOE_THREADS` may exceed it (useful for oversubscription tests).
+pub const MAX_AUTO_THREADS: usize = 64;
+
+/// Element-op count below which auto-dispatched paths stay serial. A scoped
+/// spawn costs ~50µs on container hosts (measured); a parallel sweep must
+/// amortise several of those to win, which puts the break-even near 10⁶
+/// single-f32 operations. Explicit `*_with(threads)` calls bypass this —
+/// gates are a wall-clock policy, never a correctness one.
+pub const PAR_AUTO_WORK: usize = 1 << 20;
+
+/// Pool size used by auto-dispatched parallel paths (resolved once).
+pub fn default_threads() -> usize {
+    if !cfg!(feature = "parallel") {
+        return 1;
+    }
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("HCSMOE_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_AUTO_THREADS)
+    })
+}
+
+/// Deterministic near-equal split of `0..len` into at most `threads`
+/// non-empty contiguous ranges (the first `len % threads` ranges take one
+/// extra element). Covers `0..len` exactly, in order.
+pub fn split_ranges(len: usize, threads: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let t = threads.clamp(1, len);
+    let base = len / t;
+    let rem = len % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let size = base + usize::from(i < rem);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Map every chunk range of `0..len` (from [`split_ranges`]) through `f`;
+/// returns the per-chunk results in range order. The calling thread runs
+/// the final chunk itself, so `threads` workers cost only `threads - 1`
+/// spawns; a single chunk runs inline with no spawn at all.
+pub fn par_map_chunks<T, F>(threads: usize, len: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let mut ranges = split_ranges(len, threads);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(&f).collect();
+    }
+    let last = ranges.pop().unwrap();
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges.into_iter().map(|r| s.spawn(move || f(r))).collect();
+        let tail = f(last);
+        let mut out: Vec<T> = handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect();
+        out.push(tail);
+        out
+    })
+}
+
+/// Split `out` into the per-range mutable chunks induced by
+/// [`split_ranges`] over its length and run `f(range_start, chunk)` on
+/// scoped threads. Chunks are disjoint, so no synchronisation is needed and
+/// writes land exactly where the serial loop would put them.
+pub fn par_chunks_mut<T, F>(threads: usize, out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let ranges = split_ranges(out.len(), threads);
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(r.start, out);
+        }
+        return;
+    }
+    let f = &f;
+    let n_ranges = ranges.len();
+    std::thread::scope(|s| {
+        let mut rest: &mut [T] = out;
+        for (idx, r) in ranges.into_iter().enumerate() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+            rest = tail;
+            if idx + 1 == n_ranges {
+                // the calling thread takes the final chunk: one fewer spawn
+                f(r.start, head);
+            } else {
+                s.spawn(move || f(r.start, head));
+            }
+        }
+    });
+}
+
+/// [`par_chunks_mut`] for row-major [rows, row_len] buffers: chunks are
+/// row-aligned and `f` receives the first row index of its chunk. The
+/// spawn-saving last-chunk rule lives here once, shared by every
+/// row-parallel kernel (matmul, correlation matrix).
+pub fn par_row_chunks_mut<T, F>(threads: usize, out: &mut [T], row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let ranges = split_ranges(rows, threads);
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(r.start, out);
+        }
+        return;
+    }
+    let f = &f;
+    let n_ranges = ranges.len();
+    std::thread::scope(|s| {
+        let mut rest: &mut [T] = out;
+        for (idx, r) in ranges.into_iter().enumerate() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * row_len);
+            rest = tail;
+            if idx + 1 == n_ranges {
+                f(r.start, head);
+            } else {
+                s.spawn(move || f(r.start, head));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_exactly_in_order() {
+        for len in [0usize, 1, 2, 7, 16, 63, 64, 65] {
+            for threads in [1usize, 2, 3, 4, 7, 64, 1000] {
+                let ranges = split_ranges(len, threads);
+                let flat: Vec<usize> = ranges.iter().cloned().flatten().collect();
+                assert_eq!(flat, (0..len).collect::<Vec<_>>(), "len={len} t={threads}");
+                assert!(ranges.iter().all(|r| !r.is_empty()));
+                assert!(ranges.len() <= threads.max(1));
+                if len > 0 {
+                    let max = ranges.iter().map(|r| r.len()).max().unwrap();
+                    let min = ranges.iter().map(|r| r.len()).min().unwrap();
+                    assert!(max - min <= 1, "near-equal split");
+                }
+            }
+        }
+    }
+
+    fn square_sum(r: Range<usize>) -> u64 {
+        r.map(|i| (i * i) as u64).sum()
+    }
+
+    #[test]
+    fn par_map_matches_serial_map() {
+        let serial: u64 = square_sum(0..1000);
+        for threads in [1usize, 2, 3, 8] {
+            let total: u64 = par_map_chunks(threads, 1000, square_sum).into_iter().sum();
+            assert_eq!(total, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_every_slot_once() {
+        for threads in [1usize, 2, 3, 5] {
+            let mut out = vec![0usize; 97];
+            par_chunks_mut(threads, &mut out, |start, chunk| {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = (start + off) * 3 + 1;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i * 3 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_mut_respects_row_alignment() {
+        let (rows, row_len) = (13usize, 5usize);
+        for threads in [1usize, 2, 4, 13] {
+            let mut out = vec![0usize; rows * row_len];
+            par_row_chunks_mut(threads, &mut out, row_len, |first_row, chunk| {
+                assert_eq!(chunk.len() % row_len, 0, "row-aligned chunk");
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = first_row * row_len + off;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_threads_is_positive_and_stable() {
+        let a = default_threads();
+        let b = default_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b);
+    }
+}

@@ -222,7 +222,7 @@ fn enumerate_subsets<F: FnMut(&[usize])>(n: usize, r: usize, f: &mut F) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::calib::testutil::synthetic_grouped;
+    use crate::calib::synthetic::synthetic_grouped;
     use crate::tensor::Tensor;
 
     fn stats_with(counts: Vec<Vec<f32>>, probs: Vec<Vec<f32>>) -> CalibStats {

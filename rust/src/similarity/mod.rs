@@ -8,6 +8,7 @@
 use anyhow::{ensure, Result};
 
 use crate::calib::LayerStats;
+use crate::parallel;
 use crate::tensor;
 use crate::weights::Weights;
 
@@ -67,15 +68,28 @@ pub fn features(
 }
 
 /// Pairwise distance matrix [n, n] between feature vectors.
+///
+/// Auto-dispatches between [`distance_matrix_serial`] and
+/// [`distance_matrix_with`] on the O(E²·d) work estimate; both produce
+/// bit-identical matrices, so the choice is purely a wall-clock decision.
 pub fn distance_matrix(feats: &[Vec<f32>], dist: Distance) -> Vec<Vec<f32>> {
+    let threads = parallel::default_threads();
+    let n = feats.len();
+    let work = n * n * feats.first().map_or(0, |f| f.len());
+    if threads > 1 && work >= parallel::PAR_AUTO_WORK {
+        distance_matrix_with(feats, dist, threads)
+    } else {
+        distance_matrix_serial(feats, dist)
+    }
+}
+
+/// Serial reference implementation: upper triangle + mirror.
+pub fn distance_matrix_serial(feats: &[Vec<f32>], dist: Distance) -> Vec<Vec<f32>> {
     let n = feats.len();
     let mut d = vec![vec![0f32; n]; n];
     for i in 0..n {
         for j in (i + 1)..n {
-            let v = match dist {
-                Distance::Euclidean => tensor::l2_dist(&feats[i], &feats[j]),
-                Distance::Cosine => tensor::cosine_dist(&feats[i], &feats[j]),
-            };
+            let v = pair_dist(dist, &feats[i], &feats[j]);
             d[i][j] = v;
             d[j][i] = v;
         }
@@ -83,10 +97,58 @@ pub fn distance_matrix(feats: &[Vec<f32>], dist: Distance) -> Vec<Vec<f32>> {
     d
 }
 
+/// Thread-parallel construction: worker w computes the upper-triangle rows
+/// i ≡ w (mod threads) — round-robin balances the shrinking rows — and the
+/// main thread mirrors. Each entry is evaluated by exactly the serial
+/// expression, so the result is bit-identical to
+/// [`distance_matrix_serial`] at any thread count.
+pub fn distance_matrix_with(feats: &[Vec<f32>], dist: Distance, threads: usize) -> Vec<Vec<f32>> {
+    let n = feats.len();
+    if threads <= 1 || n < 2 {
+        return distance_matrix_serial(feats, dist);
+    }
+    let t = threads.min(n);
+    let per_worker: Vec<Vec<(usize, Vec<f32>)>> = parallel::par_map_chunks(t, t, |workers| {
+        let mut rows = Vec::new();
+        for w in workers {
+            let mut i = w;
+            while i < n {
+                let fi = &feats[i];
+                let mut row = Vec::with_capacity(n - i - 1);
+                for fj in &feats[i + 1..] {
+                    row.push(pair_dist(dist, fi, fj));
+                }
+                rows.push((i, row));
+                i += t;
+            }
+        }
+        rows
+    });
+    let mut d = vec![vec![0f32; n]; n];
+    for rows in per_worker {
+        for (i, row) in rows {
+            for (off, v) in row.into_iter().enumerate() {
+                let j = i + 1 + off;
+                d[i][j] = v;
+                d[j][i] = v;
+            }
+        }
+    }
+    d
+}
+
+#[inline]
+fn pair_dist(dist: Distance, a: &[f32], b: &[f32]) -> f32 {
+    match dist {
+        Distance::Euclidean => tensor::l2_dist(a, b),
+        Distance::Cosine => tensor::cosine_dist(a, b),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::calib::testutil::synthetic_grouped;
+    use crate::calib::synthetic::synthetic_grouped;
     use crate::util::proptest;
 
     #[test]

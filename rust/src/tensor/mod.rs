@@ -7,6 +7,8 @@ use std::fmt;
 
 use anyhow::{anyhow, Result};
 
+use crate::parallel;
+
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
@@ -156,30 +158,101 @@ pub fn cosine_dist(a: &[f32], b: &[f32]) -> f32 {
     1.0 - cosine_sim(a, b)
 }
 
-/// C[M,N] = A[M,K] @ B[K,N], simple ikj loop (cache-friendly) — only used on
-/// small correlation matrices in the merging path.
+/// C[M,N] = A[M,K] @ B[K,N], simple ikj loop (cache-friendly) — the serial
+/// reference for [`matmul_blocked_with`].
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut c = vec![0.0f32; m * n];
     for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
+        matmul_row(&a[i * k..(i + 1) * k], b, k, n, 0..n, &mut c[i * n..(i + 1) * n]);
     }
     c
 }
 
-/// Pearson correlation matrix between rows of X [p, t] and rows of Y [q, t].
+/// One output row over a column block: per element, contributions accumulate
+/// in ascending kk — the single reduction order every matmul variant here
+/// uses, which is what makes blocked/parallel results bit-identical.
+#[inline]
+fn matmul_row(
+    arow: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    jrange: std::ops::Range<usize>,
+    crow: &mut [f32],
+) {
+    for kk in 0..k {
+        let av = arow[kk];
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &b[kk * n..(kk + 1) * n];
+        for j in jrange.clone() {
+            crow[j] += av * brow[j];
+        }
+    }
+}
+
+/// Column-block width for the blocked matmul: 128 f32 = two 256-byte rows,
+/// small enough that a B-panel stays cache-resident across the kk sweep.
+const MATMUL_J_BLOCK: usize = 128;
+
+/// Blocked + row-parallel matmul: output rows are partitioned across scoped
+/// threads (disjoint `&mut` row chunks), and each row sweeps B in
+/// [`MATMUL_J_BLOCK`]-wide column panels. Per output element the
+/// accumulation order is the serial kernel's ascending-kk order, so the
+/// result is bit-identical to [`matmul`] at any thread count.
+pub fn matmul_blocked_with(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    if n == 0 || m == 0 {
+        return c;
+    }
+    let row_block = |i0: usize, crows: &mut [f32]| {
+        for (off, crow) in crows.chunks_mut(n).enumerate() {
+            let i = i0 + off;
+            let arow = &a[i * k..(i + 1) * k];
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + MATMUL_J_BLOCK).min(n);
+                matmul_row(arow, b, k, n, j0..j1, crow);
+                j0 = j1;
+            }
+        }
+    };
+    parallel::par_row_chunks_mut(threads, &mut c, n, row_block);
+    c
+}
+
+/// Pearson correlation matrix between rows of X [p, t] and rows of Y [q, t]
+/// (auto-parallel over output rows; the ZipIt path builds O((|C|·m)²)
+/// correlations through this, the dominant merge-time cost).
 pub fn corr_matrix(x: &[f32], y: &[f32], p: usize, q: usize, t: usize) -> Vec<f32> {
+    let threads = parallel::default_threads();
+    let auto = if p * q * t >= parallel::PAR_AUTO_WORK { threads } else { 1 };
+    corr_matrix_with(x, y, p, q, t, auto)
+}
+
+/// [`corr_matrix`] with an explicit worker count. Output rows are disjoint
+/// and each entry is one `dot(xi, yj) * xn[i] * yn[j]` — identical operand
+/// order at any thread count, so results are bit-identical to serial.
+pub fn corr_matrix_with(
+    x: &[f32],
+    y: &[f32],
+    p: usize,
+    q: usize,
+    t: usize,
+    threads: usize,
+) -> Vec<f32> {
     assert_eq!(x.len(), p * t);
     assert_eq!(y.len(), q * t);
     let norm = |v: &[f32]| -> (Vec<f32>, Vec<f32>) {
@@ -201,13 +274,20 @@ pub fn corr_matrix(x: &[f32], y: &[f32], p: usize, q: usize, t: usize) -> Vec<f3
     let (xc, xn) = norm(x);
     let (yc, yn) = norm(y);
     let mut c = vec![0.0f32; p * q];
-    for i in 0..p {
-        let xi = &xc[i * t..(i + 1) * t];
-        for j in 0..q {
-            let yj = &yc[j * t..(j + 1) * t];
-            c[i * q + j] = dot(xi, yj) * xn[i] * yn[j];
-        }
+    if q == 0 || p == 0 {
+        return c;
     }
+    let fill = |i0: usize, crows: &mut [f32]| {
+        for (off, crow) in crows.chunks_mut(q).enumerate() {
+            let i = i0 + off;
+            let xi = &xc[i * t..(i + 1) * t];
+            for (j, slot) in crow.iter_mut().enumerate() {
+                let yj = &yc[j * t..(j + 1) * t];
+                *slot = dot(xi, yj) * xn[i] * yn[j];
+            }
+        }
+    };
+    parallel::par_row_chunks_mut(threads, &mut c, q, fill);
     c
 }
 
@@ -252,6 +332,40 @@ mod tests {
         // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
         let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
         assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn blocked_parallel_matmul_is_bit_identical() {
+        let mut rng = crate::util::Rng::new(77);
+        let (m, k, n) = (13, 31, 157); // odd sizes cross the j-block boundary
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let serial = matmul(&a, &b, m, k, n);
+        for threads in [1usize, 2, 3, 8] {
+            let par = matmul_blocked_with(&a, &b, m, k, n, threads);
+            let same = serial
+                .iter()
+                .zip(&par)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_corr_matrix_is_bit_identical() {
+        let mut rng = crate::util::Rng::new(78);
+        let (p, q, t) = (9, 7, 33);
+        let x: Vec<f32> = (0..p * t).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..q * t).map(|_| rng.normal() as f32).collect();
+        let serial = corr_matrix_with(&x, &y, p, q, t, 1);
+        for threads in [2usize, 3, 5] {
+            let par = corr_matrix_with(&x, &y, p, q, t, threads);
+            let same = serial
+                .iter()
+                .zip(&par)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "threads={threads}");
+        }
     }
 
     #[test]

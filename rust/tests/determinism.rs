@@ -1,0 +1,181 @@
+//! Determinism contract of the `parallel` subsystem: every parallel hot
+//! path must produce **bit-identical** results to its serial reference at
+//! any thread count (property tests over seeded random expert sets). This
+//! is what lets the auto-dispatch heuristics pick thread counts freely
+//! without perturbing a single table of the paper reproduction.
+
+use hc_smoe::calib::synthetic::synthetic_grouped;
+use hc_smoe::clustering::{
+    fcm_with, hierarchical_with, kmeans_with, single_shot, KmeansInit, Linkage,
+};
+use hc_smoe::similarity::{
+    distance_matrix, distance_matrix_serial, distance_matrix_with, features, Distance, Metric,
+};
+use hc_smoe::tensor::{corr_matrix_with, matmul, matmul_blocked_with};
+use hc_smoe::util::proptest::{check, ensure};
+use hc_smoe::util::Rng;
+use hc_smoe::weights::Weights;
+
+const THREAD_COUNTS: [usize; 4] = [2, 3, 4, 7];
+
+fn random_feats(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn matrix_bits(m: &[Vec<f32>]) -> Vec<u32> {
+    m.iter().flatten().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn prop_distance_matrix_bit_identical_across_thread_counts() {
+    check("par-distance-matrix", 11, 30, |rng| {
+        let n = 2 + rng.below(63);
+        let d = 1 + rng.below(48);
+        let feats = random_feats(rng, n, d);
+        for dist in [Distance::Euclidean, Distance::Cosine] {
+            let serial = distance_matrix_serial(&feats, dist);
+            for threads in THREAD_COUNTS {
+                let par = distance_matrix_with(&feats, dist, threads);
+                ensure(
+                    matrix_bits(&serial) == matrix_bits(&par),
+                    format!("distance matrix diverged at n={n} d={d} threads={threads}"),
+                )?;
+            }
+            // the auto-dispatch entry point must agree with both
+            let auto = distance_matrix(&feats, dist);
+            ensure(
+                matrix_bits(&serial) == matrix_bits(&auto),
+                "auto-dispatched distance matrix diverged",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_identical_across_thread_counts() {
+    check("par-hierarchical", 12, 30, |rng| {
+        // span the PAR_MIN_CLUSTERS boundary so both scan paths are hit
+        let n = 2 + rng.below(40);
+        let r = 1 + rng.below(n);
+        let feats = random_feats(rng, n, 4);
+        let dist = distance_matrix_serial(&feats, Distance::Euclidean);
+        for linkage in [Linkage::Single, Linkage::Complete, Linkage::Average] {
+            let serial = hierarchical_with(&dist, r, linkage, 1);
+            serial.validate().map_err(|e| e.to_string())?;
+            for threads in THREAD_COUNTS {
+                let par = hierarchical_with(&dist, r, linkage, threads);
+                ensure(
+                    serial == par,
+                    format!("{linkage:?} clustering diverged at n={n} r={r} threads={threads}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kmeans_identical_across_thread_counts() {
+    check("par-kmeans", 13, 25, |rng| {
+        // small and large n: chunked sweeps see 1-, partial- and many-chunk splits
+        let n = 2 + rng.below(80);
+        let r = 1 + rng.below(n);
+        let feats = random_feats(rng, n, 3);
+        let seed = rng.next_u64();
+        for init in [KmeansInit::Fixed, KmeansInit::Random { seed }] {
+            let serial = kmeans_with(&feats, r, init, 50, 1);
+            serial.validate().map_err(|e| e.to_string())?;
+            for threads in THREAD_COUNTS {
+                let par = kmeans_with(&feats, r, init, 50, threads);
+                ensure(
+                    serial == par,
+                    format!("kmeans {init:?} diverged at n={n} r={r} threads={threads}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fcm_memberships_bit_identical_across_thread_counts() {
+    check("par-fcm", 14, 20, |rng| {
+        let n = 2 + rng.below(80);
+        let r = 1 + rng.below(n.min(8));
+        let feats = random_feats(rng, n, 3);
+        let seed = rng.next_u64();
+        let serial = fcm_with(&feats, r, 2.0, 15, seed, 1);
+        for threads in THREAD_COUNTS {
+            let par = fcm_with(&feats, r, 2.0, 15, seed, threads);
+            ensure(
+                matrix_bits(&serial.membership) == matrix_bits(&par.membership),
+                format!("fcm memberships diverged at n={n} r={r} threads={threads}"),
+            )?;
+            ensure(
+                matrix_bits(&serial.centers) == matrix_bits(&par.centers),
+                format!("fcm centers diverged at n={n} r={r} threads={threads}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmul_and_corr_bit_identical_across_thread_counts() {
+    check("par-matmul-corr", 15, 15, |rng| {
+        let m = 1 + rng.below(24);
+        let k = 1 + rng.below(24);
+        let n = 1 + rng.below(200);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let serial = matmul(&a, &b, m, k, n);
+        for threads in THREAD_COUNTS {
+            let par = matmul_blocked_with(&a, &b, m, k, n, threads);
+            let same = serial.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits());
+            ensure(same, format!("matmul diverged at {m}x{k}x{n} threads={threads}"))?;
+        }
+        let t = 1 + rng.below(32);
+        let x: Vec<f32> = (0..m * t).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..k * t).map(|_| rng.normal() as f32).collect();
+        let serial = corr_matrix_with(&x, &y, m, k, t, 1);
+        for threads in THREAD_COUNTS {
+            let par = corr_matrix_with(&x, &y, m, k, t, threads);
+            let same = serial.iter().zip(&par).all(|(u, v)| u.to_bits() == v.to_bits());
+            ensure(same, format!("corr diverged at {m}x{k}x{t} threads={threads}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end slice of the paper pipeline on synthetic statistics: the
+/// similarity → distance → clustering chain must produce identical expert
+/// groupings serial vs parallel, for every metric the ablations sweep.
+#[test]
+fn pipeline_slice_identical_serial_vs_parallel() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) | 1);
+        let n = 16 + rng.below(48);
+        let d = 8 + rng.below(56);
+        let groups: Vec<Vec<usize>> = (0..n / 2).map(|g| vec![2 * g, 2 * g + 1]).collect();
+        let stats = synthetic_grouped(n, d, &groups, 0.05, seed + 1);
+        let weights = Weights::new(Default::default());
+        for metric in [Metric::ExpertOutput, Metric::RouterLogits] {
+            let feats = features(metric, &weights, &stats, 0).unwrap();
+            let serial_d = distance_matrix_serial(&feats, Distance::Euclidean);
+            let par_d = distance_matrix_with(&feats, Distance::Euclidean, 4);
+            assert_eq!(matrix_bits(&serial_d), matrix_bits(&par_d), "seed={seed}");
+            let r = (n / 4).max(1);
+            let serial_c = hierarchical_with(&serial_d, r, Linkage::Average, 1);
+            let par_c = hierarchical_with(&par_d, r, Linkage::Average, 4);
+            assert_eq!(serial_c, par_c, "seed={seed} metric={metric:?}");
+            serial_c.validate().unwrap();
+            // single_shot is serial-only; it must stay deterministic too
+            let s1 = single_shot(&feats, &stats.counts, r);
+            let s2 = single_shot(&feats, &stats.counts, r);
+            assert_eq!(s1, s2);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal offline stand-in for the `byteorder` crate.
+//!
+//! Implements the subset the HCWT/HCEV/HCTS binary IO paths use:
+//! [`LittleEndian`], and the [`ReadBytesExt`] / [`WriteBytesExt`] extension
+//! traits with `u32`/`i32`/`f32` accessors (including the bulk
+//! `read_*_into` variants). Backed by `from_le_bytes`/`to_le_bytes`, so the
+//! on-disk format is identical to the real crate's.
+
+use std::io::{self, Read, Write};
+
+/// Byte-order witness: converts between native values and 4-byte buffers.
+pub trait ByteOrder {
+    fn u32_from_bytes(b: [u8; 4]) -> u32;
+    fn u32_to_bytes(v: u32) -> [u8; 4];
+    fn i32_from_bytes(b: [u8; 4]) -> i32;
+    fn i32_to_bytes(v: i32) -> [u8; 4];
+    fn f32_from_bytes(b: [u8; 4]) -> f32;
+    fn f32_to_bytes(v: f32) -> [u8; 4];
+}
+
+/// Little-endian byte order (the only one the HC formats use).
+pub enum LittleEndian {}
+
+/// Alias matching the real crate.
+pub type LE = LittleEndian;
+
+impl ByteOrder for LittleEndian {
+    fn u32_from_bytes(b: [u8; 4]) -> u32 {
+        u32::from_le_bytes(b)
+    }
+
+    fn u32_to_bytes(v: u32) -> [u8; 4] {
+        v.to_le_bytes()
+    }
+
+    fn i32_from_bytes(b: [u8; 4]) -> i32 {
+        i32::from_le_bytes(b)
+    }
+
+    fn i32_to_bytes(v: i32) -> [u8; 4] {
+        v.to_le_bytes()
+    }
+
+    fn f32_from_bytes(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+
+    fn f32_to_bytes(v: f32) -> [u8; 4] {
+        v.to_le_bytes()
+    }
+}
+
+/// Read extension: typed little/big-endian accessors over any `Read`.
+pub trait ReadBytesExt: Read {
+    fn read_u32<B: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(B::u32_from_bytes(b))
+    }
+
+    fn read_i32<B: ByteOrder>(&mut self) -> io::Result<i32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(B::i32_from_bytes(b))
+    }
+
+    fn read_f32<B: ByteOrder>(&mut self) -> io::Result<f32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(B::f32_from_bytes(b))
+    }
+
+    fn read_i32_into<B: ByteOrder>(&mut self, dst: &mut [i32]) -> io::Result<()> {
+        for d in dst.iter_mut() {
+            *d = self.read_i32::<B>()?;
+        }
+        Ok(())
+    }
+
+    fn read_f32_into<B: ByteOrder>(&mut self, dst: &mut [f32]) -> io::Result<()> {
+        for d in dst.iter_mut() {
+            *d = self.read_f32::<B>()?;
+        }
+        Ok(())
+    }
+}
+
+impl<R: Read + ?Sized> ReadBytesExt for R {}
+
+/// Write extension: typed little/big-endian writers over any `Write`.
+pub trait WriteBytesExt: Write {
+    fn write_u32<B: ByteOrder>(&mut self, v: u32) -> io::Result<()> {
+        self.write_all(&B::u32_to_bytes(v))
+    }
+
+    fn write_i32<B: ByteOrder>(&mut self, v: i32) -> io::Result<()> {
+        self.write_all(&B::i32_to_bytes(v))
+    }
+
+    fn write_f32<B: ByteOrder>(&mut self, v: f32) -> io::Result<()> {
+        self.write_all(&B::f32_to_bytes(v))
+    }
+}
+
+impl<W: Write + ?Sized> WriteBytesExt for W {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut buf = Vec::new();
+        buf.write_u32::<LittleEndian>(0xDEAD_BEEF).unwrap();
+        buf.write_i32::<LittleEndian>(-42).unwrap();
+        buf.write_f32::<LittleEndian>(1.5).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(r.read_u32::<LittleEndian>().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.read_i32::<LittleEndian>().unwrap(), -42);
+        assert_eq!(r.read_f32::<LittleEndian>().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn bulk_reads() {
+        let mut buf = Vec::new();
+        for i in 0..4 {
+            buf.write_i32::<LittleEndian>(i).unwrap();
+        }
+        let mut r = std::io::Cursor::new(buf);
+        let mut out = [0i32; 4];
+        r.read_i32_into::<LittleEndian>(&mut out).unwrap();
+        assert_eq!(out, [0, 1, 2, 3]);
+    }
+}

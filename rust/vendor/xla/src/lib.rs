@@ -1,0 +1,192 @@
+//! API-compatible stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment ships no PJRT plugin or `xla` crate, so
+//! this vendored path crate provides the exact type/method surface
+//! `hc_smoe::runtime` compiles against. Every operation that would need a
+//! real device (HLO parsing, compilation, buffer upload, execution) returns
+//! a descriptive [`Error`] at runtime; everything artifact-free (client
+//! construction, platform queries) works. Swapping in real PJRT bindings is
+//! a `Cargo.toml` path/version change — no `hc_smoe` source edits
+//! (see DESIGN.md, "Offline-environment notes").
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `xla::Error` Display surface.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(op: &str) -> Error {
+    Error(format!(
+        "PJRT backend unavailable: hc_smoe was built against the vendored `xla` stub, \
+         which cannot perform `{op}`; link real PJRT bindings to run HLO executables"
+    ))
+}
+
+/// Element types the runtime inspects on output literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host value types transferable to device buffers.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u32 {}
+
+/// PJRT client handle (stub: constructible, cannot compile or upload).
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { platform: "stub-cpu" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing always reports the missing backend).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(Error(format!(
+            "cannot parse HLO text {}: hc_smoe was built against the vendored `xla` stub",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed argument buffers; mirrors the real signature
+    /// returning per-device, per-output buffers.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// Host-side literal (tuple or array) read back from the device.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(unavailable("Literal::ty"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Array shape (dims as i64, matching the real bindings).
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_and_reports_platform() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+    }
+
+    #[test]
+    fn device_operations_error_descriptively() {
+        let c = PjRtClient::cpu().unwrap();
+        let err = c.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("missing.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# The exact gate CI runs — contributors run this locally to get the same
+# verdict. The first two commands are the repository's tier-1 gate verbatim;
+# fmt/clippy extend it for the CI `checks` job.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy -- -D warnings
+
+echo "ci_check: all green"
