@@ -1,11 +1,15 @@
 //! End-to-end driver (the DESIGN.md "end-to-end validation" workload):
 //! for each simulated model, run the full HC-SMoE pipeline against every
-//! baseline at the paper's 25% and 50% reductions, score the full
-//! zero-shot suite through the PJRT runtime, verify the expected ordering
-//! (HC-SMoE >= the best baseline), and report perplexity + output fidelity
-//! on held-out text.
+//! baseline at the first two reduction points of the manifest, score the
+//! full zero-shot suite through the selected execution backend (native
+//! CPU by default — no PJRT or Python required), verify the expected
+//! ordering (HC-SMoE >= the best baseline), and report perplexity +
+//! output fidelity on held-out text.
 //!
-//! This is the binary whose output is recorded in EXPERIMENTS.md.
+//! With real trained artifacts this is the binary whose output is
+//! recorded in EXPERIMENTS.md; on a synthesized artifact set (the offline
+//! default, also CI's `backend-e2e` smoke) it proves the whole
+//! compress → eval → serve loop executes, with near-chance scores.
 
 use hc_smoe::bench_support::{paper_methods, push_row, task_table, Lab, PAPER_TASKS};
 use hc_smoe::data::TokenStream;
@@ -17,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     let total = Timer::start();
     for model in ["qwensim", "mixsim"] {
         let lab = Lab::new(model)?;
+        println!("== {model}: executing on the {} backend ==", lab.ctx.backend_name());
         let rs = lab.ctx.manifest.reductions[model].clone();
         let mut table = task_table(
             &format!("E2E — {model}: all methods, 25% and 50% reduction"),

@@ -1,14 +1,18 @@
 //! Quickstart: the five-line HC-SMoE story.
 //!
-//! Load a pretrained simulated SMoE model, collect calibration statistics
-//! on the C4-analog corpus, merge 16 experts/layer down to 8 with
+//! Load a simulated SMoE model, collect calibration statistics on the
+//! C4-analog corpus, merge the experts of every layer down to half with
 //! hierarchical clustering over expert outputs (Algorithm 1), and compare
 //! zero-shot accuracy before/after on two benchmarks.
 //!
+//! Runs offline out of the box: artifacts are discovered, or synthesized
+//! in-process when absent, and the model executes on the native CPU
+//! backend (`HCSMOE_BACKEND=pjrt` switches to the PJRT path).
+//!
 //! Run with: `cargo run --release --offline --example quickstart`
 
+use hc_smoe::bench_support::ensure_artifacts;
 use hc_smoe::clustering::Linkage;
-use hc_smoe::config::Artifacts;
 use hc_smoe::eval::Evaluator;
 use hc_smoe::merging::MergeStrategy;
 use hc_smoe::model::ModelContext;
@@ -16,11 +20,15 @@ use hc_smoe::pipeline::{Method, Pipeline};
 use hc_smoe::similarity::Metric;
 
 fn main() -> anyhow::Result<()> {
-    let arts = Artifacts::discover();
+    let arts = ensure_artifacts()?;
     let ctx = ModelContext::load(&arts, "qwensim")?;
     println!(
-        "loaded {} ({} layers x {} experts, top-{})",
-        ctx.cfg.name, ctx.cfg.n_layer, ctx.cfg.n_exp, ctx.cfg.k
+        "loaded {} ({} layers x {} experts, top-{}) on the {} backend",
+        ctx.cfg.name,
+        ctx.cfg.n_layer,
+        ctx.cfg.n_exp,
+        ctx.cfg.k,
+        ctx.backend_name()
     );
 
     // 1. calibration statistics (Eq. 4: averaged expert outputs)
@@ -28,14 +36,15 @@ fn main() -> anyhow::Result<()> {
     println!("calibrated on {} tokens of the C4-analog corpus", stats.n_tokens);
 
     // 2. hierarchical clustering + frequency-weighted merging (HC-SMoE)
+    let r = ctx.cfg.n_exp / 2;
     let method = Method::HcSmoe {
         linkage: Linkage::Average,
         metric: Metric::ExpertOutput,
         merge: MergeStrategy::Frequency,
     };
-    let plan = Pipeline::new(method).plan(&ctx, &stats, 8)?;
+    let plan = Pipeline::new(method).plan(&ctx, &stats, r)?;
     let merged = plan.apply(&ctx, &stats)?;
-    println!("merged 16 -> 8 experts/layer ({})", merged.label);
+    println!("merged {} -> {r} experts/layer ({})", ctx.cfg.n_exp, merged.label);
 
     // 3. evaluate before/after
     let ev = Evaluator::new(&ctx)?;

@@ -1,14 +1,16 @@
-//! Serving demo: compress qwensim 16 -> 8 experts with HC-SMoE inside the
-//! executor thread, then fire concurrent multiple-choice scoring requests
-//! from four client threads through the dynamic batcher and report
-//! latency/throughput/batch-fill — the deployment story of Section 1.
+//! Serving demo: compress qwensim to half its experts with HC-SMoE inside
+//! the executor thread, then fire concurrent multiple-choice scoring
+//! requests from four client threads through the dynamic batcher and
+//! report latency/throughput/batch-fill — the deployment story of
+//! Section 1. Runs offline on the native backend (artifacts are
+//! synthesized when absent).
 //!
 //! Run with: `cargo run --release --offline --example serve_merged`
 
 use std::time::{Duration, Instant};
 
+use hc_smoe::bench_support::ensure_artifacts;
 use hc_smoe::clustering::Linkage;
-use hc_smoe::config::Artifacts;
 use hc_smoe::data::Benchmark;
 use hc_smoe::merging::MergeStrategy;
 use hc_smoe::pipeline::Method;
@@ -16,8 +18,10 @@ use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
 use hc_smoe::similarity::Metric;
 
 fn main() -> anyhow::Result<()> {
-    let arts = Artifacts::discover();
+    let arts = ensure_artifacts()?;
     let bench = Benchmark::load(arts.root.join("eval/arc_e.bin"))?;
+    let n_exp = arts.model_cfg("qwensim")?.n_exp;
+    let r = n_exp / 2;
     let spec = ServeSpec {
         artifacts_root: arts.root.to_string_lossy().into_owned(),
         model: "qwensim".into(),
@@ -27,11 +31,11 @@ fn main() -> anyhow::Result<()> {
                 metric: Metric::ExpertOutput,
                 merge: MergeStrategy::Frequency,
             },
-            8,
+            r,
             "general".into(),
         )),
     };
-    println!("starting executor (compresses 16 -> 8 experts at startup)...");
+    println!("starting executor (compresses {n_exp} -> {r} experts at startup)...");
     let handle = serve(
         spec,
         BatcherConfig { max_rows: 32, max_wait: Duration::from_millis(4) },

@@ -5,15 +5,22 @@
 //! emitting the machine-readable `BENCH_parallel.json` that tracks the
 //! perf trajectory PR over PR.
 //!
-//! Part 2 — PJRT execution latency, weight-upload overhead, the full
-//! compression pipeline and the serving batcher — runs only when the AOT
-//! artifacts are present (`make artifacts`), and is skipped gracefully
-//! otherwise.
+//! Part 2, also artifact-free: native-backend inference throughput
+//! (tokens/s of the scoring forward and the dense calibration pass,
+//! serial vs parallel) on synthesized checkpoints, emitting
+//! `BENCH_backend.json`.
+//!
+//! Part 3 — end-to-end execution latency, variant-load overhead, the full
+//! compression pipeline and the serving batcher — runs on the discovered
+//! artifact set (real AOT output when present, else the synthesized
+//! offline set).
 
 use std::time::Duration;
 
-use hc_smoe::bench_support::{self, Lab, ParallelBenchRow};
+use hc_smoe::backend::native::{forward_calib_with, forward_logits_with};
+use hc_smoe::bench_support::{self, BackendBenchRow, Lab, ParallelBenchRow};
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
+use hc_smoe::config::ModelCfg;
 use hc_smoe::report::Table;
 use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
 use hc_smoe::similarity::{
@@ -21,8 +28,10 @@ use hc_smoe::similarity::{
 };
 use hc_smoe::tensor::{matmul, matmul_blocked_with};
 use hc_smoe::util::{bench_median, Rng};
+use hc_smoe::weights::Weights;
 
 const BENCH_JSON: &str = "BENCH_parallel.json";
+const BACKEND_JSON: &str = "BENCH_backend.json";
 
 fn synthetic_feats(e: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
@@ -114,34 +123,119 @@ fn parallel_sweep(threads: usize, table: &mut Table) -> Vec<ParallelBenchRow> {
     rows
 }
 
+/// Toy model config for the artifact-free native-backend throughput sweep.
+fn backend_cfg(n_exp: usize) -> ModelCfg {
+    ModelCfg {
+        name: format!("bench{n_exp}"),
+        n_layer: 2,
+        d: 64,
+        m: 64,
+        n_exp,
+        k: 2,
+        heads: 4,
+        vocab: 256,
+        t_max: 64,
+        shared: false,
+        m_shared: 64,
+        cap_factor: 1.5,
+        block_c: 8,
+    }
+}
+
+/// Native-backend tokens/s, serial vs parallel -> `BENCH_backend.json`.
+fn backend_sweep(threads: usize, table: &mut Table) -> Vec<BackendBenchRow> {
+    let smoke = bench_support::smoke();
+    let (warmup, iters) = if smoke { (0, 1) } else { (2, 9) };
+    let (b, t) = (4usize, 64usize);
+    let tokens = b * t;
+    let mut rows = Vec::new();
+    for &e in &[8usize, 16] {
+        let cfg = backend_cfg(e);
+        let w = Weights::synthesize(&cfg, 0xBACC + e as u64);
+        let ids: Vec<i32> = (0..tokens).map(|i| (i % cfg.vocab) as i32).collect();
+        let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+        let serial = bench_median(warmup, iters, || {
+            std::hint::black_box(
+                forward_logits_with(&cfg, &w, &ids, b, t, &mask, None, e, 1).unwrap(),
+            );
+        });
+        let par = bench_median(warmup, iters, || {
+            std::hint::black_box(
+                forward_logits_with(&cfg, &w, &ids, b, t, &mask, None, e, threads).unwrap(),
+            );
+        });
+        table.row(vec![
+            format!("forward_logits E={e} ({tokens} tok)"),
+            format!("{:.3}", serial.median_s * 1e3),
+            format!("{:.3}", par.median_s * 1e3),
+            format!("{:.0} tok/s", tokens as f64 / par.median_s.max(1e-12)),
+        ]);
+        rows.push(BackendBenchRow {
+            path: "forward_logits".into(),
+            n_experts: e,
+            tokens,
+            serial_ms: serial.median_s * 1e3,
+            parallel_ms: par.median_s * 1e3,
+        });
+    }
+    // the dense calibration pass (every expert on every token)
+    let cfg = backend_cfg(8);
+    let w = Weights::synthesize(&cfg, 0xCA11B);
+    let ids: Vec<i32> = (0..tokens).map(|i| (i % cfg.vocab) as i32).collect();
+    let serial = bench_median(warmup, iters, || {
+        std::hint::black_box(forward_calib_with(&cfg, &w, &ids, b, t, 64, 32, 1).unwrap());
+    });
+    let par = bench_median(warmup, iters, || {
+        std::hint::black_box(forward_calib_with(&cfg, &w, &ids, b, t, 64, 32, threads).unwrap());
+    });
+    table.row(vec![
+        format!("forward_calib E=8 ({tokens} tok)"),
+        format!("{:.3}", serial.median_s * 1e3),
+        format!("{:.3}", par.median_s * 1e3),
+        format!("{:.0} tok/s", tokens as f64 / par.median_s.max(1e-12)),
+    ]);
+    rows.push(BackendBenchRow {
+        path: "forward_calib".into(),
+        n_experts: 8,
+        tokens,
+        serial_ms: serial.median_s * 1e3,
+        parallel_ms: par.median_s * 1e3,
+    });
+    rows
+}
+
 fn artifact_sections() -> anyhow::Result<()> {
     let lab = Lab::new("qwensim")?;
     let (b, t) = (lab.ctx.manifest.eval_b, lab.ctx.manifest.eval_t);
-    let ids: Vec<i32> = (0..b * t).map(|i| (i % 97) as i32 + 16).collect();
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 80) as i32 + 16).collect();
     let mut table = Table::new(
-        "Perf microbench (qwensim, PJRT sections)",
+        &format!(
+            "Perf microbench (qwensim, {} backend sections)",
+            lab.ctx.backend_name()
+        ),
         &["Path", "median", "min", "max", "unit"],
     );
 
-    // 1. PJRT end-to-end scoring execution (the eval/serving hot path)
+    // 1. end-to-end scoring execution (the eval/serving hot path)
     let orig = lab.ctx.load_original()?;
     let st = bench_median(3, 12, || {
         lab.ctx.run_logits(&orig, &ids).unwrap();
     });
     table.row(vec![
-        "lm_logits exec (1024 tok)".into(),
+        format!("lm_logits exec ({} tok)", b * t),
         format!("{:.2}", st.median_s * 1e3),
         format!("{:.2}", st.min_s * 1e3),
         format!("{:.2}", st.max_s * 1e3),
         "ms".into(),
     ]);
 
-    // 2. weight upload (paid once per variant, amortised away on the hot path)
+    // 2. variant load (paid once per compressed variant, amortised away
+    // on the hot path)
     let st = bench_median(1, 5, || {
-        lab.ctx.lm_exe().unwrap().upload_weights(&lab.ctx.base).unwrap();
+        std::hint::black_box(lab.ctx.load_original().unwrap());
     });
     table.row(vec![
-        "weights upload (2M params)".into(),
+        "variant load (resident weights)".into(),
         format!("{:.2}", st.median_s * 1e3),
         format!("{:.2}", st.min_s * 1e3),
         format!("{:.2}", st.max_s * 1e3),
@@ -149,24 +243,26 @@ fn artifact_sections() -> anyhow::Result<()> {
     ]);
 
     // 3. clustering on real features
+    let n_exp = lab.ctx.cfg.n_exp;
+    let r_half = (n_exp / 2).max(1);
     let stats = lab.stats("general")?;
     let feats = features(Metric::ExpertOutput, &lab.ctx.base, &stats.layers[0], 0)?;
     let st = bench_median(5, 50, || {
         let d = distance_matrix_serial(&feats, Distance::Euclidean);
-        std::hint::black_box(hierarchical_with(&d, 8, Linkage::Average, 1));
+        std::hint::black_box(hierarchical_with(&d, r_half, Linkage::Average, 1));
     });
     table.row(vec![
-        "HC average-linkage (n=16)".into(),
+        format!("HC average-linkage (n={n_exp})"),
         format!("{:.1}", st.median_s * 1e6),
         format!("{:.1}", st.min_s * 1e6),
         format!("{:.1}", st.max_s * 1e6),
         "us".into(),
     ]);
     let st = bench_median(5, 50, || {
-        std::hint::black_box(kmeans(&feats, 8, KmeansInit::Fixed, 100));
+        std::hint::black_box(kmeans(&feats, r_half, KmeansInit::Fixed, 100));
     });
     table.row(vec![
-        "K-means (n=16)".into(),
+        format!("K-means (n={n_exp})"),
         format!("{:.1}", st.median_s * 1e6),
         format!("{:.1}", st.min_s * 1e6),
         format!("{:.1}", st.max_s * 1e6),
@@ -182,14 +278,14 @@ fn artifact_sections() -> anyhow::Result<()> {
                     metric: Metric::ExpertOutput,
                     merge: hc_smoe::merging::MergeStrategy::Frequency,
                 },
-                8,
+                r_half,
                 "general",
             )
             .unwrap(),
         );
     });
     table.row(vec![
-        "HC-SMoE plan+apply (r=8)".into(),
+        format!("HC-SMoE plan+apply (r={r_half})"),
         format!("{:.2}", st.median_s * 1e3),
         format!("{:.2}", st.min_s * 1e3),
         format!("{:.2}", st.max_s * 1e3),
@@ -289,13 +385,38 @@ fn main() -> anyhow::Result<()> {
     )?;
     println!("wrote {BENCH_JSON}");
 
+    let mut btable = Table::new(
+        &format!("Native backend throughput ({threads} threads)"),
+        &["Path", "serial ms", "parallel ms", "throughput"],
+    );
+    let brows = backend_sweep(threads, &mut btable);
+    btable.print();
+    btable.append_to("bench_results.md")?;
+    let backend_measurement = if bench_support::smoke() {
+        "SMOKE MODE: single sample, harness check only — not a perf measurement"
+    } else {
+        "median of 9 (release)"
+    };
+    let backend_note = format!(
+        "{backend_measurement}; host exposes {cores} cpus; synthesized checkpoints \
+         (b=4, t=64), native backend forward/calib"
+    );
+    bench_support::write_backend_json(
+        BACKEND_JSON,
+        threads,
+        "rust/benches/perf_microbench.rs",
+        &backend_note,
+        &brows,
+    )?;
+    println!("wrote {BACKEND_JSON}");
+
     if bench_support::smoke() {
-        println!("perf_microbench: smoke mode, skipping PJRT sections");
+        println!("perf_microbench: smoke mode, skipping artifact sections");
         return Ok(());
     }
     match artifact_sections() {
         Ok(()) => {}
-        Err(e) => println!("skipping PJRT sections (artifacts not built): {e:#}"),
+        Err(e) => println!("skipping artifact sections: {e:#}"),
     }
     Ok(())
 }

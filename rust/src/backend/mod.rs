@@ -1,0 +1,153 @@
+//! Execution backends: where model forwards actually run.
+//!
+//! Every consumer of model execution ([`crate::model::ModelContext`], and
+//! through it the evaluator, the calibration pass, the serving layer and
+//! the bench harness) talks to a [`Backend`] trait object. Two
+//! implementations ship:
+//!
+//! * [`native::NativeBackend`] — a pure-Rust CPU interpreter of the
+//!   simulated SMoE transformer family (`qwensim`, `mixsim`, `dssim`). It
+//!   executes directly from [`crate::weights::Weights`] + a
+//!   [`crate::config::ModelCfg`], needs no HLO artifacts, no PJRT plugin
+//!   and no Python, and is the **default**. Its dense matmuls run through
+//!   [`crate::tensor::matmul_blocked_with`], so it inherits the
+//!   [`crate::parallel`] scoped-pool determinism contract.
+//! * [`pjrt::PjrtBackend`] — the original path: compiles the AOT-lowered
+//!   HLO text artifacts with the `xla` PJRT bindings and keeps weights
+//!   resident as device buffers. Offline builds link the vendored stub, so
+//!   this backend constructs but errors on execution until real bindings
+//!   are swapped in (see `DESIGN.md`, "Offline-environment notes").
+//!
+//! Selection is at runtime via the `HCSMOE_BACKEND` environment variable
+//! (`native` | `pjrt`, default `native`); no call site changes between
+//! them. Model variants are opaque [`ModelState`] handles so each backend
+//! can keep whatever resident form it wants (a weight copy for native,
+//! device buffers for PJRT).
+
+pub mod native;
+pub mod pjrt;
+
+use std::any::Any;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Artifacts, ModelCfg};
+use crate::tensor::Tensor;
+use crate::weights::Weights;
+
+/// An opaque, backend-specific resident model variant.
+///
+/// Created by [`Backend::load_model`] and only meaningful to the backend
+/// that produced it; backends downcast via [`ModelState::as_any`].
+pub trait ModelState {
+    /// Downcast support (each backend recovers its own concrete state).
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// A model-execution engine.
+///
+/// One backend instance is bound to one model configuration (the
+/// [`ModelCfg`] passed at construction). All tensor interfaces mirror the
+/// AOT-lowered HLO entry points so the two implementations are
+/// interchangeable:
+///
+/// * `run_logits` is the `lm_logits_*` scoring forward: token ids and an
+///   additive router mask in, next-token logits out;
+/// * `run_calib` is the `calib_*` statistics pass returning the 8-tuple
+///   of per-layer tensors described in [`crate::calib`].
+pub trait Backend {
+    /// Short backend identifier (`"native"` / `"pjrt"`), used in logs.
+    fn name(&self) -> &'static str;
+
+    /// Prepare a weight set for repeated execution.
+    ///
+    /// `n_slots` is the number of physical expert slots per layer:
+    /// `cfg.n_exp` for the full layout (merging duplicates merged experts
+    /// into every member slot), or `r < n_exp` for a compact variant
+    /// produced by [`crate::weights::Weights::to_compact`].
+    fn load_model(&self, weights: &Weights, n_slots: usize) -> Result<Box<dyn ModelState>>;
+
+    /// One scoring forward: `ids` is a flattened `[b, t]` i32 batch,
+    /// `mask` the additive `[n_layer * n_exp]` router mask, and `remap`
+    /// the optional `[n_layer * n_exp]` expert→slot table used by compact
+    /// variants. Returns logits `[b, t, vocab]`.
+    fn run_logits(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        b: usize,
+        t: usize,
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Tensor>;
+
+    /// One calibration pass over a flattened `[b, t]` batch; returns the
+    /// 8 stacked statistics tensors (`mean_out`, `counts`, `probs_sum`,
+    /// `gate_sum`, `rl_sub`, `raw_sub`, `act_sub`, `hid_sub` — see
+    /// [`crate::calib::LayerStats`]). `t_sub`/`t_act` size the subsampled
+    /// profiles.
+    fn run_calib(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        b: usize,
+        t: usize,
+        t_sub: usize,
+        t_act: usize,
+    ) -> Result<Vec<Tensor>>;
+}
+
+/// Environment variable selecting the execution backend.
+pub const BACKEND_ENV: &str = "HCSMOE_BACKEND";
+
+/// Construct the backend selected by [`BACKEND_ENV`] (default: native).
+pub fn from_env(arts: &Artifacts, cfg: &ModelCfg) -> Result<Box<dyn Backend>> {
+    let choice = std::env::var(BACKEND_ENV).unwrap_or_else(|_| "native".into());
+    match choice.as_str() {
+        "native" | "" => Ok(Box::new(native::NativeBackend::new(cfg.clone()))),
+        "pjrt" => Ok(Box::new(pjrt::PjrtBackend::new(arts.clone(), cfg.clone())?)),
+        other => Err(anyhow!(
+            "unknown {BACKEND_ENV}={other:?} (expected \"native\" or \"pjrt\")"
+        )),
+    }
+}
+
+/// Downcast a [`ModelState`] to the concrete type `T` a backend expects.
+pub(crate) fn downcast_state<'a, T: 'static>(
+    state: &'a dyn ModelState,
+    backend: &str,
+) -> Result<&'a T> {
+    state
+        .as_any()
+        .downcast_ref::<T>()
+        .ok_or_else(|| anyhow!("model state was not created by the {backend} backend"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_is_the_default_selection() {
+        // from_env is driven by the process environment; rather than mutate
+        // it (racy across test threads), check the default construction
+        // path directly.
+        let cfg = crate::config::ModelCfg {
+            name: "t".into(),
+            n_layer: 1,
+            d: 4,
+            m: 4,
+            n_exp: 2,
+            k: 1,
+            heads: 1,
+            vocab: 8,
+            t_max: 8,
+            shared: false,
+            m_shared: 4,
+            cap_factor: 2.0,
+            block_c: 1,
+        };
+        let b = native::NativeBackend::new(cfg);
+        assert_eq!(b.name(), "native");
+    }
+}

@@ -1,0 +1,698 @@
+//! Pure-Rust CPU execution of the simulated SMoE transformer family.
+//!
+//! Implements, operation for operation, the reference semantics of
+//! `python/compile/model.py`:
+//!
+//! * embedding + learned positions, pre-norm residual blocks
+//!   (`h += attn(rmsnorm(h))`, `h += moe(rmsnorm(h))`), final RMSNorm and
+//!   a weight-tied logits head (`h @ embedᵀ`);
+//! * causal multi-head attention with the same `softmax(QKᵀ/√d_h)` scores;
+//! * the SMoE FFN block of Eqs. (1)–(3): a linear router, top-k selection
+//!   as k rounds of argmax (first index wins ties) with softmax over the
+//!   selected logits, **capacity-based dispatch** (queue position per
+//!   expert in token-major order, tokens beyond `cfg.capacity` dropped —
+//!   identical drop rule to the Pallas dispatch) and SwiGLU experts;
+//! * the dense calibration pass of `forward_calib`, producing the exact
+//!   8-tuple of statistics tensors the [`crate::calib`] module unpacks.
+//!
+//! Matrix products go through [`crate::tensor::matmul_blocked_with`], so
+//! the forward inherits the [`crate::parallel`] subsystem: outputs are
+//! bit-identical at any thread count, and the `*_with(threads)` entry
+//! points below give benches explicit serial-vs-parallel control. The
+//! [`NativeBackend`] trait impl auto-gates the thread count on the
+//! per-call work estimate (same policy as every other hot path).
+
+use anyhow::{ensure, Result};
+
+use crate::config::ModelCfg;
+use crate::parallel;
+use crate::tensor::{dot, matmul_blocked_with, Tensor};
+use crate::weights::Weights;
+
+use super::{downcast_state, Backend, ModelState};
+
+/// RMSNorm epsilon (mirrors `model.py::rmsnorm`).
+const RMS_EPS: f32 = 1e-6;
+
+/// The native CPU backend: executes straight from host weights.
+pub struct NativeBackend {
+    cfg: ModelCfg,
+}
+
+/// Resident native variant: a weight copy plus its physical slot count.
+struct NativeModel {
+    weights: Weights,
+    n_slots: usize,
+}
+
+impl ModelState for NativeModel {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl NativeBackend {
+    /// Bind the backend to one model configuration.
+    pub fn new(cfg: ModelCfg) -> Self {
+        Self { cfg }
+    }
+
+    /// Worker count for one forward over `tok` tokens: parallel only when
+    /// the dominant matmul (the vocab-sized logits head) clears the
+    /// [`parallel::PAR_AUTO_WORK`] gate.
+    fn auto_threads(&self, tok: usize) -> usize {
+        let head = self.cfg.vocab.max(4 * self.cfg.d);
+        if tok * self.cfg.d * head >= parallel::PAR_AUTO_WORK {
+            parallel::default_threads()
+        } else {
+            1
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load_model(&self, weights: &Weights, n_slots: usize) -> Result<Box<dyn ModelState>> {
+        ensure!(
+            weights.n_experts()? == n_slots,
+            "weight set has {} expert slots, expected {n_slots}",
+            weights.n_experts()?
+        );
+        Ok(Box::new(NativeModel { weights: weights.clone(), n_slots }))
+    }
+
+    fn run_logits(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        b: usize,
+        t: usize,
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Tensor> {
+        let m: &NativeModel = downcast_state(state, self.name())?;
+        forward_logits_with(
+            &self.cfg,
+            &m.weights,
+            ids,
+            b,
+            t,
+            mask,
+            remap,
+            m.n_slots,
+            self.auto_threads(b * t),
+        )
+    }
+
+    fn run_calib(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        b: usize,
+        t: usize,
+        t_sub: usize,
+        t_act: usize,
+    ) -> Result<Vec<Tensor>> {
+        let m: &NativeModel = downcast_state(state, self.name())?;
+        ensure!(
+            m.n_slots == self.cfg.n_exp,
+            "calibration runs on the full {}-expert layout",
+            self.cfg.n_exp
+        );
+        forward_calib_with(
+            &self.cfg,
+            &m.weights,
+            ids,
+            b,
+            t,
+            t_sub,
+            t_act,
+            self.auto_threads(b * t),
+        )
+    }
+}
+
+/// Work-gated matmul: route through the blocked parallel kernel only when
+/// this product clears the auto-dispatch threshold (a scoped spawn costs
+/// ~50µs; tiny products must stay serial to win).
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let t = if m * k * n >= parallel::PAR_AUTO_WORK {
+        threads
+    } else {
+        1
+    };
+    matmul_blocked_with(a, b, m, k, n, t)
+}
+
+/// `x * sigmoid(x)` (`jax.nn.silu`).
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Row-wise RMSNorm: `x * w * rsqrt(mean(x²) + eps)` per `d`-row.
+fn rmsnorm_rows(h: &[f32], wln: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; h.len()];
+    for (dst, src) in out.chunks_mut(d).zip(h.chunks(d)) {
+        let ms = src.iter().map(|x| x * x).sum::<f32>() / d as f32;
+        let s = 1.0 / (ms + RMS_EPS).sqrt();
+        for j in 0..d {
+            dst[j] = src[j] * wln[j] * s;
+        }
+    }
+    out
+}
+
+fn layer_tensor<'a>(w: &'a Weights, layer: usize, suffix: &str) -> Result<&'a Tensor> {
+    w.get(&Weights::layer_key(layer, suffix))
+}
+
+/// Token embedding + learned positions: `h[i] = embed[ids[i]] + pos[i % t]`.
+fn embed_tokens(cfg: &ModelCfg, w: &Weights, ids: &[i32], t: usize) -> Result<Vec<f32>> {
+    let d = cfg.d;
+    let embed = w.get("embed")?;
+    ensure!(
+        embed.shape() == [cfg.vocab, d],
+        "embed shape {:?} != [{}, {d}]",
+        embed.shape(),
+        cfg.vocab
+    );
+    let pos = w.get("pos")?;
+    ensure!(pos.shape()[0] >= t, "sequence length {t} exceeds t_max {}", pos.shape()[0]);
+    let mut h = vec![0f32; ids.len() * d];
+    for (i, &id) in ids.iter().enumerate() {
+        ensure!(
+            id >= 0 && (id as usize) < cfg.vocab,
+            "token id {id} out of vocab range {}",
+            cfg.vocab
+        );
+        let e = &embed.data()[(id as usize) * d..(id as usize) * d + d];
+        let p = &pos.data()[(i % t) * d..(i % t) * d + d];
+        for j in 0..d {
+            h[i * d + j] = e[j] + p[j];
+        }
+    }
+    Ok(h)
+}
+
+/// Causal multi-head self-attention over one `[t, d]` sequence,
+/// pre-projected input `x`; returns the `wo`-projected output.
+fn attention_seq(
+    cfg: &ModelCfg,
+    w: &Weights,
+    layer: usize,
+    x: &[f32],
+    t: usize,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let d = cfg.d;
+    let hd = d / cfg.heads;
+    ensure!(hd * cfg.heads == d, "heads must divide d");
+    let wq = layer_tensor(w, layer, "attn.wq")?;
+    let wk = layer_tensor(w, layer, "attn.wk")?;
+    let wv = layer_tensor(w, layer, "attn.wv")?;
+    let wo = layer_tensor(w, layer, "attn.wo")?;
+    let q = mm(x, wq.data(), t, d, d, threads);
+    let k = mm(x, wk.data(), t, d, d, threads);
+    let v = mm(x, wv.data(), t, d, d, threads);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; t * d];
+    let mut row = Vec::with_capacity(t);
+    for head in 0..cfg.heads {
+        let off = head * hd;
+        for i in 0..t {
+            let qi = &q[i * d + off..i * d + off + hd];
+            row.clear();
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let kj = &k[j * d + off..j * d + off + hd];
+                let s = dot(qi, kj) * scale;
+                mx = mx.max(s);
+                row.push(s);
+            }
+            let mut z = 0f32;
+            for s in row.iter_mut() {
+                *s = (*s - mx).exp();
+                z += *s;
+            }
+            let out = &mut ctx[i * d + off..i * d + off + hd];
+            for (j, &e) in row.iter().enumerate() {
+                let a = e / z;
+                let vj = &v[j * d + off..j * d + off + hd];
+                for u in 0..hd {
+                    out[u] += a * vj[u];
+                }
+            }
+        }
+    }
+    Ok(mm(&ctx, wo.data(), t, d, d, threads))
+}
+
+/// Eq. (3): top-k router selection over one masked logit row as k rounds
+/// of argmax (first index wins ties, matching `jnp.argmax`), with softmax
+/// over the k selected logits. All buffers are caller-owned scratch so the
+/// per-token hot loop stays allocation-free.
+fn route_topk(
+    masked: &[f32],
+    k: usize,
+    idx: &mut Vec<usize>,
+    probs: &mut Vec<f32>,
+    work: &mut Vec<f32>,
+) {
+    idx.clear();
+    probs.clear();
+    work.clear();
+    work.extend_from_slice(masked);
+    for _ in 0..k {
+        let mut bi = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (e, &v) in work.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                bi = e;
+            }
+        }
+        idx.push(bi);
+        probs.push(bv);
+        work[bi] = f32::NEG_INFINITY;
+    }
+    let mx = probs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0f32;
+    for p in probs.iter_mut() {
+        *p = (*p - mx).exp();
+        z += *p;
+    }
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+}
+
+/// SwiGLU over a `[c, d]` token block for one `[d, m] / [m, d]` weight
+/// triple: `(silu(X Wg) ⊙ (X Wu)) Wd`. Also returns the intermediate
+/// activations when `want_act` (the calibration `act_sub` feature).
+fn swiglu_block(
+    x: &[f32],
+    wg: &[f32],
+    wu: &[f32],
+    wd: &[f32],
+    c: usize,
+    d: usize,
+    m: usize,
+    threads: usize,
+    want_act: bool,
+) -> (Vec<f32>, Option<Vec<f32>>) {
+    let g = mm(x, wg, c, d, m, threads);
+    let u = mm(x, wu, c, d, m, threads);
+    let mut act = vec![0f32; c * m];
+    for i in 0..c * m {
+        act[i] = silu(g[i]) * u[i];
+    }
+    let out = mm(&act, wd, c, m, d, threads);
+    (out, if want_act { Some(act) } else { None })
+}
+
+/// One SMoE FFN block over `tok` flattened tokens: router → top-k →
+/// capacity dispatch → per-expert SwiGLU → gated combine (+ the shared
+/// expert for `dssim`). Returns `y` with `y.len() == tok * d`.
+#[allow(clippy::too_many_arguments)]
+fn moe_layer(
+    cfg: &ModelCfg,
+    w: &Weights,
+    layer: usize,
+    hf: &[f32],
+    tok: usize,
+    mask_l: &[f32],
+    remap_l: Option<&[i32]>,
+    n_slots: usize,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let d = cfg.d;
+    let n = cfg.n_exp;
+    let router = layer_tensor(w, layer, "router")?;
+    ensure!(router.shape() == [d, n], "router shape mismatch at layer {layer}");
+    let logits = mm(hf, router.data(), tok, d, n, threads);
+    // Dispatch: queue position per expert in token-major (T*k) order —
+    // the same cumulative-count rule as the Pallas dispatch, so the same
+    // tokens are dropped at capacity.
+    let cap = cfg.capacity(tok, n_slots);
+    let mut counts = vec![0usize; n_slots];
+    let mut per_slot: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_slots];
+    let mut masked = vec![0f32; n];
+    let mut idx = Vec::with_capacity(cfg.k);
+    let mut probs = Vec::with_capacity(cfg.k);
+    let mut scratch = Vec::with_capacity(n);
+    for ti in 0..tok {
+        let row = &logits[ti * n..(ti + 1) * n];
+        for e in 0..n {
+            masked[e] = row[e] + mask_l[e];
+        }
+        route_topk(&masked, cfg.k, &mut idx, &mut probs, &mut scratch);
+        for j in 0..cfg.k {
+            let slot = match remap_l {
+                Some(rm) => rm[idx[j]] as usize,
+                None => idx[j],
+            };
+            ensure!(slot < n_slots, "remap slot {slot} out of range {n_slots}");
+            let q = counts[slot];
+            counts[slot] += 1;
+            if q < cap {
+                per_slot[slot].push((ti, probs[j]));
+            }
+        }
+    }
+    let wg = layer_tensor(w, layer, "exp.wg")?;
+    let wu = layer_tensor(w, layer, "exp.wu")?;
+    let wd = layer_tensor(w, layer, "exp.wd")?;
+    ensure!(wg.shape()[0] == n_slots, "expert tensors must have {n_slots} slots");
+    let m = wg.shape()[2];
+    let mut y = vec![0f32; tok * d];
+    for (e, assigned) in per_slot.iter().enumerate() {
+        if assigned.is_empty() {
+            continue;
+        }
+        let c = assigned.len();
+        let mut x = vec![0f32; c * d];
+        for (ri, &(ti, _)) in assigned.iter().enumerate() {
+            x[ri * d..(ri + 1) * d].copy_from_slice(&hf[ti * d..(ti + 1) * d]);
+        }
+        let (out, _) = swiglu_block(
+            &x,
+            &wg.data()[e * d * m..(e + 1) * d * m],
+            &wu.data()[e * d * m..(e + 1) * d * m],
+            &wd.data()[e * m * d..(e + 1) * m * d],
+            c,
+            d,
+            m,
+            threads,
+            false,
+        );
+        for (ri, &(ti, p)) in assigned.iter().enumerate() {
+            for j in 0..d {
+                y[ti * d + j] += p * out[ri * d + j];
+            }
+        }
+    }
+    if cfg.shared {
+        add_shared_expert(cfg, w, layer, hf, tok, threads, &mut y)?;
+    }
+    Ok(y)
+}
+
+/// `dssim`'s always-on shared expert: `y += swiglu(hf, shared.*)`.
+fn add_shared_expert(
+    cfg: &ModelCfg,
+    w: &Weights,
+    layer: usize,
+    hf: &[f32],
+    tok: usize,
+    threads: usize,
+    y: &mut [f32],
+) -> Result<()> {
+    let sg = layer_tensor(w, layer, "shared.wg")?;
+    let su = layer_tensor(w, layer, "shared.wu")?;
+    let sd = layer_tensor(w, layer, "shared.wd")?;
+    let ms = sg.shape()[1];
+    let (out, _) =
+        swiglu_block(hf, sg.data(), su.data(), sd.data(), tok, cfg.d, ms, threads, false);
+    for (yv, ov) in y.iter_mut().zip(&out) {
+        *yv += ov;
+    }
+    Ok(())
+}
+
+/// The native `lm_logits` forward with an explicit worker count.
+///
+/// `ids` is a flattened `[b, t]` batch, `mask` the additive
+/// `[n_layer * n_exp]` router mask, `remap` the optional expert→slot
+/// table for compact (`n_slots < n_exp`) variants. Returns logits
+/// `[b, t, vocab]`. Results are bit-identical at any `threads` (the
+/// [`crate::parallel`] determinism contract).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_logits_with(
+    cfg: &ModelCfg,
+    w: &Weights,
+    ids: &[i32],
+    b: usize,
+    t: usize,
+    mask: &[f32],
+    remap: Option<&[i32]>,
+    n_slots: usize,
+    threads: usize,
+) -> Result<Tensor> {
+    ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
+    ensure!(
+        mask.len() == cfg.n_layer * cfg.n_exp,
+        "mask must be [{}, {}]",
+        cfg.n_layer,
+        cfg.n_exp
+    );
+    if let Some(rm) = remap {
+        ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
+    }
+    let d = cfg.d;
+    let tok = b * t;
+    let mut h = embed_tokens(cfg, w, ids, t)?;
+    for l in 0..cfg.n_layer {
+        let ln1 = layer_tensor(w, l, "ln1")?;
+        let x1 = rmsnorm_rows(&h, ln1.data(), d);
+        for s in 0..b {
+            let a = attention_seq(cfg, w, l, &x1[s * t * d..(s + 1) * t * d], t, threads)?;
+            for (hv, av) in h[s * t * d..(s + 1) * t * d].iter_mut().zip(&a) {
+                *hv += av;
+            }
+        }
+        let ln2 = layer_tensor(w, l, "ln2")?;
+        let hf = rmsnorm_rows(&h, ln2.data(), d);
+        let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
+        let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
+        let y = moe_layer(cfg, w, l, &hf, tok, mask_l, remap_l, n_slots, threads)?;
+        for (hv, yv) in h.iter_mut().zip(&y) {
+            *hv += yv;
+        }
+    }
+    let ln_f = w.get("ln_f")?;
+    let hn = rmsnorm_rows(&h, ln_f.data(), d);
+    // weight-tied head: logits = hn @ embedᵀ
+    let embed = w.get("embed")?;
+    let mut embed_t = vec![0f32; d * cfg.vocab];
+    for vtok in 0..cfg.vocab {
+        for j in 0..d {
+            embed_t[j * cfg.vocab + vtok] = embed.data()[vtok * d + j];
+        }
+    }
+    let logits = mm(&hn, &embed_t, tok, d, cfg.vocab, threads);
+    Tensor::new(vec![b, t, cfg.vocab], logits)
+}
+
+/// The native `calib` pass with an explicit worker count: dense per-expert
+/// compute (every expert on every token, no capacity dispatch) so the
+/// Eq. (4) statistics are exact. Returns the 8 stacked `[L, ...]` tensors
+/// in the order [`crate::calib`] unpacks.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_calib_with(
+    cfg: &ModelCfg,
+    w: &Weights,
+    ids: &[i32],
+    b: usize,
+    t: usize,
+    t_sub: usize,
+    t_act: usize,
+    threads: usize,
+) -> Result<Vec<Tensor>> {
+    ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
+    let tok = b * t;
+    ensure!(
+        t_sub >= 1 && t_sub <= tok && t_act >= 1 && t_act <= t_sub,
+        "need 1 <= t_act ({t_act}) <= t_sub ({t_sub}) <= tokens ({tok})"
+    );
+    let d = cfg.d;
+    let n = cfg.n_exp;
+    let m = cfg.m;
+    let stride = tok / t_sub;
+    let sub_idx: Vec<usize> = (0..t_sub).map(|i| i * stride).collect();
+    let act_idx = &sub_idx[..t_act];
+
+    let nl = cfg.n_layer;
+    let mut mean_out = vec![0f32; nl * n * d];
+    let mut counts = vec![0f32; nl * n];
+    let mut probs_sum = vec![0f32; nl * n];
+    let mut gate_sum = vec![0f32; nl * n];
+    let mut rl_sub = vec![0f32; nl * t_sub * n];
+    let mut raw_sub = vec![0f32; nl * n * t_sub * d];
+    let mut act_sub = vec![0f32; nl * n * t_act * m];
+    let mut hid_sub = vec![0f32; nl * t_sub * d];
+
+    let mut h = embed_tokens(cfg, w, ids, t)?;
+    let mut idx = Vec::with_capacity(cfg.k);
+    let mut probs = Vec::with_capacity(cfg.k);
+    let mut scratch = Vec::with_capacity(n);
+    for l in 0..nl {
+        let ln1 = layer_tensor(w, l, "ln1")?;
+        let x1 = rmsnorm_rows(&h, ln1.data(), d);
+        for s in 0..b {
+            let a = attention_seq(cfg, w, l, &x1[s * t * d..(s + 1) * t * d], t, threads)?;
+            for (hv, av) in h[s * t * d..(s + 1) * t * d].iter_mut().zip(&a) {
+                *hv += av;
+            }
+        }
+        let ln2 = layer_tensor(w, l, "ln2")?;
+        let hf = rmsnorm_rows(&h, ln2.data(), d);
+        let router = layer_tensor(w, l, "router")?;
+        let logits = mm(&hf, router.data(), tok, d, n, threads);
+
+        // dense per-expert outputs + intermediate activations
+        let wg = layer_tensor(w, l, "exp.wg")?;
+        let wu = layer_tensor(w, l, "exp.wu")?;
+        let wd = layer_tensor(w, l, "exp.wd")?;
+        ensure!(wg.shape()[0] == n, "calibration needs the full {n}-expert layout");
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for e in 0..n {
+            let (out, act) = swiglu_block(
+                &hf,
+                &wg.data()[e * d * m..(e + 1) * d * m],
+                &wu.data()[e * d * m..(e + 1) * d * m],
+                &wd.data()[e * m * d..(e + 1) * m * d],
+                tok,
+                d,
+                m,
+                threads,
+                true,
+            );
+            let acc = &mut mean_out[(l * n + e) * d..(l * n + e + 1) * d];
+            for ti in 0..tok {
+                for j in 0..d {
+                    acc[j] += out[ti * d + j];
+                }
+            }
+            for v in acc.iter_mut() {
+                *v /= tok as f32;
+            }
+            let raw = &mut raw_sub[((l * n + e) * t_sub) * d..((l * n + e + 1) * t_sub) * d];
+            for (si, &ti) in sub_idx.iter().enumerate() {
+                raw[si * d..(si + 1) * d].copy_from_slice(&out[ti * d..(ti + 1) * d]);
+            }
+            let act = act.expect("want_act requested");
+            let dst = &mut act_sub[((l * n + e) * t_act) * m..((l * n + e + 1) * t_act) * m];
+            for (si, &ti) in act_idx.iter().enumerate() {
+                dst[si * m..(si + 1) * m].copy_from_slice(&act[ti * m..(ti + 1) * m]);
+            }
+            outs.push(out);
+        }
+
+        // routing statistics + dense gated combine
+        let mut y = vec![0f32; tok * d];
+        for ti in 0..tok {
+            let row = &logits[ti * n..(ti + 1) * n];
+            route_topk(row, cfg.k, &mut idx, &mut probs, &mut scratch);
+            for j in 0..cfg.k {
+                let e = idx[j];
+                counts[l * n + e] += 1.0;
+                gate_sum[l * n + e] += probs[j];
+                let dst = &mut y[ti * d..(ti + 1) * d];
+                let src = &outs[e][ti * d..(ti + 1) * d];
+                for u in 0..d {
+                    dst[u] += probs[j] * src[u];
+                }
+            }
+            // full-softmax router scores (S-prune criterion)
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            for &v in row {
+                z += (v - mx).exp();
+            }
+            for e in 0..n {
+                probs_sum[l * n + e] += (row[e] - mx).exp() / z;
+            }
+        }
+        for (si, &ti) in sub_idx.iter().enumerate() {
+            let dst = &mut rl_sub[(l * t_sub + si) * n..(l * t_sub + si + 1) * n];
+            dst.copy_from_slice(&logits[ti * n..(ti + 1) * n]);
+            let hdst = &mut hid_sub[(l * t_sub + si) * d..(l * t_sub + si + 1) * d];
+            hdst.copy_from_slice(&hf[ti * d..(ti + 1) * d]);
+        }
+        if cfg.shared {
+            add_shared_expert(cfg, w, l, &hf, tok, threads, &mut y)?;
+        }
+        for (hv, yv) in h.iter_mut().zip(&y) {
+            *hv += yv;
+        }
+    }
+    Ok(vec![
+        Tensor::new(vec![nl, n, d], mean_out)?,
+        Tensor::new(vec![nl, n], counts)?,
+        Tensor::new(vec![nl, n], probs_sum)?,
+        Tensor::new(vec![nl, n], gate_sum)?,
+        Tensor::new(vec![nl, t_sub, n], rl_sub)?,
+        Tensor::new(vec![nl, n, t_sub, d], raw_sub)?,
+        Tensor::new(vec![nl, n, t_act, m], act_sub)?,
+        Tensor::new(vec![nl, t_sub, d], hid_sub)?,
+    ])
+}
+
+/// Convenience wrapper used by tests/benches: auto-threaded scoring
+/// forward on the full expert layout with a keep-everything mask.
+pub fn forward_logits(
+    cfg: &ModelCfg,
+    w: &Weights,
+    ids: &[i32],
+    b: usize,
+    t: usize,
+) -> Result<Tensor> {
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let threads = NativeBackend::new(cfg.clone()).auto_threads(b * t);
+    forward_logits_with(cfg, w, ids, b, t, &mask, None, cfg.n_exp, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_topk_orders_and_normalises() {
+        let mut idx = Vec::new();
+        let mut probs = Vec::new();
+        let mut work = Vec::new();
+        route_topk(&[0.1, 2.0, -1.0, 2.0], 2, &mut idx, &mut probs, &mut work);
+        // ties break to the first index, like jnp.argmax
+        assert_eq!(idx, vec![1, 3]);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((probs[0] - 0.5).abs() < 1e-6, "equal logits split evenly");
+    }
+
+    #[test]
+    fn route_topk_respects_mask() {
+        let mut idx = Vec::new();
+        let mut probs = Vec::new();
+        let mut work = Vec::new();
+        let mask = crate::pipeline::MASK_OFF;
+        route_topk(&[5.0 + mask, 1.0, 0.5, 0.0], 2, &mut idx, &mut probs, &mut work);
+        assert_eq!(idx, vec![1, 2], "masked expert 0 must lose to live ones");
+    }
+
+    #[test]
+    fn silu_matches_definition() {
+        for x in [-3.0f32, -0.5, 0.0, 0.5, 3.0] {
+            let sig = 1.0 / (1.0 + (-x).exp());
+            assert!((silu(x) - x * sig).abs() < 1e-6);
+        }
+        assert_eq!(silu(0.0), 0.0);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        // a row of all-equal values x has mean(x²)=x², so the normalised
+        // row is x/|x| * w (up to eps)
+        let h = vec![2.0f32, 2.0, 2.0, 2.0, -3.0, -3.0, -3.0, -3.0];
+        let wln = vec![1.0f32; 4];
+        let out = rmsnorm_rows(&h, &wln, 4);
+        for v in &out[..4] {
+            assert!((v - 1.0).abs() < 1e-3, "{v}");
+        }
+        for v in &out[4..] {
+            assert!((v + 1.0).abs() < 1e-3, "{v}");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT execution backend: the AOT-lowered HLO artifacts compiled and run
+//! through the `xla` bindings (see [`crate::runtime`]).
+//!
+//! Weights are uploaded **once** per model variant and kept resident as
+//! device buffers; only the small per-call inputs (token ids, router mask,
+//! remap table) travel per execution (DESIGN.md §"Key design decisions").
+//! Offline builds link the vendored `xla` stub, so construction succeeds
+//! but every execution reports the missing PJRT plugin — swap real
+//! bindings into `rust/Cargo.toml` to make this backend live.
+
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{ensure, Result};
+
+use crate::config::{Artifacts, ModelCfg};
+use crate::runtime::{Executable, Input, Runtime};
+use crate::tensor::Tensor;
+use crate::weights::Weights;
+
+use super::{downcast_state, Backend, ModelState};
+
+/// The PJRT backend: one CPU client plus lazily compiled executables.
+pub struct PjrtBackend {
+    arts: Artifacts,
+    cfg: ModelCfg,
+    rt: Arc<Runtime>,
+    lm_exe: OnceLock<Executable>,
+    calib_exe: OnceLock<Executable>,
+}
+
+/// Resident PJRT variant: device buffers (+ a dedicated compact
+/// executable when `n_slots < n_exp`, which needs different parameter
+/// shapes than the shared `lm_logits` one).
+struct PjrtModel {
+    bufs: Vec<xla::PjRtBuffer>,
+    n_slots: usize,
+    compact_exe: Option<Executable>,
+}
+
+impl ModelState for PjrtModel {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// `OnceLock::get_or_try_init` is unstable; this free function provides
+/// the same fallible memoisation (a lost init race recomputes, then
+/// discards).
+fn exe_cached(
+    cell: &OnceLock<Executable>,
+    load: impl FnOnce() -> Result<Executable>,
+) -> Result<&Executable> {
+    if let Some(exe) = cell.get() {
+        return Ok(exe);
+    }
+    let exe = load()?;
+    Ok(cell.get_or_init(|| exe))
+}
+
+impl PjrtBackend {
+    /// Bind a PJRT CPU client to one model's artifact set.
+    pub fn new(arts: Artifacts, cfg: ModelCfg) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        Ok(Self { arts, cfg, rt, lm_exe: OnceLock::new(), calib_exe: OnceLock::new() })
+    }
+
+    fn lm_exe(&self) -> Result<&Executable> {
+        exe_cached(&self.lm_exe, || {
+            self.rt.load_hlo(self.arts.lm_logits_hlo(&self.cfg.name))
+        })
+    }
+
+    fn calib_exe(&self) -> Result<&Executable> {
+        exe_cached(&self.calib_exe, || {
+            self.rt.load_hlo(self.arts.calib_hlo(&self.cfg.name))
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load_model(&self, weights: &Weights, n_slots: usize) -> Result<Box<dyn ModelState>> {
+        ensure!(
+            weights.n_experts()? == n_slots,
+            "weight set has {} expert slots, expected {n_slots}",
+            weights.n_experts()?
+        );
+        let compact_exe = if n_slots == self.cfg.n_exp {
+            None
+        } else {
+            Some(
+                self.rt
+                    .load_hlo(self.arts.lm_logits_compact_hlo(&self.cfg.name, n_slots))?,
+            )
+        };
+        let bufs = weights
+            .ordered()
+            .iter()
+            .map(|t| self.rt.upload_f32(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Box::new(PjrtModel { bufs, n_slots, compact_exe }))
+    }
+
+    fn run_logits(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        b: usize,
+        t: usize,
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Tensor> {
+        let m: &PjrtModel = downcast_state(state, self.name())?;
+        ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
+        let mask_t = Tensor::new(vec![self.cfg.n_layer, self.cfg.n_exp], mask.to_vec())?;
+        let mut inputs = vec![Input::I32(ids.to_vec(), vec![b, t]), Input::F32(mask_t)];
+        if let Some(rm) = remap {
+            inputs.push(Input::I32(
+                rm.to_vec(),
+                vec![self.cfg.n_layer, self.cfg.n_exp],
+            ));
+        }
+        let exe = match &m.compact_exe {
+            Some(exe) => exe,
+            None => self.lm_exe()?,
+        };
+        let outs = exe.run_with(&m.bufs, &inputs)?;
+        ensure!(outs.len() == 1, "lm_logits returns a 1-tuple");
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn run_calib(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        b: usize,
+        t: usize,
+        _t_sub: usize,
+        _t_act: usize,
+    ) -> Result<Vec<Tensor>> {
+        // t_sub/t_act are baked into the lowered calib executable; the
+        // caller's values come from the same manifest the artifacts were
+        // generated with.
+        let m: &PjrtModel = downcast_state(state, self.name())?;
+        ensure!(ids.len() == b * t, "calib ids must be exactly [{b}, {t}]");
+        ensure!(m.n_slots == self.cfg.n_exp, "calibration needs the full layout");
+        self.calib_exe()?
+            .run_with(&m.bufs, &[Input::I32(ids.to_vec(), vec![b, t])])
+    }
+}

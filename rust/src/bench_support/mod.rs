@@ -2,16 +2,25 @@
 //! and the examples.
 //!
 //! `Lab` wraps a model with memoised calibration statistics and a *disk*
-//! results cache (`artifacts/cache/`): every (method, r, domain, task-set)
-//! evaluation is stored once, so `cargo bench` re-runs and benches sharing
-//! configurations (e.g. Fig. 1 reuses Table 2 rows) do not re-execute
-//! minutes of PJRT work.
+//! results cache (`<artifacts>/cache/`): every (method, r, domain,
+//! task-set) evaluation is stored once, so `cargo bench` re-runs and
+//! benches sharing configurations (e.g. Fig. 1 reuses Table 2 rows) do
+//! not re-execute minutes of model work.
+//!
+//! Artifacts resolve through [`synth::ensure_artifacts`]: real AOT output
+//! wins when present, otherwise a deterministic synthetic set is generated
+//! in-process, so every bench target and example *runs to completion*
+//! offline instead of skipping.
+
+pub mod synth;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
+
+pub use synth::{ensure_artifacts, synthesize_artifacts};
 
 use crate::calib::CalibStats;
 use crate::config::Artifacts;
@@ -77,13 +86,18 @@ pub fn run_smoke(target: &str) -> Result<()> {
 /// One serial-vs-parallel measurement row for `BENCH_parallel.json`.
 #[derive(Debug, Clone)]
 pub struct ParallelBenchRow {
+    /// Measured hot path (e.g. `distance_matrix`).
     pub path: String,
+    /// Experts in the synthetic workload.
     pub n_experts: usize,
+    /// Median wall-clock, single worker.
     pub serial_ms: f64,
+    /// Median wall-clock at the benchmarked thread count.
     pub parallel_ms: f64,
 }
 
 impl ParallelBenchRow {
+    /// Serial-over-parallel wall-clock ratio.
     pub fn speedup(&self) -> f64 {
         if self.parallel_ms > 0.0 {
             self.serial_ms / self.parallel_ms
@@ -130,25 +144,116 @@ pub fn write_parallel_json(
     std::fs::write(path, out)
 }
 
+/// One tokens/s measurement row for `BENCH_backend.json`: the native
+/// backend scoring forward, serial vs parallel.
+#[derive(Debug, Clone)]
+pub struct BackendBenchRow {
+    /// Measured path (e.g. `forward_logits`).
+    pub path: String,
+    /// Experts per layer of the measured model.
+    pub n_experts: usize,
+    /// Tokens scored per forward call.
+    pub tokens: usize,
+    /// Median wall-clock per call, single worker thread.
+    pub serial_ms: f64,
+    /// Median wall-clock per call at the benchmarked thread count.
+    pub parallel_ms: f64,
+}
+
+impl BackendBenchRow {
+    /// Serial throughput in tokens per second.
+    pub fn serial_tok_s(&self) -> f64 {
+        if self.serial_ms > 0.0 {
+            self.tokens as f64 / (self.serial_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Parallel throughput in tokens per second.
+    pub fn parallel_tok_s(&self) -> f64 {
+        if self.parallel_ms > 0.0 {
+            self.tokens as f64 / (self.parallel_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Parallel-over-serial speedup.
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_ms > 0.0 {
+            self.serial_ms / self.parallel_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Write the machine-readable native-backend throughput report
+/// (`BENCH_backend.json`). Hand-rolled JSON like
+/// [`write_parallel_json`]; the schema is stable — later PRs append rows
+/// with new `path` names rather than reshaping the file.
+pub fn write_backend_json(
+    path: &str,
+    threads: usize,
+    generator: &str,
+    note: &str,
+    rows: &[BackendBenchRow],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"native_backend\",\n");
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"generator\": \"{}\",\n", json_escape(generator)));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"path\": \"{}\", \"n_experts\": {}, \"tokens\": {}, \
+             \"serial_ms\": {:.4}, \"parallel_ms\": {:.4}, \
+             \"serial_tok_s\": {:.1}, \"parallel_tok_s\": {:.1}, \"speedup\": {:.2}}}{comma}\n",
+            json_escape(&r.path),
+            r.n_experts,
+            r.tokens,
+            r.serial_ms,
+            r.parallel_ms,
+            r.serial_tok_s(),
+            r.parallel_tok_s(),
+            r.speedup()
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// The 4-task subset used by the paper's ablation tables (Tables 4, 5).
 pub const ABLATION_TASKS: [&str; 4] = ["arc_c", "boolq", "obqa", "rte"];
 
+/// A model + memoised calibration stats + the on-disk results cache.
 pub struct Lab {
+    /// The loaded model under study.
     pub ctx: ModelContext,
     stats: RefCell<HashMap<String, Rc<CalibStats>>>,
     cache_dir: std::path::PathBuf,
 }
 
 impl Lab {
+    /// Open a lab on the discovered (or synthesized) artifact set.
     pub fn new(model: &str) -> Result<Self> {
-        let arts = Artifacts::discover();
+        Self::at(ensure_artifacts()?, model)
+    }
+
+    /// Open a lab on an explicit artifact directory.
+    pub fn at(arts: Artifacts, model: &str) -> Result<Self> {
         let ctx = ModelContext::load(&arts, model)
-            .context("loading model context (run `make artifacts` first)")?;
+            .context("loading model context (artifacts present but unreadable?)")?;
         let cache_dir = arts.root.join("cache");
         std::fs::create_dir_all(&cache_dir)?;
         Ok(Self { ctx, stats: Default::default(), cache_dir })
     }
 
+    /// Calibration statistics for `domain`, memoised per lab.
     pub fn stats(&self, domain: &str) -> Result<Rc<CalibStats>> {
         if let Some(s) = self.stats.borrow().get(domain) {
             return Ok(Rc::clone(s));
@@ -244,6 +349,7 @@ impl Lab {
         ev.prf(&model, task)
     }
 
+    /// P/R/F1 of the original model on one task.
     pub fn prf_original(&self, task: &str) -> Result<Prf> {
         let ev = Evaluator::new(&self.ctx)?;
         let model = self.ctx.load_original()?;

@@ -1,0 +1,313 @@
+//! In-process artifact synthesis: a small deterministic checkpoint +
+//! dataset set so the full compress → eval → serve flow runs with **zero
+//! Python, PJRT or network** in the loop.
+//!
+//! `python/compile/aot.py` produces the real trained artifacts; this
+//! module produces structurally identical ones (same `manifest.txt` /
+//! `.cfg` keys, same HCWT/HCEV/HCTS bytes — see `FORMATS.md`) at toy
+//! scale with random-init weights, purely from a seed. Scores are
+//! near-chance (nothing is trained), but every pipeline stage — the
+//! calibration pass, clustering, merging, pruning, zero-shot scoring,
+//! perplexity, serving — executes for real on the native backend, which
+//! is exactly what CI's `backend-e2e` smoke and the offline examples
+//! need.
+//!
+//! [`ensure_artifacts`] is the entry point the bench harness and examples
+//! use: real artifacts win when present; otherwise a synthetic set is
+//! generated once (default `./artifacts-synth`, kept separate from the
+//! `./artifacts` directory `make artifacts` owns).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use byteorder::{LittleEndian, WriteBytesExt};
+
+use crate::config::{Artifacts, ModelCfg};
+use crate::util::Rng;
+use crate::weights::Weights;
+
+/// Seed for the default synthetic artifact set (checkpoint + datasets).
+pub const SYNTH_SEED: u64 = 0x5EED_AB1E;
+
+/// Directory used when no real artifacts exist and `HCSMOE_ARTIFACTS` is
+/// unset.
+pub const SYNTH_DIR: &str = "artifacts-synth";
+
+/// Eval batch shape of the synthetic manifest.
+pub const SYNTH_EVAL: (usize, usize) = (8, 32);
+/// Calibration batch shape of the synthetic manifest.
+pub const SYNTH_CALIB: (usize, usize) = (4, 64);
+/// Subsampled-statistics sizes (t_sub, t_act) of the synthetic manifest.
+pub const SYNTH_SUB: (usize, usize) = (64, 32);
+/// Items per synthetic benchmark task.
+pub const SYNTH_N_ITEMS: usize = 24;
+
+/// The benchmark tasks a synthetic artifact set ships (the paper's 8 plus
+/// the held-out `med` task of Table 15).
+pub const SYNTH_TASKS: [&str; 9] =
+    ["arc_e", "arc_c", "boolq", "hella", "mmlu", "obqa", "rte", "wino", "med"];
+
+/// Calibration/analysis token-stream domains a synthetic set ships.
+pub const SYNTH_DOMAINS: [&str; 5] = ["general", "math", "code", "med", "ppl_heldout"];
+
+/// Toy-scale configs for the three simulated families (same family names
+/// as the real artifacts so every hardcoded `"qwensim"` call site works).
+fn synth_cfgs() -> Vec<(ModelCfg, Vec<usize>)> {
+    let base = ModelCfg {
+        name: String::new(),
+        n_layer: 2,
+        d: 32,
+        m: 32,
+        n_exp: 8,
+        k: 2,
+        heads: 2,
+        vocab: 96,
+        t_max: 64,
+        shared: false,
+        m_shared: 32,
+        // roomy capacity: synthetic routers are near-uniform, and a drop-free
+        // dispatch keeps the full/compact layouts and the serving batcher in
+        // numerical agreement (capacity-drop semantics are pinned separately
+        // by rust/tests/backend_native.rs)
+        cap_factor: 4.0,
+        block_c: 8,
+    };
+    let qwensim = ModelCfg { name: "qwensim".into(), ..base.clone() };
+    let mixsim = ModelCfg { name: "mixsim".into(), n_exp: 4, m: 64, ..base.clone() };
+    let dssim = ModelCfg { name: "dssim".into(), m: 16, shared: true, ..base };
+    vec![
+        (qwensim, vec![6, 4, 3, 2]),
+        (mixsim, vec![3, 2]),
+        (dssim, vec![6, 4]),
+    ]
+}
+
+/// Use real artifacts when present, else synthesize a deterministic set.
+///
+/// Resolution order: the `HCSMOE_ARTIFACTS` / `./artifacts` location from
+/// [`Artifacts::discover`] wins if its `manifest.txt` exists; otherwise a
+/// synthetic set is generated (once) into `HCSMOE_ARTIFACTS` if set, else
+/// [`SYNTH_DIR`].
+pub fn ensure_artifacts() -> Result<Artifacts> {
+    let arts = Artifacts::discover();
+    if arts.root.join("manifest.txt").exists() {
+        return Ok(arts);
+    }
+    let root = if std::env::var_os("HCSMOE_ARTIFACTS").is_some() {
+        arts.root.clone()
+    } else {
+        PathBuf::from(SYNTH_DIR)
+    };
+    let arts = Artifacts::new(&root);
+    if !arts.root.join("manifest.txt").exists() {
+        synthesize_artifacts(&root, SYNTH_SEED)?;
+        eprintln!(
+            "hc-smoe: no AOT artifacts found; synthesized an offline set at {}",
+            root.display()
+        );
+    }
+    Ok(arts)
+}
+
+/// Write a complete synthetic artifact set under `root`: `manifest.txt`,
+/// a `.cfg` + `.hcwt` checkpoint per model family, HCEV benchmarks under
+/// `eval/` and HCTS token streams under `calib/`. Fully deterministic in
+/// `seed`.
+pub fn synthesize_artifacts<P: AsRef<Path>>(root: P, seed: u64) -> Result<()> {
+    let root = root.as_ref();
+    std::fs::create_dir_all(root.join("eval"))?;
+    std::fs::create_dir_all(root.join("calib"))?;
+    let cfgs = synth_cfgs();
+    let (eval_b, eval_t) = SYNTH_EVAL;
+    let (calib_b, calib_t) = SYNTH_CALIB;
+    let (t_sub, t_act) = SYNTH_SUB;
+
+    // per-model config + checkpoint
+    for (i, (cfg, _)) in cfgs.iter().enumerate() {
+        std::fs::write(root.join(format!("{}.cfg", cfg.name)), cfg_kv(cfg))?;
+        let w = Weights::synthesize(cfg, seed ^ (i as u64 + 1));
+        w.save(root.join(format!("{}.hcwt", cfg.name)))
+            .with_context(|| format!("writing synthetic checkpoint for {}", cfg.name))?;
+    }
+
+    // benchmarks (HCEV) + token streams (HCTS); every model shares the
+    // vocabulary layout, so one dataset set serves all three families.
+    let vocab = cfgs[0].0.vocab as i32;
+    for (ti, task) in SYNTH_TASKS.iter().enumerate() {
+        let n_choices = match *task {
+            "boolq" | "rte" | "wino" => 2,
+            _ => 4,
+        };
+        let mut rng = Rng::new(seed ^ 0xE7A1 ^ ((ti as u64 + 1) << 8));
+        write_benchmark(
+            &root.join(format!("eval/{task}.bin")),
+            SYNTH_N_ITEMS,
+            n_choices,
+            vocab,
+            &mut rng,
+        )?;
+    }
+    for (di, domain) in SYNTH_DOMAINS.iter().enumerate() {
+        let n_tokens = if *domain == "ppl_heldout" {
+            4 * eval_b * eval_t
+        } else {
+            4 * calib_b * calib_t
+        };
+        let mut rng = Rng::new(seed ^ 0x70CE ^ ((di as u64 + 1) << 16));
+        write_stream(&root.join(format!("calib/{domain}.bin")), n_tokens, vocab, &mut rng)?;
+    }
+
+    // manifest LAST: its presence is what ensure_artifacts treats as "the
+    // set is complete", so an interrupted synthesis is retried rather than
+    // half-used.
+    let mut manifest = String::new();
+    manifest.push_str("# synthetic offline artifact set (bench_support::synth)\n");
+    manifest.push_str("synthetic = 1\n");
+    manifest.push_str(&format!("eval_b = {eval_b}\neval_t = {eval_t}\n"));
+    manifest.push_str(&format!("calib_b = {calib_b}\ncalib_t = {calib_t}\n"));
+    manifest.push_str(&format!("t_sub = {t_sub}\nt_act = {t_act}\n"));
+    manifest.push_str(&format!("n_items = {SYNTH_N_ITEMS}\n"));
+    let model_names: Vec<&str> = cfgs.iter().map(|(c, _)| c.name.as_str()).collect();
+    manifest.push_str(&format!("models = {}\n", model_names.join(",")));
+    manifest.push_str(&format!("tasks = {}\n", SYNTH_TASKS.join(",")));
+    for (cfg, reds) in &cfgs {
+        let reds: Vec<String> = reds.iter().map(|r| r.to_string()).collect();
+        manifest.push_str(&format!("reductions_{} = {}\n", cfg.name, reds.join(",")));
+    }
+    std::fs::write(root.join("manifest.txt"), manifest)?;
+    Ok(())
+}
+
+/// `key = value` serialisation of a model config (mirror of
+/// `python/compile/model.py::ModelCfg.to_kv`).
+fn cfg_kv(cfg: &ModelCfg) -> String {
+    format!(
+        "name = {}\nn_layer = {}\nd = {}\nm = {}\nn_exp = {}\nk = {}\nheads = {}\n\
+         vocab = {}\nt_max = {}\nshared = {}\nm_shared = {}\ncap_factor = {}\n\
+         block_c = {}\n",
+        cfg.name,
+        cfg.n_layer,
+        cfg.d,
+        cfg.m,
+        cfg.n_exp,
+        cfg.k,
+        cfg.heads,
+        cfg.vocab,
+        cfg.t_max,
+        u8::from(cfg.shared),
+        cfg.m_shared,
+        cfg.cap_factor,
+        cfg.block_c
+    )
+}
+
+/// A token drawn from the "content" classes (everything above the control
+/// tokens, inside the synthetic vocabulary).
+fn content_token(rng: &mut Rng, vocab: i32) -> i32 {
+    16 + rng.below((vocab - 16) as usize) as i32
+}
+
+/// Write one HCEV multiple-choice benchmark (see `FORMATS.md` §HCEV).
+fn write_benchmark(
+    path: &Path,
+    n_items: usize,
+    n_choices: usize,
+    vocab: i32,
+    rng: &mut Rng,
+) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(b"HCEV")?;
+    w.write_u32::<LittleEndian>(1)?;
+    w.write_u32::<LittleEndian>(n_items as u32)?;
+    w.write_u32::<LittleEndian>(n_choices as u32)?;
+    for _ in 0..n_items {
+        // prompt: [BOS, Q, <3 content tokens>, SEP, A]
+        let mut prompt = vec![crate::data::vocab::BOS, crate::data::vocab::Q];
+        for _ in 0..3 {
+            prompt.push(content_token(rng, vocab));
+        }
+        prompt.push(crate::data::vocab::SEP);
+        prompt.push(crate::data::vocab::A);
+        let answer = rng.below(n_choices);
+        w.write_u32::<LittleEndian>(prompt.len() as u32)?;
+        for &tok in &prompt {
+            w.write_i32::<LittleEndian>(tok)?;
+        }
+        w.write_u32::<LittleEndian>(answer as u32)?;
+        for _ in 0..n_choices {
+            let clen = 1 + rng.below(2);
+            w.write_u32::<LittleEndian>(clen as u32)?;
+            for _ in 0..clen {
+                w.write_i32::<LittleEndian>(content_token(rng, vocab))?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one HCTS token stream (see `FORMATS.md` §HCTS).
+fn write_stream(path: &Path, n_tokens: usize, vocab: i32, rng: &mut Rng) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(b"HCTS")?;
+    w.write_u32::<LittleEndian>(1)?;
+    w.write_u32::<LittleEndian>(n_tokens as u32)?;
+    for _ in 0..n_tokens {
+        w.write_i32::<LittleEndian>(content_token(rng, vocab))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Benchmark, TokenStream};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("hcsmoe_synth_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn synthetic_set_loads_end_to_end() {
+        let dir = tmpdir("load");
+        synthesize_artifacts(&dir, 1).unwrap();
+        let arts = Artifacts::new(&dir);
+        let manifest = arts.manifest().unwrap();
+        assert_eq!(manifest.models, vec!["qwensim", "mixsim", "dssim"]);
+        assert_eq!(manifest.eval_b, SYNTH_EVAL.0);
+        for m in &manifest.models {
+            let cfg = arts.model_cfg(m).unwrap();
+            let w = Weights::load(arts.weights_path(m)).unwrap();
+            assert_eq!(w.n_experts().unwrap(), cfg.n_exp);
+            assert_eq!(w.n_layers(), cfg.n_layer);
+        }
+        for task in SYNTH_TASKS {
+            let b = Benchmark::load(arts.benchmark(task)).unwrap();
+            assert_eq!(b.items.len(), SYNTH_N_ITEMS);
+        }
+        for domain in SYNTH_DOMAINS {
+            let ts = TokenStream::load(arts.calib_tokens_path(domain)).unwrap();
+            assert!(!ts.tokens.is_empty());
+            assert!(ts.tokens.iter().all(|&t| t >= 0 && t < 96));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let (a, b) = (tmpdir("det_a"), tmpdir("det_b"));
+        synthesize_artifacts(&a, 7).unwrap();
+        synthesize_artifacts(&b, 7).unwrap();
+        for rel in ["manifest.txt", "qwensim.hcwt", "eval/arc_e.bin", "calib/general.bin"] {
+            let xa = std::fs::read(a.join(rel)).unwrap();
+            let xb = std::fs::read(b.join(rel)).unwrap();
+            assert_eq!(xa, xb, "{rel} must be byte-identical across runs");
+        }
+        std::fs::remove_dir_all(&a).ok();
+        std::fs::remove_dir_all(&b).ok();
+    }
+}

@@ -22,14 +22,22 @@ use crate::tensor::Tensor;
 /// Per-layer statistics.
 #[derive(Debug, Clone)]
 pub struct LayerStats {
-    pub mean_out: Tensor,  // [n, d]
-    pub counts: Vec<f32>,  // [n]
-    pub probs_sum: Vec<f32>, // [n]
-    pub gate_sum: Vec<f32>,  // [n]
-    pub rl_sub: Tensor,    // [t_sub, n]
-    pub raw_sub: Tensor,   // [n, t_sub, d]
-    pub act_sub: Tensor,   // [n, t_act, m]
-    pub hid_sub: Tensor,   // [t_sub, d]
+    /// Average expert outputs o_j (Eq. 4), `[n, d]`.
+    pub mean_out: Tensor,
+    /// Top-k routing frequencies, `[n]`.
+    pub counts: Vec<f32>,
+    /// Accumulated full-softmax router scores, `[n]`.
+    pub probs_sum: Vec<f32>,
+    /// Accumulated top-k gate weights, `[n]`.
+    pub gate_sum: Vec<f32>,
+    /// Router-logit profiles on subsampled tokens, `[t_sub, n]`.
+    pub rl_sub: Tensor,
+    /// Per-expert outputs on subsampled tokens, `[n, t_sub, d]`.
+    pub raw_sub: Tensor,
+    /// Intermediate activations on subsampled tokens, `[n, t_act, m]`.
+    pub act_sub: Tensor,
+    /// Pre-MoE hidden states on subsampled tokens, `[t_sub, d]`.
+    pub hid_sub: Tensor,
 }
 
 impl LayerStats {
@@ -63,8 +71,11 @@ impl LayerStats {
 /// Full-model calibration statistics.
 #[derive(Debug, Clone)]
 pub struct CalibStats {
+    /// Calibration domain the stats were collected on.
     pub domain: String,
+    /// Per-layer statistics, layer 0 first.
     pub layers: Vec<LayerStats>,
+    /// Total calibration tokens consumed.
     pub n_tokens: usize,
 }
 
@@ -108,10 +119,12 @@ impl CalibStats {
         })
     }
 
+    /// Number of layers covered.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
 
+    /// Experts per layer.
     pub fn n_experts(&self) -> usize {
         self.layers[0].counts.len()
     }

@@ -9,11 +9,14 @@ use crate::parallel;
 use crate::tensor::l2_dist;
 use crate::util::Rng;
 
+/// Fuzzy C-Means output: soft memberships plus the final centers.
 #[derive(Debug, Clone)]
 pub struct FcmResult {
     /// u[i][j] = membership of expert i in cluster j; rows sum to 1.
     pub membership: Vec<Vec<f32>>,
+    /// Cluster centers in feature space.
     pub centers: Vec<Vec<f32>>,
+    /// Cluster count.
     pub r: usize,
 }
 

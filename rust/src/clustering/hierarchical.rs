@@ -12,14 +12,19 @@
 use super::Clustering;
 use crate::parallel;
 
+/// Agglomerative linkage criterion (Eqs. 6-8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Linkage {
-    Single,   // Eq. 6: min pairwise
-    Complete, // Eq. 7: max pairwise
-    Average,  // Eq. 8: mean pairwise (the paper's choice)
+    /// Eq. 6: min pairwise distance.
+    Single,
+    /// Eq. 7: max pairwise distance.
+    Complete,
+    /// Eq. 8: mean pairwise distance (the paper's choice).
+    Average,
 }
 
 impl Linkage {
+    /// Short label used in method strings.
     pub fn short(&self) -> &'static str {
         match self {
             Linkage::Single => "single",
@@ -28,6 +33,7 @@ impl Linkage {
         }
     }
 
+    /// Parse a linkage name (`single` / `complete` / `average`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "single" => Linkage::Single,

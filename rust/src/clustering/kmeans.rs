@@ -7,12 +7,16 @@ use crate::parallel;
 use crate::tensor::l2_dist;
 use crate::util::Rng;
 
+/// Centroid initialisation strategy (the paper's fix/rnd comparison).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KmeansInit {
     /// First r experts as initial centers (paper's K-means-fix).
     Fixed,
     /// r random experts as initial centers (paper's K-means-rnd).
-    Random { seed: u64 },
+    Random {
+        /// RNG seed for the center draw.
+        seed: u64,
+    },
 }
 
 /// Nearest center index under the serial tie-break (strict `<` over

@@ -20,15 +20,18 @@ pub use singleshot::single_shot;
 pub struct Clustering {
     /// assign[e] = cluster id in 0..r
     pub assign: Vec<usize>,
+    /// Cluster count.
     pub r: usize,
 }
 
 impl Clustering {
+    /// Wrap an assignment vector (debug-asserts ids are in range).
     pub fn new(assign: Vec<usize>, r: usize) -> Self {
         debug_assert!(assign.iter().all(|&c| c < r));
         Self { assign, r }
     }
 
+    /// Number of clustered experts.
     pub fn n(&self) -> usize {
         self.assign.len()
     }

@@ -11,22 +11,36 @@ use crate::util::KvFile;
 /// Mirror of `python/compile/model.py::ModelCfg`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelCfg {
+    /// Model family name (`qwensim` / `mixsim` / `dssim`).
     pub name: String,
+    /// Transformer layer count.
     pub n_layer: usize,
+    /// Hidden size (d_h in the paper).
     pub d: usize,
+    /// Expert FFN size (d_m).
     pub m: usize,
+    /// Experts per layer (n).
     pub n_exp: usize,
+    /// Top-k routing fan-out.
     pub k: usize,
+    /// Attention head count (must divide `d`).
     pub heads: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Maximum sequence length (learned positions).
     pub t_max: usize,
+    /// DeepSeek-style always-on shared expert (`dssim`).
     pub shared: bool,
+    /// Shared-expert FFN size.
     pub m_shared: usize,
+    /// Expert capacity factor for dispatch.
     pub cap_factor: f64,
+    /// Token-block size the capacity is rounded up to.
     pub block_c: usize,
 }
 
 impl ModelCfg {
+    /// Parse a `.cfg` artifact.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let kv = KvFile::load(path)?;
         Ok(Self {
@@ -85,19 +99,30 @@ impl ModelCfg {
 /// Global artifact geometry (manifest.txt).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Scoring batch rows.
     pub eval_b: usize,
+    /// Scoring sequence length.
     pub eval_t: usize,
+    /// Calibration batch rows.
     pub calib_b: usize,
+    /// Calibration sequence length.
     pub calib_t: usize,
+    /// Subsampled-profile token count captured by the calibration pass.
     pub t_sub: usize,
+    /// Subsampled-activation token count (<= `t_sub`).
     pub t_act: usize,
+    /// Items per benchmark task.
     pub n_items: usize,
+    /// Model family names shipped in this artifact set.
     pub models: Vec<String>,
+    /// Benchmark task names shipped in this artifact set.
     pub tasks: Vec<String>,
+    /// Per-model expert-count reduction schedules.
     pub reductions: std::collections::BTreeMap<String, Vec<usize>>,
 }
 
 impl Manifest {
+    /// Parse `manifest.txt`.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let kv = KvFile::load(path)?;
         let models = kv.list("models")?;
@@ -119,6 +144,7 @@ impl Manifest {
         })
     }
 
+    /// Tokens per calibration batch (`calib_b * calib_t`).
     pub fn calib_tokens(&self) -> usize {
         self.calib_b * self.calib_t
     }
@@ -127,10 +153,12 @@ impl Manifest {
 /// Path helper rooted at the artifacts directory.
 #[derive(Debug, Clone)]
 pub struct Artifacts {
+    /// Artifact directory root.
     pub root: PathBuf,
 }
 
 impl Artifacts {
+    /// Artifacts rooted at an explicit directory.
     pub fn new<P: AsRef<Path>>(root: P) -> Self {
         Self { root: root.as_ref().to_path_buf() }
     }
@@ -141,34 +169,42 @@ impl Artifacts {
         Self::new(root)
     }
 
+    /// Load `manifest.txt`.
     pub fn manifest(&self) -> Result<Manifest> {
         Manifest::load(self.root.join("manifest.txt"))
     }
 
+    /// Load `<model>.cfg`.
     pub fn model_cfg(&self, model: &str) -> Result<ModelCfg> {
         ModelCfg::load(self.root.join(format!("{model}.cfg")))
     }
 
+    /// Path of the `<model>.hcwt` checkpoint.
     pub fn weights_path(&self, model: &str) -> PathBuf {
         self.root.join(format!("{model}.hcwt"))
     }
 
+    /// Path of the scoring-forward HLO text artifact.
     pub fn lm_logits_hlo(&self, model: &str) -> PathBuf {
         self.root.join(format!("hlo/lm_logits_{model}.hlo.txt"))
     }
 
+    /// Path of the compact r-expert scoring HLO artifact.
     pub fn lm_logits_compact_hlo(&self, model: &str, r: usize) -> PathBuf {
         self.root.join(format!("hlo/lm_logits_{model}_r{r}.hlo.txt"))
     }
 
+    /// Path of the calibration-pass HLO artifact.
     pub fn calib_hlo(&self, model: &str) -> PathBuf {
         self.root.join(format!("hlo/calib_{model}.hlo.txt"))
     }
 
+    /// Path of a benchmark task's HCEV file.
     pub fn benchmark(&self, task: &str) -> PathBuf {
         self.root.join(format!("eval/{task}.bin"))
     }
 
+    /// Path of a calibration domain's HCTS token stream.
     pub fn calib_tokens_path(&self, domain: &str) -> PathBuf {
         self.root.join(format!("calib/{domain}.bin"))
     }

@@ -10,41 +10,64 @@ use byteorder::{LittleEndian, ReadBytesExt};
 
 pub mod vocab {
     //! Token-class layout (mirror of python/compile/data.py).
+    /// Full vocabulary size of the real artifact set.
     pub const VOCAB_SIZE: usize = 448;
+    /// Padding token.
     pub const PAD: i32 = 0;
+    /// Beginning-of-sequence token.
     pub const BOS: i32 = 1;
+    /// End-of-sequence token.
     pub const EOS: i32 = 2;
+    /// Separator token.
     pub const SEP: i32 = 3;
+    /// Question marker.
     pub const Q: i32 = 4;
+    /// Answer marker.
     pub const A: i32 = 5;
+    /// `true` answer token (rte-style tasks).
     pub const TRUE_TOK: i32 = 6;
+    /// `false` answer token.
     pub const FALSE_TOK: i32 = 7;
+    /// `yes` answer token (boolq-style tasks).
     pub const YES_TOK: i32 = 8;
+    /// `no` answer token.
     pub const NO_TOK: i32 = 9;
+    /// Subject-entity token range `[lo, hi)`.
     pub const SUBJ: (i32, i32) = (16, 48);
+    /// Relation token range `[lo, hi)`.
     pub const REL: (i32, i32) = (48, 56);
+    /// Object-entity token range `[lo, hi)`.
     pub const OBJ: (i32, i32) = (56, 88);
+    /// Digit token range `[lo, hi)`.
     pub const DIGIT: (i32, i32) = (88, 105);
+    /// Filler-text token range `[lo, hi)`.
     pub const FILLER: (i32, i32) = (192, 448);
 }
 
 /// One multiple-choice item (prompt + per-choice completions).
 #[derive(Debug, Clone)]
 pub struct MCItem {
+    /// Shared prompt tokens.
     pub prompt: Vec<i32>,
+    /// Per-choice completion tokens.
     pub choices: Vec<Vec<i32>>,
+    /// Gold choice index.
     pub answer: usize,
 }
 
 /// A loaded benchmark task.
 #[derive(Debug, Clone)]
 pub struct Benchmark {
+    /// Task name (file stem).
     pub name: String,
+    /// Items in file order.
     pub items: Vec<MCItem>,
+    /// Choices per item (uniform across the task).
     pub n_choices: usize,
 }
 
 impl Benchmark {
+    /// Load an HCEV benchmark file.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let name = path
             .as_ref()
@@ -95,10 +118,12 @@ impl Benchmark {
 /// Calibration / analysis token stream.
 #[derive(Debug, Clone)]
 pub struct TokenStream {
+    /// Raw token ids, in stream order.
     pub tokens: Vec<i32>,
 }
 
 impl TokenStream {
+    /// Load an HCTS token-stream file.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {}", path.as_ref().display()))?;

@@ -16,28 +16,40 @@ use crate::model::{LoadedModel, ModelContext};
 /// Scores of one task.
 #[derive(Debug, Clone)]
 pub struct TaskScore {
+    /// Task name.
     pub task: String,
+    /// Fraction of items answered correctly.
     pub accuracy: f64,
+    /// Item count.
     pub n_items: usize,
     /// per-item predicted choice (for P/R/F1 and error analysis)
     pub predictions: Vec<usize>,
+    /// per-item gold choice
     pub golds: Vec<usize>,
 }
 
+/// Macro-averaged precision/recall/F1 plus plain accuracy (Table 15).
 #[derive(Debug, Clone, Copy)]
 pub struct Prf {
+    /// Macro-averaged precision.
     pub precision: f64,
+    /// Macro-averaged recall.
     pub recall: f64,
+    /// Macro-averaged F1.
     pub f1: f64,
+    /// Plain accuracy.
     pub accuracy: f64,
 }
 
+/// Zero-shot evaluation harness bound to one [`ModelContext`] (caches
+/// loaded benchmarks per task).
 pub struct Evaluator<'a> {
     ctx: &'a ModelContext,
     cache: std::cell::RefCell<HashMap<String, Benchmark>>,
 }
 
 impl<'a> Evaluator<'a> {
+    /// Build an evaluator over `ctx`'s artifact set.
     pub fn new(ctx: &'a ModelContext) -> Result<Self> {
         Ok(Self { ctx, cache: Default::default() })
     }
@@ -123,6 +135,7 @@ impl<'a> Evaluator<'a> {
         })
     }
 
+    /// Accuracy of `model` on one named task.
     pub fn accuracy(&self, model: &LoadedModel, task: &str) -> Result<f64> {
         Ok(self.score_benchmark(model, &self.benchmark(task)?)?.accuracy)
     }

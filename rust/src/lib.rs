@@ -13,6 +13,13 @@
 //!   work splitting — parallel and serial outputs are bit-identical
 //!   (`rust/tests/determinism.rs`).
 //!
+//! Model execution goes through the [`backend`] abstraction: the default
+//! **native** backend is a pure-Rust CPU interpreter of the simulated
+//! SMoE family that runs straight from `.hcwt` weights (no Python, PJRT
+//! or network anywhere in the loop — missing artifacts are synthesized
+//! in-process by [`bench_support::ensure_artifacts`]), while
+//! `HCSMOE_BACKEND=pjrt` selects the HLO/PJRT path.
+//!
 //! Quick tour:
 //!
 //! ```no_run
@@ -32,6 +39,9 @@
 //! println!("arc_e accuracy after 50% merge: {acc:.4}");
 //! ```
 
+#![warn(missing_docs)]
+
+pub mod backend;
 pub mod bench_support;
 pub mod calib;
 pub mod clustering;
@@ -52,7 +62,10 @@ pub mod tensor;
 pub mod util;
 pub mod weights;
 
+/// One-import surface for the common pipeline types (see the crate-level
+/// quick tour).
 pub mod prelude {
+    pub use crate::backend::Backend;
     pub use crate::calib::{CalibStats, LayerStats};
     pub use crate::clustering::{Clustering, Linkage};
     pub use crate::config::{Artifacts, Manifest, ModelCfg};
@@ -67,6 +80,7 @@ pub mod prelude {
     pub use crate::weights::Weights;
 }
 
+/// Crate version string (from `Cargo.toml`).
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

@@ -3,6 +3,7 @@
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!
 //!   info                         artifact + model summary
+//!   synth      [--out DIR] [--seed N]   write a synthetic artifact set
 //!   calibrate  <model> [domain]  run the calibration pass, print stats
 //!   compress   <model> <r> [--method M] [--domain D]   compress + report
 //!   eval       <model> <r> [--method M] [--domain D] [--tasks a,b]
@@ -11,6 +12,10 @@
 //!
 //! Methods: hc-avg (default), hc-single, hc-complete, kmeans-fix,
 //! kmeans-rnd, fcm, single-shot, m-smoe, o-prune, s-prune, f-prune, hc-nu.
+//!
+//! Artifacts resolve through `bench_support::ensure_artifacts`: real AOT
+//! output is used when present, otherwise a deterministic synthetic set is
+//! generated so every command runs offline on the native backend.
 
 use std::time::Duration;
 
@@ -116,7 +121,10 @@ fn run() -> Result<()> {
         return Ok(());
     };
     let args = Args::parse(&argv[1..]);
-    let arts = Artifacts::discover();
+    if cmd == "synth" {
+        return synth(&args);
+    }
+    let arts = hc_smoe::bench_support::ensure_artifacts()?;
     match cmd.as_str() {
         "info" => info(&arts),
         "calibrate" => calibrate(&arts, &args),
@@ -140,6 +148,7 @@ USAGE: hc-smoe <command> [args]
 
 COMMANDS:
   info                          artifact + model summary
+  synth     [--out DIR] [--seed N]   write a synthetic artifact set
   calibrate <model> [--domain D]
   compress  <model> <r> [--method M] [--domain D]
   eval      <model> <r> [--method M] [--domain D] [--tasks a,b,..]
@@ -149,13 +158,26 @@ COMMANDS:
 METHODS: hc-avg hc-single hc-complete hc-nu kmeans-fix kmeans-rnd fcm
          single-shot m-smoe o-prune s-prune f-prune
 
-ENV: HCSMOE_ARTIFACTS (default ./artifacts)",
+ENV: HCSMOE_ARTIFACTS (default ./artifacts, falling back to a synthesized
+     ./artifacts-synth), HCSMOE_BACKEND (native | pjrt, default native)",
         hc_smoe::version()
     );
 }
 
+fn synth(args: &Args) -> Result<()> {
+    let out = args.flag("out", hc_smoe::bench_support::synth::SYNTH_DIR);
+    let seed: u64 = args
+        .flag("seed", &hc_smoe::bench_support::synth::SYNTH_SEED.to_string())
+        .parse()
+        .context("parsing --seed")?;
+    hc_smoe::bench_support::synthesize_artifacts(&out, seed)?;
+    println!("wrote synthetic artifact set to {out} (seed {seed})");
+    println!("use it with: HCSMOE_ARTIFACTS={out} hc-smoe info");
+    Ok(())
+}
+
 fn info(arts: &Artifacts) -> Result<()> {
-    let m = arts.manifest().context("run `make artifacts` first")?;
+    let m = arts.manifest().context("artifacts unreadable")?;
     println!("artifacts: {}", arts.root.display());
     println!("tasks: {}", m.tasks.join(", "));
     for name in &m.models {

@@ -20,6 +20,7 @@ use crate::calib::LayerStats;
 use crate::tensor::corr_matrix;
 use crate::weights::ExpertWeights;
 
+/// Feature space used to correlate hidden units (Appendix B.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FixDomFeature {
     /// Intermediate activations on calibration tokens.
@@ -31,6 +32,7 @@ pub enum FixDomFeature {
 }
 
 impl FixDomFeature {
+    /// Short label used in method strings.
     pub fn short(&self) -> &'static str {
         match self {
             FixDomFeature::Act => "act",

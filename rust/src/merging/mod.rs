@@ -22,15 +22,21 @@ use crate::weights::{ExpertWeights, Weights};
 
 pub use fixdom::FixDomFeature;
 
+/// How a cluster's member experts combine into one (Section 3.2.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MergeStrategy {
+    /// Uniform weights α_j = 1/|C|.
     Average,
+    /// Frequency weights α_j = f̃_j (HC-SMoE default).
     Frequency,
+    /// Permutation-align members to the dominant expert, then average.
     FixDom(FixDomFeature),
+    /// Full iterative pairwise feature matching (slow baseline, Table 9).
     ZipIt(FixDomFeature),
 }
 
 impl MergeStrategy {
+    /// Short label used in method strings.
     pub fn short(&self) -> String {
         match self {
             MergeStrategy::Average => "average".into(),
@@ -40,6 +46,7 @@ impl MergeStrategy {
         }
     }
 
+    /// Parse a strategy name (`average`, `frequency`, `fixdom[-*]`, `zipit[-*]`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "average" | "avg" => MergeStrategy::Average,

@@ -1,79 +1,84 @@
 //! `ModelContext`: one loaded simulated SMoE model — config, trained
-//! weights, and the compiled PJRT executables for its HLO artifacts.
+//! weights, and the execution [`Backend`] that runs it.
 //!
-//! A *variant* (merged/pruned model) is represented by [`LoadedModel`]:
-//! resident device buffers for its weight set plus its router mask, so the
-//! eval/serving hot path never re-uploads weights (DESIGN.md §Perf L3).
+//! A *variant* (merged/pruned model) is represented by [`LoadedModel`]: a
+//! backend-resident weight set plus its router mask, prepared once and
+//! reused across every execution (weights never re-upload on the eval or
+//! serving hot path — DESIGN.md §"Key design decisions"). Which engine
+//! actually executes — the native CPU interpreter or PJRT — is selected at
+//! runtime by `HCSMOE_BACKEND` (see [`crate::backend`]); nothing at this
+//! layer or above changes between the two.
 
-use std::sync::{Arc, OnceLock};
+use std::sync::OnceLock;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::backend::{self, Backend, ModelState};
 use crate::config::{Artifacts, Manifest, ModelCfg};
 use crate::data::TokenStream;
-use crate::runtime::{Executable, Input, Runtime};
 use crate::tensor::Tensor;
 use crate::weights::Weights;
 
+/// One loaded model: artifacts, config, base weights and the execution
+/// backend. All execution flows through the methods below.
 pub struct ModelContext {
+    /// Artifact directory the model was loaded from.
     pub arts: Artifacts,
+    /// Global artifact geometry (batch shapes, task list, reductions).
     pub manifest: Manifest,
+    /// Model architecture config.
     pub cfg: ModelCfg,
-    pub rt: Arc<Runtime>,
+    /// Original (uncompressed) weights — the merging/pruning input.
     pub base: Weights,
-    lm_exe: OnceLock<Executable>,
-    calib_exe: OnceLock<Executable>,
+    backend: Box<dyn Backend>,
+    base_state: OnceLock<Box<dyn ModelState>>,
 }
 
-/// `OnceLock::get_or_try_init` is unstable; this free function provides the
-/// same fallible memoisation (a lost init race recomputes, then discards).
-fn exe_cached(
-    cell: &OnceLock<Executable>,
-    load: impl FnOnce() -> Result<Executable>,
-) -> Result<&Executable> {
-    if let Some(exe) = cell.get() {
-        return Ok(exe);
-    }
-    let exe = load()?;
-    Ok(cell.get_or_init(|| exe))
-}
-
-/// A model variant ready for execution: weights resident on device + mask.
+/// A model variant ready for execution: backend-resident weights + the
+/// additive router mask and a display label.
 pub struct LoadedModel {
-    pub bufs: Vec<xla::PjRtBuffer>,
-    pub mask: Vec<f32>, // [L * n] additive router mask
+    state: Box<dyn ModelState>,
+    /// Additive router mask, `[n_layer * n_exp]` (0 = keep, −1e30 = prune).
+    pub mask: Vec<f32>,
+    /// Human-readable variant label (method string or "original").
     pub label: String,
 }
 
+/// A compact r-expert variant: backend-resident compact weights plus the
+/// expert→slot remap table (Table 20 efficiency path).
+pub struct CompactModel {
+    state: Box<dyn ModelState>,
+    /// `[n_layer * n_exp]` original-expert → compact-slot table.
+    pub remap: Vec<i32>,
+    /// Human-readable variant label.
+    pub label: String,
+    /// Physical expert slots per layer.
+    pub r: usize,
+}
+
 impl ModelContext {
+    /// Load a model (config + weights) from an artifact directory and bind
+    /// the runtime-selected execution backend.
     pub fn load(arts: &Artifacts, model: &str) -> Result<Self> {
         let manifest = arts.manifest()?;
         let cfg = arts.model_cfg(model)?;
-        let rt = Runtime::cpu()?;
         let base = Weights::load(arts.weights_path(model))
             .with_context(|| format!("loading weights for {model}"))?;
         ensure!(base.n_experts()? == cfg.n_exp, "weights/config expert mismatch");
+        let backend = backend::from_env(arts, &cfg)?;
         Ok(Self {
             arts: arts.clone(),
             manifest,
             cfg,
-            rt,
             base,
-            lm_exe: OnceLock::new(),
-            calib_exe: OnceLock::new(),
+            backend,
+            base_state: OnceLock::new(),
         })
     }
 
-    pub fn lm_exe(&self) -> Result<&Executable> {
-        exe_cached(&self.lm_exe, || {
-            self.rt.load_hlo(self.arts.lm_logits_hlo(&self.cfg.name))
-        })
-    }
-
-    pub fn calib_exe(&self) -> Result<&Executable> {
-        exe_cached(&self.calib_exe, || {
-            self.rt.load_hlo(self.arts.calib_hlo(&self.cfg.name))
-        })
+    /// Name of the execution backend in use (`"native"` / `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Zero (keep-everything) router mask.
@@ -81,11 +86,11 @@ impl ModelContext {
         vec![0.0; self.cfg.n_layer * self.cfg.n_exp]
     }
 
-    /// Upload a weight set as a resident model variant.
+    /// Prepare a weight set as a resident model variant.
     pub fn load_model(&self, w: &Weights, mask: Vec<f32>, label: &str) -> Result<LoadedModel> {
         ensure!(mask.len() == self.cfg.n_layer * self.cfg.n_exp, "mask size");
-        let bufs = self.lm_exe()?.upload_weights(w)?;
-        Ok(LoadedModel { bufs, mask, label: label.to_string() })
+        let state = self.backend.load_model(w, self.cfg.n_exp)?;
+        Ok(LoadedModel { state, mask, label: label.to_string() })
     }
 
     /// The original (uncompressed) model as a variant.
@@ -97,16 +102,18 @@ impl ModelContext {
     pub fn run_logits(&self, model: &LoadedModel, ids: &[i32]) -> Result<Tensor> {
         let (b, t) = (self.manifest.eval_b, self.manifest.eval_t);
         ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
-        let mask = Tensor::new(
-            vec![self.cfg.n_layer, self.cfg.n_exp],
-            model.mask.clone(),
-        )?;
-        let outs = self.lm_exe()?.run_with(
-            &model.bufs,
-            &[Input::I32(ids.to_vec(), vec![b, t]), Input::F32(mask)],
-        )?;
-        ensure!(outs.len() == 1, "lm_logits returns a 1-tuple");
-        Ok(outs.into_iter().next().unwrap())
+        self.backend
+            .run_logits(model.state.as_ref(), ids, b, t, &model.mask, None)
+    }
+
+    /// The base weights as a lazily prepared resident variant (the
+    /// calibration input; prepared once, shared by every calib batch).
+    fn base_state(&self) -> Result<&dyn ModelState> {
+        if let Some(s) = self.base_state.get() {
+            return Ok(s.as_ref());
+        }
+        let s = self.backend.load_model(&self.base, self.cfg.n_exp)?;
+        Ok(self.base_state.get_or_init(|| s).as_ref())
     }
 
     /// Raw calibration pass on the ORIGINAL weights over one token batch
@@ -114,9 +121,14 @@ impl ModelContext {
     pub fn run_calib(&self, ids: &[i32]) -> Result<Vec<Tensor>> {
         let (b, t) = (self.manifest.calib_b, self.manifest.calib_t);
         ensure!(ids.len() == b * t, "calib ids must be exactly [{b}, {t}]");
-        let exe = self.calib_exe()?;
-        let bufs = exe.upload_weights(&self.base)?;
-        exe.run_with(&bufs, &[Input::I32(ids.to_vec(), vec![b, t])])
+        self.backend.run_calib(
+            self.base_state()?,
+            ids,
+            b,
+            t,
+            self.manifest.t_sub,
+            self.manifest.t_act,
+        )
     }
 
     /// Convenience: calibration statistics over a named domain stream.
@@ -125,7 +137,7 @@ impl ModelContext {
         crate::calib::CalibStats::collect(self, &ts)
     }
 
-    /// Load the true r-expert compact executable with a compact weight set
+    /// Prepare a true r-expert compact variant from a compact weight set
     /// and router remap table (Table 20 efficiency path).
     pub fn load_compact(
         &self,
@@ -135,47 +147,22 @@ impl ModelContext {
         label: &str,
     ) -> Result<CompactModel> {
         ensure!(remap.len() == self.cfg.n_layer * self.cfg.n_exp, "remap size");
-        let exe = self
-            .rt
-            .load_hlo(self.arts.lm_logits_compact_hlo(&self.cfg.name, r))?;
-        let bufs = exe.upload_weights(weights)?;
-        Ok(CompactModel { exe, bufs, remap, label: label.to_string(), r })
+        let state = self.backend.load_model(weights, r)?;
+        Ok(CompactModel { state, remap, label: label.to_string(), r })
     }
 
     /// One scoring execution on a compact variant: ids [B*T] -> [B, T, V].
     pub fn run_logits_compact(&self, model: &CompactModel, ids: &[i32]) -> Result<Tensor> {
         let (b, t) = (self.manifest.eval_b, self.manifest.eval_t);
         ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
-        let mask = Tensor::zeros(vec![self.cfg.n_layer, self.cfg.n_exp]);
-        let outs = self.exe_run_compact(model, ids, b, t, mask)?;
-        ensure!(outs.len() == 1, "compact lm_logits returns a 1-tuple");
-        Ok(outs.into_iter().next().unwrap())
-    }
-
-    fn exe_run_compact(
-        &self,
-        model: &CompactModel,
-        ids: &[i32],
-        b: usize,
-        t: usize,
-        mask: Tensor,
-    ) -> Result<Vec<Tensor>> {
-        model.exe.run_with(
-            &model.bufs,
-            &[
-                Input::I32(ids.to_vec(), vec![b, t]),
-                Input::F32(mask),
-                Input::I32(model.remap.clone(), vec![self.cfg.n_layer, self.cfg.n_exp]),
-            ],
+        let mask = self.full_mask();
+        self.backend.run_logits(
+            model.state.as_ref(),
+            ids,
+            b,
+            t,
+            &mask,
+            Some(&model.remap),
         )
     }
-}
-
-/// A compact r-expert variant with its own executable.
-pub struct CompactModel {
-    pub exe: Executable,
-    pub bufs: Vec<xla::PjRtBuffer>,
-    pub remap: Vec<i32>,
-    pub label: String,
-    pub r: usize,
 }

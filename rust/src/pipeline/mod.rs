@@ -28,30 +28,52 @@ use crate::weights::Weights;
 pub enum Method {
     /// Ours (Section 3.2): HC on a similarity metric + weight-space merge.
     HcSmoe {
+        /// Agglomerative linkage criterion.
         linkage: Linkage,
+        /// Similarity feature space.
         metric: Metric,
+        /// Within-cluster combination rule.
         merge: MergeStrategy,
     },
     /// Non-uniform layer budgets (Appendix B.1).
     HcNonUniform {
+        /// Agglomerative linkage criterion.
         linkage: Linkage,
+        /// Similarity feature space.
         metric: Metric,
+        /// Within-cluster combination rule.
         merge: MergeStrategy,
     },
     /// K-means grouping baseline (Table 5).
     KMeans {
+        /// Centroid initialisation.
         init: KmeansInit,
+        /// Similarity feature space.
         metric: Metric,
+        /// Within-cluster combination rule.
         merge: MergeStrategy,
     },
     /// Fuzzy C-Means soft clustering (Appendix B.5).
-    Fcm { seed: u64 },
+    Fcm {
+        /// Membership-initialisation seed.
+        seed: u64,
+    },
     /// One-pass grouping (Table 6); M-SMoE = this with RouterLogits+Frequency.
-    SingleShot { metric: Metric, merge: MergeStrategy },
+    SingleShot {
+        /// Similarity feature space.
+        metric: Metric,
+        /// Within-cluster combination rule.
+        merge: MergeStrategy,
+    },
     /// M-SMoE baseline (Li et al. 2024).
     MSmoe,
     /// O-prune (Lu et al. 2024): subset search on layer-output deviation.
-    OPrune { samples: usize, seed: u64 },
+    OPrune {
+        /// Subsets sampled per layer when exhaustive search is too big.
+        samples: usize,
+        /// Subset-sampling seed.
+        seed: u64,
+    },
     /// S-prune (He et al. 2024): global router-score pruning.
     SPrune,
     /// F-prune: frequency-criterion pruning.
@@ -59,6 +81,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Human-readable method label (also the results cache key).
     pub fn label(&self) -> String {
         match self {
             Method::HcSmoe { linkage, metric, merge } => {
@@ -85,6 +108,7 @@ impl Method {
         }
     }
 
+    /// True for the pruning baselines (no weight merging involved).
     pub fn is_pruning(&self) -> bool {
         matches!(self, Method::OPrune { .. } | Method::SPrune | Method::FPrune)
     }
@@ -93,29 +117,47 @@ impl Method {
 /// A concrete per-layer compression decision.
 #[derive(Debug, Clone)]
 pub enum PlanKind {
+    /// Hard clusters merged in weight space.
     Merge {
         /// groups[l] = clusters of expert indices for layer l.
         groups: Vec<Vec<Vec<usize>>>,
+        /// Within-cluster combination rule.
         strategy: MergeStrategy,
     },
     /// FCM soft merge: memberships[l][i][j] of expert i in cluster j,
     /// applied to experts *and router columns* (Appendix B.5).
-    SoftMerge { memberships: Vec<Vec<Vec<f32>>>, r: usize },
-    Prune { keep: Vec<Vec<usize>> },
+    SoftMerge {
+        /// memberships[l][i][j] of expert i in cluster j.
+        memberships: Vec<Vec<Vec<f32>>>,
+        /// Retained slots per layer.
+        r: usize,
+    },
+    /// Experts outside the keep sets are masked off in the router.
+    Prune {
+        /// keep[l] = surviving expert indices of layer l.
+        keep: Vec<Vec<usize>>,
+    },
 }
 
+/// A planned compression: the per-layer decision plus its label.
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// The concrete per-layer decision.
     pub kind: PlanKind,
+    /// Method label (for tables and caches).
     pub label: String,
+    /// Requested experts per layer.
     pub r_target: usize,
 }
 
+/// Planner turning a [`Method`] + calibration statistics into a [`Plan`].
 pub struct Pipeline {
+    /// The compression method to plan for.
     pub method: Method,
 }
 
 impl Pipeline {
+    /// Pipeline for one method.
     pub fn new(method: Method) -> Self {
         Self { method }
     }
@@ -219,12 +261,17 @@ impl Pipeline {
 
 /// A compressed model: weight set + router mask in the n-slot layout.
 pub struct CompressedModel {
+    /// Compressed weights in the full n-slot layout.
     pub weights: Weights,
+    /// Additive router mask (0 keep, [`MASK_OFF`] pruned).
     pub mask: Vec<f32>,
+    /// Method label.
     pub label: String,
+    /// The plan that produced this model.
     pub plan: Plan,
 }
 
+/// Additive router-mask value that disables an expert.
 pub const MASK_OFF: f32 = -1e30;
 
 impl Plan {

@@ -13,10 +13,12 @@ use crate::util::Rng;
 /// Per-layer keep sets.
 #[derive(Debug, Clone)]
 pub struct PruneResult {
-    pub keep: Vec<Vec<usize>>, // keep[l] = sorted kept expert indices
+    /// keep[l] = sorted kept expert indices of layer l.
+    pub keep: Vec<Vec<usize>>,
 }
 
 impl PruneResult {
+    /// Check every layer keeps >= `min_keep` sorted, in-range experts.
     pub fn validate(&self, n: usize, min_keep: usize) -> Result<()> {
         for (l, k) in self.keep.iter().enumerate() {
             anyhow::ensure!(k.len() >= min_keep, "layer {l} keeps {} < {min_keep}", k.len());
@@ -186,6 +188,7 @@ pub fn o_prune(stats: &CalibStats, r: usize, k: usize, samples: usize, seed: u64
     PruneResult { keep }
 }
 
+/// Binomial coefficient C(n, r) (saturating).
 pub fn n_choose_r(n: usize, r: usize) -> u128 {
     if r > n {
         return 0;

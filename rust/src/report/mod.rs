@@ -3,14 +3,19 @@
 
 use std::fmt::Write as _;
 
+/// An aligned markdown table under a `###` title.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Rendered as a `### title` heading.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row cells (each row matches the header arity).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -19,6 +24,7 @@ impl Table {
         }
     }
 
+    /// Append one row (panics on arity mismatch).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
@@ -32,6 +38,7 @@ impl Table {
         self.row(cells)
     }
 
+    /// Render as column-aligned markdown.
     pub fn to_markdown(&self) -> String {
         let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -61,6 +68,7 @@ impl Table {
         out
     }
 
+    /// Print the markdown rendering to stdout.
     pub fn print(&self) {
         print!("{}", self.to_markdown());
     }

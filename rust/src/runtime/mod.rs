@@ -1,5 +1,8 @@
-//! PJRT runtime: loads the AOT-lowered HLO text artifacts and executes them
-//! on the CPU PJRT client via the `xla` crate.
+//! PJRT runtime plumbing: loads the AOT-lowered HLO text artifacts and
+//! executes them on the CPU PJRT client via the `xla` crate. Consumed by
+//! [`crate::backend::pjrt`]; most code should go through the
+//! [`crate::backend::Backend`] abstraction instead of using this module
+//! directly.
 //!
 //! Design (see DESIGN.md §Perf L3): weights are uploaded to device buffers
 //! **once** per model variant and reused across every execution — only the
@@ -20,11 +23,13 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Construct the shared CPU client.
     pub fn cpu() -> Result<Arc<Self>> {
         let client = xla::PjRtClient::cpu().map_err(wrap)?;
         Ok(Arc::new(Self { client }))
     }
 
+    /// PJRT platform name (e.g. `cpu`, or `stub-cpu` offline).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -70,11 +75,14 @@ pub struct Executable {
 
 /// Per-call data inputs (weights ride along as resident buffers).
 pub enum Input {
+    /// An f32 tensor input.
     F32(Tensor),
+    /// An i32 buffer with explicit dimensions.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl Executable {
+    /// Artifact stem this executable was compiled from.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -3,12 +3,14 @@
 //! The paper's deployment motivation (Section 1) is memory-constrained
 //! *serving* of SMoE models; this module demonstrates the merged models on
 //! a live request path: clients submit multiple-choice scoring requests,
-//! a dynamic batcher packs rows up to the executable's batch size or a
-//! deadline (vLLM-router-style size/deadline policy), and a single executor
-//! thread owns the PJRT state (the xla handles are not `Send`, so all
-//! device interaction happens on that thread — everything else is
-//! channels).  Used by `examples/serve_merged.rs` and the Table 20
-//! throughput/latency measurements.
+//! a dynamic batcher packs rows up to the model's batch size or a
+//! deadline (vLLM-router-style size/deadline policy), and a single
+//! executor thread owns all execution state (required for the PJRT
+//! backend, whose xla handles are not `Send`; the native backend simply
+//! inherits the same single-executor design) — everything else is
+//! channels. Used by `examples/serve_merged.rs` and the Table 20
+//! throughput/latency measurements. Runs offline end to end on the
+//! native backend.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,28 +28,43 @@ use crate::pipeline::{Method, Pipeline};
 /// One scoring request: score `rows` (token sequences) and return the
 /// length-normalised logprob of positions [start, end) per row.
 pub struct ScoreRequest {
+    /// Rows to score.
     pub rows: Vec<RowSpec>,
+    /// Channel receiving the per-row normalised logprobs.
     pub reply: Sender<Vec<f64>>,
+    /// Submission time (drives queue-latency metrics).
     pub enqueued: Instant,
 }
 
+/// One scored row: a token sequence plus the `[start, end)` span whose
+/// logprob is accumulated.
 #[derive(Debug, Clone)]
 pub struct RowSpec {
+    /// Token sequence (padded by the batcher).
     pub seq: Vec<i32>,
+    /// First predicted position (prompt length).
     pub start: usize,
+    /// One past the last predicted position.
     pub end: usize,
 }
 
+/// Live serving counters (shared with clients via `Arc`).
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests accepted.
     pub requests: AtomicU64,
+    /// Rows accepted.
     pub rows: AtomicU64,
+    /// Device batches executed.
     pub batches: AtomicU64,
+    /// Nanoseconds spent executing batches.
     pub busy_ns: AtomicU64,
+    /// Nanoseconds requests spent queued (enqueue -> reply).
     pub queue_ns: AtomicU64,
 }
 
 impl Metrics {
+    /// Consistent-enough copy of the counters for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -59,16 +76,23 @@ impl Metrics {
     }
 }
 
+/// Point-in-time copy of [`Metrics`].
 #[derive(Debug, Clone, Copy)]
 pub struct MetricsSnapshot {
+    /// Requests accepted.
     pub requests: u64,
+    /// Rows accepted.
     pub rows: u64,
+    /// Device batches executed.
     pub batches: u64,
+    /// Seconds spent executing batches.
     pub busy_s: f64,
+    /// Seconds requests spent queued.
     pub queue_s: f64,
 }
 
 impl MetricsSnapshot {
+    /// Rows scored per busy second.
     pub fn rows_per_sec(&self) -> f64 {
         if self.busy_s > 0.0 {
             self.rows as f64 / self.busy_s
@@ -77,6 +101,7 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Mean batch occupancy in [0, 1] at the given batch size.
     pub fn mean_batch_fill(&self, batch_size: usize) -> f64 {
         if self.batches > 0 {
             self.rows as f64 / (self.batches as f64 * batch_size as f64)
@@ -86,6 +111,7 @@ impl MetricsSnapshot {
     }
 }
 
+/// Dynamic-batcher flush policy (size or deadline, whichever first).
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Flush when this many rows are queued (= executable batch size).
@@ -97,14 +123,18 @@ pub struct BatcherConfig {
 /// What the executor thread should serve.
 #[derive(Debug, Clone)]
 pub struct ServeSpec {
+    /// Artifact directory the executor loads from.
     pub artifacts_root: String,
+    /// Model family name to serve.
     pub model: String,
     /// None = serve the original model; Some = compress first.
     pub compress: Option<(Method, usize, String)>, // (method, r, calib domain)
 }
 
+/// Client-side handle to a running scoring server.
 pub struct ServerHandle {
     tx: Sender<ScoreRequest>,
+    /// Live serving counters.
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<Result<()>>>,
@@ -129,6 +159,7 @@ impl ServerHandle {
         Ok(rx.recv()?)
     }
 
+    /// A clonable submission channel for client threads.
     pub fn sender(&self) -> Sender<ScoreRequest> {
         self.tx.clone()
     }

@@ -12,6 +12,7 @@ use crate::parallel;
 use crate::tensor;
 use crate::weights::Weights;
 
+/// Expert-similarity feature choice (Section 3.2.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Metric {
     /// o_j = E_x[E_j(x)] (Eq. 4) — ours.
@@ -23,6 +24,7 @@ pub enum Metric {
 }
 
 impl Metric {
+    /// Short label used in method strings and cache keys.
     pub fn short(&self) -> &'static str {
         match self {
             Metric::ExpertOutput => "eo",
@@ -31,6 +33,7 @@ impl Metric {
         }
     }
 
+    /// Parse a metric name (`eo` / `rl` / `weight`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "eo" | "expert-output" => Metric::ExpertOutput,
@@ -41,9 +44,12 @@ impl Metric {
     }
 }
 
+/// Pairwise distance function (Eq. 5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Distance {
+    /// L2 distance.
     Euclidean,
+    /// `1 - cosine similarity`.
     Cosine,
 }
 

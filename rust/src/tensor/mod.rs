@@ -9,6 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::parallel;
 
+/// Dense row-major f32 tensor (shape + flat data).
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
@@ -22,6 +23,7 @@ impl fmt::Debug for Tensor {
 }
 
 impl Tensor {
+    /// Build a tensor, checking that `data` fills `shape` exactly.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -30,44 +32,54 @@ impl Tensor {
         Ok(Self { shape, data })
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Self { shape, data: vec![0.0; n] }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: Vec<usize>, v: f32) -> Self {
         let n = shape.iter().product();
         Self { shape, data: vec![v; n] }
     }
 
+    /// 1-D tensor wrapping `data`.
     pub fn from_vec(data: Vec<f32>) -> Self {
         Self { shape: vec![data.len()], data }
     }
 
+    /// Dimensions, outermost first.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Flat row-major element view.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat element view.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its flat data.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
 
+    /// Reinterpret under a new shape with the same element count.
     pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != self.data.len() {
@@ -101,12 +113,14 @@ impl Tensor {
         self.data[i * inner..(i + 1) * inner].copy_from_slice(&src.data);
     }
 
+    /// Multiply every element by `s` in place.
     pub fn scale(&mut self, s: f32) {
         for x in &mut self.data {
             *x *= s;
         }
     }
 
+    /// `self += s * other`, element-wise (shapes must match).
     pub fn add_scaled(&mut self, other: &Tensor, s: f32) {
         assert_eq!(self.shape, other.shape, "add_scaled shape mismatch");
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -114,6 +128,7 @@ impl Tensor {
         }
     }
 
+    /// Euclidean norm over all elements.
     pub fn l2_norm(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
@@ -135,16 +150,19 @@ pub fn weighted_sum(tensors: &[&Tensor], weights: &[f32]) -> Result<Tensor> {
 // Vector helpers over &[f32] (similarity metrics, clustering)
 // --------------------------------------------------------------------------
 
+/// Dot product of two equal-length vectors.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Euclidean distance between two equal-length vectors.
 pub fn l2_dist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
 }
 
+/// Cosine similarity (0 when either vector is all-zero).
 pub fn cosine_sim(a: &[f32], b: &[f32]) -> f32 {
     let na = dot(a, a).sqrt();
     let nb = dot(b, b).sqrt();
@@ -154,6 +172,7 @@ pub fn cosine_sim(a: &[f32], b: &[f32]) -> f32 {
     dot(a, b) / (na * nb)
 }
 
+/// Cosine distance: `1 - cosine_sim`.
 pub fn cosine_dist(a: &[f32], b: &[f32]) -> f32 {
     1.0 - cosine_sim(a, b)
 }

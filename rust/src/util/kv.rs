@@ -8,12 +8,14 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+/// A parsed `key = value` file.
 #[derive(Debug, Clone, Default)]
 pub struct KvFile {
     map: BTreeMap<String, String>,
 }
 
 impl KvFile {
+    /// Parse `key = value` lines (with `#` comments) from a string.
     pub fn parse(text: &str) -> Result<Self> {
         let mut map = BTreeMap::new();
         for (i, line) in text.lines().enumerate() {
@@ -29,12 +31,14 @@ impl KvFile {
         Ok(Self { map })
     }
 
+    /// Load and parse a file.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
         Self::parse(&text)
     }
 
+    /// Raw string value for `key` (error when absent).
     pub fn get(&self, key: &str) -> Result<&str> {
         self.map
             .get(key)
@@ -42,18 +46,22 @@ impl KvFile {
             .ok_or_else(|| anyhow!("missing key {key:?}"))
     }
 
+    /// Raw string value for `key`, or `default` when absent.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// `key` parsed as usize.
     pub fn usize(&self, key: &str) -> Result<usize> {
         self.get(key)?.parse().with_context(|| format!("parsing {key} as usize"))
     }
 
+    /// `key` parsed as f64.
     pub fn f64(&self, key: &str) -> Result<f64> {
         self.get(key)?.parse().with_context(|| format!("parsing {key} as f64"))
     }
 
+    /// `key` parsed as bool (`1`/`true`/`0`/`false`).
     pub fn bool(&self, key: &str) -> Result<bool> {
         match self.get(key)? {
             "1" | "true" | "True" => Ok(true),
@@ -62,6 +70,7 @@ impl KvFile {
         }
     }
 
+    /// `key` split on commas into trimmed, non-empty strings.
     pub fn list(&self, key: &str) -> Result<Vec<String>> {
         Ok(self
             .get(key)?
@@ -71,6 +80,7 @@ impl KvFile {
             .collect())
     }
 
+    /// `key` as a comma-separated usize list.
     pub fn usize_list(&self, key: &str) -> Result<Vec<usize>> {
         self.list(key)?
             .iter()
@@ -78,6 +88,7 @@ impl KvFile {
             .collect()
     }
 
+    /// All keys in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }

@@ -31,6 +31,7 @@ pub fn ensure(cond: bool, msg: impl Into<String>) -> std::result::Result<(), Str
     }
 }
 
+/// Relative-tolerance float comparison for use inside [`check`].
 pub fn approx_eq(a: f32, b: f32, tol: f32, ctx: &str) -> std::result::Result<(), String> {
     if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
         Ok(())

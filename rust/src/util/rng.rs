@@ -5,17 +5,20 @@
 //! its seed — mirroring the paper's emphasis on HC's determinism vs
 //! K-means' initialisation sensitivity.
 
+/// Deterministic xorshift64* generator.
 #[derive(Clone, Debug)]
 pub struct Rng {
     state: u64,
 }
 
 impl Rng {
+    /// Seeded generator (any seed, including 0, is valid).
     pub fn new(seed: u64) -> Self {
         // avoid the all-zero fixed point
         Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;
@@ -30,6 +33,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn next_f32(&mut self) -> f32 {
         self.next_f64() as f32
     }

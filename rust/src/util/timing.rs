@@ -2,19 +2,23 @@
 
 use std::time::{Duration, Instant};
 
+/// Simple wall-clock stopwatch.
 pub struct Timer {
     start: Instant,
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Time since `start`.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since `start` in seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
@@ -29,11 +33,17 @@ impl Default for Timer {
 /// Statistics from a median-of-N measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchStats {
+    /// Median sample, seconds.
     pub median_s: f64,
+    /// Mean sample, seconds.
     pub mean_s: f64,
+    /// Fastest sample, seconds.
     pub min_s: f64,
+    /// Slowest sample, seconds.
     pub max_s: f64,
+    /// Sample standard deviation, seconds.
     pub std_s: f64,
+    /// Measured iteration count (excluding warmup).
     pub iters: usize,
 }
 

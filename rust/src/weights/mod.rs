@@ -20,9 +20,12 @@ const MAGIC: &[u8; 4] = b"HCWT";
 /// Expert weight triple (Eq. 2): gate / up / down matrices.
 #[derive(Clone, Debug)]
 pub struct ExpertWeights {
-    pub wg: Tensor, // [d, m]
-    pub wu: Tensor, // [d, m]
-    pub wd: Tensor, // [m, d]
+    /// Gate projection, `[d, m]`.
+    pub wg: Tensor,
+    /// Up projection, `[d, m]`.
+    pub wu: Tensor,
+    /// Down projection, `[m, d]`.
+    pub wd: Tensor,
 }
 
 impl ExpertWeights {
@@ -36,22 +39,26 @@ impl ExpertWeights {
     }
 }
 
+/// A named tensor set (one model checkpoint), sorted by name.
 #[derive(Clone, Debug)]
 pub struct Weights {
     map: BTreeMap<String, Tensor>,
 }
 
 impl Weights {
+    /// Wrap an explicit name → tensor map.
     pub fn new(map: BTreeMap<String, Tensor>) -> Self {
         Self { map }
     }
 
+    /// Load an HCWT checkpoint file.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
         Self::from_bytes(&bytes)
     }
 
+    /// Parse HCWT bytes (see `FORMATS.md`).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut r = std::io::Cursor::new(bytes);
         let mut magic = [0u8; 4];
@@ -87,6 +94,7 @@ impl Weights {
         Ok(Self { map })
     }
 
+    /// Write the HCWT serialisation of this weight set.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         w.write_all(MAGIC)?;
@@ -108,26 +116,32 @@ impl Weights {
         Ok(())
     }
 
+    /// Tensor by name (error when absent).
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.map.get(name).ok_or_else(|| anyhow!("missing tensor {name:?}"))
     }
 
+    /// Mutable tensor by name.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
         self.map.get_mut(name).ok_or_else(|| anyhow!("missing tensor {name:?}"))
     }
 
+    /// Insert or replace a tensor.
     pub fn insert(&mut self, name: String, t: Tensor) {
         self.map.insert(name, t);
     }
 
+    /// Tensor names in sorted order.
     pub fn names(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }
 
+    /// Tensor count.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when the checkpoint holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
@@ -149,10 +163,14 @@ impl Weights {
 
     // -- expert accessors ---------------------------------------------------
 
-    fn layer_key(layer: usize, suffix: &str) -> String {
+    /// Canonical HCWT tensor key of a per-layer tensor (`layer{L:02}.{suffix}`)
+    /// — the single source of truth for the checkpoint naming scheme, shared
+    /// with the native backend.
+    pub(crate) fn layer_key(layer: usize, suffix: &str) -> String {
         format!("layer{layer:02}.{suffix}")
     }
 
+    /// Weight triple of expert `idx` in `layer`.
     pub fn expert(&self, layer: usize, idx: usize) -> Result<ExpertWeights> {
         Ok(ExpertWeights {
             wg: self.get(&Self::layer_key(layer, "exp.wg"))?.index(idx),
@@ -161,6 +179,7 @@ impl Weights {
         })
     }
 
+    /// Overwrite expert `idx` of `layer` with `e`.
     pub fn set_expert(&mut self, layer: usize, idx: usize, e: &ExpertWeights) -> Result<()> {
         self.get_mut(&Self::layer_key(layer, "exp.wg"))?.set_index(idx, &e.wg);
         self.get_mut(&Self::layer_key(layer, "exp.wu"))?.set_index(idx, &e.wu);
@@ -168,6 +187,7 @@ impl Weights {
         Ok(())
     }
 
+    /// Router weight matrix `[d, n]` of `layer`.
     pub fn router(&self, layer: usize) -> Result<&Tensor> {
         self.get(&Self::layer_key(layer, "router"))
     }
@@ -186,6 +206,7 @@ impl Weights {
         Ok(self.get("layer00.exp.wg")?.shape()[0])
     }
 
+    /// Number of transformer layers (from the layer-key prefixes).
     pub fn n_layers(&self) -> usize {
         self.map
             .keys()
@@ -197,6 +218,73 @@ impl Weights {
             .max()
             .map(|m| m + 1)
             .unwrap_or(0)
+    }
+
+    /// Synthesize a deterministic random-init checkpoint for `cfg` — the
+    /// same tensor names/shapes `python/compile/model.py::init_params`
+    /// produces (N(0, 0.02²) weights, unit RMSNorm gains), so the native
+    /// backend and the HCWT round-trip can be exercised with no Python or
+    /// training in the loop. Identical `(cfg, seed)` always yields an
+    /// identical checkpoint.
+    pub fn synthesize(cfg: &ModelCfg, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::new(seed);
+        let s = 0.02f32;
+        let mut normal = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| s * rng.normal() as f32).collect()
+        };
+        let mut map = BTreeMap::new();
+        let (d, m, n) = (cfg.d, cfg.m, cfg.n_exp);
+        map.insert(
+            "embed".to_string(),
+            Tensor::new(vec![cfg.vocab, d], normal(cfg.vocab * d)).unwrap(),
+        );
+        map.insert(
+            "pos".to_string(),
+            Tensor::new(vec![cfg.t_max, d], normal(cfg.t_max * d)).unwrap(),
+        );
+        map.insert("ln_f".to_string(), Tensor::full(vec![d], 1.0));
+        for l in 0..cfg.n_layer {
+            for wname in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+                map.insert(
+                    Self::layer_key(l, wname),
+                    Tensor::new(vec![d, d], normal(d * d)).unwrap(),
+                );
+            }
+            map.insert(Self::layer_key(l, "ln1"), Tensor::full(vec![d], 1.0));
+            map.insert(Self::layer_key(l, "ln2"), Tensor::full(vec![d], 1.0));
+            map.insert(
+                Self::layer_key(l, "router"),
+                Tensor::new(vec![d, n], normal(d * n)).unwrap(),
+            );
+            map.insert(
+                Self::layer_key(l, "exp.wg"),
+                Tensor::new(vec![n, d, m], normal(n * d * m)).unwrap(),
+            );
+            map.insert(
+                Self::layer_key(l, "exp.wu"),
+                Tensor::new(vec![n, d, m], normal(n * d * m)).unwrap(),
+            );
+            map.insert(
+                Self::layer_key(l, "exp.wd"),
+                Tensor::new(vec![n, m, d], normal(n * m * d)).unwrap(),
+            );
+            if cfg.shared {
+                let ms = cfg.m_shared;
+                map.insert(
+                    Self::layer_key(l, "shared.wg"),
+                    Tensor::new(vec![d, ms], normal(d * ms)).unwrap(),
+                );
+                map.insert(
+                    Self::layer_key(l, "shared.wu"),
+                    Tensor::new(vec![d, ms], normal(d * ms)).unwrap(),
+                );
+                map.insert(
+                    Self::layer_key(l, "shared.wd"),
+                    Tensor::new(vec![ms, d], normal(ms * d)).unwrap(),
+                );
+            }
+        }
+        Self { map }
     }
 
     /// Build the compact r-expert weight set for `lm_logits_*_r{r}`:

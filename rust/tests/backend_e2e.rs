@@ -1,0 +1,235 @@
+//! End-to-end integration on a synthesized artifact set: the full
+//! calibrate → cluster → merge → evaluate → serve loop through the native
+//! CPU backend, with zero Python, PJRT or pre-built artifacts. This is
+//! the artifact-free twin of `tests/integration.rs` (which runs only
+//! against real `make artifacts` output).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hc_smoe::bench_support::synthesize_artifacts;
+use hc_smoe::clustering::Linkage;
+use hc_smoe::config::Artifacts;
+use hc_smoe::data::TokenStream;
+use hc_smoe::eval::Evaluator;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::{Method, Pipeline, PlanKind};
+use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+use hc_smoe::similarity::Metric;
+
+/// Synthesize one artifact set per test process (tests within a binary
+/// share it; the directory is keyed by pid to avoid cross-run clashes).
+fn arts() -> Artifacts {
+    static DIR: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+    let dir = DIR.get_or_init(|| {
+        let p = std::env::temp_dir().join(format!("hcsmoe_e2e_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        synthesize_artifacts(&p, 0xE2E).expect("synthesize artifacts");
+        p
+    });
+    Artifacts::new(dir)
+}
+
+fn hc_method() -> Method {
+    Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    }
+}
+
+#[test]
+fn native_backend_is_selected_and_runs_logits() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    assert_eq!(ctx.backend_name(), "native");
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let model = ctx.load_original().unwrap();
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % ctx.cfg.vocab) as i32).collect();
+    let logits = ctx.run_logits(&model, &ids).unwrap();
+    assert_eq!(logits.shape(), &[b, t, ctx.cfg.vocab]);
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+    // deterministic across runs
+    let again = ctx.run_logits(&model, &ids).unwrap();
+    assert_eq!(logits.data(), again.data());
+}
+
+#[test]
+fn calibration_statistics_are_consistent() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    assert_eq!(stats.n_layers(), ctx.cfg.n_layer);
+    assert_eq!(stats.n_experts(), ctx.cfg.n_exp);
+    for l in &stats.layers {
+        // every token routes to exactly k experts
+        let total: f32 = l.counts.iter().sum();
+        assert!(
+            (total - (stats.n_tokens * ctx.cfg.k) as f32).abs() < 1.0,
+            "counts {total} vs {}",
+            stats.n_tokens * ctx.cfg.k
+        );
+        // full-softmax scores sum to the token count
+        let psum: f32 = l.probs_sum.iter().sum();
+        assert!((psum - stats.n_tokens as f32).abs() < 1.0, "probs_sum {psum}");
+        // top-k gates sum to the token count (softmax over k per token)
+        let gsum: f32 = l.gate_sum.iter().sum();
+        assert!((gsum - stats.n_tokens as f32).abs() < 1.0, "gate_sum {gsum}");
+        assert!(l.mean_out.data().iter().all(|x| x.is_finite()));
+        assert!(l.mean_out.l2_norm() > 0.0);
+        assert_eq!(l.rl_sub.shape(), &[ctx.manifest.t_sub, ctx.cfg.n_exp]);
+        assert_eq!(l.act_sub.shape()[1], ctx.manifest.t_act);
+    }
+    // domain shift must move routing frequencies
+    let math = ctx.calibrate("math").unwrap();
+    assert_ne!(stats.layers[0].counts, math.layers[0].counts);
+}
+
+#[test]
+fn full_compress_eval_pipeline_runs() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    let r = ctx.cfg.n_exp / 2;
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, r).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    // Fig. 3: router untouched; members share identical merged weights
+    for l in 0..ctx.cfg.n_layer {
+        assert_eq!(
+            ctx.base.router(l).unwrap().data(),
+            cm.weights.router(l).unwrap().data()
+        );
+    }
+    let PlanKind::Merge { groups, .. } = &cm.plan.kind else { panic!("merge plan") };
+    for (l, layer_groups) in groups.iter().enumerate() {
+        let covered: usize = layer_groups.iter().map(|g| g.len()).sum();
+        assert_eq!(covered, ctx.cfg.n_exp);
+        for g in layer_groups {
+            let first = cm.weights.expert(l, g[0]).unwrap();
+            for &e in &g[1..] {
+                assert_eq!(first.wg.data(), cm.weights.expert(l, e).unwrap().wg.data());
+            }
+        }
+    }
+    // evaluation end to end
+    let ev = Evaluator::new(&ctx).unwrap();
+    let original = ctx.load_original().unwrap();
+    let merged = cm.load(&ctx).unwrap();
+    for task in ["arc_e", "boolq"] {
+        let a = ev.accuracy(&merged, task).unwrap();
+        assert!((0.0..=1.0).contains(&a), "{task}: {a}");
+    }
+    let stream = TokenStream::load(ctx.arts.calib_tokens_path("ppl_heldout")).unwrap();
+    let p_orig = ev.perplexity(&original, &stream).unwrap();
+    let p_merged = ev.perplexity(&merged, &stream).unwrap();
+    assert!(p_orig.is_finite() && p_orig > 1.0, "ppl {p_orig}");
+    assert!(p_merged.is_finite() && p_merged > 1.0, "ppl {p_merged}");
+}
+
+#[test]
+fn identity_merge_preserves_logits_exactly() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(hc_method())
+        .plan(&ctx, &stats, ctx.cfg.n_exp)
+        .unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 90) as i32).collect();
+    let a = ctx.run_logits(&ctx.load_original().unwrap(), &ids).unwrap();
+    let b2 = ctx.run_logits(&cm.load(&ctx).unwrap(), &ids).unwrap();
+    // r = n leaves every singleton cluster's weights bit-identical, and
+    // the native forward is deterministic, so logits match exactly
+    assert_eq!(a.data(), b2.data());
+}
+
+#[test]
+fn pruning_masks_reroute_and_change_outputs() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    let r = ctx.cfg.n_exp / 2;
+    let plan = Pipeline::new(Method::SPrune).plan(&ctx, &stats, r).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let PlanKind::Prune { keep } = &cm.plan.kind else { panic!("prune plan") };
+    let total: usize = keep.iter().map(|k| k.len()).sum();
+    assert_eq!(total, r * ctx.cfg.n_layer);
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 77) as i32).collect();
+    let orig = ctx.run_logits(&ctx.load_original().unwrap(), &ids).unwrap();
+    let pruned = ctx.run_logits(&cm.load(&ctx).unwrap(), &ids).unwrap();
+    assert_ne!(orig.data(), pruned.data());
+    assert!(pruned.data().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn compact_variant_agrees_with_duplicated_layout() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    let r = ctx.cfg.n_exp / 2;
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, r).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let (cw, remap) = cm.to_compact(&ctx).unwrap();
+    assert_eq!(cw.n_experts().unwrap(), r);
+    assert!(remap.iter().all(|&s| (s as usize) < r));
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 85) as i32).collect();
+    let full = ctx.run_logits(&cm.load(&ctx).unwrap(), &ids).unwrap();
+    let compact_model = ctx.load_compact(r, &cw, remap, "compact").unwrap();
+    let comp = ctx.run_logits_compact(&compact_model, &ids).unwrap();
+    // Same math, but each layout has its own capacity queues (full keeps
+    // one per duplicated slot; compact folds a group into one queue), so
+    // agreement is distributional, not bitwise.
+    let v = full.shape()[2];
+    let mut cos_sum = 0f64;
+    for i in 0..b * t {
+        let rf = &full.data()[i * v..(i + 1) * v];
+        let rc = &comp.data()[i * v..(i + 1) * v];
+        cos_sum += hc_smoe::tensor::cosine_sim(rf, rc) as f64;
+    }
+    let cos = cos_sum / (b * t) as f64;
+    assert!(cos > 0.98, "compact/full logit cosine only {cos:.4}");
+}
+
+#[test]
+fn dssim_shared_expert_model_runs() {
+    let ctx = ModelContext::load(&arts(), "dssim").unwrap();
+    assert!(ctx.cfg.shared);
+    let (b, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let model = ctx.load_original().unwrap();
+    let ids: Vec<i32> = (0..b * t).map(|i| (i % 60) as i32 + 16).collect();
+    let logits = ctx.run_logits(&model, &ids).unwrap();
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+    let stats = ctx.calibrate("general").unwrap();
+    assert_eq!(stats.n_experts(), ctx.cfg.n_exp);
+}
+
+#[test]
+fn serving_through_native_backend_matches_direct_scores() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "mixsim").unwrap();
+    let bench = hc_smoe::data::Benchmark::load(a.benchmark("arc_e")).unwrap();
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "mixsim".into(),
+            compress: None,
+        },
+        BatcherConfig {
+            max_rows: ctx.manifest.eval_b,
+            max_wait: Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    let ev = Evaluator::new(&ctx).unwrap();
+    let model = ctx.load_original().unwrap();
+    let direct = ev.score_benchmark(&model, &bench).unwrap();
+    for (ii, item) in bench.items.iter().take(4).enumerate() {
+        let scores = handle.score_item(&item.prompt, &item.choices).unwrap();
+        let pred = scores
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(pred, direct.predictions[ii], "item {ii} prediction differs");
+    }
+    handle.shutdown().unwrap();
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # The exact gate CI runs — contributors run this locally to get the same
 # verdict. The first two commands are the repository's tier-1 gate verbatim;
-# fmt/clippy extend it for the CI `checks` job.
+# the rest extend it for the CI `checks` job (doc tests, fmt, clippy, and
+# the offline backend-e2e smoke on synthesized artifacts).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,10 +12,19 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo test --doc"
+cargo test --doc -q
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
 echo "==> cargo clippy -- -D warnings"
 cargo clippy -- -D warnings
+
+echo "==> backend-e2e smoke (native CPU backend, synthesized artifacts)"
+rm -rf target/ci-artifacts-synth
+cargo run --release --bin hc-smoe -- synth --out target/ci-artifacts-synth
+HCSMOE_ARTIFACTS=target/ci-artifacts-synth \
+  cargo run --release --example e2e_compress_eval
 
 echo "ci_check: all green"
