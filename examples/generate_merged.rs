@@ -1,0 +1,162 @@
+//! Generation demo: compress qwensim to half its experts with HC-SMoE,
+//! then emit tokens with the KV-cached decode loop — offline, through
+//! three variants (original, merged full layout, merged compact r-expert
+//! layout) — and finally serve mixed score + generate traffic through the
+//! continuous-batching executor. The served generation is bit-identical
+//! to the offline one: both run the same seeded `generate::Session`.
+//!
+//! Run with: `cargo run --release --offline --example generate_merged`
+
+use std::time::Instant;
+
+use hc_smoe::bench_support::ensure_artifacts;
+use hc_smoe::clustering::Linkage;
+use hc_smoe::generate::{generate, generate_compact, SamplingParams};
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::{Method, Pipeline};
+use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+use hc_smoe::similarity::Metric;
+
+fn fmt(ts: &[i32]) -> String {
+    ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+fn main() -> anyhow::Result<()> {
+    let arts = ensure_artifacts()?;
+    let ctx = ModelContext::load(&arts, "qwensim")?;
+    let n_exp = ctx.cfg.n_exp;
+    let r = n_exp / 2;
+    let method = Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    };
+    println!(
+        "qwensim on the {} backend: {} layers x {n_exp} experts, compressing to {r}",
+        ctx.backend_name(),
+        ctx.cfg.n_layer
+    );
+    let stats = ctx.calibrate("general")?;
+    let plan = Pipeline::new(method.clone()).plan(&ctx, &stats, r)?;
+    let cm = plan.apply(&ctx, &stats)?;
+
+    // [BOS, Q, content..., SEP, A] — the benchmark prompt shape
+    let prompt: Vec<i32> = vec![1, 4, 20, 50, 33, 3, 5];
+    let greedy = SamplingParams::greedy(24, None);
+    let sampled = SamplingParams::top_k(8, 0.8, 7, 24, None);
+
+    // 1. offline generation across the three variants
+    let original = ctx.load_original()?;
+    let merged = cm.load(&ctx)?;
+    let (cw, remap) = cm.to_compact(&ctx)?;
+    let compact = ctx.load_compact(r, &cw, remap, &cm.label)?;
+
+    println!("\nprompt ({}): {}", prompt.len(), fmt(&prompt));
+    let o = generate(&ctx, &original, &prompt, greedy.clone())?;
+    println!(
+        "original          greedy: {} [{:?}, {:.0} tok/s]",
+        fmt(&o.tokens),
+        o.finish,
+        o.decode_tok_s()
+    );
+    let m = generate(&ctx, &merged, &prompt, greedy.clone())?;
+    println!(
+        "merged (full)     greedy: {} [{:?}, {:.0} tok/s]",
+        fmt(&m.tokens),
+        m.finish,
+        m.decode_tok_s()
+    );
+    let c = generate_compact(&ctx, &compact, &prompt, greedy)?;
+    println!(
+        "merged (compact)  greedy: {} [{:?}, {:.0} tok/s]",
+        fmt(&c.tokens),
+        c.finish,
+        c.decode_tok_s()
+    );
+    let s = generate(&ctx, &merged, &prompt, sampled)?;
+    println!(
+        "merged (full)   seed=7  : {} [{:?}, {:.0} tok/s]",
+        fmt(&s.tokens),
+        s.finish,
+        s.decode_tok_s()
+    );
+    println!(
+        "kv cache: {} B per token, {} B per sequence at t_max={}",
+        ctx.cfg.kv_cache_bytes(1),
+        ctx.cfg.kv_cache_bytes(ctx.cfg.t_max),
+        ctx.cfg.t_max
+    );
+
+    // 2. the continuous-batching server under mixed score + generate load
+    println!("\nstarting executor (compresses {n_exp} -> {r} experts at startup)...");
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: arts.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: Some((method, r, "general".into())),
+        },
+        BatcherConfig {
+            max_rows: ctx.manifest.eval_b,
+            max_wait: std::time::Duration::from_millis(4),
+        },
+    )?;
+    let bench = hc_smoe::data::Benchmark::load(arts.root.join("eval/arc_e.bin"))?;
+    let t0 = Instant::now();
+    let mut served: Vec<(usize, hc_smoe::generate::Generated)> = Vec::new();
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        // generation clients join/leave the running decode batch...
+        let mut joins = Vec::new();
+        for g in 0..3usize {
+            let handle = &handle;
+            let prompt = &prompt;
+            joins.push(scope.spawn(move || {
+                let params = SamplingParams::top_k(8, 0.8, 7 + g as u64, 8 + 4 * g, None);
+                handle.generate(prompt, params).map(|out| (g, out))
+            }));
+        }
+        // ...while scoring clients keep the dynamic batcher busy
+        for cl in 0..2usize {
+            let handle = &handle;
+            let bench = &bench;
+            scope.spawn(move || {
+                for item in bench.items.iter().skip(cl * 8).take(8) {
+                    handle.score_item(&item.prompt, &item.choices).unwrap();
+                }
+            });
+        }
+        for j in joins {
+            served.push(j.join().expect("generation client panicked")?);
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    served.sort_by_key(|(g, _)| *g);
+    for (g, out) in &served {
+        println!("served gen #{g} (seed {}): {} [{:?}]", 7 + g, fmt(&out.tokens), out.finish);
+    }
+    // the server runs the same seeded Session loop as the offline API
+    let offline = generate(&ctx, &merged, &prompt, SamplingParams::top_k(8, 0.8, 7, 8, None))?;
+    assert_eq!(
+        served[0].1.tokens, offline.tokens,
+        "served generation must replay the offline one bit for bit"
+    );
+    println!("served gen #0 == offline generate() with the same seed ✓");
+
+    let snap = handle.metrics.snapshot();
+    handle.shutdown()?;
+    println!(
+        "mixed load done in {wall:.2}s: {} score rows in {} batches ({:.1} rows/s busy); \
+         {} generations, {} prompt tok prefilled, {} tok decoded \
+         ({:.0} tok/s, {:.2} ms/token)",
+        snap.rows,
+        snap.batches,
+        snap.rows_per_sec(),
+        snap.gen_requests,
+        snap.prefill_tokens,
+        snap.gen_tokens,
+        snap.decode_tok_s(),
+        snap.ms_per_token(),
+    );
+    Ok(())
+}

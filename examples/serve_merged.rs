@@ -71,11 +71,14 @@ fn main() -> anyhow::Result<()> {
                         .collect();
                     let (reply, rx) = std::sync::mpsc::channel();
                     let t = Instant::now();
-                    tx.send(hc_smoe::serving::ScoreRequest {
-                        rows,
-                        reply,
-                        enqueued: Instant::now(),
-                    })?;
+                    tx.send(
+                        hc_smoe::serving::ScoreRequest {
+                            rows,
+                            reply,
+                            enqueued: Instant::now(),
+                        }
+                        .into(),
+                    )?;
                     let scores = rx.recv()?;
                     lats.push(t.elapsed().as_secs_f64());
                     let pred = scores

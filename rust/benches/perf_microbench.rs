@@ -15,10 +15,11 @@
 //! artifact set (real AOT output when present, else the synthesized
 //! offline set).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use hc_smoe::backend::native::{forward_calib_with, forward_logits_with};
-use hc_smoe::bench_support::{self, BackendBenchRow, Lab, ParallelBenchRow};
+use hc_smoe::backend::native::{forward_calib_with, forward_logits_with, NativeBackend};
+use hc_smoe::backend::Backend;
+use hc_smoe::bench_support::{self, BackendBenchRow, GenerateBenchRow, Lab, ParallelBenchRow};
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
 use hc_smoe::config::ModelCfg;
 use hc_smoe::report::Table;
@@ -32,6 +33,7 @@ use hc_smoe::weights::Weights;
 
 const BENCH_JSON: &str = "BENCH_parallel.json";
 const BACKEND_JSON: &str = "BENCH_backend.json";
+const GENERATE_JSON: &str = "BENCH_generate.json";
 
 fn synthetic_feats(e: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
@@ -204,6 +206,126 @@ fn backend_sweep(threads: usize, table: &mut Table) -> Vec<BackendBenchRow> {
     rows
 }
 
+/// Toy config for the generation sweep: like [`backend_cfg`] but with a
+/// deeper context window (long decodes) and a roomy capacity factor so
+/// dispatch stays drop-free — cached and uncached paths then walk the
+/// same numerical trajectory.
+fn gen_cfg(n_exp: usize) -> ModelCfg {
+    ModelCfg { t_max: 192, cap_factor: 4.0, ..backend_cfg(n_exp) }
+}
+
+/// Median of raw per-run durations (seconds).
+fn median_s(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Autoregressive decode throughput → `BENCH_generate.json`: KV-cached
+/// decode (O(t)/token) vs uncached full re-forward (O(t²)/token), full vs
+/// compact r-expert layout. The timed region is the decode loop only
+/// (prefill is excluded); both paths feed the same fixed token stream so
+/// they do identical model work. The cached path's per-step matmuls are
+/// single-row and therefore thread-independent — its "serial" and
+/// "parallel" columns are two independent measurements of the same code;
+/// the uncached path re-runs the batched forward, where the thread count
+/// is real.
+fn generate_sweep(threads: usize, table: &mut Table) -> Vec<GenerateBenchRow> {
+    let smoke = bench_support::smoke();
+    let iters = if smoke { 1 } else { 3 };
+    let decode_lens: &[usize] = if smoke { &[16] } else { &[32, 64, 128] };
+    let cfg = gen_cfg(8);
+    let w = Weights::synthesize(&cfg, 0x6E6E);
+    let prompt: Vec<i32> = (0..16usize).map(|i| (16 + (i * 5) % 64) as i32).collect();
+    let feed = |i: usize| -> i32 { 16 + ((i * 7) % 64) as i32 };
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+
+    // compact r=4 layout: keep the first 4 experts, fold the rest on top
+    let r = 4usize;
+    let keep: Vec<Vec<usize>> = vec![(0..r).collect(); cfg.n_layer];
+    let cw = w.to_compact(&cfg, &keep).expect("compact weights");
+    let remap: Vec<i32> = (0..cfg.n_layer * cfg.n_exp)
+        .map(|i| ((i % cfg.n_exp) % r) as i32)
+        .collect();
+
+    let backend = NativeBackend::new(cfg.clone());
+    let full_state = backend.load_model(&w, cfg.n_exp).expect("load full");
+    let compact_state = backend.load_model(&cw, r).expect("load compact");
+
+    let mut rows = Vec::new();
+    for (variant, n_slots, weights, state, remap_opt) in [
+        ("full", cfg.n_exp, &w, full_state.as_ref(), None),
+        ("compact", r, &cw, compact_state.as_ref(), Some(remap.as_slice())),
+    ] {
+        for &n_decode in decode_lens {
+            // cached: one prefill (untimed), then n_decode O(t) steps
+            let cached = |_threads: usize| -> f64 {
+                let mut samples = Vec::with_capacity(iters);
+                for _ in 0..iters {
+                    let (mut cache, _) = backend
+                        .run_prefill(state, &prompt, &mask, remap_opt)
+                        .expect("prefill");
+                    let t0 = Instant::now();
+                    for i in 0..n_decode {
+                        backend
+                            .run_decode(state, cache.as_mut(), feed(i), &mask, remap_opt)
+                            .expect("decode");
+                    }
+                    samples.push(t0.elapsed().as_secs_f64());
+                }
+                median_s(samples)
+            };
+            // uncached: re-forward the whole prefix for every emitted token
+            let uncached = |threads: usize| -> f64 {
+                let mut samples = Vec::with_capacity(iters);
+                for _ in 0..iters {
+                    let mut seq = prompt.clone();
+                    let t0 = Instant::now();
+                    for i in 0..n_decode {
+                        seq.push(feed(i));
+                        std::hint::black_box(
+                            forward_logits_with(
+                                &cfg,
+                                weights,
+                                &seq,
+                                1,
+                                seq.len(),
+                                &mask,
+                                remap_opt,
+                                n_slots,
+                                threads,
+                            )
+                            .expect("forward"),
+                        );
+                    }
+                    samples.push(t0.elapsed().as_secs_f64());
+                }
+                median_s(samples)
+            };
+            for (path, serial_s, parallel_s) in [
+                ("decode_cached", cached(1), cached(threads)),
+                ("decode_uncached", uncached(1), uncached(threads)),
+            ] {
+                table.row(vec![
+                    format!("{path} {variant} t={}", prompt.len() + n_decode),
+                    format!("{:.3}", serial_s * 1e3),
+                    format!("{:.3}", parallel_s * 1e3),
+                    format!("{:.0} tok/s", n_decode as f64 / parallel_s.max(1e-12)),
+                ]);
+                rows.push(GenerateBenchRow {
+                    path: path.into(),
+                    variant: variant.into(),
+                    n_slots,
+                    prompt_tokens: prompt.len(),
+                    decode_tokens: n_decode,
+                    serial_ms: serial_s * 1e3,
+                    parallel_ms: parallel_s * 1e3,
+                });
+            }
+        }
+    }
+    rows
+}
+
 fn artifact_sections() -> anyhow::Result<()> {
     let lab = Lab::new("qwensim")?;
     let (b, t) = (lab.ctx.manifest.eval_b, lab.ctx.manifest.eval_t);
@@ -329,11 +451,14 @@ fn artifact_sections() -> anyhow::Result<()> {
                             })
                             .collect();
                         let (reply, rx) = std::sync::mpsc::channel();
-                        tx.send(hc_smoe::serving::ScoreRequest {
-                            rows,
-                            reply,
-                            enqueued: std::time::Instant::now(),
-                        })
+                        tx.send(
+                            hc_smoe::serving::ScoreRequest {
+                                rows,
+                                reply,
+                                enqueued: std::time::Instant::now(),
+                            }
+                            .into(),
+                        )
                         .unwrap();
                         rx.recv().unwrap();
                     }
@@ -357,66 +482,124 @@ fn artifact_sections() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `HCSMOE_BENCH_ONLY` filter: run one section (`parallel` | `backend` |
+/// `generate` | `artifact`) instead of everything — lets CI collect a
+/// full-iteration `BENCH_generate.json` without re-running the other
+/// sweeps.
+fn section_enabled(name: &str) -> bool {
+    match std::env::var("HCSMOE_BENCH_ONLY") {
+        Ok(only) => only == name,
+        Err(_) => true,
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let threads = hc_smoe::parallel::default_threads();
-    let mut table = Table::new(
-        &format!("Parallel vs serial hot paths ({threads} threads)"),
-        &["Path", "serial ms", "parallel ms", "speedup"],
-    );
-    let rows = parallel_sweep(threads, &mut table);
-    table.print();
-    table.append_to("bench_results.md")?;
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let measurement = if bench_support::smoke() {
-        "SMOKE MODE: single sample, harness check only — not a perf measurement"
-    } else {
-        "median of 15 (release)"
-    };
-    let note = format!(
-        "{measurement}; host exposes {cores} cpus; linkage_scan_auto compares serial vs \
-         auto dispatch (work-gated: parallel scan engages from ~1450 clusters)"
-    );
-    bench_support::write_parallel_json(
-        BENCH_JSON,
-        threads,
-        "rust/benches/perf_microbench.rs",
-        &note,
-        &rows,
-    )?;
-    println!("wrote {BENCH_JSON}");
+    if section_enabled("parallel") {
+        let mut table = Table::new(
+            &format!("Parallel vs serial hot paths ({threads} threads)"),
+            &["Path", "serial ms", "parallel ms", "speedup"],
+        );
+        let rows = parallel_sweep(threads, &mut table);
+        table.print();
+        table.append_to("bench_results.md")?;
+        let measurement = if bench_support::smoke() {
+            "SMOKE MODE: single sample, harness check only — not a perf measurement"
+        } else {
+            "median of 15 (release)"
+        };
+        let note = format!(
+            "{measurement}; host exposes {cores} cpus; linkage_scan_auto compares serial vs \
+             auto dispatch (work-gated: parallel scan engages from ~1450 clusters)"
+        );
+        bench_support::write_parallel_json(
+            BENCH_JSON,
+            threads,
+            "rust/benches/perf_microbench.rs",
+            &note,
+            &rows,
+        )?;
+        println!("wrote {BENCH_JSON}");
+    }
 
-    let mut btable = Table::new(
-        &format!("Native backend throughput ({threads} threads)"),
-        &["Path", "serial ms", "parallel ms", "throughput"],
+    if section_enabled("backend") {
+        let mut btable = Table::new(
+            &format!("Native backend throughput ({threads} threads)"),
+            &["Path", "serial ms", "parallel ms", "throughput"],
+        );
+        let brows = backend_sweep(threads, &mut btable);
+        btable.print();
+        btable.append_to("bench_results.md")?;
+        let backend_measurement = if bench_support::smoke() {
+            "SMOKE MODE: single sample, harness check only — not a perf measurement"
+        } else {
+            "median of 9 (release)"
+        };
+        let backend_note = format!(
+            "{backend_measurement}; host exposes {cores} cpus; synthesized checkpoints \
+             (b=4, t=64), native backend forward/calib"
+        );
+        bench_support::write_backend_json(
+            BACKEND_JSON,
+            threads,
+            "rust/benches/perf_microbench.rs",
+            &backend_note,
+            &brows,
+        )?;
+        println!("wrote {BACKEND_JSON}");
+    }
+
+    if !section_enabled("generate") {
+        if bench_support::smoke() {
+            println!("perf_microbench: smoke mode, skipping artifact sections");
+            return Ok(());
+        }
+        if section_enabled("artifact") {
+            match artifact_sections() {
+                Ok(()) => {}
+                Err(e) => println!("skipping artifact sections: {e:#}"),
+            }
+        }
+        return Ok(());
+    }
+
+    let mut gtable = Table::new(
+        &format!("Autoregressive decode: KV-cached vs uncached ({threads} threads)"),
+        &["Path", "serial ms", "parallel ms", "decode throughput"],
     );
-    let brows = backend_sweep(threads, &mut btable);
-    btable.print();
-    btable.append_to("bench_results.md")?;
-    let backend_measurement = if bench_support::smoke() {
+    let grows = generate_sweep(threads, &mut gtable);
+    gtable.print();
+    gtable.append_to("bench_results.md")?;
+    let gen_measurement = if bench_support::smoke() {
         "SMOKE MODE: single sample, harness check only — not a perf measurement"
     } else {
-        "median of 9 (release)"
+        "median of 3 (release)"
     };
-    let backend_note = format!(
-        "{backend_measurement}; host exposes {cores} cpus; synthesized checkpoints \
-         (b=4, t=64), native backend forward/calib"
+    let gen_note = format!(
+        "{gen_measurement}; host exposes {cores} cpus; synthesized checkpoint (L=2, d=64, \
+         E=8 full / r=4 compact), 16-token prompt; timed region is the decode loop only; \
+         cached decode is single-row and thread-independent (both columns measure the \
+         same code), uncached re-forwards the whole prefix per token"
     );
-    bench_support::write_backend_json(
-        BACKEND_JSON,
+    bench_support::write_generate_json(
+        GENERATE_JSON,
         threads,
         "rust/benches/perf_microbench.rs",
-        &backend_note,
-        &brows,
+        &gen_note,
+        &grows,
     )?;
-    println!("wrote {BACKEND_JSON}");
+    println!("wrote {GENERATE_JSON}");
 
     if bench_support::smoke() {
         println!("perf_microbench: smoke mode, skipping artifact sections");
         return Ok(());
     }
-    match artifact_sections() {
-        Ok(()) => {}
-        Err(e) => println!("skipping artifact sections: {e:#}"),
+    if section_enabled("artifact") {
+        match artifact_sections() {
+            Ok(()) => {}
+            Err(e) => println!("skipping artifact sections: {e:#}"),
+        }
     }
     Ok(())
 }

@@ -23,6 +23,16 @@
 //! them. Model variants are opaque [`ModelState`] handles so each backend
 //! can keep whatever resident form it wants (a weight copy for native,
 //! device buffers for PJRT).
+//!
+//! Besides the batched scoring/calibration entry points, the trait exposes
+//! an **incremental** pair — [`Backend::run_prefill`] /
+//! [`Backend::run_decode`] — for autoregressive generation: prefill runs
+//! the prompt once and hands back an opaque per-sequence [`KvCache`];
+//! decode then appends one token at O(t) cost instead of the O(t²) of
+//! re-running the full forward per emitted token. The native backend
+//! implements it with per-layer K/V caching; the PJRT backend reports it
+//! as unsupported until incremental HLO entry points are lowered (see
+//! `SERVING.md`).
 
 pub mod native;
 pub mod pjrt;
@@ -42,6 +52,29 @@ use crate::weights::Weights;
 pub trait ModelState {
     /// Downcast support (each backend recovers its own concrete state).
     fn as_any(&self) -> &dyn Any;
+}
+
+/// Opaque per-sequence decode state: one sequence's cached attention K/V
+/// (plus whatever bookkeeping the backend needs, e.g. the native backend's
+/// cumulative expert-dispatch counts).
+///
+/// Created by [`Backend::run_prefill`], advanced one token at a time by
+/// [`Backend::run_decode`], and owned by the *caller* (the generation loop
+/// or the serving executor) — the backend holds no reference between
+/// calls, so any number of sequences can be in flight against one
+/// [`ModelState`]. The cache is in-memory only and is never serialized
+/// (there is deliberately no on-disk format for it — see `FORMATS.md`).
+pub trait KvCache {
+    /// Downcast support (each backend recovers its own concrete cache).
+    fn as_any(&self) -> &dyn Any;
+    /// Mutable downcast support ([`Backend::run_decode`] appends in place).
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+    /// Tokens currently cached (prompt + decoded so far).
+    fn seq_len(&self) -> usize;
+    /// Resident bytes of the cached K/V tensors (the per-sequence memory
+    /// cost documented in `SERVING.md`; matches
+    /// [`crate::config::ModelCfg::kv_cache_bytes`] at [`Self::seq_len`]).
+    fn byte_size(&self) -> usize;
 }
 
 /// A model-execution engine.
@@ -95,6 +128,98 @@ pub trait Backend {
         t_sub: usize,
         t_act: usize,
     ) -> Result<Vec<Tensor>>;
+
+    /// Incremental inference, part 1: run the forward over a whole prompt
+    /// (one sequence, `ids.len()` tokens), returning the sequence's
+    /// [`KvCache`] plus the **last position's** next-token logits
+    /// (`[vocab]`). `mask`/`remap` have the same meaning as in
+    /// [`Backend::run_logits`].
+    ///
+    /// The native backend guarantees the returned logits are bit-identical
+    /// to the last row of `run_logits` over the same prompt (see
+    /// [`Backend::run_decode`] for the full contract).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache};
+    /// use hc_smoe::config::ModelCfg;
+    /// use hc_smoe::weights::Weights;
+    ///
+    /// let cfg = ModelCfg {
+    ///     name: "demo".into(), n_layer: 1, d: 8, m: 8, n_exp: 2, k: 1,
+    ///     heads: 2, vocab: 16, t_max: 8, shared: false, m_shared: 8,
+    ///     cap_factor: 4.0, block_c: 1,
+    /// };
+    /// let w = Weights::synthesize(&cfg, 7);
+    /// let backend = NativeBackend::new(cfg.clone());
+    /// let state = backend.load_model(&w, cfg.n_exp).unwrap();
+    /// let mask = vec![0.0; cfg.n_layer * cfg.n_exp];
+    ///
+    /// let (cache, logits) = backend.run_prefill(state.as_ref(), &[1, 4, 9], &mask, None).unwrap();
+    /// assert_eq!(cache.seq_len(), 3);
+    /// assert_eq!(logits.len(), cfg.vocab);
+    ///
+    /// // bit-identical to the last row of the full scoring forward
+    /// let full = backend.run_logits(state.as_ref(), &[1, 4, 9], 1, 3, &mask, None).unwrap();
+    /// assert_eq!(&full.data()[2 * cfg.vocab..], &logits[..]);
+    /// ```
+    fn run_prefill(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)>;
+
+    /// Incremental inference, part 2: append **one** token to a sequence
+    /// and return the next-token logits (`[vocab]`) at the new position.
+    /// Cost is O(t) in the sequence length (one attention row against the
+    /// cached K/V) instead of the O(t²) a full re-forward pays.
+    ///
+    /// Contract (native backend): feeding the same token sequence through
+    /// `run_prefill` + repeated `run_decode` yields, at every position,
+    /// logits bit-identical to `run_logits` over that prefix — provided no
+    /// expert capacity drop occurs on an *earlier* position (capacity
+    /// grows with sequence length, so a previously dropped token could be
+    /// re-admitted by a longer forward; the cache stores earlier positions
+    /// as computed at their own step). The synthesized artifact sets are
+    /// dispatch-drop-free by construction, making the equivalence exact
+    /// there; `rust/tests/generate.rs` pins it.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache};
+    /// use hc_smoe::config::ModelCfg;
+    /// use hc_smoe::weights::Weights;
+    ///
+    /// let cfg = ModelCfg {
+    ///     name: "demo".into(), n_layer: 1, d: 8, m: 8, n_exp: 2, k: 1,
+    ///     heads: 2, vocab: 16, t_max: 8, shared: false, m_shared: 8,
+    ///     cap_factor: 4.0, block_c: 1,
+    /// };
+    /// let w = Weights::synthesize(&cfg, 7);
+    /// let backend = NativeBackend::new(cfg.clone());
+    /// let state = backend.load_model(&w, cfg.n_exp).unwrap();
+    /// let mask = vec![0.0; cfg.n_layer * cfg.n_exp];
+    ///
+    /// let (mut cache, _) = backend.run_prefill(state.as_ref(), &[1, 4], &mask, None).unwrap();
+    /// let step = backend.run_decode(state.as_ref(), cache.as_mut(), 9, &mask, None).unwrap();
+    /// assert_eq!(cache.seq_len(), 3);
+    ///
+    /// // identical to scoring the extended sequence from scratch
+    /// let full = backend.run_logits(state.as_ref(), &[1, 4, 9], 1, 3, &mask, None).unwrap();
+    /// assert_eq!(&full.data()[2 * cfg.vocab..], &step[..]);
+    /// ```
+    fn run_decode(
+        &self,
+        state: &dyn ModelState,
+        cache: &mut dyn KvCache,
+        token: i32,
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Vec<f32>>;
 }
 
 /// Environment variable selecting the execution backend.
@@ -121,6 +246,17 @@ pub(crate) fn downcast_state<'a, T: 'static>(
         .as_any()
         .downcast_ref::<T>()
         .ok_or_else(|| anyhow!("model state was not created by the {backend} backend"))
+}
+
+/// Downcast a [`KvCache`] to the concrete type `T` a backend expects.
+pub(crate) fn downcast_cache_mut<'a, T: 'static>(
+    cache: &'a mut dyn KvCache,
+    backend: &str,
+) -> Result<&'a mut T> {
+    cache
+        .as_any_mut()
+        .downcast_mut::<T>()
+        .ok_or_else(|| anyhow!("kv cache was not created by the {backend} backend"))
 }
 
 #[cfg(test)]

@@ -21,6 +21,19 @@
 //! points below give benches explicit serial-vs-parallel control. The
 //! [`NativeBackend`] trait impl auto-gates the thread count on the
 //! per-call work estimate (same policy as every other hot path).
+//!
+//! The incremental pair (`run_prefill`/`run_decode`) reuses the exact same
+//! building blocks: prefill is the scoring forward with the per-layer K/V
+//! projections captured into a [`NativeKvCache`] and the dispatch counts
+//! carried over; decode computes one attention row against the cached K/V
+//! and one-token MoE dispatch against the cumulative counts, so every
+//! f32 operation (and its order) matches the full forward — which is what
+//! makes cached decode logits bit-identical to an uncached re-forward
+//! (`rust/tests/generate.rs`). The matmul per-element reduction order is
+//! length-independent (ascending-k, see [`crate::tensor::matmul`]), so a
+//! 1-row product equals the corresponding row of the batched product.
+
+use std::sync::OnceLock;
 
 use anyhow::{ensure, Result};
 
@@ -29,7 +42,7 @@ use crate::parallel;
 use crate::tensor::{dot, matmul_blocked_with, Tensor};
 use crate::weights::Weights;
 
-use super::{downcast_state, Backend, ModelState};
+use super::{downcast_cache_mut, downcast_state, Backend, KvCache, ModelState};
 
 /// RMSNorm epsilon (mirrors `model.py::rmsnorm`).
 const RMS_EPS: f32 = 1e-6;
@@ -39,15 +52,73 @@ pub struct NativeBackend {
     cfg: ModelCfg,
 }
 
-/// Resident native variant: a weight copy plus its physical slot count.
+/// Resident native variant: a weight copy plus its physical slot count
+/// (and the lazily transposed embedding for the weight-tied decode head).
 struct NativeModel {
     weights: Weights,
     n_slots: usize,
+    embed_t: OnceLock<Vec<f32>>,
 }
 
 impl ModelState for NativeModel {
     fn as_any(&self) -> &dyn std::any::Any {
         self
+    }
+}
+
+impl NativeModel {
+    /// `embedᵀ` (`[d, vocab]`), built once per resident variant: the
+    /// incremental decode head multiplies a single hidden row against it
+    /// every step, so re-transposing per call would dominate.
+    fn embed_t(&self, cfg: &ModelCfg) -> Result<&[f32]> {
+        if let Some(et) = self.embed_t.get() {
+            return Ok(et);
+        }
+        let embed = self.weights.get("embed")?;
+        let (d, vocab) = (cfg.d, cfg.vocab);
+        ensure!(embed.shape() == [vocab, d], "embed shape mismatch");
+        let mut et = vec![0f32; d * vocab];
+        for vtok in 0..vocab {
+            for j in 0..d {
+                et[j * vocab + vtok] = embed.data()[vtok * d + j];
+            }
+        }
+        Ok(self.embed_t.get_or_init(|| et))
+    }
+}
+
+/// Native per-sequence decode state: per-layer K/V rows plus the
+/// cumulative expert-dispatch counts that keep the capacity queue
+/// semantics identical to a full token-major forward over the prefix.
+struct NativeKvCache {
+    /// Tokens cached so far.
+    t: usize,
+    /// Per layer: cached attention keys, `[t, d]` flattened, growing.
+    k: Vec<Vec<f32>>,
+    /// Per layer: cached attention values, `[t, d]` flattened, growing.
+    v: Vec<Vec<f32>>,
+    /// Per layer: cumulative per-slot dispatch counts (the token-major
+    /// queue positions of the full forward, carried across steps).
+    counts: Vec<Vec<usize>>,
+}
+
+impl KvCache for NativeKvCache {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn seq_len(&self) -> usize {
+        self.t
+    }
+
+    fn byte_size(&self) -> usize {
+        let floats: usize = self.k.iter().map(Vec::len).sum::<usize>()
+            + self.v.iter().map(Vec::len).sum::<usize>();
+        floats * std::mem::size_of::<f32>()
     }
 }
 
@@ -81,7 +152,11 @@ impl Backend for NativeBackend {
             "weight set has {} expert slots, expected {n_slots}",
             weights.n_experts()?
         );
-        Ok(Box::new(NativeModel { weights: weights.clone(), n_slots }))
+        Ok(Box::new(NativeModel {
+            weights: weights.clone(),
+            n_slots,
+            embed_t: OnceLock::new(),
+        }))
     }
 
     fn run_logits(
@@ -132,6 +207,153 @@ impl Backend for NativeBackend {
             t_act,
             self.auto_threads(b * t),
         )
+    }
+
+    fn run_prefill(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        let m: &NativeModel = downcast_state(state, self.name())?;
+        let cfg = &self.cfg;
+        let t = ids.len();
+        ensure!(t >= 1, "prefill needs a non-empty prompt (no position to predict from)");
+        ensure!(
+            mask.len() == cfg.n_layer * cfg.n_exp,
+            "mask must be [{}, {}]",
+            cfg.n_layer,
+            cfg.n_exp
+        );
+        if let Some(rm) = remap {
+            ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
+        }
+        let d = cfg.d;
+        let w = &m.weights;
+        let threads = self.auto_threads(t);
+        let mut cache = NativeKvCache {
+            t,
+            k: Vec::with_capacity(cfg.n_layer),
+            v: Vec::with_capacity(cfg.n_layer),
+            counts: vec![vec![0usize; m.n_slots]; cfg.n_layer],
+        };
+        let mut h = embed_tokens(cfg, w, ids, t)?;
+        for l in 0..cfg.n_layer {
+            let ln1 = layer_tensor(w, l, "ln1")?;
+            let x1 = rmsnorm_rows(&h, ln1.data(), d);
+            let (a, k, v) = attention_seq(cfg, w, l, &x1, t, threads)?;
+            cache.k.push(k);
+            cache.v.push(v);
+            for (hv, av) in h.iter_mut().zip(&a) {
+                *hv += av;
+            }
+            let ln2 = layer_tensor(w, l, "ln2")?;
+            let hf = rmsnorm_rows(&h, ln2.data(), d);
+            let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
+            let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
+            let cap = cfg.capacity(t, m.n_slots);
+            let y = moe_layer(
+                cfg,
+                w,
+                l,
+                &hf,
+                t,
+                mask_l,
+                remap_l,
+                m.n_slots,
+                threads,
+                &mut cache.counts[l],
+                cap,
+            )?;
+            for (hv, yv) in h.iter_mut().zip(&y) {
+                *hv += yv;
+            }
+        }
+        let ln_f = w.get("ln_f")?;
+        let hn = rmsnorm_rows(&h, ln_f.data(), d);
+        let last = &hn[(t - 1) * d..t * d];
+        let logits = mm(last, m.embed_t(cfg)?, 1, d, cfg.vocab, threads);
+        Ok((Box::new(cache), logits))
+    }
+
+    fn run_decode(
+        &self,
+        state: &dyn ModelState,
+        cache: &mut dyn KvCache,
+        token: i32,
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Vec<f32>> {
+        let m: &NativeModel = downcast_state(state, self.name())?;
+        let c: &mut NativeKvCache = downcast_cache_mut(cache, self.name())?;
+        let cfg = &self.cfg;
+        ensure!(
+            mask.len() == cfg.n_layer * cfg.n_exp,
+            "mask must be [{}, {}]",
+            cfg.n_layer,
+            cfg.n_exp
+        );
+        if let Some(rm) = remap {
+            ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
+        }
+        ensure!(c.k.len() == cfg.n_layer, "kv cache layer count mismatch");
+        let d = cfg.d;
+        let w = &m.weights;
+        let pos_i = c.t; // the new token's position
+        let total = c.t + 1;
+        let pos = w.get("pos")?;
+        ensure!(
+            pos.shape()[0] >= total,
+            "sequence length {total} exceeds t_max {}",
+            pos.shape()[0]
+        );
+        let embed = w.get("embed")?;
+        ensure!(
+            token >= 0 && (token as usize) < cfg.vocab,
+            "token id {token} out of vocab range {}",
+            cfg.vocab
+        );
+        let mut h = vec![0f32; d];
+        let e = &embed.data()[(token as usize) * d..(token as usize) * d + d];
+        let p = &pos.data()[pos_i * d..(pos_i + 1) * d];
+        for j in 0..d {
+            h[j] = e[j] + p[j];
+        }
+        for l in 0..cfg.n_layer {
+            let ln1 = layer_tensor(w, l, "ln1")?;
+            let x1 = rmsnorm_rows(&h, ln1.data(), d);
+            let a = attention_step(cfg, w, l, &x1, pos_i, &mut c.k[l], &mut c.v[l])?;
+            for (hv, av) in h.iter_mut().zip(&a) {
+                *hv += av;
+            }
+            let ln2 = layer_tensor(w, l, "ln2")?;
+            let hf = rmsnorm_rows(&h, ln2.data(), d);
+            let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
+            let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
+            let cap = cfg.capacity(total, m.n_slots);
+            let y = moe_layer(
+                cfg,
+                w,
+                l,
+                &hf,
+                1,
+                mask_l,
+                remap_l,
+                m.n_slots,
+                1,
+                &mut c.counts[l],
+                cap,
+            )?;
+            for (hv, yv) in h.iter_mut().zip(&y) {
+                *hv += yv;
+            }
+        }
+        let ln_f = w.get("ln_f")?;
+        let hn = rmsnorm_rows(&h, ln_f.data(), d);
+        let logits = mm(&hn, m.embed_t(cfg)?, 1, d, cfg.vocab, 1);
+        c.t = total;
+        Ok(logits)
     }
 }
 
@@ -199,7 +421,9 @@ fn embed_tokens(cfg: &ModelCfg, w: &Weights, ids: &[i32], t: usize) -> Result<Ve
 }
 
 /// Causal multi-head self-attention over one `[t, d]` sequence,
-/// pre-projected input `x`; returns the `wo`-projected output.
+/// pre-projected input `x`; returns the `wo`-projected output plus the
+/// K/V projections (`[t, d]` each) so prefill can seed a [`NativeKvCache`]
+/// at zero extra cost (scoring callers just drop them).
 fn attention_seq(
     cfg: &ModelCfg,
     w: &Weights,
@@ -207,7 +431,7 @@ fn attention_seq(
     x: &[f32],
     t: usize,
     threads: usize,
-) -> Result<Vec<f32>> {
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     let d = cfg.d;
     let hd = d / cfg.heads;
     ensure!(hd * cfg.heads == d, "heads must divide d");
@@ -248,7 +472,63 @@ fn attention_seq(
             }
         }
     }
-    Ok(mm(&ctx, wo.data(), t, d, d, threads))
+    Ok((mm(&ctx, wo.data(), t, d, d, threads), k, v))
+}
+
+/// One causal-attention row for the token at position `i`, against the
+/// cached K/V of positions `0..i` (which this call extends with the new
+/// token's own K/V rows). `x` is the new token's pre-projected `[d]` row.
+/// Operation for operation the `i`-th row of [`attention_seq`], so the
+/// result is bit-identical to the full-sequence forward.
+fn attention_step(
+    cfg: &ModelCfg,
+    w: &Weights,
+    layer: usize,
+    x: &[f32],
+    i: usize,
+    kbuf: &mut Vec<f32>,
+    vbuf: &mut Vec<f32>,
+) -> Result<Vec<f32>> {
+    let d = cfg.d;
+    let hd = d / cfg.heads;
+    ensure!(hd * cfg.heads == d, "heads must divide d");
+    let wq = layer_tensor(w, layer, "attn.wq")?;
+    let wk = layer_tensor(w, layer, "attn.wk")?;
+    let wv = layer_tensor(w, layer, "attn.wv")?;
+    let wo = layer_tensor(w, layer, "attn.wo")?;
+    let q = mm(x, wq.data(), 1, d, d, 1);
+    kbuf.extend_from_slice(&mm(x, wk.data(), 1, d, d, 1));
+    vbuf.extend_from_slice(&mm(x, wv.data(), 1, d, d, 1));
+    ensure!(kbuf.len() == (i + 1) * d, "kv cache length out of sync");
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; d];
+    let mut row = Vec::with_capacity(i + 1);
+    for head in 0..cfg.heads {
+        let off = head * hd;
+        let qi = &q[off..off + hd];
+        row.clear();
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let kj = &kbuf[j * d + off..j * d + off + hd];
+            let s = dot(qi, kj) * scale;
+            mx = mx.max(s);
+            row.push(s);
+        }
+        let mut z = 0f32;
+        for s in row.iter_mut() {
+            *s = (*s - mx).exp();
+            z += *s;
+        }
+        let out = &mut ctx[off..off + hd];
+        for (j, &e) in row.iter().enumerate() {
+            let a = e / z;
+            let vj = &vbuf[j * d + off..j * d + off + hd];
+            for u in 0..hd {
+                out[u] += a * vj[u];
+            }
+        }
+    }
+    Ok(mm(&ctx, wo.data(), 1, d, d, 1))
 }
 
 /// Eq. (3): top-k router selection over one masked logit row as k rounds
@@ -317,6 +597,13 @@ fn swiglu_block(
 /// One SMoE FFN block over `tok` flattened tokens: router → top-k →
 /// capacity dispatch → per-expert SwiGLU → gated combine (+ the shared
 /// expert for `dssim`). Returns `y` with `y.len() == tok * d`.
+///
+/// `counts`/`cap` externalise the capacity queue: scoring callers pass a
+/// fresh all-zero `counts` and `cfg.capacity(tok, n_slots)`; the
+/// incremental decode path passes the cumulative counts carried in its
+/// [`NativeKvCache`] (so the new token's queue position matches the
+/// token-major rule of a full forward over the whole prefix) and the
+/// capacity at the *current total* sequence length.
 #[allow(clippy::too_many_arguments)]
 fn moe_layer(
     cfg: &ModelCfg,
@@ -328,17 +615,18 @@ fn moe_layer(
     remap_l: Option<&[i32]>,
     n_slots: usize,
     threads: usize,
+    counts: &mut [usize],
+    cap: usize,
 ) -> Result<Vec<f32>> {
     let d = cfg.d;
     let n = cfg.n_exp;
     let router = layer_tensor(w, layer, "router")?;
     ensure!(router.shape() == [d, n], "router shape mismatch at layer {layer}");
+    ensure!(counts.len() == n_slots, "dispatch counts must cover {n_slots} slots");
     let logits = mm(hf, router.data(), tok, d, n, threads);
     // Dispatch: queue position per expert in token-major (T*k) order —
     // the same cumulative-count rule as the Pallas dispatch, so the same
     // tokens are dropped at capacity.
-    let cap = cfg.capacity(tok, n_slots);
-    let mut counts = vec![0usize; n_slots];
     let mut per_slot: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_slots];
     let mut masked = vec![0f32; n];
     let mut idx = Vec::with_capacity(cfg.k);
@@ -459,7 +747,8 @@ pub fn forward_logits_with(
         let ln1 = layer_tensor(w, l, "ln1")?;
         let x1 = rmsnorm_rows(&h, ln1.data(), d);
         for s in 0..b {
-            let a = attention_seq(cfg, w, l, &x1[s * t * d..(s + 1) * t * d], t, threads)?;
+            let (a, _, _) =
+                attention_seq(cfg, w, l, &x1[s * t * d..(s + 1) * t * d], t, threads)?;
             for (hv, av) in h[s * t * d..(s + 1) * t * d].iter_mut().zip(&a) {
                 *hv += av;
             }
@@ -468,7 +757,11 @@ pub fn forward_logits_with(
         let hf = rmsnorm_rows(&h, ln2.data(), d);
         let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
         let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
-        let y = moe_layer(cfg, w, l, &hf, tok, mask_l, remap_l, n_slots, threads)?;
+        let mut counts = vec![0usize; n_slots];
+        let cap = cfg.capacity(tok, n_slots);
+        let y = moe_layer(
+            cfg, w, l, &hf, tok, mask_l, remap_l, n_slots, threads, &mut counts, cap,
+        )?;
         for (hv, yv) in h.iter_mut().zip(&y) {
             *hv += yv;
         }
@@ -533,7 +826,8 @@ pub fn forward_calib_with(
         let ln1 = layer_tensor(w, l, "ln1")?;
         let x1 = rmsnorm_rows(&h, ln1.data(), d);
         for s in 0..b {
-            let a = attention_seq(cfg, w, l, &x1[s * t * d..(s + 1) * t * d], t, threads)?;
+            let (a, _, _) =
+                attention_seq(cfg, w, l, &x1[s * t * d..(s + 1) * t * d], t, threads)?;
             for (hv, av) in h[s * t * d..(s + 1) * t * d].iter_mut().zip(&a) {
                 *hv += av;
             }

@@ -10,14 +10,14 @@
 
 use std::sync::{Arc, OnceLock};
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::config::{Artifacts, ModelCfg};
 use crate::runtime::{Executable, Input, Runtime};
 use crate::tensor::Tensor;
 use crate::weights::Weights;
 
-use super::{downcast_state, Backend, ModelState};
+use super::{downcast_state, Backend, KvCache, ModelState};
 
 /// The PJRT backend: one CPU client plus lazily compiled executables.
 pub struct PjrtBackend {
@@ -149,5 +149,40 @@ impl Backend for PjrtBackend {
         ensure!(m.n_slots == self.cfg.n_exp, "calibration needs the full layout");
         self.calib_exe()?
             .run_with(&m.bufs, &[Input::I32(ids.to_vec(), vec![b, t])])
+    }
+
+    fn run_prefill(
+        &self,
+        _state: &dyn ModelState,
+        _ids: &[i32],
+        _mask: &[f32],
+        _remap: Option<&[i32]>,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        // The AOT artifact set lowers only the fixed-shape batched entry
+        // points (lm_logits_* / calib_*); no incremental prefill/decode
+        // executables exist yet. Lowering them (a [1, t] prefill emitting
+        // K/V outputs + a [1, 1] decode taking them as parameters) is the
+        // tracked follow-up — until then, generation runs on the native
+        // backend (the default).
+        Err(anyhow!(
+            "the pjrt backend has no incremental prefill/decode HLO entry points; \
+             run generation on the native backend (unset HCSMOE_BACKEND or set it \
+             to \"native\")"
+        ))
+    }
+
+    fn run_decode(
+        &self,
+        _state: &dyn ModelState,
+        _cache: &mut dyn KvCache,
+        _token: i32,
+        _mask: &[f32],
+        _remap: Option<&[i32]>,
+    ) -> Result<Vec<f32>> {
+        Err(anyhow!(
+            "the pjrt backend has no incremental prefill/decode HLO entry points; \
+             run generation on the native backend (unset HCSMOE_BACKEND or set it \
+             to \"native\")"
+        ))
     }
 }

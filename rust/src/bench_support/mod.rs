@@ -227,6 +227,91 @@ pub fn write_backend_json(
     std::fs::write(path, out)
 }
 
+/// One generation-throughput row for `BENCH_generate.json`: tokens/s of
+/// the autoregressive decode loop, KV-cached vs uncached re-forward,
+/// serial vs parallel, full vs compact expert layout.
+#[derive(Debug, Clone)]
+pub struct GenerateBenchRow {
+    /// Measured path: `decode_cached` (run_prefill + run_decode) or
+    /// `decode_uncached` (full re-forward over the prefix per token).
+    pub path: String,
+    /// Expert layout: `full` (n_exp slots) or `compact` (r slots + remap).
+    pub variant: String,
+    /// Physical expert slots of the measured layout.
+    pub n_slots: usize,
+    /// Prompt tokens prefilled before decoding.
+    pub prompt_tokens: usize,
+    /// Tokens decoded per measured run.
+    pub decode_tokens: usize,
+    /// Median wall-clock of the decode loop, single worker thread.
+    pub serial_ms: f64,
+    /// Median wall-clock of the decode loop at the benchmarked thread
+    /// count.
+    pub parallel_ms: f64,
+}
+
+impl GenerateBenchRow {
+    /// Serial decode throughput in tokens per second.
+    pub fn serial_tok_s(&self) -> f64 {
+        if self.serial_ms > 0.0 {
+            self.decode_tokens as f64 / (self.serial_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Parallel decode throughput in tokens per second.
+    pub fn parallel_tok_s(&self) -> f64 {
+        if self.parallel_ms > 0.0 {
+            self.decode_tokens as f64 / (self.parallel_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Write the machine-readable generation-throughput report
+/// (`BENCH_generate.json`). Hand-rolled JSON like [`write_parallel_json`];
+/// the schema is stable — later PRs append rows with new `path`/`variant`
+/// names rather than reshaping the file. Comparing `decode_cached` vs
+/// `decode_uncached` rows at the same (variant, decode_tokens) shows the
+/// O(t) vs O(t²) gap the KV cache buys.
+pub fn write_generate_json(
+    path: &str,
+    threads: usize,
+    generator: &str,
+    note: &str,
+    rows: &[GenerateBenchRow],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"generate\",\n");
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"generator\": \"{}\",\n", json_escape(generator)));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"path\": \"{}\", \"variant\": \"{}\", \"n_slots\": {}, \
+             \"prompt_tokens\": {}, \"decode_tokens\": {}, \
+             \"serial_ms\": {:.4}, \"parallel_ms\": {:.4}, \
+             \"serial_tok_s\": {:.1}, \"parallel_tok_s\": {:.1}}}{comma}\n",
+            json_escape(&r.path),
+            json_escape(&r.variant),
+            r.n_slots,
+            r.prompt_tokens,
+            r.decode_tokens,
+            r.serial_ms,
+            r.parallel_ms,
+            r.serial_tok_s(),
+            r.parallel_tok_s()
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// The 4-task subset used by the paper's ablation tables (Tables 4, 5).
 pub const ABLATION_TASKS: [&str; 4] = ["arc_c", "boolq", "obqa", "rte"];
 

@@ -88,6 +88,17 @@ impl ModelCfg {
         self.n_layer as f64 * (attn + moe + shared) + head
     }
 
+    /// Resident bytes of one sequence's attention KV cache at length `t`:
+    /// one K and one V row of `d` f32 values per layer per token —
+    /// `2 · n_layer · t · d · 4` bytes. Independent of `heads` (the heads
+    /// partition `d`, they do not multiply it) and of the expert count
+    /// (expert weights are model state, not sequence state). This is the
+    /// per-sequence memory cost of serving decode traffic; see
+    /// `SERVING.md` §"KV-cache memory accounting".
+    pub fn kv_cache_bytes(&self, t: usize) -> usize {
+        2 * self.n_layer * t * self.d * std::mem::size_of::<f32>()
+    }
+
     /// Per-expert capacity for `n_tokens`, mirroring the Python side.
     pub fn capacity(&self, n_tokens: usize, n_exp: usize) -> usize {
         let c = (self.k as f64 * n_tokens as f64 * self.cap_factor / n_exp as f64).ceil();

@@ -100,13 +100,19 @@ impl<'a> Evaluator<'a> {
             let ld = logits.data();
             for (bi, meta) in chunk_metas.iter().enumerate() {
                 let mut lp = 0f64;
-                for pos in meta.start..meta.end {
+                // position 0 has no conditioning context: an empty prompt
+                // starts scoring at position 1 (same guard as the serving
+                // batcher's flush path)
+                for pos in meta.start.max(1)..meta.end {
                     // predict token at `pos` from logits at `pos - 1`
                     let row = &ld[(bi * t + pos - 1) * v..(bi * t + pos) * v];
                     let tok = chunk_rows[bi][pos] as usize;
                     lp += log_softmax_at(row, tok);
                 }
-                scores[meta.item][meta.choice] = lp / (meta.end - meta.start) as f64;
+                // normalise by the number of positions actually scored
+                // (start==0 skips position 0, so the divisor must too)
+                let scored = (meta.end.saturating_sub(meta.start.max(1))).max(1);
+                scores[meta.item][meta.choice] = lp / scored as f64;
             }
         }
         // argmax per item

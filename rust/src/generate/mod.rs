@@ -1,0 +1,401 @@
+//! Autoregressive generation on top of the backend prefill/decode split.
+//!
+//! This is the workload the paper's deployment pitch (Section 1, Table 20)
+//! actually cares about: emit tokens one at a time from a (merged) SMoE
+//! model with a KV-cached decode loop, so each new token costs O(t)
+//! instead of the O(t²) of re-running the full forward per step.
+//!
+//! Three layers:
+//!
+//! * [`SamplingParams`] / [`Strategy`] — greedy or seeded temperature/
+//!   top-k sampling (via the deterministic [`crate::util::Rng`]), plus the
+//!   stop conditions (`max_new_tokens`, optional EOS token; the model's
+//!   `t_max` context limit is always enforced).
+//! * [`Session`] — the pure decision loop: feed it the last position's
+//!   logits, it samples the next token and tracks the stop conditions.
+//!   Both the offline driver below and the serving executor's continuous
+//!   batcher (`crate::serving`) run sequences through this one type, which
+//!   is what makes a server-side generation bit-identical to an offline
+//!   [`generate`] call with the same parameters.
+//! * [`generate`] / [`generate_compact`] — the offline drivers:
+//!   prefill → sample → decode → … → [`Generated`].
+//!
+//! Determinism: the native backend forward is bit-deterministic and the
+//! sampler is seeded, so the same (weights, prompt, params) always yields
+//! the same token sequence — `rust/tests/generate.rs` pins this, and the
+//! README's self-verification quickstart relies on it.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::backend::KvCache;
+use crate::model::{CompactModel, LoadedModel, ModelContext};
+use crate::util::Rng;
+
+/// Token-selection rule applied to each step's logits.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Strategy {
+    /// Pick the highest logit (first index wins ties, like `jnp.argmax`).
+    Greedy,
+    /// Seeded stochastic sampling: softmax over the `k` highest logits at
+    /// the given temperature, then one multinomial draw per step from the
+    /// deterministic xorshift64* stream.
+    TopK {
+        /// Candidates kept per step (clamped to the vocabulary size).
+        k: usize,
+        /// Softmax temperature (> 0; lower = sharper).
+        temperature: f32,
+        /// RNG seed — identical seeds replay identical token streams.
+        seed: u64,
+    },
+}
+
+/// Why a generation stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The EOS token was sampled (it is included in the output).
+    Eos,
+    /// `max_new_tokens` tokens were emitted.
+    MaxTokens,
+    /// The model's `t_max` context window filled up.
+    MaxContext,
+}
+
+/// Generation request: selection strategy plus stop conditions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Token-selection rule.
+    pub strategy: Strategy,
+    /// Hard cap on emitted tokens.
+    pub max_new_tokens: usize,
+    /// Stop (inclusively) when this token is sampled, if set.
+    pub eos: Option<i32>,
+}
+
+impl SamplingParams {
+    /// Greedy decoding for up to `max_new_tokens` tokens, stopping early
+    /// at `eos` when given.
+    pub fn greedy(max_new_tokens: usize, eos: Option<i32>) -> Self {
+        Self { strategy: Strategy::Greedy, max_new_tokens, eos }
+    }
+
+    /// Seeded temperature/top-k sampling for up to `max_new_tokens`
+    /// tokens, stopping early at `eos` when given.
+    pub fn top_k(
+        k: usize,
+        temperature: f32,
+        seed: u64,
+        max_new_tokens: usize,
+        eos: Option<i32>,
+    ) -> Self {
+        Self {
+            strategy: Strategy::TopK { k, temperature, seed },
+            max_new_tokens,
+            eos,
+        }
+    }
+}
+
+/// One finished generation.
+#[derive(Debug, Clone)]
+pub struct Generated {
+    /// Emitted tokens, in order (the EOS token, when hit, is included).
+    pub tokens: Vec<i32>,
+    /// Which stop condition ended the sequence.
+    pub finish: FinishReason,
+    /// Wall-clock seconds spent in the prompt prefill.
+    pub prefill_s: f64,
+    /// Wall-clock seconds spent across all decode steps.
+    pub decode_s: f64,
+}
+
+impl Generated {
+    /// Decode throughput in tokens per second (0 when nothing decoded).
+    /// The first token is sampled from the prefill logits, so the decode
+    /// loop ran `tokens.len() - 1` steps — that is the numerator here,
+    /// matching what `decode_s` actually timed.
+    pub fn decode_tok_s(&self) -> f64 {
+        let steps = self.tokens.len().saturating_sub(1);
+        if self.decode_s > 0.0 && steps > 0 {
+            steps as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The per-sequence decision loop: sample-next-token + stop tracking,
+/// decoupled from *where* logits come from so the offline [`generate`]
+/// driver and the serving executor's continuous batcher share it verbatim.
+///
+/// Protocol: after each forward (prefill or decode), call
+/// [`Session::advance`] with the new logits and the cache's current
+/// length. `Some(tok)` means "feed `tok` to the next decode step";
+/// `None` means the sequence finished — read [`Session::finish`] /
+/// [`Session::tokens`].
+pub struct Session {
+    params: SamplingParams,
+    rng: Rng,
+    tokens: Vec<i32>,
+    finish: Option<FinishReason>,
+}
+
+impl Session {
+    /// New session; for [`Strategy::TopK`] the RNG stream starts at the
+    /// given seed.
+    pub fn new(params: SamplingParams) -> Self {
+        let seed = match params.strategy {
+            Strategy::TopK { seed, .. } => seed,
+            Strategy::Greedy => 0,
+        };
+        Self { params, rng: Rng::new(seed), tokens: Vec::new(), finish: None }
+    }
+
+    /// Sample the next token from `logits` and update the stop conditions.
+    /// `ctx_len` is the KV cache's current sequence length (tokens already
+    /// resident *before* feeding the returned token); `t_max` the model's
+    /// context limit. Returns the token to feed to the next decode step,
+    /// or `None` once the sequence is finished.
+    pub fn advance(&mut self, logits: &[f32], ctx_len: usize, t_max: usize) -> Option<i32> {
+        if self.finish.is_some() {
+            return None;
+        }
+        if self.tokens.len() >= self.params.max_new_tokens {
+            self.finish = Some(FinishReason::MaxTokens);
+            return None;
+        }
+        let tok = self.pick(logits);
+        self.tokens.push(tok);
+        if self.params.eos == Some(tok) {
+            self.finish = Some(FinishReason::Eos);
+            return None;
+        }
+        if self.tokens.len() >= self.params.max_new_tokens {
+            self.finish = Some(FinishReason::MaxTokens);
+            return None;
+        }
+        if ctx_len + 1 > t_max {
+            self.finish = Some(FinishReason::MaxContext);
+            return None;
+        }
+        Some(tok)
+    }
+
+    /// Tokens emitted so far.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Consume the session, returning the emitted tokens.
+    pub fn into_tokens(self) -> Vec<i32> {
+        self.tokens
+    }
+
+    /// The stop condition that ended the sequence (None while running).
+    pub fn finish(&self) -> Option<FinishReason> {
+        self.finish
+    }
+
+    /// One token selection from a logits row.
+    fn pick(&mut self, logits: &[f32]) -> i32 {
+        match self.params.strategy {
+            Strategy::Greedy => argmax_first(logits) as i32,
+            Strategy::TopK { k, temperature, .. } => {
+                let k = k.max(1).min(logits.len());
+                let temp = temperature.max(1e-6);
+                // k rounds of first-wins argmax (the route_topk idiom)
+                let mut work = logits.to_vec();
+                let mut idx = Vec::with_capacity(k);
+                let mut sel = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let bi = argmax_first(&work);
+                    idx.push(bi);
+                    sel.push(logits[bi] / temp);
+                    work[bi] = f32::NEG_INFINITY;
+                }
+                // softmax over the selected candidates, then one draw
+                let mx = sel.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0f64;
+                let exps: Vec<f64> = sel
+                    .iter()
+                    .map(|&s| {
+                        let e = ((s - mx) as f64).exp();
+                        z += e;
+                        e
+                    })
+                    .collect();
+                let u = self.rng.next_f64() * z;
+                let mut acc = 0f64;
+                for (j, &e) in exps.iter().enumerate() {
+                    acc += e;
+                    if u < acc {
+                        return idx[j] as i32;
+                    }
+                }
+                idx[k - 1] as i32
+            }
+        }
+    }
+}
+
+/// First-wins argmax (ties break to the lowest index, like `jnp.argmax`).
+fn argmax_first(xs: &[f32]) -> usize {
+    let mut bi = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            bi = i;
+        }
+    }
+    bi
+}
+
+/// Generate tokens from a resident variant with the KV-cached decode loop.
+///
+/// # Examples
+///
+/// ```
+/// use hc_smoe::bench_support::synthesize_artifacts;
+/// use hc_smoe::config::Artifacts;
+/// use hc_smoe::generate::{generate, SamplingParams};
+/// use hc_smoe::model::ModelContext;
+///
+/// let dir = std::env::temp_dir().join(format!("hcsmoe_doc_gen_{}", std::process::id()));
+/// synthesize_artifacts(&dir, 1).unwrap();
+/// let ctx = ModelContext::load(&Artifacts::new(&dir), "qwensim").unwrap();
+/// let model = ctx.load_original().unwrap();
+///
+/// let out = generate(&ctx, &model, &[1, 4, 20, 3], SamplingParams::greedy(4, None)).unwrap();
+/// assert_eq!(out.tokens.len(), 4);
+/// // greedy decoding on deterministic weights replays exactly
+/// let again = generate(&ctx, &model, &[1, 4, 20, 3], SamplingParams::greedy(4, None)).unwrap();
+/// assert_eq!(out.tokens, again.tokens);
+/// # std::fs::remove_dir_all(&dir).ok();
+/// ```
+pub fn generate(
+    ctx: &ModelContext,
+    model: &LoadedModel,
+    prompt: &[i32],
+    params: SamplingParams,
+) -> Result<Generated> {
+    run_loop(
+        ctx.cfg.t_max,
+        params,
+        || ctx.prefill(model, prompt),
+        |cache, tok| ctx.decode(model, cache, tok),
+    )
+}
+
+/// [`generate`] on a compact r-expert variant (the Table 20 efficiency
+/// layout: r physical expert slots plus the router remap table).
+pub fn generate_compact(
+    ctx: &ModelContext,
+    model: &CompactModel,
+    prompt: &[i32],
+    params: SamplingParams,
+) -> Result<Generated> {
+    run_loop(
+        ctx.cfg.t_max,
+        params,
+        || ctx.prefill_compact(model, prompt),
+        |cache, tok| ctx.decode_compact(model, cache, tok),
+    )
+}
+
+/// The shared prefill → sample → decode loop behind both variants.
+fn run_loop(
+    t_max: usize,
+    params: SamplingParams,
+    prefill: impl FnOnce() -> Result<(Box<dyn KvCache>, Vec<f32>)>,
+    mut decode: impl FnMut(&mut dyn KvCache, i32) -> Result<Vec<f32>>,
+) -> Result<Generated> {
+    let t0 = Instant::now();
+    let (mut cache, mut logits) = prefill()?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let mut session = Session::new(params);
+    let t1 = Instant::now();
+    while let Some(tok) = session.advance(&logits, cache.seq_len(), t_max) {
+        logits = decode(cache.as_mut(), tok)?;
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    let finish = session.finish();
+    ensure!(finish.is_some(), "generation loop ended without a finish reason");
+    Ok(Generated {
+        tokens: session.into_tokens(),
+        finish: finish.unwrap(),
+        prefill_s,
+        decode_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_first_max() {
+        let mut s = Session::new(SamplingParams::greedy(4, None));
+        let next = s.advance(&[0.0, 3.0, 3.0, -1.0], 4, 64);
+        assert_eq!(next, Some(1), "ties break to the first index");
+    }
+
+    #[test]
+    fn max_tokens_stops_and_zero_budget_emits_nothing() {
+        let mut s = Session::new(SamplingParams::greedy(2, None));
+        assert!(s.advance(&[1.0, 0.0], 4, 64).is_some());
+        assert_eq!(s.advance(&[1.0, 0.0], 5, 64), None);
+        assert_eq!(s.finish(), Some(FinishReason::MaxTokens));
+        assert_eq!(s.tokens(), &[0, 0]);
+
+        let mut empty = Session::new(SamplingParams::greedy(0, None));
+        assert_eq!(empty.advance(&[1.0, 0.0], 4, 64), None);
+        assert_eq!(empty.finish(), Some(FinishReason::MaxTokens));
+        assert!(empty.tokens().is_empty());
+    }
+
+    #[test]
+    fn eos_stops_inclusively() {
+        let mut s = Session::new(SamplingParams::greedy(8, Some(0)));
+        assert_eq!(s.advance(&[1.0, 0.0], 4, 64), None);
+        assert_eq!(s.finish(), Some(FinishReason::Eos));
+        assert_eq!(s.tokens(), &[0]);
+    }
+
+    #[test]
+    fn context_limit_stops() {
+        let mut s = Session::new(SamplingParams::greedy(8, None));
+        // cache already at t_max: the sampled token cannot be fed back
+        assert_eq!(s.advance(&[1.0, 0.0], 16, 16), None);
+        assert_eq!(s.finish(), Some(FinishReason::MaxContext));
+        assert_eq!(s.tokens().len(), 1);
+    }
+
+    #[test]
+    fn topk_is_seed_deterministic_and_stays_in_topk() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32) * 0.3).collect();
+        let run = |seed: u64| -> Vec<i32> {
+            let mut s = Session::new(SamplingParams::top_k(4, 0.7, seed, 8, None));
+            let mut out = Vec::new();
+            while let Some(t) = s.advance(&logits, 4 + out.len(), 64) {
+                out.push(t);
+            }
+            out.push(*s.tokens().last().unwrap());
+            out
+        };
+        assert_eq!(run(9), run(9), "same seed must replay");
+        // top-4 of these logits are indices 12..16
+        for t in run(9) {
+            assert!((12..16).contains(&t), "sampled {t} outside top-k");
+        }
+    }
+
+    #[test]
+    fn finished_session_stays_finished() {
+        let mut s = Session::new(SamplingParams::greedy(1, None));
+        assert_eq!(s.advance(&[0.0, 2.0], 4, 64), None);
+        assert_eq!(s.advance(&[0.0, 2.0], 4, 64), None);
+        assert_eq!(s.tokens(), &[1]);
+    }
+}

@@ -7,7 +7,9 @@
 //!   text artifacts (`make artifacts`);
 //! * **L3** is this crate: the retraining-free compression toolchain
 //!   (calibration → similarity metrics → clustering → merging/pruning),
-//!   the zero-shot evaluation harness, a threaded serving layer, and the
+//!   the zero-shot evaluation harness, an autoregressive [`generate`]
+//!   API with KV-cached decode, a serving layer that mixes dynamic-batched
+//!   scoring with continuous-batched generation (`SERVING.md`), and the
 //!   bench harness regenerating every table/figure of the paper. Its hot
 //!   paths run on the [`parallel`] scoped thread pool with deterministic
 //!   work splitting — parallel and serial outputs are bit-identical
@@ -48,6 +50,7 @@ pub mod clustering;
 pub mod config;
 pub mod data;
 pub mod eval;
+pub mod generate;
 pub mod merging;
 pub mod model;
 pub mod parallel;
@@ -71,6 +74,7 @@ pub mod prelude {
     pub use crate::config::{Artifacts, Manifest, ModelCfg};
     pub use crate::data::{Benchmark, MCItem, TokenStream};
     pub use crate::eval::Evaluator;
+    pub use crate::generate::{generate, FinishReason, Generated, SamplingParams, Strategy};
     pub use crate::merging::MergeStrategy;
     pub use crate::model::ModelContext;
     pub use crate::pipeline::{Method, Pipeline, Plan};

@@ -8,6 +8,9 @@
 //!   compress   <model> <r> [--method M] [--domain D]   compress + report
 //!   eval       <model> <r> [--method M] [--domain D] [--tasks a,b]
 //!   serve      <model> [--r R --method M] [--requests N]
+//!   generate   <model> [--prompt 1,4,20] [--max-tokens N] [--sample]
+//!              [--top-k K --temperature T --seed S] [--r R --method M]
+//!              [--compact]              KV-cached autoregressive decode
 //!   quality    <model> <r> [--method M]  cluster-quality metrics
 //!
 //! Methods: hc-avg (default), hc-single, hc-complete, kmeans-fix,
@@ -52,9 +55,18 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                let val = argv.get(i + 1).cloned().unwrap_or_default();
-                flags.insert(key.to_string(), val);
-                i += 2;
+                // `--key value` pairs; a `--key` followed by another flag
+                // (or nothing) is a bare boolean flag like --sample
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), String::new());
+                        i += 1;
+                    }
+                }
             } else {
                 pos.push(argv[i].clone());
                 i += 1;
@@ -131,6 +143,7 @@ fn run() -> Result<()> {
         "compress" => compress(&arts, &args),
         "eval" => eval(&arts, &args),
         "serve" => serve_cmd(&arts, &args),
+        "generate" => generate_cmd(&arts, &args),
         "quality" => quality(&arts, &args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -153,6 +166,9 @@ COMMANDS:
   compress  <model> <r> [--method M] [--domain D]
   eval      <model> <r> [--method M] [--domain D] [--tasks a,b,..]
   serve     <model> [--r R] [--method M] [--requests N]
+  generate  <model> [--prompt 1,4,20,3] [--max-tokens N] [--sample]
+            [--top-k K] [--temperature T] [--seed S] [--eos TOK]
+            [--r R] [--method M] [--domain D] [--compact]
   quality   <model> <r> [--method M]
 
 METHODS: hc-avg hc-single hc-complete hc-nu kmeans-fix kmeans-rnd fcm
@@ -341,6 +357,99 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         snap.batches,
         snap.mean_batch_fill(ctx.manifest.eval_b),
         correct as f64 / n_requests as f64,
+    );
+    Ok(())
+}
+
+/// `hc-smoe generate`: KV-cached autoregressive decode, offline.
+///
+/// Greedy by default; `--sample` (or any of `--top-k`/`--temperature`)
+/// switches to seeded temperature/top-k sampling. The `generated` output
+/// line depends only on (artifacts, prompt, sampling parameters) — running
+/// the command twice prints the identical token sequence, which is the
+/// self-verification hook the README quickstart uses.
+fn generate_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
+    use hc_smoe::generate::{generate, generate_compact, SamplingParams};
+
+    let model = args.pos.first().context("need <model>")?;
+    let ctx = ModelContext::load(arts, model)?;
+    let prompt: Vec<i32> = args
+        .flag("prompt", "1,4,20,50,3,5")
+        .split(',')
+        .map(|x| x.trim().parse::<i32>())
+        .collect::<Result<_, _>>()
+        .context("parsing --prompt (comma-separated token ids)")?;
+    let max_tokens: usize = args.flag("max-tokens", "32").parse()?;
+    let eos = match args.flags.get("eos") {
+        Some(v) => Some(v.parse::<i32>().context("parsing --eos")?),
+        None => None,
+    };
+    let sample = args.flags.contains_key("sample")
+        || args.flags.contains_key("top-k")
+        || args.flags.contains_key("temperature");
+    let params = if sample {
+        SamplingParams::top_k(
+            args.flag("top-k", "8").parse()?,
+            args.flag("temperature", "0.8").parse()?,
+            args.flag("seed", "42").parse()?,
+            max_tokens,
+            eos,
+        )
+    } else {
+        SamplingParams::greedy(max_tokens, eos)
+    };
+
+    let (label, out) = match args.flags.get("r") {
+        None => {
+            let loaded = ctx.load_original()?;
+            ("original".to_string(), generate(&ctx, &loaded, &prompt, params)?)
+        }
+        Some(r) => {
+            let r: usize = r.parse()?;
+            let method = parse_method(&args.flag("method", "hc-avg"), 42)?;
+            let domain = args.flag("domain", "general");
+            let stats = ctx.calibrate(&domain)?;
+            let plan = Pipeline::new(method).plan(&ctx, &stats, r)?;
+            let cm = plan.apply(&ctx, &stats)?;
+            if args.flags.contains_key("compact") {
+                let (cw, remap) = cm.to_compact(&ctx)?;
+                let compact = ctx.load_compact(r, &cw, remap, &cm.label)?;
+                let label = format!("{} [compact r={r}]", cm.label);
+                (label, generate_compact(&ctx, &compact, &prompt, params)?)
+            } else {
+                let loaded = cm.load(&ctx)?;
+                (cm.label.clone(), generate(&ctx, &loaded, &prompt, params)?)
+            }
+        }
+    };
+
+    println!(
+        "model {model} ({} backend), variant {label}, {}",
+        ctx.backend_name(),
+        if sample { "seeded top-k sampling" } else { "greedy" },
+    );
+    let fmt = |ts: &[i32]| ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
+    println!("prompt    ({}): {}", prompt.len(), fmt(&prompt));
+    println!(
+        "generated ({}): {} [finish: {:?}]",
+        out.tokens.len(),
+        fmt(&out.tokens),
+        out.finish
+    );
+    // the final sampled token is never fed back, so the cache ends at
+    // prompt + tokens - 1 entries
+    let cached = prompt.len() + out.tokens.len().saturating_sub(1);
+    println!(
+        "prefill {} tok in {:.2} ms ({:.0} tok/s); decode {} tok in {:.2} ms ({:.0} tok/s); \
+         kv cache {} B/token ({} B resident at final length {cached})",
+        prompt.len(),
+        out.prefill_s * 1e3,
+        prompt.len() as f64 / out.prefill_s.max(1e-9),
+        out.tokens.len(),
+        out.decode_s * 1e3,
+        out.decode_tok_s(),
+        ctx.cfg.kv_cache_bytes(1),
+        ctx.cfg.kv_cache_bytes(cached),
     );
     Ok(())
 }

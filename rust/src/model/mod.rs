@@ -13,7 +13,7 @@ use std::sync::OnceLock;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::backend::{self, Backend, ModelState};
+use crate::backend::{self, Backend, KvCache, ModelState};
 use crate::config::{Artifacts, Manifest, ModelCfg};
 use crate::data::TokenStream;
 use crate::tensor::Tensor;
@@ -104,6 +104,68 @@ impl ModelContext {
         ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
         self.backend
             .run_logits(model.state.as_ref(), ids, b, t, &model.mask, None)
+    }
+
+    /// Start an incremental sequence on a variant: forward the whole
+    /// `prompt` once, returning the sequence's KV cache and the last
+    /// position's next-token logits (`[vocab]`). The cache is owned by the
+    /// caller; any number of sequences can be in flight against one
+    /// variant. See [`crate::generate::generate`] for the full loop.
+    pub fn prefill(
+        &self,
+        model: &LoadedModel,
+        prompt: &[i32],
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        ensure!(
+            prompt.len() <= self.cfg.t_max,
+            "prompt length {} exceeds t_max {}",
+            prompt.len(),
+            self.cfg.t_max
+        );
+        self.backend
+            .run_prefill(model.state.as_ref(), prompt, &model.mask, None)
+    }
+
+    /// Append one token to an incremental sequence, returning the
+    /// next-token logits at the new position (O(t) per call — the KV-cached
+    /// decode path).
+    pub fn decode(
+        &self,
+        model: &LoadedModel,
+        cache: &mut dyn KvCache,
+        token: i32,
+    ) -> Result<Vec<f32>> {
+        self.backend
+            .run_decode(model.state.as_ref(), cache, token, &model.mask, None)
+    }
+
+    /// [`Self::prefill`] on a compact r-expert variant.
+    pub fn prefill_compact(
+        &self,
+        model: &CompactModel,
+        prompt: &[i32],
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        ensure!(
+            prompt.len() <= self.cfg.t_max,
+            "prompt length {} exceeds t_max {}",
+            prompt.len(),
+            self.cfg.t_max
+        );
+        let mask = self.full_mask();
+        self.backend
+            .run_prefill(model.state.as_ref(), prompt, &mask, Some(&model.remap))
+    }
+
+    /// [`Self::decode`] on a compact r-expert variant.
+    pub fn decode_compact(
+        &self,
+        model: &CompactModel,
+        cache: &mut dyn KvCache,
+        token: i32,
+    ) -> Result<Vec<f32>> {
+        let mask = self.full_mask();
+        self.backend
+            .run_decode(model.state.as_ref(), cache, token, &mask, Some(&model.remap))
     }
 
     /// The base weights as a lazily prepared resident variant (the

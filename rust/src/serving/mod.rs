@@ -1,16 +1,27 @@
-//! Serving layer: a threaded scoring server with a dynamic batcher.
+//! Serving layer: a threaded scoring **and generation** server.
 //!
 //! The paper's deployment motivation (Section 1) is memory-constrained
 //! *serving* of SMoE models; this module demonstrates the merged models on
-//! a live request path: clients submit multiple-choice scoring requests,
-//! a dynamic batcher packs rows up to the model's batch size or a
-//! deadline (vLLM-router-style size/deadline policy), and a single
-//! executor thread owns all execution state (required for the PJRT
-//! backend, whose xla handles are not `Send`; the native backend simply
-//! inherits the same single-executor design) — everything else is
-//! channels. Used by `examples/serve_merged.rs` and the Table 20
-//! throughput/latency measurements. Runs offline end to end on the
-//! native backend.
+//! a live request path with two coexisting workloads:
+//!
+//! * **Score requests** (multiple-choice scoring) ride a *dynamic batcher*:
+//!   rows are packed up to the model's batch size or a deadline, whichever
+//!   comes first (vLLM-router-style size/deadline policy).
+//! * **Generate requests** ride a *continuous batcher* (vLLM-style): each
+//!   accepted request is prefilled into its own KV cache and joins the
+//!   running decode set; every executor iteration advances **all** active
+//!   sequences by one token, and sequences leave the set the moment they
+//!   hit a stop condition — no sequence waits for a "batch" to finish.
+//!   Score batches interleave between decode steps.
+//!
+//! A single executor thread owns all execution state (required for the
+//! PJRT backend, whose xla handles are not `Send`; the native backend
+//! simply inherits the same single-executor design) — everything else is
+//! channels. Used by `examples/serve_merged.rs`,
+//! `examples/generate_merged.rs` and the Table 20 throughput/latency
+//! measurements. Runs offline end to end on the native backend. The full
+//! architecture (request lifecycle, batching policies, KV-cache memory
+//! accounting, metrics definitions) is documented in `SERVING.md`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -19,11 +30,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::backend::KvCache;
 use crate::calib::CalibStats;
 use crate::config::Artifacts;
 use crate::eval::log_softmax_at;
-use crate::model::ModelContext;
+use crate::generate::{Generated, SamplingParams, Session};
+use crate::model::{LoadedModel, ModelContext};
 use crate::pipeline::{Method, Pipeline};
+
+/// How long the executor sleeps on an empty queue before re-checking the
+/// stop flag.
+const POLL: Duration = Duration::from_millis(50);
 
 /// One scoring request: score `rows` (token sequences) and return the
 /// length-normalised logprob of positions [start, end) per row.
@@ -34,6 +51,38 @@ pub struct ScoreRequest {
     pub reply: Sender<Vec<f64>>,
     /// Submission time (drives queue-latency metrics).
     pub enqueued: Instant,
+}
+
+/// One text-generation request, served by the continuous batcher.
+pub struct GenerateRequest {
+    /// Prompt token ids (must be non-empty and fit in `t_max`).
+    pub prompt: Vec<i32>,
+    /// Sampling strategy + stop conditions.
+    pub params: SamplingParams,
+    /// Channel receiving the finished generation (or the error).
+    pub reply: Sender<Result<Generated>>,
+    /// Submission time (drives queue-latency metrics).
+    pub enqueued: Instant,
+}
+
+/// Anything a client can submit to the executor.
+pub enum Request {
+    /// Multiple-choice scoring (dynamic batcher).
+    Score(ScoreRequest),
+    /// Autoregressive generation (continuous batcher).
+    Generate(GenerateRequest),
+}
+
+impl From<ScoreRequest> for Request {
+    fn from(r: ScoreRequest) -> Self {
+        Request::Score(r)
+    }
+}
+
+impl From<GenerateRequest> for Request {
+    fn from(r: GenerateRequest) -> Self {
+        Request::Generate(r)
+    }
 }
 
 /// One scored row: a token sequence plus the `[start, end)` span whose
@@ -49,18 +98,56 @@ pub struct RowSpec {
 }
 
 /// Live serving counters (shared with clients via `Arc`).
+///
+/// Scoring traffic is tracked by `requests`/`rows`/`batches`/`busy_ns`;
+/// generation traffic by `gen_requests`/`prefill_tokens`/`gen_tokens` with
+/// its time split into `prefill_ns` and `decode_ns` (so per-token decode
+/// latency is measurable independently of prompt length). `queue_ns`
+/// covers both workloads (submit → reply).
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::atomic::Ordering;
+/// use hc_smoe::serving::Metrics;
+///
+/// let m = Metrics::default();
+/// m.gen_tokens.store(500, Ordering::Relaxed);
+/// m.decode_ns.store(2_000_000_000, Ordering::Relaxed); // 2 s
+/// m.prefill_tokens.store(64, Ordering::Relaxed);
+/// m.prefill_ns.store(8_000_000, Ordering::Relaxed); // 8 ms
+///
+/// let s = m.snapshot();
+/// assert_eq!(s.decode_tok_s(), 250.0);
+/// assert_eq!(s.ms_per_token(), 4.0);
+/// assert_eq!(s.prefill_tok_s(), 8000.0);
+/// ```
 #[derive(Default)]
 pub struct Metrics {
-    /// Requests accepted.
+    /// Score requests accepted.
     pub requests: AtomicU64,
-    /// Rows accepted.
+    /// Score rows accepted.
     pub rows: AtomicU64,
-    /// Device batches executed.
+    /// Score batches executed.
     pub batches: AtomicU64,
-    /// Nanoseconds spent executing batches.
+    /// Nanoseconds spent executing score batches.
     pub busy_ns: AtomicU64,
-    /// Nanoseconds requests spent queued (enqueue -> reply).
+    /// Nanoseconds requests spent queued (enqueue -> reply), both kinds.
     pub queue_ns: AtomicU64,
+    /// Generate requests accepted.
+    pub gen_requests: AtomicU64,
+    /// Prompt tokens prefilled for generate requests.
+    pub prefill_tokens: AtomicU64,
+    /// Tokens emitted by decode steps (incl. EOS when sampled). Each
+    /// sequence's *first* token is sampled from the prefill logits — its
+    /// compute sits in `prefill_ns`, so it is deliberately not counted
+    /// here; `decode_ns / gen_tokens` is then an honest per-decode-step
+    /// latency.
+    pub gen_tokens: AtomicU64,
+    /// Nanoseconds spent in prompt prefills.
+    pub prefill_ns: AtomicU64,
+    /// Nanoseconds spent in decode steps.
+    pub decode_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -72,6 +159,11 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             busy_s: self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
             queue_s: self.queue_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            gen_requests: self.gen_requests.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
+            prefill_s: self.prefill_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            decode_s: self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9,
         }
     }
 }
@@ -79,16 +171,26 @@ impl Metrics {
 /// Point-in-time copy of [`Metrics`].
 #[derive(Debug, Clone, Copy)]
 pub struct MetricsSnapshot {
-    /// Requests accepted.
+    /// Score requests accepted.
     pub requests: u64,
-    /// Rows accepted.
+    /// Score rows accepted.
     pub rows: u64,
-    /// Device batches executed.
+    /// Score batches executed.
     pub batches: u64,
-    /// Seconds spent executing batches.
+    /// Seconds spent executing score batches.
     pub busy_s: f64,
-    /// Seconds requests spent queued.
+    /// Seconds requests spent queued (both kinds).
     pub queue_s: f64,
+    /// Generate requests accepted.
+    pub gen_requests: u64,
+    /// Prompt tokens prefilled.
+    pub prefill_tokens: u64,
+    /// Tokens emitted by decode steps (first-token samples excluded).
+    pub gen_tokens: u64,
+    /// Seconds spent in prompt prefills.
+    pub prefill_s: f64,
+    /// Seconds spent in decode steps.
+    pub decode_s: f64,
 }
 
 impl MetricsSnapshot {
@@ -109,9 +211,38 @@ impl MetricsSnapshot {
             0.0
         }
     }
+
+    /// Decode throughput in generated tokens per second.
+    pub fn decode_tok_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.gen_tokens as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Prefill throughput in prompt tokens per second.
+    pub fn prefill_tok_s(&self) -> f64 {
+        if self.prefill_s > 0.0 {
+            self.prefill_tokens as f64 / self.prefill_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean per-token decode latency in milliseconds.
+    pub fn ms_per_token(&self) -> f64 {
+        if self.gen_tokens > 0 {
+            self.decode_s * 1e3 / self.gen_tokens as f64
+        } else {
+            0.0
+        }
+    }
 }
 
-/// Dynamic-batcher flush policy (size or deadline, whichever first).
+/// Dynamic-batcher flush policy for score rows (size or deadline,
+/// whichever first). Generation is not subject to it: decode requests
+/// join the continuous batch as soon as the executor sees them.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Flush when this many rows are queued (= executable batch size).
@@ -131,9 +262,9 @@ pub struct ServeSpec {
     pub compress: Option<(Method, usize, String)>, // (method, r, calib domain)
 }
 
-/// Client-side handle to a running scoring server.
+/// Client-side handle to a running server.
 pub struct ServerHandle {
-    tx: Sender<ScoreRequest>,
+    tx: Sender<Request>,
     /// Live serving counters.
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
@@ -154,19 +285,39 @@ impl ServerHandle {
             .collect();
         let (reply, rx) = channel();
         self.tx
-            .send(ScoreRequest { rows, reply, enqueued: Instant::now() })
+            .send(Request::Score(ScoreRequest { rows, reply, enqueued: Instant::now() }))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx.recv()?)
     }
 
+    /// Submit one generation request; blocks until the sequence finishes.
+    /// With a seeded [`SamplingParams`], the result is bit-identical to an
+    /// offline [`crate::generate::generate`] call on the same variant —
+    /// the server runs the same [`Session`] loop.
+    pub fn generate(&self, prompt: &[i32], params: SamplingParams) -> Result<Generated> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Generate(GenerateRequest {
+                prompt: prompt.to_vec(),
+                params,
+                reply,
+                enqueued: Instant::now(),
+            }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv()?
+    }
+
     /// A clonable submission channel for client threads.
-    pub fn sender(&self) -> Sender<ScoreRequest> {
+    pub fn sender(&self) -> Sender<Request> {
         self.tx.clone()
     }
 
     /// Stop the server and join the executor thread. Robust against
     /// still-alive cloned senders: an explicit stop flag breaks the
-    /// executor loop even if the channel never disconnects.
+    /// executor loop even if the channel never disconnects. In-flight
+    /// generations are abandoned (their clients observe a closed reply
+    /// channel); when the channel merely disconnects instead, the
+    /// executor finishes all in-flight work before exiting.
     pub fn shutdown(mut self) -> Result<()> {
         self.stop.store(true, Ordering::SeqCst);
         drop(self.tx);
@@ -179,7 +330,7 @@ impl ServerHandle {
 
 /// Start the executor thread. All PJRT state lives inside it.
 pub fn serve(spec: ServeSpec, batcher: BatcherConfig) -> Result<ServerHandle> {
-    let (tx, rx) = channel::<ScoreRequest>();
+    let (tx, rx) = channel::<Request>();
     let metrics = Arc::new(Metrics::default());
     let m2 = Arc::clone(&metrics);
     let stop = Arc::new(AtomicBool::new(false));
@@ -190,10 +341,39 @@ pub fn serve(spec: ServeSpec, batcher: BatcherConfig) -> Result<ServerHandle> {
     Ok(ServerHandle { tx, metrics, stop, join: Some(join) })
 }
 
+/// A queued-but-unanswered score request with its partial scores.
+struct Pending {
+    req: ScoreRequest,
+    scores: Vec<f64>,
+    remaining: usize,
+}
+
+/// One generation sequence in the continuous batch.
+struct ActiveGen {
+    reply: Sender<Result<Generated>>,
+    enqueued: Instant,
+    session: Session,
+    cache: Box<dyn KvCache>,
+    /// Sampled but not yet fed to the model.
+    next: i32,
+    prefill_s: f64,
+    decode_s: f64,
+}
+
+/// The executor: one thread owning the model and all execution state.
+struct Executor {
+    ctx: ModelContext,
+    model: LoadedModel,
+    bsz: usize,
+    t: usize,
+    batcher: BatcherConfig,
+    metrics: Arc<Metrics>,
+}
+
 fn executor_loop(
     spec: ServeSpec,
     batcher: BatcherConfig,
-    rx: Receiver<ScoreRequest>,
+    rx: Receiver<Request>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
@@ -208,19 +388,203 @@ fn executor_loop(
         }
     };
     let (bsz, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
+    let exec = Executor { ctx, model, bsz, t, batcher, metrics };
+    exec.run(rx, stop)
+}
 
-    // pending rows with backrefs: (request-id, row-in-request)
-    struct Pending {
-        req: ScoreRequest,
-        scores: Vec<f64>,
-        remaining: usize,
+impl Executor {
+    /// The main loop: intake → (score flush when due) → one decode step
+    /// across every active sequence — so decode requests join and leave
+    /// the running batch on step boundaries while score batches interleave.
+    fn run(&self, rx: Receiver<Request>, stop: Arc<AtomicBool>) -> Result<()> {
+        let mut pendings: Vec<Pending> = Vec::new();
+        let mut queue: Vec<(usize, usize, RowSpec)> = Vec::new();
+        let mut active: Vec<ActiveGen> = Vec::new();
+        // enqueue time of the oldest unflushed score request
+        let mut oldest: Option<Instant> = None;
+        let mut disconnected = false;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if !disconnected {
+                // Block only when there is nothing to advance; while
+                // sequences are decoding, drain without waiting.
+                let wait = if !active.is_empty() {
+                    Duration::ZERO
+                } else if let Some(o) = oldest {
+                    self.batcher.max_wait.saturating_sub(o.elapsed()).min(POLL)
+                } else {
+                    POLL
+                };
+                match rx.recv_timeout(wait) {
+                    Ok(req) => {
+                        self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut active);
+                        while let Ok(req) = rx.try_recv() {
+                            self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut active);
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+                }
+            }
+            if disconnected && active.is_empty() && queue.is_empty() {
+                break;
+            }
+            let flush_due = !queue.is_empty()
+                && (queue.len() >= self.batcher.max_rows
+                    || oldest.is_some_and(|o| o.elapsed() >= self.batcher.max_wait)
+                    || disconnected);
+            if flush_due {
+                self.flush(&mut pendings, &mut queue)?;
+                oldest = None;
+            }
+            if !active.is_empty() {
+                self.step(&mut active);
+            }
+        }
+        Ok(())
     }
-    let mut pendings: Vec<Pending> = Vec::new();
-    let mut queue: Vec<(usize, usize, RowSpec)> = Vec::new(); // (pending idx, row idx, row)
 
-    let flush = |pendings: &mut Vec<Pending>,
-                 queue: &mut Vec<(usize, usize, RowSpec)>|
-     -> Result<()> {
+    /// Route one incoming request: score rows to the dynamic-batch queue,
+    /// generations through prefill into the continuous batch.
+    fn intake(
+        &self,
+        req: Request,
+        pendings: &mut Vec<Pending>,
+        queue: &mut Vec<(usize, usize, RowSpec)>,
+        oldest: &mut Option<Instant>,
+        active: &mut Vec<ActiveGen>,
+    ) {
+        match req {
+            Request::Score(req) => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rows.fetch_add(req.rows.len() as u64, Ordering::Relaxed);
+                if req.rows.is_empty() {
+                    // answer right away: an empty request would never reach
+                    // flush() (the queue stays empty), and a stale `oldest`
+                    // would pin the intake wait at zero
+                    self.metrics
+                        .queue_ns
+                        .fetch_add(req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let _ = req.reply.send(Vec::new());
+                    return;
+                }
+                oldest.get_or_insert(req.enqueued);
+                let pi = pendings.len();
+                let rows = req.rows.clone();
+                pendings.push(Pending {
+                    scores: vec![0.0; rows.len()],
+                    remaining: rows.len(),
+                    req,
+                });
+                for (ri, row) in rows.into_iter().enumerate() {
+                    queue.push((pi, ri, row));
+                }
+            }
+            Request::Generate(req) => self.admit(req, active),
+        }
+    }
+
+    /// Prefill one generation request and add it to the continuous batch
+    /// (or answer immediately when it finishes within the first sample).
+    fn admit(&self, req: GenerateRequest, active: &mut Vec<ActiveGen>) {
+        self.metrics.gen_requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let (cache, logits) = match self.ctx.prefill(&self.model, &req.prompt) {
+            Ok(x) => x,
+            Err(e) => {
+                let _ = req.reply.send(Err(e));
+                return;
+            }
+        };
+        let prefill_s = t0.elapsed().as_secs_f64();
+        self.metrics
+            .prefill_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.metrics
+            .prefill_tokens
+            .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+        let mut session = Session::new(req.params);
+        // the first token is sampled from the prefill logits — its compute
+        // is charged to prefill_ns, so it does not enter gen_tokens (which
+        // strictly counts decode-step output; this keeps decode_tok_s /
+        // ms_per_token honest per-step measurements)
+        let next = session.advance(&logits, cache.seq_len(), self.ctx.cfg.t_max);
+        match next {
+            Some(next) => active.push(ActiveGen {
+                reply: req.reply,
+                enqueued: req.enqueued,
+                session,
+                cache,
+                next,
+                prefill_s,
+                decode_s: 0.0,
+            }),
+            None => {
+                self.metrics
+                    .queue_ns
+                    .fetch_add(req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let finish = session.finish().expect("finished session");
+                let _ = req.reply.send(Ok(Generated {
+                    tokens: session.into_tokens(),
+                    finish,
+                    prefill_s,
+                    decode_s: 0.0,
+                }));
+            }
+        }
+    }
+
+    /// One decode step for every active sequence; finished sequences are
+    /// answered and leave the batch immediately.
+    fn step(&self, active: &mut Vec<ActiveGen>) {
+        let mut i = 0;
+        while i < active.len() {
+            let a = &mut active[i];
+            let t0 = Instant::now();
+            let logits = match self.ctx.decode(&self.model, a.cache.as_mut(), a.next) {
+                Ok(l) => l,
+                Err(e) => {
+                    let a = active.swap_remove(i);
+                    let _ = a.reply.send(Err(e));
+                    continue;
+                }
+            };
+            let dt = t0.elapsed();
+            a.decode_s += dt.as_secs_f64();
+            self.metrics.decode_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+            self.metrics.gen_tokens.fetch_add(1, Ordering::Relaxed);
+            match a.session.advance(&logits, a.cache.seq_len(), self.ctx.cfg.t_max) {
+                Some(next) => {
+                    a.next = next;
+                    i += 1;
+                }
+                None => {
+                    let a = active.swap_remove(i);
+                    self.metrics
+                        .queue_ns
+                        .fetch_add(a.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let finish = a.session.finish().expect("finished session");
+                    let _ = a.reply.send(Ok(Generated {
+                        tokens: a.session.into_tokens(),
+                        finish,
+                        prefill_s: a.prefill_s,
+                        decode_s: a.decode_s,
+                    }));
+                }
+            }
+        }
+    }
+
+    /// Execute the queued score rows as full batches and deliver finished
+    /// requests.
+    fn flush(
+        &self,
+        pendings: &mut Vec<Pending>,
+        queue: &mut Vec<(usize, usize, RowSpec)>,
+    ) -> Result<()> {
+        let (bsz, t) = (self.bsz, self.t);
         while !queue.is_empty() {
             let take = queue.len().min(bsz);
             let chunk: Vec<_> = queue.drain(..take).collect();
@@ -231,18 +595,26 @@ fn executor_loop(
                 }
             }
             let t0 = Instant::now();
-            let logits = ctx.run_logits(&model, &ids)?;
-            metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            let logits = self.ctx.run_logits(&self.model, &ids)?;
+            self.metrics
+                .busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.metrics.batches.fetch_add(1, Ordering::Relaxed);
             let v = logits.shape()[2];
             let ld = logits.data();
             for (bi, (pi, ri, row)) in chunk.iter().enumerate() {
                 let mut lp = 0f64;
-                for pos in row.start..row.end.min(t) {
+                // Position 0 has no conditioning context (there is no
+                // logits row at -1): an empty-prompt row starts scoring
+                // at position 1. Guards the `pos - 1` underflow that
+                // panicked the executor on `start == 0` rows.
+                for pos in row.start.max(1)..row.end.min(t) {
                     let lrow = &ld[(bi * t + pos - 1) * v..(bi * t + pos) * v];
                     lp += log_softmax_at(lrow, row.seq[pos] as usize);
                 }
-                lp /= (row.end - row.start).max(1) as f64;
+                // normalise by the number of positions actually scored
+                // (start==0 skips position 0, so the divisor must too)
+                lp /= (row.end.saturating_sub(row.start.max(1))).max(1) as f64;
                 let p = &mut pendings[*pi];
                 p.scores[*ri] = lp;
                 p.remaining -= 1;
@@ -252,7 +624,7 @@ fn executor_loop(
         for p in pendings.iter_mut() {
             if p.remaining == 0 {
                 let scores = std::mem::take(&mut p.scores);
-                metrics
+                self.metrics
                     .queue_ns
                     .fetch_add(p.req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 let _ = p.req.reply.send(scores);
@@ -260,54 +632,7 @@ fn executor_loop(
         }
         pendings.retain(|p| p.remaining > 0);
         Ok(())
-    };
-
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        // wait for work (or shutdown)
-        let first = match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(req) => Some(req),
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
-        };
-        let deadline = Instant::now() + batcher.max_wait;
-        let enqueue = |req: ScoreRequest,
-                           pendings: &mut Vec<Pending>,
-                           queue: &mut Vec<(usize, usize, RowSpec)>| {
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            metrics.rows.fetch_add(req.rows.len() as u64, Ordering::Relaxed);
-            let pi = pendings.len();
-            let rows = req.rows.clone();
-            pendings.push(Pending {
-                scores: vec![0.0; rows.len()],
-                remaining: rows.len(),
-                req,
-            });
-            for (ri, row) in rows.into_iter().enumerate() {
-                queue.push((pi, ri, row));
-            }
-        };
-        if let Some(req) = first {
-            enqueue(req, &mut pendings, &mut queue);
-        }
-        // keep filling until the batch is full or the deadline passes
-        while queue.len() < batcher.max_rows {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(req) => enqueue(req, &mut pendings, &mut queue),
-                Err(_) => break,
-            }
-        }
-        if !queue.is_empty() {
-            flush(&mut pendings, &mut queue)?;
-        }
     }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -323,6 +648,24 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.rows_per_sec(), 32.0);
         assert_eq!(s.mean_batch_fill(32), 1.0);
+    }
+
+    #[test]
+    fn generation_metrics_math() {
+        let m = Metrics::default();
+        m.gen_requests.store(4, Ordering::Relaxed);
+        m.gen_tokens.store(100, Ordering::Relaxed);
+        m.decode_ns.store(500_000_000, Ordering::Relaxed); // 0.5 s
+        m.prefill_tokens.store(40, Ordering::Relaxed);
+        m.prefill_ns.store(10_000_000, Ordering::Relaxed); // 10 ms
+        let s = m.snapshot();
+        assert_eq!(s.decode_tok_s(), 200.0);
+        assert_eq!(s.ms_per_token(), 5.0);
+        assert_eq!(s.prefill_tok_s(), 4000.0);
+        // empty counters stay well-defined
+        let z = Metrics::default().snapshot();
+        assert_eq!(z.decode_tok_s(), 0.0);
+        assert_eq!(z.ms_per_token(), 0.0);
     }
 
     #[test]

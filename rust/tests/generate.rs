@@ -1,0 +1,375 @@
+//! Generation-path test suite: the KV-cached prefill/decode split, the
+//! sampling/stop-condition loop, and the continuous-batching server —
+//! all offline (synthesized weights/artifacts, native backend).
+//!
+//! The headline contract pinned here: prefill + repeated decode produce
+//! logits **bit-identical** to the uncached full-sequence forward at
+//! every position, on the full and compact expert layouts, under router
+//! masks, at multiple thread counts. (The configs used keep capacity
+//! dispatch drop-free — `cap_factor = 4.0` with top-k distinct experts
+//! bounds every queue below capacity — which is the regime where the
+//! equivalence is exact; see `SERVING.md`.)
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hc_smoe::backend::native::{forward_logits_with, NativeBackend};
+use hc_smoe::backend::{Backend, KvCache};
+use hc_smoe::bench_support::synthesize_artifacts;
+use hc_smoe::clustering::Linkage;
+use hc_smoe::config::{Artifacts, ModelCfg};
+use hc_smoe::eval::Evaluator;
+use hc_smoe::generate::{generate, generate_compact, FinishReason, SamplingParams};
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::{Method, Pipeline, MASK_OFF};
+use hc_smoe::serving::{serve, BatcherConfig, RowSpec, ScoreRequest, ServeSpec};
+use hc_smoe::similarity::Metric;
+use hc_smoe::weights::Weights;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "gen".into(),
+        n_layer: 2,
+        d: 16,
+        m: 16,
+        n_exp: 4,
+        k: 2,
+        heads: 2,
+        vocab: 48,
+        t_max: 40,
+        shared: false,
+        m_shared: 16,
+        // k=2 distinct experts per token bound any slot's queue by t (full
+        // layout) / 2t (two experts folded per compact slot); cap_factor=4
+        // puts capacity at 2t / 4t — structurally drop-free, so cached and
+        // uncached dispatch agree exactly at every prefix length.
+        cap_factor: 4.0,
+        block_c: 4,
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Synthesize one artifact set per test process (shared across tests).
+fn arts() -> Artifacts {
+    static DIR: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+    let dir = DIR.get_or_init(|| {
+        let p = std::env::temp_dir().join(format!("hcsmoe_gen_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        synthesize_artifacts(&p, 0x6E11).expect("synthesize artifacts");
+        p
+    });
+    Artifacts::new(dir)
+}
+
+fn hc_method() -> Method {
+    Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    }
+}
+
+#[test]
+fn cached_decode_is_bit_identical_to_full_forward() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 11);
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(&w, cfg.n_exp).unwrap();
+    // prune one expert per layer through the router mask so the masked
+    // path is exercised incrementally too
+    let mut mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    mask[0] = MASK_OFF;
+    mask[cfg.n_exp + 2] = MASK_OFF;
+    let v = cfg.vocab;
+    let prompt: Vec<i32> = (0..8).map(|i| ((3 + i * 5) % v) as i32).collect();
+    let cont: Vec<i32> = (0..12).map(|i| ((7 + i * 11) % v) as i32).collect();
+
+    let (mut cache, prefill_logits) =
+        backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
+    assert_eq!(cache.seq_len(), prompt.len());
+    for threads in [1usize, 4] {
+        let full = forward_logits_with(
+            &cfg, &w, &prompt, 1, prompt.len(), &mask, None, cfg.n_exp, threads,
+        )
+        .unwrap();
+        let last = &full.data()[(prompt.len() - 1) * v..];
+        assert_eq!(
+            bits(last),
+            bits(&prefill_logits),
+            "prefill logits differ from full forward (threads={threads})"
+        );
+    }
+    let mut seq = prompt.clone();
+    for &tok in &cont {
+        let step = backend
+            .run_decode(state.as_ref(), cache.as_mut(), tok, &mask, None)
+            .unwrap();
+        seq.push(tok);
+        for threads in [1usize, 4] {
+            let full = forward_logits_with(
+                &cfg, &w, &seq, 1, seq.len(), &mask, None, cfg.n_exp, threads,
+            )
+            .unwrap();
+            let last = &full.data()[(seq.len() - 1) * v..];
+            assert_eq!(
+                bits(last),
+                bits(&step),
+                "decode logits differ at position {} (threads={threads})",
+                seq.len() - 1
+            );
+        }
+    }
+    assert_eq!(cache.seq_len(), prompt.len() + cont.len());
+    // memory accounting: the cache holds exactly the K/V the formula says
+    assert_eq!(cache.byte_size(), cfg.kv_cache_bytes(cache.seq_len()));
+}
+
+#[test]
+fn cached_decode_is_bit_identical_on_compact_variant() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 23);
+    let r = 2usize;
+    let keep: Vec<Vec<usize>> = vec![(0..r).collect(); cfg.n_layer];
+    let cw = w.to_compact(&cfg, &keep).unwrap();
+    let remap: Vec<i32> = (0..cfg.n_layer * cfg.n_exp)
+        .map(|i| ((i % cfg.n_exp) % r) as i32)
+        .collect();
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(&cw, r).unwrap();
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let v = cfg.vocab;
+    let prompt: Vec<i32> = (0..6).map(|i| ((5 + i * 3) % v) as i32).collect();
+    let cont: Vec<i32> = (0..10).map(|i| ((2 + i * 9) % v) as i32).collect();
+
+    let (mut cache, prefill_logits) = backend
+        .run_prefill(state.as_ref(), &prompt, &mask, Some(&remap))
+        .unwrap();
+    let full = forward_logits_with(
+        &cfg, &cw, &prompt, 1, prompt.len(), &mask, Some(&remap), r, 1,
+    )
+    .unwrap();
+    assert_eq!(bits(&full.data()[(prompt.len() - 1) * v..]), bits(&prefill_logits));
+    let mut seq = prompt.clone();
+    for &tok in &cont {
+        let step = backend
+            .run_decode(state.as_ref(), cache.as_mut(), tok, &mask, Some(&remap))
+            .unwrap();
+        seq.push(tok);
+        for threads in [1usize, 3] {
+            let full = forward_logits_with(
+                &cfg, &cw, &seq, 1, seq.len(), &mask, Some(&remap), r, threads,
+            )
+            .unwrap();
+            assert_eq!(
+                bits(&full.data()[(seq.len() - 1) * v..]),
+                bits(&step),
+                "compact decode differs at position {} (threads={threads})",
+                seq.len() - 1
+            );
+        }
+    }
+}
+
+#[test]
+fn greedy_generation_is_deterministic_and_matches_manual_argmax() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let prompt = [1i32, 4, 20, 3, 5];
+    let a = generate(&ctx, &model, &prompt, SamplingParams::greedy(10, None)).unwrap();
+    let b = generate(&ctx, &model, &prompt, SamplingParams::greedy(10, None)).unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy generation must replay exactly");
+    assert_eq!(a.tokens.len(), 10);
+    assert_eq!(a.finish, FinishReason::MaxTokens);
+
+    // cross-check against a hand-rolled prefill/decode argmax loop
+    let argmax = |xs: &[f32]| -> i32 {
+        let mut bi = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &x) in xs.iter().enumerate() {
+            if x > bv {
+                bv = x;
+                bi = i;
+            }
+        }
+        bi as i32
+    };
+    let (mut cache, mut logits) = ctx.prefill(&model, &prompt).unwrap();
+    let mut manual = Vec::new();
+    for _ in 0..10 {
+        let tok = argmax(&logits);
+        manual.push(tok);
+        logits = ctx.decode(&model, cache.as_mut(), tok).unwrap();
+    }
+    assert_eq!(a.tokens, manual);
+}
+
+#[test]
+fn eos_and_context_stop_conditions() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let prompt = [1i32, 4, 33, 3, 5];
+
+    // EOS: pin it to whatever greedy emits first — generation must stop
+    // right there, inclusively
+    let probe = generate(&ctx, &model, &prompt, SamplingParams::greedy(1, None)).unwrap();
+    let first = probe.tokens[0];
+    let out = generate(&ctx, &model, &prompt, SamplingParams::greedy(16, Some(first))).unwrap();
+    assert_eq!(out.tokens, vec![first]);
+    assert_eq!(out.finish, FinishReason::Eos);
+
+    // context limit: a prompt near t_max can only emit t_max - len + 1
+    // tokens (the final sample has no room to be fed back)
+    let t_max = ctx.cfg.t_max;
+    let long: Vec<i32> = (0..t_max - 4).map(|i| ((16 + i * 3) % 90) as i32).collect();
+    let out = generate(&ctx, &model, &long, SamplingParams::greedy(100, None)).unwrap();
+    assert_eq!(out.finish, FinishReason::MaxContext);
+    assert_eq!(out.tokens.len(), t_max - long.len() + 1);
+
+    // a prompt longer than the window is rejected cleanly
+    let too_long: Vec<i32> = vec![17; t_max + 1];
+    assert!(generate(&ctx, &model, &too_long, SamplingParams::greedy(4, None)).is_err());
+    // ... and so is an empty one (no position to predict from)
+    assert!(generate(&ctx, &model, &[], SamplingParams::greedy(4, None)).is_err());
+}
+
+#[test]
+fn sampled_generation_is_seed_deterministic_on_merged_and_compact() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    let r = ctx.cfg.n_exp / 2;
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, r).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let merged = cm.load(&ctx).unwrap();
+    let (cw, remap) = cm.to_compact(&ctx).unwrap();
+    let compact = ctx.load_compact(r, &cw, remap, "compact").unwrap();
+    let prompt = [1i32, 4, 25, 61, 3, 5];
+    let params = SamplingParams::top_k(8, 0.8, 3, 12, None);
+
+    let a = generate(&ctx, &merged, &prompt, params.clone()).unwrap();
+    let b = generate(&ctx, &merged, &prompt, params.clone()).unwrap();
+    assert_eq!(a.tokens, b.tokens, "same seed must replay on the merged variant");
+    assert!(a.tokens.iter().all(|&t| (t as usize) < ctx.cfg.vocab));
+
+    let c = generate_compact(&ctx, &compact, &prompt, params.clone()).unwrap();
+    let d = generate_compact(&ctx, &compact, &prompt, params).unwrap();
+    assert_eq!(c.tokens, d.tokens, "same seed must replay on the compact variant");
+    assert_eq!(c.tokens.len(), 12);
+}
+
+#[test]
+fn server_mixed_load_matches_offline_results() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let bench = hc_smoe::data::Benchmark::load(a.benchmark("arc_e")).unwrap();
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+        },
+        BatcherConfig {
+            max_rows: ctx.manifest.eval_b,
+            max_wait: Duration::from_millis(2),
+        },
+    )
+    .unwrap();
+
+    let prompt = [1i32, 4, 20, 3, 5];
+    let seeds = [1u64, 2, 3];
+    let direct = {
+        let ev = Evaluator::new(&ctx).unwrap();
+        ev.score_benchmark(&model, &bench).unwrap()
+    };
+    let mut served = Vec::new();
+    std::thread::scope(|s| {
+        // generation clients join and leave the continuous batch at
+        // different lengths...
+        let mut joins = Vec::new();
+        for (gi, &seed) in seeds.iter().enumerate() {
+            let handle = &handle;
+            let prompt = &prompt;
+            joins.push(s.spawn(move || {
+                let params = SamplingParams::top_k(8, 0.8, seed, 6 + 4 * gi, None);
+                handle.generate(prompt, params).unwrap()
+            }));
+        }
+        // ...while score traffic flows through the dynamic batcher
+        for cl in 0..2usize {
+            let handle = &handle;
+            let bench = &bench;
+            let direct = &direct;
+            s.spawn(move || {
+                for (ii, item) in bench.items.iter().enumerate().skip(cl * 6).take(6) {
+                    let scores = handle.score_item(&item.prompt, &item.choices).unwrap();
+                    let pred = scores
+                        .iter()
+                        .enumerate()
+                        .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                        .unwrap()
+                        .0;
+                    assert_eq!(pred, direct.predictions[ii], "served item {ii} differs");
+                }
+            });
+        }
+        for j in joins {
+            served.push(j.join().expect("generation client panicked"));
+        }
+    });
+
+    // a served generation is bit-identical to the offline API with the
+    // same seed: both run the same Session loop on the same weights
+    for (gi, (&seed, out)) in seeds.iter().zip(&served).enumerate() {
+        let params = SamplingParams::top_k(8, 0.8, seed, 6 + 4 * gi, None);
+        let offline = generate(&ctx, &model, &prompt, params).unwrap();
+        assert_eq!(out.tokens, offline.tokens, "seed {seed}");
+        assert_eq!(out.finish, offline.finish, "seed {seed}");
+    }
+    let snap = handle.metrics.snapshot();
+    handle.shutdown().unwrap();
+    assert_eq!(snap.gen_requests, 3);
+    // gen_tokens counts decode-step output only: each sequence's first
+    // token comes from the prefill logits, so max_new_tokens - 1 per seq
+    let expected_tokens: u64 = (0..3).map(|gi| 6 + 4 * gi as u64 - 1).sum();
+    assert_eq!(snap.gen_tokens, expected_tokens, "every decode-step token is counted");
+    assert_eq!(snap.prefill_tokens, 3 * prompt.len() as u64);
+    assert!(snap.decode_s > 0.0 && snap.decode_tok_s() > 0.0);
+    assert_eq!(snap.requests, 12);
+}
+
+#[test]
+fn empty_prompt_rows_do_not_panic_the_executor() {
+    let a = arts();
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "mixsim".into(),
+            compress: None,
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    // regression: a RowSpec with start == 0 (empty prompt) used to compute
+    // `pos - 1` at pos == 0 and panic the executor thread
+    let row = RowSpec { seq: vec![17, 23, 42], start: 0, end: 3 };
+    let (reply, rx) = std::sync::mpsc::channel();
+    handle
+        .sender()
+        .send(ScoreRequest { rows: vec![row], reply, enqueued: Instant::now() }.into())
+        .unwrap();
+    let scores = rx.recv().expect("executor must answer, not panic");
+    assert_eq!(scores.len(), 1);
+    assert!(scores[0].is_finite());
+
+    // an invalid generate request is answered with an error, and the
+    // executor keeps serving afterwards
+    let err = handle.generate(&[], SamplingParams::greedy(4, None));
+    assert!(err.is_err(), "empty prompt must be rejected, not crash");
+    let ok = handle.generate(&[17, 23], SamplingParams::greedy(2, None)).unwrap();
+    assert_eq!(ok.tokens.len(), 2);
+    handle.shutdown().unwrap();
+}

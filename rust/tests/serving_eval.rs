@@ -86,11 +86,14 @@ fn batcher_packs_concurrent_requests() {
                     })
                     .collect();
                 let (reply, rx) = std::sync::mpsc::channel();
-                tx.send(hc_smoe::serving::ScoreRequest {
-                    rows,
-                    reply,
-                    enqueued: std::time::Instant::now(),
-                })
+                tx.send(
+                    hc_smoe::serving::ScoreRequest {
+                        rows,
+                        reply,
+                        enqueued: std::time::Instant::now(),
+                    }
+                    .into(),
+                )
                 .unwrap();
                 let scores = rx.recv().unwrap();
                 assert_eq!(scores.len(), 2);
@@ -123,11 +126,14 @@ fn shutdown_joins_cleanly_and_rejects_after() {
     handle.shutdown().unwrap();
     // the executor is gone; sends eventually error (channel disconnected)
     let (reply, _rx) = std::sync::mpsc::channel();
-    let r = tx.send(hc_smoe::serving::ScoreRequest {
-        rows: vec![],
-        reply,
-        enqueued: std::time::Instant::now(),
-    });
+    let r = tx.send(
+        hc_smoe::serving::ScoreRequest {
+            rows: vec![],
+            reply,
+            enqueued: std::time::Instant::now(),
+        }
+        .into(),
+    );
     assert!(r.is_err(), "sender must observe disconnection after shutdown");
 }
 

@@ -27,4 +27,8 @@ cargo run --release --bin hc-smoe -- synth --out target/ci-artifacts-synth
 HCSMOE_ARTIFACTS=target/ci-artifacts-synth \
   cargo run --release --example e2e_compress_eval
 
+echo "==> generation smoke (KV-cached decode + continuous-batching server)"
+HCSMOE_ARTIFACTS=target/ci-artifacts-synth \
+  cargo run --release --example generate_merged
+
 echo "ci_check: all green"
