@@ -18,8 +18,10 @@
 use std::time::{Duration, Instant};
 
 use hc_smoe::backend::native::{forward_calib_with, forward_logits_with, NativeBackend};
-use hc_smoe::backend::Backend;
-use hc_smoe::bench_support::{self, BackendBenchRow, GenerateBenchRow, Lab, ParallelBenchRow};
+use hc_smoe::backend::{Backend, KvCache};
+use hc_smoe::bench_support::{
+    self, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, Lab, ParallelBenchRow,
+};
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
 use hc_smoe::config::ModelCfg;
 use hc_smoe::report::Table;
@@ -326,6 +328,100 @@ fn generate_sweep(threads: usize, table: &mut Table) -> Vec<GenerateBenchRow> {
     rows
 }
 
+/// Batched continuous decode vs the per-sequence loop — the serving
+/// executor's before/after. B sequences are prefilled (untimed), then
+/// advanced `steps` tokens each: the sequential column calls
+/// `run_decode` once per sequence per step (every weight matrix is
+/// streamed B times per step), the batched column makes one
+/// `run_decode_batch` call per step (shared `[B, d]` projection GEMMs,
+/// per-expert grouped SwiGLU — each weight streamed once). Both columns
+/// use the auto-gated trait entry points — exactly what the executor
+/// runs — so this measures the batching win itself, with the per-product
+/// work gate deciding threading identically on both sides. Both paths
+/// produce bit-identical logits (`rust/tests/decode_batch.rs`); emits the
+/// `decode_batch_sweep` section of BENCH_generate.json, where CI asserts
+/// batched ≥ sequential at B = 4.
+fn decode_batch_sweep(table: &mut Table) -> Vec<DecodeBatchRow> {
+    let smoke = bench_support::smoke();
+    // the B=4 row feeds a hard CI gate, so buy median stability with more
+    // iterations and a longer timed region than the other sweeps
+    let iters = if smoke { 1 } else { 7 };
+    let steps = if smoke { 8 } else { 48 };
+    let cfg = gen_cfg(8);
+    let w = Weights::synthesize(&cfg, 0xBA7C);
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(&w, cfg.n_exp).expect("load");
+    let prompt_len = 16usize;
+    let feed = |s: usize, i: usize| -> i32 { (16 + (s * 13 + i * 7) % 64) as i32 };
+    let mut rows = Vec::new();
+    for &b in &[1usize, 2, 4, 8] {
+        let prompts: Vec<Vec<i32>> = (0..b)
+            .map(|s| (0..prompt_len).map(|i| (16 + (i * 5 + s * 3) % 64) as i32).collect())
+            .collect();
+        let prefill_all = || -> Vec<Box<dyn KvCache>> {
+            prompts
+                .iter()
+                .map(|p| {
+                    backend
+                        .run_prefill(state.as_ref(), p, &mask, None)
+                        .expect("prefill")
+                        .0
+                })
+                .collect()
+        };
+        // per-sequence loop: B run_decode calls per step
+        let mut seq_samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let mut caches = prefill_all();
+            let t0 = Instant::now();
+            for i in 0..steps {
+                for (s, c) in caches.iter_mut().enumerate() {
+                    backend
+                        .run_decode(state.as_ref(), c.as_mut(), feed(s, i), &mask, None)
+                        .expect("decode");
+                }
+            }
+            seq_samples.push(t0.elapsed().as_secs_f64());
+        }
+        let seq_s = median_s(seq_samples);
+        // batched: one run_decode_batch call per step
+        let mut batch_samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let mut caches = prefill_all();
+            let t0 = Instant::now();
+            for i in 0..steps {
+                let tokens: Vec<i32> = (0..b).map(|s| feed(s, i)).collect();
+                let mut refs: Vec<&mut dyn KvCache> =
+                    caches.iter_mut().map(|c| c.as_mut()).collect();
+                backend
+                    .run_decode_batch(state.as_ref(), &mut refs, &tokens, &mask, None)
+                    .expect("decode batch");
+            }
+            batch_samples.push(t0.elapsed().as_secs_f64());
+        }
+        let batch_s = median_s(batch_samples);
+        table.row(vec![
+            format!("B={b} × {steps} steps"),
+            format!("{:.3}", seq_s * 1e3),
+            format!("{:.3}", batch_s * 1e3),
+            format!(
+                "{:.0} tok/s ({:.2}x)",
+                (b * steps) as f64 / batch_s.max(1e-12),
+                seq_s / batch_s.max(1e-12)
+            ),
+        ]);
+        rows.push(DecodeBatchRow {
+            batch: b,
+            prompt_tokens: prompt_len,
+            decode_tokens: steps,
+            seq_ms: seq_s * 1e3,
+            batch_ms: batch_s * 1e3,
+        });
+    }
+    rows
+}
+
 fn artifact_sections() -> anyhow::Result<()> {
     let lab = Lab::new("qwensim")?;
     let (b, t) = (lab.ctx.manifest.eval_b, lab.ctx.manifest.eval_t);
@@ -571,16 +667,25 @@ fn main() -> anyhow::Result<()> {
     let grows = generate_sweep(threads, &mut gtable);
     gtable.print();
     gtable.append_to("bench_results.md")?;
+    let mut btable = Table::new(
+        "Batched continuous decode: run_decode_batch vs per-sequence loop (auto-gated)",
+        &["Batch", "per-seq ms", "batched ms", "batched throughput"],
+    );
+    let batch_rows = decode_batch_sweep(&mut btable);
+    btable.print();
+    btable.append_to("bench_results.md")?;
     let gen_measurement = if bench_support::smoke() {
         "SMOKE MODE: single sample, harness check only — not a perf measurement"
     } else {
-        "median of 3 (release)"
+        "median of 3 (release); decode_batch_sweep median of 7"
     };
     let gen_note = format!(
         "{gen_measurement}; host exposes {cores} cpus; synthesized checkpoint (L=2, d=64, \
          E=8 full / r=4 compact), 16-token prompt; timed region is the decode loop only; \
          cached decode is single-row and thread-independent (both columns measure the \
-         same code), uncached re-forwards the whole prefix per token"
+         same code), uncached re-forwards the whole prefix per token; decode_batch_sweep \
+         compares one run_decode_batch call per step against B run_decode calls per step \
+         (bit-identical outputs, wall-clock only)"
     );
     bench_support::write_generate_json(
         GENERATE_JSON,
@@ -588,6 +693,7 @@ fn main() -> anyhow::Result<()> {
         "rust/benches/perf_microbench.rs",
         &gen_note,
         &grows,
+        &batch_rows,
     )?;
     println!("wrote {GENERATE_JSON}");
 

@@ -220,6 +220,66 @@ pub trait Backend {
         mask: &[f32],
         remap: Option<&[i32]>,
     ) -> Result<Vec<f32>>;
+
+    /// Batched incremental inference: advance **every** sequence in
+    /// `caches` by one token in a single call, returning one `[vocab]`
+    /// logits row per sequence (index-aligned with `caches`/`tokens`).
+    /// This is the continuous-batching hot path: a decode step over N
+    /// active sequences must cost less than N independent
+    /// [`Backend::run_decode`] calls for the batcher to scale.
+    ///
+    /// The native backend shares every weight-side GEMM across the batch
+    /// (one `[B, d] × [d, ·]` product per attention/router/head
+    /// projection) and gathers routed tokens across sequences into
+    /// per-expert row blocks (one SwiGLU GEMM per expert per step), while
+    /// attention scores and the capacity-dispatch queue stay per-sequence
+    /// against each cache. Sequences may have different lengths.
+    ///
+    /// Contract (native backend): the returned row for sequence `i` is
+    /// **bit-identical** to what a standalone `run_decode` on that cache
+    /// would produce — batching changes wall-clock, never results
+    /// (`rust/tests/decode_batch.rs` pins this across layouts, mixed
+    /// lengths and join/leave patterns).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache};
+    /// use hc_smoe::config::ModelCfg;
+    /// use hc_smoe::weights::Weights;
+    ///
+    /// let cfg = ModelCfg {
+    ///     name: "demo".into(), n_layer: 1, d: 8, m: 8, n_exp: 2, k: 1,
+    ///     heads: 2, vocab: 16, t_max: 8, shared: false, m_shared: 8,
+    ///     cap_factor: 4.0, block_c: 1,
+    /// };
+    /// let w = Weights::synthesize(&cfg, 7);
+    /// let backend = NativeBackend::new(cfg.clone());
+    /// let state = backend.load_model(&w, cfg.n_exp).unwrap();
+    /// let mask = vec![0.0; cfg.n_layer * cfg.n_exp];
+    ///
+    /// // two sequences of different lengths decode together
+    /// let (mut ca, _) = backend.run_prefill(state.as_ref(), &[1, 4], &mask, None).unwrap();
+    /// let (mut cb, _) = backend.run_prefill(state.as_ref(), &[2, 7, 9], &mask, None).unwrap();
+    /// let mut caches: Vec<&mut dyn KvCache> = vec![ca.as_mut(), cb.as_mut()];
+    /// let rows = backend
+    ///     .run_decode_batch(state.as_ref(), &mut caches, &[5, 3], &mask, None)
+    ///     .unwrap();
+    /// assert_eq!(rows.len(), 2);
+    /// assert_eq!((ca.seq_len(), cb.seq_len()), (3, 4));
+    ///
+    /// // each row equals the full forward over that sequence's prefix
+    /// let full = backend.run_logits(state.as_ref(), &[1, 4, 5], 1, 3, &mask, None).unwrap();
+    /// assert_eq!(&full.data()[2 * cfg.vocab..], &rows[0][..]);
+    /// ```
+    fn run_decode_batch(
+        &self,
+        state: &dyn ModelState,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Vec<Vec<f32>>>;
 }
 
 /// Environment variable selecting the execution backend.

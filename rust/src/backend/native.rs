@@ -32,6 +32,20 @@
 //! (`rust/tests/generate.rs`). The matmul per-element reduction order is
 //! length-independent (ascending-k, see [`crate::tensor::matmul`]), so a
 //! 1-row product equals the corresponding row of the batched product.
+//!
+//! **Batched decode** (`run_decode_batch`) is the continuous-batching hot
+//! path: all B active sequences advance one token per call. Weight-side
+//! products are shared across the batch — one `[B, d] × [d, ·]` GEMM per
+//! attention/router/head projection — and the MoE gathers routed tokens
+//! *across sequences* into per-expert row blocks, executing one SwiGLU
+//! GEMM per expert per step instead of up to `B · k` vector–matrix
+//! products. Attention scores and the capacity queue remain strictly
+//! per-sequence (each against its own cache). Because the matmul row
+//! reduction is row-independent and every per-sequence accumulation
+//! happens in the same order as the single-sequence path, the batch is
+//! **bit-identical** per sequence to B separate `run_decode` calls — in
+//! fact `run_decode` *is* `run_decode_batch` at B = 1
+//! (`rust/tests/decode_batch.rs` pins the equivalence).
 
 use std::sync::OnceLock;
 
@@ -39,7 +53,7 @@ use anyhow::{ensure, Result};
 
 use crate::config::ModelCfg;
 use crate::parallel;
-use crate::tensor::{dot, matmul_blocked_with, Tensor};
+use crate::tensor::{dot, gather_rows, matmul_blocked_with, Tensor};
 use crate::weights::Weights;
 
 use super::{downcast_cache_mut, downcast_state, Backend, KvCache, ModelState};
@@ -138,6 +152,157 @@ impl NativeBackend {
         } else {
             1
         }
+    }
+
+    /// [`Backend::run_decode_batch`] with an explicit worker count —
+    /// benches and tests can drive controlled thread sweeps through this;
+    /// the trait entry point auto-gates on the batch's work estimate
+    /// (each individual product is additionally work-gated by `mm`, so
+    /// tiny models stay serial either way). Results are bit-identical at
+    /// any `threads` (the [`crate::parallel`] determinism contract), and
+    /// per sequence bit-identical to a standalone
+    /// [`Backend::run_decode`] call.
+    pub fn run_decode_batch_with(
+        &self,
+        state: &dyn ModelState,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+        threads: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let m: &NativeModel = downcast_state(state, self.name())?;
+        let cfg = &self.cfg;
+        let bsz = caches.len();
+        ensure!(
+            tokens.len() == bsz,
+            "decode batch needs one token per cache ({} tokens, {bsz} caches)",
+            tokens.len()
+        );
+        ensure!(
+            mask.len() == cfg.n_layer * cfg.n_exp,
+            "mask must be [{}, {}]",
+            cfg.n_layer,
+            cfg.n_exp
+        );
+        if let Some(rm) = remap {
+            ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
+            // the remap table is static, so range-check it in full here —
+            // a bad slot must fail before any cache is mutated, not at
+            // whatever layer/selection first routes through it
+            ensure!(
+                rm.iter().all(|&s| s >= 0 && (s as usize) < m.n_slots),
+                "remap slot out of range {}",
+                m.n_slots
+            );
+        }
+        if bsz == 0 {
+            return Ok(Vec::new());
+        }
+        let mut cs: Vec<&mut NativeKvCache> = Vec::with_capacity(bsz);
+        for c in caches.iter_mut() {
+            cs.push(downcast_cache_mut(&mut **c, self.name())?);
+        }
+        let d = cfg.d;
+        let hd = d / cfg.heads;
+        ensure!(hd * cfg.heads == d, "heads must divide d");
+        let w = &m.weights;
+        let pos = w.get("pos")?;
+        let embed = w.get("embed")?;
+        // validate the whole batch before any cache is mutated, so a bad
+        // request cannot leave other sequences half-advanced
+        for (c, &tok) in cs.iter().zip(tokens) {
+            ensure!(
+                c.k.len() == cfg.n_layer && c.v.len() == cfg.n_layer,
+                "kv cache layer count mismatch"
+            );
+            ensure!(
+                c.k.iter().all(|kb| kb.len() == c.t * d)
+                    && c.v.iter().all(|vb| vb.len() == c.t * d),
+                "kv cache length out of sync"
+            );
+            // a cache prefilled against a different slot layout (e.g. a
+            // full-model cache fed to a compact variant) must be rejected
+            // here, not mid-layer after attention already appended K/V
+            ensure!(
+                c.counts.len() == cfg.n_layer
+                    && c.counts.iter().all(|ct| ct.len() == m.n_slots),
+                "dispatch counts must cover {} slots per layer",
+                m.n_slots
+            );
+            ensure!(
+                pos.shape()[0] >= c.t + 1,
+                "sequence length {} exceeds t_max {}",
+                c.t + 1,
+                pos.shape()[0]
+            );
+            ensure!(
+                tok >= 0 && (tok as usize) < cfg.vocab,
+                "token id {tok} out of vocab range {}",
+                cfg.vocab
+            );
+        }
+        // embedding + learned positions: each row at its own position
+        let mut h = vec![0f32; bsz * d];
+        for (s, (c, &tok)) in cs.iter().zip(tokens).enumerate() {
+            let e = &embed.data()[(tok as usize) * d..(tok as usize) * d + d];
+            let p = &pos.data()[c.t * d..(c.t + 1) * d];
+            for j in 0..d {
+                h[s * d + j] = e[j] + p[j];
+            }
+        }
+        let mut row = Vec::new();
+        for l in 0..cfg.n_layer {
+            let ln1 = layer_tensor(w, l, "ln1")?;
+            let x1 = rmsnorm_rows(&h, ln1.data(), d);
+            let wq = layer_tensor(w, l, "attn.wq")?;
+            let wk = layer_tensor(w, l, "attn.wk")?;
+            let wv = layer_tensor(w, l, "attn.wv")?;
+            let wo = layer_tensor(w, l, "attn.wo")?;
+            // projection weights shared across the batch: one [B, d] x
+            // [d, d] GEMM each (row-identical to B single-row products)
+            let q = mm(&x1, wq.data(), bsz, d, d, threads);
+            let knew = mm(&x1, wk.data(), bsz, d, d, threads);
+            let vnew = mm(&x1, wv.data(), bsz, d, d, threads);
+            // scores stay per-sequence, each against its own cached K/V
+            let mut ctx = vec![0f32; bsz * d];
+            for (s, c) in cs.iter_mut().enumerate() {
+                c.k[l].extend_from_slice(&knew[s * d..(s + 1) * d]);
+                c.v[l].extend_from_slice(&vnew[s * d..(s + 1) * d]);
+                let i = c.t; // the new token's position in this sequence
+                ensure!(c.k[l].len() == (i + 1) * d, "kv cache length out of sync");
+                attention_row_cached(
+                    cfg,
+                    &q[s * d..(s + 1) * d],
+                    &c.k[l],
+                    &c.v[l],
+                    i,
+                    &mut ctx[s * d..(s + 1) * d],
+                    &mut row,
+                );
+            }
+            let a = mm(&ctx, wo.data(), bsz, d, d, threads);
+            for (hv, av) in h.iter_mut().zip(&a) {
+                *hv += av;
+            }
+            let ln2 = layer_tensor(w, l, "ln2")?;
+            let hf = rmsnorm_rows(&h, ln2.data(), d);
+            let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
+            let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
+            let y = moe_decode_batch(
+                cfg, w, l, &hf, bsz, mask_l, remap_l, m.n_slots, threads, &mut cs,
+            )?;
+            for (hv, yv) in h.iter_mut().zip(&y) {
+                *hv += yv;
+            }
+        }
+        let ln_f = w.get("ln_f")?;
+        let hn = rmsnorm_rows(&h, ln_f.data(), d);
+        let logits = mm(&hn, m.embed_t(cfg)?, bsz, d, cfg.vocab, threads);
+        for c in cs.iter_mut() {
+            c.t += 1;
+        }
+        Ok(logits.chunks(cfg.vocab).map(<[f32]>::to_vec).collect())
     }
 }
 
@@ -285,75 +450,25 @@ impl Backend for NativeBackend {
         mask: &[f32],
         remap: Option<&[i32]>,
     ) -> Result<Vec<f32>> {
-        let m: &NativeModel = downcast_state(state, self.name())?;
-        let c: &mut NativeKvCache = downcast_cache_mut(cache, self.name())?;
-        let cfg = &self.cfg;
-        ensure!(
-            mask.len() == cfg.n_layer * cfg.n_exp,
-            "mask must be [{}, {}]",
-            cfg.n_layer,
-            cfg.n_exp
-        );
-        if let Some(rm) = remap {
-            ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
-        }
-        ensure!(c.k.len() == cfg.n_layer, "kv cache layer count mismatch");
-        let d = cfg.d;
-        let w = &m.weights;
-        let pos_i = c.t; // the new token's position
-        let total = c.t + 1;
-        let pos = w.get("pos")?;
-        ensure!(
-            pos.shape()[0] >= total,
-            "sequence length {total} exceeds t_max {}",
-            pos.shape()[0]
-        );
-        let embed = w.get("embed")?;
-        ensure!(
-            token >= 0 && (token as usize) < cfg.vocab,
-            "token id {token} out of vocab range {}",
-            cfg.vocab
-        );
-        let mut h = vec![0f32; d];
-        let e = &embed.data()[(token as usize) * d..(token as usize) * d + d];
-        let p = &pos.data()[pos_i * d..(pos_i + 1) * d];
-        for j in 0..d {
-            h[j] = e[j] + p[j];
-        }
-        for l in 0..cfg.n_layer {
-            let ln1 = layer_tensor(w, l, "ln1")?;
-            let x1 = rmsnorm_rows(&h, ln1.data(), d);
-            let a = attention_step(cfg, w, l, &x1, pos_i, &mut c.k[l], &mut c.v[l])?;
-            for (hv, av) in h.iter_mut().zip(&a) {
-                *hv += av;
-            }
-            let ln2 = layer_tensor(w, l, "ln2")?;
-            let hf = rmsnorm_rows(&h, ln2.data(), d);
-            let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
-            let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
-            let cap = cfg.capacity(total, m.n_slots);
-            let y = moe_layer(
-                cfg,
-                w,
-                l,
-                &hf,
-                1,
-                mask_l,
-                remap_l,
-                m.n_slots,
-                1,
-                &mut c.counts[l],
-                cap,
-            )?;
-            for (hv, yv) in h.iter_mut().zip(&y) {
-                *hv += yv;
-            }
-        }
-        let ln_f = w.get("ln_f")?;
-        let hn = rmsnorm_rows(&h, ln_f.data(), d);
-        let logits = mm(&hn, m.embed_t(cfg)?, 1, d, cfg.vocab, 1);
-        c.t = total;
-        Ok(logits)
+        // a batch of one: the single-sequence path IS the batched path, so
+        // batched-vs-sequential bit-identity holds by construction (and the
+        // decode hot path shares the prefill thread-gating policy instead
+        // of the old hardcoded threads = 1)
+        let mut caches: [&mut dyn KvCache; 1] = [cache];
+        let mut rows = self.run_decode_batch(state, &mut caches, &[token], mask, remap)?;
+        Ok(rows.pop().expect("one logits row per sequence"))
+    }
+
+    fn run_decode_batch(
+        &self,
+        state: &dyn ModelState,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let threads = self.auto_threads(caches.len());
+        self.run_decode_batch_with(state, caches, tokens, mask, remap, threads)
     }
 }
 
@@ -475,34 +590,26 @@ fn attention_seq(
     Ok((mm(&ctx, wo.data(), t, d, d, threads), k, v))
 }
 
-/// One causal-attention row for the token at position `i`, against the
-/// cached K/V of positions `0..i` (which this call extends with the new
-/// token's own K/V rows). `x` is the new token's pre-projected `[d]` row.
-/// Operation for operation the `i`-th row of [`attention_seq`], so the
-/// result is bit-identical to the full-sequence forward.
-fn attention_step(
+/// One causal-attention context row for the token at position `i`,
+/// scored against the cached K/V rows of positions `0..=i` (the caller
+/// has already appended the new token's own K/V). `q` is the token's
+/// projected `[d]` query row; the per-head softmax combine is written
+/// into `ctx` (`[d]`, assumed zeroed). `row` is caller-owned score
+/// scratch so the per-step hot loop stays allocation-free. Operation for
+/// operation the `i`-th row of [`attention_seq`], so the result is
+/// bit-identical to the full-sequence forward.
+fn attention_row_cached(
     cfg: &ModelCfg,
-    w: &Weights,
-    layer: usize,
-    x: &[f32],
+    q: &[f32],
+    kbuf: &[f32],
+    vbuf: &[f32],
     i: usize,
-    kbuf: &mut Vec<f32>,
-    vbuf: &mut Vec<f32>,
-) -> Result<Vec<f32>> {
+    ctx: &mut [f32],
+    row: &mut Vec<f32>,
+) {
     let d = cfg.d;
     let hd = d / cfg.heads;
-    ensure!(hd * cfg.heads == d, "heads must divide d");
-    let wq = layer_tensor(w, layer, "attn.wq")?;
-    let wk = layer_tensor(w, layer, "attn.wk")?;
-    let wv = layer_tensor(w, layer, "attn.wv")?;
-    let wo = layer_tensor(w, layer, "attn.wo")?;
-    let q = mm(x, wq.data(), 1, d, d, 1);
-    kbuf.extend_from_slice(&mm(x, wk.data(), 1, d, d, 1));
-    vbuf.extend_from_slice(&mm(x, wv.data(), 1, d, d, 1));
-    ensure!(kbuf.len() == (i + 1) * d, "kv cache length out of sync");
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut ctx = vec![0f32; d];
-    let mut row = Vec::with_capacity(i + 1);
     for head in 0..cfg.heads {
         let off = head * hd;
         let qi = &q[off..off + hd];
@@ -528,7 +635,6 @@ fn attention_step(
             }
         }
     }
-    Ok(mm(&ctx, wo.data(), 1, d, d, 1))
 }
 
 /// Eq. (3): top-k router selection over one masked logit row as k rounds
@@ -651,6 +757,31 @@ fn moe_layer(
             }
         }
     }
+    moe_execute(cfg, w, layer, hf, tok, &per_slot, n_slots, threads)
+}
+
+/// Execute a routed dispatch: one grouped SwiGLU GEMM per expert over its
+/// gathered token rows, gated-combined back into `y` in
+/// (expert-ascending, queue-order) order, plus `dssim`'s always-on shared
+/// expert. Shared **verbatim** by the scoring/prefill path
+/// ([`moe_layer`]) and the batched decode path ([`moe_decode_batch`]), so
+/// the FFN execution semantics have a single source of truth — only the
+/// routing loops differ between the two (one capacity queue spanning a
+/// whole scoring batch vs. one per sequence), which is what keeps the
+/// batched-vs-sequential bit-identity contract safe against one-sided
+/// edits.
+#[allow(clippy::too_many_arguments)]
+fn moe_execute(
+    cfg: &ModelCfg,
+    w: &Weights,
+    layer: usize,
+    hf: &[f32],
+    tok: usize,
+    per_slot: &[Vec<(usize, f32)>],
+    n_slots: usize,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let d = cfg.d;
     let wg = layer_tensor(w, layer, "exp.wg")?;
     let wu = layer_tensor(w, layer, "exp.wu")?;
     let wd = layer_tensor(w, layer, "exp.wd")?;
@@ -662,10 +793,8 @@ fn moe_layer(
             continue;
         }
         let c = assigned.len();
-        let mut x = vec![0f32; c * d];
-        for (ri, &(ti, _)) in assigned.iter().enumerate() {
-            x[ri * d..(ri + 1) * d].copy_from_slice(&hf[ti * d..(ti + 1) * d]);
-        }
+        let rows: Vec<usize> = assigned.iter().map(|&(ti, _)| ti).collect();
+        let x = gather_rows(hf, d, &rows);
         let (out, _) = swiglu_block(
             &x,
             &wg.data()[e * d * m..(e + 1) * d * m],
@@ -687,6 +816,74 @@ fn moe_layer(
         add_shared_expert(cfg, w, layer, hf, tok, threads, &mut y)?;
     }
     Ok(y)
+}
+
+/// One SMoE FFN block over a **decode batch**: `hf` holds one `[d]` row
+/// per active sequence, each carrying its own cumulative dispatch counts
+/// and capacity (capacity depends on a sequence's *own* total length, so
+/// it differs across a mixed-length batch).
+///
+/// The routing GEMM is shared across the batch; the selection, the
+/// token-major queue update and the gated combine happen per sequence in
+/// exactly the order the single-sequence [`moe_layer`] uses — only the
+/// expert execution is fused: routed rows from all sequences are gathered
+/// into one block per expert and run through a single SwiGLU GEMM. The
+/// combine then scatters rows back per sequence in (expert-ascending,
+/// selection-order) order, which is the same per-sequence f32
+/// accumulation sequence as B separate calls — hence bit-identity.
+#[allow(clippy::too_many_arguments)]
+fn moe_decode_batch(
+    cfg: &ModelCfg,
+    w: &Weights,
+    layer: usize,
+    hf: &[f32],
+    bsz: usize,
+    mask_l: &[f32],
+    remap_l: Option<&[i32]>,
+    n_slots: usize,
+    threads: usize,
+    cs: &mut [&mut NativeKvCache],
+) -> Result<Vec<f32>> {
+    let d = cfg.d;
+    let n = cfg.n_exp;
+    let router = layer_tensor(w, layer, "router")?;
+    ensure!(router.shape() == [d, n], "router shape mismatch at layer {layer}");
+    let logits = mm(hf, router.data(), bsz, d, n, threads);
+    let mut per_slot: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_slots];
+    let mut masked = vec![0f32; n];
+    let mut idx = Vec::with_capacity(cfg.k);
+    let mut probs = Vec::with_capacity(cfg.k);
+    let mut scratch = Vec::with_capacity(n);
+    for (s, c) in cs.iter_mut().enumerate() {
+        ensure!(
+            c.counts[layer].len() == n_slots,
+            "dispatch counts must cover {n_slots} slots"
+        );
+        // capacity at THIS sequence's new total length, against its own
+        // cumulative token-major queue — identical to the sequential path
+        let cap = cfg.capacity(c.t + 1, n_slots);
+        let row = &logits[s * n..(s + 1) * n];
+        for e in 0..n {
+            masked[e] = row[e] + mask_l[e];
+        }
+        route_topk(&masked, cfg.k, &mut idx, &mut probs, &mut scratch);
+        let counts = &mut c.counts[layer];
+        for j in 0..cfg.k {
+            let slot = match remap_l {
+                Some(rm) => rm[idx[j]] as usize,
+                None => idx[j],
+            };
+            ensure!(slot < n_slots, "remap slot {slot} out of range {n_slots}");
+            let qpos = counts[slot];
+            counts[slot] += 1;
+            if qpos < cap {
+                per_slot[slot].push((s, probs[j]));
+            }
+        }
+    }
+    // grouped execution: all sequences routed to an expert run as one
+    // block, through the exact code the scoring/prefill path uses
+    moe_execute(cfg, w, layer, hf, bsz, &per_slot, n_slots, threads)
 }
 
 /// `dssim`'s always-on shared expert: `y += swiglu(hf, shared.*)`.

@@ -185,4 +185,23 @@ impl Backend for PjrtBackend {
              to \"native\")"
         ))
     }
+
+    fn run_decode_batch(
+        &self,
+        _state: &dyn ModelState,
+        _caches: &mut [&mut dyn KvCache],
+        _tokens: &[i32],
+        _mask: &[f32],
+        _remap: Option<&[i32]>,
+    ) -> Result<Vec<Vec<f32>>> {
+        // Batched decode rides the same missing incremental entry points as
+        // run_prefill/run_decode: lowering a [B, 1] decode executable that
+        // takes the cached K/V as parameters is part of the same tracked
+        // follow-up (see SERVING.md, "PJRT status").
+        Err(anyhow!(
+            "the pjrt backend has no incremental prefill/decode HLO entry points; \
+             run generation on the native backend (unset HCSMOE_BACKEND or set it \
+             to \"native\")"
+        ))
+    }
 }

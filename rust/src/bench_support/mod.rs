@@ -270,18 +270,76 @@ impl GenerateBenchRow {
     }
 }
 
+/// One batched-continuous-decode measurement row for the
+/// `decode_batch_sweep` section of `BENCH_generate.json`: `batch`
+/// sequences are each advanced `decode_tokens` steps, once through a
+/// per-sequence `run_decode` loop (the pre-batching executor) and once
+/// through `run_decode_batch` (one call per step advancing all
+/// sequences). The two paths produce bit-identical logits; the sweep
+/// measures what the batching buys in wall-clock.
+#[derive(Debug, Clone)]
+pub struct DecodeBatchRow {
+    /// Concurrent sequences advanced per step.
+    pub batch: usize,
+    /// Prompt tokens prefilled per sequence (untimed).
+    pub prompt_tokens: usize,
+    /// Decode steps per sequence in the timed region.
+    pub decode_tokens: usize,
+    /// Median wall-clock of the per-sequence `run_decode` loop.
+    pub seq_ms: f64,
+    /// Median wall-clock of the batched `run_decode_batch` loop.
+    pub batch_ms: f64,
+}
+
+impl DecodeBatchRow {
+    /// Total tokens advanced in the timed region (`batch × decode_tokens`).
+    pub fn total_tokens(&self) -> usize {
+        self.batch * self.decode_tokens
+    }
+
+    /// Per-sequence-loop throughput in tokens per second.
+    pub fn seq_tok_s(&self) -> f64 {
+        if self.seq_ms > 0.0 {
+            self.total_tokens() as f64 / (self.seq_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Batched throughput in tokens per second.
+    pub fn batch_tok_s(&self) -> f64 {
+        if self.batch_ms > 0.0 {
+            self.total_tokens() as f64 / (self.batch_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Sequential-over-batched wall-clock ratio (> 1 means batching wins).
+    pub fn speedup(&self) -> f64 {
+        if self.batch_ms > 0.0 {
+            self.seq_ms / self.batch_ms
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Write the machine-readable generation-throughput report
 /// (`BENCH_generate.json`). Hand-rolled JSON like [`write_parallel_json`];
 /// the schema is stable — later PRs append rows with new `path`/`variant`
 /// names rather than reshaping the file. Comparing `decode_cached` vs
 /// `decode_uncached` rows at the same (variant, decode_tokens) shows the
-/// O(t) vs O(t²) gap the KV cache buys.
+/// O(t) vs O(t²) gap the KV cache buys; the `decode_batch_sweep` section
+/// compares batched continuous decode against the per-sequence loop at
+/// B ∈ {1, 2, 4, 8} (CI asserts batched ≥ sequential at B = 4).
 pub fn write_generate_json(
     path: &str,
     threads: usize,
     generator: &str,
     note: &str,
     rows: &[GenerateBenchRow],
+    batch_rows: &[DecodeBatchRow],
 ) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -306,6 +364,24 @@ pub fn write_generate_json(
             r.parallel_ms,
             r.serial_tok_s(),
             r.parallel_tok_s()
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"decode_batch_sweep\": [\n");
+    for (i, r) in batch_rows.iter().enumerate() {
+        let comma = if i + 1 < batch_rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"batch\": {}, \"prompt_tokens\": {}, \"decode_tokens\": {}, \
+             \"seq_ms\": {:.4}, \"batch_ms\": {:.4}, \
+             \"seq_tok_s\": {:.1}, \"batch_tok_s\": {:.1}, \"speedup\": {:.3}}}{comma}\n",
+            r.batch,
+            r.prompt_tokens,
+            r.decode_tokens,
+            r.seq_ms,
+            r.batch_ms,
+            r.seq_tok_s(),
+            r.batch_tok_s(),
+            r.speedup()
         ));
     }
     out.push_str("  ]\n}\n");

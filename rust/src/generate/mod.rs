@@ -95,6 +95,24 @@ impl SamplingParams {
             eos,
         }
     }
+
+    /// Reject degenerate parameters up front: [`Strategy::TopK`] needs
+    /// `k >= 1` and a finite `temperature > 0`. (`k` larger than the
+    /// vocabulary is legal — it clamps to the full vocabulary at sampling
+    /// time.) Every driver calls this before running — the offline
+    /// [`generate`]/[`generate_compact`] loops error out, and the serving
+    /// executor answers the request with the error instead of letting a
+    /// bad parameter panic or sample garbage on the executor thread.
+    pub fn validate(&self) -> Result<()> {
+        if let Strategy::TopK { k, temperature, .. } = self.strategy {
+            ensure!(k >= 1, "top-k sampling needs k >= 1 (got k = 0)");
+            ensure!(
+                temperature.is_finite() && temperature > 0.0,
+                "top-k sampling needs a finite temperature > 0 (got {temperature})"
+            );
+        }
+        Ok(())
+    }
 }
 
 /// One finished generation.
@@ -202,6 +220,11 @@ impl Session {
         match self.params.strategy {
             Strategy::Greedy => argmax_first(logits) as i32,
             Strategy::TopK { k, temperature, .. } => {
+                // deterministic clamps behind the validate() gate: k stays
+                // within the vocabulary, and a non-finite/non-positive
+                // temperature (possible via direct struct construction)
+                // degrades to near-greedy instead of inverting the
+                // distribution or propagating NaN
                 let k = k.max(1).min(logits.len());
                 let temp = temperature.max(1e-6);
                 // k rounds of first-wins argmax (the route_topk idiom)
@@ -225,6 +248,12 @@ impl Session {
                         e
                     })
                     .collect();
+                // a degenerate row (all -inf, or NaN logits) makes every
+                // exp weight 0 or NaN: fall back to the deterministic
+                // greedy pick rather than sampling from garbage
+                if !z.is_finite() || z <= 0.0 {
+                    return argmax_first(logits) as i32;
+                }
                 let u = self.rng.next_f64() * z;
                 let mut acc = 0f64;
                 for (j, &e) in exps.iter().enumerate() {
@@ -311,6 +340,7 @@ fn run_loop(
     prefill: impl FnOnce() -> Result<(Box<dyn KvCache>, Vec<f32>)>,
     mut decode: impl FnMut(&mut dyn KvCache, i32) -> Result<Vec<f32>>,
 ) -> Result<Generated> {
+    params.validate()?;
     let t0 = Instant::now();
     let (mut cache, mut logits) = prefill()?;
     let prefill_s = t0.elapsed().as_secs_f64();
@@ -388,6 +418,51 @@ mod tests {
         // top-4 of these logits are indices 12..16
         for t in run(9) {
             assert!((12..16).contains(&t), "sampled {t} outside top-k");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_params() {
+        // k = 0: no candidate to sample from
+        assert!(SamplingParams::top_k(0, 0.8, 1, 4, None).validate().is_err());
+        // temperature <= 0 or non-finite: softmax is undefined/inverted
+        assert!(SamplingParams::top_k(4, 0.0, 1, 4, None).validate().is_err());
+        assert!(SamplingParams::top_k(4, -1.0, 1, 4, None).validate().is_err());
+        assert!(SamplingParams::top_k(4, f32::NAN, 1, 4, None).validate().is_err());
+        assert!(SamplingParams::top_k(4, f32::INFINITY, 1, 4, None).validate().is_err());
+        // legal: greedy always, and k beyond the vocabulary (clamped later)
+        assert!(SamplingParams::greedy(4, None).validate().is_ok());
+        assert!(SamplingParams::top_k(1_000_000, 0.8, 1, 4, None).validate().is_ok());
+    }
+
+    #[test]
+    fn topk_k_beyond_vocab_clamps_to_full_row() {
+        let logits = [0.3f32, -0.1, 0.9, 0.2];
+        let mut s = Session::new(SamplingParams::top_k(1000, 0.7, 11, 16, None));
+        let mut out = Vec::new();
+        while let Some(t) = s.advance(&logits, out.len() + 1, 64) {
+            out.push(t);
+        }
+        assert_eq!(s.tokens().len(), 16);
+        for &t in s.tokens() {
+            assert!((0..4).contains(&t), "sampled {t} outside the 4-token vocab");
+        }
+    }
+
+    #[test]
+    fn all_neg_inf_logits_fall_back_deterministically() {
+        let logits = [f32::NEG_INFINITY; 6];
+        for seed in [1u64, 2, 3] {
+            let mut s = Session::new(SamplingParams::top_k(3, 0.8, seed, 4, None));
+            // no panic, and a deterministic in-vocab pick (greedy fallback:
+            // first index) regardless of the seed
+            assert_eq!(s.advance(&logits, 1, 64), Some(0));
+        }
+        // mixed rows keep sampling from the finite candidates only
+        let mixed = [f32::NEG_INFINITY, 2.0, f32::NEG_INFINITY, 1.5];
+        let mut s = Session::new(SamplingParams::top_k(3, 0.8, 9, 8, None));
+        while let Some(t) = s.advance(&mixed, s.tokens().len() + 1, 64) {
+            assert!(t == 1 || t == 3, "sampled a -inf candidate: {t}");
         }
     }
 

@@ -139,6 +139,22 @@ impl ModelContext {
             .run_decode(model.state.as_ref(), cache, token, &model.mask, None)
     }
 
+    /// Advance a set of incremental sequences by one token each in a
+    /// single batched call (`Backend::run_decode_batch`) — the serving
+    /// executor's continuous-batching hot path. Returns one `[vocab]`
+    /// logits row per cache, index-aligned with `caches`/`tokens`; each
+    /// row is bit-identical to what a standalone [`Self::decode`] on that
+    /// cache would produce.
+    pub fn decode_batch(
+        &self,
+        model: &LoadedModel,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.backend
+            .run_decode_batch(model.state.as_ref(), caches, tokens, &model.mask, None)
+    }
+
     /// [`Self::prefill`] on a compact r-expert variant.
     pub fn prefill_compact(
         &self,
@@ -166,6 +182,23 @@ impl ModelContext {
         let mask = self.full_mask();
         self.backend
             .run_decode(model.state.as_ref(), cache, token, &mask, Some(&model.remap))
+    }
+
+    /// [`Self::decode_batch`] on a compact r-expert variant.
+    pub fn decode_batch_compact(
+        &self,
+        model: &CompactModel,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mask = self.full_mask();
+        self.backend.run_decode_batch(
+            model.state.as_ref(),
+            caches,
+            tokens,
+            &mask,
+            Some(&model.remap),
+        )
     }
 
     /// The base weights as a lazily prepared resident variant (the

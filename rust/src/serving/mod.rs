@@ -10,9 +10,14 @@
 //! * **Generate requests** ride a *continuous batcher* (vLLM-style): each
 //!   accepted request is prefilled into its own KV cache and joins the
 //!   running decode set; every executor iteration advances **all** active
-//!   sequences by one token, and sequences leave the set the moment they
-//!   hit a stop condition — no sequence waits for a "batch" to finish.
-//!   Score batches interleave between decode steps.
+//!   sequences by one token in a **single batched call**
+//!   ([`crate::backend::Backend::run_decode_batch`] — shared projection
+//!   GEMMs, per-expert grouped SwiGLU), and sequences leave the set the
+//!   moment they hit a stop condition — no sequence waits for a "batch"
+//!   to finish. Score batches interleave between decode steps.
+//!   Admissions are **budgeted**: at most one prompt prefill runs between
+//!   decode steps, so a burst of long prompts queues behind the budget
+//!   instead of stalling every active sequence (head-of-line fairness).
 //!
 //! A single executor thread owns all execution state (required for the
 //! PJRT backend, whose xla handles are not `Send`; the native backend
@@ -23,6 +28,7 @@
 //! architecture (request lifecycle, batching policies, KV-cache memory
 //! accounting, metrics definitions) is documented in `SERVING.md`.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -148,6 +154,11 @@ pub struct Metrics {
     pub prefill_ns: AtomicU64,
     /// Nanoseconds spent in decode steps.
     pub decode_ns: AtomicU64,
+    /// Batched decode iterations executed (each advances every active
+    /// sequence by one token). `gen_tokens / decode_steps` is therefore
+    /// the mean decode-batch occupancy — how much concurrency the batched
+    /// step actually captured.
+    pub decode_steps: AtomicU64,
 }
 
 impl Metrics {
@@ -164,6 +175,7 @@ impl Metrics {
             gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
             prefill_s: self.prefill_ns.load(Ordering::Relaxed) as f64 / 1e9,
             decode_s: self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            decode_steps: self.decode_steps.load(Ordering::Relaxed),
         }
     }
 }
@@ -191,6 +203,8 @@ pub struct MetricsSnapshot {
     pub prefill_s: f64,
     /// Seconds spent in decode steps.
     pub decode_s: f64,
+    /// Batched decode iterations executed.
+    pub decode_steps: u64,
 }
 
 impl MetricsSnapshot {
@@ -234,6 +248,16 @@ impl MetricsSnapshot {
     pub fn ms_per_token(&self) -> f64 {
         if self.gen_tokens > 0 {
             self.decode_s * 1e3 / self.gen_tokens as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean decode-batch occupancy: tokens advanced per batched decode
+    /// iteration (1.0 = the batcher never saw concurrent sequences).
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps > 0 {
+            self.gen_tokens as f64 / self.decode_steps as f64
         } else {
             0.0
         }
@@ -393,13 +417,25 @@ fn executor_loop(
 }
 
 impl Executor {
-    /// The main loop: intake → (score flush when due) → one decode step
-    /// across every active sequence — so decode requests join and leave
-    /// the running batch on step boundaries while score batches interleave.
+    /// The main loop: intake → (score flush when due) → at most ONE
+    /// prefill admission → one **batched** decode step across every
+    /// active sequence — so decode requests join and leave the running
+    /// batch on step boundaries while score batches interleave.
+    ///
+    /// Admissions are deliberately budgeted instead of running inside the
+    /// intake drain: a prefill costs O(prompt²) attention while a decode
+    /// step costs O(t) per sequence, so draining a burst of long prompts
+    /// synchronously (the old design) froze every active sequence for the
+    /// whole burst. With the budget, an in-flight sequence falls at most
+    /// one prefill behind per iteration (`rust/tests/decode_batch.rs`
+    /// pins the regression).
     fn run(&self, rx: Receiver<Request>, stop: Arc<AtomicBool>) -> Result<()> {
         let mut pendings: Vec<Pending> = Vec::new();
         let mut queue: Vec<(usize, usize, RowSpec)> = Vec::new();
         let mut active: Vec<ActiveGen> = Vec::new();
+        // generation requests accepted but not yet prefilled (admission
+        // budget: one per loop iteration)
+        let mut admissions: VecDeque<GenerateRequest> = VecDeque::new();
         // enqueue time of the oldest unflushed score request
         let mut oldest: Option<Instant> = None;
         let mut disconnected = false;
@@ -408,9 +444,10 @@ impl Executor {
                 break;
             }
             if !disconnected {
-                // Block only when there is nothing to advance; while
-                // sequences are decoding, drain without waiting.
-                let wait = if !active.is_empty() {
+                // Block only when there is nothing to advance or admit;
+                // while sequences decode or prefills wait, drain without
+                // waiting.
+                let wait = if !active.is_empty() || !admissions.is_empty() {
                     Duration::ZERO
                 } else if let Some(o) = oldest {
                     self.batcher.max_wait.saturating_sub(o.elapsed()).min(POLL)
@@ -419,16 +456,22 @@ impl Executor {
                 };
                 match rx.recv_timeout(wait) {
                     Ok(req) => {
-                        self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut active);
+                        self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut admissions);
                         while let Ok(req) = rx.try_recv() {
-                            self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut active);
+                            self.intake(
+                                req,
+                                &mut pendings,
+                                &mut queue,
+                                &mut oldest,
+                                &mut admissions,
+                            );
                         }
                     }
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                     Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
                 }
             }
-            if disconnected && active.is_empty() && queue.is_empty() {
+            if disconnected && active.is_empty() && queue.is_empty() && admissions.is_empty() {
                 break;
             }
             let flush_due = !queue.is_empty()
@@ -439,6 +482,10 @@ impl Executor {
                 self.flush(&mut pendings, &mut queue)?;
                 oldest = None;
             }
+            // bounded admission: at most one prefill between decode steps
+            if let Some(req) = admissions.pop_front() {
+                self.admit(req, &mut active);
+            }
             if !active.is_empty() {
                 self.step(&mut active);
             }
@@ -447,14 +494,15 @@ impl Executor {
     }
 
     /// Route one incoming request: score rows to the dynamic-batch queue,
-    /// generations through prefill into the continuous batch.
+    /// generations to the admission queue (prefilled later under the
+    /// per-iteration budget).
     fn intake(
         &self,
         req: Request,
         pendings: &mut Vec<Pending>,
         queue: &mut Vec<(usize, usize, RowSpec)>,
         oldest: &mut Option<Instant>,
-        active: &mut Vec<ActiveGen>,
+        admissions: &mut VecDeque<GenerateRequest>,
     ) {
         match req {
             Request::Score(req) => {
@@ -482,12 +530,23 @@ impl Executor {
                     queue.push((pi, ri, row));
                 }
             }
-            Request::Generate(req) => self.admit(req, active),
+            // degenerate sampling parameters are answered immediately at
+            // intake — they never enter the admission queue, so they can
+            // neither delay their own error reply nor burn the one
+            // prefill-per-iteration budget slot (and they don't count as
+            // accepted in gen_requests)
+            Request::Generate(req) => match req.params.validate() {
+                Ok(()) => admissions.push_back(req),
+                Err(e) => {
+                    let _ = req.reply.send(Err(e));
+                }
+            },
         }
     }
 
     /// Prefill one generation request and add it to the continuous batch
     /// (or answer immediately when it finishes within the first sample).
+    /// Sampling parameters were already validated at intake.
     fn admit(&self, req: GenerateRequest, active: &mut Vec<ActiveGen>) {
         self.metrics.gen_requests.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
@@ -536,9 +595,50 @@ impl Executor {
         }
     }
 
-    /// One decode step for every active sequence; finished sequences are
-    /// answered and leave the batch immediately.
+    /// One **batched** decode step advancing every active sequence by one
+    /// token (`ModelContext::decode_batch`: shared projection GEMMs,
+    /// per-expert grouped SwiGLU across sequences); finished sequences are
+    /// answered and leave the batch immediately. Each sequence's reported
+    /// `decode_s` is its equal share of the batched step wall-clock.
+    ///
+    /// If the batched call itself fails, fall back to per-sequence decode
+    /// so a single poisoned sequence is evicted with its error instead of
+    /// failing the whole batch.
     fn step(&self, active: &mut Vec<ActiveGen>) {
+        let bsz = active.len();
+        let tokens: Vec<i32> = active.iter().map(|a| a.next).collect();
+        let t0 = Instant::now();
+        let rows = {
+            let mut caches: Vec<&mut dyn KvCache> =
+                active.iter_mut().map(|a| a.cache.as_mut()).collect();
+            self.ctx.decode_batch(&self.model, &mut caches, &tokens)
+        };
+        let rows = match rows {
+            Ok(rows) => rows,
+            Err(_) => return self.step_sequential(active),
+        };
+        let dt = t0.elapsed();
+        self.metrics.decode_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        self.metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.metrics.gen_tokens.fetch_add(bsz as u64, Ordering::Relaxed);
+        let share = dt.as_secs_f64() / bsz as f64;
+        for (mut a, logits) in std::mem::take(active).into_iter().zip(rows) {
+            a.decode_s += share;
+            match a.session.advance(&logits, a.cache.seq_len(), self.ctx.cfg.t_max) {
+                Some(next) => {
+                    a.next = next;
+                    active.push(a);
+                }
+                None => self.finish_gen(a),
+            }
+        }
+    }
+
+    /// Per-sequence decode fallback: only reached when the batched step
+    /// errors, to isolate and evict the offending sequence while the rest
+    /// keep decoding.
+    fn step_sequential(&self, active: &mut Vec<ActiveGen>) {
+        self.metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
         let mut i = 0;
         while i < active.len() {
             let a = &mut active[i];
@@ -562,19 +662,24 @@ impl Executor {
                 }
                 None => {
                     let a = active.swap_remove(i);
-                    self.metrics
-                        .queue_ns
-                        .fetch_add(a.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    let finish = a.session.finish().expect("finished session");
-                    let _ = a.reply.send(Ok(Generated {
-                        tokens: a.session.into_tokens(),
-                        finish,
-                        prefill_s: a.prefill_s,
-                        decode_s: a.decode_s,
-                    }));
+                    self.finish_gen(a);
                 }
             }
         }
+    }
+
+    /// Answer one finished generation and record its queue latency.
+    fn finish_gen(&self, a: ActiveGen) {
+        self.metrics
+            .queue_ns
+            .fetch_add(a.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let finish = a.session.finish().expect("finished session");
+        let _ = a.reply.send(Ok(Generated {
+            tokens: a.session.into_tokens(),
+            finish,
+            prefill_s: a.prefill_s,
+            decode_s: a.decode_s,
+        }));
     }
 
     /// Execute the queued score rows as full batches and deliver finished

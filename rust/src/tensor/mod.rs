@@ -177,6 +177,19 @@ pub fn cosine_dist(a: &[f32], b: &[f32]) -> f32 {
     1.0 - cosine_sim(a, b)
 }
 
+/// Gather rows of a row-major `[*, row_len]` buffer into a dense block —
+/// the MoE dispatch primitive: routed token rows are packed contiguously
+/// so each expert runs one grouped GEMM instead of per-token products.
+/// Row indices may repeat (a token routed to the same physical slot by
+/// two top-k selections appears twice).
+pub fn gather_rows(src: &[f32], row_len: usize, rows: &[usize]) -> Vec<f32> {
+    let mut out = vec![0f32; rows.len() * row_len];
+    for (dst, &r) in out.chunks_mut(row_len).zip(rows) {
+        dst.copy_from_slice(&src[r * row_len..(r + 1) * row_len]);
+    }
+    out
+}
+
 /// C[M,N] = A[M,K] @ B[K,N], simple ikj loop (cache-friendly) — the serial
 /// reference for [`matmul_blocked_with`].
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -344,6 +357,13 @@ mod tests {
         assert!((l2_dist(&a, &b) - 2f32.sqrt()).abs() < 1e-6);
         assert!(cosine_sim(&a, &b).abs() < 1e-6);
         assert!((cosine_dist(&a, &a)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gather_rows_packs_and_repeats() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 rows of len 2
+        assert_eq!(gather_rows(&src, 2, &[2, 0, 2]), vec![5.0, 6.0, 1.0, 2.0, 5.0, 6.0]);
+        assert!(gather_rows(&src, 2, &[]).is_empty());
     }
 
     #[test]

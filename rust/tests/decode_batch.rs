@@ -1,0 +1,500 @@
+//! Batched continuous-decode test suite.
+//!
+//! The headline contract: [`Backend::run_decode_batch`] advances B
+//! sequences one token in a single call and its per-sequence logits are
+//! **bit-identical** to B standalone [`Backend::run_decode`] calls — and,
+//! transitively, to the uncached full forward over each sequence's prefix.
+//! Pinned here across the full and compact expert layouts, under router
+//! masks, with the `dssim`-style shared expert, with mixed sequence
+//! lengths in one batch, and with sequences joining/leaving mid-stream.
+//! Plus the serving side: the executor actually batches decode under
+//! concurrent load (B > 1), and the bounded admission budget keeps a
+//! burst of long prompts from stalling an in-flight sequence (the
+//! head-of-line regression).
+
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use hc_smoe::backend::native::{forward_logits_with, NativeBackend};
+use hc_smoe::backend::{Backend, KvCache};
+use hc_smoe::bench_support::synthesize_artifacts;
+use hc_smoe::config::{Artifacts, ModelCfg};
+use hc_smoe::eval::Evaluator;
+use hc_smoe::generate::{generate, SamplingParams};
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::MASK_OFF;
+use hc_smoe::serving::{serve, BatcherConfig, GenerateRequest, Request, ServeSpec};
+use hc_smoe::weights::Weights;
+
+fn tiny_cfg(shared: bool) -> ModelCfg {
+    ModelCfg {
+        name: "dbatch".into(),
+        n_layer: 2,
+        d: 16,
+        m: 16,
+        n_exp: 4,
+        k: 2,
+        heads: 2,
+        vocab: 48,
+        t_max: 48,
+        shared,
+        m_shared: 16,
+        // k=2 distinct experts per token keeps every capacity queue below
+        // cap_factor=4 capacity — structurally drop-free, so cached,
+        // batched and uncached dispatch agree exactly at every prefix
+        cap_factor: 4.0,
+        block_c: 4,
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Synthesize one artifact set per test process (server-side tests).
+fn arts() -> Artifacts {
+    static DIR: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+    let dir = DIR.get_or_init(|| {
+        let p = std::env::temp_dir().join(format!("hcsmoe_dbatch_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        synthesize_artifacts(&p, 0xD8A7).expect("synthesize artifacts");
+        p
+    });
+    Artifacts::new(dir)
+}
+
+/// Drive the same token streams through (a) per-sequence `run_decode`, (b)
+/// one auto-gated `run_decode_batch` call per step, (c) the same batch at
+/// an explicit worker count (`run_decode_batch_with`), and (d) the
+/// uncached full forward at multiple thread counts, asserting bitwise
+/// equality everywhere. `prompts` may have mixed lengths.
+fn assert_batch_identity(
+    cfg: &ModelCfg,
+    w: &Weights,
+    n_slots: usize,
+    mask: &[f32],
+    remap: Option<&[i32]>,
+    prompts: &[Vec<i32>],
+    steps: usize,
+) {
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(w, n_slots).unwrap();
+    let v = cfg.vocab;
+    let feed = |s: usize, i: usize| -> i32 { ((3 + s * 11 + i * 7) % v) as i32 };
+
+    let mut seq_caches: Vec<Box<dyn KvCache>> = Vec::new();
+    let mut batch_caches: Vec<Box<dyn KvCache>> = Vec::new();
+    let mut threaded_caches: Vec<Box<dyn KvCache>> = Vec::new();
+    let mut seqs: Vec<Vec<i32>> = Vec::new();
+    for p in prompts {
+        seq_caches.push(backend.run_prefill(state.as_ref(), p, mask, remap).unwrap().0);
+        batch_caches.push(backend.run_prefill(state.as_ref(), p, mask, remap).unwrap().0);
+        threaded_caches.push(backend.run_prefill(state.as_ref(), p, mask, remap).unwrap().0);
+        seqs.push(p.clone());
+    }
+    for i in 0..steps {
+        let tokens: Vec<i32> = (0..prompts.len()).map(|s| feed(s, i)).collect();
+        let rows = {
+            let mut refs: Vec<&mut dyn KvCache> =
+                batch_caches.iter_mut().map(|c| c.as_mut()).collect();
+            backend
+                .run_decode_batch(state.as_ref(), &mut refs, &tokens, mask, remap)
+                .unwrap()
+        };
+        assert_eq!(rows.len(), prompts.len());
+        // the explicit-thread-count entry point is bit-identical too (the
+        // parallel determinism contract at the batch level)
+        let rows_threaded = {
+            let mut refs: Vec<&mut dyn KvCache> =
+                threaded_caches.iter_mut().map(|c| c.as_mut()).collect();
+            backend
+                .run_decode_batch_with(state.as_ref(), &mut refs, &tokens, mask, remap, 3)
+                .unwrap()
+        };
+        for (s, (row, trow)) in rows.iter().zip(&rows_threaded).enumerate() {
+            assert_eq!(
+                bits(row),
+                bits(trow),
+                "explicit-thread batch differs from auto-gated batch (seq {s}, step {i})"
+            );
+        }
+        for (s, row) in rows.iter().enumerate() {
+            let single = backend
+                .run_decode(state.as_ref(), seq_caches[s].as_mut(), tokens[s], mask, remap)
+                .unwrap();
+            assert_eq!(
+                bits(row),
+                bits(&single),
+                "batched row differs from sequential decode (seq {s}, step {i})"
+            );
+            seqs[s].push(tokens[s]);
+            assert_eq!(batch_caches[s].seq_len(), seqs[s].len());
+            for threads in [1usize, 4] {
+                let full = forward_logits_with(
+                    cfg,
+                    w,
+                    &seqs[s],
+                    1,
+                    seqs[s].len(),
+                    mask,
+                    remap,
+                    n_slots,
+                    threads,
+                )
+                .unwrap();
+                assert_eq!(
+                    bits(&full.data()[(seqs[s].len() - 1) * v..]),
+                    bits(row),
+                    "batched row differs from full forward (seq {s}, step {i}, threads {threads})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_matches_sequential_mixed_lengths_masked() {
+    let cfg = tiny_cfg(false);
+    let w = Weights::synthesize(&cfg, 31);
+    // prune one expert per layer through the router mask so the masked
+    // path is exercised under batching too
+    let mut mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    mask[1] = MASK_OFF;
+    mask[cfg.n_exp + 3] = MASK_OFF;
+    let v = cfg.vocab;
+    // mixed lengths in one batch: 3, 5 and 8-token prompts
+    let prompts: Vec<Vec<i32>> = [3usize, 5, 8]
+        .iter()
+        .map(|&len| (0..len).map(|i| ((2 + i * 5) % v) as i32).collect())
+        .collect();
+    assert_batch_identity(&cfg, &w, cfg.n_exp, &mask, None, &prompts, 8);
+}
+
+#[test]
+fn batched_matches_sequential_with_shared_expert() {
+    // the dssim-style always-on shared expert rides the batched path too
+    let cfg = tiny_cfg(true);
+    let w = Weights::synthesize(&cfg, 47);
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let v = cfg.vocab;
+    let prompts: Vec<Vec<i32>> = [4usize, 6]
+        .iter()
+        .map(|&len| (0..len).map(|i| ((7 + i * 3) % v) as i32).collect())
+        .collect();
+    assert_batch_identity(&cfg, &w, cfg.n_exp, &mask, None, &prompts, 6);
+}
+
+#[test]
+fn batched_matches_sequential_on_compact_variant() {
+    let cfg = tiny_cfg(false);
+    let w = Weights::synthesize(&cfg, 59);
+    let r = 2usize;
+    let keep: Vec<Vec<usize>> = vec![(0..r).collect(); cfg.n_layer];
+    let cw = w.to_compact(&cfg, &keep).unwrap();
+    let remap: Vec<i32> = (0..cfg.n_layer * cfg.n_exp)
+        .map(|i| ((i % cfg.n_exp) % r) as i32)
+        .collect();
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let v = cfg.vocab;
+    let prompts: Vec<Vec<i32>> = [5usize, 2, 7]
+        .iter()
+        .map(|&len| (0..len).map(|i| ((9 + i * 4) % v) as i32).collect())
+        .collect();
+    assert_batch_identity(&cfg, &cw, r, &mask, Some(&remap), &prompts, 8);
+}
+
+/// Join/leave harness state: the batched set, an independently advanced
+/// per-sequence reference set, and the logical ids of the live sequences.
+struct Stream {
+    batch: Vec<Box<dyn KvCache>>,
+    reference: Vec<Box<dyn KvCache>>,
+    ids: Vec<usize>,
+}
+
+fn stream_feed(v: usize, id: usize, i: usize) -> i32 {
+    ((5 + id * 13 + i * 3) % v) as i32
+}
+
+fn stream_join(
+    backend: &NativeBackend,
+    state: &dyn hc_smoe::backend::ModelState,
+    mask: &[f32],
+    v: usize,
+    id: usize,
+    st: &mut Stream,
+) {
+    let p: Vec<i32> = (0..4 + id).map(|i| ((1 + id * 7 + i * 5) % v) as i32).collect();
+    st.batch.push(backend.run_prefill(state, &p, mask, None).unwrap().0);
+    st.reference.push(backend.run_prefill(state, &p, mask, None).unwrap().0);
+    st.ids.push(id);
+}
+
+/// One batched step over the live set, checked bitwise against the
+/// per-sequence reference decode.
+fn stream_advance(
+    backend: &NativeBackend,
+    state: &dyn hc_smoe::backend::ModelState,
+    mask: &[f32],
+    v: usize,
+    step: usize,
+    st: &mut Stream,
+) {
+    let tokens: Vec<i32> = st.ids.iter().map(|&id| stream_feed(v, id, step)).collect();
+    let rows = {
+        let mut refs: Vec<&mut dyn KvCache> =
+            st.batch.iter_mut().map(|c| c.as_mut()).collect();
+        backend
+            .run_decode_batch(state, &mut refs, &tokens, mask, None)
+            .unwrap()
+    };
+    for (s, row) in rows.iter().enumerate() {
+        let single = backend
+            .run_decode(state, st.reference[s].as_mut(), tokens[s], mask, None)
+            .unwrap();
+        assert_eq!(
+            bits(row),
+            bits(&single),
+            "join/leave stream diverged (logical seq {}, step {step})",
+            st.ids[s]
+        );
+    }
+}
+
+#[test]
+fn sequences_join_and_leave_midstream() {
+    let cfg = tiny_cfg(false);
+    let w = Weights::synthesize(&cfg, 71);
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(&w, cfg.n_exp).unwrap();
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let v = cfg.vocab;
+    let mut st = Stream { batch: Vec::new(), reference: Vec::new(), ids: Vec::new() };
+
+    stream_join(&backend, state.as_ref(), &mask, v, 0, &mut st);
+    stream_join(&backend, state.as_ref(), &mask, v, 1, &mut st);
+    for step in 0..3 {
+        stream_advance(&backend, state.as_ref(), &mask, v, step, &mut st);
+    }
+    // a third sequence joins mid-stream on a step boundary...
+    stream_join(&backend, state.as_ref(), &mask, v, 2, &mut st);
+    for step in 3..6 {
+        stream_advance(&backend, state.as_ref(), &mask, v, step, &mut st);
+    }
+    // ...and the middle sequence leaves while the others keep decoding
+    st.batch.remove(1);
+    st.reference.remove(1);
+    st.ids.remove(1);
+    for step in 6..9 {
+        stream_advance(&backend, state.as_ref(), &mask, v, step, &mut st);
+    }
+    assert_eq!(st.ids, vec![0, 2]);
+}
+
+#[test]
+fn empty_batches_and_bad_requests_leave_caches_untouched() {
+    let cfg = tiny_cfg(false);
+    let w = Weights::synthesize(&cfg, 83);
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(&w, cfg.n_exp).unwrap();
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+
+    // an empty batch is a no-op, not an error
+    let mut none: Vec<&mut dyn KvCache> = Vec::new();
+    let rows = backend
+        .run_decode_batch(state.as_ref(), &mut none, &[], &mask, None)
+        .unwrap();
+    assert!(rows.is_empty());
+
+    let (mut ca, _) = backend.run_prefill(state.as_ref(), &[1, 2, 3], &mask, None).unwrap();
+    let (mut cb, _) = backend.run_prefill(state.as_ref(), &[4, 5], &mask, None).unwrap();
+
+    // token-count mismatch errors before any cache is touched
+    {
+        let mut refs: Vec<&mut dyn KvCache> = vec![ca.as_mut(), cb.as_mut()];
+        assert!(backend
+            .run_decode_batch(state.as_ref(), &mut refs, &[7], &mask, None)
+            .is_err());
+    }
+    assert_eq!((ca.seq_len(), cb.seq_len()), (3, 2));
+
+    // one out-of-vocab token poisons the whole request up front — the
+    // *other* sequence must not be left half-advanced either
+    {
+        let mut refs: Vec<&mut dyn KvCache> = vec![ca.as_mut(), cb.as_mut()];
+        assert!(backend
+            .run_decode_batch(state.as_ref(), &mut refs, &[7, -1], &mask, None)
+            .is_err());
+    }
+    assert_eq!((ca.seq_len(), cb.seq_len()), (3, 2));
+
+    // a remap table pointing at a nonexistent slot is rejected up front
+    // too (it used to fail mid-layer, after attention had already
+    // appended K/V for the whole batch)
+    {
+        let bad_remap: Vec<i32> = vec![cfg.n_exp as i32; cfg.n_layer * cfg.n_exp];
+        let mut refs: Vec<&mut dyn KvCache> = vec![ca.as_mut(), cb.as_mut()];
+        assert!(backend
+            .run_decode_batch(state.as_ref(), &mut refs, &[7, 8], &mask, Some(&bad_remap))
+            .is_err());
+    }
+    assert_eq!((ca.seq_len(), cb.seq_len()), (3, 2));
+
+    // and a well-formed follow-up still works on the same caches
+    let mut refs: Vec<&mut dyn KvCache> = vec![ca.as_mut(), cb.as_mut()];
+    let rows = backend
+        .run_decode_batch(state.as_ref(), &mut refs, &[7, 8], &mask, None)
+        .unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!((ca.seq_len(), cb.seq_len()), (4, 3));
+}
+
+#[test]
+fn server_batches_decode_under_concurrent_mixed_load() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let bench = hc_smoe::data::Benchmark::load(a.benchmark("arc_e")).unwrap();
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+        },
+        BatcherConfig {
+            max_rows: ctx.manifest.eval_b,
+            max_wait: Duration::from_millis(2),
+        },
+    )
+    .unwrap();
+
+    let prompt = [1i32, 4, 20, 3, 5];
+    let seeds = [1u64, 2, 3, 4];
+    // submit every generation up front (they land while the executor is
+    // still loading the model), so the decode set genuinely overlaps at
+    // B > 1 and the batched step is what serves them
+    let tx = handle.sender();
+    let mut rxs = Vec::new();
+    for (gi, &seed) in seeds.iter().enumerate() {
+        let (reply, rx) = channel();
+        tx.send(Request::Generate(GenerateRequest {
+            prompt: prompt.to_vec(),
+            params: SamplingParams::top_k(8, 0.8, seed, 20 + gi, None),
+            reply,
+            enqueued: Instant::now(),
+        }))
+        .unwrap();
+        rxs.push(rx);
+    }
+    // score traffic interleaves with the decoding batch
+    let direct = {
+        let ev = Evaluator::new(&ctx).unwrap();
+        ev.score_benchmark(&model, &bench).unwrap()
+    };
+    for (ii, item) in bench.items.iter().enumerate().take(6) {
+        let scores = handle.score_item(&item.prompt, &item.choices).unwrap();
+        let pred = scores
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(pred, direct.predictions[ii], "served item {ii} differs");
+    }
+    // batched serving replays the offline path bit for bit
+    for ((gi, &seed), rx) in seeds.iter().enumerate().zip(&rxs) {
+        let served = rx.recv().unwrap().unwrap();
+        let offline = generate(
+            &ctx,
+            &model,
+            &prompt,
+            SamplingParams::top_k(8, 0.8, seed, 20 + gi, None),
+        )
+        .unwrap();
+        assert_eq!(served.tokens, offline.tokens, "seed {seed}");
+        assert_eq!(served.finish, offline.finish, "seed {seed}");
+    }
+    let snap = handle.metrics.snapshot();
+    handle.shutdown().unwrap();
+    assert_eq!(snap.gen_requests, 4);
+    // every decoded token is still counted...
+    let expected: u64 = (0..4).map(|gi| 20 + gi as u64 - 1).sum();
+    assert_eq!(snap.gen_tokens, expected);
+    // ...but in fewer batched iterations than tokens: the decode set ran
+    // at B > 1 (all four requests were queued before the first step)
+    assert!(snap.decode_steps > 0);
+    assert!(
+        snap.decode_steps < snap.gen_tokens,
+        "decode never batched: {} steps for {} tokens",
+        snap.decode_steps,
+        snap.gen_tokens
+    );
+    assert!(snap.mean_decode_batch() > 1.0);
+}
+
+#[test]
+fn long_prompt_admission_does_not_stall_active_decode() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let t_max = ctx.cfg.t_max;
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+
+    // ONE shared reply channel for every request: the executor sends
+    // replies sequentially, so the order messages arrive here IS the
+    // executor's completion order — the assertion below is on ordering,
+    // not wall-clock, and cannot flake on a loaded runner.
+    let tx = handle.sender();
+    let (reply, rx) = channel();
+
+    // one in-flight sequence that needs 3 decode steps after admission...
+    tx.send(Request::Generate(GenerateRequest {
+        prompt: vec![1, 4, 20, 3],
+        params: SamplingParams::greedy(4, None),
+        reply: reply.clone(),
+        enqueued: Instant::now(),
+    }))
+    .unwrap();
+    // ...then a burst of near-t_max prompts that each finish at admission
+    // (max_new_tokens = 1, so their entire cost is the prefill). Under the
+    // old design the intake drain prefilled ALL of them synchronously
+    // before the in-flight sequence could take another step.
+    let n_long = 6usize;
+    let long_prompt: Vec<i32> = (0..t_max - 1).map(|i| ((i * 3) % 60 + 1) as i32).collect();
+    for _ in 0..n_long {
+        tx.send(Request::Generate(GenerateRequest {
+            prompt: long_prompt.clone(),
+            params: SamplingParams::greedy(1, None),
+            reply: reply.clone(),
+            enqueued: Instant::now(),
+        }))
+        .unwrap();
+    }
+    drop(reply);
+
+    let order: Vec<usize> = (0..=n_long)
+        .map(|_| rx.recv().unwrap().unwrap().tokens.len())
+        .collect();
+    assert_eq!(order.iter().filter(|&&len| len == 1).count(), n_long);
+    let short_pos = order
+        .iter()
+        .position(|&len| len == 4)
+        .expect("the in-flight sequence must be answered");
+    // bounded admissions: the short sequence needs 3 decode steps and at
+    // most one long prefill runs per step, so at most 3 long replies may
+    // precede it. The old inline-drain design answered ALL six longs
+    // first (short_pos == 6).
+    assert!(
+        short_pos <= 3,
+        "{short_pos} long prefills ran before the in-flight sequence finished — \
+         the admission budget regressed toward inline prefill"
+    );
+    handle.shutdown().unwrap();
+}

@@ -261,6 +261,44 @@ fn sampled_generation_is_seed_deterministic_on_merged_and_compact() {
 }
 
 #[test]
+fn degenerate_sampling_params_error_cleanly() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let prompt = [1i32, 4, 20];
+    // k = 0 and non-positive temperatures are rejected before model work
+    assert!(generate(&ctx, &model, &prompt, SamplingParams::top_k(0, 0.8, 1, 4, None)).is_err());
+    assert!(generate(&ctx, &model, &prompt, SamplingParams::top_k(4, 0.0, 1, 4, None)).is_err());
+    assert!(generate(&ctx, &model, &prompt, SamplingParams::top_k(4, -2.0, 1, 4, None)).is_err());
+    assert!(
+        generate(&ctx, &model, &prompt, SamplingParams::top_k(4, f32::NAN, 1, 4, None)).is_err()
+    );
+    // k beyond the vocabulary clamps deterministically instead of erroring
+    let big = SamplingParams::top_k(10_000, 0.8, 1, 4, None);
+    let out = generate(&ctx, &model, &prompt, big.clone()).unwrap();
+    let again = generate(&ctx, &model, &prompt, big).unwrap();
+    assert_eq!(out.tokens, again.tokens);
+    assert_eq!(out.tokens.len(), 4);
+    assert!(out.tokens.iter().all(|&t| (t as usize) < ctx.cfg.vocab));
+
+    // the server answers the rejection and keeps serving afterwards
+    let a = arts();
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    assert!(handle.generate(&[1, 4], SamplingParams::top_k(0, 0.8, 1, 4, None)).is_err());
+    assert!(handle.generate(&[1, 4], SamplingParams::top_k(4, 0.0, 1, 4, None)).is_err());
+    let ok = handle.generate(&[1, 4], SamplingParams::greedy(2, None)).unwrap();
+    assert_eq!(ok.tokens.len(), 2);
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn server_mixed_load_matches_offline_results() {
     let a = arts();
     let ctx = ModelContext::load(&a, "qwensim").unwrap();

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Assert the decode_batch_sweep contract on a full-run BENCH_generate.json:
+# the section must exist, and batched decode at B=4 must at least match the
+# per-sequence run_decode loop (speedup >= 1.0 — a noise-tolerant floor; on
+# a multi-core runner the measured speedup is expected well above 1, and
+# the JSON row records the actual value). CI runs this in the backend-e2e
+# job after `HCSMOE_BENCH_ONLY=generate cargo bench --bench
+# perf_microbench`; contributors can run it locally the same way.
+#
+# With no argument the script probes both candidate locations: cargo runs
+# bench binaries with the PACKAGE root (rust/) as working directory, so
+# that is where the JSON lands when invoked via `cargo bench` from the
+# workspace root.
+#
+# The parse relies on bench_support::write_generate_json's stable
+# formatting: one JSON object per line, "batch" keys only in the
+# decode_batch_sweep section.
+set -euo pipefail
+
+f="${1:-}"
+if [ -z "$f" ]; then
+  for cand in rust/BENCH_generate.json BENCH_generate.json; do
+    [ -f "$cand" ] && { f="$cand"; break; }
+  done
+fi
+[ -n "$f" ] && [ -f "$f" ] || { echo "check_decode_batch: BENCH_generate.json not found (looked in rust/ and .)"; exit 1; }
+
+grep -q '"decode_batch_sweep"' "$f" \
+  || { echo "check_decode_batch: $f has no decode_batch_sweep section"; exit 1; }
+
+line=$(grep '"batch": 4,' "$f" | head -n 1)
+[ -n "$line" ] || { echo "check_decode_batch: no B=4 row in decode_batch_sweep"; exit 1; }
+
+speedup=$(echo "$line" | sed -n 's/.*"speedup": \([0-9][0-9.]*\).*/\1/p')
+[ -n "$speedup" ] || { echo "check_decode_batch: no speedup field in: $line"; exit 1; }
+
+awk -v s="$speedup" 'BEGIN { exit (s >= 1.0) ? 0 : 1 }' || {
+  echo "check_decode_batch: batched B=4 decode is SLOWER than the per-sequence loop (speedup = ${speedup}x) in $f"
+  exit 1
+}
+echo "check_decode_batch: OK — B=4 batched/sequential speedup = ${speedup}x ($f)"
