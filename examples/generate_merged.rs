@@ -95,6 +95,7 @@ fn main() -> anyhow::Result<()> {
             artifacts_root: arts.root.to_string_lossy().into_owned(),
             model: "qwensim".into(),
             compress: Some((method, r, "general".into())),
+            kv_budget_bytes: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,

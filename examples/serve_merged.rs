@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             r,
             "general".into(),
         )),
+        kv_budget_bytes: None,
     };
     println!("starting executor (compresses {n_exp} -> {r} experts at startup)...");
     let handle = serve(

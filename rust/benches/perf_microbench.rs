@@ -20,10 +20,12 @@ use std::time::{Duration, Instant};
 use hc_smoe::backend::native::{forward_calib_with, forward_logits_with, NativeBackend};
 use hc_smoe::backend::{Backend, KvCache};
 use hc_smoe::bench_support::{
-    self, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, Lab, ParallelBenchRow,
+    self, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, KvCacheBenchRow, Lab,
+    ParallelBenchRow,
 };
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
 use hc_smoe::config::ModelCfg;
+use hc_smoe::kvpool::{KvPool, PoolHandle, DEFAULT_BLOCK_TOKENS};
 use hc_smoe::report::Table;
 use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
 use hc_smoe::similarity::{
@@ -422,6 +424,94 @@ fn decode_batch_sweep(table: &mut Table) -> Vec<DecodeBatchRow> {
     rows
 }
 
+/// Flat vs paged KV cache on the same decode workload, plus the
+/// steady-state realloc count: one sequence is prefilled (untimed) and
+/// decoded `n` steps; `capacity_bytes` is sampled per step and every
+/// change on the flat path is a `Vec` regrowth (a full-buffer copy).
+/// After the prefill-reservation fix the flat count must be 0, and the
+/// paged pool never copies on block allocation — `scripts/check_kvpool.sh`
+/// gates both at 0. Emits the `kv_cache_sweep` section of
+/// BENCH_generate.json.
+fn kv_cache_sweep(table: &mut Table) -> Vec<KvCacheBenchRow> {
+    let smoke = bench_support::smoke();
+    let iters = if smoke { 1 } else { 5 };
+    let decode_lens: &[usize] = if smoke { &[16] } else { &[64, 160] };
+    let cfg = gen_cfg(8);
+    let w = Weights::synthesize(&cfg, 0x9A6ED);
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(&w, cfg.n_exp).expect("load");
+    let prompt: Vec<i32> = (0..16usize).map(|i| (16 + (i * 5) % 64) as i32).collect();
+    let feed = |i: usize| -> i32 { 16 + ((i * 7) % 64) as i32 };
+    let mut rows = Vec::new();
+    for &n_decode in decode_lens {
+        for paged in [false, true] {
+            let pool = PoolHandle::new(
+                KvPool::for_model(&cfg, 4 << 20, DEFAULT_BLOCK_TOKENS).expect("pool"),
+            );
+            let block_bytes = cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS);
+            let mut samples = Vec::with_capacity(iters);
+            let mut reallocs = 0usize;
+            for _ in 0..iters {
+                let (mut cache, _) = if paged {
+                    backend
+                        .run_prefill_paged(
+                            state.as_ref(),
+                            &prompt,
+                            &mask,
+                            None,
+                            &pool,
+                            prompt.len() + n_decode,
+                        )
+                        .expect("paged prefill")
+                } else {
+                    backend
+                        .run_prefill(state.as_ref(), &prompt, &mask, None)
+                        .expect("prefill")
+                };
+                let mut cap = cache.capacity_bytes();
+                let t0 = Instant::now();
+                for i in 0..n_decode {
+                    backend
+                        .run_decode(state.as_ref(), cache.as_mut(), feed(i), &mask, None)
+                        .expect("decode");
+                    let now = cache.capacity_bytes();
+                    if now != cap {
+                        // Flat: ANY capacity change is a Vec regrowth, i.e.
+                        // a full-buffer copy. Paged: growing by exactly one
+                        // block is a copy-free arena allocation (the normal
+                        // path); anything else — a shrink, a multi-block
+                        // jump — is not a shape this workload can produce
+                        // and counts as a contract violation. Counted over
+                        // every iteration (each runs a fresh cache, so one
+                        // regressing iteration is enough to trip the gate).
+                        if !paged || now != cap + block_bytes {
+                            reallocs += 1;
+                        }
+                        cap = now;
+                    }
+                }
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            let ms = median_s(samples) * 1e3;
+            let path = if paged { "decode_paged" } else { "decode_flat" };
+            table.row(vec![
+                format!("{path} t={}", prompt.len() + n_decode),
+                format!("{ms:.3}"),
+                format!("{:.0} tok/s", n_decode as f64 / (ms / 1e3).max(1e-12)),
+                reallocs.to_string(),
+            ]);
+            rows.push(KvCacheBenchRow {
+                path: path.into(),
+                decode_tokens: n_decode,
+                ms,
+                reallocs,
+            });
+        }
+    }
+    rows
+}
+
 fn artifact_sections() -> anyhow::Result<()> {
     let lab = Lab::new("qwensim")?;
     let (b, t) = (lab.ctx.manifest.eval_b, lab.ctx.manifest.eval_t);
@@ -522,6 +612,7 @@ fn artifact_sections() -> anyhow::Result<()> {
             artifacts_root: lab.ctx.arts.root.to_string_lossy().into_owned(),
             model: "qwensim".into(),
             compress: None,
+            kv_budget_bytes: None,
         };
         let handle = serve(
             spec,
@@ -674,6 +765,13 @@ fn main() -> anyhow::Result<()> {
     let batch_rows = decode_batch_sweep(&mut btable);
     btable.print();
     btable.append_to("bench_results.md")?;
+    let mut ktable = Table::new(
+        "KV cache: flat vs paged decode (steady state, reallocs must be 0)",
+        &["Path", "decode ms", "throughput", "reallocs"],
+    );
+    let kv_rows = kv_cache_sweep(&mut ktable);
+    ktable.print();
+    ktable.append_to("bench_results.md")?;
     let gen_measurement = if bench_support::smoke() {
         "SMOKE MODE: single sample, harness check only — not a perf measurement"
     } else {
@@ -685,7 +783,8 @@ fn main() -> anyhow::Result<()> {
          cached decode is single-row and thread-independent (both columns measure the \
          same code), uncached re-forwards the whole prefix per token; decode_batch_sweep \
          compares one run_decode_batch call per step against B run_decode calls per step \
-         (bit-identical outputs, wall-clock only)"
+         (bit-identical outputs, wall-clock only); kv_cache_sweep compares flat vs paged \
+         caches on one sequence (reallocs counts Vec regrowth copies — 0 is the contract)"
     );
     bench_support::write_generate_json(
         GENERATE_JSON,
@@ -694,6 +793,7 @@ fn main() -> anyhow::Result<()> {
         &gen_note,
         &grows,
         &batch_rows,
+        &kv_rows,
     )?;
     println!("wrote {GENERATE_JSON}");
 

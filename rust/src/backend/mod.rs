@@ -73,8 +73,17 @@ pub trait KvCache {
     fn seq_len(&self) -> usize;
     /// Resident bytes of the cached K/V tensors (the per-sequence memory
     /// cost documented in `SERVING.md`; matches
-    /// [`crate::config::ModelCfg::kv_cache_bytes`] at [`Self::seq_len`]).
+    /// [`crate::config::ModelCfg::kv_cache_bytes`] at [`Self::seq_len`]
+    /// for the flat cache, and whole-block granularity for the paged one).
     fn byte_size(&self) -> usize;
+    /// Bytes actually allocated for the cache (>= [`Self::byte_size`]):
+    /// buffer capacity for the flat cache, whole blocks for the paged one.
+    /// A decode step that leaves this unchanged did not reallocate — the
+    /// `kv_cache_sweep` microbench counts changes to pin the steady-state
+    /// no-realloc property.
+    fn capacity_bytes(&self) -> usize {
+        self.byte_size()
+    }
 }
 
 /// A model-execution engine.
@@ -280,6 +289,41 @@ pub trait Backend {
         mask: &[f32],
         remap: Option<&[i32]>,
     ) -> Result<Vec<Vec<f32>>>;
+
+    /// [`Backend::run_prefill`] into a **paged** KV cache: the sequence's
+    /// K/V rows are stored as fixed-size blocks allocated from the given
+    /// [`crate::kvpool::KvPool`] instead of per-sequence `Vec` buffers —
+    /// the memory-budgeted serving path (see `SERVING.md`, "KV memory
+    /// model"). `reserve_tokens` is the total sequence length (prompt +
+    /// planned decode) whose blocks are reserved up front, so an admitted
+    /// sequence can never fail an allocation mid-decode; pass the prompt
+    /// length for best-effort decoding. The returned cache is accepted by
+    /// [`Backend::run_decode`] / [`Backend::run_decode_batch`]
+    /// transparently, and its logits — prefill and every subsequent decode
+    /// step — are **bit-identical** to the flat-cache path
+    /// (`rust/tests/kvpool.rs` pins this across layouts and thread
+    /// counts). Dropping the cache releases its blocks and any unused
+    /// reservation back to the pool.
+    ///
+    /// The default implementation reports the backend as non-paged; the
+    /// native backend overrides it.
+    fn run_prefill_paged(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+        pool: &crate::kvpool::PoolHandle,
+        reserve_tokens: usize,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        let _ = (state, ids, mask, remap, pool, reserve_tokens);
+        Err(anyhow!(
+            "the {} backend does not support the paged KV-cache pool; \
+             run generation on the native backend (unset HCSMOE_BACKEND or \
+             set it to \"native\")",
+            self.name()
+        ))
+    }
 }
 
 /// Environment variable selecting the execution backend.
@@ -306,17 +350,6 @@ pub(crate) fn downcast_state<'a, T: 'static>(
         .as_any()
         .downcast_ref::<T>()
         .ok_or_else(|| anyhow!("model state was not created by the {backend} backend"))
-}
-
-/// Downcast a [`KvCache`] to the concrete type `T` a backend expects.
-pub(crate) fn downcast_cache_mut<'a, T: 'static>(
-    cache: &'a mut dyn KvCache,
-    backend: &str,
-) -> Result<&'a mut T> {
-    cache
-        .as_any_mut()
-        .downcast_mut::<T>()
-        .ok_or_else(|| anyhow!("kv cache was not created by the {backend} backend"))
 }
 
 #[cfg(test)]

@@ -49,14 +49,15 @@
 
 use std::sync::OnceLock;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::config::ModelCfg;
+use crate::kvpool::{KvPool, PagedSeq, PoolHandle};
 use crate::parallel;
 use crate::tensor::{dot, gather_rows, matmul_blocked_with, Tensor};
 use crate::weights::Weights;
 
-use super::{downcast_cache_mut, downcast_state, Backend, KvCache, ModelState};
+use super::{downcast_state, Backend, KvCache, ModelState};
 
 /// RMSNorm epsilon (mirrors `model.py::rmsnorm`).
 const RMS_EPS: f32 = 1e-6;
@@ -134,6 +135,138 @@ impl KvCache for NativeKvCache {
             + self.v.iter().map(Vec::len).sum::<usize>();
         floats * std::mem::size_of::<f32>()
     }
+
+    fn capacity_bytes(&self) -> usize {
+        let floats: usize = self.k.iter().map(Vec::capacity).sum::<usize>()
+            + self.v.iter().map(Vec::capacity).sum::<usize>();
+        floats * std::mem::size_of::<f32>()
+    }
+}
+
+/// Native **paged** decode state: the sequence's block table in a shared
+/// [`KvPool`] plus the same cumulative dispatch counts the flat
+/// [`NativeKvCache`] carries. Accepted transparently by `run_decode` /
+/// `run_decode_batch`; dropping it releases its blocks (and any unused
+/// admission reservation) back to the pool.
+struct NativePagedKvCache {
+    seq: PagedSeq,
+    counts: Vec<Vec<usize>>,
+}
+
+impl KvCache for NativePagedKvCache {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq.seq_len()
+    }
+
+    fn byte_size(&self) -> usize {
+        self.seq.byte_size()
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        // allocation granularity is whole blocks; block allocation never
+        // copies existing rows, so capacity changes here are not reallocs
+        self.seq.byte_size()
+    }
+}
+
+/// Fork a **paged** cache in O(blocks): the clone shares every block by
+/// reference (copy-on-write on the first divergent append) and duplicates
+/// only the dispatch counts — the cheap-clone primitive for parallel
+/// sampling from one prefilled prompt. Errors when the cache is not a
+/// native paged cache (flat caches have no sharable storage).
+pub fn fork_paged_cache(cache: &dyn KvCache) -> Result<Box<dyn KvCache>> {
+    let pc = cache
+        .as_any()
+        .downcast_ref::<NativePagedKvCache>()
+        .ok_or_else(|| anyhow!("fork requires a paged native kv cache"))?;
+    Ok(Box::new(NativePagedKvCache {
+        seq: pc.seq.fork(),
+        counts: pc.counts.clone(),
+    }))
+}
+
+/// Mutable view over either native cache flavour — the decode paths are
+/// written once against this and stay bit-identical across flavours
+/// because only the K/V *storage* differs, never the math or its order.
+enum SeqCacheMut<'a> {
+    Flat(&'a mut NativeKvCache),
+    Paged(&'a mut NativePagedKvCache),
+}
+
+impl SeqCacheMut<'_> {
+    fn t(&self) -> usize {
+        match self {
+            SeqCacheMut::Flat(c) => c.t,
+            SeqCacheMut::Paged(c) => c.seq.seq_len(),
+        }
+    }
+
+    fn counts(&self) -> &[Vec<usize>] {
+        match self {
+            SeqCacheMut::Flat(c) => &c.counts,
+            SeqCacheMut::Paged(c) => &c.counts,
+        }
+    }
+
+    fn counts_mut(&mut self, layer: usize) -> &mut [usize] {
+        match self {
+            SeqCacheMut::Flat(c) => &mut c.counts[layer],
+            SeqCacheMut::Paged(c) => &mut c.counts[layer],
+        }
+    }
+}
+
+/// Downcast a trait-object cache to whichever native flavour it is.
+fn seq_cache_mut<'a>(c: &'a mut dyn KvCache, backend: &str) -> Result<SeqCacheMut<'a>> {
+    if c.as_any().is::<NativeKvCache>() {
+        Ok(SeqCacheMut::Flat(c.as_any_mut().downcast_mut().expect("checked flat")))
+    } else if c.as_any().is::<NativePagedKvCache>() {
+        Ok(SeqCacheMut::Paged(c.as_any_mut().downcast_mut().expect("checked paged")))
+    } else {
+        Err(anyhow!("kv cache was not created by the {backend} backend"))
+    }
+}
+
+/// Sharing-map fingerprint of one executable variant: the router mask, the
+/// optional remap table and the physical slot count — everything besides
+/// the weights that can change a position's K/V. Two variants of the same
+/// pool never alias blocks unless all three match (pools are additionally
+/// documented as per-model, so weights are fixed per pool).
+fn variant_fingerprint(mask: &[f32], remap: Option<&[i32]>, n_slots: usize) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    n_slots.hash(&mut h);
+    for &x in mask {
+        x.to_bits().hash(&mut h);
+    }
+    match remap {
+        Some(rm) => {
+            1u8.hash(&mut h);
+            rm.hash(&mut h);
+        }
+        None => 0u8.hash(&mut h),
+    }
+    h.finish()
+}
+
+/// Everything one prompt forward produces besides a cache: per-layer K/V
+/// rows (`[t, d]` each), cumulative dispatch counts, the last position's
+/// logits, and the capacity the dispatch ran at (for the drop-free check
+/// gating prefix sharing).
+struct PrefillParts {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    counts: Vec<Vec<usize>>,
+    logits: Vec<f32>,
+    cap: usize,
 }
 
 impl NativeBackend {
@@ -152,6 +285,80 @@ impl NativeBackend {
         } else {
             1
         }
+    }
+
+    /// The whole-prompt forward shared by [`Backend::run_prefill`] (flat
+    /// cache) and [`Backend::run_prefill_paged`] (block pool): one code
+    /// path computes the per-layer K/V rows, dispatch counts and final
+    /// logits, and the two entry points differ only in where the rows are
+    /// *stored* — which is what makes flat-vs-paged bit-identity hold by
+    /// construction (`rust/tests/kvpool.rs` pins it anyway).
+    fn prefill_forward(
+        &self,
+        m: &NativeModel,
+        ids: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<PrefillParts> {
+        let cfg = &self.cfg;
+        let t = ids.len();
+        ensure!(t >= 1, "prefill needs a non-empty prompt (no position to predict from)");
+        ensure!(
+            mask.len() == cfg.n_layer * cfg.n_exp,
+            "mask must be [{}, {}]",
+            cfg.n_layer,
+            cfg.n_exp
+        );
+        if let Some(rm) = remap {
+            ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
+        }
+        let d = cfg.d;
+        let w = &m.weights;
+        let threads = self.auto_threads(t);
+        let cap = cfg.capacity(t, m.n_slots);
+        let mut parts = PrefillParts {
+            k: Vec::with_capacity(cfg.n_layer),
+            v: Vec::with_capacity(cfg.n_layer),
+            counts: vec![vec![0usize; m.n_slots]; cfg.n_layer],
+            logits: Vec::new(),
+            cap,
+        };
+        let mut h = embed_tokens(cfg, w, ids, t)?;
+        for l in 0..cfg.n_layer {
+            let ln1 = layer_tensor(w, l, "ln1")?;
+            let x1 = rmsnorm_rows(&h, ln1.data(), d);
+            let (a, k, v) = attention_seq(cfg, w, l, &x1, t, threads)?;
+            parts.k.push(k);
+            parts.v.push(v);
+            for (hv, av) in h.iter_mut().zip(&a) {
+                *hv += av;
+            }
+            let ln2 = layer_tensor(w, l, "ln2")?;
+            let hf = rmsnorm_rows(&h, ln2.data(), d);
+            let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
+            let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
+            let y = moe_layer(
+                cfg,
+                w,
+                l,
+                &hf,
+                t,
+                mask_l,
+                remap_l,
+                m.n_slots,
+                threads,
+                &mut parts.counts[l],
+                cap,
+            )?;
+            for (hv, yv) in h.iter_mut().zip(&y) {
+                *hv += yv;
+            }
+        }
+        let ln_f = w.get("ln_f")?;
+        let hn = rmsnorm_rows(&h, ln_f.data(), d);
+        let last = &hn[(t - 1) * d..t * d];
+        parts.logits = mm(last, m.embed_t(cfg)?, 1, d, cfg.vocab, threads);
+        Ok(parts)
     }
 
     /// [`Backend::run_decode_batch`] with an explicit worker count —
@@ -199,9 +406,9 @@ impl NativeBackend {
         if bsz == 0 {
             return Ok(Vec::new());
         }
-        let mut cs: Vec<&mut NativeKvCache> = Vec::with_capacity(bsz);
+        let mut cs: Vec<SeqCacheMut> = Vec::with_capacity(bsz);
         for c in caches.iter_mut() {
-            cs.push(downcast_cache_mut(&mut **c, self.name())?);
+            cs.push(seq_cache_mut(&mut **c, self.name())?);
         }
         let d = cfg.d;
         let hd = d / cfg.heads;
@@ -212,28 +419,20 @@ impl NativeBackend {
         // validate the whole batch before any cache is mutated, so a bad
         // request cannot leave other sequences half-advanced
         for (c, &tok) in cs.iter().zip(tokens) {
-            ensure!(
-                c.k.len() == cfg.n_layer && c.v.len() == cfg.n_layer,
-                "kv cache layer count mismatch"
-            );
-            ensure!(
-                c.k.iter().all(|kb| kb.len() == c.t * d)
-                    && c.v.iter().all(|vb| vb.len() == c.t * d),
-                "kv cache length out of sync"
-            );
+            let t = c.t();
             // a cache prefilled against a different slot layout (e.g. a
             // full-model cache fed to a compact variant) must be rejected
             // here, not mid-layer after attention already appended K/V
             ensure!(
-                c.counts.len() == cfg.n_layer
-                    && c.counts.iter().all(|ct| ct.len() == m.n_slots),
+                c.counts().len() == cfg.n_layer
+                    && c.counts().iter().all(|ct| ct.len() == m.n_slots),
                 "dispatch counts must cover {} slots per layer",
                 m.n_slots
             );
             ensure!(
-                pos.shape()[0] >= c.t + 1,
+                pos.shape()[0] >= t + 1,
                 "sequence length {} exceeds t_max {}",
-                c.t + 1,
+                t + 1,
                 pos.shape()[0]
             );
             ensure!(
@@ -241,12 +440,125 @@ impl NativeBackend {
                 "token id {tok} out of vocab range {}",
                 cfg.vocab
             );
+            match c {
+                SeqCacheMut::Flat(fc) => {
+                    ensure!(
+                        fc.k.len() == cfg.n_layer && fc.v.len() == cfg.n_layer,
+                        "kv cache layer count mismatch"
+                    );
+                    ensure!(
+                        fc.k.iter().all(|kb| kb.len() == t * d)
+                            && fc.v.iter().all(|vb| vb.len() == t * d),
+                        "kv cache length out of sync"
+                    );
+                }
+                SeqCacheMut::Paged(pc) => {
+                    let p = pc.seq.pool().borrow();
+                    ensure!(
+                        p.n_layer() == cfg.n_layer && p.d() == d,
+                        "kv pool geometry (n_layer={}, d={}) does not match the model \
+                         (n_layer={}, d={})",
+                        p.n_layer(),
+                        p.d(),
+                        cfg.n_layer,
+                        d
+                    );
+                    ensure!(
+                        pc.seq.table().len() == p.blocks_for(t),
+                        "paged kv cache block table out of sync"
+                    );
+                }
+            }
+        }
+        // block-allocation feasibility for every paged sequence, checked
+        // up front so pool exhaustion cannot leave part of the batch
+        // half-advanced (allocations below this line cannot fail)
+        {
+            struct PoolNeed {
+                pid: usize,
+                handle: PoolHandle,
+                res: usize,
+                unres: usize,
+            }
+            let mut needs: Vec<PoolNeed> = Vec::new();
+            let need_idx = |needs: &mut Vec<PoolNeed>, pid: usize, handle: &PoolHandle| {
+                match needs.iter().position(|n| n.pid == pid) {
+                    Some(i) => i,
+                    None => {
+                        needs.push(PoolNeed {
+                            pid,
+                            handle: handle.clone(),
+                            res: 0,
+                            unres: 0,
+                        });
+                        needs.len() - 1
+                    }
+                }
+            };
+            // (pool id, handle, tail block, sharers in this batch) — COW
+            // demand is grouped per shared tail: each copy releases one
+            // reference, so only min(sharers, refs - 1) sequences actually
+            // allocate; the last one left writes in place. Counting one
+            // block per sharer would spuriously reject a feasible batch.
+            let mut cow_groups: Vec<(usize, PoolHandle, usize, usize)> = Vec::new();
+            for c in cs.iter() {
+                if let SeqCacheMut::Paged(pc) = c {
+                    match pc.seq.append_block_need() {
+                        None => {}
+                        Some(false) => {
+                            let i = need_idx(&mut needs, pc.seq.pool().id(), pc.seq.pool());
+                            if pc.seq.reserved_remaining() > 0 {
+                                needs[i].res += 1;
+                            } else {
+                                needs[i].unres += 1;
+                            }
+                        }
+                        Some(true) => {
+                            let pid = pc.seq.pool().id();
+                            let tail =
+                                *pc.seq.table().last().expect("COW implies a tail block");
+                            match cow_groups
+                                .iter_mut()
+                                .find(|(id, _, b, _)| *id == pid && *b == tail)
+                            {
+                                Some((.., k)) => *k += 1,
+                                None => cow_groups.push((pid, pc.seq.pool().clone(), tail, 1)),
+                            }
+                        }
+                    }
+                }
+            }
+            // copy-on-write allocations are always best-effort (extra work
+            // a fork forced, not planned growth a reservation was sized for)
+            for (pid, handle, tail, sharers) in &cow_groups {
+                let refs = handle.borrow().refs(*tail) as usize;
+                let i = need_idx(&mut needs, *pid, handle);
+                needs[i].unres += (*sharers).min(refs.saturating_sub(1));
+            }
+            for n in &needs {
+                ensure!(
+                    n.handle.borrow().can_alloc(n.res, n.unres),
+                    "kv pool exhausted: decode step needs {} more blocks than the \
+                     budget allows (raise {})",
+                    n.res + n.unres,
+                    crate::kvpool::KV_BUDGET_ENV
+                );
+            }
+        }
+        // tail-slot preparation (one block covers every layer's rows for
+        // the new token): fresh block or copy-on-write where needed
+        let mut slots: Vec<Option<(usize, usize)>> = Vec::with_capacity(bsz);
+        for c in cs.iter_mut() {
+            slots.push(match c {
+                SeqCacheMut::Flat(_) => None,
+                SeqCacheMut::Paged(pc) => Some(pc.seq.prepare_append()?),
+            });
         }
         // embedding + learned positions: each row at its own position
         let mut h = vec![0f32; bsz * d];
         for (s, (c, &tok)) in cs.iter().zip(tokens).enumerate() {
             let e = &embed.data()[(tok as usize) * d..(tok as usize) * d + d];
-            let p = &pos.data()[c.t * d..(c.t + 1) * d];
+            let p = &pos.data()[c.t() * d..(c.t() + 1) * d];
             for j in 0..d {
                 h[s * d + j] = e[j] + p[j];
             }
@@ -267,19 +579,45 @@ impl NativeBackend {
             // scores stay per-sequence, each against its own cached K/V
             let mut ctx = vec![0f32; bsz * d];
             for (s, c) in cs.iter_mut().enumerate() {
-                c.k[l].extend_from_slice(&knew[s * d..(s + 1) * d]);
-                c.v[l].extend_from_slice(&vnew[s * d..(s + 1) * d]);
-                let i = c.t; // the new token's position in this sequence
-                ensure!(c.k[l].len() == (i + 1) * d, "kv cache length out of sync");
-                attention_row_cached(
-                    cfg,
-                    &q[s * d..(s + 1) * d],
-                    &c.k[l],
-                    &c.v[l],
-                    i,
-                    &mut ctx[s * d..(s + 1) * d],
-                    &mut row,
-                );
+                let kr = &knew[s * d..(s + 1) * d];
+                let vr = &vnew[s * d..(s + 1) * d];
+                match c {
+                    SeqCacheMut::Flat(fc) => {
+                        fc.k[l].extend_from_slice(kr);
+                        fc.v[l].extend_from_slice(vr);
+                        let i = fc.t; // the new token's position
+                        ensure!(fc.k[l].len() == (i + 1) * d, "kv cache length out of sync");
+                        attention_row_cached(
+                            cfg,
+                            &q[s * d..(s + 1) * d],
+                            &fc.k[l],
+                            &fc.v[l],
+                            i,
+                            &mut ctx[s * d..(s + 1) * d],
+                            &mut row,
+                        );
+                    }
+                    SeqCacheMut::Paged(pc) => {
+                        let (blk, local) = slots[s].expect("paged cache has a prepared slot");
+                        {
+                            let mut p = pc.seq.pool().borrow_mut();
+                            p.write_k(blk, l, local, kr);
+                            p.write_v(blk, l, local, vr);
+                        }
+                        let i = pc.seq.seq_len(); // the new token's position
+                        let p = pc.seq.pool().borrow();
+                        attention_row_paged(
+                            cfg,
+                            &q[s * d..(s + 1) * d],
+                            &p,
+                            pc.seq.table(),
+                            l,
+                            i,
+                            &mut ctx[s * d..(s + 1) * d],
+                            &mut row,
+                        );
+                    }
+                }
             }
             let a = mm(&ctx, wo.data(), bsz, d, d, threads);
             for (hv, av) in h.iter_mut().zip(&a) {
@@ -300,7 +638,10 @@ impl NativeBackend {
         let hn = rmsnorm_rows(&h, ln_f.data(), d);
         let logits = mm(&hn, m.embed_t(cfg)?, bsz, d, cfg.vocab, threads);
         for c in cs.iter_mut() {
-            c.t += 1;
+            match c {
+                SeqCacheMut::Flat(fc) => fc.t += 1,
+                SeqCacheMut::Paged(pc) => pc.seq.commit_append(),
+            }
         }
         Ok(logits.chunks(cfg.vocab).map(<[f32]>::to_vec).collect())
     }
@@ -382,64 +723,67 @@ impl Backend for NativeBackend {
         remap: Option<&[i32]>,
     ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
         let m: &NativeModel = downcast_state(state, self.name())?;
+        let parts = self.prefill_forward(m, ids, mask, remap)?;
+        let PrefillParts { mut k, mut v, counts, logits, .. } = parts;
+        // Reserve the decode headroom once, up to the model's context
+        // window: the per-step `extend_from_slice` then never regrows the
+        // buffer, so steady-state decode is reallocation-free (pinned by
+        // the `kv_cache_sweep` microbench's reallocs column). This trades
+        // worst-case residency — exactly `kv_cache_bytes(t_max)`, the
+        // bound any decode can reach — for the zero-realloc guarantee;
+        // memory-conscious serving uses the paged pool instead, where
+        // residency is whole blocks as actually consumed.
+        let headroom = self.cfg.t_max.saturating_sub(ids.len()) * self.cfg.d;
+        for buf in k.iter_mut().chain(v.iter_mut()) {
+            buf.reserve_exact(headroom);
+        }
+        Ok((Box::new(NativeKvCache { t: ids.len(), k, v, counts }), logits))
+    }
+
+    fn run_prefill_paged(
+        &self,
+        state: &dyn ModelState,
+        ids: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+        pool: &PoolHandle,
+        reserve_tokens: usize,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        let m: &NativeModel = downcast_state(state, self.name())?;
         let cfg = &self.cfg;
-        let t = ids.len();
-        ensure!(t >= 1, "prefill needs a non-empty prompt (no position to predict from)");
-        ensure!(
-            mask.len() == cfg.n_layer * cfg.n_exp,
-            "mask must be [{}, {}]",
-            cfg.n_layer,
-            cfg.n_exp
-        );
-        if let Some(rm) = remap {
-            ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
+        {
+            let p = pool.borrow();
+            ensure!(
+                p.n_layer() == cfg.n_layer && p.d() == cfg.d,
+                "kv pool geometry (n_layer={}, d={}) does not match the model \
+                 (n_layer={}, d={})",
+                p.n_layer(),
+                p.d(),
+                cfg.n_layer,
+                cfg.d
+            );
         }
-        let d = cfg.d;
-        let w = &m.weights;
-        let threads = self.auto_threads(t);
-        let mut cache = NativeKvCache {
-            t,
-            k: Vec::with_capacity(cfg.n_layer),
-            v: Vec::with_capacity(cfg.n_layer),
-            counts: vec![vec![0usize; m.n_slots]; cfg.n_layer],
-        };
-        let mut h = embed_tokens(cfg, w, ids, t)?;
-        for l in 0..cfg.n_layer {
-            let ln1 = layer_tensor(w, l, "ln1")?;
-            let x1 = rmsnorm_rows(&h, ln1.data(), d);
-            let (a, k, v) = attention_seq(cfg, w, l, &x1, t, threads)?;
-            cache.k.push(k);
-            cache.v.push(v);
-            for (hv, av) in h.iter_mut().zip(&a) {
-                *hv += av;
-            }
-            let ln2 = layer_tensor(w, l, "ln2")?;
-            let hf = rmsnorm_rows(&h, ln2.data(), d);
-            let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
-            let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
-            let cap = cfg.capacity(t, m.n_slots);
-            let y = moe_layer(
-                cfg,
-                w,
-                l,
-                &hf,
-                t,
-                mask_l,
-                remap_l,
-                m.n_slots,
-                threads,
-                &mut cache.counts[l],
-                cap,
-            )?;
-            for (hv, yv) in h.iter_mut().zip(&y) {
-                *hv += yv;
-            }
-        }
-        let ln_f = w.get("ln_f")?;
-        let hn = rmsnorm_rows(&h, ln_f.data(), d);
-        let last = &hn[(t - 1) * d..t * d];
-        let logits = mm(last, m.embed_t(cfg)?, 1, d, cfg.vocab, threads);
-        Ok((Box::new(cache), logits))
+        // Reserve the worst-case block count BEFORE the forward: a prompt
+        // the budget cannot host must fail without burning compute, and an
+        // admitted sequence can never fail an allocation mid-decode.
+        let reserve_len = reserve_tokens.max(ids.len()).min(cfg.t_max);
+        let reserve_blocks = pool.blocks_for(reserve_len);
+        let mut seq = PagedSeq::new(pool, reserve_blocks)?;
+        let parts = self.prefill_forward(m, ids, mask, remap)?;
+        // Prefix sharing is only bit-safe between drop-free prefills: the
+        // capacity-drop rule depends on the prompt's total length, so a
+        // dropped token would make the "same" prefix length-dependent (see
+        // the kvpool module docs). Synthesized sets are drop-free.
+        let drop_free = parts
+            .counts
+            .iter()
+            .all(|layer| layer.iter().all(|&n| n <= parts.cap));
+        let fp = variant_fingerprint(mask, remap, m.n_slots);
+        seq.fill_from_rows(ids, fp, drop_free, &parts.k, &parts.v)?;
+        Ok((
+            Box::new(NativePagedKvCache { seq, counts: parts.counts }),
+            parts.logits,
+        ))
     }
 
     fn run_decode(
@@ -633,6 +977,76 @@ fn attention_row_cached(
             for u in 0..hd {
                 out[u] += a * vj[u];
             }
+        }
+    }
+}
+
+/// Paged analogue of [`attention_row_cached`]: the cached K/V rows of
+/// positions `0..=i` are gathered per block through the sequence's block
+/// table instead of one contiguous slice. Blocks are visited in position
+/// order with locals ascending, so the f32 score → softmax → combine
+/// sequence is operation-for-operation the contiguous path's — which is
+/// what makes paged logits bit-identical to the flat cache
+/// (`rust/tests/kvpool.rs`).
+#[allow(clippy::too_many_arguments)]
+fn attention_row_paged(
+    cfg: &ModelCfg,
+    q: &[f32],
+    pool: &KvPool,
+    table: &[usize],
+    layer: usize,
+    i: usize,
+    ctx: &mut [f32],
+    row: &mut Vec<f32>,
+) {
+    let d = cfg.d;
+    let hd = d / cfg.heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let bt = pool.block_tokens();
+    let arena = pool.arena();
+    for head in 0..cfg.heads {
+        let off = head * hd;
+        let qi = &q[off..off + hd];
+        row.clear();
+        let mut mx = f32::NEG_INFINITY;
+        let mut remaining = i + 1;
+        for &b in table {
+            if remaining == 0 {
+                break;
+            }
+            let tokens = remaining.min(bt);
+            let ks = pool.k_start(b, layer);
+            for j in 0..tokens {
+                let kj = &arena[ks + j * d + off..ks + j * d + off + hd];
+                let s = dot(qi, kj) * scale;
+                mx = mx.max(s);
+                row.push(s);
+            }
+            remaining -= tokens;
+        }
+        let mut z = 0f32;
+        for s in row.iter_mut() {
+            *s = (*s - mx).exp();
+            z += *s;
+        }
+        let out = &mut ctx[off..off + hd];
+        let mut ri = 0usize;
+        let mut remaining = i + 1;
+        for &b in table {
+            if remaining == 0 {
+                break;
+            }
+            let tokens = remaining.min(bt);
+            let vs = pool.v_start(b, layer);
+            for j in 0..tokens {
+                let a = row[ri] / z;
+                ri += 1;
+                let vj = &arena[vs + j * d + off..vs + j * d + off + hd];
+                for u in 0..hd {
+                    out[u] += a * vj[u];
+                }
+            }
+            remaining -= tokens;
         }
     }
 }
@@ -842,7 +1256,7 @@ fn moe_decode_batch(
     remap_l: Option<&[i32]>,
     n_slots: usize,
     threads: usize,
-    cs: &mut [&mut NativeKvCache],
+    cs: &mut [SeqCacheMut],
 ) -> Result<Vec<f32>> {
     let d = cfg.d;
     let n = cfg.n_exp;
@@ -856,18 +1270,18 @@ fn moe_decode_batch(
     let mut scratch = Vec::with_capacity(n);
     for (s, c) in cs.iter_mut().enumerate() {
         ensure!(
-            c.counts[layer].len() == n_slots,
+            c.counts()[layer].len() == n_slots,
             "dispatch counts must cover {n_slots} slots"
         );
         // capacity at THIS sequence's new total length, against its own
         // cumulative token-major queue — identical to the sequential path
-        let cap = cfg.capacity(c.t + 1, n_slots);
+        let cap = cfg.capacity(c.t() + 1, n_slots);
         let row = &logits[s * n..(s + 1) * n];
         for e in 0..n {
             masked[e] = row[e] + mask_l[e];
         }
         route_topk(&masked, cfg.k, &mut idx, &mut probs, &mut scratch);
-        let counts = &mut c.counts[layer];
+        let counts = c.counts_mut(layer);
         for j in 0..cfg.k {
             let slot = match remap_l {
                 Some(rm) => rm[idx[j]] as usize,

@@ -186,6 +186,26 @@ impl Backend for PjrtBackend {
         ))
     }
 
+    fn run_prefill_paged(
+        &self,
+        _state: &dyn ModelState,
+        _ids: &[i32],
+        _mask: &[f32],
+        _remap: Option<&[i32]>,
+        _pool: &crate::kvpool::PoolHandle,
+        _reserve_tokens: usize,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        // The paged pool rides the same missing incremental entry points as
+        // run_prefill/run_decode: a paged PJRT path additionally needs the
+        // decode executable lowered against block-table gather/scatter
+        // parameters (see SERVING.md, "PJRT status").
+        Err(anyhow!(
+            "the pjrt backend has no incremental prefill/decode HLO entry points \
+             (paged or flat); run generation on the native backend (unset \
+             HCSMOE_BACKEND or set it to \"native\")"
+        ))
+    }
+
     fn run_decode_batch(
         &self,
         _state: &dyn ModelState,

@@ -325,6 +325,39 @@ impl DecodeBatchRow {
     }
 }
 
+/// One flat-vs-paged KV-cache measurement row for the `kv_cache_sweep`
+/// section of `BENCH_generate.json`: one sequence is prefilled (untimed)
+/// and decoded `decode_tokens` steps against either the flat per-layer
+/// `Vec` cache or the paged block pool, sampling `capacity_bytes` after
+/// every step of every iteration. `reallocs` counts contract-violating
+/// capacity events: for the flat cache, any change (a `Vec` regrowth is a
+/// full-buffer copy); for the paged cache, any change other than growth by
+/// exactly one block (single-block arena allocation is the only copy-free
+/// shape this workload can produce). CI gates every row at 0, pinning the
+/// steady-state no-realloc property on both paths.
+#[derive(Debug, Clone)]
+pub struct KvCacheBenchRow {
+    /// Measured path: `decode_flat` or `decode_paged`.
+    pub path: String,
+    /// Decode steps in the timed region.
+    pub decode_tokens: usize,
+    /// Median wall-clock of the decode loop in milliseconds.
+    pub ms: f64,
+    /// Buffer-regrowth copy events observed during the decode loop.
+    pub reallocs: usize,
+}
+
+impl KvCacheBenchRow {
+    /// Decode throughput in tokens per second.
+    pub fn tok_s(&self) -> f64 {
+        if self.ms > 0.0 {
+            self.decode_tokens as f64 / (self.ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Write the machine-readable generation-throughput report
 /// (`BENCH_generate.json`). Hand-rolled JSON like [`write_parallel_json`];
 /// the schema is stable — later PRs append rows with new `path`/`variant`
@@ -332,7 +365,9 @@ impl DecodeBatchRow {
 /// `decode_uncached` rows at the same (variant, decode_tokens) shows the
 /// O(t) vs O(t²) gap the KV cache buys; the `decode_batch_sweep` section
 /// compares batched continuous decode against the per-sequence loop at
-/// B ∈ {1, 2, 4, 8} (CI asserts batched ≥ sequential at B = 4).
+/// B ∈ {1, 2, 4, 8} (CI asserts batched ≥ sequential at B = 4); the
+/// `kv_cache_sweep` section compares flat vs paged caches and pins the
+/// zero-realloc steady state (CI gates `reallocs` at 0 per row).
 pub fn write_generate_json(
     path: &str,
     threads: usize,
@@ -340,6 +375,7 @@ pub fn write_generate_json(
     note: &str,
     rows: &[GenerateBenchRow],
     batch_rows: &[DecodeBatchRow],
+    kv_rows: &[KvCacheBenchRow],
 ) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -382,6 +418,20 @@ pub fn write_generate_json(
             r.seq_tok_s(),
             r.batch_tok_s(),
             r.speedup()
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"kv_cache_sweep\": [\n");
+    for (i, r) in kv_rows.iter().enumerate() {
+        let comma = if i + 1 < kv_rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"path\": \"{}\", \"decode_tokens\": {}, \"ms\": {:.4}, \
+             \"tok_s\": {:.1}, \"reallocs\": {}}}{comma}\n",
+            json_escape(&r.path),
+            r.decode_tokens,
+            r.ms,
+            r.tok_s(),
+            r.reallocs
         ));
     }
     out.push_str("  ]\n}\n");

@@ -99,6 +99,16 @@ impl ModelCfg {
         2 * self.n_layer * t * self.d * std::mem::size_of::<f32>()
     }
 
+    /// Bytes of one paged KV block holding `block_tokens` positions: all
+    /// layers' K and V rows for those positions
+    /// (`2 · n_layer · block_tokens · d · 4` B — i.e.
+    /// [`Self::kv_cache_bytes`] at `t = block_tokens`). The unit of the
+    /// [`crate::kvpool`] budget arithmetic; see `SERVING.md` §"KV memory
+    /// model".
+    pub fn kv_block_bytes(&self, block_tokens: usize) -> usize {
+        self.kv_cache_bytes(block_tokens)
+    }
+
     /// Per-expert capacity for `n_tokens`, mirroring the Python side.
     pub fn capacity(&self, n_tokens: usize, n_exp: usize) -> usize {
         let c = (self.k as f64 * n_tokens as f64 * self.cap_factor / n_exp as f64).ceil();

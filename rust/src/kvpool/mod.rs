@@ -1,0 +1,816 @@
+//! Paged KV-cache pool: budgeted block storage for decode sequences.
+//!
+//! The flat [`crate::backend::KvCache`] grows one unbounded `Vec<f32>` pair
+//! per layer per sequence, so a burst of long-context generations simply
+//! OOMs the process the merged model was supposed to fit — the exact
+//! deployment failure the paper's memory pitch (PAPER.md §1) is about.
+//! This module replaces that with the vLLM-style paged design:
+//!
+//! * **One arena, fixed-size blocks.** A [`KvPool`] owns a single `Vec<f32>`
+//!   arena carved into blocks of [`DEFAULT_BLOCK_TOKENS`] token positions ×
+//!   `2 · n_layer · d` floats (all layers' K and V rows for those
+//!   positions live in one block). The arena size is the *budget*: the
+//!   serving executor sizes it from `HCSMOE_KV_BUDGET_MB` and admission
+//!   control guarantees allocations never exceed it.
+//! * **Block tables.** A sequence is a [`PagedSeq`]: an ordered table of
+//!   block ids plus its token count. Attention reads K/V through the
+//!   table (per-block gather) instead of assuming contiguity.
+//! * **Prefix sharing + copy-on-write.** Full prompt blocks are registered
+//!   in a sharing map keyed by the exact token prefix (plus a variant
+//!   fingerprint); a later prefill with an identical prefix attaches to
+//!   the existing blocks (refcount++) instead of storing a copy — repeated
+//!   system prompts cost one copy. Shared blocks are never written:
+//!   appending into a shared tail first copies it ([`PagedSeq::prepare_append`]),
+//!   and [`PagedSeq::fork`] clones a sequence in O(blocks) by sharing
+//!   everything and copying lazily.
+//! * **Reservations.** Admission reserves a sequence's worst-case block
+//!   count up front ([`KvPool::try_reserve`]); its allocations then draw
+//!   from the reservation, so an admitted sequence can never fail an
+//!   allocation mid-decode and the executor can make a hard
+//!   admit-or-queue decision before prefilling.
+//! * **Free-list recycling.** Releasing the last reference to a block
+//!   pushes it on a free list; nothing is ever returned to the OS while
+//!   the pool lives, so steady-state serving does zero allocator traffic.
+//!
+//! Sharing safety: K/V values at a position depend only on the token
+//! prefix up to it *and*, through the expert-capacity drop rule, on the
+//! prefill's total length (capacity grows with `t`). Blocks are therefore
+//! only shared between **drop-free** prefills — where dispatch equals the
+//! unconstrained dense dispatch and the prefix K/V are bit-identical
+//! regardless of prompt length. The native backend checks its dispatch
+//! counts per prefill and skips the sharing map entirely when any token
+//! was capacity-dropped (the synthesized artifact sets are structurally
+//! drop-free, so sharing is always live there).
+//!
+//! The pool is in-memory only, like the flat cache — there is deliberately
+//! no on-disk format for it (FORMATS.md). It is single-threaded by design
+//! (the serving executor owns all execution state; [`PoolHandle`] is an
+//! `Rc<RefCell<..>>`), matching the single-executor architecture in
+//! `SERVING.md`.
+
+use std::cell::{Ref, RefCell, RefMut};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::ModelCfg;
+
+/// Token positions per block (the paging granularity). 16 tokens keeps
+/// per-sequence waste under one block (≤ 15 positions) while making the
+/// per-block attention gather long enough to amortise the table walk.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Environment variable holding the pool budget in MiB (serving layer).
+pub const KV_BUDGET_ENV: &str = "HCSMOE_KV_BUDGET_MB";
+
+/// Default pool budget when [`KV_BUDGET_ENV`] is unset: 64 MiB.
+pub const DEFAULT_KV_BUDGET_MB: usize = 64;
+
+/// Sharing-map key: a variant fingerprint (mask/remap/slot-count hash, so
+/// different model variants never alias) plus the exact token prefix the
+/// block's K/V were computed from. Using the tokens themselves — not a
+/// hash of them — makes false sharing impossible.
+type SharedKey = (u64, Vec<i32>);
+
+/// Per-block bookkeeping: reference count plus the sharing-map key (so the
+/// entry can be dropped when the block is freed).
+struct BlockMeta {
+    refs: u32,
+    shared_key: Option<SharedKey>,
+}
+
+/// Point-in-time pool counters (the serving metrics gauges read these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Blocks in the arena (the budget).
+    pub total_blocks: usize,
+    /// Physical blocks currently referenced by at least one sequence.
+    pub in_use: usize,
+    /// Physical blocks referenced by more than one sequence (prefix
+    /// sharing / forks in effect).
+    pub shared: usize,
+    /// Reserved-but-not-yet-allocated blocks (admission headroom already
+    /// promised to admitted sequences).
+    pub reserved: usize,
+    /// High-water mark of `in_use` over the pool's lifetime.
+    pub peak_in_use: usize,
+    /// Bytes per block.
+    pub block_bytes: usize,
+}
+
+impl PoolStats {
+    /// Physical blocks not referenced by any sequence.
+    pub fn free(&self) -> usize {
+        self.total_blocks - self.in_use
+    }
+
+    /// Bytes currently resident in referenced blocks.
+    pub fn bytes_in_use(&self) -> usize {
+        self.in_use * self.block_bytes
+    }
+}
+
+/// The budgeted block arena. See the module docs for the design; create
+/// one per served model variant (the sharing map is fingerprint-scoped,
+/// but block geometry is bound to one `(n_layer, d)`).
+pub struct KvPool {
+    n_layer: usize,
+    d: usize,
+    block_tokens: usize,
+    arena: Vec<f32>,
+    meta: Vec<BlockMeta>,
+    free: Vec<usize>,
+    in_use: usize,
+    reserved: usize,
+    peak_in_use: usize,
+    /// Blocks with refcount > 1, maintained incrementally by
+    /// [`Self::retain`]/[`Self::release`] so [`Self::stats`] is O(1) (the
+    /// serving executor publishes gauges every loop iteration).
+    shared_count: usize,
+    sharing: HashMap<SharedKey, usize>,
+}
+
+impl KvPool {
+    /// A pool of `total_blocks` blocks for the given geometry.
+    pub fn new(n_layer: usize, d: usize, block_tokens: usize, total_blocks: usize) -> Result<Self> {
+        ensure!(
+            n_layer >= 1 && d >= 1 && block_tokens >= 1,
+            "kv pool geometry must be non-zero (n_layer={n_layer}, d={d}, block_tokens={block_tokens})"
+        );
+        ensure!(total_blocks >= 1, "kv pool needs at least one block");
+        let block_floats = block_tokens * 2 * n_layer * d;
+        let mut meta = Vec::with_capacity(total_blocks);
+        for _ in 0..total_blocks {
+            meta.push(BlockMeta { refs: 0, shared_key: None });
+        }
+        Ok(Self {
+            n_layer,
+            d,
+            block_tokens,
+            arena: vec![0f32; total_blocks * block_floats],
+            meta,
+            // pop() takes from the back; seed in reverse so blocks hand
+            // out in ascending order (stable, debuggable layouts)
+            free: (0..total_blocks).rev().collect(),
+            in_use: 0,
+            reserved: 0,
+            peak_in_use: 0,
+            shared_count: 0,
+            sharing: HashMap::new(),
+        })
+    }
+
+    /// A pool for one model config under a byte budget: as many blocks as
+    /// fit in `budget_bytes`. Errors when the budget cannot hold even one
+    /// block (an unserviceable configuration, better rejected at startup
+    /// than deadlocking admission later).
+    pub fn for_model(cfg: &ModelCfg, budget_bytes: usize, block_tokens: usize) -> Result<Self> {
+        let block_bytes = cfg.kv_block_bytes(block_tokens);
+        let blocks = budget_bytes / block_bytes;
+        ensure!(
+            blocks >= 1,
+            "kv budget of {budget_bytes} B cannot hold a single {block_bytes} B block \
+             (raise {KV_BUDGET_ENV})"
+        );
+        Self::new(cfg.n_layer, cfg.d, block_tokens, blocks)
+    }
+
+    /// Layers per block (the model's layer count).
+    pub fn n_layer(&self) -> usize {
+        self.n_layer
+    }
+
+    /// Hidden size of each K/V row.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Token positions per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks in the arena (the budget).
+    pub fn total_blocks(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// f32 elements per block.
+    pub fn block_floats(&self) -> usize {
+        self.block_tokens * 2 * self.n_layer * self.d
+    }
+
+    /// Bytes per block.
+    pub fn block_bytes(&self) -> usize {
+        self.block_floats() * std::mem::size_of::<f32>()
+    }
+
+    /// Blocks needed to hold `tokens` positions (ceiling division).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Blocks promised or in use — the admission-control quantity.
+    fn committed(&self) -> usize {
+        self.in_use + self.reserved
+    }
+
+    /// Whether a `blocks`-sized reservation fits the remaining budget.
+    pub fn can_reserve(&self, blocks: usize) -> bool {
+        self.committed() + blocks <= self.total_blocks()
+    }
+
+    /// Promise `blocks` future allocations (admission control). Paired
+    /// with per-allocation draws (`alloc(true)`) and [`Self::unreserve`]
+    /// for the unused remainder.
+    pub fn try_reserve(&mut self, blocks: usize) -> Result<()> {
+        ensure!(
+            self.can_reserve(blocks),
+            "kv pool cannot reserve {blocks} blocks ({} in use, {} reserved, {} total)",
+            self.in_use,
+            self.reserved,
+            self.total_blocks()
+        );
+        self.reserved += blocks;
+        Ok(())
+    }
+
+    /// Return an unused reservation remainder.
+    pub fn unreserve(&mut self, blocks: usize) {
+        debug_assert!(blocks <= self.reserved, "unreserve exceeds outstanding reservation");
+        self.reserved = self.reserved.saturating_sub(blocks);
+    }
+
+    /// Whether `reserved_backed` reservation-drawing allocations plus
+    /// `unreserved` best-effort allocations can all succeed right now.
+    /// Used by the batched decode step to verify the whole batch *before*
+    /// mutating any sequence.
+    pub fn can_alloc(&self, reserved_backed: usize, unreserved: usize) -> bool {
+        reserved_backed + unreserved <= self.free.len()
+            && unreserved <= self.total_blocks().saturating_sub(self.committed())
+    }
+
+    /// Allocate one block (refcount 1). `from_reservation` draws from the
+    /// outstanding reservation (guaranteed to succeed for an admitted
+    /// sequence); otherwise the allocation is best-effort against the
+    /// unreserved remainder of the budget.
+    pub fn alloc(&mut self, from_reservation: bool) -> Result<usize> {
+        if from_reservation {
+            debug_assert!(self.reserved > 0, "reservation draw with none outstanding");
+            self.reserved = self.reserved.saturating_sub(1);
+        } else {
+            ensure!(
+                self.committed() < self.total_blocks(),
+                "kv pool exhausted ({} blocks: {} in use, {} reserved)",
+                self.total_blocks(),
+                self.in_use,
+                self.reserved
+            );
+        }
+        let b = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow!("kv pool free list empty with {} in use", self.in_use))?;
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        self.meta[b] = BlockMeta { refs: 1, shared_key: None };
+        Ok(b)
+    }
+
+    /// Add a reference to an existing block (prefix sharing / fork).
+    pub fn retain(&mut self, block: usize) {
+        debug_assert!(self.meta[block].refs > 0, "retain of a free block");
+        self.meta[block].refs += 1;
+        if self.meta[block].refs == 2 {
+            self.shared_count += 1;
+        }
+    }
+
+    /// Drop one reference; the last release recycles the block onto the
+    /// free list and removes its sharing-map entry.
+    pub fn release(&mut self, block: usize) {
+        let m = &mut self.meta[block];
+        debug_assert!(m.refs > 0, "release of a free block");
+        m.refs -= 1;
+        if m.refs == 1 {
+            self.shared_count -= 1;
+        }
+        if m.refs == 0 {
+            if let Some(key) = m.shared_key.take() {
+                self.sharing.remove(&key);
+            }
+            self.free.push(block);
+            self.in_use -= 1;
+        }
+    }
+
+    /// Current reference count of a block.
+    pub fn refs(&self, block: usize) -> u32 {
+        self.meta[block].refs
+    }
+
+    /// Look up a registered shared block for an exact prefix key.
+    pub fn lookup_shared(&self, fingerprint: u64, prefix: &[i32]) -> Option<usize> {
+        // allocation-free probe: HashMap::get with a borrowed key needs the
+        // owned key type here (tuple key), so build it once — prefill-only
+        // path, not the decode hot loop
+        self.sharing.get(&(fingerprint, prefix.to_vec())).copied()
+    }
+
+    /// Register a full block as shareable under an exact prefix key.
+    pub fn register_shared(&mut self, fingerprint: u64, prefix: &[i32], block: usize) {
+        let key = (fingerprint, prefix.to_vec());
+        self.meta[block].shared_key = Some(key.clone());
+        self.sharing.insert(key, block);
+    }
+
+    /// Arena start index of the K rows of `layer` in `block` (rows for
+    /// local positions `0..block_tokens`, each `d` floats, contiguous).
+    pub fn k_start(&self, block: usize, layer: usize) -> usize {
+        block * self.block_floats() + layer * 2 * self.block_tokens * self.d
+    }
+
+    /// Arena start index of the V rows of `layer` in `block`.
+    pub fn v_start(&self, block: usize, layer: usize) -> usize {
+        self.k_start(block, layer) + self.block_tokens * self.d
+    }
+
+    /// Write one K row at local position `local` of a block/layer.
+    pub fn write_k(&mut self, block: usize, layer: usize, local: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        let s = self.k_start(block, layer) + local * self.d;
+        self.arena[s..s + self.d].copy_from_slice(row);
+    }
+
+    /// Write one V row at local position `local` of a block/layer.
+    pub fn write_v(&mut self, block: usize, layer: usize, local: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        let s = self.v_start(block, layer) + local * self.d;
+        self.arena[s..s + self.d].copy_from_slice(row);
+    }
+
+    /// The raw arena (attention gathers through [`Self::k_start`] /
+    /// [`Self::v_start`] offsets into this).
+    pub fn arena(&self) -> &[f32] {
+        &self.arena
+    }
+
+    /// Copy the first `tokens` positions of every layer's K and V rows
+    /// from `src` into `dst` (the copy-on-write primitive).
+    pub fn copy_block(&mut self, src: usize, dst: usize, tokens: usize) {
+        debug_assert!(tokens <= self.block_tokens);
+        let n = tokens * self.d;
+        for layer in 0..self.n_layer {
+            let ks = self.k_start(src, layer);
+            let kd = self.k_start(dst, layer);
+            self.arena.copy_within(ks..ks + n, kd);
+            let vs = self.v_start(src, layer);
+            let vd = self.v_start(dst, layer);
+            self.arena.copy_within(vs..vs + n, vd);
+        }
+    }
+
+    /// Current counters (O(1) — `shared` is maintained incrementally, so
+    /// per-iteration gauge publishing never scans the block table).
+    pub fn stats(&self) -> PoolStats {
+        debug_assert_eq!(
+            self.shared_count,
+            self.meta.iter().filter(|m| m.refs > 1).count(),
+            "incremental shared counter out of sync"
+        );
+        PoolStats {
+            total_blocks: self.total_blocks(),
+            in_use: self.in_use,
+            shared: self.shared_count,
+            reserved: self.reserved,
+            peak_in_use: self.peak_in_use,
+            block_bytes: self.block_bytes(),
+        }
+    }
+}
+
+/// Shared, clonable handle to a [`KvPool`] — the executor creates one and
+/// every [`PagedSeq`] carved from it keeps a clone, so dropping a sequence
+/// releases its blocks with no explicit free call (the executor-leak class
+/// of bug becomes unrepresentable).
+#[derive(Clone)]
+pub struct PoolHandle(Rc<RefCell<KvPool>>);
+
+impl PoolHandle {
+    /// Wrap a pool.
+    pub fn new(pool: KvPool) -> Self {
+        Self(Rc::new(RefCell::new(pool)))
+    }
+
+    /// Immutable access.
+    pub fn borrow(&self) -> Ref<'_, KvPool> {
+        self.0.borrow()
+    }
+
+    /// Mutable access.
+    pub fn borrow_mut(&self) -> RefMut<'_, KvPool> {
+        self.0.borrow_mut()
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> PoolStats {
+        self.borrow().stats()
+    }
+
+    /// Blocks needed for `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.borrow().blocks_for(tokens)
+    }
+
+    /// Blocks in the arena (the budget).
+    pub fn total_blocks(&self) -> usize {
+        self.borrow().total_blocks()
+    }
+
+    /// Whether a reservation of `blocks` fits right now.
+    pub fn can_reserve(&self, blocks: usize) -> bool {
+        self.borrow().can_reserve(blocks)
+    }
+
+    /// Identity of the underlying pool (pointer-derived): two handles with
+    /// equal ids share one arena. Used to group per-pool feasibility
+    /// checks in the batched decode step.
+    pub fn id(&self) -> usize {
+        Rc::as_ptr(&self.0) as *const () as usize
+    }
+}
+
+/// One sequence's view of the pool: its block table, token count, and the
+/// remainder of its admission reservation. Dropping the value releases
+/// every block reference and returns the unused reservation.
+pub struct PagedSeq {
+    pool: PoolHandle,
+    table: Vec<usize>,
+    t: usize,
+    reserved: usize,
+}
+
+impl PagedSeq {
+    /// Start an empty sequence, reserving `reserve_blocks` future
+    /// allocations (0 = best-effort, allocations may fail at append time).
+    pub fn new(pool: &PoolHandle, reserve_blocks: usize) -> Result<Self> {
+        if reserve_blocks > 0 {
+            pool.borrow_mut().try_reserve(reserve_blocks)?;
+        }
+        Ok(Self {
+            pool: pool.clone(),
+            table: Vec::new(),
+            t: 0,
+            reserved: reserve_blocks,
+        })
+    }
+
+    /// The pool this sequence allocates from.
+    pub fn pool(&self) -> &PoolHandle {
+        &self.pool
+    }
+
+    /// Block ids in position order.
+    pub fn table(&self) -> &[usize] {
+        &self.table
+    }
+
+    /// Tokens stored.
+    pub fn seq_len(&self) -> usize {
+        self.t
+    }
+
+    /// Unused reservation blocks still held.
+    pub fn reserved_remaining(&self) -> usize {
+        self.reserved
+    }
+
+    /// Resident bytes attributed to this sequence (whole blocks; shared
+    /// blocks are counted by every sequence referencing them, so summing
+    /// over sequences can exceed the arena's physical use).
+    pub fn byte_size(&self) -> usize {
+        self.table.len() * self.pool.borrow().block_bytes()
+    }
+
+    /// One block allocation, drawing from this sequence's reservation
+    /// while any remains.
+    fn alloc_block(&mut self) -> Result<usize> {
+        let from_res = self.reserved > 0;
+        let b = self.pool.borrow_mut().alloc(from_res)?;
+        if from_res {
+            self.reserved -= 1;
+        }
+        Ok(b)
+    }
+
+    /// What appending one token needs from the pool: `None` when the tail
+    /// has a free exclusive slot, `Some(false)` for a fresh block (drawn
+    /// from the reservation while one remains), `Some(true)` for a
+    /// copy-on-write of a shared tail (always a best-effort allocation —
+    /// see [`Self::prepare_append`]). The batched decode step aggregates
+    /// this over the batch to verify feasibility before mutating anything.
+    pub fn append_block_need(&self) -> Option<bool> {
+        let bt = self.pool.borrow().block_tokens();
+        if self.t % bt == 0 {
+            return Some(false); // tail full (or empty table)
+        }
+        let tail = *self.table.last().expect("partial tail implies a block");
+        if self.pool.borrow().refs(tail) > 1 {
+            Some(true)
+        } else {
+            None
+        }
+    }
+
+    /// Whether appending one token needs a fresh physical block (fresh
+    /// tail, or copy-on-write of a shared tail).
+    pub fn append_needs_block(&self) -> bool {
+        self.append_block_need().is_some()
+    }
+
+    /// Make the tail writable with one free local slot and return
+    /// `(block, local)` for the new token's rows. Copy-on-write: a shared
+    /// partial tail is first copied into a fresh exclusive block. Does
+    /// **not** advance the token count — write the K/V rows for every
+    /// layer, then call [`Self::commit_append`].
+    pub fn prepare_append(&mut self) -> Result<(usize, usize)> {
+        let bt = self.pool.borrow().block_tokens();
+        let local = self.t % bt;
+        if local == 0 {
+            let b = self.alloc_block()?;
+            self.table.push(b);
+            return Ok((b, 0));
+        }
+        let tail = *self.table.last().expect("partial tail implies a block");
+        if self.pool.borrow().refs(tail) > 1 {
+            // Copy-on-write takes a best-effort allocation, NOT a
+            // reservation draw: the reservation was sized for the
+            // sequence's planned growth (blocks_for of its final length),
+            // and a COW is an extra physical block forced by a fork —
+            // consuming the reservation here would let a later planned
+            // append fail on an admitted sequence.
+            let nb = self.pool.borrow_mut().alloc(false)?;
+            let mut p = self.pool.borrow_mut();
+            p.copy_block(tail, nb, local);
+            p.release(tail);
+            drop(p);
+            *self.table.last_mut().expect("tail exists") = nb;
+            return Ok((nb, local));
+        }
+        Ok((tail, local))
+    }
+
+    /// Advance the token count after the rows for a prepared slot were
+    /// written for every layer.
+    pub fn commit_append(&mut self) {
+        self.t += 1;
+    }
+
+    /// Fill an empty sequence from per-layer prefill rows (`k[l]`/`v[l]`
+    /// are `[t, d]` flattened). Full blocks are deduplicated through the
+    /// sharing map when `share` is set (the caller's drop-free check);
+    /// partial tails are always exclusive.
+    pub fn fill_from_rows(
+        &mut self,
+        ids: &[i32],
+        fingerprint: u64,
+        share: bool,
+        k: &[Vec<f32>],
+        v: &[Vec<f32>],
+    ) -> Result<()> {
+        ensure!(self.t == 0 && self.table.is_empty(), "fill_from_rows needs an empty sequence");
+        let (bt, d, n_layer) = {
+            let p = self.pool.borrow();
+            (p.block_tokens(), p.d(), p.n_layer())
+        };
+        let t = ids.len();
+        ensure!(k.len() == n_layer && v.len() == n_layer, "prefill rows must cover every layer");
+        ensure!(
+            k.iter().all(|kb| kb.len() == t * d) && v.iter().all(|vb| vb.len() == t * d),
+            "prefill rows must be [t, d] per layer"
+        );
+        let n_blocks = self.pool.borrow().blocks_for(t);
+        for bi in 0..n_blocks {
+            let start = bi * bt;
+            let end = ((bi + 1) * bt).min(t);
+            let tokens = end - start;
+            let full = tokens == bt;
+            if full && share {
+                let existing = self.pool.borrow().lookup_shared(fingerprint, &ids[..end]);
+                if let Some(b) = existing {
+                    let mut p = self.pool.borrow_mut();
+                    p.retain(b);
+                    // an attached block consumes admission headroom like an
+                    // allocation would, keeping the reservation invariant
+                    // (committed never grows past the admission check)
+                    if self.reserved > 0 {
+                        p.unreserve(1);
+                        drop(p);
+                        self.reserved -= 1;
+                    }
+                    self.table.push(b);
+                    continue;
+                }
+            }
+            let b = self.alloc_block()?;
+            {
+                let mut p = self.pool.borrow_mut();
+                for (layer, (kb, vb)) in k.iter().zip(v).enumerate() {
+                    for local in 0..tokens {
+                        let tok = start + local;
+                        p.write_k(b, layer, local, &kb[tok * d..(tok + 1) * d]);
+                        p.write_v(b, layer, local, &vb[tok * d..(tok + 1) * d]);
+                    }
+                }
+                if full && share {
+                    p.register_shared(fingerprint, &ids[..end], b);
+                }
+            }
+            self.table.push(b);
+        }
+        self.t = t;
+        Ok(())
+    }
+
+    /// Clone this sequence in O(blocks): every block (including a partial
+    /// tail) is shared by reference; the first append to either clone's
+    /// shared tail copies it (copy-on-write). The fork carries no
+    /// reservation — its future allocations are best-effort.
+    pub fn fork(&self) -> PagedSeq {
+        let mut p = self.pool.borrow_mut();
+        for &b in &self.table {
+            p.retain(b);
+        }
+        drop(p);
+        PagedSeq {
+            pool: self.pool.clone(),
+            table: self.table.clone(),
+            t: self.t,
+            reserved: 0,
+        }
+    }
+}
+
+impl Drop for PagedSeq {
+    fn drop(&mut self) {
+        let mut p = self.pool.borrow_mut();
+        for &b in &self.table {
+            p.release(b);
+        }
+        p.unreserve(self.reserved);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(blocks: usize) -> PoolHandle {
+        PoolHandle::new(KvPool::new(2, 4, 4, blocks).unwrap())
+    }
+
+    fn rows(t: usize, d: usize, base: f32) -> Vec<Vec<f32>> {
+        (0..2)
+            .map(|l| (0..t * d).map(|i| base + (l * 1000 + i) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn geometry_and_blocks_for() {
+        let p = pool(8);
+        let b = p.borrow();
+        assert_eq!(b.block_floats(), 4 * 2 * 2 * 4);
+        assert_eq!(b.blocks_for(0), 0);
+        assert_eq!(b.blocks_for(1), 1);
+        assert_eq!(b.blocks_for(4), 1);
+        assert_eq!(b.blocks_for(5), 2);
+    }
+
+    #[test]
+    fn alloc_free_recycles() {
+        let p = pool(2);
+        let mut b = p.borrow_mut();
+        let x = b.alloc(false).unwrap();
+        let y = b.alloc(false).unwrap();
+        assert_ne!(x, y);
+        assert!(b.alloc(false).is_err(), "pool must refuse past its budget");
+        b.release(x);
+        assert_eq!(b.stats().in_use, 1);
+        let z = b.alloc(false).unwrap();
+        assert_eq!(z, x, "freed block must be recycled");
+        assert_eq!(b.stats().peak_in_use, 2);
+        b.release(y);
+        b.release(z);
+        assert_eq!(b.stats().in_use, 0);
+    }
+
+    #[test]
+    fn reservations_gate_unreserved_allocs() {
+        let p = pool(3);
+        let mut b = p.borrow_mut();
+        b.try_reserve(2).unwrap();
+        assert!(!b.can_reserve(2));
+        assert!(b.can_reserve(1));
+        // only one unreserved block remains even though all 3 are free
+        let _x = b.alloc(false).unwrap();
+        assert!(b.alloc(false).is_err(), "reservation must shield its blocks");
+        // reservation draws still succeed
+        let y = b.alloc(true).unwrap();
+        let z = b.alloc(true).unwrap();
+        assert_eq!(b.stats().reserved, 0);
+        b.release(y);
+        b.release(z);
+    }
+
+    #[test]
+    fn seq_fill_share_and_release() {
+        let p = pool(8);
+        let ids: Vec<i32> = (0..6).collect(); // 2 blocks: one full, one partial
+        let (k, v) = (rows(6, 4, 0.5), rows(6, 4, 9.5));
+        let mut a = PagedSeq::new(&p, 2).unwrap();
+        a.fill_from_rows(&ids, 7, true, &k, &v).unwrap();
+        assert_eq!(a.seq_len(), 6);
+        assert_eq!(a.table().len(), 2);
+        assert_eq!(p.stats().in_use, 2);
+
+        // identical prefix: the full block is shared, the tail is not
+        let mut b = PagedSeq::new(&p, 2).unwrap();
+        b.fill_from_rows(&ids, 7, true, &k, &v).unwrap();
+        assert_eq!(p.stats().in_use, 3, "full block deduplicated");
+        assert_eq!(p.stats().shared, 1);
+        assert_eq!(a.table()[0], b.table()[0]);
+        assert_ne!(a.table()[1], b.table()[1]);
+
+        // a different fingerprint must not alias
+        let mut c = PagedSeq::new(&p, 2).unwrap();
+        c.fill_from_rows(&ids, 8, true, &k, &v).unwrap();
+        assert_ne!(c.table()[0], a.table()[0]);
+
+        drop(b);
+        assert_eq!(p.stats().in_use, 4, "b's tail freed, shared block retained");
+        drop(a);
+        drop(c);
+        let s = p.stats();
+        assert_eq!(s.in_use, 0, "all blocks returned");
+        assert_eq!(s.reserved, 0, "all reservations returned");
+    }
+
+    #[test]
+    fn fork_copies_on_write() {
+        let p = pool(8);
+        let ids: Vec<i32> = (0..5).collect(); // full block + 1-token tail
+        let (k, v) = (rows(5, 4, 1.0), rows(5, 4, 2.0));
+        let mut a = PagedSeq::new(&p, 4).unwrap();
+        a.fill_from_rows(&ids, 1, true, &k, &v).unwrap();
+        let b = a.fork();
+        assert_eq!(p.stats().in_use, 2, "fork shares everything");
+        assert_eq!(p.stats().shared, 2);
+
+        let tail_before = *a.table().last().unwrap();
+        assert!(a.append_needs_block(), "shared partial tail needs COW");
+        let (blk, local) = a.prepare_append().unwrap();
+        assert_ne!(blk, tail_before, "COW must move the writer to a fresh block");
+        assert_eq!(local, 1);
+        // the copied prefix rows match the original
+        {
+            let pl = p.borrow();
+            let d = pl.d();
+            let old = pl.k_start(tail_before, 0);
+            let new = pl.k_start(blk, 0);
+            assert_eq!(pl.arena()[old..old + d], pl.arena()[new..new + d]);
+        }
+        a.commit_append();
+        assert_eq!(a.seq_len(), 6);
+        assert_eq!(b.seq_len(), 5);
+        assert_eq!(p.stats().in_use, 3);
+        // the reader's tail is exclusive again; appending needs no copy
+        assert!(!b.append_needs_block());
+        drop(a);
+        drop(b);
+        assert_eq!(p.stats().in_use, 0);
+    }
+
+    #[test]
+    fn budget_too_small_is_rejected_at_construction() {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            n_layer: 2,
+            d: 32,
+            m: 32,
+            n_exp: 4,
+            k: 2,
+            heads: 2,
+            vocab: 64,
+            t_max: 64,
+            shared: false,
+            m_shared: 32,
+            cap_factor: 4.0,
+            block_c: 4,
+        };
+        assert!(KvPool::for_model(&cfg, 1, DEFAULT_BLOCK_TOKENS).is_err());
+        let p = KvPool::for_model(&cfg, 1 << 20, DEFAULT_BLOCK_TOKENS).unwrap();
+        assert_eq!(p.block_bytes(), cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS));
+        assert_eq!(p.total_blocks(), (1 << 20) / p.block_bytes());
+    }
+}

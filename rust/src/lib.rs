@@ -8,7 +8,8 @@
 //! * **L3** is this crate: the retraining-free compression toolchain
 //!   (calibration → similarity metrics → clustering → merging/pruning),
 //!   the zero-shot evaluation harness, an autoregressive [`generate`]
-//!   API with KV-cached decode, a serving layer that mixes dynamic-batched
+//!   API with KV-cached decode backed by the budgeted paged [`kvpool`]
+//!   (copy-on-write prefix sharing, memory-aware admission), a serving layer that mixes dynamic-batched
 //!   scoring with continuous-batched generation (`SERVING.md`), and the
 //!   bench harness regenerating every table/figure of the paper. Its hot
 //!   paths run on the [`parallel`] scoped thread pool with deterministic
@@ -51,6 +52,7 @@ pub mod config;
 pub mod data;
 pub mod eval;
 pub mod generate;
+pub mod kvpool;
 pub mod merging;
 pub mod model;
 pub mod parallel;

@@ -327,6 +327,7 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         artifacts_root: arts.root.to_string_lossy().into_owned(),
         model: model.clone(),
         compress,
+        kv_budget_bytes: None,
     };
     let handle = serve(
         spec,

@@ -16,6 +16,7 @@ use anyhow::{ensure, Context, Result};
 use crate::backend::{self, Backend, KvCache, ModelState};
 use crate::config::{Artifacts, Manifest, ModelCfg};
 use crate::data::TokenStream;
+use crate::kvpool::{KvPool, PoolHandle, DEFAULT_BLOCK_TOKENS};
 use crate::tensor::Tensor;
 use crate::weights::Weights;
 
@@ -124,6 +125,73 @@ impl ModelContext {
         );
         self.backend
             .run_prefill(model.state.as_ref(), prompt, &model.mask, None)
+    }
+
+    /// A paged KV-cache pool sized for this model under a byte budget
+    /// ([`DEFAULT_BLOCK_TOKENS`]-token blocks). The serving executor
+    /// creates one per served variant; see `SERVING.md` §"KV memory
+    /// model".
+    pub fn kv_pool(&self, budget_bytes: usize) -> Result<PoolHandle> {
+        Ok(PoolHandle::new(KvPool::for_model(
+            &self.cfg,
+            budget_bytes,
+            DEFAULT_BLOCK_TOKENS,
+        )?))
+    }
+
+    /// [`Self::prefill`] into the paged block pool: K/V rows live in
+    /// fixed-size pool blocks (prefix-shared and refcounted) instead of
+    /// per-sequence buffers, and `reserve_tokens` blocks of headroom are
+    /// reserved up front so decode can never fail an allocation. The
+    /// returned cache works with [`Self::decode`] /
+    /// [`Self::decode_batch`] unchanged and is bit-identical to the flat
+    /// path.
+    pub fn prefill_paged(
+        &self,
+        model: &LoadedModel,
+        prompt: &[i32],
+        pool: &PoolHandle,
+        reserve_tokens: usize,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        ensure!(
+            prompt.len() <= self.cfg.t_max,
+            "prompt length {} exceeds t_max {}",
+            prompt.len(),
+            self.cfg.t_max
+        );
+        self.backend.run_prefill_paged(
+            model.state.as_ref(),
+            prompt,
+            &model.mask,
+            None,
+            pool,
+            reserve_tokens,
+        )
+    }
+
+    /// [`Self::prefill_paged`] on a compact r-expert variant.
+    pub fn prefill_paged_compact(
+        &self,
+        model: &CompactModel,
+        prompt: &[i32],
+        pool: &PoolHandle,
+        reserve_tokens: usize,
+    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        ensure!(
+            prompt.len() <= self.cfg.t_max,
+            "prompt length {} exceeds t_max {}",
+            prompt.len(),
+            self.cfg.t_max
+        );
+        let mask = self.full_mask();
+        self.backend.run_prefill_paged(
+            model.state.as_ref(),
+            prompt,
+            &mask,
+            Some(&model.remap),
+            pool,
+            reserve_tokens,
+        )
     }
 
     /// Append one token to an incremental sequence, returning the

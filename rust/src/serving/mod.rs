@@ -31,18 +31,131 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::backend::KvCache;
 use crate::calib::CalibStats;
 use crate::config::Artifacts;
 use crate::eval::log_softmax_at;
 use crate::generate::{Generated, SamplingParams, Session};
+use crate::kvpool::{PoolHandle, DEFAULT_KV_BUDGET_MB, KV_BUDGET_ENV};
 use crate::model::{LoadedModel, ModelContext};
 use crate::pipeline::{Method, Pipeline};
+
+/// Shared state of a [`reply_channel`] pair.
+struct ReplyShared<T> {
+    state: Mutex<ReplyState<T>>,
+    cv: Condvar,
+}
+
+struct ReplyState<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    rx_alive: bool,
+}
+
+/// Sending half of a [`reply_channel`]: like an `mpsc::Sender`, plus
+/// [`ReplyTx::is_closed`] — the executor probes it at step boundaries to
+/// evict generations whose client vanished, instead of decoding to
+/// `max_tokens` for nobody and holding the sequence's KV blocks the whole
+/// time (`std::sync::mpsc` cannot express this: a disconnected receiver is
+/// only observable by consuming a send).
+pub struct ReplyTx<T>(Arc<ReplyShared<T>>);
+
+/// Receiving half of a [`reply_channel`]. Dropping it marks the channel
+/// closed, which the executor observes via [`ReplyTx::is_closed`].
+pub struct ReplyRx<T>(Arc<ReplyShared<T>>);
+
+/// A multi-producer reply channel with disconnect detection. Several
+/// requests may share one channel (replies arrive in the executor's
+/// completion order — the admission-ordering tests rely on this).
+pub fn reply_channel<T>() -> (ReplyTx<T>, ReplyRx<T>) {
+    let shared = Arc::new(ReplyShared {
+        state: Mutex::new(ReplyState { queue: VecDeque::new(), senders: 1, rx_alive: true }),
+        cv: Condvar::new(),
+    });
+    (ReplyTx(Arc::clone(&shared)), ReplyRx(shared))
+}
+
+impl<T> ReplyTx<T> {
+    /// Deliver one value; returns it back when the receiver is gone.
+    pub fn send(&self, value: T) -> std::result::Result<(), T> {
+        let mut st = self.0.state.lock().expect("reply channel poisoned");
+        if !st.rx_alive {
+            return Err(value);
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.0.cv.notify_one();
+        Ok(())
+    }
+
+    /// True once the receiving half was dropped — no send can ever be
+    /// observed again, so work producing one is wasted.
+    pub fn is_closed(&self) -> bool {
+        !self.0.state.lock().expect("reply channel poisoned").rx_alive
+    }
+}
+
+impl<T> Clone for ReplyTx<T> {
+    fn clone(&self) -> Self {
+        self.0.state.lock().expect("reply channel poisoned").senders += 1;
+        ReplyTx(Arc::clone(&self.0))
+    }
+}
+
+impl<T> Drop for ReplyTx<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().expect("reply channel poisoned");
+        st.senders -= 1;
+        let last = st.senders == 0;
+        drop(st);
+        if last {
+            // unblock a receiver waiting on a channel that can no longer
+            // produce values
+            self.0.cv.notify_all();
+        }
+    }
+}
+
+impl<T> ReplyRx<T> {
+    /// Block until a value arrives; errors once every sender is gone and
+    /// the queue is drained (mirrors `mpsc::Receiver::recv`).
+    pub fn recv(&self) -> Result<T> {
+        let mut st = self.0.state.lock().expect("reply channel poisoned");
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(anyhow!("reply channel disconnected"));
+            }
+            st = self.0.cv.wait(st).expect("reply channel poisoned");
+        }
+    }
+
+    /// Non-blocking receive: `Ok(None)` when the queue is empty but
+    /// senders remain.
+    pub fn try_recv(&self) -> Result<Option<T>> {
+        let mut st = self.0.state.lock().expect("reply channel poisoned");
+        if let Some(v) = st.queue.pop_front() {
+            return Ok(Some(v));
+        }
+        if st.senders == 0 {
+            return Err(anyhow!("reply channel disconnected"));
+        }
+        Ok(None)
+    }
+}
+
+impl<T> Drop for ReplyRx<T> {
+    fn drop(&mut self) {
+        self.0.state.lock().expect("reply channel poisoned").rx_alive = false;
+    }
+}
 
 /// How long the executor sleeps on an empty queue before re-checking the
 /// stop flag.
@@ -65,8 +178,12 @@ pub struct GenerateRequest {
     pub prompt: Vec<i32>,
     /// Sampling strategy + stop conditions.
     pub params: SamplingParams,
-    /// Channel receiving the finished generation (or the error).
-    pub reply: Sender<Result<Generated>>,
+    /// Channel receiving the finished generation (or the error). A
+    /// [`ReplyTx`] rather than a plain `Sender` so the executor can detect
+    /// a vanished client ([`ReplyTx::is_closed`]) and evict the sequence —
+    /// releasing its KV blocks — instead of decoding to `max_tokens` into
+    /// the void.
+    pub reply: ReplyTx<Result<Generated>>,
     /// Submission time (drives queue-latency metrics).
     pub enqueued: Instant,
 }
@@ -159,6 +276,16 @@ pub struct Metrics {
     /// the mean decode-batch occupancy — how much concurrency the batched
     /// step actually captured.
     pub decode_steps: AtomicU64,
+    /// Generations evicted because the client dropped its reply channel
+    /// (queued or mid-decode); their KV blocks return to the pool.
+    pub gen_disconnects: AtomicU64,
+    /// Gauge: paged KV blocks currently referenced by live sequences.
+    pub kv_blocks_in_use: AtomicU64,
+    /// Gauge: paged KV blocks referenced by more than one sequence
+    /// (prefix sharing in effect).
+    pub kv_blocks_shared: AtomicU64,
+    /// Gauge: high-water mark of `kv_blocks_in_use` over the pool's life.
+    pub kv_blocks_peak: AtomicU64,
 }
 
 impl Metrics {
@@ -176,6 +303,10 @@ impl Metrics {
             prefill_s: self.prefill_ns.load(Ordering::Relaxed) as f64 / 1e9,
             decode_s: self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9,
             decode_steps: self.decode_steps.load(Ordering::Relaxed),
+            gen_disconnects: self.gen_disconnects.load(Ordering::Relaxed),
+            kv_blocks_in_use: self.kv_blocks_in_use.load(Ordering::Relaxed),
+            kv_blocks_shared: self.kv_blocks_shared.load(Ordering::Relaxed),
+            kv_blocks_peak: self.kv_blocks_peak.load(Ordering::Relaxed),
         }
     }
 }
@@ -205,6 +336,14 @@ pub struct MetricsSnapshot {
     pub decode_s: f64,
     /// Batched decode iterations executed.
     pub decode_steps: u64,
+    /// Generations evicted on client disconnect.
+    pub gen_disconnects: u64,
+    /// Gauge: paged KV blocks referenced by live sequences.
+    pub kv_blocks_in_use: u64,
+    /// Gauge: paged KV blocks shared by more than one sequence.
+    pub kv_blocks_shared: u64,
+    /// Gauge: high-water mark of `kv_blocks_in_use`.
+    pub kv_blocks_peak: u64,
 }
 
 impl MetricsSnapshot {
@@ -284,6 +423,12 @@ pub struct ServeSpec {
     pub model: String,
     /// None = serve the original model; Some = compress first.
     pub compress: Option<(Method, usize, String)>, // (method, r, calib domain)
+    /// Paged KV-cache pool budget in bytes. `None` resolves
+    /// `HCSMOE_KV_BUDGET_MB`, then the 64 MiB default — see `SERVING.md`
+    /// §"KV memory model". Generation prompts are only admitted while the
+    /// pool can reserve their worst-case block count; the rest wait in the
+    /// admission queue.
+    pub kv_budget_bytes: Option<usize>,
 }
 
 /// Client-side handle to a running server.
@@ -319,7 +464,7 @@ impl ServerHandle {
     /// offline [`crate::generate::generate`] call on the same variant —
     /// the server runs the same [`Session`] loop.
     pub fn generate(&self, prompt: &[i32], params: SamplingParams) -> Result<Generated> {
-        let (reply, rx) = channel();
+        let (reply, rx) = reply_channel();
         self.tx
             .send(Request::Generate(GenerateRequest {
                 prompt: prompt.to_vec(),
@@ -374,7 +519,7 @@ struct Pending {
 
 /// One generation sequence in the continuous batch.
 struct ActiveGen {
-    reply: Sender<Result<Generated>>,
+    reply: ReplyTx<Result<Generated>>,
     enqueued: Instant,
     session: Session,
     cache: Box<dyn KvCache>,
@@ -392,6 +537,28 @@ struct Executor {
     t: usize,
     batcher: BatcherConfig,
     metrics: Arc<Metrics>,
+    /// The paged KV-cache pool every generation's cache lives in — the
+    /// memory budget admission control enforces.
+    pool: PoolHandle,
+}
+
+/// Resolve the pool budget: explicit spec bytes, else `HCSMOE_KV_BUDGET_MB`,
+/// else the 64 MiB default. A *set but malformed* env value is a startup
+/// error — silently falling back to the default would serve a different
+/// memory budget than the operator asked for.
+fn resolve_kv_budget(spec: &ServeSpec) -> Result<usize> {
+    if let Some(bytes) = spec.kv_budget_bytes {
+        return Ok(bytes);
+    }
+    match std::env::var(KV_BUDGET_ENV) {
+        Ok(v) => {
+            let mb: usize = v.trim().parse().map_err(|_| {
+                anyhow!("{KV_BUDGET_ENV}={v:?} is not a whole MiB count (e.g. 64)")
+            })?;
+            Ok(mb * 1024 * 1024)
+        }
+        Err(_) => Ok(DEFAULT_KV_BUDGET_MB * 1024 * 1024),
+    }
 }
 
 fn executor_loop(
@@ -401,6 +568,7 @@ fn executor_loop(
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
+    let budget = resolve_kv_budget(&spec)?;
     let arts = Artifacts::new(&spec.artifacts_root);
     let ctx = ModelContext::load(&arts, &spec.model)?;
     let model = match &spec.compress {
@@ -412,7 +580,8 @@ fn executor_loop(
         }
     };
     let (bsz, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
-    let exec = Executor { ctx, model, bsz, t, batcher, metrics };
+    let pool = ctx.kv_pool(budget)?;
+    let exec = Executor { ctx, model, bsz, t, batcher, metrics, pool };
     exec.run(rx, stop)
 }
 
@@ -482,15 +651,80 @@ impl Executor {
                 self.flush(&mut pendings, &mut queue)?;
                 oldest = None;
             }
-            // bounded admission: at most one prefill between decode steps
-            if let Some(req) = admissions.pop_front() {
-                self.admit(req, &mut active);
+            // client-disconnect eviction at step boundaries: a sequence
+            // (or queued request) whose reply channel closed would decode
+            // to max_tokens for nobody while pinning its KV blocks —
+            // dropping it here releases the blocks back to the pool
+            let m = &self.metrics;
+            admissions.retain(|r| {
+                let gone = r.reply.is_closed();
+                if gone {
+                    m.gen_disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                !gone
+            });
+            active.retain(|a| {
+                let gone = a.reply.is_closed();
+                if gone {
+                    m.gen_disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                !gone
+            });
+            // bounded, memory-aware admission: at most one prefill between
+            // decode steps, and only when the pool can reserve the
+            // request's worst-case block count (prompt + max_new_tokens);
+            // otherwise the queue head waits — FIFO, so a huge request is
+            // never starved by smaller ones slipping past it
+            if let Some(front) = admissions.front() {
+                let need = self.gen_blocks(front);
+                if need > self.pool.total_blocks() {
+                    // can never fit: answer now instead of deadlocking the
+                    // admission queue behind an impossible reservation
+                    let req = admissions.pop_front().expect("front exists");
+                    let _ = req.reply.send(Err(anyhow!(
+                        "request needs {need} KV blocks but the pool holds only {} \
+                         (raise {KV_BUDGET_ENV})",
+                        self.pool.total_blocks()
+                    )));
+                } else if self.pool.can_reserve(need) {
+                    let req = admissions.pop_front().expect("front exists");
+                    self.admit(req, &mut active);
+                }
             }
             if !active.is_empty() {
                 self.step(&mut active);
             }
+            self.publish_kv_gauges();
         }
         Ok(())
+    }
+
+    /// Worst-case resident length of a request: its prompt plus every
+    /// token `max_new_tokens` allows, clamped to the context window (the
+    /// decode loop stops at `t_max` regardless; an over-long prompt is
+    /// rejected by prefill, the `.max` merely keeps the bound honest until
+    /// then). The single source for BOTH the admission check and the
+    /// reservation passed to prefill — they must never disagree, or
+    /// admission would guarantee a reservation it does not make.
+    fn gen_reserve_tokens(&self, req: &GenerateRequest) -> usize {
+        req.prompt
+            .len()
+            .saturating_add(req.params.max_new_tokens)
+            .min(self.ctx.cfg.t_max)
+            .max(req.prompt.len())
+    }
+
+    /// Worst-case KV blocks a request can occupy (the admission quantity).
+    fn gen_blocks(&self, req: &GenerateRequest) -> usize {
+        self.pool.blocks_for(self.gen_reserve_tokens(req))
+    }
+
+    /// Copy the pool counters into the metrics gauges.
+    fn publish_kv_gauges(&self) {
+        let s = self.pool.stats();
+        self.metrics.kv_blocks_in_use.store(s.in_use as u64, Ordering::Relaxed);
+        self.metrics.kv_blocks_shared.store(s.shared as u64, Ordering::Relaxed);
+        self.metrics.kv_blocks_peak.store(s.peak_in_use as u64, Ordering::Relaxed);
     }
 
     /// Route one incoming request: score rows to the dynamic-batch queue,
@@ -544,19 +778,27 @@ impl Executor {
         }
     }
 
-    /// Prefill one generation request and add it to the continuous batch
-    /// (or answer immediately when it finishes within the first sample).
-    /// Sampling parameters were already validated at intake.
+    /// Prefill one generation request into the paged pool and add it to
+    /// the continuous batch (or answer immediately when it finishes within
+    /// the first sample). The caller verified the pool can reserve the
+    /// request's worst-case block count, so the reservation below cannot
+    /// fail and decode-time allocations are guaranteed. Sampling
+    /// parameters were already validated at intake.
     fn admit(&self, req: GenerateRequest, active: &mut Vec<ActiveGen>) {
         self.metrics.gen_requests.fetch_add(1, Ordering::Relaxed);
+        let reserve_tokens = self.gen_reserve_tokens(&req);
         let t0 = Instant::now();
-        let (cache, logits) = match self.ctx.prefill(&self.model, &req.prompt) {
-            Ok(x) => x,
-            Err(e) => {
-                let _ = req.reply.send(Err(e));
-                return;
-            }
-        };
+        let (cache, logits) =
+            match self
+                .ctx
+                .prefill_paged(&self.model, &req.prompt, &self.pool, reserve_tokens)
+            {
+                Ok(x) => x,
+                Err(e) => {
+                    let _ = req.reply.send(Err(e));
+                    return;
+                }
+            };
         let prefill_s = t0.elapsed().as_secs_f64();
         self.metrics
             .prefill_ns

@@ -211,6 +211,7 @@ fn serving_through_native_backend_matches_direct_scores() {
             artifacts_root: a.root.to_string_lossy().into_owned(),
             model: "mixsim".into(),
             compress: None,
+            kv_budget_bytes: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,

@@ -13,7 +13,6 @@
 //! head-of-line regression).
 
 use std::path::PathBuf;
-use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use hc_smoe::backend::native::{forward_logits_with, NativeBackend};
@@ -24,7 +23,7 @@ use hc_smoe::eval::Evaluator;
 use hc_smoe::generate::{generate, SamplingParams};
 use hc_smoe::model::ModelContext;
 use hc_smoe::pipeline::MASK_OFF;
-use hc_smoe::serving::{serve, BatcherConfig, GenerateRequest, Request, ServeSpec};
+use hc_smoe::serving::{reply_channel, serve, BatcherConfig, GenerateRequest, Request, ServeSpec};
 use hc_smoe::weights::Weights;
 
 fn tiny_cfg(shared: bool) -> ModelCfg {
@@ -376,7 +375,7 @@ fn server_batches_decode_under_concurrent_mixed_load() {
     let tx = handle.sender();
     let mut rxs = Vec::new();
     for (gi, &seed) in seeds.iter().enumerate() {
-        let (reply, rx) = channel();
+        let (reply, rx) = reply_channel();
         tx.send(Request::Generate(GenerateRequest {
             prompt: prompt.to_vec(),
             params: SamplingParams::top_k(8, 0.8, seed, 20 + gi, None),
@@ -452,7 +451,7 @@ fn long_prompt_admission_does_not_stall_active_decode() {
     // executor's completion order — the assertion below is on ordering,
     // not wall-clock, and cannot flake on a loaded runner.
     let tx = handle.sender();
-    let (reply, rx) = channel();
+    let (reply, rx) = reply_channel();
 
     // one in-flight sequence that needs 3 decode steps after admission...
     tx.send(Request::Generate(GenerateRequest {

@@ -287,6 +287,7 @@ fn degenerate_sampling_params_error_cleanly() {
             artifacts_root: a.root.to_string_lossy().into_owned(),
             model: "qwensim".into(),
             compress: None,
+            kv_budget_bytes: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -309,6 +310,7 @@ fn server_mixed_load_matches_offline_results() {
             artifacts_root: a.root.to_string_lossy().into_owned(),
             model: "qwensim".into(),
             compress: None,
+            kv_budget_bytes: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
@@ -387,6 +389,7 @@ fn empty_prompt_rows_do_not_panic_the_executor() {
             artifacts_root: a.root.to_string_lossy().into_owned(),
             model: "mixsim".into(),
             compress: None,
+            kv_budget_bytes: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

@@ -26,6 +26,7 @@ fn spec(arts: &Artifacts) -> ServeSpec {
         artifacts_root: arts.root.to_string_lossy().into_owned(),
         model: "mixsim".into(),
         compress: None,
+        kv_budget_bytes: None,
     }
 }
 

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Gate the paged KV-cache pool contracts in CI (backend-e2e job):
+#
+#  1. `cargo test --test kvpool` — paged==flat bit-identity across layouts
+#     and thread counts, prefix-sharing/copy-on-write correctness,
+#     blocked-then-admitted admission ordering, the budgeted long-context
+#     burst, and the no-block-leak assertion after a mixed workload.
+#  2. BENCH_generate.json must contain the `kv_cache_sweep` section and
+#     every row must report `"reallocs": 0` — steady-state decode neither
+#     regrows the flat cache's buffers (the prefill now reserves headroom)
+#     nor copies rows on paged block allocation.
+#
+# With no argument the JSON is probed in rust/ then . (cargo runs bench
+# binaries with the package root as working directory).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> kvpool test suite (bit-identity, sharing, admission, no-leak)"
+cargo test --release --test kvpool -q
+
+f="${1:-}"
+if [ -z "$f" ]; then
+  for cand in rust/BENCH_generate.json BENCH_generate.json; do
+    [ -f "$cand" ] && { f="$cand"; break; }
+  done
+fi
+[ -n "$f" ] && [ -f "$f" ] || { echo "check_kvpool: BENCH_generate.json not found (looked in rust/ and .)"; exit 1; }
+
+grep -q '"kv_cache_sweep"' "$f" \
+  || { echo "check_kvpool: $f has no kv_cache_sweep section"; exit 1; }
+
+rows=$(grep -c '"reallocs":' "$f" || true)
+[ "$rows" -ge 2 ] || { echo "check_kvpool: kv_cache_sweep has $rows rows, expected >= 2 (flat + paged)"; exit 1; }
+
+bad=$(grep '"reallocs":' "$f" | grep -v '"reallocs": 0}' || true)
+if [ -n "$bad" ]; then
+  echo "check_kvpool: steady-state decode reallocated — the no-realloc contract regressed:"
+  echo "$bad"
+  exit 1
+fi
+echo "check_kvpool: OK — $rows kv_cache_sweep rows, all reallocs = 0 ($f)"
