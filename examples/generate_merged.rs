@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
             model: "qwensim".into(),
             compress: Some((method, r, "general".into())),
             kv_budget_bytes: None,
+            prefill_chunk: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,

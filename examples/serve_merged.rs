@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             "general".into(),
         )),
         kv_budget_bytes: None,
+        prefill_chunk: None,
     };
     println!("starting executor (compresses {n_exp} -> {r} experts at startup)...");
     let handle = serve(

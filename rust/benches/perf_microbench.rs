@@ -18,16 +18,17 @@
 use std::time::{Duration, Instant};
 
 use hc_smoe::backend::native::{forward_calib_with, forward_logits_with, NativeBackend};
-use hc_smoe::backend::{Backend, KvCache};
+use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::bench_support::{
     self, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, KvCacheBenchRow, Lab,
-    ParallelBenchRow,
+    ParallelBenchRow, SchedBenchRow,
 };
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
 use hc_smoe::config::ModelCfg;
+use hc_smoe::generate::SamplingParams;
 use hc_smoe::kvpool::{KvPool, PoolHandle, DEFAULT_BLOCK_TOKENS};
 use hc_smoe::report::Table;
-use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+use hc_smoe::serving::{serve, BatcherConfig, Priority, ServeSpec};
 use hc_smoe::similarity::{
     distance_matrix_serial, distance_matrix_with, features, Distance, Metric,
 };
@@ -265,9 +266,13 @@ fn generate_sweep(threads: usize, table: &mut Table) -> Vec<GenerateBenchRow> {
             let cached = |_threads: usize| -> f64 {
                 let mut samples = Vec::with_capacity(iters);
                 for _ in 0..iters {
-                    let (mut cache, _) = backend
-                        .run_prefill(state, &prompt, &mask, remap_opt)
-                        .expect("prefill");
+                    let mut opts = PrefillOpts::new(&mask);
+                    if let Some(rm) = remap_opt {
+                        opts = opts.remap(rm);
+                    }
+                    let (cache, _) =
+                        backend.run_prefill(state, &prompt, opts).expect("prefill");
+                    let mut cache = cache.expect("fresh prefill returns a cache");
                     let t0 = Instant::now();
                     for i in 0..n_decode {
                         backend
@@ -366,9 +371,10 @@ fn decode_batch_sweep(table: &mut Table) -> Vec<DecodeBatchRow> {
                 .iter()
                 .map(|p| {
                     backend
-                        .run_prefill(state.as_ref(), p, &mask, None)
+                        .run_prefill(state.as_ref(), p, PrefillOpts::new(&mask))
                         .expect("prefill")
                         .0
+                        .expect("fresh prefill returns a cache")
                 })
                 .collect()
         };
@@ -453,22 +459,14 @@ fn kv_cache_sweep(table: &mut Table) -> Vec<KvCacheBenchRow> {
             let mut samples = Vec::with_capacity(iters);
             let mut reallocs = 0usize;
             for _ in 0..iters {
-                let (mut cache, _) = if paged {
-                    backend
-                        .run_prefill_paged(
-                            state.as_ref(),
-                            &prompt,
-                            &mask,
-                            None,
-                            &pool,
-                            prompt.len() + n_decode,
-                        )
-                        .expect("paged prefill")
+                let opts = if paged {
+                    PrefillOpts::new(&mask).paged(&pool, prompt.len() + n_decode)
                 } else {
-                    backend
-                        .run_prefill(state.as_ref(), &prompt, &mask, None)
-                        .expect("prefill")
+                    PrefillOpts::new(&mask)
                 };
+                let (cache, _) =
+                    backend.run_prefill(state.as_ref(), &prompt, opts).expect("prefill");
+                let mut cache = cache.expect("fresh prefill returns a cache");
                 let mut cap = cache.capacity_bytes();
                 let t0 = Instant::now();
                 for i in 0..n_decode {
@@ -510,6 +508,97 @@ fn kv_cache_sweep(table: &mut Table) -> Vec<KvCacheBenchRow> {
         }
     }
     rows
+}
+
+/// Mixed-load scheduler sweep → the `sched_sweep` section of
+/// BENCH_generate.json: a live server (synthesized `qwensim` artifacts, a
+/// deliberately small 8-block KV pool) is driven with two concurrent
+/// long-prompt Batch clients plus a stream of short Interactive requests,
+/// once with whole-prompt prefills and once with a 4-token chunk. The
+/// Interactive inter-token latency quantiles come from the server's
+/// [`hc_smoe::serving::LatencyHisto`]; chunking bounds the decode stall a
+/// Batch (re-)prefill can inject between two Interactive tokens, so the
+/// chunked p99 must not exceed the unchunked one
+/// (`scripts/check_sched.sh` gates this). The tight pool also makes the
+/// two Batch reservations fill it completely, so Interactive arrivals
+/// exercise the preemption path (`preemptions` in the rows).
+fn sched_sweep(table: &mut Table) -> anyhow::Result<Vec<SchedBenchRow>> {
+    let smoke = bench_support::smoke();
+    let arts = bench_support::ensure_artifacts()?;
+    let root = arts.root.to_string_lossy().into_owned();
+    // qwensim synth config: L=2, d=32 → 512 B/token, 8 KiB per 16-token
+    // block; 64 KiB = 8 blocks. One Batch job reserves 4 (48-token prompt
+    // + 16 new = 64 = t_max), so two concurrent Batch jobs fill the pool.
+    let kv_budget = 64 * 1024;
+    let batch_clients = 2usize;
+    let (jobs_per_client, interactive) = if smoke { (1usize, 3usize) } else { (2, 12) };
+    let mut rows = Vec::new();
+    for (mode, chunk) in [("unchunked", None), ("chunked", Some(4usize))] {
+        let spec = ServeSpec {
+            artifacts_root: root.clone(),
+            model: "qwensim".into(),
+            compress: None,
+            kv_budget_bytes: Some(kv_budget),
+            prefill_chunk: chunk,
+        };
+        let handle = serve(
+            spec,
+            BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(4) },
+        )?;
+        let h = &handle;
+        std::thread::scope(|s| {
+            for c in 0..batch_clients {
+                s.spawn(move || {
+                    for j in 0..jobs_per_client {
+                        let prompt: Vec<i32> =
+                            (0..48).map(|i| (16 + (i * 5 + c * 3 + j) % 64) as i32).collect();
+                        h.generate_opts(
+                            &prompt,
+                            SamplingParams::greedy(16, None),
+                            Priority::Batch,
+                            None,
+                        )
+                        .expect("batch generation");
+                    }
+                });
+            }
+            s.spawn(move || {
+                for i in 0..interactive {
+                    let prompt: Vec<i32> =
+                        (0..6).map(|p| (16 + (p * 3 + i) % 64) as i32).collect();
+                    h.generate_opts(
+                        &prompt,
+                        SamplingParams::greedy(6, None),
+                        Priority::Interactive,
+                        Some(Duration::from_secs(60)),
+                    )
+                    .expect("interactive generation");
+                }
+            });
+        });
+        let snap = handle.metrics.snapshot();
+        handle.shutdown()?;
+        table.row(vec![
+            format!("{mode} (chunk={})", chunk.unwrap_or(0)),
+            format!("{:.3}", snap.itl_p50_ms),
+            format!("{:.3}", snap.itl_p99_ms),
+            format!(
+                "preempt={} chunked={} stall≤{}",
+                snap.preemptions, snap.chunked_prefills, snap.prefill_stall_tokens_max
+            ),
+        ]);
+        rows.push(SchedBenchRow {
+            mode: mode.into(),
+            chunk: chunk.unwrap_or(0),
+            interactive,
+            batch_jobs: batch_clients * jobs_per_client,
+            p50_ms: snap.itl_p50_ms,
+            p99_ms: snap.itl_p99_ms,
+            preemptions: snap.preemptions,
+            chunked_prefills: snap.chunked_prefills,
+        });
+    }
+    Ok(rows)
 }
 
 fn artifact_sections() -> anyhow::Result<()> {
@@ -613,6 +702,7 @@ fn artifact_sections() -> anyhow::Result<()> {
             model: "qwensim".into(),
             compress: None,
             kv_budget_bytes: None,
+            prefill_chunk: None,
         };
         let handle = serve(
             spec,
@@ -772,6 +862,13 @@ fn main() -> anyhow::Result<()> {
     let kv_rows = kv_cache_sweep(&mut ktable);
     ktable.print();
     ktable.append_to("bench_results.md")?;
+    let mut stable = Table::new(
+        "Scheduler: chunked vs unchunked prefill under mixed Interactive+Batch load",
+        &["Mode", "ITL p50 ms", "ITL p99 ms", "scheduler counters"],
+    );
+    let sched_rows = sched_sweep(&mut stable)?;
+    stable.print();
+    stable.append_to("bench_results.md")?;
     let gen_measurement = if bench_support::smoke() {
         "SMOKE MODE: single sample, harness check only — not a perf measurement"
     } else {
@@ -784,7 +881,10 @@ fn main() -> anyhow::Result<()> {
          same code), uncached re-forwards the whole prefix per token; decode_batch_sweep \
          compares one run_decode_batch call per step against B run_decode calls per step \
          (bit-identical outputs, wall-clock only); kv_cache_sweep compares flat vs paged \
-         caches on one sequence (reallocs counts Vec regrowth copies — 0 is the contract)"
+         caches on one sequence (reallocs counts Vec regrowth copies — 0 is the contract); \
+         sched_sweep drives a live server with mixed Interactive+Batch load on an 8-block \
+         KV pool, chunked (4-token) vs unchunked prefill (chunked p99 ITL must not exceed \
+         unchunked)"
     );
     bench_support::write_generate_json(
         GENERATE_JSON,
@@ -794,6 +894,7 @@ fn main() -> anyhow::Result<()> {
         &grows,
         &batch_rows,
         &kv_rows,
+        &sched_rows,
     )?;
     println!("wrote {GENERATE_JSON}");
 

@@ -27,12 +27,17 @@
 //! Besides the batched scoring/calibration entry points, the trait exposes
 //! an **incremental** pair — [`Backend::run_prefill`] /
 //! [`Backend::run_decode`] — for autoregressive generation: prefill runs
-//! the prompt once and hands back an opaque per-sequence [`KvCache`];
+//! prompt tokens and hands back an opaque per-sequence [`KvCache`];
 //! decode then appends one token at O(t) cost instead of the O(t²) of
-//! re-running the full forward per emitted token. The native backend
-//! implements it with per-layer K/V caching; the PJRT backend reports it
-//! as unsupported until incremental HLO entry points are lowered (see
-//! `SERVING.md`).
+//! re-running the full forward per emitted token. `run_prefill` is the
+//! **single** prefill entry point: a [`PrefillOpts`] value selects the
+//! cache flavor ([`CacheMode::Flat`] buffers or a [`CacheMode::Paged`]
+//! block pool) and can resume an existing cache with further prompt
+//! tokens (`resume_from`) — the chunked-prefill path the serving
+//! scheduler interleaves with decode steps. The native backend implements
+//! all of it with per-layer K/V caching; the PJRT backend reports the
+//! incremental path as unsupported until incremental HLO entry points are
+//! lowered (see `SERVING.md`).
 
 pub mod native;
 pub mod pjrt;
@@ -83,6 +88,79 @@ pub trait KvCache {
     /// no-realloc property.
     fn capacity_bytes(&self) -> usize {
         self.byte_size()
+    }
+}
+
+/// Where a fresh prefill stores its K/V rows (ignored when
+/// [`PrefillOpts::resume_from`] continues an existing cache, which keeps
+/// its own storage).
+pub enum CacheMode<'a> {
+    /// Per-sequence `Vec` buffers, pre-reserved to `t_max` so steady-state
+    /// decode never reallocates. The standalone-generation default.
+    Flat,
+    /// Fixed-size blocks allocated from a shared [`crate::kvpool::KvPool`]
+    /// — the memory-budgeted serving path (see `SERVING.md`, "KV memory
+    /// model"). `reserve_tokens` is the total sequence length (prompt +
+    /// planned decode) whose blocks are reserved up front, so an admitted
+    /// sequence can never fail an allocation mid-decode; pass the prompt
+    /// length for best-effort decoding.
+    Paged {
+        /// Pool the sequence's blocks are drawn from.
+        pool: &'a crate::kvpool::PoolHandle,
+        /// Sequence length (tokens) to reserve blocks for up front.
+        reserve_tokens: usize,
+    },
+}
+
+/// Options for [`Backend::run_prefill`]: router mask/remap, the cache
+/// flavor for a fresh sequence, and the optional resume handle that turns
+/// the call into a chunk-append on an existing cache.
+///
+/// Built chainable-style:
+///
+/// ```ignore
+/// let opts = PrefillOpts::new(&mask).remap(&remap).paged(&pool, 40);
+/// ```
+pub struct PrefillOpts<'a> {
+    /// Additive `[n_layer * n_exp]` router mask (same meaning as in
+    /// [`Backend::run_logits`]).
+    pub mask: &'a [f32],
+    /// Optional `[n_layer * n_exp]` expert→slot table for compact
+    /// variants.
+    pub remap: Option<&'a [i32]>,
+    /// Storage for a **fresh** sequence; ignored when `resume_from` is
+    /// set.
+    pub cache: CacheMode<'a>,
+    /// When set, the call appends `ids` to this existing cache (flat or
+    /// paged — whatever flavor it was created with) instead of starting a
+    /// new sequence, and returns `None` in the cache slot.
+    pub resume_from: Option<&'a mut dyn KvCache>,
+}
+
+impl<'a> PrefillOpts<'a> {
+    /// Flat-cache, full-layout, fresh-sequence options for `mask`.
+    pub fn new(mask: &'a [f32]) -> Self {
+        Self { mask, remap: None, cache: CacheMode::Flat, resume_from: None }
+    }
+
+    /// Route through the compact expert→slot table `remap`.
+    pub fn remap(mut self, remap: &'a [i32]) -> Self {
+        self.remap = Some(remap);
+        self
+    }
+
+    /// Store the fresh sequence in `pool` blocks, reserving
+    /// `reserve_tokens` tokens' worth up front (see [`CacheMode::Paged`]).
+    pub fn paged(mut self, pool: &'a crate::kvpool::PoolHandle, reserve_tokens: usize) -> Self {
+        self.cache = CacheMode::Paged { pool, reserve_tokens };
+        self
+    }
+
+    /// Append `ids` to an existing cache instead of starting a new
+    /// sequence (chunked prefill; see [`Backend::run_prefill`]).
+    pub fn resume(mut self, cache: &'a mut dyn KvCache) -> Self {
+        self.resume_from = Some(cache);
+        self
     }
 }
 
@@ -138,20 +216,39 @@ pub trait Backend {
         t_act: usize,
     ) -> Result<Vec<Tensor>>;
 
-    /// Incremental inference, part 1: run the forward over a whole prompt
-    /// (one sequence, `ids.len()` tokens), returning the sequence's
-    /// [`KvCache`] plus the **last position's** next-token logits
-    /// (`[vocab]`). `mask`/`remap` have the same meaning as in
-    /// [`Backend::run_logits`].
+    /// Incremental inference, part 1 — the **single** prefill entry point
+    /// for every cache flavor. Forward `ids` (one sequence) and return the
+    /// **last position's** next-token logits (`[vocab]`) plus, for a fresh
+    /// sequence, its [`KvCache`]:
     ///
-    /// The native backend guarantees the returned logits are bit-identical
-    /// to the last row of `run_logits` over the same prompt (see
-    /// [`Backend::run_decode`] for the full contract).
+    /// * `opts.resume_from: None` → start a new sequence over the whole
+    ///   `ids` prompt, storing K/V per `opts.cache`
+    ///   ([`CacheMode::Flat`] buffers or [`CacheMode::Paged`] pool
+    ///   blocks), and return `(Some(cache), logits)`.
+    /// * `opts.resume_from: Some(cache)` → treat `ids` as the **next
+    ///   chunk** of a longer prompt: append its K/V rows to the existing
+    ///   cache (whatever flavor it was created with — `opts.cache` is
+    ///   ignored) via the decode-path append machinery and return
+    ///   `(None, logits)`. This is what the serving scheduler uses to
+    ///   interleave long prefills with decode steps (`HCSMOE_PREFILL_CHUNK`).
+    ///
+    /// Contract (native backend): the logits after prefilling a prompt in
+    /// any chunking — whole-prompt, or a fresh call plus any sequence of
+    /// resumed chunks — are **bit-identical** to each other, to the flat
+    /// vs paged storage choice, and to the last row of
+    /// [`Backend::run_logits`] over the same tokens, under the same
+    /// drop-free proviso as [`Backend::run_decode`] (each position's
+    /// expert-capacity cut is taken at its own sequence length; the
+    /// synthesized artifact sets are drop-free, making the equivalence
+    /// exact there — `rust/tests/scheduler.rs` pins it). Paged caches
+    /// additionally prefix-share their first chunk's full blocks and
+    /// release everything on drop, exactly as before
+    /// (`rust/tests/kvpool.rs`).
     ///
     /// # Examples
     ///
     /// ```
-    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache};
+    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache, PrefillOpts};
     /// use hc_smoe::config::ModelCfg;
     /// use hc_smoe::weights::Weights;
     ///
@@ -165,21 +262,35 @@ pub trait Backend {
     /// let state = backend.load_model(&w, cfg.n_exp).unwrap();
     /// let mask = vec![0.0; cfg.n_layer * cfg.n_exp];
     ///
-    /// let (cache, logits) = backend.run_prefill(state.as_ref(), &[1, 4, 9], &mask, None).unwrap();
+    /// let (cache, logits) = backend
+    ///     .run_prefill(state.as_ref(), &[1, 4, 9], PrefillOpts::new(&mask))
+    ///     .unwrap();
+    /// let cache = cache.expect("fresh prefill returns a cache");
     /// assert_eq!(cache.seq_len(), 3);
     /// assert_eq!(logits.len(), cfg.vocab);
     ///
     /// // bit-identical to the last row of the full scoring forward
     /// let full = backend.run_logits(state.as_ref(), &[1, 4, 9], 1, 3, &mask, None).unwrap();
     /// assert_eq!(&full.data()[2 * cfg.vocab..], &logits[..]);
+    ///
+    /// // ... and to prefilling the same prompt in two chunks
+    /// let (chunk_cache, _) = backend
+    ///     .run_prefill(state.as_ref(), &[1, 4], PrefillOpts::new(&mask))
+    ///     .unwrap();
+    /// let mut chunk_cache = chunk_cache.unwrap();
+    /// let resumed = backend
+    ///     .run_prefill(state.as_ref(), &[9], PrefillOpts::new(&mask).resume(chunk_cache.as_mut()))
+    ///     .unwrap();
+    /// assert!(resumed.0.is_none());
+    /// assert_eq!(chunk_cache.seq_len(), 3);
+    /// assert_eq!(resumed.1, logits);
     /// ```
     fn run_prefill(
         &self,
         state: &dyn ModelState,
         ids: &[i32],
-        mask: &[f32],
-        remap: Option<&[i32]>,
-    ) -> Result<(Box<dyn KvCache>, Vec<f32>)>;
+        opts: PrefillOpts<'_>,
+    ) -> Result<(Option<Box<dyn KvCache>>, Vec<f32>)>;
 
     /// Incremental inference, part 2: append **one** token to a sequence
     /// and return the next-token logits (`[vocab]`) at the new position.
@@ -199,7 +310,7 @@ pub trait Backend {
     /// # Examples
     ///
     /// ```
-    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache};
+    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache, PrefillOpts};
     /// use hc_smoe::config::ModelCfg;
     /// use hc_smoe::weights::Weights;
     ///
@@ -213,7 +324,10 @@ pub trait Backend {
     /// let state = backend.load_model(&w, cfg.n_exp).unwrap();
     /// let mask = vec![0.0; cfg.n_layer * cfg.n_exp];
     ///
-    /// let (mut cache, _) = backend.run_prefill(state.as_ref(), &[1, 4], &mask, None).unwrap();
+    /// let (cache, _) = backend
+    ///     .run_prefill(state.as_ref(), &[1, 4], PrefillOpts::new(&mask))
+    ///     .unwrap();
+    /// let mut cache = cache.unwrap();
     /// let step = backend.run_decode(state.as_ref(), cache.as_mut(), 9, &mask, None).unwrap();
     /// assert_eq!(cache.seq_len(), 3);
     ///
@@ -253,7 +367,7 @@ pub trait Backend {
     /// # Examples
     ///
     /// ```
-    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache};
+    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache, PrefillOpts};
     /// use hc_smoe::config::ModelCfg;
     /// use hc_smoe::weights::Weights;
     ///
@@ -268,8 +382,11 @@ pub trait Backend {
     /// let mask = vec![0.0; cfg.n_layer * cfg.n_exp];
     ///
     /// // two sequences of different lengths decode together
-    /// let (mut ca, _) = backend.run_prefill(state.as_ref(), &[1, 4], &mask, None).unwrap();
-    /// let (mut cb, _) = backend.run_prefill(state.as_ref(), &[2, 7, 9], &mask, None).unwrap();
+    /// let prefill = |ids: &[i32]| {
+    ///     let (c, _) = backend.run_prefill(state.as_ref(), ids, PrefillOpts::new(&mask)).unwrap();
+    ///     c.unwrap()
+    /// };
+    /// let (mut ca, mut cb) = (prefill(&[1, 4]), prefill(&[2, 7, 9]));
     /// let mut caches: Vec<&mut dyn KvCache> = vec![ca.as_mut(), cb.as_mut()];
     /// let rows = backend
     ///     .run_decode_batch(state.as_ref(), &mut caches, &[5, 3], &mask, None)
@@ -289,55 +406,22 @@ pub trait Backend {
         mask: &[f32],
         remap: Option<&[i32]>,
     ) -> Result<Vec<Vec<f32>>>;
-
-    /// [`Backend::run_prefill`] into a **paged** KV cache: the sequence's
-    /// K/V rows are stored as fixed-size blocks allocated from the given
-    /// [`crate::kvpool::KvPool`] instead of per-sequence `Vec` buffers —
-    /// the memory-budgeted serving path (see `SERVING.md`, "KV memory
-    /// model"). `reserve_tokens` is the total sequence length (prompt +
-    /// planned decode) whose blocks are reserved up front, so an admitted
-    /// sequence can never fail an allocation mid-decode; pass the prompt
-    /// length for best-effort decoding. The returned cache is accepted by
-    /// [`Backend::run_decode`] / [`Backend::run_decode_batch`]
-    /// transparently, and its logits — prefill and every subsequent decode
-    /// step — are **bit-identical** to the flat-cache path
-    /// (`rust/tests/kvpool.rs` pins this across layouts and thread
-    /// counts). Dropping the cache releases its blocks and any unused
-    /// reservation back to the pool.
-    ///
-    /// The default implementation reports the backend as non-paged; the
-    /// native backend overrides it.
-    fn run_prefill_paged(
-        &self,
-        state: &dyn ModelState,
-        ids: &[i32],
-        mask: &[f32],
-        remap: Option<&[i32]>,
-        pool: &crate::kvpool::PoolHandle,
-        reserve_tokens: usize,
-    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
-        let _ = (state, ids, mask, remap, pool, reserve_tokens);
-        Err(anyhow!(
-            "the {} backend does not support the paged KV-cache pool; \
-             run generation on the native backend (unset HCSMOE_BACKEND or \
-             set it to \"native\")",
-            self.name()
-        ))
-    }
 }
 
-/// Environment variable selecting the execution backend.
-pub const BACKEND_ENV: &str = "HCSMOE_BACKEND";
+/// Environment variable selecting the execution backend (re-exported from
+/// [`crate::config::env`], where every runtime knob parses).
+pub use crate::config::env::BACKEND_ENV;
 
 /// Construct the backend selected by [`BACKEND_ENV`] (default: native).
+/// Parsing/validation lives in [`crate::config::env::backend_kind`].
 pub fn from_env(arts: &Artifacts, cfg: &ModelCfg) -> Result<Box<dyn Backend>> {
-    let choice = std::env::var(BACKEND_ENV).unwrap_or_else(|_| "native".into());
-    match choice.as_str() {
-        "native" | "" => Ok(Box::new(native::NativeBackend::new(cfg.clone()))),
-        "pjrt" => Ok(Box::new(pjrt::PjrtBackend::new(arts.clone(), cfg.clone())?)),
-        other => Err(anyhow!(
-            "unknown {BACKEND_ENV}={other:?} (expected \"native\" or \"pjrt\")"
-        )),
+    match crate::config::env::backend_kind()? {
+        crate::config::env::BackendKind::Native => {
+            Ok(Box::new(native::NativeBackend::new(cfg.clone())))
+        }
+        crate::config::env::BackendKind::Pjrt => {
+            Ok(Box::new(pjrt::PjrtBackend::new(arts.clone(), cfg.clone())?))
+        }
     }
 }
 

@@ -25,7 +25,9 @@
 //! The incremental pair (`run_prefill`/`run_decode`) reuses the exact same
 //! building blocks: prefill is the scoring forward with the per-layer K/V
 //! projections captured into a [`NativeKvCache`] and the dispatch counts
-//! carried over; decode computes one attention row against the cached K/V
+//! carried over (or, when resuming via `PrefillOpts::resume`, the chunk
+//! is appended through the decode-path cache machinery at its absolute
+//! positions); decode computes one attention row against the cached K/V
 //! and one-token MoE dispatch against the cumulative counts, so every
 //! f32 operation (and its order) matches the full forward — which is what
 //! makes cached decode logits bit-identical to an uncached re-forward
@@ -57,7 +59,7 @@ use crate::parallel;
 use crate::tensor::{dot, gather_rows, matmul_blocked_with, Tensor};
 use crate::weights::Weights;
 
-use super::{downcast_state, Backend, KvCache, ModelState};
+use super::{downcast_state, Backend, CacheMode, KvCache, ModelState, PrefillOpts};
 
 /// RMSNorm epsilon (mirrors `model.py::rmsnorm`).
 const RMS_EPS: f32 = 1e-6;
@@ -287,12 +289,13 @@ impl NativeBackend {
         }
     }
 
-    /// The whole-prompt forward shared by [`Backend::run_prefill`] (flat
-    /// cache) and [`Backend::run_prefill_paged`] (block pool): one code
-    /// path computes the per-layer K/V rows, dispatch counts and final
-    /// logits, and the two entry points differ only in where the rows are
-    /// *stored* — which is what makes flat-vs-paged bit-identity hold by
-    /// construction (`rust/tests/kvpool.rs` pins it anyway).
+    /// The whole-prompt forward shared by both fresh-sequence flavours of
+    /// [`Backend::run_prefill`] ([`CacheMode::Flat`] buffers and
+    /// [`CacheMode::Paged`] pool blocks): one code path computes the
+    /// per-layer K/V rows, dispatch counts and final logits, and the two
+    /// storage modes differ only in where the rows are *stored* — which is
+    /// what makes flat-vs-paged bit-identity hold by construction
+    /// (`rust/tests/kvpool.rs` pins it anyway).
     fn prefill_forward(
         &self,
         m: &NativeModel,
@@ -645,6 +648,215 @@ impl NativeBackend {
         }
         Ok(logits.chunks(cfg.vocab).map(<[f32]>::to_vec).collect())
     }
+
+    /// The resume arm of [`Backend::run_prefill`]: run the next `c`
+    /// prompt tokens of a chunked prefill through the layer stack and
+    /// append their K/V rows to `existing` (flat or paged — the same
+    /// cache-append machinery the decode path uses, generalised from one
+    /// token to a block of `c`). Every accumulation happens at the
+    /// token's *absolute* position `t0 + i`, so the chunk's rows are
+    /// bit-identical to the same positions of a whole-prompt forward;
+    /// MoE capacity follows the decode convention (each token's own
+    /// cumulative length), which coincides with the whole-prompt rule on
+    /// drop-free token sets — the proviso on the trait contract.
+    ///
+    /// Like the batched decode path, everything is validated — including
+    /// paged block feasibility — before any cache mutation, so a failed
+    /// chunk leaves the sequence exactly where it was.
+    fn prefill_append(
+        &self,
+        m: &NativeModel,
+        ids: &[i32],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+        existing: &mut dyn KvCache,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let c = ids.len();
+        ensure!(c >= 1, "prefill chunk needs at least one token");
+        ensure!(
+            mask.len() == cfg.n_layer * cfg.n_exp,
+            "mask must be [{}, {}]",
+            cfg.n_layer,
+            cfg.n_exp
+        );
+        if let Some(rm) = remap {
+            ensure!(rm.len() == cfg.n_layer * cfg.n_exp, "remap size mismatch");
+            ensure!(
+                rm.iter().all(|&s| s >= 0 && (s as usize) < m.n_slots),
+                "remap slot out of range {}",
+                m.n_slots
+            );
+        }
+        let d = cfg.d;
+        let hd = d / cfg.heads;
+        ensure!(hd * cfg.heads == d, "heads must divide d");
+        let w = &m.weights;
+        let pos = w.get("pos")?;
+        let embed = w.get("embed")?;
+        let mut cs = seq_cache_mut(existing, self.name())?;
+        let t0 = cs.t();
+        ensure!(
+            cs.counts().len() == cfg.n_layer
+                && cs.counts().iter().all(|ct| ct.len() == m.n_slots),
+            "dispatch counts must cover {} slots per layer",
+            m.n_slots
+        );
+        ensure!(
+            pos.shape()[0] >= t0 + c,
+            "sequence length {} exceeds t_max {}",
+            t0 + c,
+            pos.shape()[0]
+        );
+        for &tok in ids {
+            ensure!(
+                tok >= 0 && (tok as usize) < cfg.vocab,
+                "token id {tok} out of vocab range {}",
+                cfg.vocab
+            );
+        }
+        match &cs {
+            SeqCacheMut::Flat(fc) => {
+                ensure!(
+                    fc.k.len() == cfg.n_layer && fc.v.len() == cfg.n_layer,
+                    "kv cache layer count mismatch"
+                );
+                ensure!(
+                    fc.k.iter().all(|kb| kb.len() == t0 * d)
+                        && fc.v.iter().all(|vb| vb.len() == t0 * d),
+                    "kv cache length out of sync"
+                );
+            }
+            SeqCacheMut::Paged(pc) => {
+                let p = pc.seq.pool().borrow();
+                ensure!(
+                    p.n_layer() == cfg.n_layer && p.d() == d,
+                    "kv pool geometry (n_layer={}, d={}) does not match the model \
+                     (n_layer={}, d={})",
+                    p.n_layer(),
+                    p.d(),
+                    cfg.n_layer,
+                    d
+                );
+                ensure!(
+                    pc.seq.table().len() == p.blocks_for(t0),
+                    "paged kv cache block table out of sync"
+                );
+                // feasibility for the whole chunk before any allocation:
+                // reserved growth first, overflow and a possible tail COW
+                // from the best-effort pool
+                let fresh = p.blocks_for(t0 + c).saturating_sub(pc.seq.table().len());
+                let cow = usize::from(pc.seq.append_block_need() == Some(true));
+                let res = fresh.min(pc.seq.reserved_remaining());
+                let unres = fresh - res + cow;
+                ensure!(
+                    p.can_alloc(res, unres),
+                    "kv pool exhausted: prefill chunk needs {} more blocks than the \
+                     budget allows (raise {})",
+                    res + unres,
+                    crate::kvpool::KV_BUDGET_ENV
+                );
+            }
+        }
+        // paged: claim every slot the chunk needs up front (prepare derives
+        // the local offset from the committed length, so the pair must
+        // interleave); the feasibility check above means this cannot fail
+        // midway in a way that strands the sequence
+        let mut slots: Vec<(usize, usize)> = Vec::with_capacity(c);
+        if let SeqCacheMut::Paged(pc) = &mut cs {
+            for _ in 0..c {
+                let slot = pc.seq.prepare_append()?;
+                slots.push(slot);
+                pc.seq.commit_append();
+            }
+        }
+        // embedding + learned positions at absolute positions t0..t0+c
+        let mut h = vec![0f32; c * d];
+        for (i, &tok) in ids.iter().enumerate() {
+            let e = &embed.data()[(tok as usize) * d..(tok as usize) * d + d];
+            let p = &pos.data()[(t0 + i) * d..(t0 + i + 1) * d];
+            for j in 0..d {
+                h[i * d + j] = e[j] + p[j];
+            }
+        }
+        let threads = self.auto_threads(c);
+        let mut row = Vec::new();
+        for l in 0..cfg.n_layer {
+            let ln1 = layer_tensor(w, l, "ln1")?;
+            let x1 = rmsnorm_rows(&h, ln1.data(), d);
+            let wq = layer_tensor(w, l, "attn.wq")?;
+            let wk = layer_tensor(w, l, "attn.wk")?;
+            let wv = layer_tensor(w, l, "attn.wv")?;
+            let wo = layer_tensor(w, l, "attn.wo")?;
+            // chunk-wide projection GEMMs (row-identical to c single rows)
+            let q = mm(&x1, wq.data(), c, d, d, threads);
+            let knew = mm(&x1, wk.data(), c, d, d, threads);
+            let vnew = mm(&x1, wv.data(), c, d, d, threads);
+            // causal attention token by token: each row appends its own
+            // K/V first, then scores against positions 0..=t0+i — the
+            // exact per-position accumulation of the whole-prompt forward
+            let mut ctx = vec![0f32; c * d];
+            match &mut cs {
+                SeqCacheMut::Flat(fc) => {
+                    for i in 0..c {
+                        fc.k[l].extend_from_slice(&knew[i * d..(i + 1) * d]);
+                        fc.v[l].extend_from_slice(&vnew[i * d..(i + 1) * d]);
+                        attention_row_cached(
+                            cfg,
+                            &q[i * d..(i + 1) * d],
+                            &fc.k[l],
+                            &fc.v[l],
+                            t0 + i,
+                            &mut ctx[i * d..(i + 1) * d],
+                            &mut row,
+                        );
+                    }
+                }
+                SeqCacheMut::Paged(pc) => {
+                    for i in 0..c {
+                        let (blk, local) = slots[i];
+                        {
+                            let mut p = pc.seq.pool().borrow_mut();
+                            p.write_k(blk, l, local, &knew[i * d..(i + 1) * d]);
+                            p.write_v(blk, l, local, &vnew[i * d..(i + 1) * d]);
+                        }
+                        let p = pc.seq.pool().borrow();
+                        attention_row_paged(
+                            cfg,
+                            &q[i * d..(i + 1) * d],
+                            &p,
+                            pc.seq.table(),
+                            l,
+                            t0 + i,
+                            &mut ctx[i * d..(i + 1) * d],
+                            &mut row,
+                        );
+                    }
+                }
+            }
+            let a = mm(&ctx, wo.data(), c, d, d, threads);
+            for (hv, av) in h.iter_mut().zip(&a) {
+                *hv += av;
+            }
+            let ln2 = layer_tensor(w, l, "ln2")?;
+            let hf = rmsnorm_rows(&h, ln2.data(), d);
+            let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
+            let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
+            let y = moe_chunk(
+                cfg, w, l, &hf, t0, c, mask_l, remap_l, m.n_slots, threads, &mut cs,
+            )?;
+            for (hv, yv) in h.iter_mut().zip(&y) {
+                *hv += yv;
+            }
+        }
+        if let SeqCacheMut::Flat(fc) = &mut cs {
+            fc.t += c; // paged length was committed per prepared slot above
+        }
+        let ln_f = w.get("ln_f")?;
+        let hn = rmsnorm_rows(&h, ln_f.data(), d);
+        let last = &hn[(c - 1) * d..c * d];
+        Ok(mm(last, m.embed_t(cfg)?, 1, d, cfg.vocab, threads))
+    }
 }
 
 impl Backend for NativeBackend {
@@ -719,71 +931,77 @@ impl Backend for NativeBackend {
         &self,
         state: &dyn ModelState,
         ids: &[i32],
-        mask: &[f32],
-        remap: Option<&[i32]>,
-    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        opts: PrefillOpts<'_>,
+    ) -> Result<(Option<Box<dyn KvCache>>, Vec<f32>)> {
         let m: &NativeModel = downcast_state(state, self.name())?;
-        let parts = self.prefill_forward(m, ids, mask, remap)?;
-        let PrefillParts { mut k, mut v, counts, logits, .. } = parts;
-        // Reserve the decode headroom once, up to the model's context
-        // window: the per-step `extend_from_slice` then never regrows the
-        // buffer, so steady-state decode is reallocation-free (pinned by
-        // the `kv_cache_sweep` microbench's reallocs column). This trades
-        // worst-case residency — exactly `kv_cache_bytes(t_max)`, the
-        // bound any decode can reach — for the zero-realloc guarantee;
-        // memory-conscious serving uses the paged pool instead, where
-        // residency is whole blocks as actually consumed.
-        let headroom = self.cfg.t_max.saturating_sub(ids.len()) * self.cfg.d;
-        for buf in k.iter_mut().chain(v.iter_mut()) {
-            buf.reserve_exact(headroom);
+        let PrefillOpts { mask, remap, cache, resume_from } = opts;
+        if let Some(existing) = resume_from {
+            // chunked prefill: append the next chunk of a longer prompt to
+            // whichever cache flavour the sequence already lives in
+            let logits = self.prefill_append(m, ids, mask, remap, existing)?;
+            return Ok((None, logits));
         }
-        Ok((Box::new(NativeKvCache { t: ids.len(), k, v, counts }), logits))
-    }
-
-    fn run_prefill_paged(
-        &self,
-        state: &dyn ModelState,
-        ids: &[i32],
-        mask: &[f32],
-        remap: Option<&[i32]>,
-        pool: &PoolHandle,
-        reserve_tokens: usize,
-    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
-        let m: &NativeModel = downcast_state(state, self.name())?;
-        let cfg = &self.cfg;
-        {
-            let p = pool.borrow();
-            ensure!(
-                p.n_layer() == cfg.n_layer && p.d() == cfg.d,
-                "kv pool geometry (n_layer={}, d={}) does not match the model \
-                 (n_layer={}, d={})",
-                p.n_layer(),
-                p.d(),
-                cfg.n_layer,
-                cfg.d
-            );
+        match cache {
+            CacheMode::Flat => {
+                let parts = self.prefill_forward(m, ids, mask, remap)?;
+                let PrefillParts { mut k, mut v, counts, logits, .. } = parts;
+                // Reserve the decode headroom once, up to the model's
+                // context window: the per-step `extend_from_slice` then
+                // never regrows the buffer, so steady-state decode is
+                // reallocation-free (pinned by the `kv_cache_sweep`
+                // microbench's reallocs column). This trades worst-case
+                // residency — exactly `kv_cache_bytes(t_max)`, the bound
+                // any decode can reach — for the zero-realloc guarantee;
+                // memory-conscious serving uses the paged pool instead,
+                // where residency is whole blocks as actually consumed.
+                let headroom = self.cfg.t_max.saturating_sub(ids.len()) * self.cfg.d;
+                for buf in k.iter_mut().chain(v.iter_mut()) {
+                    buf.reserve_exact(headroom);
+                }
+                Ok((
+                    Some(Box::new(NativeKvCache { t: ids.len(), k, v, counts })),
+                    logits,
+                ))
+            }
+            CacheMode::Paged { pool, reserve_tokens } => {
+                let cfg = &self.cfg;
+                {
+                    let p = pool.borrow();
+                    ensure!(
+                        p.n_layer() == cfg.n_layer && p.d() == cfg.d,
+                        "kv pool geometry (n_layer={}, d={}) does not match the model \
+                         (n_layer={}, d={})",
+                        p.n_layer(),
+                        p.d(),
+                        cfg.n_layer,
+                        cfg.d
+                    );
+                }
+                // Reserve the worst-case block count BEFORE the forward: a
+                // prompt the budget cannot host must fail without burning
+                // compute, and an admitted sequence can never fail an
+                // allocation mid-decode.
+                let reserve_len = reserve_tokens.max(ids.len()).min(cfg.t_max);
+                let reserve_blocks = pool.blocks_for(reserve_len);
+                let mut seq = PagedSeq::new(pool, reserve_blocks)?;
+                let parts = self.prefill_forward(m, ids, mask, remap)?;
+                // Prefix sharing is only bit-safe between drop-free
+                // prefills: the capacity-drop rule depends on the prompt's
+                // total length, so a dropped token would make the "same"
+                // prefix length-dependent (see the kvpool module docs).
+                // Synthesized sets are drop-free.
+                let drop_free = parts
+                    .counts
+                    .iter()
+                    .all(|layer| layer.iter().all(|&n| n <= parts.cap));
+                let fp = variant_fingerprint(mask, remap, m.n_slots);
+                seq.fill_from_rows(ids, fp, drop_free, &parts.k, &parts.v)?;
+                Ok((
+                    Some(Box::new(NativePagedKvCache { seq, counts: parts.counts })),
+                    parts.logits,
+                ))
+            }
         }
-        // Reserve the worst-case block count BEFORE the forward: a prompt
-        // the budget cannot host must fail without burning compute, and an
-        // admitted sequence can never fail an allocation mid-decode.
-        let reserve_len = reserve_tokens.max(ids.len()).min(cfg.t_max);
-        let reserve_blocks = pool.blocks_for(reserve_len);
-        let mut seq = PagedSeq::new(pool, reserve_blocks)?;
-        let parts = self.prefill_forward(m, ids, mask, remap)?;
-        // Prefix sharing is only bit-safe between drop-free prefills: the
-        // capacity-drop rule depends on the prompt's total length, so a
-        // dropped token would make the "same" prefix length-dependent (see
-        // the kvpool module docs). Synthesized sets are drop-free.
-        let drop_free = parts
-            .counts
-            .iter()
-            .all(|layer| layer.iter().all(|&n| n <= parts.cap));
-        let fp = variant_fingerprint(mask, remap, m.n_slots);
-        seq.fill_from_rows(ids, fp, drop_free, &parts.k, &parts.v)?;
-        Ok((
-            Box::new(NativePagedKvCache { seq, counts: parts.counts }),
-            parts.logits,
-        ))
     }
 
     fn run_decode(
@@ -1298,6 +1516,66 @@ fn moe_decode_batch(
     // grouped execution: all sequences routed to an expert run as one
     // block, through the exact code the scoring/prefill path uses
     moe_execute(cfg, w, layer, hf, bsz, &per_slot, n_slots, threads)
+}
+
+/// One SMoE FFN block over a **prompt chunk** of a single resumed
+/// sequence: `hf` holds `[c, d]` rows at absolute positions
+/// `t0 .. t0 + c`. Routing mirrors the decode path token by token —
+/// capacity at each token's own cumulative length
+/// (`capacity(t0 + i + 1)`), charged against the sequence's cumulative
+/// dispatch counts — so a chunked prefill routes exactly like the same
+/// tokens decoded one step at a time, at any chunking. On drop-free
+/// token sets (the bit-identity proviso on
+/// [`super::Backend::run_prefill`]) this also matches the whole-prompt
+/// forward, whose drop rule uses the final total length for every token.
+/// Expert execution is the shared [`moe_execute`], combining in the
+/// (expert-ascending, queue-order) order both other paths use.
+#[allow(clippy::too_many_arguments)]
+fn moe_chunk(
+    cfg: &ModelCfg,
+    w: &Weights,
+    layer: usize,
+    hf: &[f32],
+    t0: usize,
+    c: usize,
+    mask_l: &[f32],
+    remap_l: Option<&[i32]>,
+    n_slots: usize,
+    threads: usize,
+    cs: &mut SeqCacheMut,
+) -> Result<Vec<f32>> {
+    let d = cfg.d;
+    let n = cfg.n_exp;
+    let router = layer_tensor(w, layer, "router")?;
+    ensure!(router.shape() == [d, n], "router shape mismatch at layer {layer}");
+    let logits = mm(hf, router.data(), c, d, n, threads);
+    let mut per_slot: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_slots];
+    let mut masked = vec![0f32; n];
+    let mut idx = Vec::with_capacity(cfg.k);
+    let mut probs = Vec::with_capacity(cfg.k);
+    let mut scratch = Vec::with_capacity(n);
+    for i in 0..c {
+        let cap = cfg.capacity(t0 + i + 1, n_slots);
+        let row = &logits[i * n..(i + 1) * n];
+        for e in 0..n {
+            masked[e] = row[e] + mask_l[e];
+        }
+        route_topk(&masked, cfg.k, &mut idx, &mut probs, &mut scratch);
+        let counts = cs.counts_mut(layer);
+        for j in 0..cfg.k {
+            let slot = match remap_l {
+                Some(rm) => rm[idx[j]] as usize,
+                None => idx[j],
+            };
+            ensure!(slot < n_slots, "remap slot {slot} out of range {n_slots}");
+            let qpos = counts[slot];
+            counts[slot] += 1;
+            if qpos < cap {
+                per_slot[slot].push((i, probs[j]));
+            }
+        }
+    }
+    moe_execute(cfg, w, layer, hf, c, &per_slot, n_slots, threads)
 }
 
 /// `dssim`'s always-on shared expert: `y += swiglu(hf, shared.*)`.

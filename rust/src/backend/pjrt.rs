@@ -17,7 +17,7 @@ use crate::runtime::{Executable, Input, Runtime};
 use crate::tensor::Tensor;
 use crate::weights::Weights;
 
-use super::{downcast_state, Backend, KvCache, ModelState};
+use super::{downcast_state, Backend, KvCache, ModelState, PrefillOpts};
 
 /// The PJRT backend: one CPU client plus lazily compiled executables.
 pub struct PjrtBackend {
@@ -155,15 +155,15 @@ impl Backend for PjrtBackend {
         &self,
         _state: &dyn ModelState,
         _ids: &[i32],
-        _mask: &[f32],
-        _remap: Option<&[i32]>,
-    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
+        _opts: PrefillOpts<'_>,
+    ) -> Result<(Option<Box<dyn KvCache>>, Vec<f32>)> {
         // The AOT artifact set lowers only the fixed-shape batched entry
         // points (lm_logits_* / calib_*); no incremental prefill/decode
         // executables exist yet. Lowering them (a [1, t] prefill emitting
-        // K/V outputs + a [1, 1] decode taking them as parameters) is the
-        // tracked follow-up — until then, generation runs on the native
-        // backend (the default).
+        // K/V outputs + a [1, 1] decode taking them as parameters — the
+        // paged cache mode and chunked resume additionally need block-table
+        // gather/scatter parameters) is the tracked follow-up — until
+        // then, generation runs on the native backend (the default).
         Err(anyhow!(
             "the pjrt backend has no incremental prefill/decode HLO entry points; \
              run generation on the native backend (unset HCSMOE_BACKEND or set it \
@@ -183,26 +183,6 @@ impl Backend for PjrtBackend {
             "the pjrt backend has no incremental prefill/decode HLO entry points; \
              run generation on the native backend (unset HCSMOE_BACKEND or set it \
              to \"native\")"
-        ))
-    }
-
-    fn run_prefill_paged(
-        &self,
-        _state: &dyn ModelState,
-        _ids: &[i32],
-        _mask: &[f32],
-        _remap: Option<&[i32]>,
-        _pool: &crate::kvpool::PoolHandle,
-        _reserve_tokens: usize,
-    ) -> Result<(Box<dyn KvCache>, Vec<f32>)> {
-        // The paged pool rides the same missing incremental entry points as
-        // run_prefill/run_decode: a paged PJRT path additionally needs the
-        // decode executable lowered against block-table gather/scatter
-        // parameters (see SERVING.md, "PJRT status").
-        Err(anyhow!(
-            "the pjrt backend has no incremental prefill/decode HLO entry points \
-             (paged or flat); run generation on the native backend (unset \
-             HCSMOE_BACKEND or set it to \"native\")"
         ))
     }
 

@@ -358,6 +358,33 @@ impl KvCacheBenchRow {
     }
 }
 
+/// One mixed-load scheduler measurement row for the `sched_sweep` section
+/// of `BENCH_generate.json`: a live server is driven with long-prompt
+/// Batch-class jobs plus short Interactive requests, once with chunked
+/// prefill off (`chunk = 0` in the row ⇒ whole-prompt prefills) and once
+/// with a chunk size set. The inter-token latency quantiles come from the
+/// server's Interactive-only [`crate::serving::LatencyHisto`]; CI asserts
+/// the chunked p99 is no worse than unchunked (`scripts/check_sched.sh`).
+#[derive(Debug, Clone)]
+pub struct SchedBenchRow {
+    /// Measured mode: `unchunked` or `chunked`.
+    pub mode: String,
+    /// Prefill chunk size in prompt tokens (0 = whole-prompt prefills).
+    pub chunk: usize,
+    /// Interactive requests completed.
+    pub interactive: usize,
+    /// Batch-class jobs completed.
+    pub batch_jobs: usize,
+    /// Median Interactive inter-token latency (ms).
+    pub p50_ms: f64,
+    /// 99th-percentile Interactive inter-token latency (ms).
+    pub p99_ms: f64,
+    /// Batch-class preemptions (swap-outs) the run performed.
+    pub preemptions: u64,
+    /// Prefills that were actually split across chunks.
+    pub chunked_prefills: u64,
+}
+
 /// Write the machine-readable generation-throughput report
 /// (`BENCH_generate.json`). Hand-rolled JSON like [`write_parallel_json`];
 /// the schema is stable — later PRs append rows with new `path`/`variant`
@@ -367,7 +394,10 @@ impl KvCacheBenchRow {
 /// compares batched continuous decode against the per-sequence loop at
 /// B ∈ {1, 2, 4, 8} (CI asserts batched ≥ sequential at B = 4); the
 /// `kv_cache_sweep` section compares flat vs paged caches and pins the
-/// zero-realloc steady state (CI gates `reallocs` at 0 per row).
+/// zero-realloc steady state (CI gates `reallocs` at 0 per row); the
+/// `sched_sweep` section compares chunked vs unchunked prefill under a
+/// mixed Interactive+Batch load (CI asserts chunked p99 inter-token
+/// latency ≤ unchunked).
 pub fn write_generate_json(
     path: &str,
     threads: usize,
@@ -376,6 +406,7 @@ pub fn write_generate_json(
     rows: &[GenerateBenchRow],
     batch_rows: &[DecodeBatchRow],
     kv_rows: &[KvCacheBenchRow],
+    sched_rows: &[SchedBenchRow],
 ) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -432,6 +463,24 @@ pub fn write_generate_json(
             r.ms,
             r.tok_s(),
             r.reallocs
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"sched_sweep\": [\n");
+    for (i, r) in sched_rows.iter().enumerate() {
+        let comma = if i + 1 < sched_rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"chunk\": {}, \"interactive\": {}, \
+             \"batch_jobs\": {}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+             \"preemptions\": {}, \"chunked_prefills\": {}}}{comma}\n",
+            json_escape(&r.mode),
+            r.chunk,
+            r.interactive,
+            r.batch_jobs,
+            r.p50_ms,
+            r.p99_ms,
+            r.preemptions,
+            r.chunked_prefills
         ));
     }
     out.push_str("  ]\n}\n");

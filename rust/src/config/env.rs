@@ -1,0 +1,149 @@
+//! Runtime environment knobs, parsed in one place with startup-time
+//! validation.
+//!
+//! Every `HCSMOE_*` variable that changes runtime behavior resolves
+//! through this module so a *set but malformed* value is a startup error
+//! with a uniform message style — silently falling back to a default
+//! would run a different configuration than the operator asked for:
+//!
+//! | variable              | meaning                                   | default      |
+//! |-----------------------|-------------------------------------------|--------------|
+//! | `HCSMOE_BACKEND`      | execution backend (`native` \| `pjrt`)    | `native`     |
+//! | `HCSMOE_KV_BUDGET_MB` | paged KV-cache pool budget, whole MiB     | 64           |
+//! | `HCSMOE_PREFILL_CHUNK`| prompt tokens per prefill chunk (>= 1)    | unchunked    |
+//!
+//! The resolvers below each take the corresponding `ServeSpec` field (or
+//! nothing, for process-wide knobs) and apply the precedence *explicit
+//! spec value → environment → default*. Pure `parse_*` helpers carry the
+//! validation so it is unit-testable without mutating the process
+//! environment (env mutation is racy across test threads).
+
+use anyhow::{anyhow, Result};
+
+/// Environment variable selecting the execution backend
+/// (`native` | `pjrt`, default `native`).
+pub const BACKEND_ENV: &str = "HCSMOE_BACKEND";
+
+/// Environment variable for the paged KV-cache pool budget in MiB.
+pub const KV_BUDGET_ENV: &str = "HCSMOE_KV_BUDGET_MB";
+
+/// Default KV pool budget when neither the spec nor [`KV_BUDGET_ENV`]
+/// says otherwise (MiB).
+pub const DEFAULT_KV_BUDGET_MB: usize = 64;
+
+/// Environment variable bounding how many prompt tokens the serving
+/// scheduler prefills between consecutive decode steps (chunked prefill;
+/// see `SERVING.md` §"Scheduler"). Unset = whole-prompt prefills.
+pub const PREFILL_CHUNK_ENV: &str = "HCSMOE_PREFILL_CHUNK";
+
+/// Which execution backend to construct (see [`crate::backend::from_env`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The pure-Rust CPU interpreter (default).
+    Native,
+    /// The PJRT/HLO path.
+    Pjrt,
+}
+
+/// Resolve [`BACKEND_ENV`] (default: [`BackendKind::Native`]).
+pub fn backend_kind() -> Result<BackendKind> {
+    match std::env::var(BACKEND_ENV) {
+        Ok(v) => parse_backend(&v),
+        Err(_) => Ok(BackendKind::Native),
+    }
+}
+
+fn parse_backend(v: &str) -> Result<BackendKind> {
+    match v {
+        "native" | "" => Ok(BackendKind::Native),
+        "pjrt" => Ok(BackendKind::Pjrt),
+        other => Err(anyhow!(
+            "unknown {BACKEND_ENV}={other:?} (expected \"native\" or \"pjrt\")"
+        )),
+    }
+}
+
+/// Resolve the KV pool budget in **bytes**: the explicit spec value when
+/// given, else [`KV_BUDGET_ENV`], else the
+/// [`DEFAULT_KV_BUDGET_MB`]-MiB default.
+pub fn kv_budget_bytes(explicit: Option<usize>) -> Result<usize> {
+    if let Some(bytes) = explicit {
+        return Ok(bytes);
+    }
+    match std::env::var(KV_BUDGET_ENV) {
+        Ok(v) => Ok(parse_kv_budget_mb(&v)? * 1024 * 1024),
+        Err(_) => Ok(DEFAULT_KV_BUDGET_MB * 1024 * 1024),
+    }
+}
+
+fn parse_kv_budget_mb(v: &str) -> Result<usize> {
+    v.trim()
+        .parse()
+        .map_err(|_| anyhow!("{KV_BUDGET_ENV}={v:?} is not a whole MiB count (e.g. 64)"))
+}
+
+/// Resolve the prefill chunk size in tokens: the explicit spec value when
+/// given, else [`PREFILL_CHUNK_ENV`], else `None` (whole-prompt
+/// prefills). `Some(0)` from the spec is rejected like a malformed env
+/// value — a zero-token chunk could never finish a prefill.
+pub fn prefill_chunk(explicit: Option<usize>) -> Result<Option<usize>> {
+    if let Some(chunk) = explicit {
+        if chunk == 0 {
+            return Err(anyhow!(
+                "prefill_chunk=0 is not a positive token count (e.g. 32)"
+            ));
+        }
+        return Ok(Some(chunk));
+    }
+    match std::env::var(PREFILL_CHUNK_ENV) {
+        Ok(v) => Ok(Some(parse_prefill_chunk(&v)?)),
+        Err(_) => Ok(None),
+    }
+}
+
+fn parse_prefill_chunk(v: &str) -> Result<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(anyhow!(
+            "{PREFILL_CHUNK_ENV}={v:?} is not a positive token count (e.g. 32)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parses_known_names_and_rejects_others() {
+        assert_eq!(parse_backend("native").unwrap(), BackendKind::Native);
+        assert_eq!(parse_backend("").unwrap(), BackendKind::Native);
+        assert_eq!(parse_backend("pjrt").unwrap(), BackendKind::Pjrt);
+        let err = parse_backend("cuda").unwrap_err().to_string();
+        assert!(err.contains("HCSMOE_BACKEND"), "{err}");
+        assert!(err.contains("expected"), "{err}");
+    }
+
+    #[test]
+    fn kv_budget_parses_mib_counts() {
+        assert_eq!(parse_kv_budget_mb("64").unwrap(), 64);
+        assert_eq!(parse_kv_budget_mb(" 8 ").unwrap(), 8);
+        let err = parse_kv_budget_mb("lots").unwrap_err().to_string();
+        assert!(err.contains("HCSMOE_KV_BUDGET_MB"), "{err}");
+        // explicit spec bytes win without consulting the environment
+        assert_eq!(kv_budget_bytes(Some(12345)).unwrap(), 12345);
+    }
+
+    #[test]
+    fn prefill_chunk_requires_a_positive_count() {
+        assert_eq!(parse_prefill_chunk("32").unwrap(), 32);
+        assert_eq!(parse_prefill_chunk("1").unwrap(), 1);
+        for bad in ["0", "-4", "many", ""] {
+            let err = parse_prefill_chunk(bad).unwrap_err().to_string();
+            assert!(err.contains("HCSMOE_PREFILL_CHUNK"), "{err}");
+        }
+        // explicit spec values win, and zero is rejected at startup
+        assert_eq!(prefill_chunk(Some(16)).unwrap(), Some(16));
+        assert!(prefill_chunk(Some(0)).is_err());
+    }
+}

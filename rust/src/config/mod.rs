@@ -1,6 +1,9 @@
 //! Experiment/model configuration: the `.cfg` and `manifest.txt` artifacts
 //! written by `python/compile/aot.py`, plus path resolution for everything
-//! under `artifacts/`.
+//! under `artifacts/`. Runtime environment knobs (`HCSMOE_BACKEND`,
+//! `HCSMOE_KV_BUDGET_MB`, `HCSMOE_PREFILL_CHUNK`) parse in [`env`].
+
+pub mod env;
 
 use std::path::{Path, PathBuf};
 

@@ -61,11 +61,9 @@ use crate::config::ModelCfg;
 /// per-block attention gather long enough to amortise the table walk.
 pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 
-/// Environment variable holding the pool budget in MiB (serving layer).
-pub const KV_BUDGET_ENV: &str = "HCSMOE_KV_BUDGET_MB";
-
-/// Default pool budget when [`KV_BUDGET_ENV`] is unset: 64 MiB.
-pub const DEFAULT_KV_BUDGET_MB: usize = 64;
+/// Environment variable holding the pool budget in MiB (re-exported from
+/// [`crate::config::env`], where every runtime knob parses).
+pub use crate::config::env::{DEFAULT_KV_BUDGET_MB, KV_BUDGET_ENV};
 
 /// Sharing-map key: a variant fingerprint (mask/remap/slot-count hash, so
 /// different model variants never alias) plus the exact token prefix the

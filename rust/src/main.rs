@@ -328,6 +328,7 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         model: model.clone(),
         compress,
         kv_budget_bytes: None,
+        prefill_chunk: None,
     };
     let handle = serve(
         spec,

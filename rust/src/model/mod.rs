@@ -13,7 +13,7 @@ use std::sync::OnceLock;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::backend::{self, Backend, KvCache, ModelState};
+use crate::backend::{self, Backend, KvCache, ModelState, PrefillOpts};
 use crate::config::{Artifacts, Manifest, ModelCfg};
 use crate::data::TokenStream;
 use crate::kvpool::{KvPool, PoolHandle, DEFAULT_BLOCK_TOKENS};
@@ -123,8 +123,12 @@ impl ModelContext {
             prompt.len(),
             self.cfg.t_max
         );
-        self.backend
-            .run_prefill(model.state.as_ref(), prompt, &model.mask, None)
+        let (cache, logits) = self.backend.run_prefill(
+            model.state.as_ref(),
+            prompt,
+            PrefillOpts::new(&model.mask),
+        )?;
+        Ok((cache.expect("fresh prefill returns a cache"), logits))
     }
 
     /// A paged KV-cache pool sized for this model under a byte budget
@@ -159,14 +163,12 @@ impl ModelContext {
             prompt.len(),
             self.cfg.t_max
         );
-        self.backend.run_prefill_paged(
+        let (cache, logits) = self.backend.run_prefill(
             model.state.as_ref(),
             prompt,
-            &model.mask,
-            None,
-            pool,
-            reserve_tokens,
-        )
+            PrefillOpts::new(&model.mask).paged(pool, reserve_tokens),
+        )?;
+        Ok((cache.expect("fresh prefill returns a cache"), logits))
     }
 
     /// [`Self::prefill_paged`] on a compact r-expert variant.
@@ -184,14 +186,64 @@ impl ModelContext {
             self.cfg.t_max
         );
         let mask = self.full_mask();
-        self.backend.run_prefill_paged(
+        let (cache, logits) = self.backend.run_prefill(
             model.state.as_ref(),
             prompt,
-            &mask,
-            Some(&model.remap),
-            pool,
-            reserve_tokens,
-        )
+            PrefillOpts::new(&mask)
+                .remap(&model.remap)
+                .paged(pool, reserve_tokens),
+        )?;
+        Ok((cache.expect("fresh prefill returns a cache"), logits))
+    }
+
+    /// Continue a **chunked prefill**: forward the next `chunk` of prompt
+    /// tokens and append their K/V rows to `cache` (flat or paged),
+    /// returning the logits after the chunk's last token. Feeding a
+    /// prompt through [`Self::prefill`] on its first chunk and
+    /// `prefill_resume` on the rest yields a cache and final logits
+    /// bit-identical to one whole-prompt [`Self::prefill`] (see the
+    /// [`crate::backend::Backend::run_prefill`] contract); the serving
+    /// scheduler uses this to interleave decode steps between chunks.
+    pub fn prefill_resume(
+        &self,
+        model: &LoadedModel,
+        chunk: &[i32],
+        cache: &mut dyn KvCache,
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            cache.seq_len() + chunk.len() <= self.cfg.t_max,
+            "prompt length {} exceeds t_max {}",
+            cache.seq_len() + chunk.len(),
+            self.cfg.t_max
+        );
+        let (_, logits) = self.backend.run_prefill(
+            model.state.as_ref(),
+            chunk,
+            PrefillOpts::new(&model.mask).resume(cache),
+        )?;
+        Ok(logits)
+    }
+
+    /// [`Self::prefill_resume`] on a compact r-expert variant.
+    pub fn prefill_resume_compact(
+        &self,
+        model: &CompactModel,
+        chunk: &[i32],
+        cache: &mut dyn KvCache,
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            cache.seq_len() + chunk.len() <= self.cfg.t_max,
+            "prompt length {} exceeds t_max {}",
+            cache.seq_len() + chunk.len(),
+            self.cfg.t_max
+        );
+        let mask = self.full_mask();
+        let (_, logits) = self.backend.run_prefill(
+            model.state.as_ref(),
+            chunk,
+            PrefillOpts::new(&mask).remap(&model.remap).resume(cache),
+        )?;
+        Ok(logits)
     }
 
     /// Append one token to an incremental sequence, returning the
@@ -236,8 +288,12 @@ impl ModelContext {
             self.cfg.t_max
         );
         let mask = self.full_mask();
-        self.backend
-            .run_prefill(model.state.as_ref(), prompt, &mask, Some(&model.remap))
+        let (cache, logits) = self.backend.run_prefill(
+            model.state.as_ref(),
+            prompt,
+            PrefillOpts::new(&mask).remap(&model.remap),
+        )?;
+        Ok((cache.expect("fresh prefill returns a cache"), logits))
     }
 
     /// [`Self::decode`] on a compact r-expert variant.

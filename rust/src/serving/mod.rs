@@ -15,9 +15,15 @@
 //!   GEMMs, per-expert grouped SwiGLU), and sequences leave the set the
 //!   moment they hit a stop condition — no sequence waits for a "batch"
 //!   to finish. Score batches interleave between decode steps.
-//!   Admissions are **budgeted**: at most one prompt prefill runs between
-//!   decode steps, so a burst of long prompts queues behind the budget
-//!   instead of stalling every active sequence (head-of-line fairness).
+//!   Admission is governed by the [`scheduler`]: two priority classes
+//!   ([`Priority::Interactive`] before [`Priority::Batch`], FIFO within
+//!   each), prefills split into `HCSMOE_PREFILL_CHUNK`-token **chunks**
+//!   with decode steps interleaved (Sarathi-style, so a long prompt
+//!   cannot stall in-flight decodes for more than one chunk), and
+//!   KV-pool-aware **preemption**: an Interactive arrival that cannot
+//!   reserve its worst-case blocks swaps out Batch work (drop the cache,
+//!   retain the token prefix, re-prefill on resume — bit-identical
+//!   streams either way).
 //!
 //! A single executor thread owns all execution state (required for the
 //! PJRT backend, whose xla handles are not `Send`; the native backend
@@ -27,6 +33,8 @@
 //! measurements. Runs offline end to end on the native backend. The full
 //! architecture (request lifecycle, batching policies, KV-cache memory
 //! accounting, metrics definitions) is documented in `SERVING.md`.
+
+pub mod scheduler;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -41,9 +49,12 @@ use crate::calib::CalibStats;
 use crate::config::Artifacts;
 use crate::eval::log_softmax_at;
 use crate::generate::{Generated, SamplingParams, Session};
-use crate::kvpool::{PoolHandle, DEFAULT_KV_BUDGET_MB, KV_BUDGET_ENV};
+use crate::kvpool::{PoolHandle, KV_BUDGET_ENV};
 use crate::model::{LoadedModel, ModelContext};
 use crate::pipeline::{Method, Pipeline};
+
+pub use scheduler::{LatencyHisto, Priority};
+use scheduler::{ActiveGen, PrefillInFlight, Queued, SchedQueues};
 
 /// Shared state of a [`reply_channel`] pair.
 struct ReplyShared<T> {
@@ -172,20 +183,80 @@ pub struct ScoreRequest {
     pub enqueued: Instant,
 }
 
-/// One text-generation request, served by the continuous batcher.
+/// One text-generation request, served by the continuous batcher under
+/// the [`scheduler`]'s priority policy.
+///
+/// Built with [`GenerateRequest::new`] plus the chainable
+/// [`priority`](Self::priority) / [`deadline`](Self::deadline) /
+/// [`reply_to`](Self::reply_to) setters, then submitted via
+/// [`ServerHandle::submit`] (or, for the common blocking cases,
+/// [`ServerHandle::generate`] / [`ServerHandle::generate_opts`], which
+/// build it for you). A plain `new(..)` request is
+/// [`Priority::Interactive`] with no deadline — exactly what `generate`
+/// always submitted.
 pub struct GenerateRequest {
     /// Prompt token ids (must be non-empty and fit in `t_max`).
     pub prompt: Vec<i32>,
     /// Sampling strategy + stop conditions.
     pub params: SamplingParams,
+    /// Scheduling class (default [`Priority::Interactive`]).
+    pub class: Priority,
+    /// Optional completion SLO measured from submission. Purely
+    /// *accounting*: a request finishing later bumps the
+    /// `deadline_misses` counter; it is never reordered or cancelled for
+    /// missing it (FIFO within class stays starvation-free).
+    pub deadline: Option<Duration>,
     /// Channel receiving the finished generation (or the error). A
     /// [`ReplyTx`] rather than a plain `Sender` so the executor can detect
     /// a vanished client ([`ReplyTx::is_closed`]) and evict the sequence —
     /// releasing its KV blocks — instead of decoding to `max_tokens` into
     /// the void.
-    pub reply: ReplyTx<Result<Generated>>,
+    reply: ReplyTx<Result<Generated>>,
+    /// The receiving half paired with `reply`; taken by
+    /// [`ServerHandle::submit`]. `None` after [`Self::reply_to`] routed
+    /// replies to a caller-owned channel.
+    rx: Option<ReplyRx<Result<Generated>>>,
     /// Submission time (drives queue-latency metrics).
-    pub enqueued: Instant,
+    enqueued: Instant,
+}
+
+impl GenerateRequest {
+    /// A request with today's defaults: [`Priority::Interactive`], no
+    /// deadline, and a fresh private reply channel.
+    pub fn new(prompt: &[i32], params: SamplingParams) -> Self {
+        let (reply, rx) = reply_channel();
+        Self {
+            prompt: prompt.to_vec(),
+            params,
+            class: Priority::default(),
+            deadline: None,
+            reply,
+            rx: Some(rx),
+            enqueued: Instant::now(),
+        }
+    }
+
+    /// Set the scheduling class.
+    pub fn priority(mut self, class: Priority) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Set the completion deadline (measured from submission).
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Route the reply to a caller-owned channel instead of the private
+    /// one — several requests sharing a channel observe the executor's
+    /// completion order (the scheduler-ordering tests rely on this).
+    /// [`ServerHandle::submit`] then returns `None` for the receiver.
+    pub fn reply_to(mut self, tx: ReplyTx<Result<Generated>>) -> Self {
+        self.reply = tx;
+        self.rx = None;
+        self
+    }
 }
 
 /// Anything a client can submit to the executor.
@@ -286,6 +357,23 @@ pub struct Metrics {
     pub kv_blocks_shared: AtomicU64,
     /// Gauge: high-water mark of `kv_blocks_in_use` over the pool's life.
     pub kv_blocks_peak: AtomicU64,
+    /// Batch-class work swapped out (cache dropped, prefix retained) so
+    /// an Interactive arrival could reserve its KV blocks.
+    pub preemptions: AtomicU64,
+    /// Prefills that took more than one chunk (i.e. were actually split
+    /// by `HCSMOE_PREFILL_CHUNK` and interleaved with decode steps).
+    pub chunked_prefills: AtomicU64,
+    /// Generations that finished after their requested deadline.
+    pub deadline_misses: AtomicU64,
+    /// Gauge: the most prompt tokens ever prefilled between two
+    /// consecutive decode steps while at least one sequence was actively
+    /// decoding — the *observed* stall bound. Unchunked, this reaches the
+    /// longest admitted prompt; chunked it stays ≤ the chunk size (the
+    /// deterministic stall-bound pin in `rust/tests/scheduler.rs`).
+    pub prefill_stall_tokens_max: AtomicU64,
+    /// Inter-token latency histogram over Interactive-class decode steps
+    /// (time between consecutive token emissions of one sequence).
+    pub itl: LatencyHisto,
 }
 
 impl Metrics {
@@ -307,6 +395,12 @@ impl Metrics {
             kv_blocks_in_use: self.kv_blocks_in_use.load(Ordering::Relaxed),
             kv_blocks_shared: self.kv_blocks_shared.load(Ordering::Relaxed),
             kv_blocks_peak: self.kv_blocks_peak.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            chunked_prefills: self.chunked_prefills.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            prefill_stall_tokens_max: self.prefill_stall_tokens_max.load(Ordering::Relaxed),
+            itl_p50_ms: self.itl.quantile_ms(0.50),
+            itl_p99_ms: self.itl.quantile_ms(0.99),
         }
     }
 }
@@ -344,6 +438,19 @@ pub struct MetricsSnapshot {
     pub kv_blocks_shared: u64,
     /// Gauge: high-water mark of `kv_blocks_in_use`.
     pub kv_blocks_peak: u64,
+    /// Batch-class preemptions (swap-outs) performed.
+    pub preemptions: u64,
+    /// Prefills split across more than one chunk.
+    pub chunked_prefills: u64,
+    /// Generations finished after their deadline.
+    pub deadline_misses: u64,
+    /// Gauge: most prompt tokens prefilled between two consecutive decode
+    /// steps while sequences were actively decoding.
+    pub prefill_stall_tokens_max: u64,
+    /// Median Interactive inter-token latency (ms, bucket upper bound).
+    pub itl_p50_ms: f64,
+    /// 99th-percentile Interactive inter-token latency (ms).
+    pub itl_p99_ms: f64,
 }
 
 impl MetricsSnapshot {
@@ -429,6 +536,11 @@ pub struct ServeSpec {
     /// pool can reserve their worst-case block count; the rest wait in the
     /// admission queue.
     pub kv_budget_bytes: Option<usize>,
+    /// Most prompt tokens prefilled between consecutive decode steps
+    /// (chunked prefill — see `SERVING.md` §"Scheduler"). `None` resolves
+    /// `HCSMOE_PREFILL_CHUNK`, else whole-prompt prefills; `Some(0)` is a
+    /// startup error (all knobs validate via [`crate::config::env`]).
+    pub prefill_chunk: Option<usize>,
 }
 
 /// Client-side handle to a running server.
@@ -462,18 +574,45 @@ impl ServerHandle {
     /// Submit one generation request; blocks until the sequence finishes.
     /// With a seeded [`SamplingParams`], the result is bit-identical to an
     /// offline [`crate::generate::generate`] call on the same variant —
-    /// the server runs the same [`Session`] loop.
+    /// the server runs the same [`Session`] loop. Submits as
+    /// [`Priority::Interactive`] with no deadline (exactly this method's
+    /// historical behaviour); use [`Self::generate_opts`] or
+    /// [`Self::submit`] for scheduling control.
     pub fn generate(&self, prompt: &[i32], params: SamplingParams) -> Result<Generated> {
-        let (reply, rx) = reply_channel();
-        self.tx
-            .send(Request::Generate(GenerateRequest {
-                prompt: prompt.to_vec(),
-                params,
-                reply,
-                enqueued: Instant::now(),
-            }))
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        self.generate_opts(prompt, params, Priority::Interactive, None)
+    }
+
+    /// [`Self::generate`] with explicit scheduling options: priority
+    /// class and optional completion deadline (see
+    /// [`GenerateRequest::deadline`] for the miss semantics).
+    pub fn generate_opts(
+        &self,
+        prompt: &[i32],
+        params: SamplingParams,
+        class: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Generated> {
+        let mut req = GenerateRequest::new(prompt, params).priority(class);
+        if let Some(d) = deadline {
+            req = req.deadline(d);
+        }
+        let rx = self.submit(req)?.expect("a fresh request owns its receiver");
         rx.recv()?
+    }
+
+    /// Submit a built [`GenerateRequest`] without blocking. Returns the
+    /// receiving half of the request's private reply channel — or `None`
+    /// when [`GenerateRequest::reply_to`] routed the reply to a
+    /// caller-owned channel.
+    pub fn submit(
+        &self,
+        mut req: GenerateRequest,
+    ) -> Result<Option<ReplyRx<Result<Generated>>>> {
+        let rx = req.rx.take();
+        self.tx
+            .send(Request::Generate(req))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
     }
 
     /// A clonable submission channel for client threads.
@@ -483,10 +622,14 @@ impl ServerHandle {
 
     /// Stop the server and join the executor thread. Robust against
     /// still-alive cloned senders: an explicit stop flag breaks the
-    /// executor loop even if the channel never disconnects. In-flight
-    /// generations are abandoned (their clients observe a closed reply
-    /// channel); when the channel merely disconnects instead, the
-    /// executor finishes all in-flight work before exiting.
+    /// executor loop even if the channel never disconnects. Every
+    /// generation still in flight or queued — active, mid-prefill,
+    /// waiting for admission, or sitting unread in the request channel —
+    /// receives an explicit "server shutting down" error reply, so no
+    /// client blocks forever on a request the executor will never run;
+    /// pending score requests observe their reply channel closing. When
+    /// the channel merely disconnects instead (all senders dropped, no
+    /// stop), the executor finishes all in-flight work before exiting.
     pub fn shutdown(mut self) -> Result<()> {
         self.stop.store(true, Ordering::SeqCst);
         drop(self.tx);
@@ -517,18 +660,6 @@ struct Pending {
     remaining: usize,
 }
 
-/// One generation sequence in the continuous batch.
-struct ActiveGen {
-    reply: ReplyTx<Result<Generated>>,
-    enqueued: Instant,
-    session: Session,
-    cache: Box<dyn KvCache>,
-    /// Sampled but not yet fed to the model.
-    next: i32,
-    prefill_s: f64,
-    decode_s: f64,
-}
-
 /// The executor: one thread owning the model and all execution state.
 struct Executor {
     ctx: ModelContext,
@@ -540,25 +671,9 @@ struct Executor {
     /// The paged KV-cache pool every generation's cache lives in — the
     /// memory budget admission control enforces.
     pool: PoolHandle,
-}
-
-/// Resolve the pool budget: explicit spec bytes, else `HCSMOE_KV_BUDGET_MB`,
-/// else the 64 MiB default. A *set but malformed* env value is a startup
-/// error — silently falling back to the default would serve a different
-/// memory budget than the operator asked for.
-fn resolve_kv_budget(spec: &ServeSpec) -> Result<usize> {
-    if let Some(bytes) = spec.kv_budget_bytes {
-        return Ok(bytes);
-    }
-    match std::env::var(KV_BUDGET_ENV) {
-        Ok(v) => {
-            let mb: usize = v.trim().parse().map_err(|_| {
-                anyhow!("{KV_BUDGET_ENV}={v:?} is not a whole MiB count (e.g. 64)")
-            })?;
-            Ok(mb * 1024 * 1024)
-        }
-        Err(_) => Ok(DEFAULT_KV_BUDGET_MB * 1024 * 1024),
-    }
+    /// Most prompt tokens prefilled between consecutive decode steps
+    /// (`None` = whole-prompt prefills).
+    chunk: Option<usize>,
 }
 
 fn executor_loop(
@@ -568,7 +683,10 @@ fn executor_loop(
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
-    let budget = resolve_kv_budget(&spec)?;
+    // all env knobs resolve (and validate) through config::env, so a set
+    // but malformed value is a startup error rather than a silent default
+    let budget = crate::config::env::kv_budget_bytes(spec.kv_budget_bytes)?;
+    let chunk = crate::config::env::prefill_chunk(spec.prefill_chunk)?;
     let arts = Artifacts::new(&spec.artifacts_root);
     let ctx = ModelContext::load(&arts, &spec.model)?;
     let model = match &spec.compress {
@@ -581,42 +699,69 @@ fn executor_loop(
     };
     let (bsz, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
     let pool = ctx.kv_pool(budget)?;
-    let exec = Executor { ctx, model, bsz, t, batcher, metrics, pool };
+    let exec = Executor { ctx, model, bsz, t, batcher, metrics, pool, chunk };
     exec.run(rx, stop)
 }
 
 impl Executor {
-    /// The main loop: intake → (score flush when due) → at most ONE
-    /// prefill admission → one **batched** decode step across every
-    /// active sequence — so decode requests join and leave the running
-    /// batch on step boundaries while score batches interleave.
+    /// The main loop: intake → (score flush when due) → scheduler tick
+    /// (priority admission + at most ONE prefill **chunk**) → one
+    /// **batched** decode step across every active sequence — so decode
+    /// requests join and leave the running batch on step boundaries,
+    /// score batches interleave, and a long prompt advances at most
+    /// `HCSMOE_PREFILL_CHUNK` tokens between consecutive decode steps.
     ///
-    /// Admissions are deliberately budgeted instead of running inside the
-    /// intake drain: a prefill costs O(prompt²) attention while a decode
-    /// step costs O(t) per sequence, so draining a burst of long prompts
-    /// synchronously (the old design) froze every active sequence for the
-    /// whole burst. With the budget, an in-flight sequence falls at most
-    /// one prefill behind per iteration (`rust/tests/decode_batch.rs`
-    /// pins the regression).
+    /// Prefill work is deliberately bounded per iteration instead of
+    /// running inside the intake drain: a prefill costs O(prompt²)
+    /// attention while a decode step costs O(t) per sequence, so draining
+    /// a burst of long prompts synchronously (the old design) froze every
+    /// active sequence for the whole burst. With chunking, an in-flight
+    /// sequence falls at most one chunk behind per iteration
+    /// (`rust/tests/scheduler.rs` pins the stall bound via the
+    /// `prefill_stall_tokens_max` gauge).
+    ///
+    /// Two prefill slots exist — one per [`Priority`] class. A Batch
+    /// prefill **parks** (keeping its partial cache and block
+    /// reservation) while an Interactive prefill runs, resuming when the
+    /// Interactive slot empties; it is preempted outright — cache
+    /// dropped, request re-queued — only when an Interactive arrival
+    /// cannot reserve its blocks ([`Self::make_room`]).
     fn run(&self, rx: Receiver<Request>, stop: Arc<AtomicBool>) -> Result<()> {
         let mut pendings: Vec<Pending> = Vec::new();
         let mut queue: Vec<(usize, usize, RowSpec)> = Vec::new();
         let mut active: Vec<ActiveGen> = Vec::new();
-        // generation requests accepted but not yet prefilled (admission
-        // budget: one per loop iteration)
-        let mut admissions: VecDeque<GenerateRequest> = VecDeque::new();
+        // per-class admission queues + the (at most two) prefills in
+        // flight
+        let mut queues = SchedQueues::default();
+        let mut inflight_i: Option<PrefillInFlight> = None;
+        let mut inflight_b: Option<PrefillInFlight> = None;
+        // prompt tokens prefilled since the last decode step while
+        // sequences were actively decoding (feeds the observed-stall
+        // gauge)
+        let mut stall_tokens: u64 = 0;
         // enqueue time of the oldest unflushed score request
         let mut oldest: Option<Instant> = None;
         let mut disconnected = false;
         loop {
             if stop.load(Ordering::SeqCst) {
+                self.drain_on_stop(
+                    &rx,
+                    &mut queues,
+                    &mut inflight_i,
+                    &mut inflight_b,
+                    &mut active,
+                );
                 break;
             }
             if !disconnected {
                 // Block only when there is nothing to advance or admit;
                 // while sequences decode or prefills wait, drain without
                 // waiting.
-                let wait = if !active.is_empty() || !admissions.is_empty() {
+                let busy = !active.is_empty()
+                    || !queues.is_empty()
+                    || inflight_i.is_some()
+                    || inflight_b.is_some();
+                let wait = if busy {
                     Duration::ZERO
                 } else if let Some(o) = oldest {
                     self.batcher.max_wait.saturating_sub(o.elapsed()).min(POLL)
@@ -625,22 +770,22 @@ impl Executor {
                 };
                 match rx.recv_timeout(wait) {
                     Ok(req) => {
-                        self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut admissions);
+                        self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut queues);
                         while let Ok(req) = rx.try_recv() {
-                            self.intake(
-                                req,
-                                &mut pendings,
-                                &mut queue,
-                                &mut oldest,
-                                &mut admissions,
-                            );
+                            self.intake(req, &mut pendings, &mut queue, &mut oldest, &mut queues);
                         }
                     }
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                     Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
                 }
             }
-            if disconnected && active.is_empty() && queue.is_empty() && admissions.is_empty() {
+            if disconnected
+                && active.is_empty()
+                && queue.is_empty()
+                && queues.is_empty()
+                && inflight_i.is_none()
+                && inflight_b.is_none()
+            {
                 break;
             }
             let flush_due = !queue.is_empty()
@@ -652,17 +797,18 @@ impl Executor {
                 oldest = None;
             }
             // client-disconnect eviction at step boundaries: a sequence
-            // (or queued request) whose reply channel closed would decode
-            // to max_tokens for nobody while pinning its KV blocks —
-            // dropping it here releases the blocks back to the pool
+            // (or queued request, or half-built prefill) whose reply
+            // channel closed would run to max_tokens for nobody while
+            // pinning its KV blocks — dropping it here releases the
+            // blocks back to the pool
             let m = &self.metrics;
-            admissions.retain(|r| {
-                let gone = r.reply.is_closed();
-                if gone {
+            queues.retain_connected(m);
+            for slot in [&mut inflight_i, &mut inflight_b] {
+                if slot.as_ref().is_some_and(|f| f.reply().is_closed()) {
                     m.gen_disconnects.fetch_add(1, Ordering::Relaxed);
+                    *slot = None; // the partial cache (and its blocks) drop
                 }
-                !gone
-            });
+            }
             active.retain(|a| {
                 let gone = a.reply.is_closed();
                 if gone {
@@ -670,33 +816,71 @@ impl Executor {
                 }
                 !gone
             });
-            // bounded, memory-aware admission: at most one prefill between
-            // decode steps, and only when the pool can reserve the
-            // request's worst-case block count (prompt + max_new_tokens);
-            // otherwise the queue head waits — FIFO, so a huge request is
-            // never starved by smaller ones slipping past it
-            if let Some(front) = admissions.front() {
-                let need = self.gen_blocks(front);
-                if need > self.pool.total_blocks() {
-                    // can never fit: answer now instead of deadlocking the
-                    // admission queue behind an impossible reservation
-                    let req = admissions.pop_front().expect("front exists");
-                    let _ = req.reply.send(Err(anyhow!(
-                        "request needs {need} KV blocks but the pool holds only {} \
-                         (raise {KV_BUDGET_ENV})",
-                        self.pool.total_blocks()
-                    )));
-                } else if self.pool.can_reserve(need) {
-                    let req = admissions.pop_front().expect("front exists");
-                    self.admit(req, &mut active);
-                }
+            // memory-aware admission under strict priority: the
+            // Interactive head starts whenever its prefill slot is free
+            // (preempting Batch work when the pool cannot reserve its
+            // worst-case block count); the Batch head starts only when no
+            // Interactive work is queued or prefilling. FIFO within each
+            // class, so a huge request is never starved by smaller ones
+            // slipping past it.
+            if inflight_i.is_none() && queues.has(Priority::Interactive) {
+                self.make_room(&mut queues, &mut inflight_b, &mut active);
+                inflight_i = self.try_admit(Priority::Interactive, &mut queues);
+            }
+            if inflight_i.is_none()
+                && inflight_b.is_none()
+                && !queues.has(Priority::Interactive)
+                && queues.has(Priority::Batch)
+            {
+                inflight_b = self.try_admit(Priority::Batch, &mut queues);
+            }
+            // advance ONE in-flight prefill by one chunk (Interactive
+            // first — a Batch prefill parks while Interactive runs)
+            let slot = if inflight_i.is_some() { &mut inflight_i } else { &mut inflight_b };
+            if let Some(inf) = slot.take() {
+                *slot = self.prefill_chunk_step(inf, &mut active, &mut stall_tokens);
             }
             if !active.is_empty() {
                 self.step(&mut active);
+                stall_tokens = 0;
             }
             self.publish_kv_gauges();
         }
         Ok(())
+    }
+
+    /// Answer every generation the executor will never run — queued in
+    /// the scheduler, mid-prefill, actively decoding, or still unread in
+    /// the request channel — with an explicit error, so no client blocks
+    /// forever on a reply that cannot come (`rust/tests/scheduler.rs`
+    /// pins this). Pending score requests are answered by their reply
+    /// channels dropping (the client's `recv` errors out).
+    fn drain_on_stop(
+        &self,
+        rx: &Receiver<Request>,
+        queues: &mut SchedQueues,
+        inflight_i: &mut Option<PrefillInFlight>,
+        inflight_b: &mut Option<PrefillInFlight>,
+        active: &mut Vec<ActiveGen>,
+    ) {
+        while let Ok(req) = rx.try_recv() {
+            if let Request::Generate(req) = req {
+                let _ = req
+                    .reply
+                    .send(Err(anyhow!("server shutting down (request was still queued)")));
+            } // Score: dropping the request drops its Sender
+        }
+        for q in queues.drain_all() {
+            q.send_err(anyhow!("server shutting down (request was still queued)"));
+        }
+        for inf in [inflight_i.take(), inflight_b.take()].into_iter().flatten() {
+            inf.seq.send_err(anyhow!("server shutting down (prefill was in flight)"));
+        }
+        for a in active.drain(..) {
+            let _ = a
+                .reply
+                .send(Err(anyhow!("server shutting down (generation was in flight)")));
+        }
     }
 
     /// Worst-case resident length of a request: its prompt plus every
@@ -714,9 +898,87 @@ impl Executor {
             .max(req.prompt.len())
     }
 
-    /// Worst-case KV blocks a request can occupy (the admission quantity).
-    fn gen_blocks(&self, req: &GenerateRequest) -> usize {
-        self.pool.blocks_for(self.gen_reserve_tokens(req))
+    /// Worst-case resident length of a queued unit of work. A fresh
+    /// request uses [`Self::gen_reserve_tokens`]; a preempted one reuses
+    /// the reservation bound it was originally admitted under (its
+    /// resident prefix plus remaining decode room still fit inside it).
+    fn queued_reserve_tokens(&self, q: &Queued) -> usize {
+        match q {
+            Queued::Fresh(req) => self.gen_reserve_tokens(req),
+            Queued::Resume(p) => p.reserve_tokens,
+        }
+    }
+
+    /// Preempt Batch work until the Interactive queue head can reserve its
+    /// worst-case block count (or nothing preemptible remains). Victim
+    /// order is cheapest-first: the in-flight/parked Batch prefill (only
+    /// chunk compute is lost), then the most recently admitted active
+    /// Batch sequence — LIFO, so the oldest Batch streams keep flowing.
+    /// Interactive work is never preempted.
+    fn make_room(
+        &self,
+        queues: &mut SchedQueues,
+        inflight_b: &mut Option<PrefillInFlight>,
+        active: &mut Vec<ActiveGen>,
+    ) {
+        let Some(head) = queues.front(Priority::Interactive) else { return };
+        let need = self.pool.blocks_for(self.queued_reserve_tokens(head));
+        if need > self.pool.total_blocks() {
+            return; // impossible request: try_admit answers it with an error
+        }
+        while !self.pool.can_reserve(need) && self.preempt_one(queues, inflight_b, active) {}
+    }
+
+    /// Swap out one unit of Batch work by **recompute**: the victim's KV
+    /// blocks (and reservation) are released outright and the request
+    /// re-queues at the head of the Batch lane; on re-admission its
+    /// resident tokens — prompt plus everything generated so far — are
+    /// re-prefilled chunk by chunk, rebuilding the exact dropped cache
+    /// (`rust/tests/scheduler.rs` pins resumed streams bit-identical).
+    /// Returns `false` when nothing preemptible remains.
+    fn preempt_one(
+        &self,
+        queues: &mut SchedQueues,
+        inflight_b: &mut Option<PrefillInFlight>,
+        active: &mut Vec<ActiveGen>,
+    ) -> bool {
+        if let Some(inf) = inflight_b.take() {
+            // push the request back first; the partial cache drops with
+            // the rest of the in-flight state, releasing its blocks
+            queues.push_front(inf.seq);
+            self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        if let Some(i) = active.iter().rposition(|a| a.class == Priority::Batch) {
+            let victim = active.remove(i);
+            queues.push_front(Queued::Resume(victim.preempt()));
+            self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Pop and start the head of `class`'s lane if the pool can reserve
+    /// its worst-case block count. A request that could never fit (need
+    /// exceeds the whole pool) is answered with an error immediately
+    /// instead of deadlocking the lane behind it; a merely-currently-
+    /// infeasible head keeps waiting — FIFO within its class.
+    fn try_admit(&self, class: Priority, queues: &mut SchedQueues) -> Option<PrefillInFlight> {
+        let head = queues.front(class)?;
+        let need = self.pool.blocks_for(self.queued_reserve_tokens(head));
+        if need > self.pool.total_blocks() {
+            let q = queues.pop(class).expect("head exists");
+            q.send_err(anyhow!(
+                "request needs {need} KV blocks but the pool holds only {} \
+                 (raise {KV_BUDGET_ENV})",
+                self.pool.total_blocks()
+            ));
+            return None;
+        }
+        if !self.pool.can_reserve(need) {
+            return None;
+        }
+        Some(PrefillInFlight::new(queues.pop(class).expect("head exists")))
     }
 
     /// Copy the pool counters into the metrics gauges.
@@ -728,15 +990,15 @@ impl Executor {
     }
 
     /// Route one incoming request: score rows to the dynamic-batch queue,
-    /// generations to the admission queue (prefilled later under the
-    /// per-iteration budget).
+    /// generations to their priority class's scheduler lane (prefilled
+    /// later, chunk by chunk).
     fn intake(
         &self,
         req: Request,
         pendings: &mut Vec<Pending>,
         queue: &mut Vec<(usize, usize, RowSpec)>,
         oldest: &mut Option<Instant>,
-        admissions: &mut VecDeque<GenerateRequest>,
+        queues: &mut SchedQueues,
     ) {
         match req {
             Request::Score(req) => {
@@ -765,12 +1027,17 @@ impl Executor {
                 }
             }
             // degenerate sampling parameters are answered immediately at
-            // intake — they never enter the admission queue, so they can
+            // intake — they never enter a scheduler lane, so they can
             // neither delay their own error reply nor burn the one
-            // prefill-per-iteration budget slot (and they don't count as
+            // chunk-per-iteration budget slot (and they don't count as
             // accepted in gen_requests)
             Request::Generate(req) => match req.params.validate() {
-                Ok(()) => admissions.push_back(req),
+                Ok(()) => {
+                    // counted at acceptance, not admission: a preempted
+                    // request re-enters its lane and must not re-count
+                    self.metrics.gen_requests.fetch_add(1, Ordering::Relaxed);
+                    queues.push_back(Queued::Fresh(req));
+                }
                 Err(e) => {
                     let _ = req.reply.send(Err(e));
                 }
@@ -778,34 +1045,105 @@ impl Executor {
         }
     }
 
-    /// Prefill one generation request into the paged pool and add it to
-    /// the continuous batch (or answer immediately when it finishes within
-    /// the first sample). The caller verified the pool can reserve the
-    /// request's worst-case block count, so the reservation below cannot
-    /// fail and decode-time allocations are guaranteed. Sampling
-    /// parameters were already validated at intake.
-    fn admit(&self, req: GenerateRequest, active: &mut Vec<ActiveGen>) {
-        self.metrics.gen_requests.fetch_add(1, Ordering::Relaxed);
-        let reserve_tokens = self.gen_reserve_tokens(&req);
+    /// Run the next chunk of an in-flight prefill: at most `self.chunk`
+    /// prompt tokens (everything remaining when unchunked). The first
+    /// chunk is a fresh paged prefill carrying the sequence's FULL block
+    /// reservation — the caller's admission check guaranteed it fits —
+    /// so later chunks and every decode step are assured their blocks;
+    /// subsequent chunks extend the cache via
+    /// [`crate::model::ModelContext::prefill_resume`]. Returns the
+    /// in-flight state back while chunks remain; a finished prefill joins
+    /// the continuous batch (or is answered immediately) and a failed one
+    /// is answered with its error. Sampling parameters were already
+    /// validated at intake.
+    fn prefill_chunk_step(
+        &self,
+        mut inf: PrefillInFlight,
+        active: &mut Vec<ActiveGen>,
+        stall_tokens: &mut u64,
+    ) -> Option<PrefillInFlight> {
+        let total = inf.tokens().len();
+        let remaining = total - inf.done;
+        let take = self.chunk.map_or(remaining, |c| c.min(remaining));
+        let ids: Vec<i32> = inf.tokens()[inf.done..inf.done + take].to_vec();
         let t0 = Instant::now();
-        let (cache, logits) =
-            match self
-                .ctx
-                .prefill_paged(&self.model, &req.prompt, &self.pool, reserve_tokens)
-            {
-                Ok(x) => x,
-                Err(e) => {
-                    let _ = req.reply.send(Err(e));
-                    return;
-                }
-            };
-        let prefill_s = t0.elapsed().as_secs_f64();
-        self.metrics
-            .prefill_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.metrics
-            .prefill_tokens
-            .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+        let result = if let Some(cache) = inf.cache.as_mut() {
+            self.ctx.prefill_resume(&self.model, &ids, cache.as_mut())
+        } else {
+            let reserve = self.queued_reserve_tokens(&inf.seq);
+            self.ctx
+                .prefill_paged(&self.model, &ids, &self.pool, reserve)
+                .map(|(cache, logits)| {
+                    inf.cache = Some(cache);
+                    logits
+                })
+        };
+        let dt = t0.elapsed();
+        inf.prefill_s += dt.as_secs_f64();
+        inf.chunks += 1;
+        self.metrics.prefill_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        self.metrics.prefill_tokens.fetch_add(take as u64, Ordering::Relaxed);
+        if !active.is_empty() {
+            // decode steps are stalling behind this chunk: feed the
+            // observed-stall gauge (reset to zero after every decode step)
+            *stall_tokens += take as u64;
+            self.metrics
+                .prefill_stall_tokens_max
+                .fetch_max(*stall_tokens, Ordering::Relaxed);
+        }
+        let logits = match result {
+            Ok(l) => l,
+            Err(e) => {
+                inf.seq.send_err(e);
+                return None; // the partial cache drops, releasing its blocks
+            }
+        };
+        inf.done += take;
+        if inf.done < total {
+            return Some(inf);
+        }
+        if inf.chunks > 1 {
+            self.metrics.chunked_prefills.fetch_add(1, Ordering::Relaxed);
+        }
+        let cache = inf.cache.take().expect("completed prefill has a cache");
+        match inf.seq {
+            Queued::Fresh(req) => self.activate_fresh(req, cache, logits, inf.prefill_s, active),
+            Queued::Resume(p) => {
+                // the re-prefill rebuilt the exact dropped cache; its final
+                // logits are re-derived state (the next token was already
+                // sampled before the preemption), so they are discarded and
+                // decoding continues precisely where it stopped
+                active.push(ActiveGen {
+                    reply: p.reply,
+                    enqueued: p.enqueued,
+                    class: p.class,
+                    deadline: p.deadline,
+                    prompt: p.prompt,
+                    reserve_tokens: p.reserve_tokens,
+                    session: p.session,
+                    cache,
+                    next: p.next,
+                    last_emit: Instant::now(),
+                    prefill_s: p.prefill_s + inf.prefill_s,
+                    decode_s: p.decode_s,
+                });
+            }
+        }
+        None
+    }
+
+    /// A fresh request finished its prefill: sample the first token from
+    /// the final chunk's logits and join the continuous batch (or answer
+    /// immediately when the first sample already finishes the request).
+    fn activate_fresh(
+        &self,
+        req: GenerateRequest,
+        cache: Box<dyn KvCache>,
+        logits: Vec<f32>,
+        prefill_s: f64,
+        active: &mut Vec<ActiveGen>,
+    ) {
+        let reserve_tokens = self.gen_reserve_tokens(&req);
         let mut session = Session::new(req.params);
         // the first token is sampled from the prefill logits — its compute
         // is charged to prefill_ns, so it does not enter gen_tokens (which
@@ -816,9 +1154,14 @@ impl Executor {
             Some(next) => active.push(ActiveGen {
                 reply: req.reply,
                 enqueued: req.enqueued,
+                class: req.class,
+                deadline: req.deadline,
+                prompt: req.prompt,
+                reserve_tokens,
                 session,
                 cache,
                 next,
+                last_emit: Instant::now(),
                 prefill_s,
                 decode_s: 0.0,
             }),
@@ -826,6 +1169,9 @@ impl Executor {
                 self.metrics
                     .queue_ns
                     .fetch_add(req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if req.deadline.is_some_and(|d| req.enqueued.elapsed() > d) {
+                    self.metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                }
                 let finish = session.finish().expect("finished session");
                 let _ = req.reply.send(Ok(Generated {
                     tokens: session.into_tokens(),
@@ -866,6 +1212,7 @@ impl Executor {
         let share = dt.as_secs_f64() / bsz as f64;
         for (mut a, logits) in std::mem::take(active).into_iter().zip(rows) {
             a.decode_s += share;
+            self.record_itl(&mut a);
             match a.session.advance(&logits, a.cache.seq_len(), self.ctx.cfg.t_max) {
                 Some(next) => {
                     a.next = next;
@@ -897,6 +1244,7 @@ impl Executor {
             a.decode_s += dt.as_secs_f64();
             self.metrics.decode_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
             self.metrics.gen_tokens.fetch_add(1, Ordering::Relaxed);
+            self.record_itl(a);
             match a.session.advance(&logits, a.cache.seq_len(), self.ctx.cfg.t_max) {
                 Some(next) => {
                     a.next = next;
@@ -910,11 +1258,27 @@ impl Executor {
         }
     }
 
-    /// Answer one finished generation and record its queue latency.
+    /// Record one inter-token gap for a sequence that just produced a
+    /// decode-step token. Only Interactive traffic feeds the histogram —
+    /// it is the class with a latency SLO; Batch gaps (which legitimately
+    /// balloon across a swap-out) would drown the signal.
+    fn record_itl(&self, a: &mut ActiveGen) {
+        if a.class == Priority::Interactive {
+            self.metrics.itl.record(a.last_emit.elapsed().as_nanos() as u64);
+        }
+        a.last_emit = Instant::now();
+    }
+
+    /// Answer one finished generation; record its queue latency and
+    /// whether it met its deadline (SLO accounting — see `deadline_misses`
+    /// in SERVING.md's metrics table).
     fn finish_gen(&self, a: ActiveGen) {
         self.metrics
             .queue_ns
             .fetch_add(a.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if a.deadline.is_some_and(|d| a.enqueued.elapsed() > d) {
+            self.metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
         let finish = a.session.finish().expect("finished session");
         let _ = a.reply.send(Ok(Generated {
             tokens: a.session.into_tokens(),

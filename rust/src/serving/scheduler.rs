@@ -1,0 +1,413 @@
+//! SLO-aware scheduling state for the serving executor: priority
+//! classes, the per-class admission queues, chunked-prefill progress,
+//! swapped-out (preempted) sequences and the inter-token latency
+//! histogram.
+//!
+//! The policy these types implement (see `SERVING.md` §"Scheduler"):
+//!
+//! * Two priority classes — [`Priority::Interactive`] (default) and
+//!   [`Priority::Batch`]. Admission is FIFO **within** a class and
+//!   strict-priority **across** classes: a queued Interactive request is
+//!   always admitted before any queued Batch request (no priority
+//!   inversion), and an Interactive arrival that cannot reserve its
+//!   worst-case KV blocks preempts Batch work to make room.
+//! * Prefills run in **chunks** of at most `HCSMOE_PREFILL_CHUNK` prompt
+//!   tokens between consecutive decode steps ([`PrefillInFlight`] tracks
+//!   the progress), so a long prompt cannot stall in-flight decodes for
+//!   more than one chunk's worth of compute.
+//! * Preemption is swap-out-by-recompute: the victim's KV cache is
+//!   dropped (every pool block and the remaining reservation return
+//!   instantly), and [`PreemptedGen`] retains the token prefix needed to
+//!   rebuild it by chunked re-prefill when capacity frees up. Resumed
+//!   streams are bit-identical to uninterrupted ones — re-prefill
+//!   reconstructs the exact cache contents (the
+//!   [`crate::backend::Backend::run_prefill`] chunk contract) and the
+//!   [`Session`] carries the sampling state across the swap.
+//! * Deadlines are SLO *accounting*, not reordering: a request finishing
+//!   after its deadline bumps the `deadline_misses` counter; scheduling
+//!   order stays FIFO-within-class so deadline choices can never starve
+//!   anyone.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::backend::KvCache;
+use crate::generate::{Generated, Session};
+
+use super::{GenerateRequest, Metrics, ReplyTx};
+
+/// Scheduling class of a generation request. Interactive traffic is
+/// latency-sensitive (admitted first, never preempted); Batch traffic is
+/// throughput work that yields capacity to Interactive arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive (the default): admitted ahead of Batch, never
+    /// preempted.
+    #[default]
+    Interactive,
+    /// Throughput work: admitted only when no Interactive request waits,
+    /// and preempted (swapped out) when an Interactive arrival cannot
+    /// reserve its KV blocks.
+    Batch,
+}
+
+/// A generation waiting for (re-)admission.
+pub(crate) enum Queued {
+    /// Accepted but not yet prefilled.
+    Fresh(GenerateRequest),
+    /// Swapped out by a preemption; resumes by re-prefilling its
+    /// retained token prefix.
+    Resume(PreemptedGen),
+}
+
+impl Queued {
+    pub(crate) fn class(&self) -> Priority {
+        match self {
+            Queued::Fresh(r) => r.class,
+            Queued::Resume(p) => p.class,
+        }
+    }
+
+    pub(crate) fn reply(&self) -> &ReplyTx<Result<Generated>> {
+        match self {
+            Queued::Fresh(r) => &r.reply,
+            Queued::Resume(p) => &p.reply,
+        }
+    }
+
+    /// Answer this request with an error (the drain / reject path).
+    pub(crate) fn send_err(self, e: anyhow::Error) {
+        let _ = self.reply().send(Err(e));
+    }
+}
+
+/// Per-class FIFO admission queues. Strict priority across classes:
+/// every head/pop consults Interactive first, so a Batch request can
+/// never be admitted while an Interactive one waits.
+#[derive(Default)]
+pub(crate) struct SchedQueues {
+    interactive: VecDeque<Queued>,
+    batch: VecDeque<Queued>,
+}
+
+impl SchedQueues {
+    fn lane(&mut self, class: Priority) -> &mut VecDeque<Queued> {
+        match class {
+            Priority::Interactive => &mut self.interactive,
+            Priority::Batch => &mut self.batch,
+        }
+    }
+
+    /// Enqueue at the back of the request's class lane (arrival order).
+    pub(crate) fn push_back(&mut self, q: Queued) {
+        self.lane(q.class()).push_back(q);
+    }
+
+    /// Re-enqueue at the *front* of the class lane — a preempted victim
+    /// resumes before anything that arrived after it (FIFO is preserved
+    /// under preemption).
+    pub(crate) fn push_front(&mut self, q: Queued) {
+        self.lane(q.class()).push_front(q);
+    }
+
+    /// Head of one class lane.
+    pub(crate) fn front(&self, class: Priority) -> Option<&Queued> {
+        match class {
+            Priority::Interactive => self.interactive.front(),
+            Priority::Batch => self.batch.front(),
+        }
+    }
+
+    /// Pop the head of one class lane.
+    pub(crate) fn pop(&mut self, class: Priority) -> Option<Queued> {
+        self.lane(class).pop_front()
+    }
+
+    pub(crate) fn has(&self, class: Priority) -> bool {
+        self.front(class).is_some()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.interactive.is_empty() && self.batch.is_empty()
+    }
+
+    /// Drop queued requests whose client vanished (closed reply channel),
+    /// counting them into `gen_disconnects`.
+    pub(crate) fn retain_connected(&mut self, metrics: &Metrics) {
+        for lane in [&mut self.interactive, &mut self.batch] {
+            lane.retain(|q| {
+                let gone = q.reply().is_closed();
+                if gone {
+                    metrics.gen_disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                !gone
+            });
+        }
+    }
+
+    /// Take every queued request (the shutdown drain).
+    pub(crate) fn drain_all(&mut self) -> Vec<Queued> {
+        self.interactive.drain(..).chain(self.batch.drain(..)).collect()
+    }
+}
+
+/// A prefill in progress, possibly spanning several chunks with decode
+/// steps interleaved between them. Holds the sequence's partially built
+/// KV cache (and therefore its block reservation); dropping the whole
+/// struct — e.g. when a Batch prefill is preempted — releases every
+/// block back to the pool.
+pub(crate) struct PrefillInFlight {
+    /// The request being prefilled (Fresh) or rebuilt (Resume).
+    pub(crate) seq: Queued,
+    /// The cache under construction; `None` until the first chunk ran.
+    pub(crate) cache: Option<Box<dyn KvCache>>,
+    /// Prompt tokens prefilled so far.
+    pub(crate) done: usize,
+    /// Chunks executed so far.
+    pub(crate) chunks: usize,
+    /// Prefill wall-clock accumulated across this attempt's chunks.
+    pub(crate) prefill_s: f64,
+}
+
+impl PrefillInFlight {
+    pub(crate) fn new(seq: Queued) -> Self {
+        Self { seq, cache: None, done: 0, chunks: 0, prefill_s: 0.0 }
+    }
+
+    /// The full token sequence this prefill must feed: the prompt for a
+    /// fresh request, the retained fed-token prefix for a resume.
+    pub(crate) fn tokens(&self) -> &[i32] {
+        match &self.seq {
+            Queued::Fresh(r) => &r.prompt,
+            Queued::Resume(p) => &p.resident,
+        }
+    }
+
+    pub(crate) fn reply(&self) -> &ReplyTx<Result<Generated>> {
+        self.seq.reply()
+    }
+}
+
+/// One generation sequence in the continuous decode batch.
+pub(crate) struct ActiveGen {
+    pub(crate) reply: ReplyTx<Result<Generated>>,
+    pub(crate) enqueued: Instant,
+    pub(crate) class: Priority,
+    pub(crate) deadline: Option<Duration>,
+    /// The original prompt — kept so a preemption can reconstruct the
+    /// fed-token prefix (prompt ++ generated-and-fed tokens) to
+    /// re-prefill from.
+    pub(crate) prompt: Vec<i32>,
+    /// The worst-case token reservation this sequence was admitted under
+    /// (prompt + max_new_tokens, clamped to `t_max`) — reused verbatim
+    /// when a preempted sequence re-reserves, so resume can never demand
+    /// more than original admission did.
+    pub(crate) reserve_tokens: usize,
+    pub(crate) session: Session,
+    pub(crate) cache: Box<dyn KvCache>,
+    /// Sampled but not yet fed to the model.
+    pub(crate) next: i32,
+    /// When this sequence last emitted a token (admission or previous
+    /// decode step) — inter-token latency is recorded against it.
+    pub(crate) last_emit: Instant,
+    pub(crate) prefill_s: f64,
+    pub(crate) decode_s: f64,
+}
+
+impl ActiveGen {
+    /// Swap this sequence out: drop its KV cache — every pool block and
+    /// the remaining reservation release immediately — and retain the
+    /// exact token prefix the model has consumed, for recompute on
+    /// resume. `session.tokens()` ends with the sampled-but-unfed
+    /// `next`, which must NOT be re-prefilled: it is fed on the first
+    /// decode step after resume, exactly as it would have been without
+    /// the preemption (bit-identity of the resumed stream).
+    pub(crate) fn preempt(self) -> PreemptedGen {
+        let fed = self.session.tokens().len() - 1;
+        let mut resident = self.prompt.clone();
+        resident.extend_from_slice(&self.session.tokens()[..fed]);
+        PreemptedGen {
+            reply: self.reply,
+            enqueued: self.enqueued,
+            class: self.class,
+            deadline: self.deadline,
+            prompt: self.prompt,
+            resident,
+            reserve_tokens: self.reserve_tokens,
+            session: self.session,
+            next: self.next,
+            prefill_s: self.prefill_s,
+            decode_s: self.decode_s,
+        } // self.cache drops here, releasing the blocks
+    }
+}
+
+/// A sequence swapped out of the pool: everything needed to resume it
+/// bit-identically once capacity frees up — the [`Session`] (sampling
+/// state, RNG, stop conditions), the outstanding sampled token, and the
+/// fed-token prefix whose chunked re-prefill rebuilds the KV cache.
+pub(crate) struct PreemptedGen {
+    pub(crate) reply: ReplyTx<Result<Generated>>,
+    pub(crate) enqueued: Instant,
+    pub(crate) class: Priority,
+    pub(crate) deadline: Option<Duration>,
+    /// Original prompt (restored into the resumed [`ActiveGen`]).
+    pub(crate) prompt: Vec<i32>,
+    /// Every token the model had consumed: prompt ++ fed generations.
+    /// Re-prefilling exactly this rebuilds the dropped cache.
+    pub(crate) resident: Vec<i32>,
+    /// The admission-time reservation bound (see
+    /// [`ActiveGen::reserve_tokens`]).
+    pub(crate) reserve_tokens: usize,
+    pub(crate) session: Session,
+    /// Sampled but not yet fed when the preemption hit.
+    pub(crate) next: i32,
+    pub(crate) prefill_s: f64,
+    pub(crate) decode_s: f64,
+}
+
+/// Bucket count of [`LatencyHisto`]: 16 exact sub-16 ns buckets plus
+/// 16 sub-buckets per power of two up to 2^63 — index 975 at most.
+const HISTO_BUCKETS: usize = 1024;
+
+/// A lock-free log-linear latency histogram (HdrHistogram-style):
+/// nanosecond samples land in one of [`HISTO_BUCKETS`] buckets — exact
+/// below 16 ns, then 16 sub-buckets per power of two, giving a worst-case
+/// quantile error of ~6% across the full `u64` range. Recording is one
+/// relaxed atomic increment, so the executor's decode hot path can feed
+/// it without locks; readers take quantiles concurrently.
+///
+/// The bucket mapping is monotone in the sample value, so comparing the
+/// same quantile of two histograms (e.g. chunked vs unchunked
+/// inter-token latency in the `sched_sweep` bench) is bucketisation-safe:
+/// if every chunked sample is below every unchunked one, the reported
+/// quantiles preserve that order.
+pub struct LatencyHisto {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self { buckets: (0..HISTO_BUCKETS).map(|_| AtomicU64::new(0)).collect() }
+    }
+}
+
+impl LatencyHisto {
+    /// Bucket index of a nanosecond sample.
+    fn index(ns: u64) -> usize {
+        if ns < 16 {
+            return ns as usize;
+        }
+        let exp = 63 - u64::from(ns.leading_zeros()); // >= 4
+        let sub = (ns >> (exp - 4)) & 0xF; // top 4 mantissa bits
+        ((exp - 3) * 16 + sub) as usize
+    }
+
+    /// Upper bound (ns) of a bucket — quantiles report this, so they
+    /// over- rather than under-state latency.
+    fn upper_ns(idx: usize) -> u64 {
+        if idx < 16 {
+            return idx as u64;
+        }
+        let exp = (idx / 16 + 3) as u32;
+        let sub = (idx % 16) as u64;
+        let width = 1u64 << (exp - 4);
+        (1u64 << exp) + sub * width + (width - 1)
+    }
+
+    /// Record one nanosecond sample.
+    pub fn record(&self, ns: u64) {
+        self.buckets[Self::index(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`) in **milliseconds**; `0.0` when
+    /// no samples were recorded. Reported as the matched bucket's upper
+    /// bound.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Self::upper_ns(i) as f64 / 1e6;
+            }
+        }
+        Self::upper_ns(HISTO_BUCKETS - 1) as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_buckets_are_monotone_and_bounded() {
+        // index is monotone non-decreasing in the sample, and every
+        // sample lands at or below its bucket's upper bound
+        let mut prev = 0usize;
+        for shift in 0..64u32 {
+            for delta in [0u64, 1, 3] {
+                let ns = (1u64 << shift).saturating_add(delta);
+                let idx = LatencyHisto::index(ns);
+                assert!(idx >= prev || ns < (1u64 << shift), "non-monotone at {ns}");
+                assert!(idx < HISTO_BUCKETS, "index {idx} out of range");
+                assert!(
+                    LatencyHisto::upper_ns(idx) >= ns || shift == 63,
+                    "upper bound below sample at {ns}"
+                );
+                prev = idx;
+            }
+            prev = LatencyHisto::index(1u64 << shift);
+        }
+        // exact below 16
+        for ns in 0..16u64 {
+            assert_eq!(LatencyHisto::index(ns), ns as usize);
+            assert_eq!(LatencyHisto::upper_ns(ns as usize), ns);
+        }
+    }
+
+    #[test]
+    fn histo_quantiles() {
+        let h = LatencyHisto::default();
+        assert_eq!(h.quantile_ms(0.5), 0.0); // empty
+        // 100 samples at 1 ms, 1 sample at ~16 ms: p50 ~1 ms, p99 ~1 ms,
+        // p100 ~16 ms (bucket upper bounds, <= ~6% over)
+        for _ in 0..100 {
+            h.record(1_000_000);
+        }
+        h.record(16_000_000);
+        let p50 = h.quantile_ms(0.5);
+        let p99 = h.quantile_ms(0.99);
+        let p100 = h.quantile_ms(1.0);
+        assert!((1.0..1.1).contains(&p50), "p50 {p50}");
+        assert!((1.0..1.1).contains(&p99), "p99 {p99}");
+        assert!((16.0..17.1).contains(&p100), "p100 {p100}");
+        assert_eq!(h.count(), 101);
+        // ordering under bucketisation: strictly larger samples can never
+        // report a smaller quantile
+        let lo = LatencyHisto::default();
+        let hi = LatencyHisto::default();
+        for i in 0..50u64 {
+            lo.record(500_000 + i * 1_000);
+            hi.record(5_000_000 + i * 10_000);
+        }
+        assert!(lo.quantile_ms(0.99) <= hi.quantile_ms(0.99));
+    }
+
+    #[test]
+    fn priority_default_is_interactive() {
+        assert_eq!(Priority::default(), Priority::Interactive);
+    }
+}

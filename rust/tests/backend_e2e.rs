@@ -212,6 +212,7 @@ fn serving_through_native_backend_matches_direct_scores() {
             model: "mixsim".into(),
             compress: None,
             kv_budget_bytes: None,
+            prefill_chunk: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,

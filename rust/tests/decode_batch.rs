@@ -13,10 +13,10 @@
 //! head-of-line regression).
 
 use std::path::PathBuf;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use hc_smoe::backend::native::{forward_logits_with, NativeBackend};
-use hc_smoe::backend::{Backend, KvCache};
+use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::bench_support::synthesize_artifacts;
 use hc_smoe::config::{Artifacts, ModelCfg};
 use hc_smoe::eval::Evaluator;
@@ -86,10 +86,18 @@ fn assert_batch_identity(
     let mut batch_caches: Vec<Box<dyn KvCache>> = Vec::new();
     let mut threaded_caches: Vec<Box<dyn KvCache>> = Vec::new();
     let mut seqs: Vec<Vec<i32>> = Vec::new();
+    let prefill = |p: &[i32]| -> Box<dyn KvCache> {
+        let mut opts = PrefillOpts::new(mask);
+        if let Some(rm) = remap {
+            opts = opts.remap(rm);
+        }
+        let (cache, _) = backend.run_prefill(state.as_ref(), p, opts).unwrap();
+        cache.expect("fresh prefill returns a cache")
+    };
     for p in prompts {
-        seq_caches.push(backend.run_prefill(state.as_ref(), p, mask, remap).unwrap().0);
-        batch_caches.push(backend.run_prefill(state.as_ref(), p, mask, remap).unwrap().0);
-        threaded_caches.push(backend.run_prefill(state.as_ref(), p, mask, remap).unwrap().0);
+        seq_caches.push(prefill(p));
+        batch_caches.push(prefill(p));
+        threaded_caches.push(prefill(p));
         seqs.push(p.clone());
     }
     for i in 0..steps {
@@ -224,8 +232,12 @@ fn stream_join(
     st: &mut Stream,
 ) {
     let p: Vec<i32> = (0..4 + id).map(|i| ((1 + id * 7 + i * 5) % v) as i32).collect();
-    st.batch.push(backend.run_prefill(state, &p, mask, None).unwrap().0);
-    st.reference.push(backend.run_prefill(state, &p, mask, None).unwrap().0);
+    let prefill = || {
+        let (cache, _) = backend.run_prefill(state, &p, PrefillOpts::new(mask)).unwrap();
+        cache.expect("fresh prefill returns a cache")
+    };
+    st.batch.push(prefill());
+    st.reference.push(prefill());
     st.ids.push(id);
 }
 
@@ -305,8 +317,11 @@ fn empty_batches_and_bad_requests_leave_caches_untouched() {
         .unwrap();
     assert!(rows.is_empty());
 
-    let (mut ca, _) = backend.run_prefill(state.as_ref(), &[1, 2, 3], &mask, None).unwrap();
-    let (mut cb, _) = backend.run_prefill(state.as_ref(), &[4, 5], &mask, None).unwrap();
+    let (ca, _) =
+        backend.run_prefill(state.as_ref(), &[1, 2, 3], PrefillOpts::new(&mask)).unwrap();
+    let (cb, _) = backend.run_prefill(state.as_ref(), &[4, 5], PrefillOpts::new(&mask)).unwrap();
+    let mut ca = ca.expect("fresh prefill returns a cache");
+    let mut cb = cb.expect("fresh prefill returns a cache");
 
     // token-count mismatch errors before any cache is touched
     {
@@ -359,6 +374,8 @@ fn server_batches_decode_under_concurrent_mixed_load() {
             artifacts_root: a.root.to_string_lossy().into_owned(),
             model: "qwensim".into(),
             compress: None,
+            kv_budget_bytes: None,
+            prefill_chunk: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
@@ -376,12 +393,10 @@ fn server_batches_decode_under_concurrent_mixed_load() {
     let mut rxs = Vec::new();
     for (gi, &seed) in seeds.iter().enumerate() {
         let (reply, rx) = reply_channel();
-        tx.send(Request::Generate(GenerateRequest {
-            prompt: prompt.to_vec(),
-            params: SamplingParams::top_k(8, 0.8, seed, 20 + gi, None),
-            reply,
-            enqueued: Instant::now(),
-        }))
+        tx.send(Request::Generate(
+            GenerateRequest::new(&prompt, SamplingParams::top_k(8, 0.8, seed, 20 + gi, None))
+                .reply_to(reply),
+        ))
         .unwrap();
         rxs.push(rx);
     }
@@ -441,6 +456,8 @@ fn long_prompt_admission_does_not_stall_active_decode() {
             artifacts_root: a.root.to_string_lossy().into_owned(),
             model: "qwensim".into(),
             compress: None,
+            kv_budget_bytes: None,
+            prefill_chunk: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -454,12 +471,10 @@ fn long_prompt_admission_does_not_stall_active_decode() {
     let (reply, rx) = reply_channel();
 
     // one in-flight sequence that needs 3 decode steps after admission...
-    tx.send(Request::Generate(GenerateRequest {
-        prompt: vec![1, 4, 20, 3],
-        params: SamplingParams::greedy(4, None),
-        reply: reply.clone(),
-        enqueued: Instant::now(),
-    }))
+    tx.send(Request::Generate(
+        GenerateRequest::new(&[1, 4, 20, 3], SamplingParams::greedy(4, None))
+            .reply_to(reply.clone()),
+    ))
     .unwrap();
     // ...then a burst of near-t_max prompts that each finish at admission
     // (max_new_tokens = 1, so their entire cost is the prefill). Under the
@@ -468,12 +483,10 @@ fn long_prompt_admission_does_not_stall_active_decode() {
     let n_long = 6usize;
     let long_prompt: Vec<i32> = (0..t_max - 1).map(|i| ((i * 3) % 60 + 1) as i32).collect();
     for _ in 0..n_long {
-        tx.send(Request::Generate(GenerateRequest {
-            prompt: long_prompt.clone(),
-            params: SamplingParams::greedy(1, None),
-            reply: reply.clone(),
-            enqueued: Instant::now(),
-        }))
+        tx.send(Request::Generate(
+            GenerateRequest::new(&long_prompt, SamplingParams::greedy(1, None))
+                .reply_to(reply.clone()),
+        ))
         .unwrap();
     }
     drop(reply);

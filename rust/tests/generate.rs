@@ -14,7 +14,7 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use hc_smoe::backend::native::{forward_logits_with, NativeBackend};
-use hc_smoe::backend::{Backend, KvCache};
+use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::bench_support::synthesize_artifacts;
 use hc_smoe::clustering::Linkage;
 use hc_smoe::config::{Artifacts, ModelCfg};
@@ -88,8 +88,9 @@ fn cached_decode_is_bit_identical_to_full_forward() {
     let prompt: Vec<i32> = (0..8).map(|i| ((3 + i * 5) % v) as i32).collect();
     let cont: Vec<i32> = (0..12).map(|i| ((7 + i * 11) % v) as i32).collect();
 
-    let (mut cache, prefill_logits) =
-        backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
+    let (cache, prefill_logits) =
+        backend.run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask)).unwrap();
+    let mut cache = cache.expect("fresh prefill returns a cache");
     assert_eq!(cache.seq_len(), prompt.len());
     for threads in [1usize, 4] {
         let full = forward_logits_with(
@@ -145,9 +146,10 @@ fn cached_decode_is_bit_identical_on_compact_variant() {
     let prompt: Vec<i32> = (0..6).map(|i| ((5 + i * 3) % v) as i32).collect();
     let cont: Vec<i32> = (0..10).map(|i| ((2 + i * 9) % v) as i32).collect();
 
-    let (mut cache, prefill_logits) = backend
-        .run_prefill(state.as_ref(), &prompt, &mask, Some(&remap))
+    let (cache, prefill_logits) = backend
+        .run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask).remap(&remap))
         .unwrap();
+    let mut cache = cache.expect("fresh prefill returns a cache");
     let full = forward_logits_with(
         &cfg, &cw, &prompt, 1, prompt.len(), &mask, Some(&remap), r, 1,
     )
@@ -288,6 +290,7 @@ fn degenerate_sampling_params_error_cleanly() {
             model: "qwensim".into(),
             compress: None,
             kv_budget_bytes: None,
+            prefill_chunk: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -311,6 +314,7 @@ fn server_mixed_load_matches_offline_results() {
             model: "qwensim".into(),
             compress: None,
             kv_budget_bytes: None,
+            prefill_chunk: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
@@ -390,6 +394,7 @@ fn empty_prompt_rows_do_not_panic_the_executor() {
             model: "mixsim".into(),
             compress: None,
             kv_budget_bytes: None,
+            prefill_chunk: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

@@ -1,7 +1,8 @@
 //! Paged KV-cache pool test suite.
 //!
-//! The headline contract: a paged cache ([`Backend::run_prefill_paged`])
-//! produces logits **bit-identical** to the flat cache at the prefill and
+//! The headline contract: a paged cache ([`Backend::run_prefill`] with
+//! `CacheMode::Paged`) produces logits **bit-identical** to the flat
+//! cache at the prefill and
 //! at every decode step — across the full, masked, compact and
 //! shared-expert layouts, at multiple thread counts, and through both
 //! `run_decode` and `run_decode_batch`. Plus the pool semantics: prefix
@@ -17,7 +18,7 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use hc_smoe::backend::native::{fork_paged_cache, NativeBackend};
-use hc_smoe::backend::{Backend, KvCache};
+use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::bench_support::synthesize_artifacts;
 use hc_smoe::config::{Artifacts, ModelCfg};
 use hc_smoe::generate::SamplingParams;
@@ -86,19 +87,27 @@ fn assert_paged_matches_flat(
     let state = backend.load_model(w, n_slots).unwrap();
     let pool = big_pool(cfg);
 
-    let (mut flat, flat_logits) =
-        backend.run_prefill(state.as_ref(), prompt, mask, remap).unwrap();
-    let (mut paged, paged_logits) = backend
-        .run_prefill_paged(state.as_ref(), prompt, mask, remap, &pool, prompt.len() + steps)
-        .unwrap();
+    let flat_opts = || {
+        let mut o = PrefillOpts::new(mask);
+        if let Some(rm) = remap {
+            o = o.remap(rm);
+        }
+        o
+    };
+    let paged_opts = || flat_opts().paged(&pool, prompt.len() + steps);
+    let prefill = |opts: PrefillOpts<'_>| {
+        let (cache, logits) = backend.run_prefill(state.as_ref(), prompt, opts).unwrap();
+        (cache.expect("fresh prefill returns a cache"), logits)
+    };
+
+    let (mut flat, flat_logits) = prefill(flat_opts());
+    let (mut paged, paged_logits) = prefill(paged_opts());
     assert_eq!(bits(&flat_logits), bits(&paged_logits), "prefill logits differ");
     assert_eq!(flat.seq_len(), paged.seq_len());
 
     // a second flat+paged pair decodes through ONE mixed batch call
-    let (mut flat_b, _) = backend.run_prefill(state.as_ref(), prompt, mask, remap).unwrap();
-    let (mut paged_b, _) = backend
-        .run_prefill_paged(state.as_ref(), prompt, mask, remap, &pool, prompt.len() + steps)
-        .unwrap();
+    let (mut flat_b, _) = prefill(flat_opts());
+    let (mut paged_b, _) = prefill(paged_opts());
 
     let v = cfg.vocab;
     for i in 0..steps {
@@ -180,13 +189,15 @@ fn identical_prompts_share_full_blocks() {
     // 2 full blocks + a 3-token tail
     let prompt: Vec<i32> = (0..2 * bt + 3).map(|i| ((1 + i * 3) % cfg.vocab) as i32).collect();
 
-    let (mut a, _) = backend
-        .run_prefill_paged(state.as_ref(), &prompt, &mask, None, &pool, prompt.len())
+    let (a, _) = backend
+        .run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask).paged(&pool, prompt.len()))
         .unwrap();
+    let mut a = a.expect("fresh prefill returns a cache");
     assert_eq!(pool.stats().in_use, 3);
-    let (mut b, _) = backend
-        .run_prefill_paged(state.as_ref(), &prompt, &mask, None, &pool, prompt.len())
+    let (b, _) = backend
+        .run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask).paged(&pool, prompt.len()))
         .unwrap();
+    let mut b = b.expect("fresh prefill returns a cache");
     // the two full prompt blocks deduplicate; only b's tail is new
     assert_eq!(pool.stats().in_use, 4, "identical prefix must share storage");
     assert_eq!(pool.stats().shared, 2);
@@ -195,13 +206,16 @@ fn identical_prompts_share_full_blocks() {
     let mut masked = mask.clone();
     masked[1] = MASK_OFF;
     let (c, _) = backend
-        .run_prefill_paged(state.as_ref(), &prompt, &masked, None, &pool, prompt.len())
+        .run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&masked).paged(&pool, prompt.len()))
         .unwrap();
+    let c = c.expect("fresh prefill returns a cache");
     assert_eq!(pool.stats().in_use, 7, "masked variant must not share with unmasked");
 
     // both sharers decode on, bit-identical to independent flat caches
-    let (mut fa, _) = backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
-    let (mut fb, _) = backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
+    let (fa, _) = backend.run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask)).unwrap();
+    let (fb, _) = backend.run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask)).unwrap();
+    let mut fa = fa.expect("fresh prefill returns a cache");
+    let mut fb = fb.expect("fresh prefill returns a cache");
     for i in 0..5 {
         let ta = ((2 + i * 5) % cfg.vocab) as i32;
         let tb = ((3 + i * 7) % cfg.vocab) as i32;
@@ -231,17 +245,22 @@ fn fork_copy_on_write_diverges_bit_identically() {
     let pool = big_pool(&cfg);
     let prompt: Vec<i32> = (0..9).map(|i| ((5 + i * 4) % cfg.vocab) as i32).collect();
 
-    let (mut orig, _) = backend
-        .run_prefill_paged(state.as_ref(), &prompt, &mask, None, &pool, cfg.t_max)
+    let (orig, _) = backend
+        .run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask).paged(&pool, cfg.t_max))
         .unwrap();
+    let mut orig = orig.expect("fresh prefill returns a cache");
     let mut fork = fork_paged_cache(orig.as_ref()).unwrap();
     assert_eq!(fork.seq_len(), orig.seq_len());
     let before = pool.stats();
     assert_eq!(before.shared, 1, "fork shares the (partial) tail block");
 
     // flat references for both continuations
-    let (mut f_orig, _) = backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
-    let (mut f_fork, _) = backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
+    let (f_orig, _) =
+        backend.run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask)).unwrap();
+    let (f_fork, _) =
+        backend.run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask)).unwrap();
+    let mut f_orig = f_orig.expect("fresh prefill returns a cache");
+    let mut f_fork = f_fork.expect("fresh prefill returns a cache");
     for i in 0..6 {
         let ta = ((2 + i * 3) % cfg.vocab) as i32;
         let tb = ((11 + i * 5) % cfg.vocab) as i32; // different stream: forces divergence
@@ -276,15 +295,20 @@ fn intra_batch_cow_sharers_need_one_block_not_two() {
         KvPool::new(cfg.n_layer, cfg.d, DEFAULT_BLOCK_TOKENS, 2).unwrap(),
     );
     let prompt: Vec<i32> = (0..5).map(|i| ((6 + i * 5) % cfg.vocab) as i32).collect();
-    let (mut parent, _) = backend
-        .run_prefill_paged(state.as_ref(), &prompt, &mask, None, &pool, prompt.len())
+    let (parent, _) = backend
+        .run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask).paged(&pool, prompt.len()))
         .unwrap();
+    let mut parent = parent.expect("fresh prefill returns a cache");
     let mut fork = fork_paged_cache(parent.as_ref()).unwrap();
     assert_eq!(pool.stats().in_use, 1);
 
     // flat references for bit-identity through the constrained batch
-    let (mut f_parent, _) = backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
-    let (mut f_fork, _) = backend.run_prefill(state.as_ref(), &prompt, &mask, None).unwrap();
+    let (f_parent, _) =
+        backend.run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask)).unwrap();
+    let (f_fork, _) =
+        backend.run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask)).unwrap();
+    let mut f_parent = f_parent.expect("fresh prefill returns a cache");
+    let mut f_fork = f_fork.expect("fresh prefill returns a cache");
     let toks = [3i32, 9];
     let rows = {
         let mut refs: Vec<&mut dyn KvCache> = vec![parent.as_mut(), fork.as_mut()];
@@ -314,6 +338,7 @@ fn serve_with_blocks(a: &Artifacts, cfg: &ModelCfg, blocks: usize) -> ServerHand
             model: "qwensim".into(),
             compress: None,
             kv_budget_bytes: Some(blocks * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
+            prefill_chunk: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -342,12 +367,10 @@ fn admission_blocks_then_admits_in_fifo_order() {
     let (reply, rx) = reply_channel();
     let tx = handle.sender();
     for max_new in [13usize, 14, 15] {
-        tx.send(Request::Generate(GenerateRequest {
-            prompt: prompt.clone(),
-            params: SamplingParams::greedy(max_new, None),
-            reply: reply.clone(),
-            enqueued: Instant::now(),
-        }))
+        tx.send(Request::Generate(
+            GenerateRequest::new(&prompt, SamplingParams::greedy(max_new, None))
+                .reply_to(reply.clone()),
+        ))
         .unwrap();
     }
     drop(reply);
@@ -392,12 +415,10 @@ fn long_context_burst_completes_under_budget_flat_accounting_would_blow() {
         // distinct prompts so prefix sharing cannot hide the pressure
         let prompt: Vec<i32> =
             (0..prompt_len).map(|i| ((1 + r * 7 + i * 3) % cfg.vocab) as i32).collect();
-        tx.send(Request::Generate(GenerateRequest {
-            prompt,
-            params: SamplingParams::greedy(max_new, None),
-            reply: reply.clone(),
-            enqueued: Instant::now(),
-        }))
+        tx.send(Request::Generate(
+            GenerateRequest::new(&prompt, SamplingParams::greedy(max_new, None))
+                .reply_to(reply.clone()),
+        ))
         .unwrap();
     }
     drop(reply);
@@ -430,12 +451,9 @@ fn disconnected_client_is_evicted_and_blocks_released() {
     {
         let (reply, rx) = reply_channel::<anyhow::Result<hc_smoe::generate::Generated>>();
         drop(rx);
-        tx.send(Request::Generate(GenerateRequest {
-            prompt: vec![1, 4, 20],
-            params: SamplingParams::greedy(40, None),
-            reply,
-            enqueued: Instant::now(),
-        }))
+        tx.send(Request::Generate(
+            GenerateRequest::new(&[1, 4, 20], SamplingParams::greedy(40, None)).reply_to(reply),
+        ))
         .unwrap();
     }
     wait_for(&handle, "queued eviction", |h| {
@@ -447,12 +465,10 @@ fn disconnected_client_is_evicted_and_blocks_released() {
     // step boundary, so the sequence leaves long before max_tokens
     let steps_before = handle.metrics.snapshot().decode_steps;
     let (reply, rx) = reply_channel();
-    tx.send(Request::Generate(GenerateRequest {
-        prompt: vec![2, 5, 21, 7],
-        params: SamplingParams::greedy(1_000_000, None),
-        reply,
-        enqueued: Instant::now(),
-    }))
+    tx.send(Request::Generate(
+        GenerateRequest::new(&[2, 5, 21, 7], SamplingParams::greedy(1_000_000, None))
+            .reply_to(reply),
+    ))
     .unwrap();
     wait_for(&handle, "decode to start", |h| {
         h.metrics.snapshot().decode_steps > steps_before
@@ -491,21 +507,19 @@ fn mixed_workload_leaves_no_block_behind() {
         if r == 2 {
             let (dead, dead_rx) = reply_channel();
             drop(dead_rx);
-            tx.send(Request::Generate(GenerateRequest {
-                prompt,
-                params: SamplingParams::greedy(12, None),
-                reply: dead,
-                enqueued: Instant::now(),
-            }))
+            tx.send(Request::Generate(
+                GenerateRequest::new(&prompt, SamplingParams::greedy(12, None)).reply_to(dead),
+            ))
             .unwrap();
         } else {
             gen_sent += 1;
-            tx.send(Request::Generate(GenerateRequest {
-                prompt,
-                params: SamplingParams::top_k(4, 0.8, 7 + r as u64, 8 + r, None),
-                reply: reply.clone(),
-                enqueued: Instant::now(),
-            }))
+            tx.send(Request::Generate(
+                GenerateRequest::new(
+                    &prompt,
+                    SamplingParams::top_k(4, 0.8, 7 + r as u64, 8 + r, None),
+                )
+                .reply_to(reply.clone()),
+            ))
             .unwrap();
         }
     }

@@ -1,0 +1,495 @@
+//! Scheduler test suite: chunked prefill, priority classes, preemption.
+//!
+//! The headline contracts: feeding a prompt through the unified
+//! [`Backend::run_prefill`] entry point chunk by chunk (`resume_from`)
+//! yields a cache and final logits **bit-identical** to one whole-prompt
+//! prefill — across the flat, paged, masked and compact layouts — and a
+//! Batch-class generation that is preempted (cache dropped, prefix
+//! re-prefilled on resume) emits exactly the token stream of an
+//! uninterrupted offline run. Plus the scheduler policy itself: an
+//! Interactive request submitted after Batch work still completes first
+//! (no priority inversion), chunked prefill bounds how many prompt tokens
+//! can stall consecutive decode steps (via the deterministic
+//! `prefill_stall_tokens_max` gauge), a preemption storm leaves zero KV
+//! blocks behind, shutdown answers every queued request with an explicit
+//! error instead of hanging its client, and deadline misses are counted.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hc_smoe::backend::native::NativeBackend;
+use hc_smoe::backend::{Backend, PrefillOpts};
+use hc_smoe::bench_support::synthesize_artifacts;
+use hc_smoe::config::{Artifacts, ModelCfg};
+use hc_smoe::generate::{generate, SamplingParams};
+use hc_smoe::kvpool::{KvPool, PoolHandle, DEFAULT_BLOCK_TOKENS};
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::MASK_OFF;
+use hc_smoe::serving::{
+    reply_channel, serve, BatcherConfig, GenerateRequest, Priority, Request, ServeSpec,
+    ServerHandle,
+};
+use hc_smoe::weights::Weights;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "sched".into(),
+        n_layer: 2,
+        d: 16,
+        m: 16,
+        n_exp: 4,
+        k: 2,
+        heads: 2,
+        vocab: 48,
+        t_max: 48,
+        shared: false,
+        m_shared: 16,
+        // k=2 distinct experts per token keeps every capacity queue below
+        // cap_factor=4 capacity — structurally drop-free, so chunked and
+        // whole-prompt dispatch agree exactly at every prefix
+        cap_factor: 4.0,
+        block_c: 4,
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Synthesize one artifact set per test process (server-side tests).
+fn arts() -> Artifacts {
+    static DIR: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+    let dir = DIR.get_or_init(|| {
+        let p = std::env::temp_dir().join(format!("hcsmoe_sched_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        synthesize_artifacts(&p, 0x5C4D).expect("synthesize artifacts");
+        p
+    });
+    Artifacts::new(dir)
+}
+
+/// Serve qwensim with an explicit pool budget in *blocks* and an explicit
+/// prefill chunk size.
+fn serve_with(a: &Artifacts, cfg: &ModelCfg, blocks: usize, chunk: Option<usize>) -> ServerHandle {
+    serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+            kv_budget_bytes: Some(blocks * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
+            prefill_chunk: chunk,
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap()
+}
+
+/// Poll a metrics predicate with a deadline (the executor publishes pool
+/// gauges once per loop iteration).
+fn wait_for(handle: &ServerHandle, what: &str, pred: impl Fn(&ServerHandle) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !pred(handle) {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend-level chunked-prefill bit-identity
+// ---------------------------------------------------------------------------
+
+/// Prefill `prompt` whole, then again in `chunk`-token pieces (first piece
+/// fresh, the rest through `PrefillOpts::resume`), over both the flat and
+/// the paged cache — asserting bitwise-equal final logits and bitwise-equal
+/// decode continuations from every chunked cache.
+fn assert_chunked_matches_whole(
+    cfg: &ModelCfg,
+    w: &Weights,
+    n_slots: usize,
+    mask: &[f32],
+    remap: Option<&[i32]>,
+    prompt: &[i32],
+    steps: usize,
+) {
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(w, n_slots).unwrap();
+    let pool = PoolHandle::new(KvPool::for_model(cfg, 4 << 20, DEFAULT_BLOCK_TOKENS).unwrap());
+    let base_opts = || {
+        let mut o = PrefillOpts::new(mask);
+        if let Some(rm) = remap {
+            o = o.remap(rm);
+        }
+        o
+    };
+
+    // reference: whole-prompt flat prefill + its decode continuation
+    let (wcache, wlogits) = backend.run_prefill(state.as_ref(), prompt, base_opts()).unwrap();
+    let mut wcache = wcache.expect("fresh prefill returns a cache");
+    let tok = |i: usize| ((7 + i * 5) % cfg.vocab) as i32;
+    let ref_rows: Vec<Vec<f32>> = (0..steps)
+        .map(|i| backend.run_decode(state.as_ref(), wcache.as_mut(), tok(i), mask, remap).unwrap())
+        .collect();
+
+    for chunk in [1usize, 3, 5, prompt.len()] {
+        for paged in [false, true] {
+            let first = chunk.min(prompt.len());
+            let opts = if paged {
+                base_opts().paged(&pool, prompt.len() + steps)
+            } else {
+                base_opts()
+            };
+            let (cache, mut logits) =
+                backend.run_prefill(state.as_ref(), &prompt[..first], opts).unwrap();
+            let mut cache = cache.expect("fresh prefill returns a cache");
+            let mut done = first;
+            while done < prompt.len() {
+                let take = chunk.min(prompt.len() - done);
+                let (none, l) = backend
+                    .run_prefill(
+                        state.as_ref(),
+                        &prompt[done..done + take],
+                        base_opts().resume(cache.as_mut()),
+                    )
+                    .unwrap();
+                assert!(none.is_none(), "a resumed prefill extends the given cache");
+                logits = l;
+                done += take;
+            }
+            assert_eq!(cache.seq_len(), prompt.len(), "chunk={chunk} paged={paged}");
+            assert_eq!(
+                bits(&logits),
+                bits(&wlogits),
+                "chunk={chunk} paged={paged}: chunked prefill logits differ from whole-prompt"
+            );
+            for (i, rrow) in ref_rows.iter().enumerate() {
+                let row = backend
+                    .run_decode(state.as_ref(), cache.as_mut(), tok(i), mask, remap)
+                    .unwrap();
+                assert_eq!(
+                    bits(&row),
+                    bits(rrow),
+                    "chunk={chunk} paged={paged}: decode step {i} diverged after chunked prefill"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_matches_whole_full_layout() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 41);
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    // 13 tokens: irregular tails at chunk sizes 3 and 5
+    let prompt: Vec<i32> = (0..13).map(|i| ((3 + i * 5) % cfg.vocab) as i32).collect();
+    assert_chunked_matches_whole(&cfg, &w, cfg.n_exp, &mask, None, &prompt, 5);
+}
+
+#[test]
+fn chunked_matches_whole_masked_layout() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 43);
+    let mut mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    mask[2] = MASK_OFF;
+    mask[cfg.n_exp + 1] = MASK_OFF;
+    let prompt: Vec<i32> = (0..9).map(|i| ((2 + i * 7) % cfg.vocab) as i32).collect();
+    assert_chunked_matches_whole(&cfg, &w, cfg.n_exp, &mask, None, &prompt, 4);
+}
+
+#[test]
+fn chunked_matches_whole_compact_layout() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 47);
+    let r = 2usize;
+    let keep: Vec<Vec<usize>> = vec![(0..r).collect(); cfg.n_layer];
+    let cw = w.to_compact(&cfg, &keep).unwrap();
+    let remap: Vec<i32> = (0..cfg.n_layer * cfg.n_exp)
+        .map(|i| ((i % cfg.n_exp) % r) as i32)
+        .collect();
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    let prompt: Vec<i32> = (0..11).map(|i| ((9 + i * 4) % cfg.vocab) as i32).collect();
+    assert_chunked_matches_whole(&cfg, &cw, r, &mask, Some(&remap), &prompt, 4);
+}
+
+#[test]
+fn model_layer_prefill_resume_matches_whole() {
+    // the exact wrapper pair the serving executor drives
+    // (ModelContext::prefill_paged for the first chunk, prefill_resume for
+    // the rest) agrees bit-for-bit with one whole-prompt prefill
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let pool = ctx.kv_pool(4 << 20).unwrap();
+    let prompt: Vec<i32> = (0..10).map(|i| ((5 + i * 3) % ctx.cfg.vocab) as i32).collect();
+
+    let (_, whole_logits) = ctx.prefill(&model, &prompt).unwrap();
+    let (mut cache, mut logits) =
+        ctx.prefill_paged(&model, &prompt[..3], &pool, prompt.len()).unwrap();
+    for chunk in prompt[3..].chunks(3) {
+        logits = ctx.prefill_resume(&model, chunk, cache.as_mut()).unwrap();
+    }
+    assert_eq!(cache.seq_len(), prompt.len());
+    assert_eq!(bits(&logits), bits(&whole_logits), "model-layer chunked prefill diverged");
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler policy (priority, preemption, stall bound, shutdown, deadlines)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interactive_submitted_last_completes_first() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let cfg = ctx.cfg.clone();
+    drop(ctx);
+    let handle = serve_with(&a, &cfg, 64, None);
+    let tx = handle.sender();
+    // ONE shared reply channel: replies arrive in the executor's
+    // completion order, so the assertion is on ordering, not wall-clock
+    let (reply, rx) = reply_channel();
+    let prompt = [1i32, 4, 20, 3];
+    // three Batch generations first, the Interactive one LAST — token
+    // counts identify the replies
+    for max_new in [6usize, 7, 8] {
+        tx.send(Request::Generate(
+            GenerateRequest::new(&prompt, SamplingParams::greedy(max_new, None))
+                .priority(Priority::Batch)
+                .reply_to(reply.clone()),
+        ))
+        .unwrap();
+    }
+    tx.send(Request::Generate(
+        GenerateRequest::new(&prompt, SamplingParams::greedy(2, None))
+            .priority(Priority::Interactive)
+            .reply_to(reply.clone()),
+    ))
+    .unwrap();
+    drop(reply);
+
+    let order: Vec<usize> = (0..4).map(|_| rx.recv().unwrap().unwrap().tokens.len()).collect();
+    assert_eq!(
+        order,
+        vec![2, 6, 7, 8],
+        "Interactive must complete before earlier-submitted Batch work \
+         (and Batch must stay FIFO)"
+    );
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn preemption_storm_resumes_bit_identically_and_leaks_no_blocks() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let cfg = ctx.cfg.clone();
+
+    // 4-block pool; a Batch generation reserving the full context window
+    // (prompt 4 + max_new clamped to t_max = 4 blocks) owns the whole pool
+    // for its entire active life, so an Interactive arrival (1 block) can
+    // only be admitted by preempting it
+    let handle = serve_with(&a, &cfg, 4, None);
+    let bprompt = [2i32, 5, 21, 7];
+    let bparams = SamplingParams::greedy(1_000_000, None); // t_max-bounded
+    let iprompt = [1i32, 4, 20];
+    let iparams = SamplingParams::greedy(2, None);
+    let boffline = generate(&ctx, &model, &bprompt, bparams.clone()).unwrap();
+    let ioffline = generate(&ctx, &model, &iprompt, iparams.clone()).unwrap();
+
+    // Keep colliding Interactive arrivals with a resident Batch stream
+    // until three preemptions happened. Each round: start a Batch job,
+    // wait until it holds pool blocks (or finished unobserved — the tiny
+    // model decodes fast), then push an Interactive request through it.
+    // EVERY Batch stream — preempted and re-prefilled or not — must equal
+    // the uninterrupted offline run bit for bit.
+    let mut rounds = 0usize;
+    while handle.metrics.snapshot().preemptions < 3 {
+        rounds += 1;
+        assert!(rounds <= 50, "no preemption after 50 collision rounds");
+        let rx = handle
+            .submit(
+                GenerateRequest::new(&bprompt, bparams.clone()).priority(Priority::Batch),
+            )
+            .unwrap()
+            .expect("a fresh request owns its receiver");
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut batch_out = None;
+        loop {
+            if let Some(r) = rx.try_recv().unwrap() {
+                batch_out = Some(r); // finished before we could collide
+                break;
+            }
+            if handle.metrics.snapshot().kv_blocks_in_use >= 1 {
+                break; // resident: its 4-block reservation is held
+            }
+            assert!(Instant::now() < deadline, "batch job neither resident nor finished");
+            std::thread::yield_now();
+        }
+        let out = match batch_out {
+            Some(out) => out.unwrap(),
+            None => {
+                let served = handle
+                    .generate_opts(&iprompt, iparams.clone(), Priority::Interactive, None)
+                    .unwrap();
+                assert_eq!(served.tokens, ioffline.tokens, "interactive stream diverged");
+                rx.recv().unwrap().unwrap()
+            }
+        };
+        assert_eq!(
+            out.tokens, boffline.tokens,
+            "preempted/resumed batch stream diverged from the offline run (round {rounds})"
+        );
+        assert_eq!(out.finish, boffline.finish);
+    }
+
+    wait_for(&handle, "zero blocks after the preemption storm", |h| {
+        h.metrics.snapshot().kv_blocks_in_use == 0
+    });
+    let snap = handle.metrics.snapshot();
+    handle.shutdown().unwrap();
+    assert!(snap.preemptions >= 3, "storm must have preempted: {}", snap.preemptions);
+    assert!(snap.itl_p50_ms > 0.0, "interactive decode gaps must feed the ITL histogram");
+}
+
+#[test]
+fn chunked_prefill_bounds_the_decode_stall() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let cfg = ctx.cfg.clone();
+    drop(ctx);
+    let long_len = cfg.t_max - 16; // 48-token Batch prompts
+    // (chunk, expected observed stall): chunked, at most one 4-token chunk
+    // lands between consecutive decode steps; unchunked, a whole 48-token
+    // prompt does. The gauge is deterministic — no wall-clock involved.
+    for (chunk, expect_stall, expect_chunked) in [(Some(4usize), 4u64, true), (None, 48, false)] {
+        let handle = serve_with(&a, &cfg, 64, chunk);
+        let tx = handle.sender();
+        let (reply, rx) = reply_channel();
+        // one long-running Interactive decode joins first (submitted while
+        // the executor still loads the model)...
+        tx.send(Request::Generate(
+            GenerateRequest::new(&[1, 4, 20, 3], SamplingParams::greedy(40, None))
+                .reply_to(reply.clone()),
+        ))
+        .unwrap();
+        // ...then two long Batch prompts whose prefills must interleave
+        // with its decode steps
+        for j in 0..2 {
+            let prompt: Vec<i32> =
+                (0..long_len).map(|i| ((2 + j * 7 + i * 3) % cfg.vocab) as i32).collect();
+            tx.send(Request::Generate(
+                GenerateRequest::new(&prompt, SamplingParams::greedy(4, None))
+                    .priority(Priority::Batch)
+                    .reply_to(reply.clone()),
+            ))
+            .unwrap();
+        }
+        drop(reply);
+        let mut lens: Vec<usize> =
+            (0..3).map(|_| rx.recv().unwrap().unwrap().tokens.len()).collect();
+        lens.sort_unstable();
+        assert_eq!(lens, vec![4, 4, 40]);
+        let snap = handle.metrics.snapshot();
+        handle.shutdown().unwrap();
+        assert_eq!(
+            snap.prefill_stall_tokens_max, expect_stall,
+            "chunk={chunk:?}: observed stall bound"
+        );
+        assert_eq!(
+            snap.chunked_prefills > 0,
+            expect_chunked,
+            "chunk={chunk:?}: chunked_prefills = {}",
+            snap.chunked_prefills
+        );
+        assert_eq!(snap.preemptions, 0, "the 64-block pool co-hosts everything");
+    }
+}
+
+#[test]
+fn shutdown_answers_every_queued_generation() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let cfg = ctx.cfg.clone();
+    drop(ctx);
+    // 4-block pool, 5 full-window requests: at most one is ever admitted,
+    // the rest sit in the scheduler lane — shutdown() must answer them all
+    let handle = serve_with(&a, &cfg, 4, None);
+    let tx = handle.sender();
+    let (reply, rx) = reply_channel();
+    let prompt: Vec<i32> = (0..cfg.t_max - 16).map(|i| ((i * 3) % cfg.vocab) as i32).collect();
+    for _ in 0..5 {
+        tx.send(Request::Generate(
+            GenerateRequest::new(&prompt, SamplingParams::greedy(16, None))
+                .reply_to(reply.clone()),
+        ))
+        .unwrap();
+    }
+    drop(reply);
+    handle.shutdown().unwrap();
+    // every request got SOME reply (the old design hung queued clients
+    // forever); unfinished ones carry an explicit shutdown error
+    let mut replies = 0usize;
+    let mut errs = 0usize;
+    while let Ok(r) = rx.recv() {
+        replies += 1;
+        if let Err(e) = r {
+            errs += 1;
+            let msg = format!("{e:#}");
+            assert!(msg.contains("shutting down"), "unexpected error: {msg}");
+        }
+    }
+    assert_eq!(replies, 5, "shutdown must answer every queued generation");
+    assert!(errs >= 1, "a 5-deep queue cannot drain before the stop flag is seen");
+}
+
+#[test]
+fn deadline_misses_are_counted() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let cfg = ctx.cfg.clone();
+    drop(ctx);
+    let handle = serve_with(&a, &cfg, 64, None);
+    // a zero deadline is always missed...
+    let out = handle
+        .generate_opts(
+            &[1, 4, 20],
+            SamplingParams::greedy(3, None),
+            Priority::Interactive,
+            Some(Duration::ZERO),
+        )
+        .unwrap();
+    assert_eq!(out.tokens.len(), 3, "a missed deadline never cancels the request");
+    assert_eq!(handle.metrics.snapshot().deadline_misses, 1);
+    // ...a generous one never is, and no-deadline requests don't count
+    handle
+        .generate_opts(
+            &[2, 5, 21],
+            SamplingParams::greedy(3, None),
+            Priority::Batch,
+            Some(Duration::from_secs(3600)),
+        )
+        .unwrap();
+    handle.generate(&[3, 9, 27], SamplingParams::greedy(2, None)).unwrap();
+    assert_eq!(handle.metrics.snapshot().deadline_misses, 1);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn zero_prefill_chunk_is_a_startup_error() {
+    let a = arts();
+    let handle = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+            kv_budget_bytes: None,
+            prefill_chunk: Some(0),
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let err = handle.shutdown().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("positive token count"),
+        "startup validation must reject prefill_chunk=0: {err:#}"
+    );
+}

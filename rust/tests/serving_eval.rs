@@ -27,6 +27,7 @@ fn spec(arts: &Artifacts) -> ServeSpec {
         model: "mixsim".into(),
         compress: None,
         kv_budget_bytes: None,
+        prefill_chunk: None,
     }
 }
 

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Gate the scheduler contracts in CI (backend-e2e job):
+#
+#  1. `cargo test --test scheduler` — chunked-prefill logits bit-identical
+#     to whole-prompt across layouts, interactive-over-batch priority
+#     ordering, the preemption storm (resumed streams bit-identical, zero
+#     leaked blocks), the chunked-prefill stall bound, queued-request
+#     drain on shutdown, and deadline-miss accounting.
+#  2. BENCH_generate.json must contain the `sched_sweep` section with
+#     both a "chunked" and an "unchunked" row, and the chunked p99
+#     inter-token latency must not exceed the unchunked one — chunking
+#     exists to bound decode stalls, so it must not regress tail ITL.
+#
+# With no argument the JSON is probed in rust/ then . (cargo runs bench
+# binaries with the package root as working directory).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> scheduler test suite (chunk bit-identity, priority, preemption, drain)"
+cargo test --release --test scheduler -q
+
+f="${1:-}"
+if [ -z "$f" ]; then
+  for cand in rust/BENCH_generate.json BENCH_generate.json; do
+    [ -f "$cand" ] && { f="$cand"; break; }
+  done
+fi
+[ -n "$f" ] && [ -f "$f" ] || { echo "check_sched: BENCH_generate.json not found (looked in rust/ and .)"; exit 1; }
+
+grep -q '"sched_sweep"' "$f" \
+  || { echo "check_sched: $f has no sched_sweep section"; exit 1; }
+
+p99_of() {
+  grep "\"mode\": \"$1\"" "$f" | head -n 1 \
+    | sed -n 's/.*"p99_ms": \([0-9.]*\).*/\1/p'
+}
+chunked=$(p99_of chunked)
+unchunked=$(p99_of unchunked)
+[ -n "$chunked" ] || { echo "check_sched: sched_sweep has no chunked row with p99_ms"; exit 1; }
+[ -n "$unchunked" ] || { echo "check_sched: sched_sweep has no unchunked row with p99_ms"; exit 1; }
+
+awk -v c="$chunked" -v u="$unchunked" 'BEGIN { exit !(c <= u) }' \
+  || { echo "check_sched: chunked p99 ITL ${chunked}ms exceeds unchunked ${unchunked}ms — the stall-bound benefit regressed"; exit 1; }
+echo "check_sched: OK — chunked p99 ITL ${chunked}ms <= unchunked ${unchunked}ms ($f)"
