@@ -97,6 +97,7 @@ fn main() -> anyhow::Result<()> {
             compress: Some((method, r, "general".into())),
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,

@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         )),
         kv_budget_bytes: None,
         prefill_chunk: None,
+        drafter: None,
     };
     println!("starting executor (compresses {n_exp} -> {r} experts at startup)...");
     let handle = serve(

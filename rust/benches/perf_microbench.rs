@@ -21,11 +21,11 @@ use hc_smoe::backend::native::{forward_calib_with, forward_logits_with, NativeBa
 use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::bench_support::{
     self, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, KvCacheBenchRow, Lab,
-    ParallelBenchRow, SchedBenchRow,
+    ParallelBenchRow, SchedBenchRow, SpecDecodeRow,
 };
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
 use hc_smoe::config::ModelCfg;
-use hc_smoe::generate::SamplingParams;
+use hc_smoe::generate::{generate, speculative, SamplingParams};
 use hc_smoe::kvpool::{KvPool, PoolHandle, DEFAULT_BLOCK_TOKENS};
 use hc_smoe::report::Table;
 use hc_smoe::serving::{serve, BatcherConfig, Priority, ServeSpec};
@@ -540,6 +540,7 @@ fn sched_sweep(table: &mut Table) -> anyhow::Result<Vec<SchedBenchRow>> {
             compress: None,
             kv_budget_bytes: Some(kv_budget),
             prefill_chunk: chunk,
+            drafter: None,
         };
         let handle = serve(
             spec,
@@ -597,6 +598,86 @@ fn sched_sweep(table: &mut Table) -> anyhow::Result<Vec<SchedBenchRow>> {
             preemptions: snap.preemptions,
             chunked_prefills: snap.chunked_prefills,
         });
+    }
+    Ok(rows)
+}
+
+/// Speculative draft-k/verify-1 vs plain decode → the `spec_decode_sweep`
+/// section of BENCH_generate.json: the synthesized `qwensim` original is
+/// the verifier and its HC-merged compact r = E/2 variant the drafter.
+/// Both paths run the same end-to-end generation (prefill included) on
+/// the same prompt; speculation is exact by construction — the verifier's
+/// own sampler picks every emitted token (`rust/tests/spec_decode.rs`
+/// pins this bit-for-bit) — so each row records the equality check plus
+/// the economics: acceptance rate and how many full-model verify forwards
+/// replaced the one-forward-per-token plain loop.
+/// `scripts/check_spec_decode.sh` gates `exact` on every row and
+/// acceptance > 0 at k >= 2.
+fn spec_decode_sweep(table: &mut Table) -> anyhow::Result<Vec<SpecDecodeRow>> {
+    let smoke = bench_support::smoke();
+    let iters = if smoke { 1usize } else { 5 };
+    let max_new = if smoke { 8usize } else { 32 };
+    let lab = Lab::new("qwensim")?;
+    let r = (lab.ctx.cfg.n_exp / 2).max(1);
+    let full = lab.ctx.load_original()?;
+    let cm = lab.compress(
+        hc_smoe::pipeline::Method::HcSmoe {
+            linkage: Linkage::Average,
+            metric: Metric::ExpertOutput,
+            merge: hc_smoe::merging::MergeStrategy::Frequency,
+        },
+        r,
+        "general",
+    )?;
+    let (cw, remap) = cm.to_compact(&lab.ctx)?;
+    let drafter = lab.ctx.load_compact(r, &cw, remap, &cm.label)?;
+    let prompt: Vec<i32> = (0..12usize).map(|i| (16 + (i * 5) % 64) as i32).collect();
+    let params = SamplingParams::greedy(max_new, None);
+
+    let mut rows = Vec::new();
+    for &k in &[1usize, 2, 4, 8] {
+        let mut plain = None;
+        let mut plain_s = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let g = generate(&lab.ctx, &full, &prompt, params.clone())?;
+            plain_s.push(t0.elapsed().as_secs_f64());
+            plain = Some(g);
+        }
+        let plain = plain.expect("at least one plain iteration");
+        let mut spec = None;
+        let mut spec_s = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let s = speculative(&lab.ctx, &full, &drafter, &prompt, params.clone(), k)?;
+            spec_s.push(t0.elapsed().as_secs_f64());
+            spec = Some(s);
+        }
+        let spec = spec.expect("at least one speculative iteration");
+        let exact =
+            spec.gen.tokens == plain.tokens && spec.gen.finish == plain.finish;
+        let row = SpecDecodeRow {
+            draft_k: k,
+            tokens: plain.tokens.len(),
+            drafted: spec.drafted,
+            accepted: spec.accepted,
+            verify_steps: spec.verify_steps,
+            plain_ms: median_s(plain_s) * 1e3,
+            spec_ms: median_s(spec_s) * 1e3,
+            exact,
+        };
+        table.row(vec![
+            format!("k={k}"),
+            format!("{:.3}", row.plain_ms),
+            format!("{:.3}", row.spec_ms),
+            format!(
+                "{:.0}% accept, {} verify fwds, exact={}",
+                row.acceptance_rate() * 100.0,
+                row.verify_steps,
+                row.exact
+            ),
+        ]);
+        rows.push(row);
     }
     Ok(rows)
 }
@@ -703,6 +784,7 @@ fn artifact_sections() -> anyhow::Result<()> {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         };
         let handle = serve(
             spec,
@@ -869,6 +951,13 @@ fn main() -> anyhow::Result<()> {
     let sched_rows = sched_sweep(&mut stable)?;
     stable.print();
     stable.append_to("bench_results.md")?;
+    let mut sptable = Table::new(
+        "Speculative decoding: compact drafter + full-model verify (exact output)",
+        &["Draft k", "plain ms", "spec ms", "drafter economics"],
+    );
+    let spec_rows = spec_decode_sweep(&mut sptable)?;
+    sptable.print();
+    sptable.append_to("bench_results.md")?;
     let gen_measurement = if bench_support::smoke() {
         "SMOKE MODE: single sample, harness check only — not a perf measurement"
     } else {
@@ -884,7 +973,8 @@ fn main() -> anyhow::Result<()> {
          caches on one sequence (reallocs counts Vec regrowth copies — 0 is the contract); \
          sched_sweep drives a live server with mixed Interactive+Batch load on an 8-block \
          KV pool, chunked (4-token) vs unchunked prefill (chunked p99 ITL must not exceed \
-         unchunked)"
+         unchunked); spec_decode_sweep decodes the same prompt plainly and speculatively \
+         (qwensim verifier, HC-merged r=4 compact drafter) — exact must hold on every row"
     );
     bench_support::write_generate_json(
         GENERATE_JSON,
@@ -895,6 +985,7 @@ fn main() -> anyhow::Result<()> {
         &batch_rows,
         &kv_rows,
         &sched_rows,
+        &spec_rows,
     )?;
     println!("wrote {GENERATE_JSON}");
 

@@ -164,6 +164,62 @@ impl<'a> PrefillOpts<'a> {
     }
 }
 
+/// An opaque point-in-time marker of a [`KvCache`]'s logical state: the
+/// sequence length plus the backend's per-layer dispatch bookkeeping at
+/// that length. Taken by [`Backend::snapshot_cache`] (or returned per
+/// verified position in [`VerifyOut::checkpoints`]) and applied by
+/// [`Backend::rollback_cache`] — the speculative-decoding rollback
+/// primitive. A snapshot is only valid for the cache it was taken from,
+/// and only for rolling *backwards* (`len <= seq_len`); the backend
+/// rejects anything else.
+#[derive(Debug, Clone)]
+pub struct CacheSnapshot {
+    len: usize,
+    /// Per-layer cumulative expert-dispatch counts (`[n_layer][n_slots]`)
+    /// at `len` — the native backend's capacity-queue state, which decode
+    /// mutates and a rollback must restore exactly.
+    counts: Vec<Vec<usize>>,
+}
+
+impl CacheSnapshot {
+    /// Construct from raw parts (backend-internal; callers obtain
+    /// snapshots from [`Backend::snapshot_cache`] / [`VerifyOut`]).
+    pub(crate) fn new(len: usize, counts: Vec<Vec<usize>>) -> Self {
+        Self { len, counts }
+    }
+
+    /// Sequence length the snapshot restores to.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the snapshot marks an empty sequence.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub(crate) fn counts(&self) -> &[Vec<usize>] {
+        &self.counts
+    }
+}
+
+/// Result of a multi-position verify ([`Backend::run_verify`]) for one
+/// sequence: the next-token logits after each fed position, plus a cache
+/// snapshot *after* each fed position so the caller can roll the cache
+/// back to exactly the accepted prefix when a draft token is rejected.
+#[derive(Debug)]
+pub struct VerifyOut {
+    /// `logits[i]` is the `[vocab]` next-token distribution after feeding
+    /// `tokens[i]` — bit-identical to what the i-th of k sequential
+    /// [`Backend::run_decode`] calls would return.
+    pub logits: Vec<Vec<f32>>,
+    /// `checkpoints[i]` marks the cache state with `tokens[..=i]` fed
+    /// (length = pre-verify length + i + 1). Rolling back to
+    /// `checkpoints[i]` leaves the cache exactly as if only the first
+    /// `i + 1` tokens had ever been decoded.
+    pub checkpoints: Vec<CacheSnapshot>,
+}
+
 /// A model-execution engine.
 ///
 /// One backend instance is bound to one model configuration (the
@@ -406,6 +462,88 @@ pub trait Backend {
         mask: &[f32],
         remap: Option<&[i32]>,
     ) -> Result<Vec<Vec<f32>>>;
+
+    /// Multi-position verify — the speculative-decoding scoring step:
+    /// feed `tokens[i]` (a short run of k_i proposed tokens, k_i ≥ 1) to
+    /// sequence `i` in **one** batched forward and return the next-token
+    /// logits after every fed position, with a [`CacheSnapshot`] per
+    /// position so the caller can roll back past the first rejected
+    /// draft. Sequences may have different run lengths; a plain decode
+    /// step is just `k_i = 1`, so speculative and non-speculative
+    /// sequences interleave in the same call.
+    ///
+    /// All fed positions land in the cache (the cache ends k_i tokens
+    /// longer); acceptance is the *caller's* decision, enacted by
+    /// [`Backend::rollback_cache`] with the checkpoint of the last
+    /// accepted position.
+    ///
+    /// Contract (native backend): `out[i].logits[j]` is **bit-identical**
+    /// to the j-th of k_i sequential [`Backend::run_decode`] calls
+    /// feeding the same tokens to the same cache — batching across
+    /// sequences and positions changes wall-clock, never results
+    /// (`rust/tests/spec_decode.rs` pins this).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hc_smoe::backend::{native::NativeBackend, Backend, KvCache, PrefillOpts};
+    /// use hc_smoe::config::ModelCfg;
+    /// use hc_smoe::weights::Weights;
+    ///
+    /// let cfg = ModelCfg {
+    ///     name: "demo".into(), n_layer: 1, d: 8, m: 8, n_exp: 2, k: 1,
+    ///     heads: 2, vocab: 16, t_max: 8, shared: false, m_shared: 8,
+    ///     cap_factor: 4.0, block_c: 1,
+    /// };
+    /// let w = Weights::synthesize(&cfg, 7);
+    /// let backend = NativeBackend::new(cfg.clone());
+    /// let state = backend.load_model(&w, cfg.n_exp).unwrap();
+    /// let mask = vec![0.0; cfg.n_layer * cfg.n_exp];
+    ///
+    /// let (cache, _) = backend
+    ///     .run_prefill(state.as_ref(), &[1, 4], PrefillOpts::new(&mask))
+    ///     .unwrap();
+    /// let mut cache = cache.unwrap();
+    /// let before = backend.snapshot_cache(cache.as_ref()).unwrap();
+    ///
+    /// // verify two proposed tokens in one call
+    /// let mut caches: Vec<&mut dyn KvCache> = vec![cache.as_mut()];
+    /// let out = backend
+    ///     .run_verify(state.as_ref(), &mut caches, &[&[9, 3]], &mask, None)
+    ///     .unwrap();
+    /// assert_eq!(out[0].logits.len(), 2);
+    /// assert_eq!(cache.seq_len(), 4);
+    ///
+    /// // position 0's logits equal a plain decode of the same token
+    /// backend.rollback_cache(cache.as_mut(), &before).unwrap();
+    /// let plain = backend.run_decode(state.as_ref(), cache.as_mut(), 9, &mask, None).unwrap();
+    /// assert_eq!(plain, out[0].logits[0]);
+    /// assert_eq!(cache.seq_len(), 3);
+    /// ```
+    fn run_verify(
+        &self,
+        state: &dyn ModelState,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[&[i32]],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Vec<VerifyOut>>;
+
+    /// Capture the cache's current logical state (length + dispatch
+    /// bookkeeping) for a later [`Backend::rollback_cache`]. O(n_layer ·
+    /// n_slots) — no K/V rows are copied; rollback truncates in place.
+    fn snapshot_cache(&self, cache: &dyn KvCache) -> Result<CacheSnapshot>;
+
+    /// Shrink `cache` back to `snap`'s length, restoring the dispatch
+    /// bookkeeping captured in the snapshot and releasing any now-unused
+    /// paged blocks (with their reservation — see
+    /// `crate::kvpool::PagedSeq::truncate_to`). After the rollback the
+    /// cache is functionally identical to one that never decoded past the
+    /// snapshot: subsequent decodes produce bit-identical logits
+    /// (`rust/tests/spec_decode.rs` pins byte-equality of the live K/V
+    /// region against a freshly prefilled prefix). Errors if `snap` is
+    /// *ahead* of the cache (snapshots only roll backwards).
+    fn rollback_cache(&self, cache: &mut dyn KvCache, snap: &CacheSnapshot) -> Result<()>;
 }
 
 /// Environment variable selecting the execution backend (re-exported from

@@ -48,6 +48,17 @@
 //! **bit-identical** per sequence to B separate `run_decode` calls — in
 //! fact `run_decode` *is* `run_decode_batch` at B = 1
 //! (`rust/tests/decode_batch.rs` pins the equivalence).
+//!
+//! **Multi-position verify** (`run_verify`) generalizes the batched step
+//! to a short ragged run of k_i tokens per sequence — the speculative-
+//! decoding scoring primitive. Every position appends its own K/V row
+//! before scoring and routes at its own cumulative capacity
+//! (`capacity(t0 + i + 1)`, the decode convention), so the logits at
+//! every position are bit-identical to k_i sequential `run_decode` calls;
+//! `run_decode_batch` is literally the k = 1 wrapper over the same core
+//! (`rust/tests/spec_decode.rs` pins the equivalence), and per-position
+//! dispatch-count checkpoints feed `rollback_cache` when the caller
+//! rejects a draft token.
 
 use std::sync::OnceLock;
 
@@ -59,7 +70,10 @@ use crate::parallel;
 use crate::tensor::{dot, gather_rows, matmul_blocked_with, Tensor};
 use crate::weights::Weights;
 
-use super::{downcast_state, Backend, CacheMode, KvCache, ModelState, PrefillOpts};
+use super::{
+    downcast_state, Backend, CacheMode, CacheSnapshot, KvCache, ModelState, PrefillOpts,
+    VerifyOut,
+};
 
 /// RMSNorm epsilon (mirrors `model.py::rmsnorm`).
 const RMS_EPS: f32 = 1e-6;
@@ -381,12 +395,61 @@ impl NativeBackend {
         remap: Option<&[i32]>,
         threads: usize,
     ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            tokens.len() == caches.len(),
+            "decode batch needs one token per cache ({} tokens, {} caches)",
+            tokens.len(),
+            caches.len()
+        );
+        // a decode step IS a verify of one-token runs: same shared GEMMs,
+        // same per-sequence attention rows and capacity-queue updates in
+        // the same order — run_decode_batch is the k = 1 special case of
+        // the multi-position core, so decode-vs-verify bit-identity holds
+        // by construction instead of by parallel maintenance
+        let runs: Vec<&[i32]> = tokens.iter().map(std::slice::from_ref).collect();
+        let outs = self.run_verify_batch_with(state, caches, &runs, mask, remap, threads)?;
+        Ok(outs
+            .into_iter()
+            .map(|mut o| o.logits.pop().expect("one logits row per fed token"))
+            .collect())
+    }
+
+    /// [`Backend::run_verify`] with an explicit worker count: the ragged
+    /// multi-position generalization of the batched decode step, feeding
+    /// `tokens[s]` (k_s ≥ 1 proposed tokens) to sequence `s` in one
+    /// forward.
+    ///
+    /// Layout: the batch flattens to `sum(k_s)` rows, sequence-major with
+    /// positions in order, so every weight-side product is still one
+    /// shared GEMM. Attention and the MoE capacity queue remain strictly
+    /// per sequence *and per position*: each position appends its own K/V
+    /// row before scoring, and routes at its own cumulative capacity
+    /// (`capacity(t0 + i + 1)`, the decode convention) against the
+    /// sequence's carried counts — operation for operation the i-th of
+    /// k_s sequential [`Backend::run_decode`] calls, which is the
+    /// bit-identity contract `rust/tests/spec_decode.rs` pins. After each
+    /// position's routing the per-layer counts are cloned into that
+    /// position's [`CacheSnapshot`], so a speculative caller can
+    /// [`Backend::rollback_cache`] to exactly the accepted prefix.
+    ///
+    /// Everything — geometry, token ids, paged-block feasibility across
+    /// the whole batch — is validated before any cache is mutated, so a
+    /// bad request cannot leave other sequences half-advanced.
+    pub fn run_verify_batch_with(
+        &self,
+        state: &dyn ModelState,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[&[i32]],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+        threads: usize,
+    ) -> Result<Vec<VerifyOut>> {
         let m: &NativeModel = downcast_state(state, self.name())?;
         let cfg = &self.cfg;
         let bsz = caches.len();
         ensure!(
             tokens.len() == bsz,
-            "decode batch needs one token per cache ({} tokens, {bsz} caches)",
+            "verify needs one token run per cache ({} runs, {bsz} caches)",
             tokens.len()
         );
         ensure!(
@@ -419,10 +482,15 @@ impl NativeBackend {
         let w = &m.weights;
         let pos = w.get("pos")?;
         let embed = w.get("embed")?;
+        // pre-verify base lengths: paged appends are committed up front
+        // below (prepare/commit must interleave to derive slot offsets),
+        // so every per-position computation uses these captured bases
+        let t0s: Vec<usize> = cs.iter().map(SeqCacheMut::t).collect();
+        let rtot: usize = tokens.iter().map(|r| r.len()).sum();
         // validate the whole batch before any cache is mutated, so a bad
         // request cannot leave other sequences half-advanced
-        for (c, &tok) in cs.iter().zip(tokens) {
-            let t = c.t();
+        for ((c, run), &t0) in cs.iter().zip(tokens).zip(&t0s) {
+            ensure!(!run.is_empty(), "verify runs need at least one token per sequence");
             // a cache prefilled against a different slot layout (e.g. a
             // full-model cache fed to a compact variant) must be rejected
             // here, not mid-layer after attention already appended K/V
@@ -433,16 +501,18 @@ impl NativeBackend {
                 m.n_slots
             );
             ensure!(
-                pos.shape()[0] >= t + 1,
+                pos.shape()[0] >= t0 + run.len(),
                 "sequence length {} exceeds t_max {}",
-                t + 1,
+                t0 + run.len(),
                 pos.shape()[0]
             );
-            ensure!(
-                tok >= 0 && (tok as usize) < cfg.vocab,
-                "token id {tok} out of vocab range {}",
-                cfg.vocab
-            );
+            for &tok in run.iter() {
+                ensure!(
+                    tok >= 0 && (tok as usize) < cfg.vocab,
+                    "token id {tok} out of vocab range {}",
+                    cfg.vocab
+                );
+            }
             match c {
                 SeqCacheMut::Flat(fc) => {
                     ensure!(
@@ -450,8 +520,8 @@ impl NativeBackend {
                         "kv cache layer count mismatch"
                     );
                     ensure!(
-                        fc.k.iter().all(|kb| kb.len() == t * d)
-                            && fc.v.iter().all(|vb| vb.len() == t * d),
+                        fc.k.iter().all(|kb| kb.len() == t0 * d)
+                            && fc.v.iter().all(|vb| vb.len() == t0 * d),
                         "kv cache length out of sync"
                     );
                 }
@@ -467,7 +537,7 @@ impl NativeBackend {
                         d
                     );
                     ensure!(
-                        pc.seq.table().len() == p.blocks_for(t),
+                        pc.seq.table().len() == p.blocks_for(t0),
                         "paged kv cache block table out of sync"
                     );
                 }
@@ -504,29 +574,32 @@ impl NativeBackend {
             // allocate; the last one left writes in place. Counting one
             // block per sharer would spuriously reject a feasible batch.
             let mut cow_groups: Vec<(usize, PoolHandle, usize, usize)> = Vec::new();
-            for c in cs.iter() {
+            for ((c, run), &t0) in cs.iter().zip(tokens).zip(&t0s) {
                 if let SeqCacheMut::Paged(pc) = c {
-                    match pc.seq.append_block_need() {
-                        None => {}
-                        Some(false) => {
-                            let i = need_idx(&mut needs, pc.seq.pool().id(), pc.seq.pool());
-                            if pc.seq.reserved_remaining() > 0 {
-                                needs[i].res += 1;
-                            } else {
-                                needs[i].unres += 1;
-                            }
-                        }
-                        Some(true) => {
-                            let pid = pc.seq.pool().id();
-                            let tail =
-                                *pc.seq.table().last().expect("COW implies a tail block");
-                            match cow_groups
-                                .iter_mut()
-                                .find(|(id, _, b, _)| *id == pid && *b == tail)
-                            {
-                                Some((.., k)) => *k += 1,
-                                None => cow_groups.push((pid, pc.seq.pool().clone(), tail, 1)),
-                            }
+                    // planned growth beyond the current table: reserved
+                    // first, best-effort overflow for the remainder (a
+                    // shared *partial* tail additionally COWs below)
+                    let fresh = pc
+                        .seq
+                        .pool()
+                        .blocks_for(t0 + run.len())
+                        .saturating_sub(pc.seq.table().len());
+                    if fresh > 0 {
+                        let i = need_idx(&mut needs, pc.seq.pool().id(), pc.seq.pool());
+                        let res = fresh.min(pc.seq.reserved_remaining());
+                        needs[i].res += res;
+                        needs[i].unres += fresh - res;
+                    }
+                    if pc.seq.append_block_need() == Some(true) {
+                        let pid = pc.seq.pool().id();
+                        let tail =
+                            *pc.seq.table().last().expect("COW implies a tail block");
+                        match cow_groups
+                            .iter_mut()
+                            .find(|(id, _, b, _)| *id == pid && *b == tail)
+                        {
+                            Some((.., k)) => *k += 1,
+                            None => cow_groups.push((pid, pc.seq.pool().clone(), tail, 1)),
                         }
                     }
                 }
@@ -548,24 +621,47 @@ impl NativeBackend {
                 );
             }
         }
-        // tail-slot preparation (one block covers every layer's rows for
-        // the new token): fresh block or copy-on-write where needed
-        let mut slots: Vec<Option<(usize, usize)>> = Vec::with_capacity(bsz);
-        for c in cs.iter_mut() {
+        // slot preparation (one block slot covers every layer's rows for
+        // one new token): per sequence, claim and commit every position's
+        // slot up front — prepare derives the local offset from the
+        // committed length, so the pair must interleave — with fresh
+        // blocks or copy-on-write where needed. The feasibility check
+        // above means this cannot fail.
+        let mut slots: Vec<Vec<(usize, usize)>> = Vec::with_capacity(bsz);
+        for (c, run) in cs.iter_mut().zip(tokens) {
             slots.push(match c {
-                SeqCacheMut::Flat(_) => None,
-                SeqCacheMut::Paged(pc) => Some(pc.seq.prepare_append()?),
+                SeqCacheMut::Flat(_) => Vec::new(),
+                SeqCacheMut::Paged(pc) => {
+                    let mut claimed = Vec::with_capacity(run.len());
+                    for _ in 0..run.len() {
+                        let slot = pc.seq.prepare_append()?;
+                        claimed.push(slot);
+                        pc.seq.commit_append();
+                    }
+                    claimed
+                }
             });
         }
-        // embedding + learned positions: each row at its own position
-        let mut h = vec![0f32; bsz * d];
-        for (s, (c, &tok)) in cs.iter().zip(tokens).enumerate() {
-            let e = &embed.data()[(tok as usize) * d..(tok as usize) * d + d];
-            let p = &pos.data()[c.t() * d..(c.t() + 1) * d];
-            for j in 0..d {
-                h[s * d + j] = e[j] + p[j];
+        // embedding + learned positions: each row at its own absolute
+        // position t0 + i within its sequence
+        let mut h = vec![0f32; rtot * d];
+        let mut r0 = 0usize;
+        for (run, &t0) in tokens.iter().zip(&t0s) {
+            for (i, &tok) in run.iter().enumerate() {
+                let e = &embed.data()[(tok as usize) * d..(tok as usize) * d + d];
+                let p = &pos.data()[(t0 + i) * d..(t0 + i + 1) * d];
+                for j in 0..d {
+                    h[(r0 + i) * d + j] = e[j] + p[j];
+                }
             }
+            r0 += run.len();
         }
+        // per-position dispatch-count checkpoints, filled layer by layer
+        // during routing: ckpts[s][i] grows to [n_layer][n_slots]
+        let mut ckpts: Vec<Vec<Vec<Vec<usize>>>> = tokens
+            .iter()
+            .map(|run| vec![Vec::with_capacity(cfg.n_layer); run.len()])
+            .collect();
         let mut row = Vec::new();
         for l in 0..cfg.n_layer {
             let ln1 = layer_tensor(w, l, "ln1")?;
@@ -574,55 +670,65 @@ impl NativeBackend {
             let wk = layer_tensor(w, l, "attn.wk")?;
             let wv = layer_tensor(w, l, "attn.wv")?;
             let wo = layer_tensor(w, l, "attn.wo")?;
-            // projection weights shared across the batch: one [B, d] x
-            // [d, d] GEMM each (row-identical to B single-row products)
-            let q = mm(&x1, wq.data(), bsz, d, d, threads);
-            let knew = mm(&x1, wk.data(), bsz, d, d, threads);
-            let vnew = mm(&x1, wv.data(), bsz, d, d, threads);
-            // scores stay per-sequence, each against its own cached K/V
-            let mut ctx = vec![0f32; bsz * d];
+            // projection weights shared across the whole flattened batch:
+            // one [R, d] x [d, d] GEMM each (row-identical to R
+            // single-row products)
+            let q = mm(&x1, wq.data(), rtot, d, d, threads);
+            let knew = mm(&x1, wk.data(), rtot, d, d, threads);
+            let vnew = mm(&x1, wv.data(), rtot, d, d, threads);
+            // scores stay per-sequence per-position, each against its own
+            // cached K/V with its own row appended first — the causal
+            // accumulation of sequential decode, position by position
+            let mut ctx = vec![0f32; rtot * d];
+            let mut r0 = 0usize;
             for (s, c) in cs.iter_mut().enumerate() {
-                let kr = &knew[s * d..(s + 1) * d];
-                let vr = &vnew[s * d..(s + 1) * d];
-                match c {
-                    SeqCacheMut::Flat(fc) => {
-                        fc.k[l].extend_from_slice(kr);
-                        fc.v[l].extend_from_slice(vr);
-                        let i = fc.t; // the new token's position
-                        ensure!(fc.k[l].len() == (i + 1) * d, "kv cache length out of sync");
-                        attention_row_cached(
-                            cfg,
-                            &q[s * d..(s + 1) * d],
-                            &fc.k[l],
-                            &fc.v[l],
-                            i,
-                            &mut ctx[s * d..(s + 1) * d],
-                            &mut row,
-                        );
-                    }
-                    SeqCacheMut::Paged(pc) => {
-                        let (blk, local) = slots[s].expect("paged cache has a prepared slot");
-                        {
-                            let mut p = pc.seq.pool().borrow_mut();
-                            p.write_k(blk, l, local, kr);
-                            p.write_v(blk, l, local, vr);
+                let t0 = t0s[s];
+                for i in 0..tokens[s].len() {
+                    let r = r0 + i;
+                    let kr = &knew[r * d..(r + 1) * d];
+                    let vr = &vnew[r * d..(r + 1) * d];
+                    match c {
+                        SeqCacheMut::Flat(fc) => {
+                            fc.k[l].extend_from_slice(kr);
+                            fc.v[l].extend_from_slice(vr);
+                            ensure!(
+                                fc.k[l].len() == (t0 + i + 1) * d,
+                                "kv cache length out of sync"
+                            );
+                            attention_row_cached(
+                                cfg,
+                                &q[r * d..(r + 1) * d],
+                                &fc.k[l],
+                                &fc.v[l],
+                                t0 + i,
+                                &mut ctx[r * d..(r + 1) * d],
+                                &mut row,
+                            );
                         }
-                        let i = pc.seq.seq_len(); // the new token's position
-                        let p = pc.seq.pool().borrow();
-                        attention_row_paged(
-                            cfg,
-                            &q[s * d..(s + 1) * d],
-                            &p,
-                            pc.seq.table(),
-                            l,
-                            i,
-                            &mut ctx[s * d..(s + 1) * d],
-                            &mut row,
-                        );
+                        SeqCacheMut::Paged(pc) => {
+                            let (blk, local) = slots[s][i];
+                            {
+                                let mut p = pc.seq.pool().borrow_mut();
+                                p.write_k(blk, l, local, kr);
+                                p.write_v(blk, l, local, vr);
+                            }
+                            let p = pc.seq.pool().borrow();
+                            attention_row_paged(
+                                cfg,
+                                &q[r * d..(r + 1) * d],
+                                &p,
+                                pc.seq.table(),
+                                l,
+                                t0 + i,
+                                &mut ctx[r * d..(r + 1) * d],
+                                &mut row,
+                            );
+                        }
                     }
                 }
+                r0 += tokens[s].len();
             }
-            let a = mm(&ctx, wo.data(), bsz, d, d, threads);
+            let a = mm(&ctx, wo.data(), rtot, d, d, threads);
             for (hv, av) in h.iter_mut().zip(&a) {
                 *hv += av;
             }
@@ -630,8 +736,9 @@ impl NativeBackend {
             let hf = rmsnorm_rows(&h, ln2.data(), d);
             let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
             let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
-            let y = moe_decode_batch(
-                cfg, w, l, &hf, bsz, mask_l, remap_l, m.n_slots, threads, &mut cs,
+            let y = moe_verify(
+                cfg, w, l, &hf, tokens, &t0s, mask_l, remap_l, m.n_slots, threads, &mut cs,
+                &mut ckpts,
             )?;
             for (hv, yv) in h.iter_mut().zip(&y) {
                 *hv += yv;
@@ -639,14 +746,28 @@ impl NativeBackend {
         }
         let ln_f = w.get("ln_f")?;
         let hn = rmsnorm_rows(&h, ln_f.data(), d);
-        let logits = mm(&hn, m.embed_t(cfg)?, bsz, d, cfg.vocab, threads);
-        for c in cs.iter_mut() {
-            match c {
-                SeqCacheMut::Flat(fc) => fc.t += 1,
-                SeqCacheMut::Paged(pc) => pc.seq.commit_append(),
+        let logits = mm(&hn, m.embed_t(cfg)?, rtot, d, cfg.vocab, threads);
+        for (c, run) in cs.iter_mut().zip(tokens) {
+            if let SeqCacheMut::Flat(fc) = c {
+                fc.t += run.len(); // paged lengths were committed per claimed slot
             }
         }
-        Ok(logits.chunks(cfg.vocab).map(<[f32]>::to_vec).collect())
+        let mut outs = Vec::with_capacity(bsz);
+        let mut r0 = 0usize;
+        for ((run, &t0), counts) in tokens.iter().zip(&t0s).zip(ckpts) {
+            let rows = logits[r0 * cfg.vocab..(r0 + run.len()) * cfg.vocab]
+                .chunks(cfg.vocab)
+                .map(<[f32]>::to_vec)
+                .collect();
+            let checkpoints = counts
+                .into_iter()
+                .enumerate()
+                .map(|(i, c)| CacheSnapshot::new(t0 + i + 1, c))
+                .collect();
+            outs.push(VerifyOut { logits: rows, checkpoints });
+            r0 += run.len();
+        }
+        Ok(outs)
     }
 
     /// The resume arm of [`Backend::run_prefill`]: run the next `c`
@@ -1032,6 +1153,72 @@ impl Backend for NativeBackend {
         let threads = self.auto_threads(caches.len());
         self.run_decode_batch_with(state, caches, tokens, mask, remap, threads)
     }
+
+    fn run_verify(
+        &self,
+        state: &dyn ModelState,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[&[i32]],
+        mask: &[f32],
+        remap: Option<&[i32]>,
+    ) -> Result<Vec<VerifyOut>> {
+        // thread-gate on the flattened row count: a verify of R total
+        // positions does the work of an R-sequence decode step
+        let rows: usize = tokens.iter().map(|r| r.len()).sum();
+        let threads = self.auto_threads(rows);
+        self.run_verify_batch_with(state, caches, tokens, mask, remap, threads)
+    }
+
+    fn snapshot_cache(&self, cache: &dyn KvCache) -> Result<CacheSnapshot> {
+        if let Some(fc) = cache.as_any().downcast_ref::<NativeKvCache>() {
+            Ok(CacheSnapshot::new(fc.t, fc.counts.clone()))
+        } else if let Some(pc) = cache.as_any().downcast_ref::<NativePagedKvCache>() {
+            Ok(CacheSnapshot::new(pc.seq.seq_len(), pc.counts.clone()))
+        } else {
+            Err(anyhow!("kv cache was not created by the {} backend", self.name()))
+        }
+    }
+
+    fn rollback_cache(&self, cache: &mut dyn KvCache, snap: &CacheSnapshot) -> Result<()> {
+        let d = self.cfg.d;
+        let len = snap.len();
+        let mut cs = seq_cache_mut(cache, self.name())?;
+        ensure!(
+            len <= cs.t(),
+            "rollback target {len} is ahead of the cache (length {}); snapshots only \
+             roll backwards",
+            cs.t()
+        );
+        // the snapshot's bookkeeping must describe the same layer/slot
+        // geometry as the cache it restores — a snapshot taken from a
+        // different variant's cache would silently corrupt the capacity
+        // queue, so reject it up front
+        ensure!(
+            snap.counts().len() == cs.counts().len()
+                && snap.counts().iter().zip(cs.counts()).all(|(a, b)| a.len() == b.len()),
+            "snapshot dispatch-count geometry does not match the cache"
+        );
+        match &mut cs {
+            SeqCacheMut::Flat(fc) => {
+                // Vec::truncate never shrinks capacity, so the decode
+                // headroom reserved at prefill survives the rollback and
+                // re-decoding stays reallocation-free
+                for (kb, vb) in fc.k.iter_mut().zip(fc.v.iter_mut()) {
+                    kb.truncate(len * d);
+                    vb.truncate(len * d);
+                }
+                fc.t = len;
+                fc.counts = snap.counts().to_vec();
+            }
+            SeqCacheMut::Paged(pc) => {
+                // releases now-unused tail blocks and restores their
+                // reservation so re-decoding the same span cannot fail
+                pc.seq.truncate_to(len)?;
+                pc.counts = snap.counts().to_vec();
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Work-gated matmul: route through the blocked parallel kernel only when
@@ -1396,7 +1583,7 @@ fn moe_layer(
 /// gathered token rows, gated-combined back into `y` in
 /// (expert-ascending, queue-order) order, plus `dssim`'s always-on shared
 /// expert. Shared **verbatim** by the scoring/prefill path
-/// ([`moe_layer`]) and the batched decode path ([`moe_decode_batch`]), so
+/// ([`moe_layer`]) and the batched decode/verify path ([`moe_verify`]), so
 /// the FFN execution semantics have a single source of truth — only the
 /// routing loops differ between the two (one capacity queue spanning a
 /// whole scoring batch vs. one per sequence), which is what keeps the
@@ -1450,72 +1637,91 @@ fn moe_execute(
     Ok(y)
 }
 
-/// One SMoE FFN block over a **decode batch**: `hf` holds one `[d]` row
-/// per active sequence, each carrying its own cumulative dispatch counts
-/// and capacity (capacity depends on a sequence's *own* total length, so
-/// it differs across a mixed-length batch).
+/// One SMoE FFN block over a **verify batch** (and, at k = 1 runs, the
+/// decode batch): `hf` holds the flattened `[sum(k_s), d]` rows of every
+/// sequence's token run, sequence-major with positions in order. Each
+/// sequence carries its own cumulative dispatch counts, and each
+/// *position* routes at its own capacity (`capacity(t0_s + i + 1)` — the
+/// decode convention, since capacity depends on the token's own total
+/// length), so a k-token verify routes exactly like the same tokens
+/// decoded one step at a time.
 ///
-/// The routing GEMM is shared across the batch; the selection, the
-/// token-major queue update and the gated combine happen per sequence in
-/// exactly the order the single-sequence [`moe_layer`] uses — only the
-/// expert execution is fused: routed rows from all sequences are gathered
-/// into one block per expert and run through a single SwiGLU GEMM. The
-/// combine then scatters rows back per sequence in (expert-ascending,
-/// selection-order) order, which is the same per-sequence f32
-/// accumulation sequence as B separate calls — hence bit-identity.
+/// The routing GEMM is shared across the whole flattened batch; the
+/// selection, the token-major queue update and the gated combine happen
+/// per sequence per position in exactly the order the single-sequence
+/// [`moe_layer`] uses — only the expert execution is fused: routed rows
+/// from all sequences and positions are gathered into one block per
+/// expert and run through a single SwiGLU GEMM. The combine then
+/// scatters rows back in (expert-ascending, queue-order) order, which is
+/// the same per-row f32 accumulation sequence as separate calls — hence
+/// bit-identity.
+///
+/// After routing position `i` of sequence `s` at this layer, the
+/// sequence's cumulative counts are cloned into `ckpts[s][i]` — called
+/// once per layer in layer order, this builds each position's
+/// `[n_layer][n_slots]` snapshot for speculative rollback.
 #[allow(clippy::too_many_arguments)]
-fn moe_decode_batch(
+fn moe_verify(
     cfg: &ModelCfg,
     w: &Weights,
     layer: usize,
     hf: &[f32],
-    bsz: usize,
+    tokens: &[&[i32]],
+    t0s: &[usize],
     mask_l: &[f32],
     remap_l: Option<&[i32]>,
     n_slots: usize,
     threads: usize,
     cs: &mut [SeqCacheMut],
+    ckpts: &mut [Vec<Vec<Vec<usize>>>],
 ) -> Result<Vec<f32>> {
     let d = cfg.d;
     let n = cfg.n_exp;
+    let rtot: usize = tokens.iter().map(|r| r.len()).sum();
     let router = layer_tensor(w, layer, "router")?;
     ensure!(router.shape() == [d, n], "router shape mismatch at layer {layer}");
-    let logits = mm(hf, router.data(), bsz, d, n, threads);
+    let logits = mm(hf, router.data(), rtot, d, n, threads);
     let mut per_slot: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_slots];
     let mut masked = vec![0f32; n];
     let mut idx = Vec::with_capacity(cfg.k);
     let mut probs = Vec::with_capacity(cfg.k);
     let mut scratch = Vec::with_capacity(n);
+    let mut r0 = 0usize;
     for (s, c) in cs.iter_mut().enumerate() {
         ensure!(
             c.counts()[layer].len() == n_slots,
             "dispatch counts must cover {n_slots} slots"
         );
-        // capacity at THIS sequence's new total length, against its own
-        // cumulative token-major queue — identical to the sequential path
-        let cap = cfg.capacity(c.t() + 1, n_slots);
-        let row = &logits[s * n..(s + 1) * n];
-        for e in 0..n {
-            masked[e] = row[e] + mask_l[e];
-        }
-        route_topk(&masked, cfg.k, &mut idx, &mut probs, &mut scratch);
-        let counts = c.counts_mut(layer);
-        for j in 0..cfg.k {
-            let slot = match remap_l {
-                Some(rm) => rm[idx[j]] as usize,
-                None => idx[j],
-            };
-            ensure!(slot < n_slots, "remap slot {slot} out of range {n_slots}");
-            let qpos = counts[slot];
-            counts[slot] += 1;
-            if qpos < cap {
-                per_slot[slot].push((s, probs[j]));
+        for i in 0..tokens[s].len() {
+            // capacity at THIS token's new total length, against its
+            // sequence's cumulative token-major queue — identical to the
+            // sequential decode path
+            let cap = cfg.capacity(t0s[s] + i + 1, n_slots);
+            let row = &logits[(r0 + i) * n..(r0 + i + 1) * n];
+            for e in 0..n {
+                masked[e] = row[e] + mask_l[e];
             }
+            route_topk(&masked, cfg.k, &mut idx, &mut probs, &mut scratch);
+            let counts = c.counts_mut(layer);
+            for j in 0..cfg.k {
+                let slot = match remap_l {
+                    Some(rm) => rm[idx[j]] as usize,
+                    None => idx[j],
+                };
+                ensure!(slot < n_slots, "remap slot {slot} out of range {n_slots}");
+                let qpos = counts[slot];
+                counts[slot] += 1;
+                if qpos < cap {
+                    per_slot[slot].push((r0 + i, probs[j]));
+                }
+            }
+            ckpts[s][i].push(counts.to_vec());
         }
+        r0 += tokens[s].len();
     }
-    // grouped execution: all sequences routed to an expert run as one
-    // block, through the exact code the scoring/prefill path uses
-    moe_execute(cfg, w, layer, hf, bsz, &per_slot, n_slots, threads)
+    // grouped execution: all rows routed to an expert run as one block,
+    // through the exact code the scoring/prefill path uses
+    moe_execute(cfg, w, layer, hf, rtot, &per_slot, n_slots, threads)
 }
 
 /// One SMoE FFN block over a **prompt chunk** of a single resumed
@@ -1876,6 +2082,79 @@ mod tests {
         }
         for v in &out[4..] {
             assert!((v + 1.0).abs() < 1e-3, "{v}");
+        }
+    }
+
+    /// Speculative rollback at the byte level: after verifying a draft
+    /// run and rolling back to a checkpoint, the flat cache's private
+    /// K/V buffers and dispatch counts are BIT-IDENTICAL to a cache that
+    /// was freshly prefilled with prompt + kept-run — not just
+    /// behaviourally equivalent (that part lives in
+    /// `rust/tests/spec_decode.rs`, which can only see public API).
+    #[test]
+    fn rollback_restores_kv_bytes_exactly() {
+        let cfg = ModelCfg {
+            name: "rb".into(),
+            n_layer: 2,
+            d: 8,
+            m: 8,
+            n_exp: 4,
+            k: 2,
+            heads: 2,
+            vocab: 24,
+            t_max: 32,
+            shared: false,
+            m_shared: 8,
+            cap_factor: 4.0,
+            block_c: 4,
+        };
+        let w = Weights::synthesize(&cfg, 77);
+        let backend = NativeBackend::new(cfg.clone());
+        let state = backend.load_model(&w, cfg.n_exp).unwrap();
+        let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+        let prompt: Vec<i32> = (0..6).map(|i| ((3 + i * 5) % cfg.vocab) as i32).collect();
+        let run: Vec<i32> = (0..4).map(|i| ((7 + i * 11) % cfg.vocab) as i32).collect();
+
+        for keep in [1usize, 3] {
+            let (cache, _) = backend
+                .run_prefill(state.as_ref(), &prompt, PrefillOpts::new(&mask))
+                .unwrap();
+            let mut cache = cache.unwrap();
+            let out = {
+                let mut refs: [&mut dyn KvCache; 1] = [cache.as_mut()];
+                backend
+                    .run_verify(state.as_ref(), &mut refs, &[run.as_slice()], &mask, None)
+                    .unwrap()
+                    .pop()
+                    .unwrap()
+            };
+            backend.rollback_cache(cache.as_mut(), &out.checkpoints[keep - 1]).unwrap();
+
+            let mut pref = prompt.clone();
+            pref.extend_from_slice(&run[..keep]);
+            let (fresh, _) = backend
+                .run_prefill(state.as_ref(), &pref, PrefillOpts::new(&mask))
+                .unwrap();
+            let fresh = fresh.unwrap();
+
+            let rolled = cache.as_any().downcast_ref::<NativeKvCache>().unwrap();
+            let clean = fresh.as_any().downcast_ref::<NativeKvCache>().unwrap();
+            assert_eq!(rolled.t, clean.t, "keep={keep}: cached length");
+            assert_eq!(rolled.counts, clean.counts, "keep={keep}: dispatch counts");
+            for l in 0..cfg.n_layer {
+                let live = rolled.t * cfg.d;
+                let eq = |a: &[f32], b: &[f32]| {
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                };
+                assert!(
+                    eq(&rolled.k[l][..live], &clean.k[l][..live]),
+                    "keep={keep} layer={l}: K bytes diverged after rollback"
+                );
+                assert!(
+                    eq(&rolled.v[l][..live], &clean.v[l][..live]),
+                    "keep={keep} layer={l}: V bytes diverged after rollback"
+                );
+            }
         }
     }
 }

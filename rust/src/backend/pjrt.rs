@@ -17,7 +17,7 @@ use crate::runtime::{Executable, Input, Runtime};
 use crate::tensor::Tensor;
 use crate::weights::Weights;
 
-use super::{downcast_state, Backend, KvCache, ModelState, PrefillOpts};
+use super::{downcast_state, Backend, CacheSnapshot, KvCache, ModelState, PrefillOpts, VerifyOut};
 
 /// The PJRT backend: one CPU client plus lazily compiled executables.
 pub struct PjrtBackend {
@@ -200,6 +200,39 @@ impl Backend for PjrtBackend {
         // follow-up (see SERVING.md, "PJRT status").
         Err(anyhow!(
             "the pjrt backend has no incremental prefill/decode HLO entry points; \
+             run generation on the native backend (unset HCSMOE_BACKEND or set it \
+             to \"native\")"
+        ))
+    }
+
+    fn run_verify(
+        &self,
+        _state: &dyn ModelState,
+        _caches: &mut [&mut dyn KvCache],
+        _tokens: &[&[i32]],
+        _mask: &[f32],
+        _remap: Option<&[i32]>,
+    ) -> Result<Vec<VerifyOut>> {
+        // Speculative verify is a ragged [sum(k_i), 1] decode over the same
+        // missing incremental entry points (see run_prefill above).
+        Err(anyhow!(
+            "the pjrt backend has no incremental prefill/decode HLO entry points; \
+             run generation on the native backend (unset HCSMOE_BACKEND or set it \
+             to \"native\")"
+        ))
+    }
+
+    fn snapshot_cache(&self, _cache: &dyn KvCache) -> Result<CacheSnapshot> {
+        Err(anyhow!(
+            "the pjrt backend has no incremental caches to snapshot; \
+             run generation on the native backend (unset HCSMOE_BACKEND or set it \
+             to \"native\")"
+        ))
+    }
+
+    fn rollback_cache(&self, _cache: &mut dyn KvCache, _snap: &CacheSnapshot) -> Result<()> {
+        Err(anyhow!(
+            "the pjrt backend has no incremental caches to roll back; \
              run generation on the native backend (unset HCSMOE_BACKEND or set it \
              to \"native\")"
         ))

@@ -385,6 +385,65 @@ pub struct SchedBenchRow {
     pub chunked_prefills: u64,
 }
 
+/// One speculative-decoding measurement row for the `spec_decode_sweep`
+/// section of `BENCH_generate.json`: the same prompt is decoded once
+/// plainly on the full model and once speculatively
+/// ([`crate::generate::speculative`]) with the compact merged variant
+/// drafting `draft_k` tokens per verify round. The two runs are
+/// bit-identical by construction — `exact` records the comparison so CI
+/// can gate on it (`scripts/check_spec_decode.sh`), and the interesting
+/// numbers are the acceptance rate and how many full-model forwards the
+/// drafter saved.
+#[derive(Debug, Clone)]
+pub struct SpecDecodeRow {
+    /// Draft depth (tokens proposed per verify round).
+    pub draft_k: usize,
+    /// Tokens the run emitted (identical between the two paths).
+    pub tokens: usize,
+    /// Draft tokens proposed across the run.
+    pub drafted: usize,
+    /// Draft tokens the verifier's own sampling accepted.
+    pub accepted: usize,
+    /// Full-model verify forwards the speculative run executed (the
+    /// plain run uses one forward per emitted token).
+    pub verify_steps: usize,
+    /// Median wall-clock of the plain decode loop (ms).
+    pub plain_ms: f64,
+    /// Median wall-clock of the speculative draft+verify loop (ms).
+    pub spec_ms: f64,
+    /// Whether the speculative token stream equalled the plain one.
+    pub exact: bool,
+}
+
+impl SpecDecodeRow {
+    /// Fraction of proposed drafts accepted (0 when nothing was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted > 0 {
+            self.accepted as f64 / self.drafted as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Plain decode throughput in tokens per second.
+    pub fn plain_tok_s(&self) -> f64 {
+        if self.plain_ms > 0.0 {
+            self.tokens as f64 / (self.plain_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Speculative decode throughput in tokens per second.
+    pub fn spec_tok_s(&self) -> f64 {
+        if self.spec_ms > 0.0 {
+            self.tokens as f64 / (self.spec_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Write the machine-readable generation-throughput report
 /// (`BENCH_generate.json`). Hand-rolled JSON like [`write_parallel_json`];
 /// the schema is stable — later PRs append rows with new `path`/`variant`
@@ -397,7 +456,10 @@ pub struct SchedBenchRow {
 /// zero-realloc steady state (CI gates `reallocs` at 0 per row); the
 /// `sched_sweep` section compares chunked vs unchunked prefill under a
 /// mixed Interactive+Batch load (CI asserts chunked p99 inter-token
-/// latency ≤ unchunked).
+/// latency ≤ unchunked); the `spec_decode_sweep` section compares plain
+/// decode against speculative draft-k/verify-1 with a compact merged
+/// drafter (CI asserts `exact` on every row and acceptance > 0 for
+/// k ≥ 2 via `scripts/check_spec_decode.sh`).
 pub fn write_generate_json(
     path: &str,
     threads: usize,
@@ -407,6 +469,7 @@ pub fn write_generate_json(
     batch_rows: &[DecodeBatchRow],
     kv_rows: &[KvCacheBenchRow],
     sched_rows: &[SchedBenchRow],
+    spec_rows: &[SpecDecodeRow],
 ) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -481,6 +544,29 @@ pub fn write_generate_json(
             r.p99_ms,
             r.preemptions,
             r.chunked_prefills
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"spec_decode_sweep\": [\n");
+    for (i, r) in spec_rows.iter().enumerate() {
+        let comma = if i + 1 < spec_rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"draft_k\": {}, \"tokens\": {}, \"drafted\": {}, \
+             \"accepted\": {}, \"verify_steps\": {}, \
+             \"acceptance_rate\": {:.4}, \"plain_ms\": {:.4}, \
+             \"spec_ms\": {:.4}, \"plain_tok_s\": {:.1}, \
+             \"spec_tok_s\": {:.1}, \"exact\": {}}}{comma}\n",
+            r.draft_k,
+            r.tokens,
+            r.drafted,
+            r.accepted,
+            r.verify_steps,
+            r.acceptance_rate(),
+            r.plain_ms,
+            r.spec_ms,
+            r.plain_tok_s(),
+            r.spec_tok_s(),
+            r.exact
         ));
     }
     out.push_str("  ]\n}\n");

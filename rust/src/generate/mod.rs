@@ -18,7 +18,12 @@
 //!   is what makes a server-side generation bit-identical to an offline
 //!   [`generate`] call with the same parameters.
 //! * [`generate`] / [`generate_compact`] — the offline drivers:
-//!   prefill → sample → decode → … → [`Generated`].
+//!   prefill → sample → decode → … → [`Generated`]; plus
+//!   [`speculative`] / [`speculative_paged`] — draft-k/verify-1
+//!   speculative decoding with the compact merged variant as the
+//!   drafter, pinned bit-identical to the plain drivers
+//!   ([`SpecOutcome`] adds draft/accept accounting on top of
+//!   [`Generated`]).
 //!
 //! Determinism: the native backend forward is bit-deterministic and the
 //! sampler is seeded, so the same (weights, prompt, params) always yields
@@ -30,6 +35,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::backend::KvCache;
+use crate::kvpool::PoolHandle;
 use crate::model::{CompactModel, LoadedModel, ModelContext};
 use crate::util::Rng;
 
@@ -152,6 +158,13 @@ impl Generated {
 /// length. `Some(tok)` means "feed `tok` to the next decode step";
 /// `None` means the sequence finished — read [`Session::finish`] /
 /// [`Session::tokens`].
+///
+/// `Clone` copies the whole decision state *including the RNG position*:
+/// the speculative drafter clones the session so its draft picks spend
+/// exactly the random draws the real session will spend verifying — the
+/// construction that makes speculative output bit-identical to plain
+/// decoding (see [`speculative`]).
+#[derive(Clone)]
 pub struct Session {
     params: SamplingParams,
     rng: Rng,
@@ -205,6 +218,12 @@ impl Session {
         &self.tokens
     }
 
+    /// The sampling parameters this session runs under (the speculative
+    /// drivers read `max_new_tokens` to clamp their draft depth).
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
     /// Consume the session, returning the emitted tokens.
     pub fn into_tokens(self) -> Vec<i32> {
         self.tokens
@@ -213,6 +232,16 @@ impl Session {
     /// The stop condition that ended the sequence (None while running).
     pub fn finish(&self) -> Option<FinishReason> {
         self.finish
+    }
+
+    /// One raw token selection from a logits row, consuming exactly the
+    /// RNG draw the next [`Session::advance`] would — no stop-condition
+    /// tracking, no token recording. This is the speculative **draft**
+    /// pick: a cloned session drafts with it, so draft and verifier
+    /// selections for the same emitted-token index use the same random
+    /// draw and are comparable pick for pick.
+    pub fn pick_next(&mut self, logits: &[f32]) -> i32 {
+        self.pick(logits)
     }
 
     /// One token selection from a logits row.
@@ -333,6 +362,198 @@ pub fn generate_compact(
     )
 }
 
+/// One finished **speculative** generation: the ordinary [`Generated`]
+/// output plus draft/accept accounting.
+#[derive(Debug, Clone)]
+pub struct SpecOutcome {
+    /// The generation itself — bit-identical to what plain [`generate`]
+    /// with the same parameters produces.
+    pub gen: Generated,
+    /// Draft tokens proposed by the compact drafter (excludes the
+    /// already-committed token that heads each verify run).
+    pub drafted: usize,
+    /// Draft tokens the verifier's own sampling agreed with.
+    pub accepted: usize,
+    /// Verify forwards executed (each scores one draft run; plain decode
+    /// would have used one forward per emitted token instead).
+    pub verify_steps: usize,
+}
+
+impl SpecOutcome {
+    /// Fraction of proposed draft tokens accepted (0 when none proposed).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Draft-k/verify-1 speculative decoding: the compact r-expert `drafter`
+/// proposes up to `draft_k` tokens per round on its own KV cache, the
+/// `full` model scores every proposed position in **one**
+/// [`ModelContext::verify`] forward, and the longest prefix the
+/// verifier's own sampling agrees with is accepted — both caches are
+/// rolled back past the first rejection.
+///
+/// **Exact-output guarantee, by construction:** the real [`Session`] is
+/// the only thing that ever emits a token, it consumes verify logits
+/// rows in emission order, and (inductively) row `i`'s logits are
+/// bit-identical to what plain decode would have seen after the same
+/// emitted prefix. Greedy and seeded top-k both hold: drafting runs on a
+/// *clone* of the session, so every draft pick spends the same RNG draw
+/// the verifier's pick spends, and a disagreement simply falls back to
+/// the verifier's token (rejection-style). The token stream and finish
+/// reason are therefore bit-identical to plain [`generate`] — at any
+/// `draft_k` — which `rust/tests/spec_decode.rs` pins; compression
+/// quality shows up purely as acceptance rate (fewer full-model
+/// forwards), never as output drift.
+pub fn speculative(
+    ctx: &ModelContext,
+    full: &LoadedModel,
+    drafter: &CompactModel,
+    prompt: &[i32],
+    params: SamplingParams,
+    draft_k: usize,
+) -> Result<SpecOutcome> {
+    spec_loop(ctx, full, drafter, prompt, params, draft_k, None)
+}
+
+/// [`speculative`] with both caches in one paged block pool (the serving
+/// configuration: full/drafter caches never alias blocks because the
+/// pool's sharing map is keyed by variant fingerprint).
+pub fn speculative_paged(
+    ctx: &ModelContext,
+    full: &LoadedModel,
+    drafter: &CompactModel,
+    prompt: &[i32],
+    params: SamplingParams,
+    draft_k: usize,
+    pool: &PoolHandle,
+    reserve_tokens: usize,
+) -> Result<SpecOutcome> {
+    spec_loop(ctx, full, drafter, prompt, params, draft_k, Some((pool, reserve_tokens)))
+}
+
+/// The draft → verify → accept/rollback loop behind both speculative
+/// entry points.
+///
+/// Invariant at the top of every round: both caches hold the prompt plus
+/// every emitted token except `pending` (the last emitted, not yet fed)
+/// — exactly the plain decode loop's cache state, which is what makes
+/// round boundaries indistinguishable from plain decoding.
+fn spec_loop(
+    ctx: &ModelContext,
+    full: &LoadedModel,
+    drafter: &CompactModel,
+    prompt: &[i32],
+    params: SamplingParams,
+    draft_k: usize,
+    paged: Option<(&PoolHandle, usize)>,
+) -> Result<SpecOutcome> {
+    params.validate()?;
+    ensure!(draft_k >= 1, "speculative decoding needs draft_k >= 1");
+    let t_max = ctx.cfg.t_max;
+    let t0 = Instant::now();
+    let ((mut full_cache, logits), (mut draft_cache, _)) = match paged {
+        None => (ctx.prefill(full, prompt)?, ctx.prefill_compact(drafter, prompt)?),
+        Some((pool, reserve)) => (
+            ctx.prefill_paged(full, prompt, pool, reserve)?,
+            ctx.prefill_paged_compact(drafter, prompt, pool, reserve)?,
+        ),
+    };
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let mut session = Session::new(params);
+    let t1 = Instant::now();
+    let (mut drafted, mut accepted, mut verify_steps) = (0usize, 0usize, 0usize);
+    let mut pending = session.advance(&logits, full_cache.seq_len(), t_max);
+    while let Some(tok) = pending {
+        let t_base = full_cache.seq_len();
+        ensure!(
+            draft_cache.seq_len() == t_base,
+            "draft cache out of sync with the verifier ({} vs {t_base} tokens)",
+            draft_cache.seq_len()
+        );
+        // never verify more positions than the session can still emit or
+        // the context window can still hold (both bounds are >= 1 here:
+        // `advance` just returned Some)
+        let remaining = session.params.max_new_tokens - session.tokens().len();
+        let k_eff = draft_k.min(remaining).min(t_max - t_base).max(1);
+        // draft k_eff - 1 tokens on the compact drafter's own cache; a
+        // snapshot per drafter length makes any rejection point
+        // restorable
+        let mut run = Vec::with_capacity(k_eff);
+        run.push(tok);
+        let mut dsnaps = Vec::with_capacity(k_eff);
+        dsnaps.push(ctx.snapshot_cache(draft_cache.as_ref())?);
+        let mut draft_sess = session.clone();
+        for j in 1..k_eff {
+            let dl = ctx.decode_compact(drafter, draft_cache.as_mut(), run[j - 1])?;
+            dsnaps.push(ctx.snapshot_cache(draft_cache.as_ref())?);
+            run.push(draft_sess.pick_next(&dl));
+        }
+        drafted += run.len() - 1;
+        // score every proposed position on the full model in one forward
+        let mut caches: [&mut dyn KvCache; 1] = [full_cache.as_mut()];
+        let out = ctx
+            .verify(full, &mut caches, &[run.as_slice()])
+            .map(|mut v| v.pop().expect("one VerifyOut per sequence"))?;
+        verify_steps += 1;
+        // the REAL session consumes the verify rows in emission order —
+        // its picks are the authoritative stream; drafts that disagree
+        // are discarded along with everything after them
+        let k_run = run.len();
+        let mut fed = k_run; // verify rows whose fed token stays accepted
+        let mut next_pending = None;
+        for i in 0..k_run {
+            match session.advance(&out.logits[i], t_base + i + 1, t_max) {
+                None => {
+                    // finished (EOS / budget / context): rows past i are
+                    // speculative overshoot
+                    fed = i + 1;
+                    next_pending = None;
+                    break;
+                }
+                Some(t) if i + 1 < k_run => {
+                    if t == run[i + 1] {
+                        accepted += 1; // draft confirmed, consume next row
+                    } else {
+                        fed = i + 1; // verifier's token replaces the draft
+                        next_pending = Some(t);
+                        break;
+                    }
+                }
+                Some(t) => next_pending = Some(t), // all rows accepted
+            }
+        }
+        if fed < k_run {
+            // roll both caches back past the first rejected position
+            ctx.rollback_cache(full_cache.as_mut(), &out.checkpoints[fed - 1])?;
+            ctx.rollback_cache(draft_cache.as_mut(), &dsnaps[fed])?;
+        } else if next_pending.is_some() {
+            // full accept: the drafter never fed the run's last token —
+            // replay it so both caches re-enter the round invariant
+            ctx.decode_compact(drafter, draft_cache.as_mut(), run[k_run - 1])?;
+        }
+        pending = next_pending;
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    let finish = session.finish();
+    ensure!(finish.is_some(), "speculative loop ended without a finish reason");
+    Ok(SpecOutcome {
+        gen: Generated {
+            tokens: session.into_tokens(),
+            finish: finish.unwrap(),
+            prefill_s,
+            decode_s,
+        },
+        drafted,
+        accepted,
+        verify_steps,
+    })
+}
+
 /// The shared prefill → sample → decode loop behind both variants.
 fn run_loop(
     t_max: usize,
@@ -418,6 +639,22 @@ mod tests {
         // top-4 of these logits are indices 12..16
         for t in run(9) {
             assert!((12..16).contains(&t), "sampled {t} outside top-k");
+        }
+    }
+
+    #[test]
+    fn cloned_session_drafts_the_same_draws() {
+        // the speculative construction: a cloned session's pick_next must
+        // spend the same RNG draws the real session's advance spends, so
+        // draft and verifier picks for the same emitted index agree
+        // whenever their logits do
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32) * 0.3).collect();
+        let mut real = Session::new(SamplingParams::top_k(4, 0.7, 42, 8, None));
+        let mut draft = real.clone();
+        for step in 0..4 {
+            let d = draft.pick_next(&logits);
+            let r = real.advance(&logits, 4 + step, 64).expect("budget not exhausted");
+            assert_eq!(d, r, "draft pick diverged at step {step}");
         }
     }
 

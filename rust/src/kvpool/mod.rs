@@ -323,6 +323,19 @@ impl KvPool {
         self.sharing.insert(key, block);
     }
 
+    /// Remove a block's sharing-map registration, if any. Existing
+    /// references are untouched — the block just stops being discoverable
+    /// by future prefills. Needed when a truncation turns a registered
+    /// *full* block into a writable partial tail: the sharing map only
+    /// ever serves full, never-written-again blocks, and an in-place
+    /// append into a still-registered block would hand later sequences
+    /// rows from a different suffix.
+    pub fn unregister_shared(&mut self, block: usize) {
+        if let Some(key) = self.meta[block].shared_key.take() {
+            self.sharing.remove(&key);
+        }
+    }
+
     /// Arena start index of the K rows of `layer` in `block` (rows for
     /// local positions `0..block_tokens`, each `d` floats, contiguous).
     pub fn k_start(&self, block: usize, layer: usize) -> usize {
@@ -631,6 +644,55 @@ impl PagedSeq {
         Ok(())
     }
 
+    /// Shrink the sequence to `tokens` positions, releasing every
+    /// now-unused tail block and restoring the reservation the released
+    /// growth originally consumed — the speculative-decoding rollback
+    /// primitive (a rejected draft run must return the sequence to its
+    /// pre-draft length without leaking its reserved tail blocks).
+    ///
+    /// Reservation accounting: every block this sequence *physically
+    /// frees* (it held the only reference) is re-added to its
+    /// reservation, which can never overcommit — the free decremented
+    /// `in_use` by one, so `committed` is unchanged by the
+    /// release+re-reserve pair. A released *shared* reference (refcount
+    /// still > 0 afterwards) frees no physical block and restores no
+    /// reservation: re-growing over those positions will copy-on-write,
+    /// which draws best-effort exactly as the original COW did.
+    ///
+    /// If the new tail is a partial block that was registered in the
+    /// sharing map (it was full before the truncation), it is
+    /// unregistered: future appends write into it in place, and the map
+    /// must never serve a block whose contents can still change.
+    pub fn truncate_to(&mut self, tokens: usize) -> Result<()> {
+        ensure!(
+            tokens <= self.t,
+            "truncate_to({tokens}) beyond current length {}",
+            self.t
+        );
+        if tokens == self.t {
+            return Ok(());
+        }
+        let keep = self.pool.borrow().blocks_for(tokens);
+        let mut freed = 0usize;
+        {
+            let mut p = self.pool.borrow_mut();
+            for &b in &self.table[keep..] {
+                if p.refs(b) == 1 {
+                    freed += 1;
+                }
+                p.release(b);
+            }
+            if tokens % p.block_tokens() != 0 {
+                p.unregister_shared(self.table[keep - 1]);
+            }
+            p.try_reserve(freed).expect("freed blocks re-reserve infallibly");
+        }
+        self.reserved += freed;
+        self.table.truncate(keep);
+        self.t = tokens;
+        Ok(())
+    }
+
     /// Clone this sequence in O(blocks): every block (including a partial
     /// tail) is shared by reference; the first append to either clone's
     /// shared tail copies it (copy-on-write). The fork carries no
@@ -787,6 +849,101 @@ mod tests {
         drop(a);
         drop(b);
         assert_eq!(p.stats().in_use, 0);
+    }
+
+    #[test]
+    fn truncate_releases_tail_and_restores_reservation() {
+        let p = pool(8);
+        let ids: Vec<i32> = (0..4).collect(); // exactly one full block
+        let (k, v) = (rows(4, 4, 0.0), rows(4, 4, 5.0));
+        let mut a = PagedSeq::new(&p, 3).unwrap();
+        a.fill_from_rows(&ids, 3, false, &k, &v).unwrap();
+        assert_eq!(a.reserved_remaining(), 2);
+        // grow into a second and third block (5 more tokens)
+        for _ in 0..5 {
+            let (b, local) = a.prepare_append().unwrap();
+            let row = vec![1.0; 4];
+            let mut pl = p.borrow_mut();
+            for layer in 0..2 {
+                pl.write_k(b, layer, local, &row);
+                pl.write_v(b, layer, local, &row);
+            }
+            drop(pl);
+            a.commit_append();
+        }
+        assert_eq!(a.seq_len(), 9);
+        assert_eq!(a.table().len(), 3);
+        assert_eq!(a.reserved_remaining(), 0);
+        assert_eq!(p.stats().in_use, 3);
+
+        // roll back to 5 tokens: the third block frees, its reservation
+        // returns, and the kept partial tail stays usable
+        a.truncate_to(5).unwrap();
+        assert_eq!(a.seq_len(), 5);
+        assert_eq!(a.table().len(), 2);
+        assert_eq!(a.reserved_remaining(), 1);
+        assert_eq!(p.stats().in_use, 2);
+        assert_eq!(p.stats().reserved, 1);
+
+        // re-growing over the rolled-back positions draws the restored
+        // reservation — the admission guarantee survives the rollback
+        for _ in 0..4 {
+            let (b, local) = a.prepare_append().unwrap();
+            let row = vec![2.0; 4];
+            let mut pl = p.borrow_mut();
+            for layer in 0..2 {
+                pl.write_k(b, layer, local, &row);
+                pl.write_v(b, layer, local, &row);
+            }
+            drop(pl);
+            a.commit_append();
+        }
+        assert_eq!(a.seq_len(), 9);
+        assert_eq!(p.stats().in_use, 3);
+
+        // truncate to a block boundary, then to zero
+        a.truncate_to(4).unwrap();
+        assert_eq!(a.table().len(), 1);
+        a.truncate_to(0).unwrap();
+        assert_eq!(a.table().len(), 0);
+        assert_eq!(p.stats().in_use, 0);
+        drop(a);
+        assert_eq!(p.stats().reserved, 0, "drop returns the restored reservation");
+    }
+
+    #[test]
+    fn truncate_unregisters_partial_tail_and_keeps_shared_refs() {
+        let p = pool(8);
+        let ids: Vec<i32> = (0..8).collect(); // two full blocks
+        let (k, v) = (rows(8, 4, 0.0), rows(8, 4, 5.0));
+        let mut a = PagedSeq::new(&p, 2).unwrap();
+        a.fill_from_rows(&ids, 7, true, &k, &v).unwrap();
+        assert!(p.borrow().lookup_shared(7, &ids[..4]).is_some());
+        assert!(p.borrow().lookup_shared(7, &ids).is_some());
+
+        // truncating into block 0 makes it a writable partial tail: it
+        // must leave the sharing map (and block 1's registration goes
+        // with its free)
+        a.truncate_to(2).unwrap();
+        assert!(p.borrow().lookup_shared(7, &ids[..4]).is_none());
+        assert!(p.borrow().lookup_shared(7, &ids).is_none());
+        assert_eq!(p.stats().in_use, 1);
+
+        // a shared (refs > 1) tail released by truncation frees nothing
+        // and restores no reservation, but the sharer stays intact
+        drop(a);
+        let mut b = PagedSeq::new(&p, 2).unwrap();
+        b.fill_from_rows(&ids, 9, true, &k, &v).unwrap();
+        let c = b.fork();
+        let reserved_before = p.stats().reserved;
+        b.truncate_to(4).unwrap();
+        assert_eq!(p.stats().reserved, reserved_before, "shared release restores nothing");
+        assert_eq!(c.seq_len(), 8, "the fork still owns both blocks");
+        assert_eq!(p.stats().in_use, 2);
+        drop(b);
+        drop(c);
+        assert_eq!(p.stats().in_use, 0);
+        assert_eq!(p.stats().reserved, 0);
     }
 
     #[test]

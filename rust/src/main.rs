@@ -10,7 +10,8 @@
 //!   serve      <model> [--r R --method M] [--requests N]
 //!   generate   <model> [--prompt 1,4,20] [--max-tokens N] [--sample]
 //!              [--top-k K --temperature T --seed S] [--r R --method M]
-//!              [--compact]              KV-cached autoregressive decode
+//!              [--compact] [--speculative --draft-k K]
+//!                                       KV-cached autoregressive decode
 //!   quality    <model> <r> [--method M]  cluster-quality metrics
 //!
 //! Methods: hc-avg (default), hc-single, hc-complete, kmeans-fix,
@@ -169,6 +170,7 @@ COMMANDS:
   generate  <model> [--prompt 1,4,20,3] [--max-tokens N] [--sample]
             [--top-k K] [--temperature T] [--seed S] [--eos TOK]
             [--r R] [--method M] [--domain D] [--compact]
+            [--speculative] [--draft-k K]
   quality   <model> <r> [--method M]
 
 METHODS: hc-avg hc-single hc-complete hc-nu kmeans-fix kmeans-rnd fcm
@@ -329,6 +331,7 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         compress,
         kv_budget_bytes: None,
         prefill_chunk: None,
+        drafter: None,
     };
     let handle = serve(
         spec,
@@ -370,8 +373,13 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
 /// line depends only on (artifacts, prompt, sampling parameters) — running
 /// the command twice prints the identical token sequence, which is the
 /// self-verification hook the README quickstart uses.
+///
+/// `--speculative --r R` drafts `--draft-k` tokens per round on the compact
+/// merged variant and verifies them on the original model in one
+/// multi-position forward; the printed tokens are bit-identical to the
+/// plain (non-speculative) run on the original model.
 fn generate_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
-    use hc_smoe::generate::{generate, generate_compact, SamplingParams};
+    use hc_smoe::generate::{generate, generate_compact, speculative, SamplingParams};
 
     let model = args.pos.first().context("need <model>")?;
     let ctx = ModelContext::load(arts, model)?;
@@ -401,8 +409,13 @@ fn generate_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         SamplingParams::greedy(max_tokens, eos)
     };
 
+    let draft_k: usize = args.flag("draft-k", "4").parse().context("parsing --draft-k")?;
+    let mut spec_stats: Option<(usize, usize, usize, f64)> = None;
     let (label, out) = match args.flags.get("r") {
         None => {
+            if args.flags.contains_key("speculative") {
+                bail!("--speculative needs --r R to build the compact drafter");
+            }
             let loaded = ctx.load_original()?;
             ("original".to_string(), generate(&ctx, &loaded, &prompt, params)?)
         }
@@ -413,7 +426,15 @@ fn generate_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
             let stats = ctx.calibrate(&domain)?;
             let plan = Pipeline::new(method).plan(&ctx, &stats, r)?;
             let cm = plan.apply(&ctx, &stats)?;
-            if args.flags.contains_key("compact") {
+            if args.flags.contains_key("speculative") {
+                let (cw, remap) = cm.to_compact(&ctx)?;
+                let drafter = ctx.load_compact(r, &cw, remap, &cm.label)?;
+                let full = ctx.load_original()?;
+                let so = speculative(&ctx, &full, &drafter, &prompt, params, draft_k)?;
+                spec_stats =
+                    Some((so.drafted, so.accepted, so.verify_steps, so.acceptance_rate()));
+                (format!("original + drafter {} [r={r}, k={draft_k}]", cm.label), so.gen)
+            } else if args.flags.contains_key("compact") {
                 let (cw, remap) = cm.to_compact(&ctx)?;
                 let compact = ctx.load_compact(r, &cw, remap, &cm.label)?;
                 let label = format!("{} [compact r={r}]", cm.label);
@@ -453,6 +474,13 @@ fn generate_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         ctx.cfg.kv_cache_bytes(1),
         ctx.cfg.kv_cache_bytes(cached),
     );
+    if let Some((drafted, accepted, verify_steps, rate)) = spec_stats {
+        println!(
+            "speculative: {accepted}/{drafted} drafts accepted ({:.0}% acceptance) \
+             over {verify_steps} verify rounds",
+            rate * 100.0,
+        );
+    }
     Ok(())
 }
 

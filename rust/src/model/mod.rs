@@ -13,7 +13,9 @@ use std::sync::OnceLock;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::backend::{self, Backend, KvCache, ModelState, PrefillOpts};
+use crate::backend::{
+    self, Backend, CacheSnapshot, KvCache, ModelState, PrefillOpts, VerifyOut,
+};
 use crate::config::{Artifacts, Manifest, ModelCfg};
 use crate::data::TokenStream;
 use crate::kvpool::{KvPool, PoolHandle, DEFAULT_BLOCK_TOKENS};
@@ -323,6 +325,56 @@ impl ModelContext {
             &mask,
             Some(&model.remap),
         )
+    }
+
+    /// Multi-position verify — the speculative-decoding scoring step
+    /// ([`crate::backend::Backend::run_verify`]): feed `tokens[i]` (a
+    /// short run of proposed tokens) to sequence `i` in one batched
+    /// forward, returning the next-token logits after every fed position
+    /// plus a per-position cache checkpoint for
+    /// [`Self::rollback_cache`]. Logits at each position are
+    /// bit-identical to sequential [`Self::decode`] calls; a plain
+    /// decode step is just a 1-token run, so speculative and plain
+    /// sequences interleave in one call.
+    pub fn verify(
+        &self,
+        model: &LoadedModel,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[&[i32]],
+    ) -> Result<Vec<VerifyOut>> {
+        self.backend
+            .run_verify(model.state.as_ref(), caches, tokens, &model.mask, None)
+    }
+
+    /// [`Self::verify`] on a compact r-expert variant.
+    pub fn verify_compact(
+        &self,
+        model: &CompactModel,
+        caches: &mut [&mut dyn KvCache],
+        tokens: &[&[i32]],
+    ) -> Result<Vec<VerifyOut>> {
+        let mask = self.full_mask();
+        self.backend.run_verify(
+            model.state.as_ref(),
+            caches,
+            tokens,
+            &mask,
+            Some(&model.remap),
+        )
+    }
+
+    /// Capture a cache's logical state (length + dispatch bookkeeping)
+    /// for a later [`Self::rollback_cache`] — O(n_layer · n_slots), no
+    /// K/V rows copied.
+    pub fn snapshot_cache(&self, cache: &dyn KvCache) -> Result<CacheSnapshot> {
+        self.backend.snapshot_cache(cache)
+    }
+
+    /// Shrink a cache back to a snapshot, restoring dispatch bookkeeping
+    /// and releasing now-unused paged blocks (with their reservation) —
+    /// the speculative-rejection rollback primitive.
+    pub fn rollback_cache(&self, cache: &mut dyn KvCache, snap: &CacheSnapshot) -> Result<()> {
+        self.backend.rollback_cache(cache, snap)
     }
 
     /// The base weights as a lazily prepared resident variant (the

@@ -23,7 +23,14 @@
 //!   KV-pool-aware **preemption**: an Interactive arrival that cannot
 //!   reserve its worst-case blocks swaps out Batch work (drop the cache,
 //!   retain the token prefix, re-prefill on resume — bit-identical
-//!   streams either way).
+//!   streams either way). Requests may additionally opt into
+//!   **speculative decoding** ([`GenerateRequest::drafter`]) when the
+//!   server holds a compact drafter variant ([`ServeSpec::drafter`]):
+//!   such sequences keep a paired full/drafter cache in the pool (2×
+//!   the block reservation), draft on the compact model and verify on
+//!   the full one in the same continuous batch as plain sequences — one
+//!   multi-position verify forward serves both kinds, and every output
+//!   stream stays bit-identical to plain decoding.
 //!
 //! A single executor thread owns all execution state (required for the
 //! PJRT backend, whose xla handles are not `Send`; the native backend
@@ -44,17 +51,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::KvCache;
+use crate::backend::{CacheSnapshot, KvCache};
 use crate::calib::CalibStats;
 use crate::config::Artifacts;
 use crate::eval::log_softmax_at;
 use crate::generate::{Generated, SamplingParams, Session};
 use crate::kvpool::{PoolHandle, KV_BUDGET_ENV};
-use crate::model::{LoadedModel, ModelContext};
+use crate::model::{CompactModel, LoadedModel, ModelContext};
 use crate::pipeline::{Method, Pipeline};
 
 pub use scheduler::{LatencyHisto, Priority};
-use scheduler::{ActiveGen, PrefillInFlight, Queued, SchedQueues};
+use scheduler::{ActiveGen, DraftSeq, PrefillInFlight, Queued, SchedQueues};
 
 /// Shared state of a [`reply_channel`] pair.
 struct ReplyShared<T> {
@@ -206,6 +213,12 @@ pub struct GenerateRequest {
     /// `deadline_misses` counter; it is never reordered or cancelled for
     /// missing it (FIFO within class stays starvation-free).
     pub deadline: Option<Duration>,
+    /// Speculative decoding opt-in: propose up to this many tokens per
+    /// verify round on the server's compact drafter variant
+    /// ([`ServeSpec::drafter`]). `None` = plain decoding. The output
+    /// stream is bit-identical either way — the drafter only changes how
+    /// many full-model forwards it takes.
+    pub draft_k: Option<usize>,
     /// Channel receiving the finished generation (or the error). A
     /// [`ReplyTx`] rather than a plain `Sender` so the executor can detect
     /// a vanished client ([`ReplyTx::is_closed`]) and evict the sequence —
@@ -230,6 +243,7 @@ impl GenerateRequest {
             params,
             class: Priority::default(),
             deadline: None,
+            draft_k: None,
             reply,
             rx: Some(rx),
             enqueued: Instant::now(),
@@ -245,6 +259,21 @@ impl GenerateRequest {
     /// Set the completion deadline (measured from submission).
     pub fn deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Opt into speculative decoding on the server's compact drafter
+    /// variant, proposing up to `draft_k` tokens per verify round. The
+    /// token stream stays bit-identical to a plain request (same
+    /// [`Session`], same RNG draws — see [`crate::generate::speculative`]);
+    /// only the number of full-model forwards changes. Requires the
+    /// server to be configured with [`ServeSpec::drafter`] and
+    /// `draft_k >= 1` — both are checked at intake and violations are
+    /// answered with an error instead of entering a scheduler lane.
+    /// Memory note: a speculative sequence reserves KV blocks for BOTH
+    /// caches of its full/drafter pair (2× the plain reservation).
+    pub fn drafter(mut self, draft_k: usize) -> Self {
+        self.draft_k = Some(draft_k);
         self
     }
 
@@ -371,6 +400,18 @@ pub struct Metrics {
     /// longest admitted prompt; chunked it stays ≤ the chunk size (the
     /// deterministic stall-bound pin in `rust/tests/scheduler.rs`).
     pub prefill_stall_tokens_max: AtomicU64,
+    /// Draft tokens proposed by speculative sequences (excludes the
+    /// committed token heading each verify run).
+    pub spec_drafted: AtomicU64,
+    /// Draft tokens the verifier's own sampling accepted.
+    /// `spec_accepted / spec_drafted` is the fleet acceptance rate —
+    /// the live readout of how close the merged drafter tracks the full
+    /// model (the paper's functional-similarity claim, measured in
+    /// decode forwards saved).
+    pub spec_accepted: AtomicU64,
+    /// Decode iterations that ran the multi-position verify path (at
+    /// least one speculative sequence in the batch).
+    pub spec_rounds: AtomicU64,
     /// Inter-token latency histogram over Interactive-class decode steps
     /// (time between consecutive token emissions of one sequence).
     pub itl: LatencyHisto,
@@ -399,6 +440,9 @@ impl Metrics {
             chunked_prefills: self.chunked_prefills.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             prefill_stall_tokens_max: self.prefill_stall_tokens_max.load(Ordering::Relaxed),
+            spec_drafted: self.spec_drafted.load(Ordering::Relaxed),
+            spec_accepted: self.spec_accepted.load(Ordering::Relaxed),
+            spec_rounds: self.spec_rounds.load(Ordering::Relaxed),
             itl_p50_ms: self.itl.quantile_ms(0.50),
             itl_p99_ms: self.itl.quantile_ms(0.99),
         }
@@ -447,6 +491,12 @@ pub struct MetricsSnapshot {
     /// Gauge: most prompt tokens prefilled between two consecutive decode
     /// steps while sequences were actively decoding.
     pub prefill_stall_tokens_max: u64,
+    /// Draft tokens proposed by speculative sequences.
+    pub spec_drafted: u64,
+    /// Draft tokens the verifier accepted.
+    pub spec_accepted: u64,
+    /// Decode iterations that ran the multi-position verify path.
+    pub spec_rounds: u64,
     /// Median Interactive inter-token latency (ms, bucket upper bound).
     pub itl_p50_ms: f64,
     /// 99th-percentile Interactive inter-token latency (ms).
@@ -508,6 +558,17 @@ impl MetricsSnapshot {
             0.0
         }
     }
+
+    /// Fraction of proposed speculative draft tokens the verifier
+    /// accepted (0 when none were proposed) — the serving-side readout of
+    /// how functionally close the merged drafter is to the full model.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted > 0 {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Dynamic-batcher flush policy for score rows (size or deadline,
@@ -541,6 +602,14 @@ pub struct ServeSpec {
     /// `HCSMOE_PREFILL_CHUNK`, else whole-prompt prefills; `Some(0)` is a
     /// startup error (all knobs validate via [`crate::config::env`]).
     pub prefill_chunk: Option<usize>,
+    /// Optional speculative drafter: compress the served model with this
+    /// (method, r, calib domain) into a true r-expert **compact** variant
+    /// held resident next to the full model. Requests opt in per-request
+    /// via [`GenerateRequest::drafter`]; with `None` here, such requests
+    /// are answered with an error at intake. The drafter shares the KV
+    /// pool with the full model (cache pairs never alias blocks — the
+    /// pool's sharing map is keyed by variant fingerprint).
+    pub drafter: Option<(Method, usize, String)>,
 }
 
 /// Client-side handle to a running server.
@@ -669,11 +738,15 @@ struct Executor {
     batcher: BatcherConfig,
     metrics: Arc<Metrics>,
     /// The paged KV-cache pool every generation's cache lives in — the
-    /// memory budget admission control enforces.
+    /// memory budget admission control enforces. Speculative sequences
+    /// keep BOTH caches of their full/drafter pair here.
     pool: PoolHandle,
     /// Most prompt tokens prefilled between consecutive decode steps
     /// (`None` = whole-prompt prefills).
     chunk: Option<usize>,
+    /// The resident compact drafter variant ([`ServeSpec::drafter`]);
+    /// `None` rejects speculative requests at intake.
+    drafter: Option<CompactModel>,
 }
 
 fn executor_loop(
@@ -697,9 +770,22 @@ fn executor_loop(
             plan.apply(&ctx, &stats)?.load(&ctx)?
         }
     };
+    // the speculative drafter is a TRUE r-expert compact export (r
+    // physical expert slots + router remap), not a masked full layout —
+    // the whole point is that drafting forwards are cheaper
+    let drafter = match &spec.drafter {
+        None => None,
+        Some((method, r, domain)) => {
+            let stats: CalibStats = ctx.calibrate(domain)?;
+            let plan = Pipeline::new(method.clone()).plan(&ctx, &stats, *r)?;
+            let cm = plan.apply(&ctx, &stats)?;
+            let (cw, remap) = cm.to_compact(&ctx)?;
+            Some(ctx.load_compact(*r, &cw, remap, &format!("{} [drafter]", cm.label))?)
+        }
+    };
     let (bsz, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
     let pool = ctx.kv_pool(budget)?;
-    let exec = Executor { ctx, model, bsz, t, batcher, metrics, pool, chunk };
+    let exec = Executor { ctx, model, bsz, t, batcher, metrics, pool, chunk, drafter };
     exec.run(rx, stop)
 }
 
@@ -883,6 +969,29 @@ impl Executor {
         }
     }
 
+    /// Request validation performed at intake (degenerate parameters
+    /// never enter a scheduler lane): sampling parameters, plus the
+    /// speculative preconditions — a configured drafter and a usable
+    /// draft depth.
+    fn validate_gen(&self, req: &GenerateRequest) -> Result<()> {
+        req.params.validate()?;
+        match req.draft_k {
+            None => {}
+            Some(0) => {
+                return Err(anyhow!("speculative decoding needs draft_k >= 1"));
+            }
+            Some(_) => {
+                if self.drafter.is_none() {
+                    return Err(anyhow!(
+                        "request asked for speculative decoding but the server has \
+                         no drafter configured (set ServeSpec::drafter)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Worst-case resident length of a request: its prompt plus every
     /// token `max_new_tokens` allows, clamped to the context window (the
     /// decode loop stops at `t_max` regardless; an over-long prompt is
@@ -909,6 +1018,21 @@ impl Executor {
         }
     }
 
+    /// Worst-case KV **block** count of a queued unit of work: one
+    /// cache's worth for a plain request, twice that for a speculative
+    /// one (the full/drafter cache pair grows in lockstep, and KV
+    /// geometry does not depend on expert count — the drafter's cache is
+    /// exactly as large as the verifier's). The single source for BOTH
+    /// the admission check and the reservations the prefill makes.
+    fn queued_blocks(&self, q: &Queued) -> usize {
+        let per_cache = self.pool.blocks_for(self.queued_reserve_tokens(q));
+        if q.draft_k().is_some() {
+            per_cache * 2
+        } else {
+            per_cache
+        }
+    }
+
     /// Preempt Batch work until the Interactive queue head can reserve its
     /// worst-case block count (or nothing preemptible remains). Victim
     /// order is cheapest-first: the in-flight/parked Batch prefill (only
@@ -922,7 +1046,7 @@ impl Executor {
         active: &mut Vec<ActiveGen>,
     ) {
         let Some(head) = queues.front(Priority::Interactive) else { return };
-        let need = self.pool.blocks_for(self.queued_reserve_tokens(head));
+        let need = self.queued_blocks(head);
         if need > self.pool.total_blocks() {
             return; // impossible request: try_admit answers it with an error
         }
@@ -965,7 +1089,7 @@ impl Executor {
     /// infeasible head keeps waiting — FIFO within its class.
     fn try_admit(&self, class: Priority, queues: &mut SchedQueues) -> Option<PrefillInFlight> {
         let head = queues.front(class)?;
-        let need = self.pool.blocks_for(self.queued_reserve_tokens(head));
+        let need = self.queued_blocks(head);
         if need > self.pool.total_blocks() {
             let q = queues.pop(class).expect("head exists");
             q.send_err(anyhow!(
@@ -1031,7 +1155,7 @@ impl Executor {
             // neither delay their own error reply nor burn the one
             // chunk-per-iteration budget slot (and they don't count as
             // accepted in gen_requests)
-            Request::Generate(req) => match req.params.validate() {
+            Request::Generate(req) => match self.validate_gen(&req) {
                 Ok(()) => {
                     // counted at acceptance, not admission: a preempted
                     // request re-enters its lane and must not re-count
@@ -1078,6 +1202,25 @@ impl Executor {
                     logits
                 })
         };
+        // drafter lockstep (speculative requests only): run the same
+        // chunk through the compact drafter, so both caches of the pair
+        // finish together and BOTH reservations are claimed by the first
+        // chunk — admission checked 2× the block bound, and nothing else
+        // can be admitted between the two halves of the claim
+        let result = result.and_then(|logits| {
+            if inf.seq.draft_k().is_some() {
+                let drafter = self.drafter.as_ref().expect("validated at intake");
+                if let Some(dc) = inf.draft_cache.as_mut() {
+                    self.ctx.prefill_resume_compact(drafter, &ids, dc.as_mut())?;
+                } else {
+                    let reserve = self.queued_reserve_tokens(&inf.seq);
+                    let (dc, _) =
+                        self.ctx.prefill_paged_compact(drafter, &ids, &self.pool, reserve)?;
+                    inf.draft_cache = Some(dc);
+                }
+            }
+            Ok(logits)
+        });
         let dt = t0.elapsed();
         inf.prefill_s += dt.as_secs_f64();
         inf.chunks += 1;
@@ -1106,13 +1249,20 @@ impl Executor {
             self.metrics.chunked_prefills.fetch_add(1, Ordering::Relaxed);
         }
         let cache = inf.cache.take().expect("completed prefill has a cache");
+        let draft = match (inf.seq.draft_k(), inf.draft_cache.take()) {
+            (Some(k), Some(cache)) => Some(DraftSeq { cache, k }),
+            _ => None,
+        };
         match inf.seq {
-            Queued::Fresh(req) => self.activate_fresh(req, cache, logits, inf.prefill_s, active),
+            Queued::Fresh(req) => {
+                self.activate_fresh(req, cache, draft, logits, inf.prefill_s, active)
+            }
             Queued::Resume(p) => {
-                // the re-prefill rebuilt the exact dropped cache; its final
-                // logits are re-derived state (the next token was already
-                // sampled before the preemption), so they are discarded and
-                // decoding continues precisely where it stopped
+                // the re-prefill rebuilt the exact dropped cache pair; its
+                // final logits are re-derived state (the next token was
+                // already sampled before the preemption), so they are
+                // discarded and decoding continues precisely where it
+                // stopped
                 active.push(ActiveGen {
                     reply: p.reply,
                     enqueued: p.enqueued,
@@ -1122,6 +1272,7 @@ impl Executor {
                     reserve_tokens: p.reserve_tokens,
                     session: p.session,
                     cache,
+                    draft,
                     next: p.next,
                     last_emit: Instant::now(),
                     prefill_s: p.prefill_s + inf.prefill_s,
@@ -1139,6 +1290,7 @@ impl Executor {
         &self,
         req: GenerateRequest,
         cache: Box<dyn KvCache>,
+        draft: Option<DraftSeq>,
         logits: Vec<f32>,
         prefill_s: f64,
         active: &mut Vec<ActiveGen>,
@@ -1160,6 +1312,7 @@ impl Executor {
                 reserve_tokens,
                 session,
                 cache,
+                draft,
                 next,
                 last_emit: Instant::now(),
                 prefill_s,
@@ -1183,6 +1336,21 @@ impl Executor {
         }
     }
 
+    /// One decode iteration over the whole continuous batch. A batch of
+    /// plain sequences takes the k=1 batched-decode path; as soon as any
+    /// speculative sequence is active, the whole batch rides ONE
+    /// multi-position verify forward instead — speculative sequences
+    /// contribute their draft runs, plain sequences a 1-token run, and
+    /// the verify bit-identity contract makes both indistinguishable
+    /// from sequential decoding.
+    fn step(&self, active: &mut Vec<ActiveGen>) {
+        if active.iter().any(|a| a.draft.is_some()) {
+            self.step_speculative(active)
+        } else {
+            self.step_plain(active)
+        }
+    }
+
     /// One **batched** decode step advancing every active sequence by one
     /// token (`ModelContext::decode_batch`: shared projection GEMMs,
     /// per-expert grouped SwiGLU across sequences); finished sequences are
@@ -1192,7 +1360,7 @@ impl Executor {
     /// If the batched call itself fails, fall back to per-sequence decode
     /// so a single poisoned sequence is evicted with its error instead of
     /// failing the whole batch.
-    fn step(&self, active: &mut Vec<ActiveGen>) {
+    fn step_plain(&self, active: &mut Vec<ActiveGen>) {
         let bsz = active.len();
         let tokens: Vec<i32> = active.iter().map(|a| a.next).collect();
         let t0 = Instant::now();
@@ -1223,6 +1391,262 @@ impl Executor {
         }
     }
 
+    /// One continuous-batch iteration through the multi-position verify
+    /// path, interleaving speculative and plain sequences:
+    ///
+    /// 1. **Draft** — every speculative sequence proposes up to `k - 1`
+    ///    tokens beyond its committed one, picking with a *clone* of its
+    ///    [`Session`] (same RNG draws the verifier will spend) on batched
+    ///    compact-drafter decodes: sequences still drafting round `j`
+    ///    share one `decode_batch_compact` call. The drafter cache is
+    ///    snapshotted per position so any rejection point is restorable.
+    /// 2. **Verify** — ONE [`ModelContext::verify`] forward scores every
+    ///    sequence; a plain sequence contributes a 1-token run and gets
+    ///    exactly its plain batched-decode logits (the k=1 wrapper
+    ///    identity), so mixing costs plain traffic nothing.
+    /// 3. **Accept** — each sequence's real [`Session`] consumes its
+    ///    verify rows in emission order (bit-identity with plain
+    ///    decoding, same construction as [`crate::generate::speculative`]).
+    ///    Past the first disagreement both caches of the pair roll back;
+    ///    on a full accept with the sequence still live, the drafter
+    ///    replays the run's last token (batched across sequences).
+    ///
+    /// A draft or verify error rolls every drafter cache back to its
+    /// round-start snapshot and retries the iteration through
+    /// [`Self::step_sequential`] (plain semantics, lockstep drafter
+    /// feeds), so one poisoned sequence is evicted with its error instead
+    /// of failing the whole batch.
+    fn step_speculative(&self, active: &mut Vec<ActiveGen>) {
+        let drafter = self.drafter.as_ref().expect("speculative sequence without a drafter");
+        let t_max = self.ctx.cfg.t_max;
+        let n = active.len();
+        let t0 = Instant::now();
+        // per-sequence round state: base length, proposed run, per-length
+        // drafter snapshots, drafting session clone
+        let mut t_bases = Vec::with_capacity(n);
+        let mut k_effs = Vec::with_capacity(n);
+        let mut runs: Vec<Vec<i32>> = Vec::with_capacity(n);
+        let mut dsnaps: Vec<Vec<CacheSnapshot>> = Vec::with_capacity(n);
+        let mut draft_sessions: Vec<Option<Session>> = Vec::with_capacity(n);
+        for a in active.iter() {
+            let t_base = a.cache.seq_len();
+            // never propose more positions than the session can still emit
+            // or the context window can still hold (both bounds >= 1: the
+            // sequence is active, so its last advance returned Some)
+            let mut k_eff = 1;
+            if let Some(d) = a.draft.as_ref() {
+                let remaining = a.session.params().max_new_tokens - a.session.tokens().len();
+                k_eff = d.k.min(remaining).min(t_max - t_base).max(1);
+            }
+            let snap = if k_eff > 1 {
+                let d = a.draft.as_ref().expect("k_eff > 1 implies a drafter");
+                // a failed snapshot (foreign cache type) degrades the
+                // sequence to a 1-token run this round instead of erroring
+                self.ctx.snapshot_cache(d.cache.as_ref()).ok()
+            } else {
+                None
+            };
+            match snap {
+                Some(s) => {
+                    dsnaps.push(vec![s]);
+                    draft_sessions.push(Some(a.session.clone()));
+                }
+                None => {
+                    k_eff = 1;
+                    dsnaps.push(Vec::new());
+                    draft_sessions.push(None);
+                }
+            }
+            t_bases.push(t_base);
+            k_effs.push(k_eff);
+            runs.push(vec![a.next]);
+        }
+        // draft rounds: all sequences still proposing at depth j share one
+        // batched compact decode
+        let max_k = k_effs.iter().copied().max().unwrap_or(1);
+        let mut draft_failed = false;
+        'draft: for j in 1..max_k {
+            let idxs: Vec<usize> = (0..n).filter(|&i| k_effs[i] > j).collect();
+            let tokens: Vec<i32> = idxs.iter().map(|&i| runs[i][j - 1]).collect();
+            let rows = {
+                let mut caches: Vec<&mut dyn KvCache> = active
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| k_effs[*i] > j)
+                    .map(|(_, a)| {
+                        a.draft.as_mut().expect("drafting sequence").cache.as_mut()
+                    })
+                    .collect();
+                self.ctx.decode_batch_compact(drafter, &mut caches, &tokens)
+            };
+            let rows = match rows {
+                Ok(r) => r,
+                Err(_) => {
+                    draft_failed = true;
+                    break 'draft;
+                }
+            };
+            for (row, &i) in rows.iter().zip(&idxs) {
+                let d = active[i].draft.as_ref().expect("drafting sequence");
+                match self.ctx.snapshot_cache(d.cache.as_ref()) {
+                    Ok(s) => dsnaps[i].push(s),
+                    Err(_) => {
+                        draft_failed = true;
+                        break 'draft;
+                    }
+                }
+                let tok =
+                    draft_sessions[i].as_mut().expect("drafting sequence").pick_next(row);
+                runs[i].push(tok);
+            }
+        }
+        if draft_failed {
+            self.rollback_drafts(active, &dsnaps);
+            return self.step_sequential(active);
+        }
+        // ONE multi-position verify across the whole batch (speculative
+        // runs and plain 1-token runs interleaved)
+        let outs = {
+            let token_slices: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let mut caches: Vec<&mut dyn KvCache> =
+                active.iter_mut().map(|a| a.cache.as_mut()).collect();
+            self.ctx.verify(&self.model, &mut caches, &token_slices)
+        };
+        let outs = match outs {
+            Ok(o) => o,
+            Err(_) => {
+                // run_verify validates everything before mutating any
+                // cache, so the batch state is exactly pre-call here
+                self.rollback_drafts(active, &dsnaps);
+                return self.step_sequential(active);
+            }
+        };
+        let dt = t0.elapsed();
+        self.metrics.decode_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        self.metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.metrics.spec_rounds.fetch_add(1, Ordering::Relaxed);
+        let drafted_now: u64 = runs.iter().map(|r| (r.len() - 1) as u64).sum();
+        self.metrics.spec_drafted.fetch_add(drafted_now, Ordering::Relaxed);
+        let share = dt.as_secs_f64() / n as f64;
+        // accept phase: the real Sessions consume their verify rows; a
+        // full-accepted drafter still owes a feed of its run's last token
+        // (collected here, replayed batched below)
+        let mut accepted_now = 0u64;
+        let mut emitted_now = 0u64;
+        let mut replay_idx: Vec<usize> = Vec::new();
+        let mut replay_tokens: Vec<i32> = Vec::new();
+        for (i, (mut a, out)) in std::mem::take(active).into_iter().zip(outs).enumerate() {
+            a.decode_s += share;
+            self.record_itl(&mut a);
+            let t_base = t_bases[i];
+            let k_run = runs[i].len();
+            let before = a.session.tokens().len();
+            let mut fed = k_run; // verify rows whose fed token stays accepted
+            let mut next_pending = None;
+            for p in 0..k_run {
+                match a.session.advance(&out.logits[p], t_base + p + 1, t_max) {
+                    None => {
+                        // finished (EOS / budget / context): rows past p
+                        // are speculative overshoot
+                        fed = p + 1;
+                        next_pending = None;
+                        break;
+                    }
+                    Some(t) if p + 1 < k_run => {
+                        if t == runs[i][p + 1] {
+                            accepted_now += 1; // draft confirmed
+                        } else {
+                            fed = p + 1; // verifier's token replaces it
+                            next_pending = Some(t);
+                            break;
+                        }
+                    }
+                    Some(t) => next_pending = Some(t), // all rows accepted
+                }
+            }
+            emitted_now += (a.session.tokens().len() - before) as u64;
+            if fed < k_run {
+                // roll both caches of the pair back past the rejection
+                let rolled = self
+                    .ctx
+                    .rollback_cache(a.cache.as_mut(), &out.checkpoints[fed - 1])
+                    .and_then(|()| {
+                        let d = a.draft.as_mut().expect("only draft runs can reject");
+                        self.ctx.rollback_cache(d.cache.as_mut(), &dsnaps[i][fed])
+                    });
+                if let Err(e) = rolled {
+                    let _ = a.reply.send(Err(e));
+                    continue;
+                }
+            }
+            match next_pending {
+                Some(next) => {
+                    a.next = next;
+                    if fed == k_run && a.draft.is_some() {
+                        replay_idx.push(active.len());
+                        replay_tokens.push(runs[i][k_run - 1]);
+                    }
+                    active.push(a);
+                }
+                None => self.finish_gen(a),
+            }
+        }
+        self.metrics.gen_tokens.fetch_add(emitted_now, Ordering::Relaxed);
+        self.metrics.spec_accepted.fetch_add(accepted_now, Ordering::Relaxed);
+        // batched drafter replay for fully-accepted live sequences; on a
+        // batch error retry per sequence so only true offenders are
+        // evicted
+        if !replay_idx.is_empty() {
+            let res = {
+                let mut want = replay_idx.iter().copied().peekable();
+                let mut caches: Vec<&mut dyn KvCache> = Vec::with_capacity(replay_idx.len());
+                for (i, a) in active.iter_mut().enumerate() {
+                    if want.peek() == Some(&i) {
+                        want.next();
+                        caches.push(
+                            a.draft.as_mut().expect("replay targets a drafter").cache.as_mut(),
+                        );
+                    }
+                }
+                self.ctx.decode_batch_compact(drafter, &mut caches, &replay_tokens)
+            };
+            if res.is_err() {
+                // walk from the back so swap_remove never disturbs
+                // unvisited (lower) indices
+                for (pos, &i) in replay_idx.iter().enumerate().rev() {
+                    let a = &mut active[i];
+                    let d = a.draft.as_mut().expect("replay targets a drafter");
+                    if let Err(e) =
+                        self.ctx.decode_compact(drafter, d.cache.as_mut(), replay_tokens[pos])
+                    {
+                        let a = active.swap_remove(i);
+                        let _ = a.reply.send(Err(e));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Roll every drafter cache back to its round-start snapshot (the
+    /// speculative error-fallback path); a sequence whose rollback itself
+    /// fails is evicted with the error. Walks back-to-front so
+    /// `swap_remove` keeps unvisited indices aligned with `dsnaps`.
+    fn rollback_drafts(&self, active: &mut Vec<ActiveGen>, dsnaps: &[Vec<CacheSnapshot>]) {
+        for i in (0..active.len().min(dsnaps.len())).rev() {
+            let a = &mut active[i];
+            let (Some(d), Some(snap)) = (a.draft.as_mut(), dsnaps[i].first()) else {
+                continue;
+            };
+            if d.cache.seq_len() == snap.len() {
+                continue;
+            }
+            if let Err(e) = self.ctx.rollback_cache(d.cache.as_mut(), snap) {
+                let a = active.swap_remove(i);
+                let _ = a.reply.send(Err(e));
+            }
+        }
+    }
+
     /// Per-sequence decode fallback: only reached when the batched step
     /// errors, to isolate and evict the offending sequence while the rest
     /// keep decoding.
@@ -1232,7 +1656,18 @@ impl Executor {
         while i < active.len() {
             let a = &mut active[i];
             let t0 = Instant::now();
-            let logits = match self.ctx.decode(&self.model, a.cache.as_mut(), a.next) {
+            let fed = a.next;
+            // a speculative pair stays in lockstep even on this plain
+            // path: the fed token enters both caches
+            let logits = self.ctx.decode(&self.model, a.cache.as_mut(), fed).and_then(|l| {
+                if let Some(d) = a.draft.as_mut() {
+                    let drafter =
+                        self.drafter.as_ref().expect("speculative sequence without a drafter");
+                    self.ctx.decode_compact(drafter, d.cache.as_mut(), fed)?;
+                }
+                Ok(l)
+            });
+            let logits = match logits {
                 Ok(l) => l,
                 Err(e) => {
                     let a = active.swap_remove(i);

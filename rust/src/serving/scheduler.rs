@@ -71,6 +71,16 @@ impl Queued {
         }
     }
 
+    /// The request's speculative draft depth (`None` = plain decoding).
+    /// A preempted sequence keeps its depth across the swap, so resume
+    /// rebuilds the same full/drafter cache pair it was admitted with.
+    pub(crate) fn draft_k(&self) -> Option<usize> {
+        match self {
+            Queued::Fresh(r) => r.draft_k,
+            Queued::Resume(p) => p.draft_k,
+        }
+    }
+
     pub(crate) fn reply(&self) -> &ReplyTx<Result<Generated>> {
         match self {
             Queued::Fresh(r) => &r.reply,
@@ -164,6 +174,11 @@ pub(crate) struct PrefillInFlight {
     pub(crate) seq: Queued,
     /// The cache under construction; `None` until the first chunk ran.
     pub(crate) cache: Option<Box<dyn KvCache>>,
+    /// For a speculative request: the drafter's cache, built chunk by
+    /// chunk in lockstep with the full-model one (both reservations are
+    /// claimed by the FIRST chunk, so the admission check's 2× block
+    /// bound is secured before any later admission runs).
+    pub(crate) draft_cache: Option<Box<dyn KvCache>>,
     /// Prompt tokens prefilled so far.
     pub(crate) done: usize,
     /// Chunks executed so far.
@@ -174,7 +189,7 @@ pub(crate) struct PrefillInFlight {
 
 impl PrefillInFlight {
     pub(crate) fn new(seq: Queued) -> Self {
-        Self { seq, cache: None, done: 0, chunks: 0, prefill_s: 0.0 }
+        Self { seq, cache: None, draft_cache: None, done: 0, chunks: 0, prefill_s: 0.0 }
     }
 
     /// The full token sequence this prefill must feed: the prompt for a
@@ -189,6 +204,18 @@ impl PrefillInFlight {
     pub(crate) fn reply(&self) -> &ReplyTx<Result<Generated>> {
         self.seq.reply()
     }
+}
+
+/// A speculative sequence's drafter side: the compact variant's own KV
+/// cache plus the per-round draft depth. Lives inside [`ActiveGen`];
+/// dropping it (eviction, preemption, finish) releases the drafter's
+/// blocks exactly like the full-model cache's.
+pub(crate) struct DraftSeq {
+    /// The compact drafter's KV cache, kept in lockstep with the
+    /// verifier's (same sequence length at every step boundary).
+    pub(crate) cache: Box<dyn KvCache>,
+    /// Most tokens proposed per verify round (the request's `draft_k`).
+    pub(crate) k: usize,
 }
 
 /// One generation sequence in the continuous decode batch.
@@ -208,6 +235,9 @@ pub(crate) struct ActiveGen {
     pub(crate) reserve_tokens: usize,
     pub(crate) session: Session,
     pub(crate) cache: Box<dyn KvCache>,
+    /// Speculative state (`None` = plain decoding): the drafter-side
+    /// cache and draft depth.
+    pub(crate) draft: Option<DraftSeq>,
     /// Sampled but not yet fed to the model.
     pub(crate) next: i32,
     /// When this sequence last emitted a token (admission or previous
@@ -238,10 +268,12 @@ impl ActiveGen {
             resident,
             reserve_tokens: self.reserve_tokens,
             session: self.session,
+            draft_k: self.draft.as_ref().map(|d| d.k),
             next: self.next,
             prefill_s: self.prefill_s,
             decode_s: self.decode_s,
-        } // self.cache drops here, releasing the blocks
+        } // self.cache (and self.draft's cache) drop here, releasing
+          // every block of the pair
     }
 }
 
@@ -263,6 +295,10 @@ pub(crate) struct PreemptedGen {
     /// [`ActiveGen::reserve_tokens`]).
     pub(crate) reserve_tokens: usize,
     pub(crate) session: Session,
+    /// The draft depth of a speculative sequence (`None` = plain).
+    /// Resume rebuilds the drafter cache over `resident` alongside the
+    /// full-model one.
+    pub(crate) draft_k: Option<usize>,
     /// Sampled but not yet fed when the preemption hit.
     pub(crate) next: i32,
     pub(crate) prefill_s: f64,

@@ -213,6 +213,7 @@ fn serving_through_native_backend_matches_direct_scores() {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,

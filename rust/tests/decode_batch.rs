@@ -376,6 +376,7 @@ fn server_batches_decode_under_concurrent_mixed_load() {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
@@ -458,6 +459,7 @@ fn long_prompt_admission_does_not_stall_active_decode() {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

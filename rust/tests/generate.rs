@@ -291,6 +291,7 @@ fn degenerate_sampling_params_error_cleanly() {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -315,6 +316,7 @@ fn server_mixed_load_matches_offline_results() {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
@@ -395,6 +397,7 @@ fn empty_prompt_rows_do_not_panic_the_executor() {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

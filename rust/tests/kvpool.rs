@@ -339,6 +339,7 @@ fn serve_with_blocks(a: &Artifacts, cfg: &ModelCfg, blocks: usize) -> ServerHand
             compress: None,
             kv_budget_bytes: Some(blocks * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
             prefill_chunk: None,
+            drafter: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

@@ -1,8 +1,13 @@
 //! Cross-module property tests over the coordinator's invariants
 //! (hand-rolled runner; proptest is unavailable offline). These run on
-//! synthetic stats — no artifacts required.
+//! synthetic stats/weights — no artifacts required.
 
+use hc_smoe::backend::native::NativeBackend;
+use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::calib::{CalibStats, LayerStats};
+use hc_smoe::config::ModelCfg;
+use hc_smoe::kvpool::{KvPool, PagedSeq, PoolHandle};
+use hc_smoe::pipeline::MASK_OFF;
 use hc_smoe::clustering::{fcm, hierarchical, kmeans, single_shot, KmeansInit, Linkage};
 use hc_smoe::merging::{merge_cluster, FixDomFeature, MergeStrategy};
 use hc_smoe::pruning::{f_prune, layer_output_deviation, o_prune, s_prune};
@@ -178,6 +183,233 @@ fn prop_keeping_all_experts_has_zero_deviation() {
         let all: Vec<usize> = (0..n).collect();
         let dev = layer_output_deviation(&layer, &all, 2);
         ensure(dev < 1e-9, format!("full subset deviation {dev}"))
+    });
+}
+
+/// Randomized multi-position-verify invariant: for ANY tiny model
+/// (random layout — full, masked, or compact — random prompts, random
+/// ragged draft runs, random explicit thread count), one
+/// `run_verify_batch_with` forward returns logits bit-identical to
+/// feeding the same tokens through sequential `run_decode` calls, and
+/// its checkpoints carry the right lengths. This is the contract the
+/// speculative decoder's exactness proof stands on.
+#[test]
+fn prop_verify_equals_sequential_decodes() {
+    check("verify-eq-sequential", 700, 25, |rng| {
+        let cfg = ModelCfg {
+            name: "prop".into(),
+            n_layer: 1 + rng.below(2),
+            d: 8,
+            m: 8,
+            n_exp: 4,
+            k: 2,
+            heads: 2,
+            vocab: 32,
+            t_max: 32,
+            shared: rng.below(2) == 0,
+            m_shared: 8,
+            // drop-free capacity regime: the exact-equivalence precondition
+            cap_factor: 4.0,
+            block_c: 4,
+        };
+        let w = hc_smoe::weights::Weights::synthesize(&cfg, rng.next_u64());
+        // layout: 0 = full, 1 = masked, 2 = compact r=2
+        let layout = rng.below(3);
+        let mut mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+        let (weights, n_slots, remap) = match layout {
+            1 => {
+                // mask off up to n_exp - k experts per layer (keep top-k
+                // routable)
+                for l in 0..cfg.n_layer {
+                    for _ in 0..rng.below(cfg.n_exp - cfg.k + 1) {
+                        mask[l * cfg.n_exp + rng.below(cfg.n_exp)] = MASK_OFF;
+                    }
+                }
+                (w.clone(), cfg.n_exp, None)
+            }
+            2 => {
+                let r = 2usize;
+                let keep: Vec<Vec<usize>> = vec![(0..r).collect(); cfg.n_layer];
+                let cw = w.to_compact(&cfg, &keep).map_err(|e| e.to_string())?;
+                let remap: Vec<i32> = (0..cfg.n_layer * cfg.n_exp)
+                    .map(|i| ((i % cfg.n_exp) % r) as i32)
+                    .collect();
+                (cw, r, Some(remap))
+            }
+            _ => (w.clone(), cfg.n_exp, None),
+        };
+        let backend = NativeBackend::new(cfg.clone());
+        let state = backend.load_model(&weights, n_slots).map_err(|e| e.to_string())?;
+        let base_opts = || {
+            let mut o = PrefillOpts::new(&mask);
+            if let Some(rm) = remap.as_deref() {
+                o = o.remap(rm);
+            }
+            o
+        };
+
+        let bsz = 1 + rng.below(3);
+        let prompts: Vec<Vec<i32>> = (0..bsz)
+            .map(|_| (0..2 + rng.below(7)).map(|_| rng.below(cfg.vocab) as i32).collect())
+            .collect();
+        let runs: Vec<Vec<i32>> = (0..bsz)
+            .map(|_| (0..1 + rng.below(5)).map(|_| rng.below(cfg.vocab) as i32).collect())
+            .collect();
+
+        // reference: per-sequence sequential decodes
+        let mut ref_rows: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (p, run) in prompts.iter().zip(&runs) {
+            let (cache, _) = backend
+                .run_prefill(state.as_ref(), p, base_opts())
+                .map_err(|e| e.to_string())?;
+            let mut cache = cache.expect("fresh prefill returns a cache");
+            let mut rows = Vec::new();
+            for &t in run {
+                rows.push(
+                    backend
+                        .run_decode(state.as_ref(), cache.as_mut(), t, &mask, remap.as_deref())
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            ref_rows.push(rows);
+        }
+
+        // one batched verify forward at a random explicit thread count
+        let threads = [1usize, 2, 4][rng.below(3)];
+        let mut caches: Vec<Box<dyn KvCache>> = Vec::new();
+        for p in &prompts {
+            let (cache, _) = backend
+                .run_prefill(state.as_ref(), p, base_opts())
+                .map_err(|e| e.to_string())?;
+            caches.push(cache.expect("fresh prefill returns a cache"));
+        }
+        let outs = {
+            let mut refs: Vec<&mut dyn KvCache> =
+                caches.iter_mut().map(|c| c.as_mut()).collect();
+            let toks: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            backend
+                .run_verify_batch_with(
+                    state.as_ref(),
+                    &mut refs,
+                    &toks,
+                    &mask,
+                    remap.as_deref(),
+                    threads,
+                )
+                .map_err(|e| e.to_string())?
+        };
+        for (s, out) in outs.iter().enumerate() {
+            ensure(out.logits.len() == runs[s].len(), "one logits row per fed token")?;
+            for (i, (row, rrow)) in out.logits.iter().zip(&ref_rows[s]).enumerate() {
+                let same = row.len() == rrow.len()
+                    && row
+                        .iter()
+                        .zip(rrow)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                ensure(
+                    same,
+                    format!(
+                        "layout={layout} threads={threads} seq={s} pos={i}: \
+                         verify row != sequential decode"
+                    ),
+                )?;
+                ensure(
+                    out.checkpoints[i].len() == prompts[s].len() + i + 1,
+                    format!("seq={s} pos={i}: checkpoint length"),
+                )?;
+            }
+            ensure(
+                caches[s].seq_len() == prompts[s].len() + runs[s].len(),
+                "verify advances the cache over the whole run",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Randomized paged-sequence lifecycle stress: arbitrary interleavings
+/// of reserve/append/truncate/fork/drop must keep the pool's O(1)
+/// counters (`stats()`) equal to a ground-truth O(total_blocks) scan of
+/// per-block refcounts, with reservations exactly the sum of what the
+/// live sequences still hold.
+#[test]
+fn prop_kvpool_stats_match_debug_scan() {
+    check("kvpool-stats-scan", 800, 40, |rng| {
+        let total = 12 + rng.below(20);
+        let pool = PoolHandle::new(KvPool::new(2, 4, 4, total).unwrap());
+        let mut seqs: Vec<PagedSeq> = Vec::new();
+
+        let scan_check = |pool: &PoolHandle, seqs: &[PagedSeq], op: &str| {
+            let st = pool.stats();
+            let p = pool.borrow();
+            let scanned_in_use = (0..st.total_blocks).filter(|&b| p.refs(b) > 0).count();
+            let scanned_shared = (0..st.total_blocks).filter(|&b| p.refs(b) > 1).count();
+            let live_reserved: usize = seqs.iter().map(|s| s.reserved_remaining()).sum();
+            ensure(
+                st.in_use == scanned_in_use,
+                format!("{op}: in_use {} != scanned {scanned_in_use}", st.in_use),
+            )?;
+            ensure(
+                st.shared == scanned_shared,
+                format!("{op}: shared {} != scanned {scanned_shared}", st.shared),
+            )?;
+            ensure(
+                st.reserved == live_reserved,
+                format!("{op}: reserved {} != live sum {live_reserved}", st.reserved),
+            )?;
+            ensure(
+                st.in_use + st.reserved <= st.total_blocks,
+                format!("{op}: committed {} over budget", st.in_use + st.reserved),
+            )?;
+            ensure(st.peak_in_use >= st.in_use, format!("{op}: peak below in_use"))
+        };
+
+        for _ in 0..60 {
+            let op = rng.below(5);
+            match op {
+                // spawn with a random reservation (may be refused — fine)
+                0 if seqs.len() < 6 => {
+                    let reserve = rng.below(4);
+                    if let Ok(s) = PagedSeq::new(&pool, reserve) {
+                        seqs.push(s);
+                    }
+                }
+                // append one token position (COW/fresh-block allocation is
+                // best-effort; a refusal must leave the counters intact)
+                1 if !seqs.is_empty() => {
+                    let i = rng.below(seqs.len());
+                    if seqs[i].prepare_append().is_ok() {
+                        seqs[i].commit_append();
+                    }
+                }
+                // truncate to a random earlier length (the speculative
+                // rollback primitive)
+                2 if !seqs.is_empty() => {
+                    let i = rng.below(seqs.len());
+                    let to = rng.below(seqs[i].seq_len() + 1);
+                    seqs[i].truncate_to(to).map_err(|e| e.to_string())?;
+                    ensure(seqs[i].seq_len() == to, "truncate_to lands exactly")?;
+                }
+                // fork (shares every block by reference)
+                3 if !seqs.is_empty() && seqs.len() < 6 => {
+                    let i = rng.below(seqs.len());
+                    let f = seqs[i].fork();
+                    ensure(f.seq_len() == seqs[i].seq_len(), "fork preserves length")?;
+                    seqs.push(f);
+                }
+                // drop (releases blocks and any leftover reservation)
+                4 if !seqs.is_empty() => {
+                    let i = rng.below(seqs.len());
+                    seqs.swap_remove(i);
+                }
+                _ => {}
+            }
+            scan_check(&pool, &seqs, &format!("op {op}"))?;
+        }
+        seqs.clear();
+        let st = pool.stats();
+        ensure(st.in_use == 0, format!("{} blocks leaked", st.in_use))?;
+        ensure(st.reserved == 0, format!("{} reservations leaked", st.reserved))
     });
 }
 

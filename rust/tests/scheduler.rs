@@ -78,6 +78,7 @@ fn serve_with(a: &Artifacts, cfg: &ModelCfg, blocks: usize, chunk: Option<usize>
             compress: None,
             kv_budget_bytes: Some(blocks * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
             prefill_chunk: chunk,
+            drafter: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -483,6 +484,7 @@ fn zero_prefill_chunk_is_a_startup_error() {
             compress: None,
             kv_budget_bytes: None,
             prefill_chunk: Some(0),
+            drafter: None,
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

@@ -28,6 +28,7 @@ fn spec(arts: &Artifacts) -> ServeSpec {
         compress: None,
         kv_budget_bytes: None,
         prefill_chunk: None,
+        drafter: None,
     }
 }
 

@@ -1,0 +1,693 @@
+//! Speculative-decoding test suite: draft-k/verify-1 with the compact
+//! merged variant as the drafter, pinned **bit-identical** to plain
+//! decoding — offline (synthesized artifacts, native backend).
+//!
+//! The headline contracts:
+//!
+//! * [`speculative`] / [`speculative_paged`] emit exactly the token
+//!   stream (and finish reason) of plain [`generate`] with the same
+//!   parameters, for every draft depth k ∈ {1, 2, 4, 8}, greedy and
+//!   seeded top-k, on the full, merged-masked and shared-expert
+//!   verifier layouts, over flat and paged caches.
+//! * The multi-position verify forward is bit-identical to k sequential
+//!   decode calls at explicit thread counts {1, 2, 4} on every layout.
+//! * A rejection rollback leaves a cache functionally identical to a
+//!   freshly prefilled prefix: same length, same resident bytes, and
+//!   bit-identical logits for every subsequent decode step (the
+//!   byte-level K/V comparison lives in `backend::native`'s unit tests,
+//!   which can see the private buffers).
+//! * The server interleaves speculative and plain sequences in one
+//!   continuous batch with bit-identical streams, rejects malformed
+//!   speculative requests at intake, and a speculative + preemption
+//!   mixed workload leaks zero KV-pool blocks.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hc_smoe::backend::native::NativeBackend;
+use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
+use hc_smoe::bench_support::synthesize_artifacts;
+use hc_smoe::clustering::Linkage;
+use hc_smoe::config::{Artifacts, ModelCfg};
+use hc_smoe::generate::{
+    generate, speculative, speculative_paged, Generated, SamplingParams,
+};
+use hc_smoe::kvpool::DEFAULT_BLOCK_TOKENS;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::{CompactModel, LoadedModel, ModelContext};
+use hc_smoe::pipeline::{Method, Pipeline, MASK_OFF};
+use hc_smoe::serving::{
+    reply_channel, serve, BatcherConfig, GenerateRequest, Priority, Request, ServeSpec,
+    ServerHandle,
+};
+use hc_smoe::similarity::Metric;
+use hc_smoe::weights::Weights;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Synthesize one artifact set per test process (shared across tests).
+fn arts() -> Artifacts {
+    static DIR: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+    let dir = DIR.get_or_init(|| {
+        let p = std::env::temp_dir().join(format!("hcsmoe_spec_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        synthesize_artifacts(&p, 0x57EC).expect("synthesize artifacts");
+        p
+    });
+    Artifacts::new(dir)
+}
+
+fn hc_method() -> Method {
+    Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    }
+}
+
+/// Build (verifier, drafter) for a model: the original weights as the
+/// full verifier plus the HC-merged compact variant as the drafter.
+fn verifier_and_drafter(ctx: &ModelContext, r: usize) -> (LoadedModel, CompactModel) {
+    let full = ctx.load_original().unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(hc_method()).plan(ctx, &stats, r).unwrap();
+    let cm = plan.apply(ctx, &stats).unwrap();
+    let (cw, remap) = cm.to_compact(ctx).unwrap();
+    let drafter = ctx.load_compact(r, &cw, remap, "drafter").unwrap();
+    (full, drafter)
+}
+
+/// Assert a speculative outcome IS the plain outcome, plus accounting
+/// sanity: k = 1 never drafts, deeper k never accepts more than drafted.
+fn assert_spec_matches(
+    what: &str,
+    k: usize,
+    plain: &Generated,
+    spec: &hc_smoe::generate::SpecOutcome,
+) {
+    assert_eq!(spec.gen.tokens, plain.tokens, "{what} k={k}: token stream diverged");
+    assert_eq!(spec.gen.finish, plain.finish, "{what} k={k}: finish reason diverged");
+    assert!(spec.accepted <= spec.drafted, "{what} k={k}: accounting inverted");
+    assert!(spec.verify_steps >= 1, "{what} k={k}: no verify forward ran");
+    if k == 1 {
+        assert_eq!(spec.drafted, 0, "{what}: draft_k=1 proposes nothing beyond pending");
+    }
+    // each verify round emits at least one token, so rounds never exceed
+    // the emitted count — and with k > 1 they should beat plain decode
+    // whenever anything was accepted
+    assert!(spec.verify_steps <= plain.tokens.len().max(1), "{what} k={k}");
+    if spec.accepted > 0 {
+        assert!(
+            spec.verify_steps < plain.tokens.len(),
+            "{what} k={k}: accepted drafts must save verify forwards"
+        );
+    }
+    let rate = spec.acceptance_rate();
+    assert!((0.0..=1.0).contains(&rate), "{what} k={k}: rate {rate} out of range");
+}
+
+// ---------------------------------------------------------------------------
+// Offline driver pinning: speculative == plain, every layout/k/cache/strategy
+// ---------------------------------------------------------------------------
+
+/// The core pinning sweep for one model: k ∈ {1, 2, 4, 8} × {greedy,
+/// seeded top-k} × {flat, paged} speculative runs against the plain
+/// flat-cache reference.
+fn pin_speculative_for(model_name: &str, r: usize) {
+    let ctx = ModelContext::load(&arts(), model_name).unwrap();
+    let (full, drafter) = verifier_and_drafter(&ctx, r);
+    let v = ctx.cfg.vocab;
+    let prompt: Vec<i32> = (0..7).map(|i| ((1 + i * 5) % v) as i32).collect();
+    let param_sets = [
+        SamplingParams::greedy(18, None),
+        SamplingParams::top_k(8, 0.8, 7, 18, None),
+    ];
+    for params in &param_sets {
+        let plain = generate(&ctx, &full, &prompt, params.clone()).unwrap();
+        for k in [1usize, 2, 4, 8] {
+            let spec =
+                speculative(&ctx, &full, &drafter, &prompt, params.clone(), k).unwrap();
+            assert_spec_matches(&format!("{model_name} flat"), k, &plain, &spec);
+
+            let pool = ctx.kv_pool(8 << 20).unwrap();
+            let reserve = prompt.len() + params.max_new_tokens;
+            let paged = speculative_paged(
+                &ctx, &full, &drafter, &prompt, params.clone(), k, &pool, reserve,
+            )
+            .unwrap();
+            assert_spec_matches(&format!("{model_name} paged"), k, &plain, &paged);
+            // both caches of the pair were dropped with the outcome — the
+            // pool must be fully drained (leak-freedom, offline flavour)
+            assert_eq!(
+                pool.stats().in_use,
+                0,
+                "{model_name} k={k}: speculative pair leaked pool blocks"
+            );
+        }
+    }
+}
+
+#[test]
+fn speculative_matches_plain_full_layout() {
+    // qwensim: 8 experts, full layout verifier
+    pin_speculative_for("qwensim", 4);
+}
+
+#[test]
+fn speculative_matches_plain_shared_expert_layout() {
+    // dssim: shared-expert FFN on every layer, plus the routed experts
+    pin_speculative_for("dssim", 4);
+}
+
+#[test]
+fn speculative_matches_plain_masked_verifier() {
+    // the verifier itself can be a merged (masked-layout) variant: the
+    // drafter is then the compact form of the SAME plan, so acceptance
+    // is perfect and the stream still pins against the masked plain run
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let r = 4usize;
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, r).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let merged = cm.load(&ctx).unwrap();
+    let (cw, remap) = cm.to_compact(&ctx).unwrap();
+    let drafter = ctx.load_compact(r, &cw, remap, "drafter").unwrap();
+    let prompt = [1i32, 4, 25, 61, 3, 5];
+    for params in [
+        SamplingParams::greedy(16, None),
+        SamplingParams::top_k(6, 0.7, 11, 16, None),
+    ] {
+        let plain = generate(&ctx, &merged, &prompt, params.clone()).unwrap();
+        for k in [2usize, 4] {
+            let spec =
+                speculative(&ctx, &merged, &drafter, &prompt, params.clone(), k).unwrap();
+            assert_spec_matches("masked verifier", k, &plain, &spec);
+        }
+    }
+}
+
+#[test]
+fn speculative_respects_stop_conditions() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let (full, drafter) = verifier_and_drafter(&ctx, 4);
+    let prompt = [1i32, 4, 33, 3, 5];
+
+    // EOS mid-run: pin it to a later greedy token, so the stop lands
+    // inside a k=4 draft run and the tail must be discarded. (Compared
+    // directly rather than via assert_spec_matches: if the pinned EOS
+    // also happens to be the FIRST emitted token, zero verify rounds run
+    // — the streams must still agree.)
+    let probe = generate(&ctx, &full, &prompt, SamplingParams::greedy(6, None)).unwrap();
+    let eos = *probe.tokens.iter().find(|&&t| t != probe.tokens[0]).unwrap_or(&probe.tokens[0]);
+    let plain = generate(&ctx, &full, &prompt, SamplingParams::greedy(16, Some(eos))).unwrap();
+    let spec =
+        speculative(&ctx, &full, &drafter, &prompt, SamplingParams::greedy(16, Some(eos)), 4)
+            .unwrap();
+    assert_eq!(spec.gen.tokens, plain.tokens, "eos: token stream diverged");
+    assert_eq!(spec.gen.finish, plain.finish, "eos: finish reason diverged");
+
+    // context-window exhaustion: the drafter must clamp its run so
+    // neither cache ever exceeds t_max
+    let t_max = ctx.cfg.t_max;
+    let long: Vec<i32> = (0..t_max - 5).map(|i| ((16 + i * 3) % 90) as i32).collect();
+    let plain = generate(&ctx, &full, &long, SamplingParams::greedy(100, None)).unwrap();
+    let spec =
+        speculative(&ctx, &full, &drafter, &long, SamplingParams::greedy(100, None), 8).unwrap();
+    assert_spec_matches("max-context", 8, &plain, &spec);
+
+    // invalid inputs fail like plain generate does
+    assert!(speculative(&ctx, &full, &drafter, &[], SamplingParams::greedy(4, None), 4).is_err());
+    assert!(
+        speculative(&ctx, &full, &drafter, &prompt, SamplingParams::greedy(4, None), 0).is_err(),
+        "draft_k=0 must be rejected"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Backend-level: verify == k sequential decodes at explicit thread counts
+// ---------------------------------------------------------------------------
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "spec".into(),
+        n_layer: 2,
+        d: 16,
+        m: 16,
+        n_exp: 4,
+        k: 2,
+        heads: 2,
+        vocab: 48,
+        t_max: 40,
+        shared: false,
+        m_shared: 16,
+        // k=2 distinct experts bound every capacity queue below the
+        // cap_factor=4 capacity — drop-free, the exact-equivalence regime
+        cap_factor: 4.0,
+        block_c: 4,
+    }
+}
+
+/// One layout's check: a 2-sequence verify batch with ragged runs equals
+/// the same tokens decoded one at a time, bitwise, at threads {1, 2, 4}.
+fn assert_verify_matches_sequential(
+    cfg: &ModelCfg,
+    w: &Weights,
+    n_slots: usize,
+    mask: &[f32],
+    remap: Option<&[i32]>,
+) {
+    let backend = NativeBackend::new(cfg.clone());
+    let state = backend.load_model(w, n_slots).unwrap();
+    let v = cfg.vocab;
+    let prompts: [Vec<i32>; 2] = [
+        (0..6).map(|i| ((3 + i * 5) % v) as i32).collect(),
+        (0..9).map(|i| ((7 + i * 11) % v) as i32).collect(),
+    ];
+    let runs: [Vec<i32>; 2] = [
+        (0..4).map(|i| ((1 + i * 13) % v) as i32).collect(),
+        (0..2).map(|i| ((5 + i * 17) % v) as i32).collect(),
+    ];
+    let base_opts = || {
+        let mut o = PrefillOpts::new(mask);
+        if let Some(rm) = remap {
+            o = o.remap(rm);
+        }
+        o
+    };
+
+    // reference: sequential run_decode rows per sequence
+    let mut ref_rows: Vec<Vec<Vec<f32>>> = Vec::new();
+    for (p, run) in prompts.iter().zip(&runs) {
+        let (cache, _) = backend.run_prefill(state.as_ref(), p, base_opts()).unwrap();
+        let mut cache = cache.expect("fresh prefill returns a cache");
+        let rows = run
+            .iter()
+            .map(|&t| {
+                backend.run_decode(state.as_ref(), cache.as_mut(), t, mask, remap).unwrap()
+            })
+            .collect();
+        ref_rows.push(rows);
+    }
+
+    for threads in [1usize, 2, 4] {
+        let mut caches: Vec<Box<dyn KvCache>> = prompts
+            .iter()
+            .map(|p| {
+                let (c, _) = backend.run_prefill(state.as_ref(), p, base_opts()).unwrap();
+                c.expect("fresh prefill returns a cache")
+            })
+            .collect();
+        let outs = {
+            let mut refs: Vec<&mut dyn KvCache> =
+                caches.iter_mut().map(|c| c.as_mut()).collect();
+            let toks: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            backend
+                .run_verify_batch_with(state.as_ref(), &mut refs, &toks, mask, remap, threads)
+                .unwrap()
+        };
+        for (s, (out, rrows)) in outs.iter().zip(&ref_rows).enumerate() {
+            assert_eq!(out.logits.len(), rrows.len());
+            assert_eq!(out.checkpoints.len(), rrows.len());
+            for (i, (row, rrow)) in out.logits.iter().zip(rrows).enumerate() {
+                assert_eq!(
+                    bits(row),
+                    bits(rrow),
+                    "threads={threads} seq={s} pos={i}: verify row != sequential decode"
+                );
+            }
+            assert_eq!(
+                out.checkpoints.last().unwrap().len(),
+                prompts[s].len() + runs[s].len(),
+                "threads={threads} seq={s}: final checkpoint length"
+            );
+        }
+    }
+}
+
+#[test]
+fn verify_matches_sequential_decode_full_layout_threads() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 61);
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    assert_verify_matches_sequential(&cfg, &w, cfg.n_exp, &mask, None);
+}
+
+#[test]
+fn verify_matches_sequential_decode_masked_layout_threads() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 67);
+    let mut mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    mask[1] = MASK_OFF;
+    mask[cfg.n_exp + 3] = MASK_OFF;
+    assert_verify_matches_sequential(&cfg, &w, cfg.n_exp, &mask, None);
+}
+
+#[test]
+fn verify_matches_sequential_decode_compact_layout_threads() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthesize(&cfg, 71);
+    let r = 2usize;
+    let keep: Vec<Vec<usize>> = vec![(0..r).collect(); cfg.n_layer];
+    let cw = w.to_compact(&cfg, &keep).unwrap();
+    let remap: Vec<i32> = (0..cfg.n_layer * cfg.n_exp)
+        .map(|i| ((i % cfg.n_exp) % r) as i32)
+        .collect();
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    assert_verify_matches_sequential(&cfg, &cw, r, &mask, Some(&remap));
+}
+
+#[test]
+fn verify_matches_sequential_decode_shared_expert_threads() {
+    let cfg = ModelCfg { shared: true, ..tiny_cfg() };
+    let w = Weights::synthesize(&cfg, 73);
+    let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+    assert_verify_matches_sequential(&cfg, &w, cfg.n_exp, &mask, None);
+}
+
+// ---------------------------------------------------------------------------
+// Rollback: a rejected run's cache is indistinguishable from a fresh prefix
+// ---------------------------------------------------------------------------
+
+/// After verifying a k-token run and rolling back to checkpoint `i`, the
+/// cache must behave exactly like one freshly prefilled with
+/// prompt + run[..=i]: same length, same resident bytes, bit-identical
+/// logits on every subsequent decode. Exercised on flat + paged caches
+/// of the full verifier AND (via snapshot/rollback) the compact drafter.
+#[test]
+fn rollback_restores_a_fresh_prefix_cache() {
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let (full, drafter) = verifier_and_drafter(&ctx, 4);
+    let v = ctx.cfg.vocab;
+    let prompt: Vec<i32> = (0..8).map(|i| ((2 + i * 7) % v) as i32).collect();
+    let run: Vec<i32> = (0..4).map(|i| ((9 + i * 13) % v) as i32).collect();
+    let cont: Vec<i32> = (0..5).map(|i| ((4 + i * 19) % v) as i32).collect();
+    let pool = ctx.kv_pool(8 << 20).unwrap();
+
+    for paged in [false, true] {
+        for keep in [1usize, 3] {
+            // fresh-prefix reference: prompt + run[..keep], then `cont`
+            let mut pref: Vec<i32> = prompt.clone();
+            pref.extend_from_slice(&run[..keep]);
+            let (mut fresh, _) = ctx.prefill(&full, &pref).unwrap();
+            let ref_rows: Vec<Vec<f32>> = cont
+                .iter()
+                .map(|&t| ctx.decode(&full, fresh.as_mut(), t).unwrap())
+                .collect();
+
+            // speculative-shaped path: prefill prompt, verify the whole
+            // run, roll back to checkpoint keep-1 (run[..keep] kept)
+            let (mut cache, _) = if paged {
+                ctx.prefill_paged(&full, &prompt, &pool, prompt.len() + run.len() + cont.len())
+                    .unwrap()
+            } else {
+                ctx.prefill(&full, &prompt).unwrap()
+            };
+            let out = {
+                let mut refs: [&mut dyn KvCache; 1] = [cache.as_mut()];
+                ctx.verify(&full, &mut refs, &[run.as_slice()]).unwrap().pop().unwrap()
+            };
+            ctx.rollback_cache(cache.as_mut(), &out.checkpoints[keep - 1]).unwrap();
+            assert_eq!(cache.seq_len(), pref.len(), "paged={paged} keep={keep}: length");
+            if !paged {
+                // flat resident bytes track seq_len exactly; paged ones
+                // are whole-block granular, covered by the pool drain below
+                assert_eq!(
+                    cache.byte_size(),
+                    ctx.cfg.kv_cache_bytes(pref.len()),
+                    "paged={paged} keep={keep}: resident bytes"
+                );
+            }
+            for (i, (&t, rrow)) in cont.iter().zip(&ref_rows).enumerate() {
+                let row = ctx.decode(&full, cache.as_mut(), t).unwrap();
+                assert_eq!(
+                    bits(&row),
+                    bits(rrow),
+                    "paged={paged} keep={keep}: decode {i} diverged after rollback"
+                );
+            }
+        }
+    }
+    drop(pool);
+
+    // the drafter side: decode forward, snapshot at each step, roll back
+    // two steps, and re-decode bit-identically (the spec_loop dsnaps path)
+    let (mut dcache, _) = ctx.prefill_compact(&drafter, &prompt).unwrap();
+    let snap0 = ctx.snapshot_cache(dcache.as_ref()).unwrap();
+    let rows_a: Vec<Vec<f32>> = run
+        .iter()
+        .map(|&t| ctx.decode_compact(&drafter, dcache.as_mut(), t).unwrap())
+        .collect();
+    ctx.rollback_cache(dcache.as_mut(), &snap0).unwrap();
+    assert_eq!(dcache.seq_len(), prompt.len());
+    let rows_b: Vec<Vec<f32>> = run
+        .iter()
+        .map(|&t| ctx.decode_compact(&drafter, dcache.as_mut(), t).unwrap())
+        .collect();
+    for (i, (a, b)) in rows_a.iter().zip(&rows_b).enumerate() {
+        assert_eq!(bits(a), bits(b), "drafter replay step {i} diverged after rollback");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving: drafter-paired sequences in the continuous batch
+// ---------------------------------------------------------------------------
+
+/// Serve qwensim with a drafter variant and an optional explicit pool
+/// budget in *blocks*.
+fn serve_with_drafter(a: &Artifacts, cfg: &ModelCfg, blocks: Option<usize>) -> ServerHandle {
+    serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+            kv_budget_bytes: blocks.map(|b| b * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
+            prefill_chunk: None,
+            drafter: Some((hc_method(), 4, "general".into())),
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap()
+}
+
+/// Poll a metrics predicate with a deadline (the executor publishes pool
+/// gauges once per loop iteration).
+fn wait_for(handle: &ServerHandle, what: &str, pred: impl Fn(&ServerHandle) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !pred(handle) {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn served_speculative_streams_match_offline_interleaved_with_plain() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let handle = serve_with_drafter(&a, &ctx.cfg, None);
+    let prompt = [1i32, 4, 20, 3, 5];
+    let seeds = [1u64, 2, 3, 4];
+
+    let mut served = Vec::new();
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for (gi, &seed) in seeds.iter().enumerate() {
+            let handle = &handle;
+            let prompt = &prompt;
+            joins.push(s.spawn(move || {
+                let params = SamplingParams::top_k(8, 0.8, seed, 8 + 3 * gi, None);
+                let mut req = GenerateRequest::new(prompt, params);
+                if gi % 2 == 0 {
+                    // even clients go speculative, odd ones stay plain —
+                    // both kinds share the continuous batch
+                    req = req.drafter(2 + gi);
+                }
+                let rx = handle.submit(req).unwrap().expect("fresh request owns rx");
+                rx.recv().unwrap().unwrap()
+            }));
+        }
+        for j in joins {
+            served.push(j.join().expect("generation client panicked"));
+        }
+    });
+
+    for (gi, (&seed, out)) in seeds.iter().zip(&served).enumerate() {
+        let params = SamplingParams::top_k(8, 0.8, seed, 8 + 3 * gi, None);
+        let offline = generate(&ctx, &model, &prompt, params).unwrap();
+        assert_eq!(
+            out.tokens, offline.tokens,
+            "client {gi} (spec={}) diverged from offline",
+            gi % 2 == 0
+        );
+        assert_eq!(out.finish, offline.finish, "client {gi}");
+    }
+    let snap = handle.metrics.snapshot();
+    assert!(snap.spec_rounds > 0, "no speculative verify round was recorded");
+    assert!(snap.spec_drafted > 0, "no draft token was recorded");
+    let rate = snap.spec_acceptance_rate();
+    assert!((0.0..=1.0).contains(&rate), "acceptance rate {rate} out of range");
+    wait_for(&handle, "blocks to drain", |h| {
+        h.metrics.snapshot().kv_blocks_in_use == 0
+    });
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_speculative_requests_are_answered_at_intake() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+
+    // drafterless server: a speculative request is an intake error, and
+    // the server keeps serving plain traffic afterwards
+    let plain_server = serve(
+        ServeSpec {
+            artifacts_root: a.root.to_string_lossy().into_owned(),
+            model: "qwensim".into(),
+            compress: None,
+            kv_budget_bytes: None,
+            prefill_chunk: None,
+            drafter: None,
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let req = GenerateRequest::new(&[1, 4, 20], SamplingParams::greedy(4, None)).drafter(4);
+    let rx = plain_server.submit(req).unwrap().unwrap();
+    let err = rx.recv().unwrap().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no drafter"),
+        "want a no-drafter intake error, got: {err:#}"
+    );
+    let ok = plain_server.generate(&[1, 4, 20], SamplingParams::greedy(2, None)).unwrap();
+    assert_eq!(ok.tokens.len(), 2);
+    plain_server.shutdown().unwrap();
+
+    // drafter-equipped server: draft_k = 0 is rejected up front
+    let handle = serve_with_drafter(&a, &ctx.cfg, None);
+    let req = GenerateRequest::new(&[1, 4, 20], SamplingParams::greedy(4, None)).drafter(0);
+    let rx = handle.submit(req).unwrap().unwrap();
+    let err = rx.recv().unwrap().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("draft_k >= 1"),
+        "want a draft_k validation error, got: {err:#}"
+    );
+    let ok = handle.generate(&[1, 4, 20], SamplingParams::greedy(2, None)).unwrap();
+    assert_eq!(ok.tokens.len(), 2);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn speculative_preemption_mix_leaks_no_blocks() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let model = ctx.load_original().unwrap();
+    let cfg = ctx.cfg.clone();
+
+    // 8-block pool. A speculative Batch generation reserving the full
+    // context window needs 4 blocks for EACH cache of its full/drafter
+    // pair — it owns the whole pool while active, so an Interactive
+    // arrival (1 block) can only land by preempting it. Preemption drops
+    // both caches; resume re-prefills both and the stream must still
+    // equal the uninterrupted offline run bit for bit.
+    let handle = serve_with_drafter(&a, &cfg, Some(8));
+    let bprompt = [2i32, 5, 21, 7];
+    let bparams = SamplingParams::greedy(1_000_000, None); // t_max-bounded
+    let iprompt = [1i32, 4, 20];
+    let iparams = SamplingParams::greedy(2, None);
+    let boffline = generate(&ctx, &model, &bprompt, bparams.clone()).unwrap();
+    let ioffline = generate(&ctx, &model, &iprompt, iparams.clone()).unwrap();
+
+    let mut rounds = 0usize;
+    while handle.metrics.snapshot().preemptions < 2 {
+        rounds += 1;
+        assert!(rounds <= 50, "no preemption after 50 collision rounds");
+        let rx = handle
+            .submit(
+                GenerateRequest::new(&bprompt, bparams.clone())
+                    .priority(Priority::Batch)
+                    .drafter(4),
+            )
+            .unwrap()
+            .expect("a fresh request owns its receiver");
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut batch_out = None;
+        loop {
+            if let Some(r) = rx.try_recv().unwrap() {
+                batch_out = Some(r); // finished before we could collide
+                break;
+            }
+            if handle.metrics.snapshot().kv_blocks_in_use >= 1 {
+                break; // resident: the pair's 8-block reservation is held
+            }
+            assert!(Instant::now() < deadline, "batch job neither resident nor finished");
+            std::thread::yield_now();
+        }
+        let out = match batch_out {
+            Some(out) => out.unwrap(),
+            None => {
+                let served = handle
+                    .generate_opts(&iprompt, iparams.clone(), Priority::Interactive, None)
+                    .unwrap();
+                assert_eq!(served.tokens, ioffline.tokens, "interactive stream diverged");
+                rx.recv().unwrap().unwrap()
+            }
+        };
+        assert_eq!(
+            out.tokens, boffline.tokens,
+            "preempted/resumed speculative stream diverged (round {rounds})"
+        );
+        assert_eq!(out.finish, boffline.finish);
+    }
+
+    wait_for(&handle, "zero blocks after the speculative preemption mix", |h| {
+        h.metrics.snapshot().kv_blocks_in_use == 0
+    });
+    let snap = handle.metrics.snapshot();
+    handle.shutdown().unwrap();
+    assert!(snap.preemptions >= 2, "mix must have preempted: {}", snap.preemptions);
+    assert!(snap.spec_rounds > 0, "the Batch stream must actually have drafted");
+}
+
+// ---------------------------------------------------------------------------
+// Shared reply channel: speculative and plain complete in executor order
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interleaved_spec_and_plain_respect_priority_order() {
+    let a = arts();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let cfg = ctx.cfg.clone();
+    drop(ctx);
+    let handle = serve_with_drafter(&a, &cfg, None);
+    let tx = handle.sender();
+    let (reply, rx) = reply_channel();
+    let prompt = [1i32, 4, 20, 3];
+    // two speculative Batch generations first, then a plain Interactive
+    // one — the Interactive request must still complete first even though
+    // the Batch pair decodes through the speculative step path
+    for max_new in [6usize, 7] {
+        tx.send(Request::Generate(
+            GenerateRequest::new(&prompt, SamplingParams::greedy(max_new, None))
+                .priority(Priority::Batch)
+                .drafter(3)
+                .reply_to(reply.clone()),
+        ))
+        .unwrap();
+    }
+    tx.send(Request::Generate(
+        GenerateRequest::new(&prompt, SamplingParams::greedy(2, None))
+            .priority(Priority::Interactive)
+            .reply_to(reply.clone()),
+    ))
+    .unwrap();
+    drop(reply);
+    let order: Vec<usize> = (0..3).map(|_| rx.recv().unwrap().unwrap().tokens.len()).collect();
+    assert_eq!(
+        order,
+        vec![2, 6, 7],
+        "Interactive must complete before speculative Batch work (FIFO within class)"
+    );
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Gate the speculative-decoding contracts in CI (backend-e2e job):
+#
+#  1. `cargo test --test spec_decode` — speculative output bit-identical
+#     to the plain decode loop across layouts (full / masked / compact /
+#     shared-expert), flat + paged caches, k in {1,2,4,8}, greedy and
+#     seeded sampling; multi-position verify vs sequential decodes at 1/2/4
+#     threads; rollback restores a byte-fresh prefix; the serving
+#     interleave, intake-validation, preemption-leak and priority tests.
+#  2. BENCH_generate.json must contain the `spec_decode_sweep` section,
+#     every row must report `"exact": true` (speculation may never change
+#     the token stream), and at least one k >= 2 row must have accepted
+#     drafts (acceptance_rate > 0) — a drafter that never lands a token
+#     means the compact variant diverged from the verifier entirely.
+#
+# With no argument the JSON is probed in rust/ then . (cargo runs bench
+# binaries with the package root as working directory).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> speculative decoding test suite (exact-output pinning, rollback, serving)"
+cargo test --release --test spec_decode -q
+
+f="${1:-}"
+if [ -z "$f" ]; then
+  for cand in rust/BENCH_generate.json BENCH_generate.json; do
+    [ -f "$cand" ] && { f="$cand"; break; }
+  done
+fi
+[ -n "$f" ] && [ -f "$f" ] || { echo "check_spec_decode: BENCH_generate.json not found (looked in rust/ and .)"; exit 1; }
+
+grep -q '"spec_decode_sweep"' "$f" \
+  || { echo "check_spec_decode: $f has no spec_decode_sweep section"; exit 1; }
+
+rows=$(grep -c '"draft_k":' "$f" || true)
+[ "$rows" -ge 1 ] || { echo "check_spec_decode: spec_decode_sweep has no rows"; exit 1; }
+
+if grep '"draft_k":' "$f" | grep -q '"exact": false'; then
+  echo "check_spec_decode: a spec_decode_sweep row reports exact=false — speculative output diverged from plain decode"
+  exit 1
+fi
+
+# at least one k >= 2 row must land drafts: acceptance_rate strictly > 0
+accepted_any=$(grep '"draft_k":' "$f" \
+  | grep -v '"draft_k": 1,' \
+  | sed -n 's/.*"acceptance_rate": \([0-9.]*\).*/\1/p' \
+  | awk 'BEGIN { any = 0 } { if ($1 > 0) any = 1 } END { print any }')
+[ "$accepted_any" = "1" ] \
+  || { echo "check_spec_decode: no k >= 2 row accepted any drafts — compact drafter never agrees with the verifier"; exit 1; }
+
+echo "check_spec_decode: OK — all rows exact, drafter lands tokens ($f)"
