@@ -21,7 +21,7 @@ use hc_smoe::backend::native::{forward_calib_with, forward_logits_with, NativeBa
 use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::bench_support::{
     self, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, KvCacheBenchRow, Lab,
-    ParallelBenchRow, SchedBenchRow, SpecDecodeRow,
+    ParallelBenchRow, QuantGemmRow, SchedBenchRow, SpecDecodeRow,
 };
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
 use hc_smoe::config::ModelCfg;
@@ -32,7 +32,9 @@ use hc_smoe::serving::{serve, BatcherConfig, Priority, ServeSpec};
 use hc_smoe::similarity::{
     distance_matrix_serial, distance_matrix_with, features, Distance, Metric,
 };
-use hc_smoe::tensor::{matmul, matmul_blocked_with};
+use hc_smoe::tensor::{
+    matmul, matmul_blocked_with, matmul_q8_with, matmul_reference, quantize_rows_i8,
+};
 use hc_smoe::util::{bench_median, Rng};
 use hc_smoe::weights::Weights;
 
@@ -208,6 +210,58 @@ fn backend_sweep(threads: usize, table: &mut Table) -> Vec<BackendBenchRow> {
         serial_ms: serial.median_s * 1e3,
         parallel_ms: par.median_s * 1e3,
     });
+    rows
+}
+
+/// GEMM-kernel comparison at expert-projection shapes → the
+/// `quant_gemm_sweep` section of BENCH_backend.json. One expert-shaped
+/// weight panel `[k, n]` is multiplied by a token block `[m, k]` at the
+/// decode shape (m = 1: the latency-bound serving step) and the prefill
+/// shape (m = 64: one scheduler token block), through three kernels:
+/// the scalar reference loop (`matmul_reference`, the pre-tiling GEMM
+/// and still the parity oracle), the cache-blocked register-tiled kernel
+/// (`matmul_blocked_with`, bit-identical outputs) and the int8
+/// folded-scale kernel (`matmul_q8_with` on per-row-quantized weights —
+/// 4x smaller weight stream). All three run single-threaded so the rows
+/// isolate kernel quality from threading; `scripts/check_kernels.sh`
+/// gates tiled ≥ scalar and int8 ≥ tiled on every row.
+fn quant_gemm_sweep(table: &mut Table) -> Vec<QuantGemmRow> {
+    let smoke = bench_support::smoke();
+    let (warmup, iters) = if smoke { (0, 1) } else { (3, 15) };
+    // production-leaning expert projection: d=256 hidden, m=1024 FFN
+    let (k, n) = (256usize, 1024usize);
+    let mut rng = Rng::new(0x6E88);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.02).collect();
+    let (q, scales) = quantize_rows_i8(&w, k, n);
+    let mut rows = Vec::new();
+    for (path, m) in [("decode_gemm", 1usize), ("prefill_gemm", 64)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let scalar = bench_median(warmup, iters, || {
+            std::hint::black_box(matmul_reference(&a, &w, m, k, n));
+        });
+        let tiled = bench_median(warmup, iters, || {
+            std::hint::black_box(matmul_blocked_with(&a, &w, m, k, n, 1));
+        });
+        let int8 = bench_median(warmup, iters, || {
+            std::hint::black_box(matmul_q8_with(&a, &q, &scales, m, k, n, 1));
+        });
+        let row = QuantGemmRow {
+            path: path.into(),
+            m,
+            k,
+            n,
+            scalar_ms: scalar.median_s * 1e3,
+            tiled_ms: tiled.median_s * 1e3,
+            int8_ms: int8.median_s * 1e3,
+        };
+        table.row(vec![
+            format!("{path} {m}x{k}x{n}"),
+            format!("{:.4}", row.scalar_ms),
+            format!("{:.4}", row.tiled_ms),
+            format!("{:.4} ({:.2}x / {:.2}x)", row.int8_ms, row.tiled_speedup(), row.int8_speedup()),
+        ]);
+        rows.push(row);
+    }
     rows
 }
 
@@ -890,14 +944,24 @@ fn main() -> anyhow::Result<()> {
         let brows = backend_sweep(threads, &mut btable);
         btable.print();
         btable.append_to("bench_results.md")?;
+        let mut qtable = Table::new(
+            "GEMM kernels: scalar reference vs cache-blocked vs int8 (1 thread)",
+            &["Shape", "scalar ms", "tiled ms", "int8 ms (speedups)"],
+        );
+        let qrows = quant_gemm_sweep(&mut qtable);
+        qtable.print();
+        qtable.append_to("bench_results.md")?;
         let backend_measurement = if bench_support::smoke() {
             "SMOKE MODE: single sample, harness check only — not a perf measurement"
         } else {
-            "median of 9 (release)"
+            "median of 9 (release); quant_gemm_sweep median of 15"
         };
         let backend_note = format!(
             "{backend_measurement}; host exposes {cores} cpus; synthesized checkpoints \
-             (b=4, t=64), native backend forward/calib"
+             (b=4, t=64), native backend forward/calib; quant_gemm_sweep times one \
+             256x1024 expert projection at decode (m=1) and prefill (m=64) shapes, \
+             single-threaded — tiled is bit-identical to scalar, int8 streams 4x \
+             fewer weight bytes"
         );
         bench_support::write_backend_json(
             BACKEND_JSON,
@@ -905,6 +969,7 @@ fn main() -> anyhow::Result<()> {
             "rust/benches/perf_microbench.rs",
             &backend_note,
             &brows,
+            &qrows,
         )?;
         println!("wrote {BACKEND_JSON}");
     }

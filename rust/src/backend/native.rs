@@ -67,8 +67,8 @@ use anyhow::{anyhow, ensure, Result};
 use crate::config::ModelCfg;
 use crate::kvpool::{KvPool, PagedSeq, PoolHandle};
 use crate::parallel;
-use crate::tensor::{dot, gather_rows, matmul_blocked_with, Tensor};
-use crate::weights::Weights;
+use crate::tensor::{dot, gather_rows, matmul_blocked_with, matmul_q8_with, Tensor};
+use crate::weights::{QuantTensor, Weights};
 
 use super::{
     downcast_state, Backend, CacheMode, CacheSnapshot, KvCache, ModelState, PrefillOpts,
@@ -252,14 +252,24 @@ fn seq_cache_mut<'a>(c: &'a mut dyn KvCache, backend: &str) -> Result<SeqCacheMu
 }
 
 /// Sharing-map fingerprint of one executable variant: the router mask, the
-/// optional remap table and the physical slot count — everything besides
-/// the weights that can change a position's K/V. Two variants of the same
-/// pool never alias blocks unless all three match (pools are additionally
-/// documented as per-model, so weights are fixed per pool).
-fn variant_fingerprint(mask: &[f32], remap: Option<&[i32]>, n_slots: usize) -> u64 {
+/// optional remap table, the physical slot count and whether the expert
+/// weights are int8-quantized — everything besides the weights that can
+/// change a position's K/V. The quantization flag matters because a
+/// quantized variant produces different hidden states (hence different
+/// K/V rows) than its f32 source under the *same* mask/remap; without the
+/// marker the two could alias shared prefix blocks. Two variants of the
+/// same pool never alias blocks unless all four match (pools are
+/// additionally documented as per-model, so weights are fixed per pool).
+fn variant_fingerprint(
+    mask: &[f32],
+    remap: Option<&[i32]>,
+    n_slots: usize,
+    quantized: bool,
+) -> u64 {
     use std::hash::{Hash, Hasher};
     let mut h = std::collections::hash_map::DefaultHasher::new();
     n_slots.hash(&mut h);
+    quantized.hash(&mut h);
     for &x in mask {
         x.to_bits().hash(&mut h);
     }
@@ -1115,7 +1125,7 @@ impl Backend for NativeBackend {
                     .counts
                     .iter()
                     .all(|layer| layer.iter().all(|&n| n <= parts.cap));
-                let fp = variant_fingerprint(mask, remap, m.n_slots);
+                let fp = variant_fingerprint(mask, remap, m.n_slots, m.weights.is_quantized());
                 seq.fill_from_rows(ids, fp, drop_free, &parts.k, &parts.v)?;
                 Ok((
                     Some(Box::new(NativePagedKvCache { seq, counts: parts.counts })),
@@ -1231,6 +1241,26 @@ fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec
         1
     };
     matmul_blocked_with(a, b, m, k, n, t)
+}
+
+/// [`mm`] for an int8 per-row-quantized B — same auto-gate policy, routed
+/// through [`crate::tensor::matmul_q8_with`] (bit-identical at any thread
+/// count).
+fn mm_q8(
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let t = if m * k * n >= parallel::PAR_AUTO_WORK {
+        threads
+    } else {
+        1
+    };
+    matmul_q8_with(a, q, scales, m, k, n, t)
 }
 
 /// `x * sigmoid(x)` (`jax.nn.silu`).
@@ -1519,6 +1549,49 @@ fn swiglu_block(
     (out, if want_act { Some(act) } else { None })
 }
 
+/// [`swiglu_block`] over one int8-quantized expert triple: every GEMM runs
+/// the folded-scale quantized kernel; the silu/⊙ elementwise math is
+/// unchanged f32. No activation capture — calibration always runs on the
+/// f32 source (see [`forward_calib_with`]).
+#[allow(clippy::too_many_arguments)]
+fn swiglu_block_q8(
+    x: &[f32],
+    qg: (&[i8], &[f32]),
+    qu: (&[i8], &[f32]),
+    qd: (&[i8], &[f32]),
+    c: usize,
+    d: usize,
+    m: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let g = mm_q8(x, qg.0, qg.1, c, d, m, threads);
+    let u = mm_q8(x, qu.0, qu.1, c, d, m, threads);
+    let mut act = vec![0f32; c * m];
+    for i in 0..c * m {
+        act[i] = silu(g[i]) * u[i];
+    }
+    mm_q8(&act, qd.0, qd.1, c, m, d, threads)
+}
+
+/// The int8 expert triple of `layer`, present iff the variant carries
+/// quantized expert weights. A partially-quantized triple (some of
+/// wg/wu/wd quantized, some f32) is a corrupt variant and errors.
+fn quant_experts<'a>(
+    w: &'a Weights,
+    layer: usize,
+) -> Result<Option<(&'a QuantTensor, &'a QuantTensor, &'a QuantTensor)>> {
+    let wg = w.quant_opt(&Weights::layer_key(layer, "exp.wg"));
+    let wu = w.quant_opt(&Weights::layer_key(layer, "exp.wu"));
+    let wd = w.quant_opt(&Weights::layer_key(layer, "exp.wd"));
+    match (wg, wu, wd) {
+        (Some(g), Some(u), Some(dn)) => Ok(Some((g, u, dn))),
+        (None, None, None) => Ok(None),
+        _ => Err(anyhow!(
+            "layer {layer}: partially quantized expert triple (wg/wu/wd must all be int8 or all f32)"
+        )),
+    }
+}
+
 /// One SMoE FFN block over `tok` flattened tokens: router → top-k →
 /// capacity dispatch → per-expert SwiGLU → gated combine (+ the shared
 /// expert for `dssim`). Returns `y` with `y.len() == tok * d`.
@@ -1601,6 +1674,42 @@ fn moe_execute(
     threads: usize,
 ) -> Result<Vec<f32>> {
     let d = cfg.d;
+    // Per-variant kernel selection: a quantized variant carries its expert
+    // triples in the int8 section, and every caller (scoring prefill,
+    // batched decode, verify, chunked prefill) flows through this single
+    // dispatch point. Router/attention/shared-expert/head stay f32.
+    if let Some((qwg, qwu, qwd)) = quant_experts(w, layer)? {
+        ensure!(qwg.shape()[0] == n_slots, "expert tensors must have {n_slots} slots");
+        let m = qwg.shape()[2];
+        let mut y = vec![0f32; tok * d];
+        for (e, assigned) in per_slot.iter().enumerate() {
+            if assigned.is_empty() {
+                continue;
+            }
+            let c = assigned.len();
+            let rows: Vec<usize> = assigned.iter().map(|&(ti, _)| ti).collect();
+            let x = gather_rows(hf, d, &rows);
+            let out = swiglu_block_q8(
+                &x,
+                qwg.index_slices(e),
+                qwu.index_slices(e),
+                qwd.index_slices(e),
+                c,
+                d,
+                m,
+                threads,
+            );
+            for (ri, &(ti, p)) in assigned.iter().enumerate() {
+                for j in 0..d {
+                    y[ti * d + j] += p * out[ri * d + j];
+                }
+            }
+        }
+        if cfg.shared {
+            add_shared_expert(cfg, w, layer, hf, tok, threads, &mut y)?;
+        }
+        return Ok(y);
+    }
     let wg = layer_tensor(w, layer, "exp.wg")?;
     let wu = layer_tensor(w, layer, "exp.wu")?;
     let wd = layer_tensor(w, layer, "exp.wd")?;
@@ -1891,6 +2000,11 @@ pub fn forward_calib_with(
     threads: usize,
 ) -> Result<Vec<Tensor>> {
     ensure!(ids.len() == b * t, "ids must be exactly [{b}, {t}]");
+    ensure!(
+        !w.is_quantized(),
+        "calibration needs dense per-expert f32 activations; this variant's expert \
+         weights are int8-quantized — calibrate on the f32 source and re-quantize"
+    );
     let tok = b * t;
     ensure!(
         t_sub >= 1 && t_sub <= tok && t_act >= 1 && t_act <= t_sub,

@@ -189,16 +189,69 @@ impl BackendBenchRow {
     }
 }
 
+/// One GEMM-kernel comparison row for the `quant_gemm_sweep` section of
+/// `BENCH_backend.json`: one (m, k, n) matmul shape — decode (`m = 1`)
+/// and prefill (`m` = token block) over expert-shaped weight panels —
+/// timed through the scalar reference loop
+/// ([`crate::tensor::matmul_reference`]), the cache-blocked tiled kernel
+/// ([`crate::tensor::matmul_blocked_with`]) and the int8 folded-scale
+/// kernel ([`crate::tensor::matmul_q8_with`]). The tiled and scalar
+/// kernels produce bit-identical outputs, so the row isolates pure
+/// kernel wall-clock; CI gates tiled ≥ scalar and int8 ≥ tiled
+/// (`scripts/check_kernels.sh`).
+#[derive(Debug, Clone)]
+pub struct QuantGemmRow {
+    /// Measured shape label (`decode_gemm` or `prefill_gemm`).
+    pub path: String,
+    /// Output rows (tokens per call).
+    pub m: usize,
+    /// Reduction length.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Median wall-clock of the scalar reference kernel (ms).
+    pub scalar_ms: f64,
+    /// Median wall-clock of the cache-blocked f32 kernel (ms).
+    pub tiled_ms: f64,
+    /// Median wall-clock of the int8 folded-scale kernel (ms).
+    pub int8_ms: f64,
+}
+
+impl QuantGemmRow {
+    /// Scalar-over-tiled wall-clock ratio (> 1 means tiling wins).
+    pub fn tiled_speedup(&self) -> f64 {
+        if self.tiled_ms > 0.0 {
+            self.scalar_ms / self.tiled_ms
+        } else {
+            0.0
+        }
+    }
+
+    /// Scalar-over-int8 wall-clock ratio (> 1 means int8 beats scalar).
+    pub fn int8_speedup(&self) -> f64 {
+        if self.int8_ms > 0.0 {
+            self.scalar_ms / self.int8_ms
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Write the machine-readable native-backend throughput report
 /// (`BENCH_backend.json`). Hand-rolled JSON like
 /// [`write_parallel_json`]; the schema is stable — later PRs append rows
-/// with new `path` names rather than reshaping the file.
+/// with new `path` names rather than reshaping the file. The
+/// `quant_gemm_sweep` section compares the scalar reference GEMM against
+/// the cache-blocked tiled kernel and the int8 folded-scale kernel at
+/// decode and prefill shapes (CI asserts tiled ≥ scalar and int8 ≥ tiled
+/// via `scripts/check_kernels.sh`).
 pub fn write_backend_json(
     path: &str,
     threads: usize,
     generator: &str,
     note: &str,
     rows: &[BackendBenchRow],
+    quant_rows: &[QuantGemmRow],
 ) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -221,6 +274,25 @@ pub fn write_backend_json(
             r.serial_tok_s(),
             r.parallel_tok_s(),
             r.speedup()
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"quant_gemm_sweep\": [\n");
+    for (i, r) in quant_rows.iter().enumerate() {
+        let comma = if i + 1 < quant_rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"path\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+             \"scalar_ms\": {:.4}, \"tiled_ms\": {:.4}, \"int8_ms\": {:.4}, \
+             \"tiled_speedup\": {:.3}, \"int8_speedup\": {:.3}}}{comma}\n",
+            json_escape(&r.path),
+            r.m,
+            r.k,
+            r.n,
+            r.scalar_ms,
+            r.tiled_ms,
+            r.int8_ms,
+            r.tiled_speedup(),
+            r.int8_speedup()
         ));
     }
     out.push_str("  ]\n}\n");

@@ -21,7 +21,7 @@ use crate::merging::{merge_cluster, MergeStrategy};
 use crate::model::{LoadedModel, ModelContext};
 use crate::pruning::{f_prune, o_prune, s_prune};
 use crate::similarity::{distance_matrix, features, Distance, Metric};
-use crate::weights::Weights;
+use crate::weights::{QuantTensor, Weights};
 
 /// Every compression method of the paper's evaluation.
 #[derive(Debug, Clone, PartialEq)]
@@ -379,6 +379,28 @@ impl CompressedModel {
         ctx.load_model(&self.weights, self.mask.clone(), &self.label)
     }
 
+    /// The post-merge `quantize` stage ("Merge, Then Compress"): the same
+    /// compressed model with every expert triple converted to per-row-
+    /// scaled int8. Router mask and plan are unchanged; the label gains a
+    /// `+int8` suffix so eval tables and caches keep the variants apart.
+    pub fn quantize(&self) -> Result<CompressedModel> {
+        Ok(CompressedModel {
+            weights: quantize_expert_weights(&self.weights)?,
+            mask: self.mask.clone(),
+            label: format!("{}+int8", self.label),
+            plan: self.plan.clone(),
+        })
+    }
+
+    /// [`Self::to_compact`] followed by expert quantization: the true
+    /// r-expert compact weight set with int8 expert triples, plus the
+    /// router remap. This is the serving deployment form of a merged +
+    /// compressed variant (smallest bytes, fastest expert GEMMs).
+    pub fn to_compact_quantized(&self, ctx: &ModelContext) -> Result<(Weights, Vec<i32>)> {
+        let (compact, remap) = self.to_compact(ctx)?;
+        Ok((quantize_expert_weights(&compact)?, remap))
+    }
+
     /// Export the true r-expert compact weights + router remap (uniform
     /// merge plans only) for the `lm_logits_*_r{r}` executables.
     pub fn to_compact(&self, ctx: &ModelContext) -> Result<(Weights, Vec<i32>)> {
@@ -405,6 +427,27 @@ impl CompressedModel {
         let compact = self.weights.to_compact(cfg, &keep)?;
         Ok((compact, remap))
     }
+}
+
+/// Post-merge int8 weight quantization ("Merge, Then Compress", arXiv
+/// 2310.01334: HC-style merging is the gateway to further compression):
+/// every layer's `exp.wg/wu/wd` triple moves into the per-row-scaled int8
+/// section, while router/attention/norm/shared tensors stay f32. The
+/// result serializes as HCWT v2 and the native backend dispatches the
+/// quantized SwiGLU kernel for it per layer.
+pub fn quantize_expert_weights(w: &Weights) -> Result<Weights> {
+    ensure!(!w.is_quantized(), "weights already carry a quantized section");
+    let n_layers = w.n_layers();
+    ensure!(n_layers > 0, "no layer tensors to quantize");
+    let mut out = w.clone();
+    for l in 0..n_layers {
+        for suffix in ["exp.wg", "exp.wu", "exp.wd"] {
+            let key = format!("layer{l:02}.{suffix}");
+            let qt = QuantTensor::from_f32(out.get(&key)?)?;
+            out.insert_quant(key, qt);
+        }
+    }
+    Ok(out)
 }
 
 /// Parameter count after compression (expert slots actually retained).

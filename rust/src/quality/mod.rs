@@ -1,12 +1,15 @@
 //! Cluster-quality analysis (Appendix D, Table 23): output fidelity of the
 //! compressed model (L2 error / cosine similarity of last-layer logits vs
-//! the original) and intrinsic clustering criteria (Silhouette score and
-//! Dunn index under Euclidean and cosine distances).
+//! the original), the post-merge int8 quantization quality delta, and
+//! intrinsic clustering criteria (Silhouette score and Dunn index under
+//! Euclidean and cosine distances).
 
 use anyhow::Result;
 
 use crate::data::TokenStream;
+use crate::eval::Evaluator;
 use crate::model::{LoadedModel, ModelContext};
+use crate::pipeline::CompressedModel;
 use crate::similarity::Distance;
 use crate::tensor::{cosine_sim, l2_dist};
 
@@ -36,6 +39,30 @@ pub fn output_fidelity(
     }
     anyhow::ensure!(rows > 0, "stream too short");
     Ok((l2, cos / rows as f64))
+}
+
+/// Eval-harness quality delta of post-merge int8 quantization: loads the
+/// compressed model and its int8 sibling ([`CompressedModel::quantize`]),
+/// scores both on the named benchmark tasks, and returns
+/// `(f32_accuracy, int8_accuracy)` per task in input order. Acceptance
+/// bounds live with the caller — the serving test suite pins the mean
+/// `|Δ|` within a named tolerance.
+pub fn quantization_delta(
+    ctx: &ModelContext,
+    cm: &CompressedModel,
+    tasks: &[&str],
+) -> Result<Vec<(f64, f64)>> {
+    let f32_model = cm.load(ctx)?;
+    let q_model = cm.quantize()?.load(ctx)?;
+    let ev = Evaluator::new(ctx)?;
+    tasks
+        .iter()
+        .map(|task| {
+            let full = ev.accuracy(&f32_model, task)?;
+            let quant = ev.accuracy(&q_model, task)?;
+            Ok((full, quant))
+        })
+        .collect()
 }
 
 fn dist(a: &[f32], b: &[f32], d: Distance) -> f32 {

@@ -1,7 +1,9 @@
 //! Dense f32 tensor with the small linear-algebra surface the compression
-//! algorithms need (no BLAS offline; sizes here are tiny — n_experts ≤ 64,
-//! d/m ≤ a few hundred — so simple loops suffice, with a blocked matmul for
-//! the ZipIt/Fix-Dom correlation path).
+//! algorithms need, plus the GEMM core every backend hot path bottoms out
+//! in. The GEMM is a cache-blocked, autovectorization-friendly microkernel
+//! ([`GEMM_MR`]×[`GEMM_NR`] register tiles) pinned bit-identical to the
+//! scalar [`matmul_reference`] expression; an int8 per-row-quantized
+//! variant ([`matmul_q8_with`]) serves post-merge compressed experts.
 
 use std::fmt;
 
@@ -190,51 +192,153 @@ pub fn gather_rows(src: &[f32], row_len: usize, rows: &[usize]) -> Vec<f32> {
     out
 }
 
-/// C[M,N] = A[M,K] @ B[K,N], simple ikj loop (cache-friendly) — the serial
-/// reference for [`matmul_blocked_with`].
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// C[M,N] = A[M,K] @ B[K,N] — the canonical scalar expression. Per output
+/// element, contributions accumulate in ascending kk; this single reduction
+/// order is the contract every fast path here reproduces bit-for-bit, which
+/// is why the tiled/parallel kernels can be pinned against this function.
+/// The `av == 0.0` skip adds only `±0.0` terms when taken, and (for finite
+/// inputs, accumulating from `+0.0`) such terms never change the
+/// accumulator's bits — so skipping is bit-equivalent to not skipping.
+pub fn matmul_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut c = vec![0.0f32; m * n];
     for i in 0..m {
-        matmul_row(&a[i * k..(i + 1) * k], b, k, n, 0..n, &mut c[i * n..(i + 1) * n]);
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = arow[kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
     }
     c
 }
 
-/// One output row over a column block: per element, contributions accumulate
-/// in ascending kk — the single reduction order every matmul variant here
-/// uses, which is what makes blocked/parallel results bit-identical.
+/// C[M,N] = A[M,K] @ B[K,N], serial tiled kernel — bit-identical to
+/// [`matmul_reference`] for finite inputs (same ascending-kk reduction
+/// order per element; see the microkernel notes on [`GEMM_MR`]).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_blocked_with(a, b, m, k, n, 1)
+}
+
+/// Register-tile height: each microkernel invocation produces `GEMM_MR`
+/// rows × [`GEMM_NR`] columns of C in local accumulators. The kk loop is
+/// the outer loop of the kernel and runs ascending over the full reduction
+/// (no k-blocking), so every C element is the reference's
+/// `((0 + t0) + t1) + …` left fold exactly — tiles only reorder *which*
+/// elements are computed when, never the reduction within one element,
+/// keeping the tiled result bit-identical to [`matmul_reference`].
+const GEMM_MR: usize = 4;
+
+/// Register-tile width in f32 lanes: 16 = one 64-byte cache line, two AVX2
+/// vectors or one AVX-512 vector. The inner `cc` loop over a contiguous
+/// B panel is a fixed-trip-count loop LLVM unrolls and autovectorizes.
+const GEMM_NR: usize = 16;
+
+/// Full [`GEMM_MR`]×[`GEMM_NR`] microkernel: C tile rows start at local
+/// row `r0` of `crows` (a chunk whose first row is global row `i`), column
+/// `j`. Accumulators live in registers; B is read in contiguous
+/// [`GEMM_NR`]-lane panels.
 #[inline]
-fn matmul_row(
-    arow: &[f32],
+#[allow(clippy::too_many_arguments)]
+fn gemm_kernel_full(
+    a: &[f32],
     b: &[f32],
     k: usize,
     n: usize,
-    jrange: std::ops::Range<usize>,
-    crow: &mut [f32],
+    i: usize,
+    j: usize,
+    r0: usize,
+    crows: &mut [f32],
 ) {
+    let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+    let arows: [&[f32]; GEMM_MR] = [
+        &a[i * k..(i + 1) * k],
+        &a[(i + 1) * k..(i + 2) * k],
+        &a[(i + 2) * k..(i + 3) * k],
+        &a[(i + 3) * k..(i + 4) * k],
+    ];
     for kk in 0..k {
-        let av = arow[kk];
-        if av == 0.0 {
-            continue;
+        let bp = &b[kk * n + j..kk * n + j + GEMM_NR];
+        for (accr, arow) in acc.iter_mut().zip(arows) {
+            let av = arow[kk];
+            for (slot, bv) in accr.iter_mut().zip(bp) {
+                *slot += av * bv;
+            }
         }
-        let brow = &b[kk * n..(kk + 1) * n];
-        for j in jrange.clone() {
-            crow[j] += av * brow[j];
-        }
+    }
+    for (rr, accr) in acc.iter().enumerate() {
+        crows[(r0 + rr) * n + j..(r0 + rr) * n + j + GEMM_NR].copy_from_slice(accr);
     }
 }
 
-/// Column-block width for the blocked matmul: 128 f32 = two 256-byte rows,
-/// small enough that a B-panel stays cache-resident across the kk sweep.
-const MATMUL_J_BLOCK: usize = 128;
+/// Edge microkernel for partial tiles (`mr < GEMM_MR` and/or
+/// `nr < GEMM_NR`): same loop structure and the same ascending-kk
+/// accumulation, just with runtime trip counts.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn gemm_kernel_edge(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    i: usize,
+    j: usize,
+    mr: usize,
+    nr: usize,
+    r0: usize,
+    crows: &mut [f32],
+) {
+    let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+    for kk in 0..k {
+        let bp = &b[kk * n + j..kk * n + j + nr];
+        for (rr, accr) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i + rr) * k + kk];
+            for (slot, bv) in accr.iter_mut().zip(bp) {
+                *slot += av * bv;
+            }
+        }
+    }
+    for (rr, accr) in acc.iter().enumerate().take(mr) {
+        crows[(r0 + rr) * n + j..(r0 + rr) * n + j + nr].copy_from_slice(&accr[..nr]);
+    }
+}
 
-/// Blocked + row-parallel matmul: output rows are partitioned across scoped
-/// threads (disjoint `&mut` row chunks), and each row sweeps B in
-/// [`MATMUL_J_BLOCK`]-wide column panels. Per output element the
-/// accumulation order is the serial kernel's ascending-kk order, so the
-/// result is bit-identical to [`matmul`] at any thread count.
+/// Tile a chunk of output rows (`crows`, starting at global row `i0`)
+/// through the register microkernels. The tile schedule is deterministic
+/// and pinned: row tiles ascending by [`GEMM_MR`], column tiles ascending
+/// by [`GEMM_NR`], edges last in each dimension.
+fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, crows: &mut [f32]) {
+    let rows = crows.len() / n;
+    let mut r = 0;
+    while r < rows {
+        let mr = GEMM_MR.min(rows - r);
+        let mut j = 0;
+        while j < n {
+            let nr = GEMM_NR.min(n - j);
+            if mr == GEMM_MR && nr == GEMM_NR {
+                gemm_kernel_full(a, b, k, n, i0 + r, j, r, crows);
+            } else {
+                gemm_kernel_edge(a, b, k, n, i0 + r, j, mr, nr, r, crows);
+            }
+            j += nr;
+        }
+        r += mr;
+    }
+}
+
+/// Tiled + row-parallel matmul: output rows are partitioned across scoped
+/// threads (disjoint `&mut` row chunks), and each chunk runs the
+/// [`GEMM_MR`]×[`GEMM_NR`] register-tiled microkernel sweep. Chunk
+/// boundaries and tile order never change any element's ascending-kk
+/// reduction, so the result is bit-identical to [`matmul_reference`] (and
+/// to itself) at any thread count for finite inputs.
 pub fn matmul_blocked_with(
     a: &[f32],
     b: &[f32],
@@ -249,16 +353,171 @@ pub fn matmul_blocked_with(
     if n == 0 || m == 0 {
         return c;
     }
-    let row_block = |i0: usize, crows: &mut [f32]| {
-        for (off, crow) in crows.chunks_mut(n).enumerate() {
-            let i = i0 + off;
-            let arow = &a[i * k..(i + 1) * k];
-            let mut j0 = 0;
-            while j0 < n {
-                let j1 = (j0 + MATMUL_J_BLOCK).min(n);
-                matmul_row(arow, b, k, n, j0..j1, crow);
-                j0 = j1;
+    let row_block = |i0: usize, crows: &mut [f32]| gemm_rows(a, b, k, n, i0, crows);
+    parallel::par_row_chunks_mut(threads, &mut c, n, row_block);
+    c
+}
+
+// --------------------------------------------------------------------------
+// Int8 per-row quantization + quantized GEMM (post-merge expert weights)
+// --------------------------------------------------------------------------
+
+/// Symmetric int8 quantization range: `q ∈ [-127, 127]` (−128 unused so
+/// the scale maps `±maxabs` exactly onto `±QUANT_I8_MAX`).
+pub const QUANT_I8_MAX: f32 = 127.0;
+
+/// Per-row symmetric int8 quantization of a row-major `[rows, cols]`
+/// matrix: `scale[r] = maxabs(row r) / 127`, `q = round(w / scale)`
+/// clamped to `±127`. All-zero rows get scale 1.0 (dequantizes to exact
+/// zeros). Deterministic: re-quantizing the same input yields identical
+/// bytes and scales. Returns `(q, scales)` with `scales.len() == rows`.
+pub fn quantize_rows_i8(w: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), rows * cols);
+    let mut q = vec![0i8; rows * cols];
+    let mut scales = vec![1.0f32; rows];
+    for r in 0..rows {
+        let src = &w[r * cols..(r + 1) * cols];
+        let maxabs = src.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        if maxabs == 0.0 {
+            continue; // q stays 0, scale stays 1.0
+        }
+        let scale = maxabs / QUANT_I8_MAX;
+        scales[r] = scale;
+        let dst = &mut q[r * cols..(r + 1) * cols];
+        for (d, x) in dst.iter_mut().zip(src) {
+            *d = (x / scale).round().clamp(-QUANT_I8_MAX, QUANT_I8_MAX) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Inverse of [`quantize_rows_i8`]: `w[r,c] = q[r,c] · scale[r]`. The
+/// round-trip error per element is bounded by `scale[r] / 2`.
+pub fn dequantize_rows_i8(q: &[i8], scales: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(q.len(), rows * cols);
+    assert_eq!(scales.len(), rows);
+    let mut w = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let s = scales[r];
+        for (d, &x) in w[r * cols..(r + 1) * cols].iter_mut().zip(&q[r * cols..(r + 1) * cols]) {
+            *d = x as f32 * s;
+        }
+    }
+    w
+}
+
+/// Full-tile int8 microkernel: B is `[k, n]` int8 with one f32 scale per
+/// B row (= per reduction index), folded into the broadcast A value so the
+/// inner loop is a pure i8→f32 convert + multiply-add over a contiguous
+/// panel. `y[i,j] = Σ_kk (a[i,kk]·scales[kk]) · q[kk,j]` in ascending kk —
+/// a deterministic, pinned reduction order (bit-identical at any thread
+/// count), though *not* bit-equal to dequantize-then-f32-GEMM, which
+/// associates the scale with B instead.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn gemm_q8_kernel_full(
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    k: usize,
+    n: usize,
+    i: usize,
+    j: usize,
+    r0: usize,
+    crows: &mut [f32],
+) {
+    let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+    let arows: [&[f32]; GEMM_MR] = [
+        &a[i * k..(i + 1) * k],
+        &a[(i + 1) * k..(i + 2) * k],
+        &a[(i + 2) * k..(i + 3) * k],
+        &a[(i + 3) * k..(i + 4) * k],
+    ];
+    for kk in 0..k {
+        let qp = &q[kk * n + j..kk * n + j + GEMM_NR];
+        let s = scales[kk];
+        for (accr, arow) in acc.iter_mut().zip(arows) {
+            let av = arow[kk] * s;
+            for (slot, &qv) in accr.iter_mut().zip(qp) {
+                *slot += av * qv as f32;
             }
+        }
+    }
+    for (rr, accr) in acc.iter().enumerate() {
+        crows[(r0 + rr) * n + j..(r0 + rr) * n + j + GEMM_NR].copy_from_slice(accr);
+    }
+}
+
+/// Edge int8 microkernel (partial tiles) — same reduction order as
+/// [`gemm_q8_kernel_full`] with runtime trip counts.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn gemm_q8_kernel_edge(
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    k: usize,
+    n: usize,
+    i: usize,
+    j: usize,
+    mr: usize,
+    nr: usize,
+    r0: usize,
+    crows: &mut [f32],
+) {
+    let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+    for kk in 0..k {
+        let qp = &q[kk * n + j..kk * n + j + nr];
+        let s = scales[kk];
+        for (rr, accr) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i + rr) * k + kk] * s;
+            for (slot, &qv) in accr.iter_mut().zip(qp) {
+                *slot += av * qv as f32;
+            }
+        }
+    }
+    for (rr, accr) in acc.iter().enumerate().take(mr) {
+        crows[(r0 + rr) * n + j..(r0 + rr) * n + j + nr].copy_from_slice(&accr[..nr]);
+    }
+}
+
+/// C[M,N] = A[M,K] @ dequant(Q[K,N]) with per-K-row scales, tiled and
+/// row-parallel like [`matmul_blocked_with`]. The scale is folded into the
+/// activation broadcast (see [`gemm_q8_kernel_full`]); the reduction order
+/// is ascending kk per element, so output is bit-identical at any thread
+/// count. `scales.len()` must be `k`.
+pub fn matmul_q8_with(
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(q.len(), k * n);
+    assert_eq!(scales.len(), k);
+    let mut c = vec![0.0f32; m * n];
+    if n == 0 || m == 0 {
+        return c;
+    }
+    let row_block = |i0: usize, crows: &mut [f32]| {
+        let rows = crows.len() / n;
+        let mut r = 0;
+        while r < rows {
+            let mr = GEMM_MR.min(rows - r);
+            let mut j = 0;
+            while j < n {
+                let nr = GEMM_NR.min(n - j);
+                if mr == GEMM_MR && nr == GEMM_NR {
+                    gemm_q8_kernel_full(a, q, scales, k, n, i0 + r, j, r, crows);
+                } else {
+                    gemm_q8_kernel_edge(a, q, scales, k, n, i0 + r, j, mr, nr, r, crows);
+                }
+                j += nr;
+            }
+            r += mr;
         }
     };
     parallel::par_row_chunks_mut(threads, &mut c, n, row_block);
@@ -376,17 +635,81 @@ mod tests {
     #[test]
     fn blocked_parallel_matmul_is_bit_identical() {
         let mut rng = crate::util::Rng::new(77);
-        let (m, k, n) = (13, 31, 157); // odd sizes cross the j-block boundary
+        let (m, k, n) = (13, 31, 157); // odd sizes: edge tiles in both dims
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let reference = matmul_reference(&a, &b, m, k, n);
         let serial = matmul(&a, &b, m, k, n);
+        assert!(
+            reference.iter().zip(&serial).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "tiled serial != scalar reference"
+        );
         for threads in [1usize, 2, 3, 8] {
             let par = matmul_blocked_with(&a, &b, m, k, n, threads);
-            let same = serial
+            let same = reference
                 .iter()
                 .zip(&par)
                 .all(|(x, y)| x.to_bits() == y.to_bits());
             assert!(same, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_matches_reference_with_zero_rows() {
+        // exercise the reference's zero-skip equivalence: whole A rows and
+        // scattered elements are exactly 0.0
+        let mut rng = crate::util::Rng::new(79);
+        let (m, k, n) = (9, 21, 39);
+        let mut a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        for v in a[2 * k..3 * k].iter_mut() {
+            *v = 0.0;
+        }
+        let reference = matmul_reference(&a, &b, m, k, n);
+        let tiled = matmul(&a, &b, m, k, n);
+        assert!(reference.iter().zip(&tiled).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn quantize_roundtrip_bound_and_determinism() {
+        let mut rng = crate::util::Rng::new(80);
+        let (rows, cols) = (7, 33);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let (q, scales) = quantize_rows_i8(&w, rows, cols);
+        let (q2, scales2) = quantize_rows_i8(&w, rows, cols);
+        assert_eq!(q, q2, "re-quantization must be deterministic");
+        assert!(scales.iter().zip(&scales2).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let dq = dequantize_rows_i8(&q, &scales, rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let err = (w[r * cols + c] - dq[r * cols + c]).abs();
+                assert!(err <= scales[r] * 0.5 + 1e-7, "row {r} col {c}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_matmul_is_thread_bit_identical_and_close_to_f32() {
+        let mut rng = crate::util::Rng::new(81);
+        let (m, k, n) = (6, 19, 45);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let (q, scales) = quantize_rows_i8(&w, k, n);
+        let serial = matmul_q8_with(&a, &q, &scales, m, k, n, 1);
+        for threads in [2usize, 3, 8] {
+            let par = matmul_q8_with(&a, &q, &scales, m, k, n, threads);
+            assert!(
+                serial.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads}"
+            );
+        }
+        // quantized result approximates the f32 GEMM on the dequantized B
+        let exact = matmul_reference(&a, &w, m, k, n);
+        for (got, want) in serial.iter().zip(&exact) {
+            assert!((got - want).abs() < 0.25, "got {got}, want {want}");
         }
     }
 

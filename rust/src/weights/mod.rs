@@ -13,9 +13,97 @@ use anyhow::{anyhow, bail, Context, Result};
 use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
 
 use crate::config::ModelCfg;
-use crate::tensor::Tensor;
+use crate::tensor::{dequantize_rows_i8, quantize_rows_i8, Tensor};
 
 const MAGIC: &[u8; 4] = b"HCWT";
+
+/// Sanity cap on tensor rank in HCWT headers — a corrupt `ndim` field must
+/// fail descriptively instead of driving a huge allocation.
+const MAX_NDIM: usize = 8;
+
+/// Per-row-scaled int8 tensor (HCWT v2 quantized section): the post-merge
+/// compressed form of an expert weight. `shape` is the logical f32 shape;
+/// quantization rows are all leading dims (`shape[..ndim-1]` flattened) and
+/// columns the last dim, so a `[n, d, m]` gate tensor carries one scale per
+/// expert per reduction index — exactly what the folded-scale quantized
+/// GEMM ([`crate::tensor::matmul_q8_with`]) consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTensor {
+    shape: Vec<usize>,
+    scales: Vec<f32>,
+    q: Vec<i8>,
+}
+
+impl QuantTensor {
+    /// Build from parts, checking `scales`/`q` lengths against `shape`.
+    pub fn new(shape: Vec<usize>, scales: Vec<f32>, q: Vec<i8>) -> Result<Self> {
+        anyhow::ensure!(!shape.is_empty(), "QuantTensor needs rank >= 1");
+        let total: usize = shape.iter().product();
+        let rows: usize = shape[..shape.len() - 1].iter().product();
+        anyhow::ensure!(
+            q.len() == total && scales.len() == rows,
+            "QuantTensor {shape:?} wants {total} elems / {rows} scales, got {} / {}",
+            q.len(),
+            scales.len()
+        );
+        Ok(Self { shape, scales, q })
+    }
+
+    /// Quantize an f32 tensor per leading-dim row (scale = maxabs/127).
+    pub fn from_f32(t: &Tensor) -> Result<Self> {
+        anyhow::ensure!(!t.shape().is_empty(), "cannot quantize a rank-0 tensor");
+        let cols = *t.shape().last().unwrap();
+        let rows: usize = t.shape()[..t.shape().len() - 1].iter().product();
+        anyhow::ensure!(cols > 0, "cannot quantize with a zero last dim");
+        let (q, scales) = quantize_rows_i8(t.data(), rows, cols);
+        Ok(Self { shape: t.shape().to_vec(), scales, q })
+    }
+
+    /// Reconstruct the (lossy) f32 tensor: `w = q · scale` per row.
+    pub fn dequantize(&self) -> Tensor {
+        let cols = *self.shape.last().unwrap();
+        let rows: usize = self.shape[..self.shape.len() - 1].iter().product();
+        let data = dequantize_rows_i8(&self.q, &self.scales, rows, cols);
+        Tensor::new(self.shape.clone(), data).expect("shape/data consistent by construction")
+    }
+
+    /// Logical f32 shape, outermost first.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Per-row scales (one per flattened leading-dims row).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Flat row-major int8 payload.
+    pub fn q(&self) -> &[i8] {
+        &self.q
+    }
+
+    /// `(q, scales)` slices of the sub-tensor at leading index `i` — e.g.
+    /// one expert of a `[n, d, m]` tensor: `d·m` int8 values, `d` scales.
+    pub fn index_slices(&self, i: usize) -> (&[i8], &[f32]) {
+        assert!(self.shape.len() >= 2 && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        let inner_rows: usize = self.shape[1..self.shape.len() - 1].iter().product();
+        (
+            &self.q[i * inner..(i + 1) * inner],
+            &self.scales[i * inner_rows..(i + 1) * inner_rows],
+        )
+    }
+}
 
 /// Expert weight triple (Eq. 2): gate / up / down matrices.
 #[derive(Clone, Debug)]
@@ -39,16 +127,21 @@ impl ExpertWeights {
     }
 }
 
-/// A named tensor set (one model checkpoint), sorted by name.
+/// A named tensor set (one model checkpoint), sorted by name. A checkpoint
+/// may additionally carry per-row-scaled int8 tensors (the HCWT v2
+/// quantized section) in a separate map; a quantized variant holds its
+/// expert tensors *only* there, while attention/router/norm/shared tensors
+/// stay f32.
 #[derive(Clone, Debug)]
 pub struct Weights {
     map: BTreeMap<String, Tensor>,
+    qmap: BTreeMap<String, QuantTensor>,
 }
 
 impl Weights {
-    /// Wrap an explicit name → tensor map.
+    /// Wrap an explicit name → tensor map (no quantized section).
     pub fn new(map: BTreeMap<String, Tensor>) -> Self {
-        Self { map }
+        Self { map, qmap: BTreeMap::new() }
     }
 
     /// Load an HCWT checkpoint file.
@@ -58,47 +151,126 @@ impl Weights {
         Self::from_bytes(&bytes)
     }
 
-    /// Parse HCWT bytes (see `FORMATS.md`).
+    /// Parse HCWT bytes (see `FORMATS.md`). Version 1 is the f32-only
+    /// layout; version 2 appends a quantized-tensor section. Any defect —
+    /// bad magic, unknown version, truncation, oversized headers, name
+    /// collisions — returns a descriptive error and never yields a
+    /// partially-initialized `Weights` (the maps are only wrapped into a
+    /// value after every section parsed cleanly).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut r = std::io::Cursor::new(bytes);
         let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic).context("HCWT: truncated magic")?;
         if &magic != MAGIC {
             bail!("bad magic {magic:?}");
         }
-        let version = r.read_u32::<LittleEndian>()?;
-        if version != 1 {
+        let version = r.read_u32::<LittleEndian>().context("HCWT: truncated version")?;
+        if version != 1 && version != 2 {
             bail!("unsupported HCWT version {version}");
         }
-        let n = r.read_u32::<LittleEndian>()? as usize;
-        let mut metas = Vec::with_capacity(n);
-        for _ in 0..n {
-            let nl = r.read_u32::<LittleEndian>()? as usize;
-            let mut nb = vec![0u8; nl];
-            r.read_exact(&mut nb)?;
-            let name = String::from_utf8(nb)?;
-            let ndim = r.read_u32::<LittleEndian>()? as usize;
-            let mut dims = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                dims.push(r.read_u32::<LittleEndian>()? as usize);
-            }
-            metas.push((name, dims));
-        }
+        let metas = Self::read_headers(&mut r, bytes.len(), "f32 section")?;
         let mut map = BTreeMap::new();
         for (name, dims) in metas {
             let count: usize = dims.iter().product();
+            Self::ensure_remaining(&r, bytes.len(), count.checked_mul(4), &name)?;
             let mut data = vec![0f32; count];
-            r.read_f32_into::<LittleEndian>(&mut data)?;
+            r.read_f32_into::<LittleEndian>(&mut data)
+                .with_context(|| format!("HCWT: truncated f32 data for {name:?}"))?;
             map.insert(name, Tensor::new(dims, data)?);
         }
-        Ok(Self { map })
+        let mut qmap = BTreeMap::new();
+        if version == 2 {
+            let qmetas = Self::read_headers(&mut r, bytes.len(), "quantized section")?;
+            for (name, dims) in qmetas {
+                if map.contains_key(&name) {
+                    bail!("HCWT quantized section: {name:?} collides with an f32 tensor");
+                }
+                if dims.is_empty() {
+                    bail!("HCWT quantized section: {name:?} has rank 0");
+                }
+                let count: usize = dims.iter().product();
+                let rows: usize = dims[..dims.len() - 1].iter().product();
+                Self::ensure_remaining(&r, bytes.len(), rows.checked_mul(4), &name)?;
+                let mut scales = vec![0f32; rows];
+                r.read_f32_into::<LittleEndian>(&mut scales)
+                    .with_context(|| format!("HCWT: truncated scales for {name:?}"))?;
+                Self::ensure_remaining(&r, bytes.len(), Some(count), &name)?;
+                let mut qb = vec![0u8; count];
+                r.read_exact(&mut qb)
+                    .with_context(|| format!("HCWT: truncated int8 data for {name:?}"))?;
+                let q: Vec<i8> = qb.into_iter().map(|b| b as i8).collect();
+                qmap.insert(name, QuantTensor::new(dims, scales, q)?);
+            }
+        }
+        Ok(Self { map, qmap })
     }
 
-    /// Write the HCWT serialisation of this weight set.
+    /// Read one header table (count + per-tensor name/ndim/dims), shared by
+    /// the f32 and quantized sections. Validates sizes against the bytes
+    /// actually present so corrupt counts fail before any large allocation.
+    fn read_headers(
+        r: &mut std::io::Cursor<&[u8]>,
+        total: usize,
+        section: &str,
+    ) -> Result<Vec<(String, Vec<usize>)>> {
+        let n = r
+            .read_u32::<LittleEndian>()
+            .with_context(|| format!("HCWT {section}: truncated tensor count"))? as usize;
+        let mut metas = Vec::new();
+        for idx in 0..n {
+            let nl = r
+                .read_u32::<LittleEndian>()
+                .with_context(|| format!("HCWT {section}: truncated header {idx}"))?
+                as usize;
+            Self::ensure_remaining(r, total, Some(nl), section)?;
+            let mut nb = vec![0u8; nl];
+            r.read_exact(&mut nb)
+                .with_context(|| format!("HCWT {section}: truncated name in header {idx}"))?;
+            let name = String::from_utf8(nb)
+                .with_context(|| format!("HCWT {section}: non-UTF-8 name in header {idx}"))?;
+            let ndim = r
+                .read_u32::<LittleEndian>()
+                .with_context(|| format!("HCWT {section}: truncated ndim for {name:?}"))?
+                as usize;
+            if ndim > MAX_NDIM {
+                bail!("HCWT {section}: {name:?} claims rank {ndim} (max {MAX_NDIM})");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r
+                    .read_u32::<LittleEndian>()
+                    .with_context(|| format!("HCWT {section}: truncated dims for {name:?}"))?
+                    as usize);
+            }
+            metas.push((name, dims));
+        }
+        Ok(metas)
+    }
+
+    /// Fail descriptively when fewer than `need` bytes remain (or when the
+    /// size computation overflowed).
+    fn ensure_remaining(
+        r: &std::io::Cursor<&[u8]>,
+        total: usize,
+        need: Option<usize>,
+        what: &str,
+    ) -> Result<()> {
+        let need = need.ok_or_else(|| anyhow!("HCWT: size overflow for {what:?}"))?;
+        let left = total.saturating_sub(r.position() as usize);
+        if need > left {
+            bail!("HCWT: {what:?} wants {need} bytes but only {left} remain (truncated/corrupt)");
+        }
+        Ok(())
+    }
+
+    /// Write the HCWT serialisation of this weight set: version 1 when no
+    /// quantized tensors are present (byte-exact with pre-v2 writers),
+    /// version 2 with the appended quantized section otherwise.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         w.write_all(MAGIC)?;
-        w.write_u32::<LittleEndian>(1)?;
+        let version: u32 = if self.qmap.is_empty() { 1 } else { 2 };
+        w.write_u32::<LittleEndian>(version)?;
         w.write_u32::<LittleEndian>(self.map.len() as u32)?;
         for (name, t) in &self.map {
             w.write_u32::<LittleEndian>(name.len() as u32)?;
@@ -111,6 +283,24 @@ impl Weights {
         for t in self.map.values() {
             for &x in t.data() {
                 w.write_f32::<LittleEndian>(x)?;
+            }
+        }
+        if version == 2 {
+            w.write_u32::<LittleEndian>(self.qmap.len() as u32)?;
+            for (name, t) in &self.qmap {
+                w.write_u32::<LittleEndian>(name.len() as u32)?;
+                w.write_all(name.as_bytes())?;
+                w.write_u32::<LittleEndian>(t.shape().len() as u32)?;
+                for &d in t.shape() {
+                    w.write_u32::<LittleEndian>(d as u32)?;
+                }
+            }
+            for t in self.qmap.values() {
+                for &s in t.scales() {
+                    w.write_f32::<LittleEndian>(s)?;
+                }
+                let qb: Vec<u8> = t.q().iter().map(|&x| x as u8).collect();
+                w.write_all(&qb)?;
             }
         }
         Ok(())
@@ -129,6 +319,42 @@ impl Weights {
     /// Insert or replace a tensor.
     pub fn insert(&mut self, name: String, t: Tensor) {
         self.map.insert(name, t);
+    }
+
+    /// Quantized tensor by name (error when absent).
+    pub fn quant_get(&self, name: &str) -> Result<&QuantTensor> {
+        self.qmap
+            .get(name)
+            .ok_or_else(|| anyhow!("missing quantized tensor {name:?}"))
+    }
+
+    /// Quantized tensor by name, `None` when absent — the backend's
+    /// per-layer kernel-dispatch probe.
+    pub fn quant_opt(&self, name: &str) -> Option<&QuantTensor> {
+        self.qmap.get(name)
+    }
+
+    /// Insert or replace a quantized tensor. The f32 tensor of the same
+    /// name (if any) is removed — a name lives in exactly one section.
+    pub fn insert_quant(&mut self, name: String, t: QuantTensor) {
+        self.map.remove(&name);
+        self.qmap.insert(name, t);
+    }
+
+    /// Quantized tensor names in sorted order.
+    pub fn quant_names(&self) -> impl Iterator<Item = &String> {
+        self.qmap.keys()
+    }
+
+    /// Number of quantized tensors.
+    pub fn quant_len(&self) -> usize {
+        self.qmap.len()
+    }
+
+    /// True when the checkpoint carries any int8-quantized tensors (i.e.
+    /// it serializes as HCWT v2).
+    pub fn is_quantized(&self) -> bool {
+        !self.qmap.is_empty()
     }
 
     /// Tensor names in sorted order.
@@ -151,14 +377,19 @@ impl Weights {
         self.map.values().collect()
     }
 
-    /// Total parameter count.
+    /// Total parameter count (f32 and int8 elements both count as one).
     pub fn param_count(&self) -> usize {
-        self.map.values().map(|t| t.len()).sum()
+        self.map.values().map(|t| t.len()).sum::<usize>()
+            + self.qmap.values().map(|t| t.len()).sum::<usize>()
     }
 
-    /// Total bytes (f32).
+    /// Total weight bytes: 4 per f32 param, 1 per int8 param plus 4 per
+    /// row scale — the number the compression ratio is computed from.
     pub fn byte_size(&self) -> usize {
-        self.param_count() * 4
+        let f32_bytes: usize = self.map.values().map(|t| t.len() * 4).sum();
+        let q_bytes: usize =
+            self.qmap.values().map(|t| t.len() + t.scales().len() * 4).sum();
+        f32_bytes + q_bytes
     }
 
     // -- expert accessors ---------------------------------------------------
@@ -170,8 +401,16 @@ impl Weights {
         format!("layer{layer:02}.{suffix}")
     }
 
-    /// Weight triple of expert `idx` in `layer`.
+    /// Weight triple of expert `idx` in `layer`. Errors descriptively on a
+    /// quantized variant — merging/calibration need the f32 source.
     pub fn expert(&self, layer: usize, idx: usize) -> Result<ExpertWeights> {
+        let gate_key = Self::layer_key(layer, "exp.wg");
+        if !self.map.contains_key(&gate_key) && self.qmap.contains_key(&gate_key) {
+            bail!(
+                "expert tensors of layer {layer} are int8-quantized; \
+                 operate on the f32 source weights and re-quantize"
+            );
+        }
         Ok(ExpertWeights {
             wg: self.get(&Self::layer_key(layer, "exp.wg"))?.index(idx),
             wu: self.get(&Self::layer_key(layer, "exp.wu"))?.index(idx),
@@ -201,15 +440,23 @@ impl Weights {
         Ok((0..d).map(|i| r.data()[i * n + idx]).collect())
     }
 
-    /// Number of experts (from the layer-0 gate tensor).
+    /// Number of experts (from the layer-0 gate tensor, in whichever
+    /// section it lives — f32 or int8-quantized).
     pub fn n_experts(&self) -> Result<usize> {
-        Ok(self.get("layer00.exp.wg")?.shape()[0])
+        if let Some(t) = self.map.get("layer00.exp.wg") {
+            return Ok(t.shape()[0]);
+        }
+        if let Some(t) = self.qmap.get("layer00.exp.wg") {
+            return Ok(t.shape()[0]);
+        }
+        Err(anyhow!("missing tensor \"layer00.exp.wg\""))
     }
 
     /// Number of transformer layers (from the layer-key prefixes).
     pub fn n_layers(&self) -> usize {
         self.map
             .keys()
+            .chain(self.qmap.keys())
             .filter_map(|k| {
                 k.strip_prefix("layer")
                     .and_then(|s| s.get(..2))
@@ -284,7 +531,7 @@ impl Weights {
                 );
             }
         }
-        Self { map }
+        Self { map, qmap: BTreeMap::new() }
     }
 
     /// Build the compact r-expert weight set for `lm_logits_*_r{r}`:
@@ -308,7 +555,7 @@ impl Weights {
                 out.insert(Self::layer_key(l, suffix), t);
             }
         }
-        Ok(Weights { map: out })
+        Ok(Weights { map: out, qmap: BTreeMap::new() })
     }
 }
 
@@ -352,6 +599,63 @@ mod tests {
             assert_eq!(w.get(name).unwrap(), w2.get(name).unwrap(), "{name}");
         }
         std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn v2_quantized_roundtrip() {
+        let mut w = tiny_weights();
+        for l in 0..2 {
+            for suffix in ["exp.wg", "exp.wu", "exp.wd"] {
+                let key = Weights::layer_key(l, suffix);
+                let qt = QuantTensor::from_f32(w.get(&key).unwrap()).unwrap();
+                w.insert_quant(key, qt);
+            }
+        }
+        assert!(w.is_quantized());
+        assert_eq!(w.quant_len(), 6);
+        assert_eq!(w.n_experts().unwrap(), 3);
+        assert_eq!(w.n_layers(), 2);
+        let tmp = std::env::temp_dir().join("hcwt_v2_test.hcwt");
+        w.save(&tmp).unwrap();
+        let bytes = std::fs::read(&tmp).unwrap();
+        assert_eq!(&bytes[4..8], &2u32.to_le_bytes(), "quantized file must be v2");
+        let w2 = Weights::from_bytes(&bytes).unwrap();
+        assert_eq!(w2.quant_len(), 6);
+        for name in w.quant_names() {
+            assert_eq!(w.quant_get(name).unwrap(), w2.quant_get(name).unwrap(), "{name}");
+        }
+        for name in w.names() {
+            assert_eq!(w.get(name).unwrap(), w2.get(name).unwrap(), "{name}");
+        }
+        // expert accessor refuses the quantized variant descriptively
+        let err = w.expert(0, 0).unwrap_err().to_string();
+        assert!(err.contains("quantized"), "{err}");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn v1_files_stay_version_1_and_byte_exact() {
+        let w = tiny_weights();
+        let tmp = std::env::temp_dir().join("hcwt_v1_test.hcwt");
+        w.save(&tmp).unwrap();
+        let bytes = std::fs::read(&tmp).unwrap();
+        assert_eq!(&bytes[4..8], &1u32.to_le_bytes(), "f32-only file must stay v1");
+        let w2 = Weights::from_bytes(&bytes).unwrap();
+        w2.save(&tmp).unwrap();
+        assert_eq!(bytes, std::fs::read(&tmp).unwrap(), "v1 round-trip must be byte-exact");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn quant_tensor_shape_checks() {
+        assert!(QuantTensor::new(vec![2, 3], vec![1.0; 2], vec![0i8; 6]).is_ok());
+        assert!(QuantTensor::new(vec![2, 3], vec![1.0; 3], vec![0i8; 6]).is_err());
+        assert!(QuantTensor::new(vec![], vec![], vec![]).is_err());
+        let t = Tensor::new(vec![2, 2, 3], (0..12).map(|x| x as f32).collect()).unwrap();
+        let qt = QuantTensor::from_f32(&t).unwrap();
+        let (q, s) = qt.index_slices(1);
+        assert_eq!(q.len(), 6);
+        assert_eq!(s.len(), 2);
     }
 
     #[test]

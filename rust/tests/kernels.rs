@@ -1,0 +1,345 @@
+//! Kernel parity/property sweep: the tiled GEMM microkernels must be
+//! bit-identical to the canonical scalar `matmul_reference` across
+//! randomized shapes (tile-multiple and not, m=1 decode rows, k=0/n=1
+//! edges) and thread counts; the int8 path must round-trip within its
+//! scale bound, re-quantize deterministically, and stay bit-identical
+//! across threads. Plus HCWT v2 reader robustness (truncated/corrupt/
+//! wrong-version quantized sections fail descriptively, v1 files stay
+//! byte-exact) and the artifacts-gated quantized-vs-f32 eval delta.
+
+use hc_smoe::clustering::Linkage;
+use hc_smoe::config::Artifacts;
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::{quantize_expert_weights, Method, Pipeline};
+use hc_smoe::quality::quantization_delta;
+use hc_smoe::similarity::Metric;
+use hc_smoe::tensor::{
+    dequantize_rows_i8, matmul, matmul_blocked_with, matmul_q8_with, matmul_reference,
+    quantize_rows_i8,
+};
+use hc_smoe::util::proptest::{check, ensure};
+use hc_smoe::util::Rng;
+use hc_smoe::weights::Weights;
+
+/// Named acceptance bound for the quantized-variant eval test: the mean
+/// absolute benchmark-accuracy delta between a merged model and its int8
+/// sibling must stay within this.
+const QUANT_ACC_TOLERANCE: f64 = 0.2;
+
+fn randn(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+// -------------------------------------------------------------------------
+// Tiled f32 GEMM == scalar reference, at any shape and thread count
+// -------------------------------------------------------------------------
+
+#[test]
+fn prop_tiled_gemm_bit_identical_to_reference() {
+    check("tiled-gemm-parity", 90, 60, |rng| {
+        let m = 1 + rng.below(33); // covers m=1 decode rows
+        let k = rng.below(40); // covers k=0
+        let n = 1 + rng.below(70); // covers n=1
+        let a = randn(rng, m * k);
+        let b = randn(rng, k * n);
+        let reference = matmul_reference(&a, &b, m, k, n);
+        for threads in [1usize, 2, 3, 8] {
+            let tiled = matmul_blocked_with(&a, &b, m, k, n, threads);
+            ensure(
+                bits_equal(&reference, &tiled),
+                format!("({m},{k},{n}) threads={threads}: tiled != reference"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_gemm_parity_at_pinned_edge_shapes() {
+    // the shapes the microkernel's edge handling must get right: exact
+    // tile multiples, off-by-one in each dim, the m=1 decode row, the
+    // k=0 and n=1 degenerate reductions, and a prefill-sized block
+    let shapes = [
+        (4usize, 16usize, 16usize), // exactly one full tile
+        (8, 32, 32),                // tile multiples
+        (5, 17, 17),                // +1 past the tile in m and n
+        (3, 16, 15),                // edge columns only
+        (1, 64, 64),                // decode row
+        (1, 0, 1),                  // k=0: all-zero output
+        (3, 7, 1),                  // n=1 column vector
+        (16, 1, 16),                // k=1
+        (13, 31, 157),              // the historical odd-size pin
+        (64, 64, 256),              // prefill-sized block
+    ];
+    let mut rng = Rng::new(41);
+    for &(m, k, n) in &shapes {
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let reference = matmul_reference(&a, &b, m, k, n);
+        let serial = matmul(&a, &b, m, k, n);
+        assert!(bits_equal(&reference, &serial), "serial ({m},{k},{n})");
+        for threads in [2usize, 5] {
+            let par = matmul_blocked_with(&a, &b, m, k, n, threads);
+            assert!(bits_equal(&reference, &par), "({m},{k},{n}) threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_tiled_gemm_handles_sparse_inputs_like_reference() {
+    // the reference skips zero A values; the tiled kernel does not —
+    // pin the documented bit-equivalence of the two for finite inputs
+    check("tiled-gemm-zero-skip", 91, 40, |rng| {
+        let m = 1 + rng.below(12);
+        let k = 1 + rng.below(24);
+        let n = 1 + rng.below(40);
+        let mut a = randn(rng, m * k);
+        for v in a.iter_mut() {
+            if rng.below(3) == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = randn(rng, k * n);
+        let reference = matmul_reference(&a, &b, m, k, n);
+        let tiled = matmul(&a, &b, m, k, n);
+        ensure(bits_equal(&reference, &tiled), format!("({m},{k},{n}): sparse parity"))
+    });
+}
+
+// -------------------------------------------------------------------------
+// Int8 quantization: round-trip bounds, determinism, thread bit-identity
+// -------------------------------------------------------------------------
+
+#[test]
+fn prop_quantize_roundtrip_within_scale_bound() {
+    check("quantize-roundtrip-bound", 92, 50, |rng| {
+        let rows = 1 + rng.below(12);
+        let cols = 1 + rng.below(60);
+        let w = randn(rng, rows * cols);
+        let (q, scales) = quantize_rows_i8(&w, rows, cols);
+        let (q2, scales2) = quantize_rows_i8(&w, rows, cols);
+        ensure(q == q2, "re-quantization changed int8 payload")?;
+        ensure(
+            scales.iter().zip(&scales2).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "re-quantization changed scales",
+        )?;
+        let dq = dequantize_rows_i8(&q, &scales, rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let err = (w[r * cols + c] - dq[r * cols + c]).abs();
+                ensure(
+                    err <= scales[r] * 0.5 + 1e-7,
+                    format!("row {r} col {c}: err {err} > scale/2 {}", scales[r] * 0.5),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantize_all_zero_rows_roundtrip_exactly() {
+    let w = vec![0.0f32; 3 * 8];
+    let (q, scales) = quantize_rows_i8(&w, 3, 8);
+    assert!(q.iter().all(|&x| x == 0));
+    assert!(scales.iter().all(|&s| s == 1.0));
+    assert_eq!(dequantize_rows_i8(&q, &scales, 3, 8), w);
+}
+
+#[test]
+fn prop_q8_gemm_thread_bit_identity() {
+    check("q8-gemm-thread-identity", 93, 40, |rng| {
+        let m = 1 + rng.below(20);
+        let k = 1 + rng.below(32);
+        let n = 1 + rng.below(48);
+        let a = randn(rng, m * k);
+        let w = randn(rng, k * n);
+        let (q, scales) = quantize_rows_i8(&w, k, n);
+        let serial = matmul_q8_with(&a, &q, &scales, m, k, n, 1);
+        for threads in [2usize, 3, 8] {
+            let par = matmul_q8_with(&a, &q, &scales, m, k, n, threads);
+            ensure(
+                bits_equal(&serial, &par),
+                format!("({m},{k},{n}) threads={threads}: q8 not bit-identical"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------------------
+// HCWT v2 reader robustness
+// -------------------------------------------------------------------------
+
+fn quantized_bytes() -> Vec<u8> {
+    let cfg = hc_smoe::config::ModelCfg {
+        name: "qrobust".into(),
+        n_layer: 2,
+        d: 4,
+        m: 4,
+        n_exp: 3,
+        k: 1,
+        heads: 2,
+        vocab: 11,
+        t_max: 8,
+        shared: false,
+        m_shared: 4,
+        cap_factor: 2.0,
+        block_c: 4,
+    };
+    let w = quantize_expert_weights(&Weights::synthesize(&cfg, 7)).unwrap();
+    let tmp = std::env::temp_dir().join(format!("hcwt_robust_{}.hcwt", std::process::id()));
+    w.save(&tmp).unwrap();
+    let bytes = std::fs::read(&tmp).unwrap();
+    std::fs::remove_file(tmp).ok();
+    bytes
+}
+
+#[test]
+fn v2_truncations_fail_descriptively_at_every_length() {
+    let bytes = quantized_bytes();
+    assert_eq!(&bytes[4..8], &2u32.to_le_bytes());
+    // every strict prefix must error (not panic, not succeed) — walk a
+    // spread of cut points including section boundaries
+    let cuts: Vec<usize> = (0..8)
+        .map(|i| i * bytes.len() / 8)
+        .chain([bytes.len() - 1, bytes.len() - 4])
+        .collect();
+    for cut in cuts {
+        let err = Weights::from_bytes(&bytes[..cut])
+            .expect_err(&format!("prefix of {cut} bytes must not parse"));
+        let msg = err.to_string().to_lowercase();
+        assert!(
+            msg.contains("truncated") || msg.contains("magic") || msg.contains("remain"),
+            "cut {cut}: undescriptive error {msg:?}"
+        );
+    }
+}
+
+#[test]
+fn wrong_version_fails_descriptively() {
+    let mut bytes = quantized_bytes();
+    bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
+    let err = Weights::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(err.contains("unsupported HCWT version 3"), "{err}");
+}
+
+#[test]
+fn corrupt_quant_count_fails_without_huge_alloc() {
+    // a v2 section claiming absurd sizes appended to a clean v1 file must
+    // fail on the bounds check before any large allocation
+    let cfg_small = hc_smoe::config::ModelCfg {
+        name: "small".into(),
+        n_layer: 1,
+        d: 2,
+        m: 2,
+        n_exp: 2,
+        k: 1,
+        heads: 1,
+        vocab: 5,
+        t_max: 4,
+        shared: false,
+        m_shared: 2,
+        cap_factor: 2.0,
+        block_c: 2,
+    };
+    let w1 = Weights::synthesize(&cfg_small, 3);
+    let tmp = std::env::temp_dir().join(format!("hcwt_corrupt_{}.hcwt", std::process::id()));
+    w1.save(&tmp).unwrap();
+    let mut v1 = std::fs::read(&tmp).unwrap();
+    std::fs::remove_file(tmp).ok();
+    // claim v2 with one quant tensor of absurd declared dims but no data
+    v1[4..8].copy_from_slice(&2u32.to_le_bytes());
+    v1.extend_from_slice(&1u32.to_le_bytes()); // nq = 1
+    v1.extend_from_slice(&1u32.to_le_bytes()); // name_len
+    v1.push(b'x');
+    v1.extend_from_slice(&2u32.to_le_bytes()); // ndim = 2
+    v1.extend_from_slice(&u32::MAX.to_le_bytes()); // dims[0] huge
+    v1.extend_from_slice(&u32::MAX.to_le_bytes()); // dims[1] huge
+    let err = Weights::from_bytes(&v1).unwrap_err().to_string();
+    assert!(
+        err.contains("remain") || err.contains("overflow"),
+        "corrupt sizes must fail on the bounds check, got: {err}"
+    );
+    // arbitrary garbage must also error, never panic
+    let garbage: Vec<u8> = (0..64u8).collect();
+    assert!(Weights::from_bytes(&garbage).is_err());
+}
+
+#[test]
+fn quantized_file_name_collision_is_rejected() {
+    // craft v2 bytes whose quant section reuses an f32 tensor name
+    let cfg = hc_smoe::config::ModelCfg {
+        name: "collide".into(),
+        n_layer: 1,
+        d: 2,
+        m: 2,
+        n_exp: 2,
+        k: 1,
+        heads: 1,
+        vocab: 5,
+        t_max: 4,
+        shared: false,
+        m_shared: 2,
+        cap_factor: 2.0,
+        block_c: 2,
+    };
+    let w = Weights::synthesize(&cfg, 5);
+    let tmp = std::env::temp_dir().join(format!("hcwt_collide_{}.hcwt", std::process::id()));
+    w.save(&tmp).unwrap();
+    let mut bytes = std::fs::read(&tmp).unwrap();
+    std::fs::remove_file(tmp).ok();
+    bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // nq = 1
+    let name = b"embed"; // collides with the f32 embed tensor
+    bytes.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(name);
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // ndim = 1
+    bytes.extend_from_slice(&2u32.to_le_bytes()); // dims = [2]
+    bytes.extend_from_slice(&1.0f32.to_le_bytes()); // 1 scale
+    bytes.extend_from_slice(&[0u8, 0u8]); // 2 int8 values
+    let err = Weights::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(err.contains("collides"), "{err}");
+}
+
+// -------------------------------------------------------------------------
+// Quantized-variant eval delta (artifacts-gated, like integration.rs)
+// -------------------------------------------------------------------------
+
+fn ctx() -> Option<ModelContext> {
+    let arts = Artifacts::discover();
+    if !arts.root.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ModelContext::load(&arts, "mixsim").expect("load mixsim"))
+}
+
+#[test]
+fn quantized_variant_eval_delta_within_tolerance() {
+    let Some(ctx) = ctx() else { return };
+    let stats = ctx.calibrate("general").unwrap();
+    let plan = Pipeline::new(Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    })
+    .plan(&ctx, &stats, 4)
+    .unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let pairs = quantization_delta(&ctx, &cm, &["arc_e", "boolq"]).unwrap();
+    let mean_delta = pairs.iter().map(|(f, q)| (f - q).abs()).sum::<f64>() / pairs.len() as f64;
+    assert!(
+        mean_delta <= QUANT_ACC_TOLERANCE,
+        "mean |f32 - int8| accuracy delta {mean_delta} exceeds {QUANT_ACC_TOLERANCE} ({pairs:?})"
+    );
+    // the int8 variant is also smaller on disk than its f32 source
+    let qw = quantize_expert_weights(&cm.weights).unwrap();
+    assert!(qw.byte_size() < cm.weights.byte_size());
+    assert_eq!(qw.param_count(), cm.weights.param_count());
+}

@@ -189,6 +189,35 @@ fn speculative_matches_plain_masked_verifier() {
 }
 
 #[test]
+fn speculative_with_quantized_drafter_stays_exact() {
+    // the drafter only proposes; the f32 verifier decides — so an int8
+    // compact drafter must leave the emitted stream bit-for-bit equal to
+    // plain decoding, even though its own logits drift from the f32 ones
+    let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
+    let full = ctx.load_original().unwrap();
+    let stats = ctx.calibrate("general").unwrap();
+    let r = 4usize;
+    let plan = Pipeline::new(hc_method()).plan(&ctx, &stats, r).unwrap();
+    let cm = plan.apply(&ctx, &stats).unwrap();
+    let (qw, remap) = cm.to_compact_quantized(&ctx).unwrap();
+    assert!(qw.is_quantized(), "compact drafter weights must carry the int8 section");
+    let drafter = ctx.load_compact(r, &qw, remap, "q8-drafter").unwrap();
+    let v = ctx.cfg.vocab;
+    let prompt: Vec<i32> = (0..7).map(|i| ((1 + i * 5) % v) as i32).collect();
+    for params in [
+        SamplingParams::greedy(18, None),
+        SamplingParams::top_k(8, 0.8, 7, 18, None),
+    ] {
+        let plain = generate(&ctx, &full, &prompt, params.clone()).unwrap();
+        for k in [2usize, 4] {
+            let spec =
+                speculative(&ctx, &full, &drafter, &prompt, params.clone(), k).unwrap();
+            assert_spec_matches("quantized drafter", k, &plain, &spec);
+        }
+    }
+}
+
+#[test]
 fn speculative_respects_stop_conditions() {
     let ctx = ModelContext::load(&arts(), "qwensim").unwrap();
     let (full, drafter) = verifier_and_drafter(&ctx, 4);

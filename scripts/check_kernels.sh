@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Assert the quant_gemm_sweep contract on a full-run BENCH_backend.json:
+# the section must exist, and on every (decode, prefill) expert-projection
+# row the cache-blocked tiled kernel must at least match the scalar
+# reference (tiled_speedup >= 1.0 — a noise-tolerant floor; the register
+# tiling is expected well above 1 on any autovectorizing build) and the
+# int8 folded-scale kernel must at least match the tiled f32 one
+# (int8_ms <= tiled_ms — it streams 4x fewer weight bytes). CI runs this
+# in the backend-e2e job after `HCSMOE_BENCH_ONLY=backend cargo bench
+# --bench perf_microbench`; contributors can run it locally the same way.
+#
+# With no argument the script probes both candidate locations: cargo runs
+# bench binaries with the PACKAGE root (rust/) as working directory, so
+# that is where the JSON lands when invoked via `cargo bench` from the
+# workspace root.
+#
+# The parse relies on bench_support::write_backend_json's stable
+# formatting: one JSON object per line, "tiled_speedup" keys only in the
+# quant_gemm_sweep section.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> kernel parity + property suite (tiled==reference, thread bit-identity, int8 bounds, HCWT v2)"
+cargo test --release --test kernels -q
+
+f="${1:-}"
+if [ -z "$f" ]; then
+  for cand in rust/BENCH_backend.json BENCH_backend.json; do
+    [ -f "$cand" ] && { f="$cand"; break; }
+  done
+fi
+[ -n "$f" ] && [ -f "$f" ] || { echo "check_kernels: BENCH_backend.json not found (looked in rust/ and .)"; exit 1; }
+
+grep -q '"quant_gemm_sweep"' "$f" \
+  || { echo "check_kernels: $f has no quant_gemm_sweep section"; exit 1; }
+
+rows=$(grep '"tiled_speedup"' "$f" || true)
+[ -n "$rows" ] || { echo "check_kernels: quant_gemm_sweep has no rows"; exit 1; }
+
+status=0
+while IFS= read -r line; do
+  path=$(echo "$line" | sed -n 's/.*"path": "\([^"]*\)".*/\1/p')
+  tiled_ms=$(echo "$line" | sed -n 's/.*"tiled_ms": \([0-9][0-9.]*\).*/\1/p')
+  int8_ms=$(echo "$line" | sed -n 's/.*"int8_ms": \([0-9][0-9.]*\).*/\1/p')
+  tiled_speedup=$(echo "$line" | sed -n 's/.*"tiled_speedup": \([0-9][0-9.]*\).*/\1/p')
+  [ -n "$path" ] && [ -n "$tiled_ms" ] && [ -n "$int8_ms" ] && [ -n "$tiled_speedup" ] \
+    || { echo "check_kernels: malformed row: $line"; exit 1; }
+  awk -v s="$tiled_speedup" 'BEGIN { exit (s >= 1.0) ? 0 : 1 }' || {
+    echo "check_kernels: $path — tiled kernel is SLOWER than the scalar reference (speedup = ${tiled_speedup}x) in $f"
+    status=1
+  }
+  awk -v i="$int8_ms" -v t="$tiled_ms" 'BEGIN { exit (i <= t) ? 0 : 1 }' || {
+    echo "check_kernels: $path — int8 kernel (${int8_ms} ms) is SLOWER than the tiled f32 kernel (${tiled_ms} ms) in $f"
+    status=1
+  }
+  [ "$status" -eq 0 ] && echo "check_kernels: $path OK — tiled ${tiled_speedup}x vs scalar, int8 ${int8_ms} ms <= tiled ${tiled_ms} ms"
+done <<< "$rows"
+
+[ "$status" -eq 0 ] || exit "$status"
+echo "check_kernels: OK ($f)"
