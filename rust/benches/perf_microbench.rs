@@ -20,8 +20,8 @@ use std::time::{Duration, Instant};
 use hc_smoe::backend::native::{forward_calib_with, forward_logits_with, NativeBackend};
 use hc_smoe::backend::{Backend, KvCache, PrefillOpts};
 use hc_smoe::bench_support::{
-    self, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, KvCacheBenchRow, Lab,
-    ParallelBenchRow, QuantGemmRow, SchedBenchRow, SpecDecodeRow,
+    self, AdaptBenchRow, BackendBenchRow, DecodeBatchRow, GenerateBenchRow, KvCacheBenchRow,
+    Lab, ParallelBenchRow, QuantGemmRow, SchedBenchRow, SpecDecodeRow,
 };
 use hc_smoe::clustering::{hierarchical, hierarchical_with, kmeans, KmeansInit, Linkage};
 use hc_smoe::config::ModelCfg;
@@ -589,12 +589,9 @@ fn sched_sweep(table: &mut Table) -> anyhow::Result<Vec<SchedBenchRow>> {
     let mut rows = Vec::new();
     for (mode, chunk) in [("unchunked", None), ("chunked", Some(4usize))] {
         let spec = ServeSpec {
-            artifacts_root: root.clone(),
-            model: "qwensim".into(),
-            compress: None,
             kv_budget_bytes: Some(kv_budget),
             prefill_chunk: chunk,
-            drafter: None,
+            ..ServeSpec::for_tests(&root, "qwensim")
         };
         let handle = serve(
             spec,
@@ -736,6 +733,104 @@ fn spec_decode_sweep(table: &mut Table) -> anyhow::Result<Vec<SpecDecodeRow>> {
     Ok(rows)
 }
 
+/// Adaptive serving sweep → the `adapt_sweep` section of
+/// BENCH_generate.json: an adaptively-compressing server (synthesized
+/// `qwensim`, HC-merged r = E/2 rebuild target) is driven with a steady
+/// stream of blocking generation requests through three phases. The
+/// routing window is sized just past what the `before` phase routes, so
+/// the background recompression triggers — and the hot swap lands — in
+/// the `during` phase; `after` then runs entirely on the swapped compact
+/// variant. Because the rebuild runs on a worker thread while the
+/// executor keeps serving, the `during` throughput must stay within a
+/// bounded fraction of `before` (`scripts/check_adapt.sh` gates this,
+/// plus swaps ≥ 1 by the `after` row).
+fn adapt_sweep(table: &mut Table) -> anyhow::Result<Vec<AdaptBenchRow>> {
+    let smoke = bench_support::smoke();
+    let arts = bench_support::ensure_artifacts()?;
+    let root = arts.root.to_string_lossy().into_owned();
+    let r = (hc_smoe::model::ModelContext::load(&arts, "qwensim")?.cfg.n_exp / 2).max(1);
+    let (per_phase, max_new) = if smoke { (3usize, 4usize) } else { (12, 8) };
+    let prompt_len = 8usize;
+    // each request routes at most prompt + max_new tokens, so the window
+    // cannot fill during `before`; the first `during` request tips it over
+    let window = (per_phase * (prompt_len + max_new)) as u64 + 1;
+    let handle = serve(
+        ServeSpec {
+            adapt: Some(hc_smoe::serving::AdaptSpec {
+                method: hc_smoe::pipeline::Method::HcSmoe {
+                    linkage: Linkage::Average,
+                    metric: Metric::ExpertOutput,
+                    merge: hc_smoe::merging::MergeStrategy::Frequency,
+                },
+                r,
+                domain: "general".into(),
+                quantize: false,
+                window_tokens: Some(window),
+                min_tokens: Some(0),
+            }),
+            ..ServeSpec::for_tests(&root, "qwensim")
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )?;
+    let params = SamplingParams::greedy(max_new, None);
+    let mut i = 0usize;
+    let mut serve_phase = |phase: &str, until_swap: bool| -> anyhow::Result<AdaptBenchRow> {
+        let t0 = Instant::now();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let (mut requests, mut tokens) = (0usize, 0usize);
+        loop {
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|p| (16 + (p * 5 + i) % 64) as i32).collect();
+            let g = handle.generate(&prompt, params.clone())?;
+            i += 1;
+            requests += 1;
+            tokens += g.tokens.len();
+            if until_swap {
+                if handle.metrics.snapshot().swaps >= 1 {
+                    break;
+                }
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "no hot swap landed during the adapt sweep"
+                );
+            } else if requests >= per_phase {
+                break;
+            }
+        }
+        let snap = handle.metrics.snapshot();
+        Ok(AdaptBenchRow {
+            phase: phase.into(),
+            requests,
+            tokens,
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+            swaps: snap.swaps,
+            entropy_bits: snap.dispatch_entropy,
+        })
+    };
+    let rows = vec![
+        serve_phase("before", false)?,
+        serve_phase("during", true)?,
+        serve_phase("after", false)?,
+    ];
+    let snap = handle.metrics.snapshot();
+    handle.shutdown()?;
+    for row in &rows {
+        table.row(vec![
+            row.phase.clone(),
+            format!("{:.3}", row.ms),
+            format!("{:.0} tok/s ({} req)", row.tok_s(), row.requests),
+            format!("swaps={} H={:.3} bits", row.swaps, row.entropy_bits),
+        ]);
+    }
+    table.row(vec![
+        "(rebuild)".into(),
+        format!("{:.3}", snap.recompress_s * 1e3),
+        format!("variant {:016x}", snap.active_variant),
+        format!("swaps={}", snap.swaps),
+    ]);
+    Ok(rows)
+}
+
 fn artifact_sections() -> anyhow::Result<()> {
     let lab = Lab::new("qwensim")?;
     let (b, t) = (lab.ctx.manifest.eval_b, lab.ctx.manifest.eval_t);
@@ -832,14 +927,8 @@ fn artifact_sections() -> anyhow::Result<()> {
         &["clients", "wall s", "req/s", "rows/s busy", "batches", "fill"],
     );
     for clients in [1usize, 4, 16] {
-        let spec = ServeSpec {
-            artifacts_root: lab.ctx.arts.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        };
+        let spec =
+            ServeSpec::for_tests(&lab.ctx.arts.root.to_string_lossy(), "qwensim");
         let handle = serve(
             spec,
             BatcherConfig { max_rows: b, max_wait: Duration::from_millis(4) },
@@ -1023,6 +1112,13 @@ fn main() -> anyhow::Result<()> {
     let spec_rows = spec_decode_sweep(&mut sptable)?;
     sptable.print();
     sptable.append_to("bench_results.md")?;
+    let mut atable = Table::new(
+        "Adaptive serving: throughput before/during/after live recompress + hot swap",
+        &["Phase", "wall ms", "served throughput", "adapt counters"],
+    );
+    let adapt_rows = adapt_sweep(&mut atable)?;
+    atable.print();
+    atable.append_to("bench_results.md")?;
     let gen_measurement = if bench_support::smoke() {
         "SMOKE MODE: single sample, harness check only — not a perf measurement"
     } else {
@@ -1039,7 +1135,10 @@ fn main() -> anyhow::Result<()> {
          sched_sweep drives a live server with mixed Interactive+Batch load on an 8-block \
          KV pool, chunked (4-token) vs unchunked prefill (chunked p99 ITL must not exceed \
          unchunked); spec_decode_sweep decodes the same prompt plainly and speculatively \
-         (qwensim verifier, HC-merged r=4 compact drafter) — exact must hold on every row"
+         (qwensim verifier, HC-merged r=4 compact drafter) — exact must hold on every row; \
+         adapt_sweep serves a steady load through a live background recompression and \
+         atomic hot swap (during tok/s must stay within a bounded fraction of before, \
+         and a swap must land)"
     );
     bench_support::write_generate_json(
         GENERATE_JSON,
@@ -1051,6 +1150,7 @@ fn main() -> anyhow::Result<()> {
         &kv_rows,
         &sched_rows,
         &spec_rows,
+        &adapt_rows,
     )?;
     println!("wrote {GENERATE_JSON}");
 

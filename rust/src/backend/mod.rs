@@ -220,6 +220,73 @@ pub struct VerifyOut {
     pub checkpoints: Vec<CacheSnapshot>,
 }
 
+/// A point-in-time copy of a model variant's live routing statistics:
+/// how many token-dispatches each expert slot received per layer since
+/// the variant was loaded (see [`Backend::routing_stats`]).
+///
+/// Deliberately **in-memory only** — there is no on-disk format for it
+/// (see `FORMATS.md`): the counts describe one resident variant's
+/// traffic window and are meaningless outside the process that observed
+/// them. The serving layer converts a windowed snapshot difference into
+/// [`crate::calib::CalibStats`]-compatible frequency weights for
+/// background recompression (`SERVING.md` §"Adaptive compression & hot
+/// swap").
+#[derive(Debug, Clone, Default)]
+pub struct RoutingSnapshot {
+    /// `counts[layer][slot]` = cumulative token-dispatches routed to that
+    /// expert slot (post-capacity admissions, so exactly the work the
+    /// grouped SwiGLU kernels executed).
+    pub counts: Vec<Vec<u64>>,
+    /// Cumulative routed **tokens** (layer-0 dispatches ÷ top-k): the
+    /// window clock adaptive recompression ticks on.
+    pub tokens: u64,
+}
+
+impl RoutingSnapshot {
+    /// Per-slot dispatch difference `self - earlier` (saturating, so a
+    /// mismatched or reset baseline degrades to the full counts instead
+    /// of panicking), with `tokens` differenced the same way — the
+    /// windowed view between two observation points.
+    pub fn since(&self, earlier: &RoutingSnapshot) -> RoutingSnapshot {
+        let counts = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(l, row)| {
+                row.iter()
+                    .enumerate()
+                    .map(|(s, &c)| {
+                        c.saturating_sub(
+                            earlier.counts.get(l).and_then(|r| r.get(s)).copied().unwrap_or(0),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        RoutingSnapshot { counts, tokens: self.tokens.saturating_sub(earlier.tokens) }
+    }
+
+    /// Shannon entropy (bits) of the layer-0 dispatch distribution — the
+    /// per-window concentration readout reported by the `adapt_sweep`
+    /// bench: `log2(n_slots)` for uniform traffic, approaching 0 as
+    /// traffic concentrates on few experts. `0.0` when nothing was
+    /// routed.
+    pub fn dispatch_entropy(&self) -> f64 {
+        let Some(row) = self.counts.first() else { return 0.0 };
+        let total: u64 = row.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        -row.iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total as f64;
+                p * p.log2()
+            })
+            .sum::<f64>()
+    }
+}
+
 /// A model-execution engine.
 ///
 /// One backend instance is bound to one model configuration (the
@@ -544,6 +611,18 @@ pub trait Backend {
     /// region against a freshly prefilled prefix). Errors if `snap` is
     /// *ahead* of the cache (snapshots only roll backwards).
     fn rollback_cache(&self, cache: &mut dyn KvCache, snap: &CacheSnapshot) -> Result<()>;
+
+    /// The variant's cumulative live routing statistics, or `None` when
+    /// this backend does not record them (the default — only the native
+    /// backend's serving entry points feed the accumulator today).
+    /// Recording costs one relaxed atomic add per (expert, dispatch
+    /// group) inside `moe_execute`, so reads are cheap point-in-time
+    /// copies and never perturb execution. Offline scoring
+    /// (`run_logits`) deliberately does NOT record — the accumulator
+    /// reflects *served* traffic only.
+    fn routing_stats(&self, _state: &dyn ModelState) -> Option<RoutingSnapshot> {
+        None
+    }
 }
 
 /// Environment variable selecting the execution backend (re-exported from
@@ -600,5 +679,23 @@ mod tests {
         };
         let b = native::NativeBackend::new(cfg);
         assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn routing_snapshot_windows_and_entropy() {
+        let a = RoutingSnapshot { counts: vec![vec![8, 8, 0, 0]], tokens: 8 };
+        let b = RoutingSnapshot { counts: vec![vec![24, 8, 0, 0]], tokens: 16 };
+        let w = b.since(&a);
+        assert_eq!(w.counts, vec![vec![16, 0, 0, 0]]);
+        assert_eq!(w.tokens, 8);
+        // all traffic on one expert => zero entropy; uniform => log2(n)
+        assert_eq!(w.dispatch_entropy(), 0.0);
+        assert!((a.dispatch_entropy() - 1.0).abs() < 1e-12);
+        let uniform = RoutingSnapshot { counts: vec![vec![5, 5, 5, 5]], tokens: 20 };
+        assert!((uniform.dispatch_entropy() - 2.0).abs() < 1e-12);
+        // a mismatched baseline degrades to the full counts, not a panic
+        let w2 = b.since(&RoutingSnapshot::default());
+        assert_eq!(w2.counts, b.counts);
+        assert_eq!(RoutingSnapshot::default().dispatch_entropy(), 0.0);
     }
 }

@@ -60,6 +60,7 @@
 //! dispatch-count checkpoints feed `rollback_cache` when the caller
 //! rejects a draft token.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use anyhow::{anyhow, ensure, Result};
@@ -72,7 +73,7 @@ use crate::weights::{QuantTensor, Weights};
 
 use super::{
     downcast_state, Backend, CacheMode, CacheSnapshot, KvCache, ModelState, PrefillOpts,
-    VerifyOut,
+    RoutingSnapshot, VerifyOut,
 };
 
 /// RMSNorm epsilon (mirrors `model.py::rmsnorm`).
@@ -83,12 +84,71 @@ pub struct NativeBackend {
     cfg: ModelCfg,
 }
 
+/// Live per-variant routing accumulator: one relaxed atomic counter per
+/// `(layer, slot)` plus a routed-token total, bumped by [`moe_execute`]
+/// on every **served** dispatch (prefill, chunked prefill, decode,
+/// verify — the scoring path `forward_logits_with` deliberately does not
+/// record, so offline eval never pollutes the live signal). Relaxed
+/// ordering is sound because readers only ever take whole-window
+/// snapshots and tolerate tearing across slots — the adaptive loop
+/// consumes *frequencies*, not an exact ledger. Deliberately in-memory
+/// only: this is live state, not an artifact (see FORMATS.md).
+struct RoutingStats {
+    /// Flattened `[n_layer, n_slots]` executed-dispatch counters.
+    counts: Vec<AtomicU64>,
+    /// Token rows routed (counted once, at layer 0).
+    tokens: AtomicU64,
+    n_slots: usize,
+}
+
+impl RoutingStats {
+    fn new(n_layer: usize, n_slots: usize) -> Self {
+        Self {
+            counts: (0..n_layer * n_slots).map(|_| AtomicU64::new(0)).collect(),
+            tokens: AtomicU64::new(0),
+            n_slots,
+        }
+    }
+
+    /// Record one executed dispatch set at `layer`: `per_slot[s]` holds
+    /// the rows expert-slot `s` actually ran (post-capacity), `tok` the
+    /// token rows this forward routed.
+    fn record(&self, layer: usize, per_slot: &[Vec<(usize, f32)>], tok: usize) {
+        let base = layer * self.n_slots;
+        for (slot, assigned) in per_slot.iter().enumerate() {
+            if !assigned.is_empty() {
+                self.counts[base + slot].fetch_add(assigned.len() as u64, Ordering::Relaxed);
+            }
+        }
+        if layer == 0 {
+            self.tokens.fetch_add(tok as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn snapshot(&self) -> RoutingSnapshot {
+        let n_layer = self.counts.len() / self.n_slots.max(1);
+        let counts = (0..n_layer)
+            .map(|l| {
+                (0..self.n_slots)
+                    .map(|s| self.counts[l * self.n_slots + s].load(Ordering::Relaxed))
+                    .collect()
+            })
+            .collect();
+        RoutingSnapshot { counts, tokens: self.tokens.load(Ordering::Relaxed) }
+    }
+}
+
 /// Resident native variant: a weight copy plus its physical slot count
-/// (and the lazily transposed embedding for the weight-tied decode head).
+/// (and the lazily transposed embedding for the weight-tied decode head),
+/// its weight-content hash (folded into every KV fingerprint so hot-swapped
+/// variants can never alias prefix blocks) and the live routing
+/// accumulator serving traffic writes into.
 struct NativeModel {
     weights: Weights,
     n_slots: usize,
     embed_t: OnceLock<Vec<f32>>,
+    weights_fp: u64,
+    routing: RoutingStats,
 }
 
 impl ModelState for NativeModel {
@@ -257,19 +317,25 @@ fn seq_cache_mut<'a>(c: &'a mut dyn KvCache, backend: &str) -> Result<SeqCacheMu
 /// change a position's K/V. The quantization flag matters because a
 /// quantized variant produces different hidden states (hence different
 /// K/V rows) than its f32 source under the *same* mask/remap; without the
-/// marker the two could alias shared prefix blocks. Two variants of the
-/// same pool never alias blocks unless all four match (pools are
-/// additionally documented as per-model, so weights are fixed per pool).
+/// marker the two could alias shared prefix blocks. `weights_fp` is the
+/// resident variant's weight-content hash ([`Weights::content_hash`],
+/// computed once at `load_model`): under adaptive serving, a hot-swapped
+/// recompressed variant can share a pool with its predecessor at the same
+/// mask/remap/slot shape, and only the weight identity separates their
+/// K/V rows. Two variants of the same pool never alias blocks unless all
+/// five components match.
 fn variant_fingerprint(
     mask: &[f32],
     remap: Option<&[i32]>,
     n_slots: usize,
     quantized: bool,
+    weights_fp: u64,
 ) -> u64 {
     use std::hash::{Hash, Hasher};
     let mut h = std::collections::hash_map::DefaultHasher::new();
     n_slots.hash(&mut h);
     quantized.hash(&mut h);
+    weights_fp.hash(&mut h);
     for &x in mask {
         x.to_bits().hash(&mut h);
     }
@@ -376,6 +442,7 @@ impl NativeBackend {
                 threads,
                 &mut parts.counts[l],
                 cap,
+                Some(&m.routing),
             )?;
             for (hv, yv) in h.iter_mut().zip(&y) {
                 *hv += yv;
@@ -748,7 +815,7 @@ impl NativeBackend {
             let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
             let y = moe_verify(
                 cfg, w, l, &hf, tokens, &t0s, mask_l, remap_l, m.n_slots, threads, &mut cs,
-                &mut ckpts,
+                &mut ckpts, Some(&m.routing),
             )?;
             for (hv, yv) in h.iter_mut().zip(&y) {
                 *hv += yv;
@@ -975,6 +1042,7 @@ impl NativeBackend {
             let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
             let y = moe_chunk(
                 cfg, w, l, &hf, t0, c, mask_l, remap_l, m.n_slots, threads, &mut cs,
+                Some(&m.routing),
             )?;
             for (hv, yv) in h.iter_mut().zip(&y) {
                 *hv += yv;
@@ -1005,6 +1073,10 @@ impl Backend for NativeBackend {
             weights: weights.clone(),
             n_slots,
             embed_t: OnceLock::new(),
+            // hashed once per load: every KV fingerprint and the variant
+            // registry's identity key derive from this
+            weights_fp: weights.content_hash(),
+            routing: RoutingStats::new(self.cfg.n_layer, n_slots),
         }))
     }
 
@@ -1125,7 +1197,13 @@ impl Backend for NativeBackend {
                     .counts
                     .iter()
                     .all(|layer| layer.iter().all(|&n| n <= parts.cap));
-                let fp = variant_fingerprint(mask, remap, m.n_slots, m.weights.is_quantized());
+                let fp = variant_fingerprint(
+                    mask,
+                    remap,
+                    m.n_slots,
+                    m.weights.is_quantized(),
+                    m.weights_fp,
+                );
                 seq.fill_from_rows(ids, fp, drop_free, &parts.k, &parts.v)?;
                 Ok((
                     Some(Box::new(NativePagedKvCache { seq, counts: parts.counts })),
@@ -1228,6 +1306,11 @@ impl Backend for NativeBackend {
             }
         }
         Ok(())
+    }
+
+    fn routing_stats(&self, state: &dyn ModelState) -> Option<RoutingSnapshot> {
+        let m: &NativeModel = downcast_state(state, self.name()).ok()?;
+        Some(m.routing.snapshot())
     }
 }
 
@@ -1615,6 +1698,7 @@ fn moe_layer(
     threads: usize,
     counts: &mut [usize],
     cap: usize,
+    stats: Option<&RoutingStats>,
 ) -> Result<Vec<f32>> {
     let d = cfg.d;
     let n = cfg.n_exp;
@@ -1649,7 +1733,7 @@ fn moe_layer(
             }
         }
     }
-    moe_execute(cfg, w, layer, hf, tok, &per_slot, n_slots, threads)
+    moe_execute(cfg, w, layer, hf, tok, &per_slot, n_slots, threads, stats)
 }
 
 /// Execute a routed dispatch: one grouped SwiGLU GEMM per expert over its
@@ -1672,7 +1756,14 @@ fn moe_execute(
     per_slot: &[Vec<(usize, f32)>],
     n_slots: usize,
     threads: usize,
+    stats: Option<&RoutingStats>,
 ) -> Result<Vec<f32>> {
+    // Single observation point for live routing stats: every serving path
+    // (prefill, chunked prefill, decode, verify) flows through here, so
+    // one `record` covers them all; scoring callers pass `None`.
+    if let Some(st) = stats {
+        st.record(layer, per_slot, tok);
+    }
     let d = cfg.d;
     // Per-variant kernel selection: a quantized variant carries its expert
     // triples in the int8 section, and every caller (scoring prefill,
@@ -1783,6 +1874,7 @@ fn moe_verify(
     threads: usize,
     cs: &mut [SeqCacheMut],
     ckpts: &mut [Vec<Vec<Vec<usize>>>],
+    stats: Option<&RoutingStats>,
 ) -> Result<Vec<f32>> {
     let d = cfg.d;
     let n = cfg.n_exp;
@@ -1830,7 +1922,7 @@ fn moe_verify(
     }
     // grouped execution: all rows routed to an expert run as one block,
     // through the exact code the scoring/prefill path uses
-    moe_execute(cfg, w, layer, hf, rtot, &per_slot, n_slots, threads)
+    moe_execute(cfg, w, layer, hf, rtot, &per_slot, n_slots, threads, stats)
 }
 
 /// One SMoE FFN block over a **prompt chunk** of a single resumed
@@ -1858,6 +1950,7 @@ fn moe_chunk(
     n_slots: usize,
     threads: usize,
     cs: &mut SeqCacheMut,
+    stats: Option<&RoutingStats>,
 ) -> Result<Vec<f32>> {
     let d = cfg.d;
     let n = cfg.n_exp;
@@ -1890,7 +1983,7 @@ fn moe_chunk(
             }
         }
     }
-    moe_execute(cfg, w, layer, hf, c, &per_slot, n_slots, threads)
+    moe_execute(cfg, w, layer, hf, c, &per_slot, n_slots, threads, stats)
 }
 
 /// `dssim`'s always-on shared expert: `y += swiglu(hf, shared.*)`.
@@ -1963,8 +2056,10 @@ pub fn forward_logits_with(
         let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
         let mut counts = vec![0usize; n_slots];
         let cap = cfg.capacity(tok, n_slots);
+        // scoring path: `None` — offline eval must not pollute the live
+        // routing signal a resident serving variant accumulates
         let y = moe_layer(
-            cfg, w, l, &hf, tok, mask_l, remap_l, n_slots, threads, &mut counts, cap,
+            cfg, w, l, &hf, tok, mask_l, remap_l, n_slots, threads, &mut counts, cap, None,
         )?;
         for (hv, yv) in h.iter_mut().zip(&y) {
             *hv += yv;
@@ -2270,5 +2365,58 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The live routing accumulator counts served traffic (prefill +
+    /// decode) and nothing else: the scoring path (`run_logits`) must
+    /// leave it untouched, or offline eval would skew the adaptive
+    /// recompression signal.
+    #[test]
+    fn routing_stats_count_served_traffic_only() {
+        let cfg = ModelCfg {
+            name: "rs".into(),
+            n_layer: 2,
+            d: 8,
+            m: 8,
+            n_exp: 4,
+            k: 2,
+            heads: 2,
+            vocab: 24,
+            t_max: 32,
+            shared: false,
+            m_shared: 8,
+            cap_factor: 4.0,
+            block_c: 4,
+        };
+        let w = Weights::synthesize(&cfg, 99);
+        let backend = NativeBackend::new(cfg.clone());
+        let state = backend.load_model(&w, cfg.n_exp).unwrap();
+        let mask = vec![0f32; cfg.n_layer * cfg.n_exp];
+        let snap0 = backend.routing_stats(state.as_ref()).unwrap();
+        assert_eq!(snap0.tokens, 0, "fresh variant starts at zero");
+
+        // scoring does not record
+        let ids: Vec<i32> = (0..6).map(|i| (i % cfg.vocab) as i32).collect();
+        backend.run_logits(state.as_ref(), &ids, 1, 6, &mask, None).unwrap();
+        let snap = backend.routing_stats(state.as_ref()).unwrap();
+        assert_eq!(snap.tokens, 0, "run_logits must not pollute live stats");
+
+        // a served prefill + one decode step record exactly t + 1 tokens,
+        // each dispatched to k experts per layer (cap_factor 4.0 → no drops)
+        let (cache, _) = backend
+            .run_prefill(state.as_ref(), &ids, PrefillOpts::new(&mask))
+            .unwrap();
+        let mut cache = cache.unwrap();
+        backend.run_decode(state.as_ref(), cache.as_mut(), 1, &mask, None).unwrap();
+        let snap = backend.routing_stats(state.as_ref()).unwrap();
+        assert_eq!(snap.tokens, 7);
+        for (l, layer) in snap.counts.iter().enumerate() {
+            assert_eq!(
+                layer.iter().sum::<u64>(),
+                7 * cfg.k as u64,
+                "layer {l}: every routed token lands on k slots"
+            );
+        }
+        assert!(snap.dispatch_entropy() > 0.0, "traffic spreads over > 1 expert");
     }
 }

@@ -237,4 +237,12 @@ impl Backend for PjrtBackend {
              to \"native\")"
         ))
     }
+
+    fn routing_stats(&self, _state: &dyn ModelState) -> Option<super::RoutingSnapshot> {
+        // Routing decisions happen inside the lowered HLO on this path;
+        // surfacing them would need a dedicated counts output on the
+        // executables (same follow-up as the incremental entry points).
+        // `None` makes the serving layer's adaptive path a no-op here.
+        None
+    }
 }

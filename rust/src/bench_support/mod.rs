@@ -516,6 +516,44 @@ impl SpecDecodeRow {
     }
 }
 
+/// One adaptive-serving measurement row for the `adapt_sweep` section of
+/// `BENCH_generate.json`: an adaptively-compressing server
+/// ([`crate::serving::AdaptSpec`]) is driven with a steady request load
+/// through three phases — `before` (original variant, window still
+/// filling), `during` (background recompression in flight on the worker
+/// thread) and `after` (the hot-swapped compact variant) — measuring
+/// served throughput per phase. `swaps` counts hot swaps observed by the
+/// end of the phase and `entropy_bits` is the layer-0 dispatch entropy of
+/// the most recent routing window. CI asserts the serving path never
+/// stalls behind the rebuild (`during` ≥ a fraction of `before`) and that
+/// a swap actually landed (`scripts/check_adapt.sh`).
+#[derive(Debug, Clone)]
+pub struct AdaptBenchRow {
+    /// Measured phase: `before`, `during` or `after` the first hot swap.
+    pub phase: String,
+    /// Generation requests completed in the phase.
+    pub requests: usize,
+    /// Tokens emitted in the phase.
+    pub tokens: usize,
+    /// Wall-clock of the phase (ms).
+    pub ms: f64,
+    /// Hot swaps the server had performed by the end of the phase.
+    pub swaps: u64,
+    /// Layer-0 dispatch entropy (bits) of the latest routing window.
+    pub entropy_bits: f64,
+}
+
+impl AdaptBenchRow {
+    /// Served throughput in tokens per second.
+    pub fn tok_s(&self) -> f64 {
+        if self.ms > 0.0 {
+            self.tokens as f64 / (self.ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Write the machine-readable generation-throughput report
 /// (`BENCH_generate.json`). Hand-rolled JSON like [`write_parallel_json`];
 /// the schema is stable — later PRs append rows with new `path`/`variant`
@@ -531,7 +569,10 @@ impl SpecDecodeRow {
 /// latency ≤ unchunked); the `spec_decode_sweep` section compares plain
 /// decode against speculative draft-k/verify-1 with a compact merged
 /// drafter (CI asserts `exact` on every row and acceptance > 0 for
-/// k ≥ 2 via `scripts/check_spec_decode.sh`).
+/// k ≥ 2 via `scripts/check_spec_decode.sh`); the `adapt_sweep` section
+/// measures served throughput before/during/after a live
+/// recompression + hot swap (CI asserts the rebuild never stalls serving
+/// and that a swap landed via `scripts/check_adapt.sh`).
 pub fn write_generate_json(
     path: &str,
     threads: usize,
@@ -542,6 +583,7 @@ pub fn write_generate_json(
     kv_rows: &[KvCacheBenchRow],
     sched_rows: &[SchedBenchRow],
     spec_rows: &[SpecDecodeRow],
+    adapt_rows: &[AdaptBenchRow],
 ) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -639,6 +681,23 @@ pub fn write_generate_json(
             r.plain_tok_s(),
             r.spec_tok_s(),
             r.exact
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"adapt_sweep\": [\n");
+    for (i, r) in adapt_rows.iter().enumerate() {
+        let comma = if i + 1 < adapt_rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"phase\": \"{}\", \"requests\": {}, \"tokens\": {}, \
+             \"ms\": {:.4}, \"tok_s\": {:.1}, \"swaps\": {}, \
+             \"entropy_bits\": {:.4}}}{comma}\n",
+            json_escape(&r.phase),
+            r.requests,
+            r.tokens,
+            r.ms,
+            r.tok_s(),
+            r.swaps,
+            r.entropy_bits
         ));
     }
     out.push_str("  ]\n}\n");

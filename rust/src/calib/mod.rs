@@ -128,6 +128,33 @@ impl CalibStats {
     pub fn n_experts(&self) -> usize {
         self.layers[0].counts.len()
     }
+
+    /// The same statistics with every layer's routing frequencies replaced
+    /// by **live serving dispatch counts** (one `[n_exp]` row per layer,
+    /// e.g. a [`crate::backend::RoutingSnapshot`] window) — the adaptive
+    /// recompression bridge: similarity features stay calibration-derived,
+    /// while frequency weighting ([`LayerStats::norm_freq`], Algorithm 1
+    /// line 14) follows the traffic actually served. A layer whose live
+    /// row is all-zero keeps `norm_freq`'s uniform fallback semantics.
+    pub fn reweighted(&self, live: &[Vec<u64>]) -> Result<Self> {
+        ensure!(
+            live.len() == self.n_layers(),
+            "live counts cover {} layers, stats have {}",
+            live.len(),
+            self.n_layers()
+        );
+        let mut out = self.clone();
+        for (l, (layer, row)) in out.layers.iter_mut().zip(live).enumerate() {
+            ensure!(
+                row.len() == layer.counts.len(),
+                "live counts at layer {l} cover {} experts, stats have {}",
+                row.len(),
+                layer.counts.len()
+            );
+            layer.counts = row.iter().map(|&c| c as f32).collect();
+        }
+        Ok(out)
+    }
 }
 
 /// Accumulate `fresh` into `acc` layer by layer. Layers are independent, so

@@ -6,11 +6,13 @@
 //! with a uniform message style — silently falling back to a default
 //! would run a different configuration than the operator asked for:
 //!
-//! | variable              | meaning                                   | default      |
-//! |-----------------------|-------------------------------------------|--------------|
-//! | `HCSMOE_BACKEND`      | execution backend (`native` \| `pjrt`)    | `native`     |
-//! | `HCSMOE_KV_BUDGET_MB` | paged KV-cache pool budget, whole MiB     | 64           |
-//! | `HCSMOE_PREFILL_CHUNK`| prompt tokens per prefill chunk (>= 1)    | unchunked    |
+//! | variable                  | meaning                                   | default      |
+//! |---------------------------|-------------------------------------------|--------------|
+//! | `HCSMOE_BACKEND`          | execution backend (`native` \| `pjrt`)    | `native`     |
+//! | `HCSMOE_KV_BUDGET_MB`     | paged KV-cache pool budget, whole MiB     | 64           |
+//! | `HCSMOE_PREFILL_CHUNK`    | prompt tokens per prefill chunk (>= 1)    | unchunked    |
+//! | `HCSMOE_ADAPT_WINDOW`     | routed tokens per adaptive-recompression window (>= 1) | 4096 |
+//! | `HCSMOE_ADAPT_MIN_TOKENS` | total routed tokens before the first recompression | 0 |
 //!
 //! The resolvers below each take the corresponding `ServeSpec` field (or
 //! nothing, for process-wide knobs) and apply the precedence *explicit
@@ -35,6 +37,22 @@ pub const DEFAULT_KV_BUDGET_MB: usize = 64;
 /// scheduler prefills between consecutive decode steps (chunked prefill;
 /// see `SERVING.md` §"Scheduler"). Unset = whole-prompt prefills.
 pub const PREFILL_CHUNK_ENV: &str = "HCSMOE_PREFILL_CHUNK";
+
+/// Environment variable setting how many routed tokens the adaptive
+/// server observes per recompression window (see `SERVING.md`
+/// §"Adaptive compression & hot swap"). A background recompression is
+/// considered once the live [`crate::backend::RoutingSnapshot`] has
+/// accumulated this many tokens since the last swap.
+pub const ADAPT_WINDOW_ENV: &str = "HCSMOE_ADAPT_WINDOW";
+
+/// Default adaptive-recompression window when neither the spec nor
+/// [`ADAPT_WINDOW_ENV`] says otherwise (routed tokens).
+pub const DEFAULT_ADAPT_WINDOW: u64 = 4096;
+
+/// Environment variable setting the total routed-token floor before the
+/// FIRST adaptive recompression may trigger — a warm-up guard so a few
+/// unrepresentative early requests cannot specialize the model.
+pub const ADAPT_MIN_TOKENS_ENV: &str = "HCSMOE_ADAPT_MIN_TOKENS";
 
 /// Which execution backend to construct (see [`crate::backend::from_env`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,6 +128,56 @@ fn parse_prefill_chunk(v: &str) -> Result<usize> {
     }
 }
 
+/// Resolve the adaptive-recompression window in routed tokens: the
+/// explicit spec value when given, else [`ADAPT_WINDOW_ENV`], else
+/// [`DEFAULT_ADAPT_WINDOW`]. `Some(0)` from the spec is rejected like a
+/// malformed env value — a zero-token window would recompress on every
+/// executor iteration.
+pub fn adapt_window(explicit: Option<u64>) -> Result<u64> {
+    if let Some(w) = explicit {
+        if w == 0 {
+            return Err(anyhow!(
+                "adapt window=0 is not a positive token count (e.g. 4096)"
+            ));
+        }
+        return Ok(w);
+    }
+    match std::env::var(ADAPT_WINDOW_ENV) {
+        Ok(v) => parse_adapt_window(&v),
+        Err(_) => Ok(DEFAULT_ADAPT_WINDOW),
+    }
+}
+
+fn parse_adapt_window(v: &str) -> Result<u64> {
+    match v.trim().parse::<u64>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(anyhow!(
+            "{ADAPT_WINDOW_ENV}={v:?} is not a positive token count (e.g. 4096)"
+        )),
+    }
+}
+
+/// Resolve the total routed-token floor before the first adaptive
+/// recompression: the explicit spec value when given, else
+/// [`ADAPT_MIN_TOKENS_ENV`], else `0` (no warm-up floor beyond the
+/// window itself). Zero is a legal value — unlike the window, a zero
+/// floor is simply "no extra guard".
+pub fn adapt_min_tokens(explicit: Option<u64>) -> Result<u64> {
+    if let Some(n) = explicit {
+        return Ok(n);
+    }
+    match std::env::var(ADAPT_MIN_TOKENS_ENV) {
+        Ok(v) => parse_adapt_min_tokens(&v),
+        Err(_) => Ok(0),
+    }
+}
+
+fn parse_adapt_min_tokens(v: &str) -> Result<u64> {
+    v.trim().parse::<u64>().map_err(|_| {
+        anyhow!("{ADAPT_MIN_TOKENS_ENV}={v:?} is not a token count (e.g. 8192)")
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +213,31 @@ mod tests {
         // explicit spec values win, and zero is rejected at startup
         assert_eq!(prefill_chunk(Some(16)).unwrap(), Some(16));
         assert!(prefill_chunk(Some(0)).is_err());
+    }
+
+    #[test]
+    fn adapt_window_requires_a_positive_count() {
+        assert_eq!(parse_adapt_window("4096").unwrap(), 4096);
+        assert_eq!(parse_adapt_window(" 1 ").unwrap(), 1);
+        for bad in ["0", "-4", "soon", ""] {
+            let err = parse_adapt_window(bad).unwrap_err().to_string();
+            assert!(err.contains("HCSMOE_ADAPT_WINDOW"), "{err}");
+        }
+        // explicit spec values win, and zero is rejected at startup
+        assert_eq!(adapt_window(Some(64)).unwrap(), 64);
+        assert!(adapt_window(Some(0)).is_err());
+    }
+
+    #[test]
+    fn adapt_min_tokens_parses_counts_and_allows_zero() {
+        assert_eq!(parse_adapt_min_tokens("8192").unwrap(), 8192);
+        assert_eq!(parse_adapt_min_tokens("0").unwrap(), 0);
+        for bad in ["-1", "never", ""] {
+            let err = parse_adapt_min_tokens(bad).unwrap_err().to_string();
+            assert!(err.contains("HCSMOE_ADAPT_MIN_TOKENS"), "{err}");
+        }
+        // explicit spec values win without consulting the environment
+        assert_eq!(adapt_min_tokens(Some(7)).unwrap(), 7);
+        assert_eq!(adapt_min_tokens(Some(0)).unwrap(), 0);
     }
 }

@@ -65,10 +65,12 @@ pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 /// [`crate::config::env`], where every runtime knob parses).
 pub use crate::config::env::{DEFAULT_KV_BUDGET_MB, KV_BUDGET_ENV};
 
-/// Sharing-map key: a variant fingerprint (mask/remap/slot-count hash, so
-/// different model variants never alias) plus the exact token prefix the
-/// block's K/V were computed from. Using the tokens themselves — not a
-/// hash of them — makes false sharing impossible.
+/// Sharing-map key: a variant fingerprint (mask, remap, slot count,
+/// quantization AND weight content — so different model variants never
+/// alias, including two hot-swapped variants with identical structure
+/// but different merged weights) plus the exact token prefix the block's
+/// K/V were computed from. Using the tokens themselves — not a hash of
+/// them — makes false sharing impossible.
 type SharedKey = (u64, Vec<i32>);
 
 /// Per-block bookkeeping: reference count plus the sharing-map key (so the
@@ -109,9 +111,10 @@ impl PoolStats {
     }
 }
 
-/// The budgeted block arena. See the module docs for the design; create
-/// one per served model variant (the sharing map is fingerprint-scoped,
-/// but block geometry is bound to one `(n_layer, d)`).
+/// The budgeted block arena. See the module docs for the design. One pool
+/// safely spans every variant a server hot-swaps through: the sharing map
+/// is fingerprint-scoped (and the fingerprint covers weight content), so
+/// only block geometry — bound to one `(n_layer, d)` — limits reuse.
 pub struct KvPool {
     n_layer: usize,
     d: usize,

@@ -65,6 +65,7 @@ pub mod serving;
 pub mod similarity;
 pub mod tensor;
 pub mod util;
+pub mod variant;
 pub mod weights;
 
 /// One-import surface for the common pipeline types (see the crate-level

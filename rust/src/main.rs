@@ -7,7 +7,7 @@
 //!   calibrate  <model> [domain]  run the calibration pass, print stats
 //!   compress   <model> <r> [--method M] [--domain D]   compress + report
 //!   eval       <model> <r> [--method M] [--domain D] [--tasks a,b]
-//!   serve      <model> [--r R --method M] [--requests N]
+//!   serve      <model> [--r R --method M] [--requests N] [--adaptive]
 //!   generate   <model> [--prompt 1,4,20] [--max-tokens N] [--sample]
 //!              [--top-k K --temperature T --seed S] [--r R --method M]
 //!              [--compact] [--speculative --draft-k K]
@@ -32,7 +32,7 @@ use hc_smoe::merging::MergeStrategy;
 use hc_smoe::model::ModelContext;
 use hc_smoe::pipeline::{compressed_params, Method, Pipeline};
 use hc_smoe::report::Table;
-use hc_smoe::serving::{serve, BatcherConfig, ServeSpec};
+use hc_smoe::serving::{serve, AdaptSpec, BatcherConfig, ServeSpec};
 use hc_smoe::similarity::Metric;
 use hc_smoe::util::Timer;
 
@@ -166,7 +166,7 @@ COMMANDS:
   calibrate <model> [--domain D]
   compress  <model> <r> [--method M] [--domain D]
   eval      <model> <r> [--method M] [--domain D] [--tasks a,b,..]
-  serve     <model> [--r R] [--method M] [--requests N]
+  serve     <model> [--r R] [--method M] [--requests N] [--adaptive]
   generate  <model> [--prompt 1,4,20,3] [--max-tokens N] [--sample]
             [--top-k K] [--temperature T] [--seed S] [--eos TOK]
             [--r R] [--method M] [--domain D] [--compact]
@@ -177,7 +177,8 @@ METHODS: hc-avg hc-single hc-complete hc-nu kmeans-fix kmeans-rnd fcm
          single-shot m-smoe o-prune s-prune f-prune
 
 ENV: HCSMOE_ARTIFACTS (default ./artifacts, falling back to a synthesized
-     ./artifacts-synth), HCSMOE_BACKEND (native | pjrt, default native)",
+     ./artifacts-synth), HCSMOE_BACKEND (native | pjrt, default native),
+     HCSMOE_ADAPT_WINDOW / HCSMOE_ADAPT_MIN_TOKENS (serve --adaptive)",
         hc_smoe::version()
     );
 }
@@ -323,7 +324,27 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         )),
         None => None,
     };
+    // --adaptive: recompress from live routing stats and hot-swap variants
+    // while serving; the policy (method/r/domain) mirrors --r/--method,
+    // defaulting to r = n_exp/2 when --r is absent. Window and warm-up
+    // resolve HCSMOE_ADAPT_WINDOW / HCSMOE_ADAPT_MIN_TOKENS.
     let ctx = ModelContext::load(arts, model)?;
+    let adapt = if args.flags.contains_key("adaptive") {
+        let r = match args.flags.get("r") {
+            Some(r) => r.parse::<usize>()?,
+            None => (ctx.cfg.n_exp / 2).max(1),
+        };
+        Some(AdaptSpec {
+            method: parse_method(&args.flag("method", "hc-avg"), 42)?,
+            r,
+            domain: args.flag("domain", "general"),
+            quantize: false,
+            window_tokens: None,
+            min_tokens: None,
+        })
+    } else {
+        None
+    };
     let bench = hc_smoe::data::Benchmark::load(ctx.arts.benchmark("arc_e"))?;
     let spec = ServeSpec {
         artifacts_root: arts.root.to_string_lossy().into_owned(),
@@ -332,6 +353,7 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         kv_budget_bytes: None,
         prefill_chunk: None,
         drafter: None,
+        adapt,
     };
     let handle = serve(
         spec,
@@ -363,6 +385,13 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         snap.mean_batch_fill(ctx.manifest.eval_b),
         correct as f64 / n_requests as f64,
     );
+    if args.flags.contains_key("adaptive") {
+        println!(
+            "adaptive: {} swaps, active variant {:016x}, recompress {:.2}s, \
+             window entropy {:.3} bits",
+            snap.swaps, snap.active_variant, snap.recompress_s, snap.dispatch_entropy,
+        );
+    }
     Ok(())
 }
 

@@ -59,6 +59,19 @@ pub struct CompactModel {
     pub r: usize,
 }
 
+impl LoadedModel {
+    /// Assemble a variant from an already-resident backend state — the
+    /// [`crate::variant`] registry's test seam; normal construction goes
+    /// through [`ModelContext::load_model`].
+    pub(crate) fn from_parts(
+        state: Box<dyn ModelState>,
+        mask: Vec<f32>,
+        label: &str,
+    ) -> Self {
+        Self { state, mask, label: label.to_string() }
+    }
+}
+
 impl ModelContext {
     /// Load a model (config + weights) from an artifact directory and bind
     /// the runtime-selected execution backend.
@@ -361,6 +374,19 @@ impl ModelContext {
             &mask,
             Some(&model.remap),
         )
+    }
+
+    /// Live routing statistics accumulated by a resident serving variant
+    /// ([`crate::backend::Backend::routing_stats`]): per-layer per-slot
+    /// executed-dispatch counts plus routed-token total, recorded by
+    /// every prefill/decode/verify call against `model`. `None` on
+    /// backends that cannot observe routing (PJRT). The adaptive serving
+    /// loop windows these snapshots into a recompression signal.
+    pub fn routing_stats(
+        &self,
+        model: &LoadedModel,
+    ) -> Option<crate::backend::RoutingSnapshot> {
+        self.backend.routing_stats(model.state.as_ref())
     }
 
     /// Capture a cache's logical state (length + dispatch bookkeeping)

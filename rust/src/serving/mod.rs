@@ -43,22 +43,23 @@
 
 pub mod scheduler;
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{CacheSnapshot, KvCache};
-use crate::calib::CalibStats;
+use crate::backend::{CacheSnapshot, KvCache, RoutingSnapshot};
 use crate::config::Artifacts;
 use crate::eval::log_softmax_at;
 use crate::generate::{Generated, SamplingParams, Session};
 use crate::kvpool::{PoolHandle, KV_BUDGET_ENV};
-use crate::model::{CompactModel, LoadedModel, ModelContext};
-use crate::pipeline::{Method, Pipeline};
+use crate::model::ModelContext;
+use crate::pipeline::{CompressedModel, Method};
+use crate::variant::{self, SwapOutcome, Variant, VariantRegistry};
 
 pub use scheduler::{LatencyHisto, Priority};
 use scheduler::{ActiveGen, DraftSeq, PrefillInFlight, Queued, SchedQueues};
@@ -415,6 +416,22 @@ pub struct Metrics {
     /// Inter-token latency histogram over Interactive-class decode steps
     /// (time between consecutive token emissions of one sequence).
     pub itl: LatencyHisto,
+    /// Variant hot-swaps performed by the adaptive recompression loop
+    /// (deduplicated candidates — identical fingerprints — don't count).
+    pub swaps: AtomicU64,
+    /// Gauge: weight-content fingerprint of the currently active variant.
+    /// New sequences admitted after a swap provably run this fingerprint
+    /// (`rust/tests/adapt.rs` pins it against an offline rebuild).
+    pub active_variant: AtomicU64,
+    /// Nanoseconds spent in background recompressions (wall-clock from
+    /// spawn to the executor landing the result; the executor keeps
+    /// serving throughout — this is NOT executor stall time).
+    pub recompress_ns: AtomicU64,
+    /// Gauge: Shannon entropy (bits × 1000) of the current routing
+    /// window's layer-0 dispatch distribution. Falling entropy means
+    /// traffic is concentrating on few experts — exactly the condition
+    /// adaptive recompression exploits.
+    pub dispatch_entropy_milli: AtomicU64,
 }
 
 impl Metrics {
@@ -445,6 +462,10 @@ impl Metrics {
             spec_rounds: self.spec_rounds.load(Ordering::Relaxed),
             itl_p50_ms: self.itl.quantile_ms(0.50),
             itl_p99_ms: self.itl.quantile_ms(0.99),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            active_variant: self.active_variant.load(Ordering::Relaxed),
+            recompress_s: self.recompress_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            dispatch_entropy: self.dispatch_entropy_milli.load(Ordering::Relaxed) as f64 / 1e3,
         }
     }
 }
@@ -501,6 +522,15 @@ pub struct MetricsSnapshot {
     pub itl_p50_ms: f64,
     /// 99th-percentile Interactive inter-token latency (ms).
     pub itl_p99_ms: f64,
+    /// Variant hot-swaps performed.
+    pub swaps: u64,
+    /// Gauge: fingerprint of the currently active variant.
+    pub active_variant: u64,
+    /// Seconds spent in background recompressions (wall-clock, off the
+    /// executor thread).
+    pub recompress_s: f64,
+    /// Gauge: dispatch entropy (bits) of the current routing window.
+    pub dispatch_entropy: f64,
 }
 
 impl MetricsSnapshot {
@@ -610,6 +640,56 @@ pub struct ServeSpec {
     /// pool with the full model (cache pairs never alias blocks — the
     /// pool's sharing map is keyed by variant fingerprint).
     pub drafter: Option<(Method, usize, String)>,
+    /// Adaptive recompression policy: `Some` makes the executor watch
+    /// live routing statistics and hot-swap in freshly recompressed
+    /// variants (see `SERVING.md` §"Adaptive compression & hot swap").
+    /// Requires a backend that reports routing stats (native); a `Some`
+    /// here on a backend that doesn't is a startup error.
+    pub adapt: Option<AdaptSpec>,
+}
+
+impl ServeSpec {
+    /// A spec serving the original model from `root` with every optional
+    /// knob off — the single test-suite constructor, so adding a field to
+    /// `ServeSpec` no longer breaks a dozen hand-written literals across
+    /// `rust/tests/`.
+    pub fn for_tests(root: &str, model: &str) -> Self {
+        Self {
+            artifacts_root: root.to_string(),
+            model: model.to_string(),
+            compress: None,
+            kv_budget_bytes: None,
+            prefill_chunk: None,
+            drafter: None,
+            adapt: None,
+        }
+    }
+}
+
+/// Adaptive recompression policy ([`ServeSpec::adapt`]): how and when the
+/// serving executor rebuilds the served variant from live routing
+/// statistics.
+#[derive(Debug, Clone)]
+pub struct AdaptSpec {
+    /// Compression method recompressed variants are built with.
+    pub method: Method,
+    /// Expert budget (experts kept per layer) of recompressed variants.
+    pub r: usize,
+    /// Calibration domain seeding the similarity statistics; only the
+    /// per-expert frequency weighting is replaced by the live routing
+    /// window ([`crate::calib::CalibStats::reweighted`]).
+    pub domain: String,
+    /// Quantize recompressed variants to int8 experts before swapping.
+    pub quantize: bool,
+    /// Routed tokens per recompression window. `None` resolves
+    /// `HCSMOE_ADAPT_WINDOW` (default 4096); `Some(0)` is a startup
+    /// error (all knobs validate via [`crate::config::env`]).
+    pub window_tokens: Option<u64>,
+    /// Routed tokens the active variant must have served before the
+    /// FIRST recompression fires (warm-up guard against adapting to a
+    /// cold, unrepresentative window). `None` resolves
+    /// `HCSMOE_ADAPT_MIN_TOKENS` (default 0 = no warm-up).
+    pub min_tokens: Option<u64>,
 }
 
 /// Client-side handle to a running server.
@@ -729,24 +809,54 @@ struct Pending {
     remaining: usize,
 }
 
-/// The executor: one thread owning the model and all execution state.
+/// The executor: one thread owning the variant registry and all
+/// execution state.
 struct Executor {
     ctx: ModelContext,
-    model: LoadedModel,
+    /// The variant lifecycle owner: active variant, optional resident
+    /// drafter, retired-variant ledger. `RefCell` because the executor's
+    /// methods take `&self` but a hot-swap mutates the registry — all on
+    /// the one executor thread.
+    registry: RefCell<VariantRegistry>,
     bsz: usize,
     t: usize,
     batcher: BatcherConfig,
     metrics: Arc<Metrics>,
     /// The paged KV-cache pool every generation's cache lives in — the
     /// memory budget admission control enforces. Speculative sequences
-    /// keep BOTH caches of their full/drafter pair here.
+    /// keep BOTH caches of their full/drafter pair here. One pool spans
+    /// every variant: block sharing keys on the variant fingerprint
+    /// (which folds in weight content), so prefixes never alias across a
+    /// hot swap.
     pool: PoolHandle,
     /// Most prompt tokens prefilled between consecutive decode steps
     /// (`None` = whole-prompt prefills).
     chunk: Option<usize>,
-    /// The resident compact drafter variant ([`ServeSpec::drafter`]);
-    /// `None` rejects speculative requests at intake.
-    drafter: Option<CompactModel>,
+    /// Live adaptive-recompression state ([`ServeSpec::adapt`]); `None`
+    /// serves a single fixed variant forever.
+    adapt: RefCell<Option<AdaptState>>,
+}
+
+/// Live state of the adaptive recompression loop.
+struct AdaptState {
+    spec: AdaptSpec,
+    /// Resolved window size (routed tokens per recompression window).
+    window: u64,
+    /// Resolved warm-up bound (routed tokens before the FIRST
+    /// recompression).
+    min_tokens: u64,
+    /// Whether any recompression has been spawned yet (`min_tokens` only
+    /// guards the first one).
+    fired: bool,
+    /// Routing snapshot at the start of the current window; re-marked
+    /// after every spawn and after every landed result.
+    mark: RoutingSnapshot,
+    /// The in-flight background recompression: its result channel and
+    /// spawn time. At most one recompression runs at a time.
+    inflight: Option<(Receiver<Result<CompressedModel>>, Instant)>,
+    /// Context coordinates the worker thread reloads from.
+    artifacts_root: String,
+    model: String,
 }
 
 fn executor_loop(
@@ -758,34 +868,61 @@ fn executor_loop(
 ) -> Result<()> {
     // all env knobs resolve (and validate) through config::env, so a set
     // but malformed value is a startup error rather than a silent default
+    // — including the adapt knobs even when ServeSpec::adapt is None
     let budget = crate::config::env::kv_budget_bytes(spec.kv_budget_bytes)?;
     let chunk = crate::config::env::prefill_chunk(spec.prefill_chunk)?;
+    let window = crate::config::env::adapt_window(
+        spec.adapt.as_ref().and_then(|a| a.window_tokens),
+    )?;
+    let min_tokens = crate::config::env::adapt_min_tokens(
+        spec.adapt.as_ref().and_then(|a| a.min_tokens),
+    )?;
     let arts = Artifacts::new(&spec.artifacts_root);
     let ctx = ModelContext::load(&arts, &spec.model)?;
-    let model = match &spec.compress {
-        None => ctx.load_original()?,
-        Some((method, r, domain)) => {
-            let stats: CalibStats = ctx.calibrate(domain)?;
-            let plan = Pipeline::new(method.clone()).plan(&ctx, &stats, *r)?;
-            plan.apply(&ctx, &stats)?.load(&ctx)?
-        }
-    };
-    // the speculative drafter is a TRUE r-expert compact export (r
-    // physical expert slots + router remap), not a masked full layout —
-    // the whole point is that drafting forwards are cheaper
-    let drafter = match &spec.drafter {
+    // startup variant builds moved behind the variant registry (the
+    // drafter stays a TRUE r-expert compact export — drafting forwards
+    // must be cheaper than verify forwards)
+    let primary = variant::build_primary(&ctx, &spec.compress)?;
+    metrics.active_variant.store(primary.fingerprint, Ordering::Relaxed);
+    let drafter = variant::build_drafter(&ctx, &spec.drafter)?;
+    let registry = RefCell::new(VariantRegistry::new(primary, drafter));
+    let adapt = match spec.adapt {
         None => None,
-        Some((method, r, domain)) => {
-            let stats: CalibStats = ctx.calibrate(domain)?;
-            let plan = Pipeline::new(method.clone()).plan(&ctx, &stats, *r)?;
-            let cm = plan.apply(&ctx, &stats)?;
-            let (cw, remap) = cm.to_compact(&ctx)?;
-            Some(ctx.load_compact(*r, &cw, remap, &format!("{} [drafter]", cm.label))?)
+        Some(a) => {
+            let mark = ctx
+                .routing_stats(&registry.borrow().active().model)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "adaptive serving needs a backend that reports routing \
+                         stats (native); the {} backend does not",
+                        ctx.backend_name()
+                    )
+                })?;
+            Some(AdaptState {
+                spec: a,
+                window,
+                min_tokens,
+                fired: false,
+                mark,
+                inflight: None,
+                artifacts_root: spec.artifacts_root.clone(),
+                model: spec.model.clone(),
+            })
         }
     };
     let (bsz, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
     let pool = ctx.kv_pool(budget)?;
-    let exec = Executor { ctx, model, bsz, t, batcher, metrics, pool, chunk, drafter };
+    let exec = Executor {
+        ctx,
+        registry,
+        bsz,
+        t,
+        batcher,
+        metrics,
+        pool,
+        chunk,
+        adapt: RefCell::new(adapt),
+    };
     exec.run(rx, stop)
 }
 
@@ -902,6 +1039,11 @@ impl Executor {
                 }
                 !gone
             });
+            // adaptive recompression: land a finished background rebuild
+            // (hot-swapping the active variant) or spawn one when the
+            // routing window has filled — before admission, so sequences
+            // admitted this very iteration already bind to the new variant
+            self.adapt_tick();
             // memory-aware admission under strict priority: the
             // Interactive head starts whenever its prefill slot is free
             // (preempting Batch work when the pool cannot reserve its
@@ -981,7 +1123,7 @@ impl Executor {
                 return Err(anyhow!("speculative decoding needs draft_k >= 1"));
             }
             Some(_) => {
-                if self.drafter.is_none() {
+                if self.registry.borrow().drafter().is_none() {
                     return Err(anyhow!(
                         "request asked for speculative decoding but the server has \
                          no drafter configured (set ServeSpec::drafter)"
@@ -1102,7 +1244,105 @@ impl Executor {
         if !self.pool.can_reserve(need) {
             return None;
         }
-        Some(PrefillInFlight::new(queues.pop(class).expect("head exists")))
+        let q = queues.pop(class).expect("head exists");
+        // variant binding happens HERE, at admission: a fresh request
+        // takes the currently active variant; a preempted one resumes on
+        // the variant it was pinned to (its re-prefill must rebuild the
+        // exact dropped cache — mixing variants mid-stream would break
+        // the bit-identity contract)
+        let variant = match &q {
+            Queued::Fresh(_) => self.registry.borrow().active(),
+            Queued::Resume(p) => Arc::clone(&p.variant),
+        };
+        Some(PrefillInFlight::new(q, variant))
+    }
+
+    /// Routing snapshot of the ACTIVE variant (zeroed counters on a
+    /// freshly swapped-in one). Only called while adapt is configured,
+    /// which the startup check guarantees the backend supports.
+    fn routing_snapshot(&self) -> RoutingSnapshot {
+        let active = self.registry.borrow().active();
+        self.ctx
+            .routing_stats(&active.model)
+            .expect("adapt startup verified the backend reports routing stats")
+    }
+
+    /// One adaptive-recompression tick, run every executor iteration:
+    ///
+    /// 1. If a background recompression is in flight, try (without
+    ///    blocking) to land its result: load the compressed weights on
+    ///    the executor thread and [`VariantRegistry::swap`] atomically —
+    ///    sequences admitted after this iteration bind the new variant,
+    ///    in-flight ones finish on their pinned old one. A failed
+    ///    recompression (or failed load) keeps the current variant
+    ///    serving and restarts the window.
+    /// 2. Otherwise, read the active variant's routing stats; when the
+    ///    window since the last mark has `window` routed tokens (and the
+    ///    warm-up bound is met), ship the window's dispatch counts to a
+    ///    worker thread that rebuilds the variant from pristine base
+    ///    weights with live-reweighted calibration
+    ///    ([`variant::recompress`]).
+    fn adapt_tick(&self) {
+        let mut adapt = self.adapt.borrow_mut();
+        let Some(st) = adapt.as_mut() else { return };
+        if let Some((rx, t0)) = &st.inflight {
+            match rx.try_recv() {
+                Err(TryRecvError::Empty) => {} // still compressing; keep serving
+                Ok(Ok(cm)) => {
+                    self.metrics
+                        .recompress_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let fp = cm.weights.content_hash();
+                    // the load happens here on the executor thread (the
+                    // backend state is not Send); only plain data crossed
+                    // the channel
+                    if let Ok(model) = cm.load(&self.ctx) {
+                        let outcome = self.registry.borrow_mut().swap(model, fp);
+                        if let SwapOutcome::Swapped { .. } = outcome {
+                            self.metrics.swaps.fetch_add(1, Ordering::Relaxed);
+                            self.metrics.active_variant.store(fp, Ordering::Relaxed);
+                        }
+                    }
+                    st.inflight = None;
+                    st.mark = self.routing_snapshot();
+                }
+                Ok(Err(_)) | Err(TryRecvError::Disconnected) => {
+                    // recompression failed (or its thread died): the
+                    // current variant keeps serving; restart the window
+                    st.inflight = None;
+                    st.mark = self.routing_snapshot();
+                }
+            }
+            return; // at most one recompression in flight
+        }
+        let snap = self.routing_snapshot();
+        let window = snap.since(&st.mark);
+        self.metrics
+            .dispatch_entropy_milli
+            .store((window.dispatch_entropy() * 1e3) as u64, Ordering::Relaxed);
+        if window.tokens < st.window {
+            return;
+        }
+        if !st.fired && snap.tokens < st.min_tokens {
+            return;
+        }
+        st.fired = true;
+        let (tx, rx) = channel();
+        let (root, model) = (st.artifacts_root.clone(), st.model.clone());
+        let (method, r) = (st.spec.method.clone(), st.spec.r);
+        let (domain, quantize) = (st.spec.domain.clone(), st.spec.quantize);
+        let counts = window.counts;
+        let spawned = std::thread::Builder::new()
+            .name("hcsmoe-recompress".into())
+            .spawn(move || {
+                let _ = tx.send(variant::recompress(
+                    &root, &model, &method, r, &domain, quantize, &counts,
+                ));
+            });
+        if spawned.is_ok() {
+            st.inflight = Some((rx, Instant::now()));
+        }
+        st.mark = snap;
     }
 
     /// Copy the pool counters into the metrics gauges.
@@ -1190,13 +1430,17 @@ impl Executor {
         let remaining = total - inf.done;
         let take = self.chunk.map_or(remaining, |c| c.min(remaining));
         let ids: Vec<i32> = inf.tokens()[inf.done..inf.done + take].to_vec();
+        // every chunk of this prefill runs on the variant bound at
+        // admission — a hot swap mid-prefill never splits a cache across
+        // two weight sets
+        let variant = Arc::clone(&inf.variant);
         let t0 = Instant::now();
         let result = if let Some(cache) = inf.cache.as_mut() {
-            self.ctx.prefill_resume(&self.model, &ids, cache.as_mut())
+            self.ctx.prefill_resume(&variant.model, &ids, cache.as_mut())
         } else {
             let reserve = self.queued_reserve_tokens(&inf.seq);
             self.ctx
-                .prefill_paged(&self.model, &ids, &self.pool, reserve)
+                .prefill_paged(&variant.model, &ids, &self.pool, reserve)
                 .map(|(cache, logits)| {
                     inf.cache = Some(cache);
                     logits
@@ -1209,13 +1453,13 @@ impl Executor {
         // can be admitted between the two halves of the claim
         let result = result.and_then(|logits| {
             if inf.seq.draft_k().is_some() {
-                let drafter = self.drafter.as_ref().expect("validated at intake");
+                let drafter = self.registry.borrow().drafter().expect("validated at intake");
                 if let Some(dc) = inf.draft_cache.as_mut() {
-                    self.ctx.prefill_resume_compact(drafter, &ids, dc.as_mut())?;
+                    self.ctx.prefill_resume_compact(&drafter, &ids, dc.as_mut())?;
                 } else {
                     let reserve = self.queued_reserve_tokens(&inf.seq);
                     let (dc, _) =
-                        self.ctx.prefill_paged_compact(drafter, &ids, &self.pool, reserve)?;
+                        self.ctx.prefill_paged_compact(&drafter, &ids, &self.pool, reserve)?;
                     inf.draft_cache = Some(dc);
                 }
             }
@@ -1255,7 +1499,7 @@ impl Executor {
         };
         match inf.seq {
             Queued::Fresh(req) => {
-                self.activate_fresh(req, cache, draft, logits, inf.prefill_s, active)
+                self.activate_fresh(req, variant, cache, draft, logits, inf.prefill_s, active)
             }
             Queued::Resume(p) => {
                 // the re-prefill rebuilt the exact dropped cache pair; its
@@ -1271,6 +1515,7 @@ impl Executor {
                     prompt: p.prompt,
                     reserve_tokens: p.reserve_tokens,
                     session: p.session,
+                    variant: p.variant,
                     cache,
                     draft,
                     next: p.next,
@@ -1289,6 +1534,7 @@ impl Executor {
     fn activate_fresh(
         &self,
         req: GenerateRequest,
+        variant: Arc<Variant>,
         cache: Box<dyn KvCache>,
         draft: Option<DraftSeq>,
         logits: Vec<f32>,
@@ -1311,6 +1557,7 @@ impl Executor {
                 prompt: req.prompt,
                 reserve_tokens,
                 session,
+                variant,
                 cache,
                 draft,
                 next,
@@ -1344,6 +1591,33 @@ impl Executor {
     /// the verify bit-identity contract makes both indistinguishable
     /// from sequential decoding.
     fn step(&self, active: &mut Vec<ActiveGen>) {
+        // fast path: the whole batch runs one variant (always true until
+        // a hot swap, and again once the pre-swap sequences drain)
+        let fp0 = active[0].variant.fingerprint;
+        if active.iter().all(|a| a.variant.fingerprint == fp0) {
+            return self.step_group(active);
+        }
+        // post-swap transient: in-flight sequences pin the variant they
+        // were admitted on, so the batch briefly spans variants — but a
+        // batched forward takes ONE weight set. Partition by fingerprint
+        // (first-occurrence order keeps scheduling stable) and step each
+        // group; each sequence still advances exactly one iteration.
+        let mut groups: Vec<(u64, Vec<ActiveGen>)> = Vec::new();
+        for a in std::mem::take(active) {
+            let fp = a.variant.fingerprint;
+            match groups.iter_mut().find(|(g, _)| *g == fp) {
+                Some((_, members)) => members.push(a),
+                None => groups.push((fp, vec![a])),
+            }
+        }
+        for (_, mut group) in groups {
+            self.step_group(&mut group);
+            active.append(&mut group);
+        }
+    }
+
+    /// One decode iteration for a single-variant group of sequences.
+    fn step_group(&self, active: &mut Vec<ActiveGen>) {
         if active.iter().any(|a| a.draft.is_some()) {
             self.step_speculative(active)
         } else {
@@ -1363,11 +1637,14 @@ impl Executor {
     fn step_plain(&self, active: &mut Vec<ActiveGen>) {
         let bsz = active.len();
         let tokens: Vec<i32> = active.iter().map(|a| a.next).collect();
+        // single-variant group (step() partitioned): every cache here was
+        // built by this variant, so one batched forward serves them all
+        let variant = Arc::clone(&active[0].variant);
         let t0 = Instant::now();
         let rows = {
             let mut caches: Vec<&mut dyn KvCache> =
                 active.iter_mut().map(|a| a.cache.as_mut()).collect();
-            self.ctx.decode_batch(&self.model, &mut caches, &tokens)
+            self.ctx.decode_batch(&variant.model, &mut caches, &tokens)
         };
         let rows = match rows {
             Ok(rows) => rows,
@@ -1417,7 +1694,11 @@ impl Executor {
     /// feeds), so one poisoned sequence is evicted with its error instead
     /// of failing the whole batch.
     fn step_speculative(&self, active: &mut Vec<ActiveGen>) {
-        let drafter = self.drafter.as_ref().expect("speculative sequence without a drafter");
+        let drafter =
+            self.registry.borrow().drafter().expect("speculative sequence without a drafter");
+        let drafter = &*drafter;
+        // single-variant group (step() partitioned) — the verifier model
+        let variant = Arc::clone(&active[0].variant);
         let t_max = self.ctx.cfg.t_max;
         let n = active.len();
         let t0 = Instant::now();
@@ -1510,7 +1791,7 @@ impl Executor {
             let token_slices: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
             let mut caches: Vec<&mut dyn KvCache> =
                 active.iter_mut().map(|a| a.cache.as_mut()).collect();
-            self.ctx.verify(&self.model, &mut caches, &token_slices)
+            self.ctx.verify(&variant.model, &mut caches, &token_slices)
         };
         let outs = match outs {
             Ok(o) => o,
@@ -1657,13 +1938,19 @@ impl Executor {
             let a = &mut active[i];
             let t0 = Instant::now();
             let fed = a.next;
+            // per-sequence path, so each sequence decodes on its own
+            // pinned variant (this fallback may legally mix variants)
+            let variant = Arc::clone(&a.variant);
             // a speculative pair stays in lockstep even on this plain
             // path: the fed token enters both caches
-            let logits = self.ctx.decode(&self.model, a.cache.as_mut(), fed).and_then(|l| {
+            let logits = self.ctx.decode(&variant.model, a.cache.as_mut(), fed).and_then(|l| {
                 if let Some(d) = a.draft.as_mut() {
-                    let drafter =
-                        self.drafter.as_ref().expect("speculative sequence without a drafter");
-                    self.ctx.decode_compact(drafter, d.cache.as_mut(), fed)?;
+                    let drafter = self
+                        .registry
+                        .borrow()
+                        .drafter()
+                        .expect("speculative sequence without a drafter");
+                    self.ctx.decode_compact(&drafter, d.cache.as_mut(), fed)?;
                 }
                 Ok(l)
             });
@@ -1731,6 +2018,9 @@ impl Executor {
         queue: &mut Vec<(usize, usize, RowSpec)>,
     ) -> Result<()> {
         let (bsz, t) = (self.bsz, self.t);
+        // score rows are stateless (no KV cache), so they always run the
+        // currently active variant
+        let variant = self.registry.borrow().active();
         while !queue.is_empty() {
             let take = queue.len().min(bsz);
             let chunk: Vec<_> = queue.drain(..take).collect();
@@ -1741,7 +2031,7 @@ impl Executor {
                 }
             }
             let t0 = Instant::now();
-            let logits = self.ctx.run_logits(&self.model, &ids)?;
+            let logits = self.ctx.run_logits(&variant.model, &ids)?;
             self.metrics
                 .busy_ns
                 .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);

@@ -30,12 +30,14 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::backend::KvCache;
 use crate::generate::{Generated, Session};
+use crate::variant::Variant;
 
 use super::{GenerateRequest, Metrics, ReplyTx};
 
@@ -172,6 +174,11 @@ impl SchedQueues {
 pub(crate) struct PrefillInFlight {
     /// The request being prefilled (Fresh) or rebuilt (Resume).
     pub(crate) seq: Queued,
+    /// The model variant this prefill is bound to (pinned at admission —
+    /// or inherited across a preemption): every chunk runs on it, even if
+    /// a hot swap lands between chunks, so the finished cache is
+    /// internally consistent and carries this variant's KV fingerprint.
+    pub(crate) variant: Arc<Variant>,
     /// The cache under construction; `None` until the first chunk ran.
     pub(crate) cache: Option<Box<dyn KvCache>>,
     /// For a speculative request: the drafter's cache, built chunk by
@@ -188,8 +195,16 @@ pub(crate) struct PrefillInFlight {
 }
 
 impl PrefillInFlight {
-    pub(crate) fn new(seq: Queued) -> Self {
-        Self { seq, cache: None, draft_cache: None, done: 0, chunks: 0, prefill_s: 0.0 }
+    pub(crate) fn new(seq: Queued, variant: Arc<Variant>) -> Self {
+        Self {
+            seq,
+            variant,
+            cache: None,
+            draft_cache: None,
+            done: 0,
+            chunks: 0,
+            prefill_s: 0.0,
+        }
     }
 
     /// The full token sequence this prefill must feed: the prompt for a
@@ -234,6 +249,13 @@ pub(crate) struct ActiveGen {
     /// more than original admission did.
     pub(crate) reserve_tokens: usize,
     pub(crate) session: Session,
+    /// The model variant this sequence decodes on, pinned for its whole
+    /// life: an in-flight sequence finishes on the variant it started on
+    /// — hot swaps only redirect *new* admissions — which keeps its
+    /// stream bit-identical to an uninterrupted offline run and its KV
+    /// fingerprint consistent. The pin also keeps the (possibly retired)
+    /// variant's weights resident until the sequence finishes.
+    pub(crate) variant: Arc<Variant>,
     pub(crate) cache: Box<dyn KvCache>,
     /// Speculative state (`None` = plain decoding): the drafter-side
     /// cache and draft depth.
@@ -268,6 +290,7 @@ impl ActiveGen {
             resident,
             reserve_tokens: self.reserve_tokens,
             session: self.session,
+            variant: self.variant,
             draft_k: self.draft.as_ref().map(|d| d.k),
             next: self.next,
             prefill_s: self.prefill_s,
@@ -295,6 +318,11 @@ pub(crate) struct PreemptedGen {
     /// [`ActiveGen::reserve_tokens`]).
     pub(crate) reserve_tokens: usize,
     pub(crate) session: Session,
+    /// The variant pin carried across the swap-out: the resume re-prefill
+    /// and all further decoding run on the variant the stream started on,
+    /// even if a hot swap happened while it was preempted — mixing
+    /// variants mid-stream would break the bit-identity contract.
+    pub(crate) variant: Arc<Variant>,
     /// The draft depth of a speculative sequence (`None` = plain).
     /// Resume rebuilds the drafter cache over `resident` alongside the
     /// full-model one.

@@ -1,0 +1,263 @@
+//! Variant lifecycle: identity, load, retirement and atomic hot-swap of
+//! served model variants.
+//!
+//! Before this module, variant handling was scattered — the serving
+//! executor built its primary/drafter variants inline, `CompressedModel`
+//! owned loading, and the native backend hashed variant identity ad hoc
+//! for KV prefix sharing. The [`VariantRegistry`] centralises the
+//! lifecycle:
+//!
+//! * **Identity** — every registered variant carries a fingerprint
+//!   derived from its weight content ([`crate::weights::Weights::content_hash`]),
+//!   the same component the native backend folds into every KV-cache
+//!   fingerprint. Two variants with different weights can therefore never
+//!   alias prefix blocks, even across a hot swap at identical mask/remap.
+//! * **Load** — [`build_primary`] / [`build_drafter`] own the startup
+//!   builds that used to live inline in the executor loop, and
+//!   [`recompress`] is the background path: live routing counts reweight
+//!   the calibration statistics ([`crate::calib::CalibStats::reweighted`])
+//!   and the ordinary cluster→merge/prune(→quantize) pipeline runs on a
+//!   private [`ModelContext`] off the executor thread.
+//! * **Retirement** — variants are held in [`Arc`]s; in-flight sequences
+//!   pin the variant they started on, so a [`VariantRegistry::swap`]
+//!   retires the old variant *logically* (new work routes to the new one)
+//!   while its weights stay resident exactly until the last pin drops.
+//!   [`VariantRegistry::resident`] counts what is still alive.
+//!
+//! The registry itself is single-threaded state owned by the serving
+//! executor (see `SERVING.md` §"Adaptive compression & hot swap");
+//! everything crossing threads is plain data ([`CompressedModel`]).
+
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, Weak};
+
+use crate::calib::CalibStats;
+use crate::config::Artifacts;
+use crate::model::{CompactModel, LoadedModel, ModelContext};
+use crate::pipeline::{CompressedModel, Method, Pipeline};
+
+/// One registered model variant: a backend-resident [`LoadedModel`] plus
+/// its registry identity. Held in an [`Arc`] — clones pin the variant's
+/// weights resident (retirement frees them when the last pin drops).
+pub struct Variant {
+    /// The runnable variant (resident weights + router mask + label).
+    pub model: LoadedModel,
+    /// Weight-content fingerprint ([`crate::weights::Weights::content_hash`]):
+    /// the identity KV prefix sharing and swap deduplication key on.
+    pub fingerprint: u64,
+    /// Monotone swap generation: 0 for the startup variant, +1 per swap.
+    pub generation: u64,
+}
+
+/// What a [`VariantRegistry::swap`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapOutcome {
+    /// The new variant is now active; the previous one (fingerprint
+    /// given) is retired and will free once its last pin drops.
+    Swapped {
+        /// Fingerprint of the variant that was retired.
+        retired: u64,
+    },
+    /// The candidate had the active variant's fingerprint — identical
+    /// weights, nothing to do (the candidate is dropped).
+    Unchanged,
+}
+
+/// Owner of the active variant, the optional resident drafter, and the
+/// retired-variant ledger.
+pub struct VariantRegistry {
+    active: Arc<Variant>,
+    drafter: Option<Arc<CompactModel>>,
+    /// Weak handles to retired variants: an upgradeable entry means some
+    /// in-flight sequence still pins the old weights resident.
+    retired: Vec<Weak<Variant>>,
+    swaps: u64,
+}
+
+impl VariantRegistry {
+    /// Register the startup variant (generation 0) and optional drafter.
+    pub fn new(primary: Variant, drafter: Option<CompactModel>) -> Self {
+        Self {
+            active: Arc::new(primary),
+            drafter: drafter.map(Arc::new),
+            retired: Vec::new(),
+            swaps: 0,
+        }
+    }
+
+    /// Pin the active variant. New sequences bind to this handle at
+    /// admission and keep it for their whole life, swaps notwithstanding.
+    pub fn active(&self) -> Arc<Variant> {
+        Arc::clone(&self.active)
+    }
+
+    /// Pin the resident drafter, if one was configured. The drafter is
+    /// deliberately static across swaps: draft tokens are *proposals*
+    /// verified by the (possibly swapped) full model, so a stale drafter
+    /// costs acceptance rate, never correctness.
+    pub fn drafter(&self) -> Option<Arc<CompactModel>> {
+        self.drafter.as_ref().map(Arc::clone)
+    }
+
+    /// Atomically make `model` the active variant. A candidate whose
+    /// fingerprint equals the active one is dropped ([`SwapOutcome::Unchanged`]);
+    /// otherwise the old variant retires — still resident while pinned by
+    /// in-flight sequences, freed when the last pin drops.
+    pub fn swap(&mut self, model: LoadedModel, fingerprint: u64) -> SwapOutcome {
+        if fingerprint == self.active.fingerprint {
+            return SwapOutcome::Unchanged;
+        }
+        let next = Arc::new(Variant {
+            model,
+            fingerprint,
+            generation: self.active.generation + 1,
+        });
+        let old = std::mem::replace(&mut self.active, next);
+        let retired = old.fingerprint;
+        self.retired.push(Arc::downgrade(&old));
+        self.retired.retain(|w| w.strong_count() > 0);
+        self.swaps += 1;
+        SwapOutcome::Swapped { retired }
+    }
+
+    /// Swaps performed since startup.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Variants whose weights are currently resident: the active one plus
+    /// every retired variant still pinned by an in-flight sequence.
+    pub fn resident(&self) -> usize {
+        1 + self.retired.iter().filter(|w| w.strong_count() > 0).count()
+    }
+}
+
+/// Build the primary served variant: the original model, or the
+/// `(method, r, calib domain)` compression the spec asked for — the
+/// startup build that used to live inline in the serving executor loop.
+pub fn build_primary(
+    ctx: &ModelContext,
+    compress: &Option<(Method, usize, String)>,
+) -> Result<Variant> {
+    let (model, fingerprint) = match compress {
+        None => (ctx.load_original()?, ctx.base.content_hash()),
+        Some((method, r, domain)) => {
+            let stats: CalibStats = ctx.calibrate(domain)?;
+            let plan = Pipeline::new(method.clone()).plan(ctx, &stats, *r)?;
+            let cm = plan.apply(ctx, &stats)?;
+            let fp = cm.weights.content_hash();
+            (cm.load(ctx)?, fp)
+        }
+    };
+    Ok(Variant { model, fingerprint, generation: 0 })
+}
+
+/// Build the resident speculative drafter: a TRUE r-expert compact export
+/// (r physical slots + router remap), not a masked full layout — drafting
+/// forwards must be cheaper than verify forwards.
+pub fn build_drafter(
+    ctx: &ModelContext,
+    drafter: &Option<(Method, usize, String)>,
+) -> Result<Option<CompactModel>> {
+    let Some((method, r, domain)) = drafter else { return Ok(None) };
+    let stats: CalibStats = ctx.calibrate(domain)?;
+    let plan = Pipeline::new(method.clone()).plan(ctx, &stats, *r)?;
+    let cm = plan.apply(ctx, &stats)?;
+    let (cw, remap) = cm.to_compact(ctx)?;
+    Ok(Some(ctx.load_compact(*r, &cw, remap, &format!("{} [drafter]", cm.label))?))
+}
+
+/// Background recompression: compress `model` under `method`/`r` with the
+/// calibration statistics of `domain` reweighted by `live_counts` (one
+/// `[n_exp]` dispatch row per layer — a live routing window), optionally
+/// quantizing the result. Loads a **private** [`ModelContext`] so it can
+/// run on a worker thread while the executor keeps serving; everything
+/// returned is plain data for the executor to load and swap in.
+/// Recompression always starts from the pristine base weights — variants
+/// never compound.
+pub fn recompress(
+    artifacts_root: &str,
+    model: &str,
+    method: &Method,
+    r: usize,
+    domain: &str,
+    quantize: bool,
+    live_counts: &[Vec<u64>],
+) -> Result<CompressedModel> {
+    let arts = Artifacts::new(artifacts_root);
+    let ctx = ModelContext::load(&arts, model)?;
+    let stats = ctx
+        .calibrate(domain)?
+        .reweighted(live_counts)
+        .map_err(|e| anyhow!("live routing window does not fit the model: {e}"))?;
+    let plan = Pipeline::new(method.clone()).plan(&ctx, &stats, r)?;
+    let cm = plan.apply(&ctx, &stats)?;
+    if quantize {
+        cm.quantize()
+    } else {
+        Ok(cm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::weights::Weights;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "vr".into(),
+            n_layer: 2,
+            d: 8,
+            m: 8,
+            n_exp: 4,
+            k: 2,
+            heads: 2,
+            vocab: 24,
+            t_max: 32,
+            shared: false,
+            m_shared: 8,
+            cap_factor: 4.0,
+            block_c: 4,
+        }
+    }
+
+    /// A registry lives entirely off plain loaded models, so it is
+    /// testable without artifacts: swap semantics, dedup on identical
+    /// fingerprints, and retirement tracking via pins.
+    #[test]
+    fn swap_retires_and_dedupes() {
+        let cfg = cfg();
+        let w1 = Weights::synthesize(&cfg, 1);
+        let w2 = Weights::synthesize(&cfg, 2);
+        let backend = crate::backend::native::NativeBackend::new(cfg.clone());
+        let load = |w: &Weights, label: &str| {
+            use crate::backend::Backend;
+            let state = backend.load_model(w, cfg.n_exp).unwrap();
+            LoadedModel::from_parts(state, vec![0.0; cfg.n_layer * cfg.n_exp], label)
+        };
+        let fp1 = w1.content_hash();
+        let fp2 = w2.content_hash();
+        let mut reg = VariantRegistry::new(
+            Variant { model: load(&w1, "v1"), fingerprint: fp1, generation: 0 },
+            None,
+        );
+        assert_eq!(reg.swaps(), 0);
+        assert_eq!(reg.resident(), 1);
+
+        // identical weights: the swap is a no-op
+        assert_eq!(reg.swap(load(&w1, "v1b"), fp1), SwapOutcome::Unchanged);
+        assert_eq!(reg.swaps(), 0);
+
+        // a pinned old variant survives the swap; unpinning frees it
+        let pin = reg.active();
+        assert_eq!(reg.swap(load(&w2, "v2"), fp2), SwapOutcome::Swapped { retired: fp1 });
+        assert_eq!(reg.swaps(), 1);
+        assert_eq!(reg.active().fingerprint, fp2);
+        assert_eq!(reg.active().generation, 1);
+        assert_eq!(reg.resident(), 2, "in-flight pin keeps the old weights resident");
+        drop(pin);
+        assert_eq!(reg.resident(), 1, "last pin dropped frees the retired variant");
+    }
+}

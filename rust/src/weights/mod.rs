@@ -392,6 +392,36 @@ impl Weights {
         f32_bytes + q_bytes
     }
 
+    /// A 64-bit content fingerprint over every tensor (names, shapes, f32
+    /// bit patterns, int8 payloads and scales). Two weight sets hash
+    /// equal iff they are value-identical, so the fingerprint
+    /// distinguishes hot-swapped variants that share an expert mask but
+    /// differ in merged weights — the KV-prefix-sharing key must never
+    /// alias across them (see `kvpool`). Not a cryptographic hash;
+    /// collision resistance is "good enough for a registry key", exactly
+    /// like the sibling `variant_fingerprint` in the native backend.
+    pub fn content_hash(&self) -> u64 {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut h = DefaultHasher::new();
+        for (name, t) in &self.map {
+            name.hash(&mut h);
+            t.shape().hash(&mut h);
+            for &x in t.data() {
+                x.to_bits().hash(&mut h);
+            }
+        }
+        for (name, t) in &self.qmap {
+            name.hash(&mut h);
+            t.shape().hash(&mut h);
+            for &s in t.scales() {
+                s.to_bits().hash(&mut h);
+            }
+            t.q().hash(&mut h);
+        }
+        h.finish()
+    }
+
     // -- expert accessors ---------------------------------------------------
 
     /// Canonical HCWT tensor key of a per-layer tensor (`layer{L:02}.{suffix}`)
@@ -670,6 +700,25 @@ mod tests {
         assert_eq!(w.expert(0, 1).unwrap().wg.data(), &[0., 0., 0., 0.]);
         assert_eq!(w.n_experts().unwrap(), 3);
         assert_eq!(w.n_layers(), 2);
+    }
+
+    #[test]
+    fn content_hash_tracks_values() {
+        let w = tiny_weights();
+        let base = w.content_hash();
+        assert_eq!(base, tiny_weights().content_hash(), "deterministic");
+        // a single changed weight value changes the fingerprint
+        let mut w2 = tiny_weights();
+        let mut e = w2.expert(1, 2).unwrap();
+        e.wg.scale(0.5);
+        w2.set_expert(1, 2, &e).unwrap();
+        assert_ne!(base, w2.content_hash());
+        // quantizing moves tensors between sections => different hash
+        let mut w3 = tiny_weights();
+        let key = Weights::layer_key(0, "exp.wg");
+        let qt = QuantTensor::from_f32(w3.get(&key).unwrap()).unwrap();
+        w3.insert_quant(key, qt);
+        assert_ne!(base, w3.content_hash());
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Adaptive-compression test suite: live routing stats, background
+//! recompression, and atomic variant hot-swap (`ServeSpec::adapt`).
+//!
+//! The headline contracts:
+//!
+//! * the background rebuild is **reproducible**: the hot-swapped variant's
+//!   fingerprint equals an offline `variant::recompress` on the same
+//!   routing window, and a post-swap request's token stream is
+//!   bit-identical to an offline run on that offline-rebuilt variant;
+//! * a swap never touches in-flight work: a Batch stream that is admitted
+//!   before the swap, preempted by an Interactive storm, and resumed
+//!   *after* the swap still re-prefills on its pinned (now retired)
+//!   variant and finishes bit-identical to an uninterrupted offline run
+//!   on the original model;
+//! * a swap storm under preemption leaks zero KV blocks;
+//! * the window knob validates at startup like every other runtime knob.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hc_smoe::config::Artifacts;
+use hc_smoe::clustering::Linkage;
+use hc_smoe::generate::{generate, Generated, SamplingParams};
+use hc_smoe::merging::MergeStrategy;
+use hc_smoe::model::ModelContext;
+use hc_smoe::pipeline::Method;
+use hc_smoe::serving::{
+    serve, AdaptSpec, BatcherConfig, GenerateRequest, Priority, ServeSpec, ServerHandle,
+};
+use hc_smoe::similarity::Metric;
+use hc_smoe::variant;
+
+fn hc_method() -> Method {
+    Method::HcSmoe {
+        linkage: Linkage::Average,
+        metric: Metric::ExpertOutput,
+        merge: MergeStrategy::Frequency,
+    }
+}
+
+/// Synthesize one artifact set per test process.
+fn arts() -> Artifacts {
+    static DIR: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+    let dir = DIR.get_or_init(|| {
+        let p = std::env::temp_dir().join(format!("hcsmoe_adapt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        hc_smoe::bench_support::synthesize_artifacts(&p, 0xADA7).expect("synthesize artifacts");
+        p
+    });
+    Artifacts::new(dir)
+}
+
+fn adapt_spec(r: usize, window_tokens: Option<u64>) -> AdaptSpec {
+    AdaptSpec {
+        method: hc_method(),
+        r,
+        domain: "general".into(),
+        quantize: false,
+        window_tokens,
+        min_tokens: Some(0),
+    }
+}
+
+/// Poll a metrics predicate with a deadline (the executor runs its
+/// adapt tick once per loop iteration).
+fn wait_for(handle: &ServerHandle, what: &str, pred: impl Fn(&ServerHandle) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !pred(handle) {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The whole adaptive loop is reproducible offline: run one request
+/// against a fresh model to learn its exact routing window, predict the
+/// recompressed variant with an offline [`variant::recompress`] on that
+/// window, then serve with `window_tokens` equal to the request's routed
+/// tokens — the background rebuild must land *exactly* the predicted
+/// fingerprint, and a post-swap request must emit the offline-predicted
+/// variant's token stream bit for bit.
+#[test]
+fn swap_lands_the_offline_predicted_variant_and_new_requests_run_it() {
+    let a = arts();
+    let root = a.root.to_string_lossy().into_owned();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let r = ctx.cfg.n_exp / 2;
+
+    // offline request 1 on a FRESH original model: its routing stats are
+    // exactly the live window the server will see (the served ops are
+    // bit-identical, so the dispatch counts are too)
+    let model = ctx.load_original().unwrap();
+    let prompt1 = [1i32, 4, 20, 3, 7, 2];
+    let params1 = SamplingParams::greedy(12, None);
+    let offline1 = generate(&ctx, &model, &prompt1, params1.clone()).unwrap();
+    let win = ctx.routing_stats(&model).expect("native backend reports routing stats");
+    assert!(win.tokens > 0, "the offline run must have routed tokens");
+    assert!(win.dispatch_entropy() > 0.0, "k=2 routing spreads over >1 expert");
+
+    // offline prediction of the background rebuild on that exact window
+    let cm = variant::recompress(&root, "qwensim", &hc_method(), r, "general", false, &win.counts)
+        .unwrap();
+    let expected_fp = cm.weights.content_hash();
+    let recompressed = cm.load(&ctx).unwrap();
+    let prompt2 = [2i32, 9, 31, 5];
+    let params2 = SamplingParams::greedy(10, None);
+    let offline2 = generate(&ctx, &recompressed, &prompt2, params2.clone()).unwrap();
+
+    // serve adaptively with the window sized to fire right after request 1
+    let handle = serve(
+        ServeSpec {
+            adapt: Some(adapt_spec(r, Some(win.tokens))),
+            ..ServeSpec::for_tests(&root, "qwensim")
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let fp0 = handle.metrics.snapshot().active_variant;
+    assert_ne!(fp0, expected_fp, "recompression must change the weight content");
+
+    let served1 = handle.generate(&prompt1, params1).unwrap();
+    assert_eq!(served1.tokens, offline1.tokens, "pre-swap stream must match the original");
+
+    wait_for(&handle, "the first hot swap", |h| h.metrics.snapshot().swaps >= 1);
+    let snap = handle.metrics.snapshot();
+    assert_eq!(
+        snap.active_variant, expected_fp,
+        "the swap must land exactly the offline-predicted recompressed variant"
+    );
+    assert!(snap.recompress_s > 0.0, "background rebuild wall-clock must be metered");
+
+    let served2 = handle.generate(&prompt2, params2).unwrap();
+    assert_eq!(
+        served2.tokens, offline2.tokens,
+        "a post-swap request must provably run the new fingerprint's weights"
+    );
+    assert_eq!(served2.finish, offline2.finish);
+    handle.shutdown().unwrap();
+}
+
+/// Swap storm under preemption. A Batch stream is admitted (and pinned)
+/// on the original variant, then starved by a continuous Interactive
+/// storm on a pool it cannot share — the storm's traffic fills the
+/// routing window and a hot swap lands while the Batch stream is still
+/// in flight. When the storm drains, the stream resumes — re-prefilling
+/// its resident tokens on the pinned, now-retired variant — and must
+/// finish bit-identical to an uninterrupted offline run on the original
+/// model. Afterwards the pool must be empty: zero leaked KV blocks.
+#[test]
+fn swap_under_preemption_keeps_pinned_streams_bit_identical_and_leaks_nothing() {
+    let a = arts();
+    let root = a.root.to_string_lossy().into_owned();
+    let ctx = ModelContext::load(&a, "qwensim").unwrap();
+    let cfg = ctx.cfg.clone();
+    let model = ctx.load_original().unwrap();
+
+    // the Batch stream reserves the whole 4-block pool (prompt 4 +
+    // t_max-bounded decode = 64 tokens = 4 blocks), so every Interactive
+    // arrival can only be admitted by preempting it; the routing window
+    // (80) exceeds anything the Batch stream can route alone (<= t_max =
+    // 64 tokens), so only storm traffic can trigger the recompression —
+    // guaranteeing the swap lands while the stream is swapped out
+    let bprompt = [2i32, 5, 21, 7];
+    let bparams = SamplingParams::greedy(1_000_000, None); // t_max-bounded
+    let boffline = generate(&ctx, &model, &bprompt, bparams.clone()).unwrap();
+    let iprompt = [1i32, 4, 20];
+    let iparams = SamplingParams::greedy(2, None);
+
+    let handle = serve(
+        ServeSpec {
+            kv_budget_bytes: Some(4 * cfg.kv_block_bytes(hc_smoe::kvpool::DEFAULT_BLOCK_TOKENS)),
+            prefill_chunk: Some(4),
+            adapt: Some(adapt_spec(cfg.n_exp / 2, Some(80))),
+            ..ServeSpec::for_tests(&root, "qwensim")
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let fp0 = handle.metrics.snapshot().active_variant;
+
+    // admit the Batch stream and spin until its prefill finishes (the
+    // variant pin is taken at admission, but only an *active* sequence's
+    // preemption carries it — a mid-prefill preemption requeues the
+    // request afresh); spin rather than sleep so the storm begins within
+    // a few decode steps of the stream going active
+    let long_rx = handle
+        .submit(GenerateRequest::new(&bprompt, bparams).priority(Priority::Batch))
+        .unwrap()
+        .expect("a fresh request owns its receiver");
+    let blen = bprompt.len() as u64;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while handle.metrics.snapshot().prefill_tokens < blen {
+        assert!(Instant::now() < deadline, "batch prefill never finished");
+        std::thread::yield_now();
+    }
+
+    // Interactive storm: keep several shorts outstanding (spinning, no
+    // sleeps) so the Interactive lane never empties — the Batch stream
+    // stays swapped out (pinned, cache dropped) while the storm's routed
+    // tokens fill the window and the background rebuild lands
+    let mut outstanding = Vec::new();
+    let mut served_shorts = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while handle.metrics.snapshot().swaps == 0 {
+        assert!(Instant::now() < deadline, "no hot swap within 60s of live traffic");
+        while outstanding.len() < 8 {
+            outstanding.push(
+                handle
+                    .submit(
+                        GenerateRequest::new(&iprompt, iparams.clone())
+                            .priority(Priority::Interactive),
+                    )
+                    .unwrap()
+                    .expect("a fresh request owns its receiver"),
+            );
+        }
+        // reap finished shorts: every stream must complete cleanly (their
+        // tokens legitimately differ across the swap, so only success is
+        // asserted)
+        outstanding.retain(|rx| match rx.try_recv().unwrap() {
+            Some(out) => {
+                let g: Generated = out.unwrap();
+                assert!(!g.tokens.is_empty());
+                served_shorts += 1;
+                false
+            }
+            None => true,
+        });
+        std::thread::yield_now();
+    }
+
+    // the swap landed while the Batch stream was still in flight
+    assert!(
+        long_rx.try_recv().unwrap().is_none(),
+        "the batch stream must still be in flight when the swap lands \
+         (the storm keeps its lane starved)"
+    );
+
+    // drain the storm, then let the Batch stream resume and finish: its
+    // re-prefill runs on the pinned RETIRED variant, so the stream is
+    // bit-identical to the uninterrupted offline run on the original
+    for rx in outstanding {
+        rx.recv().unwrap().unwrap();
+        served_shorts += 1;
+    }
+    let long_out = long_rx.recv().unwrap().unwrap();
+    assert_eq!(
+        long_out.tokens, boffline.tokens,
+        "a stream spanning the swap must stay bit-identical to its variant's offline run"
+    );
+    assert_eq!(long_out.finish, boffline.finish);
+
+    wait_for(&handle, "zero KV blocks after the storm", |h| {
+        h.metrics.snapshot().kv_blocks_in_use == 0
+    });
+    let snap = handle.metrics.snapshot();
+    handle.shutdown().unwrap();
+    assert!(snap.swaps >= 1, "the storm must have hot-swapped: {}", snap.swaps);
+    assert!(snap.preemptions >= 1, "the storm must have preempted: {}", snap.preemptions);
+    assert_ne!(snap.active_variant, fp0, "the active fingerprint must have changed");
+    assert!(served_shorts >= 1, "the storm must have served interactive traffic");
+}
+
+/// `ServeSpec::adapt` validates its window like every other runtime knob:
+/// an explicit zero is a startup error, not a silent default.
+#[test]
+fn zero_adapt_window_is_a_startup_error() {
+    let a = arts();
+    let handle = serve(
+        ServeSpec {
+            adapt: Some(adapt_spec(4, Some(0))),
+            ..ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim")
+        },
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let err = handle.shutdown().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("positive token count"),
+        "startup validation must reject window_tokens=0: {err:#}"
+    );
+}

@@ -207,14 +207,7 @@ fn serving_through_native_backend_matches_direct_scores() {
     let ctx = ModelContext::load(&a, "mixsim").unwrap();
     let bench = hc_smoe::data::Benchmark::load(a.benchmark("arc_e")).unwrap();
     let handle = serve(
-        ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "mixsim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        },
+        ServeSpec::for_tests(&a.root.to_string_lossy(), "mixsim"),
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
             max_wait: Duration::from_millis(1),

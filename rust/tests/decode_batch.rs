@@ -370,14 +370,7 @@ fn server_batches_decode_under_concurrent_mixed_load() {
     let model = ctx.load_original().unwrap();
     let bench = hc_smoe::data::Benchmark::load(a.benchmark("arc_e")).unwrap();
     let handle = serve(
-        ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        },
+        ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim"),
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
             max_wait: Duration::from_millis(2),
@@ -453,14 +446,7 @@ fn long_prompt_admission_does_not_stall_active_decode() {
     let ctx = ModelContext::load(&a, "qwensim").unwrap();
     let t_max = ctx.cfg.t_max;
     let handle = serve(
-        ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        },
+        ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim"),
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
     .unwrap();

@@ -285,14 +285,7 @@ fn degenerate_sampling_params_error_cleanly() {
     // the server answers the rejection and keeps serving afterwards
     let a = arts();
     let handle = serve(
-        ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        },
+        ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim"),
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
     .unwrap();
@@ -310,14 +303,7 @@ fn server_mixed_load_matches_offline_results() {
     let model = ctx.load_original().unwrap();
     let bench = hc_smoe::data::Benchmark::load(a.benchmark("arc_e")).unwrap();
     let handle = serve(
-        ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        },
+        ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim"),
         BatcherConfig {
             max_rows: ctx.manifest.eval_b,
             max_wait: Duration::from_millis(2),
@@ -391,14 +377,7 @@ fn server_mixed_load_matches_offline_results() {
 fn empty_prompt_rows_do_not_panic_the_executor() {
     let a = arts();
     let handle = serve(
-        ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "mixsim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        },
+        ServeSpec::for_tests(&a.root.to_string_lossy(), "mixsim"),
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
     .unwrap();

@@ -334,12 +334,8 @@ fn intra_batch_cow_sharers_need_one_block_not_two() {
 fn serve_with_blocks(a: &Artifacts, cfg: &ModelCfg, blocks: usize) -> ServerHandle {
     serve(
         ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
             kv_budget_bytes: Some(blocks * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
-            prefill_chunk: None,
-            drafter: None,
+            ..ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim")
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

@@ -73,12 +73,9 @@ fn arts() -> Artifacts {
 fn serve_with(a: &Artifacts, cfg: &ModelCfg, blocks: usize, chunk: Option<usize>) -> ServerHandle {
     serve(
         ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
             kv_budget_bytes: Some(blocks * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
             prefill_chunk: chunk,
-            drafter: None,
+            ..ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim")
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -479,12 +476,8 @@ fn zero_prefill_chunk_is_a_startup_error() {
     let a = arts();
     let handle = serve(
         ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
-            kv_budget_bytes: None,
             prefill_chunk: Some(0),
-            drafter: None,
+            ..ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim")
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )

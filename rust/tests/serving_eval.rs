@@ -22,14 +22,7 @@ fn arts() -> Option<Artifacts> {
 }
 
 fn spec(arts: &Artifacts) -> ServeSpec {
-    ServeSpec {
-        artifacts_root: arts.root.to_string_lossy().into_owned(),
-        model: "mixsim".into(),
-        compress: None,
-        kv_budget_bytes: None,
-        prefill_chunk: None,
-        drafter: None,
-    }
+    ServeSpec::for_tests(&arts.root.to_string_lossy(), "mixsim")
 }
 
 #[test]

@@ -488,12 +488,9 @@ fn rollback_restores_a_fresh_prefix_cache() {
 fn serve_with_drafter(a: &Artifacts, cfg: &ModelCfg, blocks: Option<usize>) -> ServerHandle {
     serve(
         ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
             kv_budget_bytes: blocks.map(|b| b * cfg.kv_block_bytes(DEFAULT_BLOCK_TOKENS)),
-            prefill_chunk: None,
             drafter: Some((hc_method(), 4, "general".into())),
+            ..ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim")
         },
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
@@ -571,14 +568,7 @@ fn malformed_speculative_requests_are_answered_at_intake() {
     // drafterless server: a speculative request is an intake error, and
     // the server keeps serving plain traffic afterwards
     let plain_server = serve(
-        ServeSpec {
-            artifacts_root: a.root.to_string_lossy().into_owned(),
-            model: "qwensim".into(),
-            compress: None,
-            kv_budget_bytes: None,
-            prefill_chunk: None,
-            drafter: None,
-        },
+        ServeSpec::for_tests(&a.root.to_string_lossy(), "qwensim"),
         BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(1) },
     )
     .unwrap();

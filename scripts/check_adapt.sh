@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Gate the adaptive-compression / hot-swap contracts in CI (backend-e2e
+# job):
+#
+#  1. `cargo test --test adapt` — the background rebuild lands exactly the
+#     offline-predicted variant fingerprint and post-swap requests emit
+#     its offline token stream bit for bit; a stream pinned across a swap
+#     under a preemption storm stays bit-identical to its variant's
+#     offline run and the storm leaks zero KV blocks; window_tokens=0 is
+#     a startup error.
+#  2. BENCH_generate.json must contain the `adapt_sweep` section with the
+#     before/during/after phases, a hot swap must have landed by the
+#     `after` row (swaps >= 1), and the `during` throughput — served
+#     while the recompression worker is busy — must hold at least
+#     DURING_TOK_S_MIN_FRACTION of the `before` throughput: the rebuild
+#     runs off the executor thread and may never stall serving.
+#
+# With no argument the JSON is probed in rust/ then . (cargo runs bench
+# binaries with the package root as working directory).
+set -euo pipefail
+
+# serving may slow down while a rebuild shares the host, but must keep at
+# least this fraction of its pre-rebuild throughput
+DURING_TOK_S_MIN_FRACTION=0.30
+
+cd "$(dirname "$0")/.."
+
+echo "==> adaptive serving test suite (hot-swap identity, preemption storm, knobs)"
+cargo test --release --test adapt -q
+
+f="${1:-}"
+if [ -z "$f" ]; then
+  for cand in rust/BENCH_generate.json BENCH_generate.json; do
+    [ -f "$cand" ] && { f="$cand"; break; }
+  done
+fi
+[ -n "$f" ] && [ -f "$f" ] || { echo "check_adapt: BENCH_generate.json not found (looked in rust/ and .)"; exit 1; }
+
+grep -q '"adapt_sweep"' "$f" \
+  || { echo "check_adapt: $f has no adapt_sweep section"; exit 1; }
+
+for phase in before during after; do
+  grep -q "\"phase\": \"$phase\"" "$f" \
+    || { echo "check_adapt: adapt_sweep has no \"$phase\" row"; exit 1; }
+done
+
+# a hot swap must have landed by the end of the sweep
+swaps=$(grep '"phase": "after"' "$f" | sed -n 's/.*"swaps": \([0-9]*\).*/\1/p')
+[ -n "$swaps" ] && [ "$swaps" -ge 1 ] \
+  || { echo "check_adapt: no hot swap landed during the sweep (swaps=${swaps:-?})"; exit 1; }
+
+# the background rebuild may never stall serving: during >= fraction of before
+before=$(grep '"phase": "before"' "$f" | sed -n 's/.*"tok_s": \([0-9.]*\).*/\1/p')
+during=$(grep '"phase": "during"' "$f" | sed -n 's/.*"tok_s": \([0-9.]*\).*/\1/p')
+[ -n "$before" ] && [ -n "$during" ] \
+  || { echo "check_adapt: adapt_sweep rows missing tok_s fields"; exit 1; }
+ok=$(awk -v b="$before" -v d="$during" -v frac="$DURING_TOK_S_MIN_FRACTION" \
+  'BEGIN { print (b > 0 && d >= b * frac) ? 1 : 0 }')
+[ "$ok" = "1" ] \
+  || { echo "check_adapt: serving stalled behind the rebuild — during ${during} tok/s < ${DURING_TOK_S_MIN_FRACTION} x before ${before} tok/s"; exit 1; }
+
+echo "check_adapt: OK — swap landed (swaps=$swaps), during ${during} tok/s vs before ${before} tok/s ($f)"
