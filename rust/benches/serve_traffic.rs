@@ -1,0 +1,162 @@
+//! Replica scale-out traffic bench → `BENCH_serve.json`.
+//!
+//! A [`Dispatcher`] fleet (synthesized `qwensim` artifacts) is driven
+//! with the same traffic pattern at 1 and 2 replicas: bursty arrivals
+//! (whole bursts submitted back-to-back, then a gap) of mixed prompt
+//! lengths — short Interactive requests next to long Batch jobs — with
+//! every third request additionally opting into live token streaming,
+//! whose stream is checked against the final reply token-for-token.
+//!
+//! Columns: client-observed completion latency (p50/p99), goodput
+//! (completed streams per second), and a `dropped` count (errors or
+//! stream/reply divergence). `scripts/check_serve.sh` gates `dropped`
+//! at 0 on every row and requires 2-replica goodput ≥ 1-replica —
+//! scale-out must never lose streams and must actually scale.
+//!
+//! `HCSMOE_BENCH_SMOKE=1` shrinks the traffic for CI smoke runs.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hc_smoe::bench_support::{self, write_serve_json, ServeBenchRow};
+use hc_smoe::generate::{Generated, SamplingParams};
+use hc_smoe::parallel::default_threads;
+use hc_smoe::report::Table;
+use hc_smoe::serving::{
+    BatcherConfig, Dispatcher, GenerateRequest, Priority, ReplyRx, ServeSpec,
+};
+
+const SERVE_JSON: &str = "BENCH_serve.json";
+
+/// One in-flight request the traffic generator is waiting on.
+struct InFlight {
+    started: Instant,
+    reply: ReplyRx<anyhow::Result<Generated>>,
+    /// The live token stream, for requests that opted in.
+    stream: Option<ReplyRx<i32>>,
+}
+
+/// Drive one fleet with the bursty mixed-length pattern; returns the row.
+fn drive(root: &str, replicas: usize, bursts: usize, burst_size: usize) -> anyhow::Result<ServeBenchRow> {
+    let d = Arc::new(Dispatcher::launch(
+        ServeSpec::for_tests(root, "qwensim"),
+        BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(4) },
+        Some(replicas),
+    )?);
+    let t0 = Instant::now();
+    let mut inflight: Vec<InFlight> = Vec::new();
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let (mut completed, mut dropped, mut tokens) = (0usize, 0usize, 0u64);
+    let mut drain = |inflight: &mut Vec<InFlight>,
+                     latencies_ms: &mut Vec<f64>| {
+        for f in inflight.drain(..) {
+            let result = f.reply.recv();
+            let streamed: Option<Vec<i32>> = f.stream.map(|rx| {
+                let mut got = Vec::new();
+                while let Ok(t) = rx.recv() {
+                    got.push(t);
+                }
+                got
+            });
+            match result {
+                Ok(Ok(g)) => {
+                    if streamed.is_some_and(|s| s != g.tokens) {
+                        dropped += 1; // stream diverged from the reply
+                    } else {
+                        completed += 1;
+                        tokens += g.tokens.len() as u64;
+                        latencies_ms.push(f.started.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                _ => dropped += 1,
+            }
+        }
+    };
+    for b in 0..bursts {
+        // the whole burst arrives at once: placements overlap, so the
+        // dispatcher spreads the burst across replica pools
+        for i in 0..burst_size {
+            let n = b * burst_size + i;
+            // mixed lengths: every third request is a long Batch job,
+            // the rest short Interactive traffic
+            let long = n % 3 == 2;
+            let len = if long { 32 + (n * 7) % 16 } else { 4 + (n * 5) % 8 };
+            let prompt: Vec<i32> = (0..len).map(|p| (3 + p * 5 + n) as i32 % 90).collect();
+            let params = SamplingParams::greedy(if long { 16 } else { 6 }, None);
+            let mut req = GenerateRequest::new(&prompt, params)
+                .priority(if long { Priority::Batch } else { Priority::Interactive });
+            let mut stream = None;
+            if n % 3 == 0 {
+                let (r, rx) = req.streaming();
+                req = r;
+                stream = Some(rx);
+            }
+            let started = Instant::now();
+            let (_, reply) = d.submit(req)?;
+            inflight.push(InFlight {
+                started,
+                reply: reply.expect("fresh request owns its receiver"),
+                stream,
+            });
+        }
+        // drain the burst before the next one arrives (bursty, not
+        // steady-state: the gap is the recv time of the slowest stream)
+        drain(&mut inflight, &mut latencies_ms);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    d.shutdown()?;
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let quantile = |q: f64| -> f64 {
+        if latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies_ms.len() - 1) as f64 * q).round() as usize;
+        latencies_ms[idx]
+    };
+    Ok(ServeBenchRow {
+        replicas,
+        completed,
+        dropped,
+        tokens,
+        wall_s,
+        p50_ms: quantile(0.50),
+        p99_ms: quantile(0.99),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = bench_support::smoke();
+    let (bursts, burst_size) = if smoke { (2usize, 6usize) } else { (4, 12) };
+    let arts = bench_support::ensure_artifacts()?;
+    let root = arts.root.to_string_lossy().into_owned();
+    let mut table = Table::new(
+        "replica scale-out (bursty mixed-length traffic)",
+        &["replicas", "completed", "dropped", "goodput req/s", "p50/p99 ms"],
+    );
+    let mut rows = Vec::new();
+    for replicas in [1usize, 2] {
+        let row = drive(&root, replicas, bursts, burst_size)?;
+        table.row(vec![
+            row.replicas.to_string(),
+            row.completed.to_string(),
+            row.dropped.to_string(),
+            format!("{:.2}", row.goodput()),
+            format!("{:.2}/{:.2}", row.p50_ms, row.p99_ms),
+        ]);
+        rows.push(row);
+    }
+    table.print();
+    write_serve_json(
+        SERVE_JSON,
+        default_threads(),
+        "serve_traffic",
+        &format!(
+            "{} bursts x {} requests per replica count; every 3rd request streams; \
+             dropped counts errors and stream/reply divergence",
+            bursts, burst_size
+        ),
+        &rows,
+    )?;
+    println!("wrote {SERVE_JSON}");
+    Ok(())
+}

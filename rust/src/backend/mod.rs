@@ -630,13 +630,24 @@ pub trait Backend {
 pub use crate::config::env::BACKEND_ENV;
 
 /// Construct the backend selected by [`BACKEND_ENV`] (default: native).
-/// Parsing/validation lives in [`crate::config::env::backend_kind`].
+/// Parsing/validation lives in [`crate::config::env::backend_kind`];
+/// [`crate::config::env::EXPERT_SHARDS_ENV`] configures expert-parallel
+/// sharding on the native backend (and is a startup error on `pjrt`,
+/// which owns its own intra-op parallelism).
 pub fn from_env(arts: &Artifacts, cfg: &ModelCfg) -> Result<Box<dyn Backend>> {
+    let shards = crate::config::env::expert_shards(None)?;
     match crate::config::env::backend_kind()? {
         crate::config::env::BackendKind::Native => {
-            Ok(Box::new(native::NativeBackend::new(cfg.clone())))
+            Ok(Box::new(native::NativeBackend::new(cfg.clone()).with_expert_shards(shards)))
         }
         crate::config::env::BackendKind::Pjrt => {
+            anyhow::ensure!(
+                shards == 1,
+                "{}={} is expert-parallel sharding for the native backend; \
+                 the pjrt backend partitions work through its own compiler",
+                crate::config::env::EXPERT_SHARDS_ENV,
+                shards
+            );
             Ok(Box::new(pjrt::PjrtBackend::new(arts.clone(), cfg.clone())?))
         }
     }

@@ -82,6 +82,11 @@ const RMS_EPS: f32 = 1e-6;
 /// The native CPU backend: executes straight from host weights.
 pub struct NativeBackend {
     cfg: ModelCfg,
+    /// Expert-parallel shard count: how many workers the routed experts of
+    /// each MoE layer are partitioned across in [`moe_execute`]. `1` is
+    /// the serial per-expert sweep; any value is bit-identical to it (the
+    /// gated combine stays a single expert-ascending queue-order sweep).
+    shards: usize,
 }
 
 /// Live per-variant routing accumulator: one relaxed atomic counter per
@@ -362,9 +367,28 @@ struct PrefillParts {
 }
 
 impl NativeBackend {
-    /// Bind the backend to one model configuration.
+    /// Bind the backend to one model configuration (serial expert sweep;
+    /// see [`NativeBackend::with_expert_shards`]).
     pub fn new(cfg: ModelCfg) -> Self {
-        Self { cfg }
+        Self { cfg, shards: 1 }
+    }
+
+    /// Partition each MoE layer's routed experts across `shards` workers
+    /// (expert-parallel sharding). Each expert's gathered SwiGLU block is
+    /// independent of every other expert's, so the blocks compute
+    /// concurrently; the gated combine stays one sequential
+    /// expert-ascending queue-order sweep, so outputs are **bit-identical**
+    /// to the `shards = 1` serial path at any value — tests sweep this
+    /// directly instead of racing on [`crate::config::env::EXPERT_SHARDS_ENV`].
+    /// `0` is clamped to `1`.
+    pub fn with_expert_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// The configured expert-parallel shard count (>= 1).
+    pub fn expert_shards(&self) -> usize {
+        self.shards
     }
 
     /// Worker count for one forward over `tok` tokens: parallel only when
@@ -440,6 +464,7 @@ impl NativeBackend {
                 remap_l,
                 m.n_slots,
                 threads,
+                self.shards,
                 &mut parts.counts[l],
                 cap,
                 Some(&m.routing),
@@ -814,8 +839,8 @@ impl NativeBackend {
             let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
             let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
             let y = moe_verify(
-                cfg, w, l, &hf, tokens, &t0s, mask_l, remap_l, m.n_slots, threads, &mut cs,
-                &mut ckpts, Some(&m.routing),
+                cfg, w, l, &hf, tokens, &t0s, mask_l, remap_l, m.n_slots, threads,
+                self.shards, &mut cs, &mut ckpts, Some(&m.routing),
             )?;
             for (hv, yv) in h.iter_mut().zip(&y) {
                 *hv += yv;
@@ -1041,8 +1066,8 @@ impl NativeBackend {
             let mask_l = &mask[l * cfg.n_exp..(l + 1) * cfg.n_exp];
             let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
             let y = moe_chunk(
-                cfg, w, l, &hf, t0, c, mask_l, remap_l, m.n_slots, threads, &mut cs,
-                Some(&m.routing),
+                cfg, w, l, &hf, t0, c, mask_l, remap_l, m.n_slots, threads, self.shards,
+                &mut cs, Some(&m.routing),
             )?;
             for (hv, yv) in h.iter_mut().zip(&y) {
                 *hv += yv;
@@ -1696,6 +1721,7 @@ fn moe_layer(
     remap_l: Option<&[i32]>,
     n_slots: usize,
     threads: usize,
+    shards: usize,
     counts: &mut [usize],
     cap: usize,
     stats: Option<&RoutingStats>,
@@ -1733,7 +1759,7 @@ fn moe_layer(
             }
         }
     }
-    moe_execute(cfg, w, layer, hf, tok, &per_slot, n_slots, threads, stats)
+    moe_execute(cfg, w, layer, hf, tok, &per_slot, n_slots, threads, shards, stats)
 }
 
 /// Execute a routed dispatch: one grouped SwiGLU GEMM per expert over its
@@ -1756,6 +1782,7 @@ fn moe_execute(
     per_slot: &[Vec<(usize, f32)>],
     n_slots: usize,
     threads: usize,
+    shards: usize,
     stats: Option<&RoutingStats>,
 ) -> Result<Vec<f32>> {
     // Single observation point for live routing stats: every serving path
@@ -1765,6 +1792,12 @@ fn moe_execute(
         st.record(layer, per_slot, tok);
     }
     let d = cfg.d;
+    // Expert-parallel sharding splits the worker budget: each of the (up
+    // to) `shards` concurrent expert blocks runs its GEMMs with the
+    // per-shard remainder of `threads`, so the total worker count stays
+    // near `threads` and inner outputs stay bit-identical regardless (the
+    // `crate::parallel` contract).
+    let inner = (threads / shards.max(1)).max(1);
     // Per-variant kernel selection: a quantized variant carries its expert
     // triples in the int8 section, and every caller (scoring prefill,
     // batched decode, verify, chunked prefill) flows through this single
@@ -1772,15 +1805,11 @@ fn moe_execute(
     if let Some((qwg, qwu, qwd)) = quant_experts(w, layer)? {
         ensure!(qwg.shape()[0] == n_slots, "expert tensors must have {n_slots} slots");
         let m = qwg.shape()[2];
-        let mut y = vec![0f32; tok * d];
-        for (e, assigned) in per_slot.iter().enumerate() {
-            if assigned.is_empty() {
-                continue;
-            }
+        let outs = shard_expert_blocks(shards, per_slot, |e, assigned| {
             let c = assigned.len();
             let rows: Vec<usize> = assigned.iter().map(|&(ti, _)| ti).collect();
             let x = gather_rows(hf, d, &rows);
-            let out = swiglu_block_q8(
+            swiglu_block_q8(
                 &x,
                 qwg.index_slices(e),
                 qwu.index_slices(e),
@@ -1788,14 +1817,11 @@ fn moe_execute(
                 c,
                 d,
                 m,
-                threads,
-            );
-            for (ri, &(ti, p)) in assigned.iter().enumerate() {
-                for j in 0..d {
-                    y[ti * d + j] += p * out[ri * d + j];
-                }
-            }
-        }
+                inner,
+            )
+        });
+        let mut y = vec![0f32; tok * d];
+        combine_expert_blocks(per_slot, &outs, d, &mut y);
         if cfg.shared {
             add_shared_expert(cfg, w, layer, hf, tok, threads, &mut y)?;
         }
@@ -1806,11 +1832,7 @@ fn moe_execute(
     let wd = layer_tensor(w, layer, "exp.wd")?;
     ensure!(wg.shape()[0] == n_slots, "expert tensors must have {n_slots} slots");
     let m = wg.shape()[2];
-    let mut y = vec![0f32; tok * d];
-    for (e, assigned) in per_slot.iter().enumerate() {
-        if assigned.is_empty() {
-            continue;
-        }
+    let outs = shard_expert_blocks(shards, per_slot, |e, assigned| {
         let c = assigned.len();
         let rows: Vec<usize> = assigned.iter().map(|&(ti, _)| ti).collect();
         let x = gather_rows(hf, d, &rows);
@@ -1822,19 +1844,71 @@ fn moe_execute(
             c,
             d,
             m,
-            threads,
+            inner,
             false,
         );
+        out
+    });
+    let mut y = vec![0f32; tok * d];
+    combine_expert_blocks(per_slot, &outs, d, &mut y);
+    if cfg.shared {
+        add_shared_expert(cfg, w, layer, hf, tok, threads, &mut y)?;
+    }
+    Ok(y)
+}
+
+/// Compute every non-empty expert's output block, partitioned across
+/// `shards` workers ([`parallel::par_map_chunks`] over the slot index —
+/// contiguous slot ranges per worker, results returned in slot order).
+/// `f(e, assigned)` must be the pure per-expert gather + SwiGLU; empty
+/// slots yield `None` without calling `f`. With `shards <= 1` this is a
+/// plain in-order sweep with no spawns — the serial path.
+fn shard_expert_blocks<F>(
+    shards: usize,
+    per_slot: &[Vec<(usize, f32)>],
+    f: F,
+) -> Vec<Option<Vec<f32>>>
+where
+    F: Fn(usize, &[(usize, f32)]) -> Vec<f32> + Sync,
+{
+    let block = |e: usize| {
+        let assigned = &per_slot[e];
+        if assigned.is_empty() {
+            None
+        } else {
+            Some(f(e, assigned))
+        }
+    };
+    if shards <= 1 {
+        return (0..per_slot.len()).map(block).collect();
+    }
+    parallel::par_map_chunks(shards, per_slot.len(), |r| {
+        r.map(block).collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+/// The gated combine: scatter every expert block back into `y` in
+/// (expert-ascending, queue-order) order. This stays a single sequential
+/// sweep at any shard count — it is the only place expert outputs meet in
+/// f32 accumulation, so running it serially in the serial path's exact
+/// order is what makes expert-parallel sharding bit-identical.
+fn combine_expert_blocks(
+    per_slot: &[Vec<(usize, f32)>],
+    outs: &[Option<Vec<f32>>],
+    d: usize,
+    y: &mut [f32],
+) {
+    for (assigned, out) in per_slot.iter().zip(outs) {
+        let Some(out) = out else { continue };
         for (ri, &(ti, p)) in assigned.iter().enumerate() {
             for j in 0..d {
                 y[ti * d + j] += p * out[ri * d + j];
             }
         }
     }
-    if cfg.shared {
-        add_shared_expert(cfg, w, layer, hf, tok, threads, &mut y)?;
-    }
-    Ok(y)
 }
 
 /// One SMoE FFN block over a **verify batch** (and, at k = 1 runs, the
@@ -1872,6 +1946,7 @@ fn moe_verify(
     remap_l: Option<&[i32]>,
     n_slots: usize,
     threads: usize,
+    shards: usize,
     cs: &mut [SeqCacheMut],
     ckpts: &mut [Vec<Vec<Vec<usize>>>],
     stats: Option<&RoutingStats>,
@@ -1922,7 +1997,7 @@ fn moe_verify(
     }
     // grouped execution: all rows routed to an expert run as one block,
     // through the exact code the scoring/prefill path uses
-    moe_execute(cfg, w, layer, hf, rtot, &per_slot, n_slots, threads, stats)
+    moe_execute(cfg, w, layer, hf, rtot, &per_slot, n_slots, threads, shards, stats)
 }
 
 /// One SMoE FFN block over a **prompt chunk** of a single resumed
@@ -1949,6 +2024,7 @@ fn moe_chunk(
     remap_l: Option<&[i32]>,
     n_slots: usize,
     threads: usize,
+    shards: usize,
     cs: &mut SeqCacheMut,
     stats: Option<&RoutingStats>,
 ) -> Result<Vec<f32>> {
@@ -1983,7 +2059,7 @@ fn moe_chunk(
             }
         }
     }
-    moe_execute(cfg, w, layer, hf, c, &per_slot, n_slots, threads, stats)
+    moe_execute(cfg, w, layer, hf, c, &per_slot, n_slots, threads, shards, stats)
 }
 
 /// `dssim`'s always-on shared expert: `y += swiglu(hf, shared.*)`.
@@ -2056,10 +2132,13 @@ pub fn forward_logits_with(
         let remap_l = remap.map(|rm| &rm[l * cfg.n_exp..(l + 1) * cfg.n_exp]);
         let mut counts = vec![0usize; n_slots];
         let cap = cfg.capacity(tok, n_slots);
-        // scoring path: `None` — offline eval must not pollute the live
-        // routing signal a resident serving variant accumulates
+        // scoring path: `None` stats and `1` shard — offline eval must not
+        // pollute the live routing signal a resident serving variant
+        // accumulates, and it doubles as the serial reference that the
+        // sharded backend paths are pinned bit-identical against
         let y = moe_layer(
-            cfg, w, l, &hf, tok, mask_l, remap_l, n_slots, threads, &mut counts, cap, None,
+            cfg, w, l, &hf, tok, mask_l, remap_l, n_slots, threads, 1, &mut counts, cap,
+            None,
         )?;
         for (hv, yv) in h.iter_mut().zip(&y) {
             *hv += yv;

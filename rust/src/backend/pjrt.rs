@@ -7,6 +7,13 @@
 //! Offline builds link the vendored `xla` stub, so construction succeeds
 //! but every execution reports the missing PJRT plugin — swap real
 //! bindings into `rust/Cargo.toml` to make this backend live.
+//!
+//! Expert-parallel sharding (`HCSMOE_EXPERT_SHARDS`) is a native-backend
+//! feature: [`super::from_env`] rejects `shards != 1` here at startup
+//! with a descriptive error rather than silently ignoring the knob —
+//! on PJRT the equivalent would be device-side partitioning of the
+//! lowered MoE layer, tracked in ROADMAP.md alongside the incremental
+//! prefill/decode entry points.
 
 use std::sync::{Arc, OnceLock};
 

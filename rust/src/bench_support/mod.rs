@@ -704,6 +704,91 @@ pub fn write_generate_json(
     std::fs::write(path, out)
 }
 
+/// One replica-scale-out measurement row for `BENCH_serve.json`: a
+/// [`crate::serving::Dispatcher`] fleet is driven with bursty arrivals
+/// of mixed-length prompts (the serve_traffic bench), and the row
+/// records what the fleet delivered at that replica count. `goodput`
+/// is completed streams per wall-clock second; `dropped` counts
+/// requests that ended in an error or a stream/reply token mismatch —
+/// `scripts/check_serve.sh` gates dropped at 0 and requires 2-replica
+/// goodput ≥ 1-replica.
+#[derive(Debug, Clone)]
+pub struct ServeBenchRow {
+    /// Executor replicas behind the dispatcher.
+    pub replicas: usize,
+    /// Streams that completed successfully.
+    pub completed: usize,
+    /// Streams that errored or whose live stream diverged from the reply.
+    pub dropped: usize,
+    /// Tokens generated across every completed stream.
+    pub tokens: u64,
+    /// Wall-clock of the whole traffic run (seconds).
+    pub wall_s: f64,
+    /// Median request completion latency (ms, client-observed).
+    pub p50_ms: f64,
+    /// 99th-percentile request completion latency (ms, client-observed).
+    pub p99_ms: f64,
+}
+
+impl ServeBenchRow {
+    /// Completed streams per wall-clock second.
+    pub fn goodput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Generated tokens per wall-clock second.
+    pub fn tok_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Write the machine-readable replica-scale-out report
+/// (`BENCH_serve.json`). Hand-rolled JSON like [`write_parallel_json`];
+/// one row per replica count, same traffic pattern each — so the
+/// goodput column is directly comparable across rows.
+pub fn write_serve_json(
+    path: &str,
+    threads: usize,
+    generator: &str,
+    note: &str,
+    rows: &[ServeBenchRow],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"serve\",\n");
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"generator\": \"{}\",\n", json_escape(generator)));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"replicas\": {}, \"completed\": {}, \"dropped\": {}, \
+             \"tokens\": {}, \"wall_s\": {:.4}, \"p50_ms\": {:.4}, \
+             \"p99_ms\": {:.4}, \"goodput\": {:.4}, \"tok_s\": {:.1}}}{comma}\n",
+            r.replicas,
+            r.completed,
+            r.dropped,
+            r.tokens,
+            r.wall_s,
+            r.p50_ms,
+            r.p99_ms,
+            r.goodput(),
+            r.tok_s()
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// The 4-task subset used by the paper's ablation tables (Tables 4, 5).
 pub const ABLATION_TASKS: [&str; 4] = ["arc_c", "boolq", "obqa", "rte"];
 

@@ -13,6 +13,9 @@
 //! | `HCSMOE_PREFILL_CHUNK`    | prompt tokens per prefill chunk (>= 1)    | unchunked    |
 //! | `HCSMOE_ADAPT_WINDOW`     | routed tokens per adaptive-recompression window (>= 1) | 4096 |
 //! | `HCSMOE_ADAPT_MIN_TOKENS` | total routed tokens before the first recompression | 0 |
+//! | `HCSMOE_REPLICAS`         | serving executor replicas behind the dispatcher (>= 1) | 1 |
+//! | `HCSMOE_EXPERT_SHARDS`    | expert-parallel shards per MoE layer (>= 1)            | 1 |
+//! | `HCSMOE_HTTP_ADDR`        | HTTP front-end listen address (`host:port`)            | unset |
 //!
 //! The resolvers below each take the corresponding `ServeSpec` field (or
 //! nothing, for process-wide knobs) and apply the precedence *explicit
@@ -53,6 +56,23 @@ pub const DEFAULT_ADAPT_WINDOW: u64 = 4096;
 /// FIRST adaptive recompression may trigger — a warm-up guard so a few
 /// unrepresentative early requests cannot specialize the model.
 pub const ADAPT_MIN_TOKENS_ENV: &str = "HCSMOE_ADAPT_MIN_TOKENS";
+
+/// Environment variable setting how many serving executor replicas the
+/// dispatcher places requests across (see `SERVING.md` §"Execution
+/// topology"). Each replica owns its own `ModelContext`, variant pins,
+/// and KV pool.
+pub const REPLICAS_ENV: &str = "HCSMOE_REPLICAS";
+
+/// Environment variable setting how many expert-parallel shards each
+/// MoE layer's routed experts are partitioned into inside the native
+/// backend. `1` (the default) is the serial per-expert sweep; higher
+/// values compute expert blocks concurrently while keeping the gated
+/// combine in expert-ascending order, so outputs stay bit-identical.
+pub const EXPERT_SHARDS_ENV: &str = "HCSMOE_EXPERT_SHARDS";
+
+/// Environment variable setting the HTTP/1.1 front-end listen address
+/// (`host:port`, e.g. `127.0.0.1:8089`). Unset = no HTTP front end.
+pub const HTTP_ADDR_ENV: &str = "HCSMOE_HTTP_ADDR";
 
 /// Which execution backend to construct (see [`crate::backend::from_env`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -178,6 +198,83 @@ fn parse_adapt_min_tokens(v: &str) -> Result<u64> {
     })
 }
 
+/// Resolve the serving replica count: the explicit spec value when
+/// given, else [`REPLICAS_ENV`], else `1`. Zero replicas could never
+/// serve a request, so `Some(0)` is rejected like a malformed env value.
+pub fn replicas(explicit: Option<usize>) -> Result<usize> {
+    if let Some(n) = explicit {
+        if n == 0 {
+            return Err(anyhow!("replicas=0 is not a positive replica count (e.g. 2)"));
+        }
+        return Ok(n);
+    }
+    match std::env::var(REPLICAS_ENV) {
+        Ok(v) => parse_replicas(&v),
+        Err(_) => Ok(1),
+    }
+}
+
+fn parse_replicas(v: &str) -> Result<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(anyhow!(
+            "{REPLICAS_ENV}={v:?} is not a positive replica count (e.g. 2)"
+        )),
+    }
+}
+
+/// Resolve the expert-parallel shard count: the explicit value when
+/// given, else [`EXPERT_SHARDS_ENV`], else `1` (serial expert sweep).
+/// `Some(0)` is rejected like a malformed env value — zero shards would
+/// execute no experts at all.
+pub fn expert_shards(explicit: Option<usize>) -> Result<usize> {
+    if let Some(n) = explicit {
+        if n == 0 {
+            return Err(anyhow!(
+                "expert_shards=0 is not a positive shard count (e.g. 4)"
+            ));
+        }
+        return Ok(n);
+    }
+    match std::env::var(EXPERT_SHARDS_ENV) {
+        Ok(v) => parse_expert_shards(&v),
+        Err(_) => Ok(1),
+    }
+}
+
+fn parse_expert_shards(v: &str) -> Result<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(anyhow!(
+            "{EXPERT_SHARDS_ENV}={v:?} is not a positive shard count (e.g. 4)"
+        )),
+    }
+}
+
+/// Resolve the HTTP front-end listen address: the explicit value when
+/// given, else [`HTTP_ADDR_ENV`], else `None` (no HTTP front end). An
+/// empty address — explicit or from the environment — is rejected; the
+/// operator should unset the knob instead.
+pub fn http_addr(explicit: Option<String>) -> Result<Option<String>> {
+    if let Some(addr) = explicit {
+        return Ok(Some(parse_http_addr(&addr)?));
+    }
+    match std::env::var(HTTP_ADDR_ENV) {
+        Ok(v) => Ok(Some(parse_http_addr(&v)?)),
+        Err(_) => Ok(None),
+    }
+}
+
+fn parse_http_addr(v: &str) -> Result<String> {
+    let addr = v.trim();
+    if addr.is_empty() || !addr.contains(':') {
+        return Err(anyhow!(
+            "{HTTP_ADDR_ENV}={v:?} is not a host:port listen address (e.g. 127.0.0.1:8089)"
+        ));
+    }
+    Ok(addr.to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,5 +336,47 @@ mod tests {
         // explicit spec values win without consulting the environment
         assert_eq!(adapt_min_tokens(Some(7)).unwrap(), 7);
         assert_eq!(adapt_min_tokens(Some(0)).unwrap(), 0);
+    }
+
+    #[test]
+    fn replicas_require_a_positive_count() {
+        assert_eq!(parse_replicas("2").unwrap(), 2);
+        assert_eq!(parse_replicas(" 1 ").unwrap(), 1);
+        for bad in ["0", "-1", "all", ""] {
+            let err = parse_replicas(bad).unwrap_err().to_string();
+            assert!(err.contains("HCSMOE_REPLICAS"), "{err}");
+        }
+        // explicit spec values win, and zero is rejected at startup
+        assert_eq!(replicas(Some(4)).unwrap(), 4);
+        assert!(replicas(Some(0)).is_err());
+    }
+
+    #[test]
+    fn expert_shards_require_a_positive_count() {
+        assert_eq!(parse_expert_shards("4").unwrap(), 4);
+        assert_eq!(parse_expert_shards(" 1 ").unwrap(), 1);
+        for bad in ["0", "-2", "auto", ""] {
+            let err = parse_expert_shards(bad).unwrap_err().to_string();
+            assert!(err.contains("HCSMOE_EXPERT_SHARDS"), "{err}");
+        }
+        // explicit values win, and zero is rejected at startup
+        assert_eq!(expert_shards(Some(3)).unwrap(), 3);
+        assert!(expert_shards(Some(0)).is_err());
+    }
+
+    #[test]
+    fn http_addr_requires_host_and_port() {
+        assert_eq!(parse_http_addr("127.0.0.1:8089").unwrap(), "127.0.0.1:8089");
+        assert_eq!(parse_http_addr(" 0.0.0.0:80 ").unwrap(), "0.0.0.0:80");
+        for bad in ["", "   ", "localhost"] {
+            let err = parse_http_addr(bad).unwrap_err().to_string();
+            assert!(err.contains("HCSMOE_HTTP_ADDR"), "{err}");
+        }
+        // explicit values win without consulting the environment
+        assert_eq!(
+            http_addr(Some("[::1]:9000".into())).unwrap().as_deref(),
+            Some("[::1]:9000")
+        );
+        assert!(http_addr(Some(String::new())).is_err());
     }
 }

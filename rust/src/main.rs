@@ -8,6 +8,7 @@
 //!   compress   <model> <r> [--method M] [--domain D]   compress + report
 //!   eval       <model> <r> [--method M] [--domain D] [--tasks a,b]
 //!   serve      <model> [--r R --method M] [--requests N] [--adaptive]
+//!              [--replicas N] [--http ADDR]
 //!   generate   <model> [--prompt 1,4,20] [--max-tokens N] [--sample]
 //!              [--top-k K --temperature T --seed S] [--r R --method M]
 //!              [--compact] [--speculative --draft-k K]
@@ -32,7 +33,8 @@ use hc_smoe::merging::MergeStrategy;
 use hc_smoe::model::ModelContext;
 use hc_smoe::pipeline::{compressed_params, Method, Pipeline};
 use hc_smoe::report::Table;
-use hc_smoe::serving::{serve, AdaptSpec, BatcherConfig, ServeSpec};
+use hc_smoe::serving::net::serve_http;
+use hc_smoe::serving::{AdaptSpec, BatcherConfig, Dispatcher, ServeSpec};
 use hc_smoe::similarity::Metric;
 use hc_smoe::util::Timer;
 
@@ -167,6 +169,7 @@ COMMANDS:
   compress  <model> <r> [--method M] [--domain D]
   eval      <model> <r> [--method M] [--domain D] [--tasks a,b,..]
   serve     <model> [--r R] [--method M] [--requests N] [--adaptive]
+            [--replicas N] [--http ADDR]
   generate  <model> [--prompt 1,4,20,3] [--max-tokens N] [--sample]
             [--top-k K] [--temperature T] [--seed S] [--eos TOK]
             [--r R] [--method M] [--domain D] [--compact]
@@ -178,7 +181,9 @@ METHODS: hc-avg hc-single hc-complete hc-nu kmeans-fix kmeans-rnd fcm
 
 ENV: HCSMOE_ARTIFACTS (default ./artifacts, falling back to a synthesized
      ./artifacts-synth), HCSMOE_BACKEND (native | pjrt, default native),
-     HCSMOE_ADAPT_WINDOW / HCSMOE_ADAPT_MIN_TOKENS (serve --adaptive)",
+     HCSMOE_ADAPT_WINDOW / HCSMOE_ADAPT_MIN_TOKENS (serve --adaptive),
+     HCSMOE_REPLICAS / HCSMOE_HTTP_ADDR (serve scale-out + front end),
+     HCSMOE_EXPERT_SHARDS (native expert-parallel sharding)",
         hc_smoe::version()
     );
 }
@@ -355,14 +360,32 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         drafter: None,
         adapt,
     };
-    let handle = serve(
+    // --replicas N launches N full executors behind the dispatcher
+    // (falling back to HCSMOE_REPLICAS, default 1 — the historical
+    // single-executor behaviour); --http ADDR (or HCSMOE_HTTP_ADDR)
+    // additionally exposes the fleet over the streaming HTTP front end
+    // for the duration of the run, then drains it gracefully.
+    let replicas = match args.flags.get("replicas") {
+        Some(v) => Some(v.parse::<usize>().context("parsing --replicas")?),
+        None => None,
+    };
+    let dispatcher = std::sync::Arc::new(Dispatcher::launch(
         spec,
         BatcherConfig { max_rows: ctx.manifest.eval_b, max_wait: Duration::from_millis(5) },
-    )?;
+        replicas,
+    )?);
+    let http = match hc_smoe::config::env::http_addr(args.flags.get("http").cloned())? {
+        Some(addr) => {
+            let s = serve_http(std::sync::Arc::clone(&dispatcher), &addr, 64)?;
+            println!("http front end listening on {}", s.addr());
+            Some(s)
+        }
+        None => None,
+    };
     let t = Timer::start();
     let mut correct = 0usize;
     for item in bench.items.iter().cycle().take(n_requests) {
-        let scores = handle.score_item(&item.prompt, &item.choices)?;
+        let scores = dispatcher.score_item(&item.prompt, &item.choices)?;
         let pred = scores
             .iter()
             .enumerate()
@@ -374,8 +397,14 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         }
     }
     let wall = t.secs();
-    let snap = handle.metrics.snapshot();
-    handle.shutdown()?;
+    let snap = dispatcher.merged();
+    let per_replica = dispatcher.metrics();
+    match http {
+        // HttpServer::shutdown drains in-flight streams, then stops the
+        // dispatcher it owns
+        Some(s) => s.shutdown()?,
+        None => dispatcher.shutdown()?,
+    }
     println!(
         "served {n_requests} requests in {wall:.2}s ({:.1} req/s, {:.1} rows/s busy, \
          {} batches, fill {:.2}); acc {:.3}",
@@ -385,6 +414,16 @@ fn serve_cmd(arts: &Artifacts, args: &Args) -> Result<()> {
         snap.mean_batch_fill(ctx.manifest.eval_b),
         correct as f64 / n_requests as f64,
     );
+    if per_replica.len() > 1 {
+        for (i, r) in per_replica.iter().enumerate() {
+            println!(
+                "  replica {i}: {} rows, {} batches, {:.1} rows/s busy",
+                r.rows,
+                r.batches,
+                r.rows_per_sec(),
+            );
+        }
+    }
     if args.flags.contains_key("adaptive") {
         println!(
             "adaptive: {} swaps, active variant {:016x}, recompress {:.2}s, \

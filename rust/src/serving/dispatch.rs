@@ -1,0 +1,366 @@
+//! Replica scale-out: N independent executors behind one dispatcher.
+//!
+//! The continuous-batching executor is deliberately single-threaded —
+//! PJRT handles are not `Send`, and one thread owning all execution
+//! state is what makes hot swaps and preemption race-free. Scaling
+//! therefore happens *outside* the executor: the [`Dispatcher`] launches
+//! `N` full replicas (each with its own [`super::executor_loop`] thread,
+//! `ModelContext`, variant registry, and paged KV pool) and places every
+//! generation on exactly one of them. HC-SMoE is what makes this cheap:
+//! a merged r-expert variant's resident weights shrink by `r / n_expert`,
+//! so several replicas fit where one uncompressed model did.
+//!
+//! Placement is **admission-aware** and **prefix-affine**:
+//!
+//! 1. Estimate the request's worst-case KV footprint in pool blocks
+//!    (`ceil((prompt + max_new) / block_tokens)`, doubled for
+//!    speculative pairs — the same bound each executor's admission
+//!    control reserves).
+//! 2. If the prompt spans at least one full block, hash that first
+//!    block and look it up in the affinity map: requests sharing a
+//!    prefix land on the replica that already holds its KV blocks, so
+//!    cross-request prefix sharing keeps working under scale-out
+//!    (blocks are per-pool; a prefix cached on replica 0 is invisible
+//!    to replica 1).
+//! 3. Honour the affinity only while that replica has headroom
+//!    (committed + estimate ≤ its pool capacity); otherwise spill to
+//!    the least-committed replica (ties → lowest index, keeping
+//!    placement deterministic) and move the affinity there — the
+//!    prefix's blocks will be rebuilt where traffic now flows.
+//!
+//! "Committed" is tracked by RAII [`Lease`]s attached to each dispatched
+//! request: every terminal path through the scheduler — normal finish,
+//! error reply, disconnect eviction, shutdown drain — drops the request
+//! state and with it the lease, so the dispatcher's occupancy view can
+//! never leak. Placement is a *best-effort estimate*; the per-executor
+//! admission queue remains the real gate (an over-placed request waits
+//! there, it is never lost).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::{
+    BatcherConfig, GenerateRequest, Generated, Metrics, MetricsSnapshot, Priority, ReplyRx,
+    Request, RowSpec, ScoreRequest, ServeSpec, ServerHandle,
+};
+use crate::generate::SamplingParams;
+use crate::kvpool::DEFAULT_BLOCK_TOKENS;
+
+/// RAII occupancy lease: `acquire` adds the request's estimated block
+/// footprint to its replica's committed counter, `Drop` subtracts it.
+/// The lease travels inside the [`GenerateRequest`] through every
+/// scheduler state (queued → prefilling → active → preempted →
+/// finished), so whichever path retires the request — reply, error,
+/// disconnect eviction, shutdown drain — releases the blocks without
+/// any explicit bookkeeping call.
+pub(crate) struct Lease {
+    counter: Arc<AtomicU64>,
+    blocks: u64,
+}
+
+impl Lease {
+    fn acquire(counter: &Arc<AtomicU64>, blocks: u64) -> Self {
+        counter.fetch_add(blocks, Ordering::Relaxed);
+        Self { counter: Arc::clone(counter), blocks }
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(self.blocks, Ordering::Relaxed);
+    }
+}
+
+/// Pure placement decision: honour `affinity` while it has headroom,
+/// else the least-committed replica (ties → lowest index). `totals[i]`
+/// of 0 means "capacity unknown" (the replica's executor has not
+/// published its pool size yet) and always fits — placement degrades to
+/// load balancing, never to rejection.
+fn pick_replica(committed: &[u64], totals: &[u64], affinity: Option<usize>, est: u64) -> usize {
+    let fits = |i: usize| totals[i] == 0 || committed[i] + est <= totals[i];
+    if let Some(i) = affinity {
+        if i < committed.len() && fits(i) {
+            return i;
+        }
+    }
+    committed
+        .iter()
+        .enumerate()
+        .min_by_key(|&(_, &c)| c)
+        .map(|(i, _)| i)
+        .expect("dispatcher has at least one replica")
+}
+
+/// Client-side handle to a fleet of serving replicas. See the module
+/// docs for the placement policy. All methods take `&self` so the
+/// dispatcher can be shared behind an `Arc` (the HTTP front end in
+/// [`super::net`] serves every connection off one dispatcher).
+pub struct Dispatcher {
+    /// The replica handles; emptied by [`Self::shutdown`]. Only
+    /// shutdown locks this — submissions go through `senders`.
+    replicas: Mutex<Vec<ServerHandle>>,
+    /// Cloned submission channels, one per replica (cleared on
+    /// shutdown so new submissions fail fast). Kept under a mutex and
+    /// cloned out per call: the lock is never held across a blocking
+    /// send or recv.
+    senders: Mutex<Vec<Sender<Request>>>,
+    /// Per-replica live counters (same `Arc`s the executors update).
+    metrics: Vec<Arc<Metrics>>,
+    /// Per-replica committed KV blocks (lease-tracked estimates).
+    committed: Vec<Arc<AtomicU64>>,
+    /// First-block prompt hash → replica index.
+    affinity: Mutex<HashMap<u64, usize>>,
+    /// Tokens per KV pool block (the affinity prefix length and the
+    /// block-estimate divisor).
+    block_tokens: usize,
+    /// Round-robin cursor for stateless score traffic.
+    rr: AtomicU64,
+}
+
+impl Dispatcher {
+    /// Launch `n` replicas of `spec` (each its own executor thread with
+    /// a private model context, variant registry, and KV pool). `None`
+    /// resolves `HCSMOE_REPLICAS` (default 1 — exactly the old
+    /// single-executor [`super::serve`]). Zero is a startup error.
+    pub fn launch(spec: ServeSpec, batcher: BatcherConfig, n: Option<usize>) -> Result<Self> {
+        let n = crate::config::env::replicas(n)?;
+        let mut replicas = Vec::with_capacity(n);
+        let mut senders = Vec::with_capacity(n);
+        let mut metrics = Vec::with_capacity(n);
+        for _ in 0..n {
+            let h = super::serve(spec.clone(), batcher.clone())?;
+            senders.push(h.sender());
+            metrics.push(Arc::clone(&h.metrics));
+            replicas.push(h);
+        }
+        Ok(Self {
+            replicas: Mutex::new(replicas),
+            senders: Mutex::new(senders),
+            metrics,
+            committed: (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect(),
+            affinity: Mutex::new(HashMap::new()),
+            block_tokens: DEFAULT_BLOCK_TOKENS,
+            rr: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of replicas launched (fixed for the dispatcher's life).
+    pub fn replica_count(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// Worst-case KV pool blocks this request can occupy — the same
+    /// bound the target executor's admission control will reserve
+    /// (speculative pairs hold BOTH caches, hence 2×).
+    fn est_blocks(&self, req: &GenerateRequest) -> u64 {
+        let tokens = req.prompt.len() + req.params.max_new_tokens;
+        let blocks = ((tokens + self.block_tokens - 1) / self.block_tokens) as u64;
+        if req.draft_k.is_some() {
+            blocks * 2
+        } else {
+            blocks
+        }
+    }
+
+    /// Affinity key: hash of the prompt's first pool block. Prompts
+    /// shorter than one block can't share KV blocks anyway (sharing is
+    /// whole-block), so they carry no affinity.
+    fn affinity_key(&self, prompt: &[i32]) -> Option<u64> {
+        if prompt.len() < self.block_tokens {
+            return None;
+        }
+        let mut h = DefaultHasher::new();
+        prompt[..self.block_tokens].hash(&mut h);
+        Some(h.finish())
+    }
+
+    /// Place one request: (replica index, estimated blocks).
+    fn place(&self, req: &GenerateRequest) -> (usize, u64) {
+        let est = self.est_blocks(req);
+        let committed: Vec<u64> =
+            self.committed.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let totals: Vec<u64> = self
+            .metrics
+            .iter()
+            .map(|m| m.kv_blocks_total.load(Ordering::Relaxed))
+            .collect();
+        let key = self.affinity_key(&req.prompt);
+        let mut aff = self.affinity.lock().expect("dispatcher poisoned");
+        let hint = key.and_then(|k| aff.get(&k).copied());
+        let idx = pick_replica(&committed, &totals, hint, est);
+        if let Some(k) = key {
+            // first sight OR over-commit spill: the prefix now lives
+            // (or will be rebuilt) on `idx`
+            aff.insert(k, idx);
+        }
+        (idx, est)
+    }
+
+    /// Submit a built [`GenerateRequest`] without blocking: place it,
+    /// attach its occupancy [`Lease`], and hand it to the chosen
+    /// replica. Returns the replica index (tests pin placement through
+    /// it) and the private reply receiver (`None` after
+    /// [`GenerateRequest::reply_to`]).
+    pub fn submit(
+        &self,
+        mut req: GenerateRequest,
+    ) -> Result<(usize, Option<ReplyRx<Result<Generated>>>)> {
+        let (idx, est) = self.place(&req);
+        req.lease = Some(Lease::acquire(&self.committed[idx], est));
+        let rx = req.rx.take();
+        let tx = {
+            let senders = self.senders.lock().expect("dispatcher poisoned");
+            senders.get(idx).cloned().ok_or_else(|| anyhow!("dispatcher stopped"))?
+        };
+        tx.send(Request::Generate(req)).map_err(|_| anyhow!("replica {idx} stopped"))?;
+        Ok((idx, rx))
+    }
+
+    /// Blocking generation with default scheduling — the dispatcher
+    /// counterpart of [`ServerHandle::generate`], bit-identical to it
+    /// (and to offline [`crate::generate::generate`]) for seeded
+    /// sampling: placement only chooses *where* the same `Session`
+    /// loop runs.
+    pub fn generate(&self, prompt: &[i32], params: SamplingParams) -> Result<Generated> {
+        self.generate_opts(prompt, params, Priority::Interactive, None)
+    }
+
+    /// [`Self::generate`] with explicit scheduling options.
+    pub fn generate_opts(
+        &self,
+        prompt: &[i32],
+        params: SamplingParams,
+        class: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Generated> {
+        let mut req = GenerateRequest::new(prompt, params).priority(class);
+        if let Some(d) = deadline {
+            req = req.deadline(d);
+        }
+        let (_, rx) = self.submit(req)?;
+        rx.expect("a fresh request owns its receiver").recv()?
+    }
+
+    /// Score one multiple-choice item (blocking). Scoring is stateless
+    /// (no KV cache), so placement is plain round-robin.
+    pub fn score_item(&self, prompt: &[i32], choices: &[Vec<i32>]) -> Result<Vec<f64>> {
+        let idx = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % self.metrics.len();
+        let rows: Vec<RowSpec> = choices
+            .iter()
+            .map(|ch| {
+                let mut seq = prompt.to_vec();
+                seq.extend_from_slice(ch);
+                RowSpec { seq: seq.clone(), start: prompt.len(), end: seq.len() }
+            })
+            .collect();
+        let tx = {
+            let senders = self.senders.lock().expect("dispatcher poisoned");
+            senders.get(idx).cloned().ok_or_else(|| anyhow!("dispatcher stopped"))?
+        };
+        let (reply, rx) = channel();
+        tx.send(Request::Score(ScoreRequest { rows, reply, enqueued: Instant::now() }))
+            .map_err(|_| anyhow!("replica {idx} stopped"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Per-replica metric snapshots, index-aligned with placement.
+    pub fn metrics(&self) -> Vec<MetricsSnapshot> {
+        self.metrics.iter().map(|m| m.snapshot()).collect()
+    }
+
+    /// Fleet-wide aggregate snapshot ([`Metrics::merged`]).
+    pub fn merged(&self) -> MetricsSnapshot {
+        let refs: Vec<&Metrics> = self.metrics.iter().map(Arc::as_ref).collect();
+        Metrics::merged(&refs)
+    }
+
+    /// Blocks currently committed (lease-held) on replica `i` — the
+    /// dispatcher's occupancy estimate, not the pool's own gauge.
+    pub fn committed_blocks(&self, i: usize) -> u64 {
+        self.committed[i].load(Ordering::Relaxed)
+    }
+
+    /// Stop every replica and join its executor thread. Each replica's
+    /// shutdown answers all of its in-flight and queued generations
+    /// (see [`ServerHandle::shutdown`]), so no dispatcher client blocks
+    /// forever. `&self` (not `self`) so an `Arc`-shared dispatcher —
+    /// the HTTP front end's case — can be drained; later submissions
+    /// fail with "dispatcher stopped". Idempotent.
+    pub fn shutdown(&self) -> Result<()> {
+        self.senders.lock().expect("dispatcher poisoned").clear();
+        let replicas: Vec<ServerHandle> =
+            std::mem::take(&mut *self.replicas.lock().expect("dispatcher poisoned"));
+        let mut first_err = None;
+        for h in replicas {
+            if let Err(e) = h.shutdown() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+impl Drop for Dispatcher {
+    fn drop(&mut self) {
+        // best-effort: a dispatcher dropped without an explicit
+        // shutdown() still stops its executor threads
+        let _ = self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_releases_on_drop() {
+        let counter = Arc::new(AtomicU64::new(0));
+        let a = Lease::acquire(&counter, 5);
+        let b = Lease::acquire(&counter, 3);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+        drop(a);
+        assert_eq!(counter.load(Ordering::Relaxed), 3);
+        drop(b);
+        assert_eq!(counter.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pick_honours_affinity_with_headroom() {
+        // replica 1 is busier but the affinity hint still fits
+        assert_eq!(pick_replica(&[0, 10], &[100, 100], Some(1), 5), 1);
+    }
+
+    #[test]
+    fn pick_spills_when_affinity_overcommitted() {
+        // affinity replica 0 is full (committed + est > total): spill
+        // to the least-committed of the rest
+        assert_eq!(pick_replica(&[98, 40, 20], &[100, 100, 100], Some(0), 5), 2);
+    }
+
+    #[test]
+    fn pick_least_committed_without_affinity() {
+        assert_eq!(pick_replica(&[7, 3, 9], &[100, 100, 100], None, 1), 1);
+    }
+
+    #[test]
+    fn pick_breaks_ties_toward_lowest_index() {
+        assert_eq!(pick_replica(&[4, 4, 4], &[100, 100, 100], None, 1), 0);
+    }
+
+    #[test]
+    fn unknown_capacity_always_fits() {
+        // totals of 0 mean the executor has not published its pool size
+        // yet — the affinity hint must still be honoured
+        assert_eq!(pick_replica(&[1_000_000, 0], &[0, 0], Some(0), 64), 0);
+    }
+}

@@ -32,15 +32,25 @@
 //!   multi-position verify forward serves both kinds, and every output
 //!   stream stays bit-identical to plain decoding.
 //!
-//! A single executor thread owns all execution state (required for the
-//! PJRT backend, whose xla handles are not `Send`; the native backend
-//! simply inherits the same single-executor design) — everything else is
-//! channels. Used by `examples/serve_merged.rs`,
+//! Each executor is one thread owning all of its execution state
+//! (required for the PJRT backend, whose xla handles are not `Send`; the
+//! native backend simply inherits the same design) — everything else is
+//! channels. Single-executor is a *policy*, not the architecture:
+//! [`dispatch::Dispatcher`] scales out to `HCSMOE_REPLICAS` executors
+//! (each with its own `ModelContext`, variant pins and KV pool) placed by
+//! KV occupancy and shared-prefix affinity, [`net`] puts an HTTP/1.1
+//! streaming front end with backpressure and graceful drain over it, and
+//! `HCSMOE_EXPERT_SHARDS` partitions each MoE layer's experts across
+//! worker threads inside the native backend — all three bit-identical to
+//! the serial single-executor path. Used by `examples/serve_merged.rs`,
 //! `examples/generate_merged.rs` and the Table 20 throughput/latency
 //! measurements. Runs offline end to end on the native backend. The full
 //! architecture (request lifecycle, batching policies, KV-cache memory
-//! accounting, metrics definitions) is documented in `SERVING.md`.
+//! accounting, execution topology, metrics definitions) is documented in
+//! `SERVING.md`.
 
+pub mod dispatch;
+pub mod net;
 pub mod scheduler;
 
 use std::cell::RefCell;
@@ -61,6 +71,7 @@ use crate::model::ModelContext;
 use crate::pipeline::{CompressedModel, Method};
 use crate::variant::{self, SwapOutcome, Variant, VariantRegistry};
 
+pub use dispatch::Dispatcher;
 pub use scheduler::{LatencyHisto, Priority};
 use scheduler::{ActiveGen, DraftSeq, PrefillInFlight, Queued, SchedQueues};
 
@@ -168,6 +179,30 @@ impl<T> ReplyRx<T> {
         }
         Ok(None)
     }
+
+    /// Bounded-wait receive: `Ok(None)` after `timeout` with no value,
+    /// `Err` once every sender is gone and the queue is drained. The HTTP
+    /// streaming loop polls tokens through this so a connection can keep
+    /// honouring its write deadline while a long decode step runs.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.0.state.lock().expect("reply channel poisoned");
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                return Ok(Some(v));
+            }
+            if st.senders == 0 {
+                return Err(anyhow!("reply channel disconnected"));
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Ok(None);
+            }
+            let (guard, _) =
+                self.0.cv.wait_timeout(st, left).expect("reply channel poisoned");
+            st = guard;
+        }
+    }
 }
 
 impl<T> Drop for ReplyRx<T> {
@@ -230,6 +265,15 @@ pub struct GenerateRequest {
     /// [`ServerHandle::submit`]. `None` after [`Self::reply_to`] routed
     /// replies to a caller-owned channel.
     rx: Option<ReplyRx<Result<Generated>>>,
+    /// Live token stream (`None` = reply-only): the executor pushes every
+    /// committed token here the moment its decode step lands, in emission
+    /// order; the final [`Generated`] reply still arrives on `reply`.
+    /// The stream closing (all senders dropped) marks end-of-stream.
+    pub(crate) stream: Option<ReplyTx<i32>>,
+    /// Dispatcher occupancy lease (see [`dispatch::Lease`]); `None` for
+    /// direct [`ServerHandle`] submissions. Travels with the request
+    /// through every scheduler state so each terminal path releases it.
+    pub(crate) lease: Option<dispatch::Lease>,
     /// Submission time (drives queue-latency metrics).
     enqueued: Instant,
 }
@@ -247,6 +291,8 @@ impl GenerateRequest {
             draft_k: None,
             reply,
             rx: Some(rx),
+            stream: None,
+            lease: None,
             enqueued: Instant::now(),
         }
     }
@@ -286,6 +332,19 @@ impl GenerateRequest {
         self.reply = tx;
         self.rx = None;
         self
+    }
+
+    /// Opt into live token streaming: returns the request plus a receiver
+    /// that yields every committed token in emission order as decode
+    /// steps land (first token included). The channel closes (`recv`
+    /// errors) after the last token; the final [`Generated`] still
+    /// arrives on the reply channel, so the stream is purely additive —
+    /// a streamed request's token sequence is bit-identical to the
+    /// non-streamed reply (`rust/tests/dispatch.rs` pins it).
+    pub fn streaming(mut self) -> (Self, ReplyRx<i32>) {
+        let (tx, rx) = reply_channel();
+        self.stream = Some(tx);
+        (self, rx)
     }
 }
 
@@ -387,6 +446,11 @@ pub struct Metrics {
     pub kv_blocks_shared: AtomicU64,
     /// Gauge: high-water mark of `kv_blocks_in_use` over the pool's life.
     pub kv_blocks_peak: AtomicU64,
+    /// Gauge: total block capacity of this executor's KV pool (set once
+    /// at startup). The dispatcher reads it to bound its committed-block
+    /// placement estimates; `kv_blocks_in_use / kv_blocks_total` is the
+    /// replica's occupancy.
+    pub kv_blocks_total: AtomicU64,
     /// Batch-class work swapped out (cache dropped, prefix retained) so
     /// an Interactive arrival could reserve its KV blocks.
     pub preemptions: AtomicU64,
@@ -453,6 +517,7 @@ impl Metrics {
             kv_blocks_in_use: self.kv_blocks_in_use.load(Ordering::Relaxed),
             kv_blocks_shared: self.kv_blocks_shared.load(Ordering::Relaxed),
             kv_blocks_peak: self.kv_blocks_peak.load(Ordering::Relaxed),
+            kv_blocks_total: self.kv_blocks_total.load(Ordering::Relaxed),
             preemptions: self.preemptions.load(Ordering::Relaxed),
             chunked_prefills: self.chunked_prefills.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
@@ -466,6 +531,63 @@ impl Metrics {
             active_variant: self.active_variant.load(Ordering::Relaxed),
             recompress_s: self.recompress_ns.load(Ordering::Relaxed) as f64 / 1e9,
             dispatch_entropy: self.dispatch_entropy_milli.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+
+    /// Fleet-wide aggregate over per-replica metrics, so multi-executor
+    /// numbers never silently report only replica 0: **sums** for
+    /// counters and capacity gauges (requests, tokens, seconds, KV
+    /// blocks in use / shared / total), **max** for high-water marks
+    /// (`kv_blocks_peak`, `prefill_stall_tokens_max`), and a **bucket
+    /// union** for the inter-token latency histogram
+    /// ([`LatencyHisto::quantile_ms_across`] — averaging per-replica
+    /// quantiles would be meaningless). The remaining point-in-time
+    /// gauges (`active_variant`, `dispatch_entropy`) are replica 0's:
+    /// replicas adapt independently, and "the fleet's variant" is only
+    /// well-defined when they agree — per-replica snapshots remain the
+    /// authoritative view for those.
+    pub fn merged(replicas: &[&Metrics]) -> MetricsSnapshot {
+        let sum = |f: fn(&Metrics) -> &AtomicU64| -> u64 {
+            replicas.iter().map(|m| f(m).load(Ordering::Relaxed)).sum()
+        };
+        let max = |f: fn(&Metrics) -> &AtomicU64| -> u64 {
+            replicas.iter().map(|m| f(m).load(Ordering::Relaxed)).max().unwrap_or(0)
+        };
+        let histos: Vec<&LatencyHisto> = replicas.iter().map(|m| &m.itl).collect();
+        MetricsSnapshot {
+            requests: sum(|m| &m.requests),
+            rows: sum(|m| &m.rows),
+            batches: sum(|m| &m.batches),
+            busy_s: sum(|m| &m.busy_ns) as f64 / 1e9,
+            queue_s: sum(|m| &m.queue_ns) as f64 / 1e9,
+            gen_requests: sum(|m| &m.gen_requests),
+            prefill_tokens: sum(|m| &m.prefill_tokens),
+            gen_tokens: sum(|m| &m.gen_tokens),
+            prefill_s: sum(|m| &m.prefill_ns) as f64 / 1e9,
+            decode_s: sum(|m| &m.decode_ns) as f64 / 1e9,
+            decode_steps: sum(|m| &m.decode_steps),
+            gen_disconnects: sum(|m| &m.gen_disconnects),
+            kv_blocks_in_use: sum(|m| &m.kv_blocks_in_use),
+            kv_blocks_shared: sum(|m| &m.kv_blocks_shared),
+            kv_blocks_peak: max(|m| &m.kv_blocks_peak),
+            kv_blocks_total: sum(|m| &m.kv_blocks_total),
+            preemptions: sum(|m| &m.preemptions),
+            chunked_prefills: sum(|m| &m.chunked_prefills),
+            deadline_misses: sum(|m| &m.deadline_misses),
+            prefill_stall_tokens_max: max(|m| &m.prefill_stall_tokens_max),
+            spec_drafted: sum(|m| &m.spec_drafted),
+            spec_accepted: sum(|m| &m.spec_accepted),
+            spec_rounds: sum(|m| &m.spec_rounds),
+            itl_p50_ms: LatencyHisto::quantile_ms_across(&histos, 0.50),
+            itl_p99_ms: LatencyHisto::quantile_ms_across(&histos, 0.99),
+            swaps: sum(|m| &m.swaps),
+            active_variant: replicas
+                .first()
+                .map_or(0, |m| m.active_variant.load(Ordering::Relaxed)),
+            recompress_s: sum(|m| &m.recompress_ns) as f64 / 1e9,
+            dispatch_entropy: replicas
+                .first()
+                .map_or(0.0, |m| m.dispatch_entropy_milli.load(Ordering::Relaxed) as f64 / 1e3),
         }
     }
 }
@@ -503,6 +625,9 @@ pub struct MetricsSnapshot {
     pub kv_blocks_shared: u64,
     /// Gauge: high-water mark of `kv_blocks_in_use`.
     pub kv_blocks_peak: u64,
+    /// Gauge: total block capacity of the executor's KV pool (sum of
+    /// all replica pools in a [`Metrics::merged`] snapshot).
+    pub kv_blocks_total: u64,
     /// Batch-class preemptions (swap-outs) performed.
     pub preemptions: u64,
     /// Prefills split across more than one chunk.
@@ -912,6 +1037,11 @@ fn executor_loop(
     };
     let (bsz, t) = (ctx.manifest.eval_b, ctx.manifest.eval_t);
     let pool = ctx.kv_pool(budget)?;
+    // published once so the dispatcher can bound committed-block
+    // placement estimates against real capacity
+    metrics
+        .kv_blocks_total
+        .store(pool.total_blocks() as u64, Ordering::Relaxed);
     let exec = Executor {
         ctx,
         registry,
@@ -1522,10 +1652,31 @@ impl Executor {
                     last_emit: Instant::now(),
                     prefill_s: p.prefill_s + inf.prefill_s,
                     decode_s: p.decode_s,
+                    // the streamed watermark survives the preempt/resume
+                    // round-trip, so nothing re-emits
+                    stream: p.stream,
+                    streamed: p.streamed,
+                    lease: p.lease,
                 });
             }
         }
         None
+    }
+
+    /// Push every not-yet-streamed token of this sequence down its
+    /// per-token stream (no-op for non-streaming requests). The
+    /// `streamed` watermark makes emission idempotent across preemption
+    /// and resume — a re-prefilled sequence never re-emits. A send to a
+    /// hung-up client is ignored here; disconnect eviction stays the
+    /// intake loop's job (`reply.is_closed()`), keeping one eviction
+    /// path for streaming and plain requests alike.
+    fn emit_stream(a: &mut ActiveGen) {
+        let Some(tx) = a.stream.as_ref() else { return };
+        let toks = a.session.tokens();
+        for &t in &toks[a.streamed..] {
+            let _ = tx.send(t);
+        }
+        a.streamed = toks.len();
     }
 
     /// A fresh request finished its prefill: sample the first token from
@@ -1533,7 +1684,7 @@ impl Executor {
     /// immediately when the first sample already finishes the request).
     fn activate_fresh(
         &self,
-        req: GenerateRequest,
+        mut req: GenerateRequest,
         variant: Arc<Variant>,
         cache: Box<dyn KvCache>,
         draft: Option<DraftSeq>,
@@ -1549,28 +1700,43 @@ impl Executor {
         // ms_per_token honest per-step measurements)
         let next = session.advance(&logits, cache.seq_len(), self.ctx.cfg.t_max);
         match next {
-            Some(next) => active.push(ActiveGen {
-                reply: req.reply,
-                enqueued: req.enqueued,
-                class: req.class,
-                deadline: req.deadline,
-                prompt: req.prompt,
-                reserve_tokens,
-                session,
-                variant,
-                cache,
-                draft,
-                next,
-                last_emit: Instant::now(),
-                prefill_s,
-                decode_s: 0.0,
-            }),
+            Some(next) => {
+                let mut a = ActiveGen {
+                    reply: req.reply,
+                    enqueued: req.enqueued,
+                    class: req.class,
+                    deadline: req.deadline,
+                    prompt: req.prompt,
+                    reserve_tokens,
+                    session,
+                    variant,
+                    cache,
+                    draft,
+                    next,
+                    last_emit: Instant::now(),
+                    prefill_s,
+                    decode_s: 0.0,
+                    stream: req.stream,
+                    streamed: 0,
+                    lease: req.lease,
+                };
+                Self::emit_stream(&mut a);
+                active.push(a);
+            }
             None => {
                 self.metrics
                     .queue_ns
                     .fetch_add(req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 if req.deadline.is_some_and(|d| req.enqueued.elapsed() > d) {
                     self.metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                // flush the (single) token to a streaming client before the
+                // final reply, then drop the sender: channel close IS the
+                // end-of-stream marker
+                if let Some(tx) = req.stream.take() {
+                    for &t in session.tokens() {
+                        let _ = tx.send(t);
+                    }
                 }
                 let finish = session.finish().expect("finished session");
                 let _ = req.reply.send(Ok(Generated {
@@ -1661,6 +1827,7 @@ impl Executor {
             match a.session.advance(&logits, a.cache.seq_len(), self.ctx.cfg.t_max) {
                 Some(next) => {
                     a.next = next;
+                    Self::emit_stream(&mut a);
                     active.push(a);
                 }
                 None => self.finish_gen(a),
@@ -1863,6 +2030,9 @@ impl Executor {
             match next_pending {
                 Some(next) => {
                     a.next = next;
+                    // a verify round may accept several tokens at once;
+                    // the watermark streams exactly the newly-kept ones
+                    Self::emit_stream(&mut a);
                     if fed == k_run && a.draft.is_some() {
                         replay_idx.push(active.len());
                         replay_tokens.push(runs[i][k_run - 1]);
@@ -1970,6 +2140,7 @@ impl Executor {
             match a.session.advance(&logits, a.cache.seq_len(), self.ctx.cfg.t_max) {
                 Some(next) => {
                     a.next = next;
+                    Self::emit_stream(a);
                     i += 1;
                 }
                 None => {
@@ -1994,13 +2165,17 @@ impl Executor {
     /// Answer one finished generation; record its queue latency and
     /// whether it met its deadline (SLO accounting — see `deadline_misses`
     /// in SERVING.md's metrics table).
-    fn finish_gen(&self, a: ActiveGen) {
+    fn finish_gen(&self, mut a: ActiveGen) {
         self.metrics
             .queue_ns
             .fetch_add(a.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
         if a.deadline.is_some_and(|d| a.enqueued.elapsed() > d) {
             self.metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
         }
+        // flush the stream before the final reply, then let the sender
+        // drop with `a`: channel close is the end-of-stream marker, and
+        // the KV lease (if any) releases on the same drop
+        Self::emit_stream(&mut a);
         let finish = a.session.finish().expect("finished session");
         let _ = a.reply.send(Ok(Generated {
             tokens: a.session.into_tokens(),

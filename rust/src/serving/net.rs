@@ -1,0 +1,407 @@
+//! Streaming HTTP/1.1 front end over a [`Dispatcher`] fleet.
+//!
+//! Dependency-free by design: a `std::net::TcpListener` accept loop, a
+//! hand-rolled request parser for the three routes below, and chunked
+//! transfer encoding for live token streams. The protocol is
+//! deliberately plain text — this front end exists so the replica fleet
+//! can be driven (and its drain semantics pinned) over a real socket,
+//! not to be a general API gateway.
+//!
+//! Routes:
+//!
+//! - `POST /generate` — body is `key=value` lines:
+//!   `prompt=<space-separated token ids>` (required),
+//!   `max_new=<n>` (default 16), `eos=<id>`, `draft_k=<k>`,
+//!   `priority=interactive|batch`, and optionally
+//!   `top_k=<k>` + `temperature=<t>` + `seed=<s>` (all three or none;
+//!   default greedy). Responds `200` with a chunked body: one decimal
+//!   token id per line as each decode step lands, then a final
+//!   `done <finish-reason>` line. Sampling is seeded, so the streamed
+//!   sequence is bit-identical to the blocking reply and to offline
+//!   [`crate::generate::generate`].
+//! - `GET /metrics` — fleet-merged then per-replica counters,
+//!   `name value` per line.
+//! - `GET /health` — `200 ok`.
+//!
+//! Backpressure: at most `max_conns` connections are served
+//! concurrently; excess connections receive an immediate `503` and are
+//! closed, so a burst degrades loudly instead of queueing unboundedly
+//! in the accept backlog.
+//!
+//! Graceful drain ([`HttpServer::shutdown`]): stop accepting, let every
+//! in-flight connection run its stream to natural completion, join the
+//! accept thread, and only then stop the dispatcher (whose own shutdown
+//! answers anything still queued inside an executor). The ordering
+//! guarantees every admitted HTTP stream ends with its `done` line —
+//! `scripts/check_serve.sh` gates on zero dropped streams.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{Dispatcher, GenerateRequest, Priority};
+use crate::generate::SamplingParams;
+
+/// How long the accept loop sleeps when no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// Per-connection socket read timeout (a stalled client cannot pin a
+/// connection slot forever).
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+/// Stream-receiver poll interval while a generation decodes.
+const STREAM_POLL: Duration = Duration::from_millis(100);
+
+/// Parsed `POST /generate` body.
+#[derive(Debug, PartialEq)]
+struct GenSpec {
+    prompt: Vec<i32>,
+    max_new: usize,
+    eos: Option<i32>,
+    draft_k: Option<usize>,
+    class: Priority,
+    /// `Some((top_k, temperature, seed))` = seeded sampling; `None` =
+    /// greedy.
+    sample: Option<(usize, f32, u64)>,
+}
+
+impl GenSpec {
+    fn params(&self) -> SamplingParams {
+        match self.sample {
+            None => SamplingParams::greedy(self.max_new, self.eos),
+            Some((k, temp, seed)) => {
+                SamplingParams::top_k(k, temp, seed, self.max_new, self.eos)
+            }
+        }
+    }
+}
+
+/// Parse the `key=value`-lines body of `POST /generate`. Pure (no I/O)
+/// so the wire grammar is unit-testable without sockets.
+fn parse_gen_body(body: &str) -> Result<GenSpec> {
+    let mut spec = GenSpec {
+        prompt: Vec::new(),
+        max_new: 16,
+        eos: None,
+        draft_k: None,
+        class: Priority::Interactive,
+        sample: None,
+    };
+    let (mut top_k, mut temperature, mut seed) = (None, None, None);
+    for line in body.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) =
+            line.split_once('=').ok_or_else(|| anyhow!("malformed line {line:?}"))?;
+        match key {
+            "prompt" => {
+                spec.prompt = value
+                    .split_whitespace()
+                    .map(|t| t.parse::<i32>().with_context(|| format!("bad token {t:?}")))
+                    .collect::<Result<_>>()?;
+            }
+            "max_new" => spec.max_new = value.parse().context("bad max_new")?,
+            "eos" => spec.eos = Some(value.parse().context("bad eos")?),
+            "draft_k" => spec.draft_k = Some(value.parse().context("bad draft_k")?),
+            "priority" => {
+                spec.class = match value {
+                    "interactive" => Priority::Interactive,
+                    "batch" => Priority::Batch,
+                    other => return Err(anyhow!("unknown priority {other:?}")),
+                }
+            }
+            "top_k" => top_k = Some(value.parse::<usize>().context("bad top_k")?),
+            "temperature" => {
+                temperature = Some(value.parse::<f32>().context("bad temperature")?)
+            }
+            "seed" => seed = Some(value.parse::<u64>().context("bad seed")?),
+            other => return Err(anyhow!("unknown key {other:?}")),
+        }
+    }
+    if spec.prompt.is_empty() {
+        return Err(anyhow!("prompt= is required and must be non-empty"));
+    }
+    spec.sample = match (top_k, temperature, seed) {
+        (None, None, None) => None,
+        (Some(k), Some(t), Some(s)) => Some((k, t, s)),
+        _ => return Err(anyhow!("top_k/temperature/seed must be given together")),
+    };
+    Ok(spec)
+}
+
+/// Read one HTTP/1.1 request: returns (method, path, body).
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line).context("read request line")?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(anyhow!("malformed request line {request_line:?}"));
+    }
+    // headers: only Content-Length matters for this protocol
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).context("read header")?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("read body")?;
+    Ok((method, path, String::from_utf8(body).context("non-utf8 body")?))
+}
+
+/// Write a plain (non-chunked) response and flush.
+fn write_response(stream: &mut TcpStream, status: &str, body: &str) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+/// Write one chunk of a chunked-transfer body.
+fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n{data}\r\n", data.len())?;
+    stream.flush()
+}
+
+/// Serve one `POST /generate`: submit through the dispatcher with a
+/// live token stream and relay every token as its own chunk the moment
+/// it lands, ending with a `done <finish>` line. The generation keeps
+/// its bit-identity contract — streaming only changes *when* tokens
+/// leave the server, never which tokens.
+fn handle_generate(stream: &mut TcpStream, dispatcher: &Dispatcher, body: &str) -> Result<()> {
+    let spec = match parse_gen_body(body) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = write_response(stream, "400 Bad Request", &format!("{e:#}\n"));
+            return Ok(());
+        }
+    };
+    let mut req = GenerateRequest::new(&spec.prompt, spec.params()).priority(spec.class);
+    if let Some(k) = spec.draft_k {
+        req = req.drafter(k);
+    }
+    let (req, tokens) = req.streaming();
+    let (_, reply) = match dispatcher.submit(req) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_response(stream, "503 Service Unavailable", &format!("{e:#}\n"));
+            return Ok(());
+        }
+    };
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    // relay tokens until the stream side closes (the executor drops the
+    // sender after the final flush); a client hangup surfaces as a write
+    // error here, the executor notices via its reply channel and evicts
+    loop {
+        match tokens.recv_timeout(STREAM_POLL) {
+            Ok(Some(t)) => write_chunk(stream, &format!("{t}\n"))?,
+            Ok(None) => continue, // poll tick: generation still decoding
+            Err(_) => break,      // sender dropped = end of stream
+        }
+    }
+    let tail = match reply.expect("streaming request owns its receiver").recv() {
+        Ok(Ok(g)) => format!("done {:?}\n", g.finish),
+        Ok(Err(e)) | Err(e) => format!("error {e:#}\n"),
+    };
+    write_chunk(stream, &tail)?;
+    // terminating zero-length chunk
+    write!(stream, "0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Render the fleet metrics page: merged aggregate first, then each
+/// replica, `name value` per line.
+fn metrics_page(dispatcher: &Dispatcher) -> String {
+    let mut out = String::new();
+    let render = |out: &mut String, prefix: &str, s: &super::MetricsSnapshot| {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "{prefix}gen_requests {}", s.gen_requests);
+        let _ = writeln!(out, "{prefix}gen_tokens {}", s.gen_tokens);
+        let _ = writeln!(out, "{prefix}prefill_tokens {}", s.prefill_tokens);
+        let _ = writeln!(out, "{prefix}decode_steps {}", s.decode_steps);
+        let _ = writeln!(out, "{prefix}kv_blocks_in_use {}", s.kv_blocks_in_use);
+        let _ = writeln!(out, "{prefix}kv_blocks_total {}", s.kv_blocks_total);
+        let _ = writeln!(out, "{prefix}preemptions {}", s.preemptions);
+        let _ = writeln!(out, "{prefix}deadline_misses {}", s.deadline_misses);
+        let _ = writeln!(out, "{prefix}itl_p50_ms {:.3}", s.itl_p50_ms);
+        let _ = writeln!(out, "{prefix}itl_p99_ms {:.3}", s.itl_p99_ms);
+        let _ = writeln!(out, "{prefix}swaps {}", s.swaps);
+    };
+    render(&mut out, "fleet_", &dispatcher.merged());
+    for (i, s) in dispatcher.metrics().iter().enumerate() {
+        render(&mut out, &format!("replica{i}_"), s);
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "replica{i}_committed_blocks {}", dispatcher.committed_blocks(i));
+    }
+    out
+}
+
+/// Serve one accepted connection end to end.
+fn handle_conn(mut stream: TcpStream, dispatcher: &Dispatcher) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let (method, path, body) = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_response(&mut stream, "400 Bad Request", &format!("{e:#}\n"));
+            return;
+        }
+    };
+    let result = match (method.as_str(), path.as_str()) {
+        ("POST", "/generate") => handle_generate(&mut stream, dispatcher, &body),
+        ("GET", "/metrics") => {
+            write_response(&mut stream, "200 OK", &metrics_page(dispatcher)).map_err(Into::into)
+        }
+        ("GET", "/health") => {
+            write_response(&mut stream, "200 OK", "ok\n").map_err(Into::into)
+        }
+        _ => write_response(&mut stream, "404 Not Found", "no such route\n").map_err(Into::into),
+    };
+    // write errors mean the client went away — nothing left to tell it
+    let _: Result<()> = result;
+}
+
+/// Handle to a running HTTP front end.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    dispatcher: Arc<Dispatcher>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// The actually-bound address (resolves port 0, so tests can bind
+    /// `127.0.0.1:0` and dial back).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain, strictly ordered: (1) stop accepting — late
+    /// connections are no longer picked up; (2) wait for every in-flight
+    /// connection to finish its stream naturally (the accept thread
+    /// joins only when `live == 0`); (3) stop the dispatcher, whose own
+    /// shutdown answers anything still queued inside an executor. Every
+    /// stream admitted before the drain therefore ends with its `done`
+    /// line, never mid-air.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow!("http accept thread panicked"))?;
+        }
+        self.dispatcher.shutdown()
+    }
+}
+
+/// Bind `addr` and serve the dispatcher fleet over HTTP. `max_conns`
+/// bounds concurrent connections — excess arrivals get an immediate
+/// `503` (loud backpressure instead of silent backlog growth).
+pub fn serve_http(
+    dispatcher: Arc<Dispatcher>,
+    addr: &str,
+    max_conns: usize,
+) -> Result<HttpServer> {
+    anyhow::ensure!(max_conns > 0, "max_conns must be >= 1");
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let addr = listener.local_addr().context("local_addr")?;
+    listener.set_nonblocking(true).context("set_nonblocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let l2 = Arc::new(AtomicU64::new(0));
+    let (s2, d2) = (Arc::clone(&stop), Arc::clone(&dispatcher));
+    let join = std::thread::Builder::new().name("hcsmoe-http".into()).spawn(move || {
+        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !s2.load(Ordering::SeqCst) {
+            workers.retain(|w| !w.is_finished());
+            match listener.accept() {
+                Ok((mut conn, _)) => {
+                    if l2.load(Ordering::Relaxed) >= max_conns as u64 {
+                        let _ = write_response(
+                            &mut conn,
+                            "503 Service Unavailable",
+                            "connection limit reached\n",
+                        );
+                        continue;
+                    }
+                    l2.fetch_add(1, Ordering::Relaxed);
+                    let (live, disp) = (Arc::clone(&l2), Arc::clone(&d2));
+                    let w = std::thread::spawn(move || {
+                        handle_conn(conn, &disp);
+                        live.fetch_sub(1, Ordering::Relaxed);
+                    });
+                    workers.push(w);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
+        }
+        // drain: every admitted connection finishes its stream before
+        // the accept thread exits (shutdown joins on this)
+        for w in workers {
+            let _ = w.join();
+        }
+    })?;
+    Ok(HttpServer { addr, stop, dispatcher, join: Some(join) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_body_parses_full_spec() {
+        let spec = parse_gen_body(
+            "prompt=1 2 3\nmax_new=8\neos=5\ndraft_k=4\npriority=batch\n",
+        )
+        .unwrap();
+        assert_eq!(
+            spec,
+            GenSpec {
+                prompt: vec![1, 2, 3],
+                max_new: 8,
+                eos: Some(5),
+                draft_k: Some(4),
+                class: Priority::Batch,
+                sample: None,
+            }
+        );
+    }
+
+    #[test]
+    fn gen_body_defaults_and_sampling_triple() {
+        let spec = parse_gen_body("prompt=7\ntop_k=3\ntemperature=0.5\nseed=42\n").unwrap();
+        assert_eq!(spec.max_new, 16);
+        assert_eq!(spec.class, Priority::Interactive);
+        assert_eq!(spec.sample, Some((3, 0.5, 42)));
+    }
+
+    #[test]
+    fn gen_body_rejects_bad_input() {
+        assert!(parse_gen_body("max_new=4\n").is_err(), "missing prompt");
+        assert!(parse_gen_body("prompt=1\nseed=1\n").is_err(), "partial sampling triple");
+        assert!(parse_gen_body("prompt=1\npriority=turbo\n").is_err(), "unknown priority");
+        assert!(parse_gen_body("prompt=1\nnope=2\n").is_err(), "unknown key");
+        assert!(parse_gen_body("prompt=one two\n").is_err(), "non-numeric tokens");
+    }
+}

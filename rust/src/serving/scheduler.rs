@@ -39,6 +39,7 @@ use crate::backend::KvCache;
 use crate::generate::{Generated, Session};
 use crate::variant::Variant;
 
+use super::dispatch::Lease;
 use super::{GenerateRequest, Metrics, ReplyTx};
 
 /// Scheduling class of a generation request. Interactive traffic is
@@ -267,6 +268,18 @@ pub(crate) struct ActiveGen {
     pub(crate) last_emit: Instant,
     pub(crate) prefill_s: f64,
     pub(crate) decode_s: f64,
+    /// Live per-token stream (`None` = reply-only request): every newly
+    /// committed token is pushed here the moment its decode step lands.
+    /// A preemption carries the stream across the swap and `streamed`
+    /// guarantees resume never re-emits.
+    pub(crate) stream: Option<ReplyTx<i32>>,
+    /// Tokens already pushed to `stream` (== `session.tokens()` prefix).
+    pub(crate) streamed: usize,
+    /// Dispatcher occupancy lease (`None` when submitted directly to a
+    /// [`super::ServerHandle`]): dropping the sequence on ANY terminal
+    /// path — reply, error, disconnect eviction, shutdown drain —
+    /// releases the replica's committed-block estimate automatically.
+    pub(crate) lease: Option<Lease>,
 }
 
 impl ActiveGen {
@@ -295,6 +308,9 @@ impl ActiveGen {
             next: self.next,
             prefill_s: self.prefill_s,
             decode_s: self.decode_s,
+            stream: self.stream,
+            streamed: self.streamed,
+            lease: self.lease,
         } // self.cache (and self.draft's cache) drop here, releasing
           // every block of the pair
     }
@@ -331,6 +347,15 @@ pub(crate) struct PreemptedGen {
     pub(crate) next: i32,
     pub(crate) prefill_s: f64,
     pub(crate) decode_s: f64,
+    /// Live per-token stream carried across the swap-out (see
+    /// [`ActiveGen::stream`]); `streamed` marks where resume picks up, so
+    /// the client never sees a token twice.
+    pub(crate) stream: Option<ReplyTx<i32>>,
+    pub(crate) streamed: usize,
+    /// Dispatcher occupancy lease carried across the swap-out: the
+    /// replica's committed estimate stays charged while the sequence is
+    /// parked — its reservation claim returns the moment it resumes.
+    pub(crate) lease: Option<Lease>,
 }
 
 /// Bucket count of [`LatencyHisto`]: 16 exact sub-16 ns buckets plus
@@ -410,6 +435,28 @@ impl LatencyHisto {
         }
         Self::upper_ns(HISTO_BUCKETS - 1) as f64 / 1e6
     }
+
+    /// The `q`-quantile over the **union** of several histograms' samples
+    /// (bucket-level sums — buckets share one mapping, so the union
+    /// histogram is exact, not an approximation of an approximation).
+    /// This is how [`super::Metrics::merged`] reports fleet-wide
+    /// inter-token latency: averaging per-replica quantiles would be
+    /// statistically meaningless, merging the buckets is not.
+    pub fn quantile_ms_across(histos: &[&LatencyHisto], q: f64) -> f64 {
+        let total: u64 = histos.iter().map(|h| h.count()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for i in 0..HISTO_BUCKETS {
+            cum += histos.iter().map(|h| h.buckets[i].load(Ordering::Relaxed)).sum::<u64>();
+            if cum >= rank {
+                return Self::upper_ns(i) as f64 / 1e6;
+            }
+        }
+        Self::upper_ns(HISTO_BUCKETS - 1) as f64 / 1e6
+    }
 }
 
 #[cfg(test)]
@@ -473,5 +520,29 @@ mod tests {
     #[test]
     fn priority_default_is_interactive() {
         assert_eq!(Priority::default(), Priority::Interactive);
+    }
+
+    #[test]
+    fn histo_union_quantiles_merge_buckets() {
+        // two replicas: one fast (1 ms), one slow (8 ms). The union p50
+        // sits in the fast bucket (100 of 150 samples), the union p99 in
+        // the slow one — neither replica alone reports both.
+        let fast = LatencyHisto::default();
+        let slow = LatencyHisto::default();
+        for _ in 0..100 {
+            fast.record(1_000_000);
+        }
+        for _ in 0..50 {
+            slow.record(8_000_000);
+        }
+        let both = [&fast, &slow];
+        let p50 = LatencyHisto::quantile_ms_across(&both, 0.50);
+        let p99 = LatencyHisto::quantile_ms_across(&both, 0.99);
+        assert!((1.0..1.1).contains(&p50), "p50 {p50}");
+        assert!((8.0..8.6).contains(&p99), "p99 {p99}");
+        // degenerate inputs stay well-defined
+        assert_eq!(LatencyHisto::quantile_ms_across(&[], 0.5), 0.0);
+        let single = LatencyHisto::quantile_ms_across(&[&fast], 0.5);
+        assert_eq!(single, fast.quantile_ms(0.5));
     }
 }

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Gate the replica scale-out contracts in CI (backend-e2e job):
+#
+#  1. `cargo test --test dispatch` — expert-parallel sharding bit-identical
+#     to the serial path at every shard count, dispatcher-served and
+#     streamed generations bit-identical to offline generate(), prefix-
+#     affine placement with lease release, fleet metric merging, the HTTP
+#     front end's chunked streaming / 503 backpressure / graceful drain.
+#  2. BENCH_serve.json must contain a 1-replica and a 2-replica row,
+#     every row must have dropped == 0 (scale-out never loses a stream),
+#     and 2-replica goodput must be >= 1-replica goodput — adding a
+#     replica must actually scale the fleet.
+#
+# With no argument the JSON is probed in rust/ then . (cargo runs bench
+# binaries with the package root as working directory).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> dispatch test suite (sharding bit-identity, dispatcher, HTTP front end)"
+cargo test --release --test dispatch -q
+
+f="${1:-}"
+if [ -z "$f" ]; then
+  for cand in rust/BENCH_serve.json BENCH_serve.json; do
+    [ -f "$cand" ] && { f="$cand"; break; }
+  done
+fi
+[ -n "$f" ] && [ -f "$f" ] || { echo "check_serve: BENCH_serve.json not found (looked in rust/ and .)"; exit 1; }
+
+field_of() { # field_of <replicas> <field>
+  grep "\"replicas\": $1," "$f" | head -n 1 \
+    | sed -n "s/.*\"$2\": \([0-9.]*\).*/\1/p"
+}
+
+for n in 1 2; do
+  dropped=$(field_of "$n" dropped)
+  [ -n "$dropped" ] || { echo "check_serve: $f has no ${n}-replica row"; exit 1; }
+  [ "$dropped" = "0" ] \
+    || { echo "check_serve: ${n}-replica row dropped ${dropped} streams — scale-out must never lose a stream"; exit 1; }
+done
+
+g1=$(field_of 1 goodput)
+g2=$(field_of 2 goodput)
+[ -n "$g1" ] && [ -n "$g2" ] || { echo "check_serve: rows missing goodput column"; exit 1; }
+
+awk -v a="$g2" -v b="$g1" 'BEGIN { exit !(a >= b) }' \
+  || { echo "check_serve: 2-replica goodput ${g2} req/s below 1-replica ${g1} req/s — adding a replica must not shrink throughput"; exit 1; }
+echo "check_serve: OK — zero dropped streams; 2-replica goodput ${g2} >= 1-replica ${g1} req/s ($f)"
